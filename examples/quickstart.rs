@@ -1,0 +1,38 @@
+//! Quickstart: train a tiny SAC agent in fp16 with all six of the
+//! paper's methods on the pendulum swing-up task, and compare against
+//! naive fp16 (which fails) and the fp32 reference.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use lprl::config::RunConfig;
+use lprl::coordinator::train;
+
+fn main() {
+    let mut cfg = RunConfig {
+        task: "pendulum_swingup".into(),
+        steps: 1500,
+        seed_steps: 200,
+        hidden: 64,
+        batch: 64,
+        eval_every: 500,
+        eval_episodes: 2,
+        ..Default::default()
+    };
+
+    for preset in ["fp32", "fp16_ours", "fp16_naive"] {
+        cfg.preset = preset.into();
+        let out = train(&cfg);
+        println!("--- {preset} ---");
+        for (x, y) in &out.eval_curve.points {
+            println!("  step {x:>6}  return {y:>7.1}");
+        }
+        println!(
+            "  final {:.1}  crashed={}  skipped opt steps={}  ({:.1}s)",
+            out.final_score, out.crashed, out.skipped_steps, out.wall_secs
+        );
+    }
+    println!("\nExpected shape (paper Fig. 1/2): fp16_ours tracks fp32;");
+    println!("fp16_naive flatlines or crashes to 0.");
+}

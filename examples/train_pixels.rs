@@ -1,0 +1,43 @@
+//! RL from pixels (paper §4.6): conv encoder + layer-norm with the
+//! paper's weight-standardization/downscale overflow guard, trained in
+//! fp16 with all methods. Scaled-down defaults (21×21 frames) so it runs
+//! in minutes on CPU.
+//!
+//! ```bash
+//! cargo run --release --example train_pixels -- task=cartpole_swingup steps=1200
+//! ```
+
+use lprl::config::{parse_cli, RunConfig};
+use lprl::coordinator::train;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (_pos, kv) = parse_cli(&args);
+    let mut cfg = RunConfig {
+        task: "cartpole_swingup".into(),
+        preset: "fp16_ours".into(),
+        pixels: true,
+        steps: 1200,
+        seed_steps: 200,
+        batch: 16,
+        hidden: 64,
+        eval_every: 400,
+        eval_episodes: 2,
+        ..Default::default()
+    };
+    for (k, v) in &kv {
+        if !cfg.set(k, v) {
+            anyhow::bail!("unknown option {k}");
+        }
+    }
+    println!(
+        "pixel training: {}x{} frames, stack {}, {} filters, preset {}",
+        cfg.image_size, cfg.image_size, cfg.frame_stack, cfg.filters, cfg.preset
+    );
+    let out = train(&cfg);
+    for (x, y) in &out.eval_curve.points {
+        println!("env_step {x:>8}  return {y:>8.1}");
+    }
+    println!("final={:.1} crashed={} ({:.0}s)", out.final_score, out.crashed, out.wall_secs);
+    Ok(())
+}

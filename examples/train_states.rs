@@ -1,0 +1,41 @@
+//! Train SAC from proprioceptive states on a planet-benchmark task with
+//! a chosen precision preset — the paper's main experimental setting
+//! (Figure 2).
+//!
+//! ```bash
+//! cargo run --release --example train_states -- task=cartpole_swingup preset=fp16_ours steps=4000
+//! ```
+
+use lprl::config::{parse_cli, RunConfig};
+use lprl::coordinator::train;
+use lprl::telemetry::write_csv;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (_pos, kv) = parse_cli(&args);
+    let mut cfg = RunConfig {
+        task: "cartpole_swingup".into(),
+        preset: "fp16_ours".into(),
+        ..Default::default()
+    };
+    for (k, v) in &kv {
+        if !cfg.set(k, v) {
+            anyhow::bail!("unknown option {k}");
+        }
+    }
+    println!(
+        "training {} with preset {} ({} agent steps, hidden {})",
+        cfg.task, cfg.preset, cfg.steps, cfg.hidden
+    );
+    let out = train(&cfg);
+    for (x, y) in &out.eval_curve.points {
+        println!("env_step {x:>8}  return {y:>8.1}");
+    }
+    println!("final={:.1} crashed={}", out.final_score, out.crashed);
+    let path = std::path::Path::new(&cfg.out_dir)
+        .join("examples")
+        .join(format!("{}_{}.csv", cfg.task, cfg.preset));
+    write_csv(&path, &[out.eval_curve])?;
+    println!("curve written to {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,158 @@
+"""AOT lowering: build the L2 train-step / act functions for each
+precision variant, lower them to **HLO text** (the interchange format the
+`xla` crate's 0.5.1 XLA accepts — serialized protos from jax >= 0.5 carry
+64-bit ids it rejects), and emit:
+
+    artifacts/<name>.hlo.txt      one per function x variant
+    artifacts/state_<variant>.bin raw little-endian f32 initial state
+    artifacts/manifest.txt        line-based index the Rust runtime parses
+
+Manifest grammar (one token stream per line):
+
+    dims obs=3 act=1 hidden=64 batch=64 task=pendulum_swingup
+    artifact <name> <file>
+    in <name> f32 <d0>x<d1>...
+    out <name> f32 <dims>
+    state <variant> <file> <n_leaves>
+
+Run via ``make artifacts`` (no-op when outputs are newer than sources).
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from compile import model  # noqa: E402
+
+VARIANTS = ("fp32", "fp16_naive", "fp16_ours")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def leaf_names(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+    return names
+
+
+def shape_str(x):
+    return "x".join(str(d) for d in x.shape) if x.shape else "1"
+
+
+def emit(cfg, out_dir, manifest_lines):
+    variant = cfg["variant"]
+    state = model.init_state(0, cfg)
+    b, o, a = cfg["batch"], cfg["obs_dim"], cfg["act_dim"]
+    f32 = jnp.float32
+    batch_specs = dict(
+        obs=jax.ShapeDtypeStruct((b, o), f32),
+        act=jax.ShapeDtypeStruct((b, a), f32),
+        rew=jax.ShapeDtypeStruct((b,), f32),
+        next_obs=jax.ShapeDtypeStruct((b, o), f32),
+        not_done=jax.ShapeDtypeStruct((b,), f32),
+        eps_next=jax.ShapeDtypeStruct((b, a), f32),
+        eps_cur=jax.ShapeDtypeStruct((b, a), f32),
+    )
+    state_spec = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, f32), state)
+    snames = leaf_names(state)
+    sleaves = jax.tree.leaves(state)
+
+    # ---- train step -----------------------------------------------------
+    step = model.make_train_step(cfg)
+    lowered = jax.jit(step).lower(state_spec, *batch_specs.values())
+    fname = f"train_{variant}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest_lines.append(f"artifact train_{variant} {fname}")
+    for n, leaf in zip(snames, sleaves):
+        manifest_lines.append(f"in state.{n} f32 {shape_str(np.asarray(leaf))}")
+    for n, spec in batch_specs.items():
+        manifest_lines.append(f"in {n} f32 {shape_str(spec)}")
+    for n, leaf in zip(snames, sleaves):
+        manifest_lines.append(f"out state.{n} f32 {shape_str(np.asarray(leaf))}")
+    manifest_lines.append("out metrics f32 4")
+
+    # ---- act ------------------------------------------------------------
+    act_fn = model.make_act(cfg, stochastic=True)
+    actor_spec = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, f32), state["params"]["actor"]
+    )
+    lowered = jax.jit(act_fn).lower(
+        actor_spec,
+        jax.ShapeDtypeStruct((1, o), f32),
+        jax.ShapeDtypeStruct((1, a), f32),
+    )
+    fname = f"act_{variant}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest_lines.append(f"artifact act_{variant} {fname}")
+    actor_names = leaf_names(state["params"]["actor"])
+    actor_leaves = jax.tree.leaves(state["params"]["actor"])
+    for n, leaf in zip(actor_names, actor_leaves):
+        manifest_lines.append(f"in actor.{n} f32 {shape_str(np.asarray(leaf))}")
+    manifest_lines.append(f"in obs f32 1x{o}")
+    manifest_lines.append(f"in eps f32 1x{a}")
+    manifest_lines.append(f"out action f32 1x{a}")
+
+    # ---- initial state --------------------------------------------------
+    sfile = f"state_{variant}.bin"
+    with open(os.path.join(out_dir, sfile), "wb") as f:
+        for leaf in sleaves:
+            f.write(np.asarray(leaf, "<f4").tobytes())
+    manifest_lines.append(f"state {variant} {sfile} {len(sleaves)}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="sentinel path; artifacts land in its directory")
+    ap.add_argument("--obs", type=int, default=3)
+    ap.add_argument("--act", type=int, default=1)
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--task", default="pendulum_swingup")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = [
+        f"dims obs={args.obs} act={args.act} hidden={args.hidden} "
+        f"batch={args.batch} task={args.task}"
+    ]
+    for variant in VARIANTS:
+        cfg = model.default_cfg(args.obs, args.act, args.hidden, args.batch, variant)
+        print(f"[aot] lowering variant {variant} ...", flush=True)
+        emit(cfg, out_dir, manifest)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    # sentinel for the Makefile dependency
+    with open(os.path.abspath(args.out), "w") as f:
+        f.write("see manifest.txt\n")
+    print(f"[aot] wrote {len(manifest)} manifest lines to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

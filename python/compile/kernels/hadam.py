@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: the hAdam update (paper §3 method 1, Algorithm 1),
+fused with compound loss scaling (method 5) and optionally Kahan-
+compensated parameter application (method 6).
+
+One elementwise pass per parameter tensor:
+
+    m   <- b1*m + (1-b1)*g                      (g carries the scale gamma)
+    w   <- hypot(sqrt(b2)*w, sqrt(1-b2)*g)      (stable hypot)
+    mh  <- m / (1 - b1^t)
+    wh  <- w / sqrt(1 - b2^t)
+    d   <- -lr * mh / (wh + gamma*eps)
+    Kahan: y = d - c ; tnew = p + y ; c = (tnew - p) - y ; p = tnew
+
+All arithmetic runs in the tensor's dtype (f16 for the paper's runs), so
+under/overflow happen exactly where real fp16 hardware would hit them.
+
+TPU mapping: bandwidth-bound read-modify-write over four equal-shape
+buffers (p, m, w, c); one VMEM tile each per grid step, hypot lowers to
+VPU mul/rsqrt — no MXU involvement.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _hypot_stable(a, b, tiny):
+    """max*sqrt(1+(min/(max+tiny))^2) — no intermediate under/overflow."""
+    aa, ab = jnp.abs(a), jnp.abs(b)
+    mx = jnp.maximum(aa, ab)
+    mn = jnp.minimum(aa, ab)
+    r = mn / (mx + tiny)
+    out = mx * jnp.sqrt(1.0 + r * r)
+    return jnp.where(mx == 0.0, jnp.zeros_like(mx), out)
+
+
+def _hadam_kernel(p_ref, m_ref, w_ref, c_ref, g_ref, t_ref, o_p, o_m, o_w, o_c,
+                  *, lr, b1, b2, eps, gamma, kahan):
+    dt = p_ref[...].dtype
+    one = jnp.asarray(1.0, dt)
+    g = g_ref[...]
+    m = jnp.asarray(b1, dt) * m_ref[...] + jnp.asarray(1.0 - b1, dt) * g
+    tiny = jnp.asarray(6e-8 if dt == jnp.float16 else 1e-45, dt)
+    w = _hypot_stable(
+        jnp.asarray(b2, dt) ** jnp.asarray(0.5, dt) * w_ref[...],
+        jnp.asarray((1.0 - b2) ** 0.5, dt) * g,
+        tiny,
+    )
+    # bias corrections: scalars computed in f32, then cast
+    t = t_ref[0].astype(jnp.float32)
+    bc1 = 1.0 - jnp.asarray(b1, jnp.float32) ** t
+    bc2 = jnp.sqrt(1.0 - jnp.asarray(b2, jnp.float32) ** t)
+    mh = m * (one / bc1.astype(dt))
+    wh = w * (one / bc2.astype(dt))
+    d = jnp.asarray(-lr, dt) * (mh / (wh + jnp.asarray(gamma * eps, dt)))
+    if kahan:
+        c = c_ref[...]
+        y = d - c
+        tnew = p_ref[...] + y
+        o_c[...] = (tnew - p_ref[...]) - y
+        o_p[...] = tnew
+    else:
+        o_c[...] = c_ref[...]
+        o_p[...] = p_ref[...] + d
+    o_m[...] = m
+    o_w[...] = w
+
+
+@functools.partial(jax.jit, static_argnames=("lr", "b1", "b2", "eps", "gamma", "kahan"))
+def hadam_update(p, m, w, c, g, t, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 gamma=1.0, kahan=True):
+    """Apply one hAdam step. All array args share one flat shape and
+    dtype; ``t`` is a length-1 int32 step counter (1-based). Returns
+    ``(p', m', w', c')``."""
+    shape = p.shape
+    dt = p.dtype
+    n = p.size
+    padded = ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+    def pad(x):
+        return jnp.pad(x.reshape(-1), (0, padded - n))
+
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    outs = pl.pallas_call(
+        functools.partial(_hadam_kernel, lr=lr, b1=b1, b2=b2, eps=eps,
+                          gamma=gamma, kahan=kahan),
+        out_shape=[jax.ShapeDtypeStruct((padded,), dt)] * 4,
+        grid=(padded // BLOCK,),
+        in_specs=[spec, spec, spec, spec, spec,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[spec] * 4,
+        interpret=True,
+    )(pad(p), pad(m), pad(w), pad(c), pad(g), t.astype(jnp.int32))
+    return tuple(o[:n].reshape(shape) for o in outs)

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: Kahan-compensated accumulation step (paper §3
+methods 4 & 6, Algorithm 2), used for the target network's scaled EMA.
+
+    delta = (C*tau) * (psi - hat)        (hat = buf / C)
+    y = delta - c ; t = buf + y ; c = (t - buf) - y ; buf = t
+
+The C*tau product is formed *before* touching the tiny difference so the
+increment clears the subnormal range (the whole point of the paper's
+buffer scale C).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _kahan_ema_kernel(buf_ref, c_ref, psi_ref, o_buf, o_c, *, tau, scale):
+    dt = buf_ref[...].dtype
+    ct = jnp.asarray(scale * tau, dt)
+    inv_c = jnp.asarray(1.0 / scale, dt)
+    hat = buf_ref[...] * inv_c
+    delta = ct * (psi_ref[...] - hat)
+    y = delta - c_ref[...]
+    t = buf_ref[...] + y
+    o_c[...] = (t - buf_ref[...]) - y
+    o_buf[...] = t
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "scale"))
+def kahan_ema_update(buf, comp, psi, *, tau, scale):
+    """One compensated soft-update step on the scaled buffer
+    ``buf = C * psi_hat``. Returns ``(buf', comp')``; read the target
+    weights as ``buf' / C``."""
+    shape = buf.shape
+    dt = buf.dtype
+    n = buf.size
+    padded = ((n + BLOCK - 1) // BLOCK) * BLOCK
+
+    def pad(x):
+        return jnp.pad(x.reshape(-1), (0, padded - n))
+
+    spec = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    outs = pl.pallas_call(
+        functools.partial(_kahan_ema_kernel, tau=tau, scale=scale),
+        out_shape=[jax.ShapeDtypeStruct((padded,), dt)] * 2,
+        grid=(padded // BLOCK,),
+        in_specs=[spec] * 3,
+        out_specs=[spec] * 2,
+        interpret=True,
+    )(pad(buf), pad(comp), pad(psi))
+    return tuple(o[:n].reshape(shape) for o in outs)

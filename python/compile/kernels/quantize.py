@@ -1,0 +1,90 @@
+"""L1 Pallas kernel: parameterized floating-point quantizer (the qtorch
+replacement used for the paper's Figure 4 format sweep).
+
+Rounds f32 values to the nearest representable value of a
+``(exp_bits, man_bits)`` binary format with IEEE semantics: gradual
+underflow (subnormals), round-to-nearest-even, overflow to ±inf.
+
+The algorithm is the exact float-arithmetic analogue of the Rust
+``lowp::FloatFormat::quantize`` (rust/src/lowp/format.rs): snap to the
+local ULP grid via exact power-of-two scaling. All intermediate products
+are exact in f32 for ``man_bits <= 23``, so the two implementations agree
+bit-for-bit (checked by python/tests/test_quantize.py against ref.py and
+by the cross-language fixtures).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): this is a bandwidth-bound
+elementwise pass; the BlockSpec tiles a flat view of the tensor through
+VMEM, one read-modify-write per element, no transcendentals (the `ulp`
+is built by integer exponent manipulation, lowered to VPU integer ops).
+``interpret=True`` everywhere — the CPU PJRT client cannot execute Mosaic
+custom calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Flat tile processed per grid step. On TPU this would be sized to a VMEM
+# sector (e.g. 512*128 f32 = 256 KiB); in interpret mode it only affects
+# trace time.
+BLOCK = 4096
+
+
+def _quantize_math(x, exp_bits: int, man_bits: int):
+    """Pure-jnp RNE quantization of f32 ``x`` into (exp_bits, man_bits).
+
+    Shared by the Pallas kernel body and (via ref.py) the oracle.
+    """
+    bias = (1 << (exp_bits - 1)) - 1
+    emax = bias
+    emin = 1 - bias
+    max_val = (2.0 ** (emax + 1)) - 2.0 ** (emax - man_bits)
+
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    e_field = ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+
+    # ULP of the target format around |x|: 2^(e - man) for normals,
+    # constant 2^(emin - man) in the subnormal range.
+    ulp_exp = jnp.maximum(e_field, emin) - man_bits
+    # construct 2^ulp_exp exactly via the exponent field (ulp_exp is
+    # always > -127 for the formats we support: emin - man >= -126)
+    ulp = jax.lax.bitcast_convert_type(
+        ((ulp_exp + 127).astype(jnp.uint32) << 23), jnp.float32
+    )
+
+    steps = x / ulp  # exact: power-of-two scaling
+    rounded = jnp.round(steps)  # jnp.round is round-half-to-even
+    q = rounded * ulp  # exact
+
+    # overflow -> +-inf ; preserve nan/inf/signed zero
+    overflow = jnp.abs(q) > max_val
+    q = jnp.where(overflow, jnp.sign(x) * jnp.inf, q)
+    q = jnp.where(jnp.isfinite(x), q, x)
+    q = jnp.where(x == 0.0, x, q)
+    return q.astype(jnp.float32)
+
+
+def _quantize_kernel(x_ref, o_ref, *, exp_bits, man_bits):
+    o_ref[...] = _quantize_math(x_ref[...], exp_bits, man_bits)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def quantize(x, exp_bits: int, man_bits: int):
+    """Quantize an f32 array into the (exp_bits, man_bits) format via the
+    Pallas kernel (interpret mode). Shape-preserving."""
+    orig_shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    padded = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    flat = jnp.pad(flat, (0, padded - n))
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, exp_bits=exp_bits, man_bits=man_bits),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        grid=(padded // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(flat)
+    return out[:n].reshape(orig_shape)

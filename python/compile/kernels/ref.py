@@ -1,0 +1,117 @@
+"""Pure-numpy/jnp oracles for every L1 kernel — the correctness signal
+the pytest suite checks the Pallas kernels against.
+
+The quantizer oracle works in f64 (mirroring the Rust implementation in
+rust/src/lowp/format.rs exactly); the optimizer/policy oracles are
+straight transliterations of the papers' equations in f64, downcast at
+the end.
+"""
+
+import numpy as np
+
+HALF_LOG_2PI = 0.9189385332046727
+LOG2 = 0.6931471805599453
+
+
+def quantize_ref(x, exp_bits: int, man_bits: int):
+    """f64 reference RNE quantization (same algorithm as the Rust side)."""
+    x = np.asarray(x, dtype=np.float32)
+    out = np.empty_like(x)
+    bias = (1 << (exp_bits - 1)) - 1
+    emax = bias
+    emin = 1 - bias
+    maxv = (2.0 ** (emax + 1)) - 2.0 ** (emax - man_bits)
+    flat = x.reshape(-1)
+    o = out.reshape(-1)
+    for i, v in enumerate(flat):
+        if v == 0.0 or not np.isfinite(v):
+            o[i] = v
+            continue
+        xd = float(v)
+        ax = abs(xd)
+        e = int(np.floor(np.log2(ax)))
+        # correct edge case: log2 of exact powers can round badly
+        if 2.0 ** (e + 1) <= ax:
+            e += 1
+        elif 2.0 ** e > ax:
+            e -= 1
+        ulp_exp = (emin if e < emin else e) - man_bits
+        ulp = 2.0 ** ulp_exp
+        steps = ax / ulp
+        rounded = np.round(steps)  # numpy round-half-even
+        q = rounded * ulp
+        if q > maxv:
+            q = np.inf
+        o[i] = np.copysign(q, xd)
+    return out
+
+
+def hypot_stable_ref(a, b, tiny):
+    aa, ab = np.abs(a), np.abs(b)
+    mx = np.maximum(aa, ab)
+    mn = np.minimum(aa, ab)
+    r = mn / (mx + tiny)
+    out = mx * np.sqrt(1.0 + r * r)
+    return np.where(mx == 0.0, 0.0, out)
+
+
+def hadam_ref(p, m, w, c, g, t, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+              gamma=1.0, kahan=True, dtype=np.float64):
+    """Reference hAdam step in ``dtype`` (f64 by default = 'infinite
+    precision' for Statement-1 style checks)."""
+    cast = lambda x: np.asarray(x, dtype)
+    p, m, w, c, g = map(cast, (p, m, w, c, g))
+    m = b1 * m + (1 - b1) * g
+    tiny = 6e-8 if dtype == np.float16 else 1e-45
+    w = hypot_stable_ref(np.sqrt(b2) * w, np.sqrt(1 - b2) * g, tiny)
+    bc1 = 1.0 - b1 ** float(t)
+    bc2 = np.sqrt(1.0 - b2 ** float(t))
+    mh = m / bc1
+    wh = w / bc2
+    d = cast(-lr) * (mh / (wh + gamma * eps))
+    if kahan:
+        y = d - c
+        tnew = p + y
+        c = (tnew - p) - y
+        p = tnew
+    else:
+        p = p + d
+    return p, m, w, c
+
+
+def adam_ref(p, m, v, g, t, *, lr, b1=0.9, b2=0.999, eps=1e-8):
+    """Classic Adam in f64 — the 'infinite precision' baseline hAdam must
+    coincide with (paper Statement 1)."""
+    p, m, v, g = (np.asarray(x, np.float64) for x in (p, m, v, g))
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1.0 - b1 ** float(t))
+    vh = v / (1.0 - b2 ** float(t))
+    p = p - lr * mh / (np.sqrt(vh) + eps)
+    return p, m, v
+
+
+def kahan_ema_ref(buf, comp, psi, *, tau, scale, dtype=np.float64):
+    cast = lambda x: np.asarray(x, dtype)
+    buf, comp, psi = map(cast, (buf, comp, psi))
+    ct = cast(scale * tau)
+    hat = buf * cast(1.0 / scale)
+    delta = ct * (psi - hat)
+    y = delta - comp
+    t = buf + y
+    comp = (t - buf) - y
+    return t, comp
+
+
+def tanh_gaussian_ref(mu, log_sigma, eps, *, sigma_eps=0.0):
+    """f64 tanh-Gaussian sample + per-element log-prob (no fixes needed in
+    f64 — this is the ground truth both fixed and unfixed kernels must
+    match in high precision)."""
+    mu, ls, eps = (np.asarray(x, np.float64) for x in (mu, log_sigma, eps))
+    sigma = np.exp(ls) + sigma_eps
+    u = mu + eps * sigma
+    a = np.tanh(u)
+    r = (u - mu) / sigma
+    nl = -0.5 * r * r - ls - HALF_LOG_2PI
+    tc = 2.0 * (LOG2 - u - np.logaddexp(0.0, -2.0 * u))
+    return a, nl - tc

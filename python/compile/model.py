@@ -1,0 +1,344 @@
+"""L2: the SAC computation graph in JAX — actor/critic forward, losses,
+gradients, optimizer and target update fused into one ``train_step``
+function per precision variant, AOT-lowered by aot.py to HLO text that
+the Rust runtime executes via PJRT.
+
+Variants
+--------
+* ``fp32``       — f32 everywhere, classic Adam, plain EMA target.
+* ``fp16_naive`` — f16 params/activations/grads/optimizer, no fixes:
+                   Adam's ``g**2`` and ``eps=1e-8`` underflow, the policy
+                   log-prob overflows — the paper's Figure 1 failure.
+* ``fp16_ours``  — f16 everywhere plus the paper's six methods: hAdam +
+                   compound loss scaling + Kahan parameter updates (L1
+                   kernels ``hadam``/``kahan``), softplus-fix and
+                   normal-fix in the policy, Kahan-momentum target EMA.
+
+The L1 Pallas kernels are used on the non-differentiated paths (optimizer
+update, target EMA, and the next-action log-prob, which enters the critic
+target with stop-gradient); the differentiated actor path uses the same
+equations inline so ``jax.grad`` applies. Everything is traced into one
+jitted function, so the lowered HLO contains the interpreted Pallas ops.
+
+Interface convention: all inputs/outputs of the lowered functions are
+**f32** (the Rust side then never handles f16 literals); f16 variants
+cast at the function boundary, which is exact in the f16→f32 direction
+and value-preserving on the way back because every internal value is
+already f16-representable.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.hadam import hadam_update
+from .kernels.kahan import kahan_ema_update
+from .kernels.logprob import tanh_gaussian
+
+HALF_LOG_2PI = 0.9189385332046727
+LOG2 = 0.6931471805599453
+
+
+def default_cfg(obs_dim=3, act_dim=1, hidden=64, batch=64, variant="fp32"):
+    """Hyperparameters follow the paper's Table 4 (states)."""
+    return dict(
+        obs_dim=obs_dim,
+        act_dim=act_dim,
+        hidden=hidden,
+        batch=batch,
+        variant=variant,
+        gamma_rl=0.99,
+        tau=0.005,
+        lr=1e-4,
+        b1=0.9,
+        b2=0.999,
+        eps=1e-8,
+        init_temp=0.1,
+        ls_lo=-5.0,
+        ls_hi=2.0,
+        loss_scale=1e4 if variant == "fp16_ours" else 1.0,
+        kahan_scale=1e4,
+        target_entropy=-float(act_dim),
+    )
+
+
+def dtype_of(cfg):
+    return jnp.float16 if cfg["variant"].startswith("fp16") else jnp.float32
+
+
+# --------------------------------------------------------------------- init
+
+def _init_linear(key, fan_in, fan_out):
+    w = jax.random.orthogonal(key, max(fan_in, fan_out))[:fan_out, :fan_in]
+    return {"w": np.asarray(w, np.float32), "b": np.zeros(fan_out, np.float32)}
+
+
+def _init_mlp(key, dims):
+    keys = jax.random.split(key, len(dims) - 1)
+    return {f"l{i}": _init_linear(keys[i], dims[i], dims[i + 1]) for i in range(len(dims) - 1)}
+
+
+def init_state(seed, cfg):
+    """Build the full training-state pytree (f32 numpy leaves)."""
+    key = jax.random.PRNGKey(seed)
+    ka, kc1, kc2 = jax.random.split(key, 3)
+    o, a, h = cfg["obs_dim"], cfg["act_dim"], cfg["hidden"]
+    actor = _init_mlp(ka, [o, h, h, 2 * a])
+    critic = {
+        "q1": _init_mlp(kc1, [o + a, h, h, 1]),
+        "q2": _init_mlp(kc2, [o + a, h, h, 1]),
+    }
+    zeros_like_tree = lambda t: jax.tree.map(lambda x: np.zeros_like(x), t)
+    C = cfg["kahan_scale"] if cfg["variant"] == "fp16_ours" else 1.0
+    state = {
+        "params": {"actor": actor, "critic": critic,
+                   "log_alpha": np.asarray([np.log(cfg["init_temp"])], np.float32)},
+        "target_buf": jax.tree.map(lambda x: np.asarray(x * C, np.float32), critic),
+        "target_comp": zeros_like_tree(critic),
+        "opt": {
+            "actor": {"m": zeros_like_tree(actor), "w": zeros_like_tree(actor)},
+            "critic": {"m": zeros_like_tree(critic), "w": zeros_like_tree(critic),
+                       "c": zeros_like_tree(critic)},
+            "alpha": {"m": np.zeros(1, np.float32), "w": np.zeros(1, np.float32),
+                      "c": np.zeros(1, np.float32)},
+        },
+        "t": np.zeros(1, np.float32),  # step counter (f32 interface)
+    }
+    # f16 variants: round the initial point into f16 so Rust/JAX agree
+    if cfg["variant"].startswith("fp16"):
+        f16 = lambda x: np.asarray(np.asarray(x, np.float16), np.float32)
+        state = jax.tree.map(f16, state)
+    return state
+
+
+# ------------------------------------------------------------------ forward
+
+def mlp_fwd(p, x):
+    n = len(p)
+    for i in range(n):
+        lay = p[f"l{i}"]
+        x = x @ lay["w"].T + lay["b"]
+        if i + 1 < n:
+            x = jax.nn.relu(x)
+    return x
+
+
+def actor_head(p, obs, cfg, dt):
+    z = mlp_fwd(p, obs)
+    a = cfg["act_dim"]
+    mu, raw = z[:, :a], z[:, a:]
+    lo, hi = cfg["ls_lo"], cfg["ls_hi"]
+    ls = jnp.asarray(lo, dt) + jnp.asarray(0.5 * (hi - lo), dt) * (jnp.tanh(raw) + jnp.asarray(1.0, dt))
+    return mu, ls
+
+
+def sample_logprob_inline(mu, ls, eps, cfg, dt):
+    """Differentiable tanh-Gaussian log-prob (same math as the L1 kernel),
+    with softplus-fix / normal-fix switched by the variant."""
+    fixes = cfg["variant"] == "fp16_ours"
+    sigma = jnp.exp(ls)
+    u = mu + eps * sigma
+    act = jnp.tanh(u)
+    if fixes:
+        r = (u - mu) / sigma
+        nl = jnp.asarray(-0.5, dt) * r * r - ls - jnp.asarray(HALF_LOG_2PI, dt)
+    else:
+        d = u - mu
+        nl = jnp.asarray(-0.5, dt) * (d * d) / (sigma * sigma) - ls - jnp.asarray(HALF_LOG_2PI, dt)
+    x = jnp.asarray(-2.0, dt) * u
+    if fixes:
+        sp = jnp.where(x > 10.0, x, jnp.log1p(jnp.exp(jnp.minimum(x, 10.0))))
+    else:
+        sp = jnp.log(jnp.asarray(1.0, dt) + jnp.exp(x))
+    tc = jnp.asarray(2.0, dt) * (jnp.asarray(LOG2, dt) - u - sp)
+    return act, jnp.sum(nl - tc, axis=-1)
+
+
+def critic_fwd(p, obs, act):
+    x = jnp.concatenate([obs, act], axis=-1)
+    return mlp_fwd(p["q1"], x)[:, 0], mlp_fwd(p["q2"], x)[:, 0]
+
+
+# --------------------------------------------------------------- optimizers
+
+def _adam_plain(params, opt, grads, t, cfg, dt):
+    """Classic Adam in the working dtype (fp32 and fp16_naive paths)."""
+    b1, b2, eps, lr = cfg["b1"], cfg["b2"], cfg["eps"], cfg["lr"]
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, m, v, g):
+        m = jnp.asarray(b1, dt) * m + jnp.asarray(1 - b1, dt) * g
+        v = jnp.asarray(b2, dt) * v + jnp.asarray(1 - b2, dt) * (g * g)
+        mh = m / bc1.astype(dt)
+        vh = v / bc2.astype(dt)
+        p = p - jnp.asarray(lr, dt) * mh / (jnp.sqrt(vh) + jnp.asarray(eps, dt))
+        return p, m, v
+
+    out = jax.tree.map(upd, params, opt["m"], opt["w"], grads)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {**opt, "m": new_m, "w": new_v}
+
+
+def _hadam_kernel_opt(params, opt, grads, t_i32, cfg, kahan):
+    """hAdam + compound scaling (+ Kahan) via the L1 Pallas kernel."""
+    gamma = cfg["loss_scale"]
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_m = treedef.flatten_up_to(opt["m"])
+    leaves_w = treedef.flatten_up_to(opt["w"])
+    leaves_c = treedef.flatten_up_to(opt["c"]) if kahan else [jnp.zeros_like(x) for x in leaves_p]
+    leaves_g = treedef.flatten_up_to(grads)
+    outs = [
+        hadam_update(p, m, w, c, g, t_i32, lr=cfg["lr"], b1=cfg["b1"],
+                     b2=cfg["b2"], eps=cfg["eps"], gamma=gamma, kahan=kahan)
+        for p, m, w, c, g in zip(leaves_p, leaves_m, leaves_w, leaves_c, leaves_g)
+    ]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_w = treedef.unflatten([o[2] for o in outs])
+    new_opt = {**opt, "m": new_m, "w": new_w}
+    if kahan:
+        new_opt["c"] = treedef.unflatten([o[3] for o in outs])
+    return new_p, new_opt
+
+
+# --------------------------------------------------------------- train step
+
+def make_train_step(cfg):
+    """Build the fused critic+actor+alpha+target update for the variant."""
+    dt = dtype_of(cfg)
+    ours = cfg["variant"] == "fp16_ours"
+    gamma = cfg["loss_scale"]
+    C = cfg["kahan_scale"] if ours else 1.0
+
+    def step(state, obs, act, rew, next_obs, not_done, eps_next, eps_cur):
+        # cast the f32 interface into the working dtype
+        cast = lambda tree: jax.tree.map(lambda x: x.astype(dt), tree)
+        params = cast(state["params"])
+        tgt_buf = cast(state["target_buf"])
+        tgt_comp = cast(state["target_comp"])
+        opt = cast(state["opt"])
+        obs, act, rew = obs.astype(dt), act.astype(dt), rew.astype(dt)
+        next_obs, not_done = next_obs.astype(dt), not_done.astype(dt)
+        eps_next, eps_cur = eps_next.astype(dt), eps_cur.astype(dt)
+        t_new = state["t"][0] + 1.0  # f32 counter
+        t_i32 = jnp.asarray([t_new], jnp.int32)
+
+        alpha = jnp.exp(params["log_alpha"][0].astype(dt))
+
+        # ---- critic target (no grad): L1 logprob kernel ----------------
+        mu_n, ls_n = actor_head(params["actor"], next_obs, cfg, dt)
+        a_next, lp_elem = tanh_gaussian(mu_n, ls_n, eps_next,
+                                        softplus_fix=ours, normal_fix=ours)
+        logp_next = jnp.sum(lp_elem, axis=-1)
+        target_params = jax.tree.map(lambda b: b * jnp.asarray(1.0 / C, dt), tgt_buf)
+        tq1, tq2 = critic_fwd(target_params, next_obs, a_next)
+        v = jnp.minimum(tq1, tq2) - alpha * logp_next
+        y = rew + jnp.asarray(cfg["gamma_rl"], dt) * not_done * v
+        y = jax.lax.stop_gradient(y)
+
+        # ---- critic update ---------------------------------------------
+        def critic_loss_fn(cp):
+            q1, q2 = critic_fwd(cp, obs, act)
+            l = jnp.mean((q1 - y) ** 2) + jnp.mean((q2 - y) ** 2)
+            return l * jnp.asarray(gamma, dt), (q1, q2)
+
+        (closs_scaled, (q1, _q2)), cgrads = jax.value_and_grad(
+            critic_loss_fn, has_aux=True)(params["critic"])
+        if ours:
+            new_critic, new_opt_c = _hadam_kernel_opt(
+                params["critic"], opt["critic"], cgrads, t_i32, cfg, kahan=True)
+        else:
+            new_critic, new_opt_c = _adam_plain(
+                params["critic"], opt["critic"], cgrads, t_new, cfg, dt)
+            new_opt_c["c"] = opt["critic"]["c"]
+
+        # ---- actor update (inline differentiable log-prob) -------------
+        def actor_loss_fn(ap):
+            mu, ls = actor_head(ap, obs, cfg, dt)
+            a_cur, logp = sample_logprob_inline(mu, ls, eps_cur, cfg, dt)
+            q1a, q2a = critic_fwd(new_critic, obs, a_cur)
+            qmin = jnp.minimum(q1a, q2a)
+            return jnp.mean(alpha * logp - qmin) * jnp.asarray(gamma, dt), logp
+
+        (_aloss, logp_cur), agrads = jax.value_and_grad(
+            actor_loss_fn, has_aux=True)(params["actor"])
+        if ours:
+            new_actor, new_opt_a = _hadam_kernel_opt(
+                params["actor"], opt["actor"], agrads, t_i32, cfg, kahan=False)
+        else:
+            new_actor, new_opt_a = _adam_plain(
+                params["actor"], opt["actor"], agrads, t_new, cfg, dt)
+
+        # ---- temperature -------------------------------------------------
+        logp_sg = jax.lax.stop_gradient(logp_cur)
+        mean_term = jnp.mean(logp_sg + jnp.asarray(cfg["target_entropy"], dt))
+        galpha = (-alpha * mean_term * jnp.asarray(gamma, dt)).reshape(1)
+        if ours:
+            new_la, new_opt_al = _hadam_kernel_opt(
+                params["log_alpha"], opt["alpha"],
+                galpha, t_i32, cfg, kahan=True)
+        else:
+            la = params["log_alpha"]
+            m = jnp.asarray(cfg["b1"], dt) * opt["alpha"]["m"] + jnp.asarray(1 - cfg["b1"], dt) * galpha
+            v = jnp.asarray(cfg["b2"], dt) * opt["alpha"]["w"] + jnp.asarray(1 - cfg["b2"], dt) * galpha ** 2
+            mh = m / (1.0 - cfg["b1"] ** t_new).astype(dt)
+            vh = v / (1.0 - cfg["b2"] ** t_new).astype(dt)
+            new_la = la - jnp.asarray(cfg["lr"], dt) * mh / (jnp.sqrt(vh) + jnp.asarray(cfg["eps"], dt))
+            new_opt_al = {"m": m, "w": v, "c": opt["alpha"]["c"]}
+
+        # ---- target EMA ---------------------------------------------------
+        if ours:
+            flat_b, tdef = jax.tree.flatten(tgt_buf)
+            flat_c = tdef.flatten_up_to(tgt_comp)
+            flat_p = tdef.flatten_up_to(new_critic)
+            outs = [kahan_ema_update(b, c, p, tau=cfg["tau"], scale=C)
+                    for b, c, p in zip(flat_b, flat_c, flat_p)]
+            new_tbuf = tdef.unflatten([o[0] for o in outs])
+            new_tcomp = tdef.unflatten([o[1] for o in outs])
+        else:
+            tau = jnp.asarray(cfg["tau"], dt)
+            new_tbuf = jax.tree.map(lambda b, p: b + tau * (p - b), tgt_buf, new_critic)
+            new_tcomp = tgt_comp
+
+        # ---- pack (back to the f32 interface) --------------------------
+        uncast = lambda tree: jax.tree.map(lambda x: x.astype(jnp.float32), tree)
+        new_state = {
+            "params": uncast({"actor": new_actor, "critic": new_critic,
+                              "log_alpha": new_la}),
+            "target_buf": uncast(new_tbuf),
+            "target_comp": uncast(new_tcomp),
+            "opt": uncast({"actor": new_opt_a, "critic": new_opt_c,
+                           "alpha": new_opt_al}),
+            "t": jnp.asarray([t_new], jnp.float32),
+        }
+        metrics = jnp.stack([
+            (closs_scaled / jnp.asarray(gamma, dt)).astype(jnp.float32),
+            jnp.mean(q1).astype(jnp.float32),
+            jnp.mean(logp_cur).astype(jnp.float32),
+            alpha.astype(jnp.float32),
+        ])
+        return new_state, metrics
+
+    return step
+
+
+def make_act(cfg, stochastic=True):
+    """Policy-inference function: (actor_params, obs, eps) -> action."""
+    dt = dtype_of(cfg)
+    ours = cfg["variant"] == "fp16_ours"
+
+    def act(actor, obs, eps):
+        actor = jax.tree.map(lambda x: x.astype(dt), actor)
+        mu, ls = actor_head(actor, obs.astype(dt), cfg, dt)
+        if stochastic:
+            a, _ = tanh_gaussian(mu, ls, eps.astype(dt),
+                                 softplus_fix=ours, normal_fix=ours)
+        else:
+            a = jnp.tanh(mu)
+        return a.astype(jnp.float32)
+
+    return act

@@ -1,0 +1,62 @@
+"""tanh-Gaussian log-prob kernel vs the f64 oracle; failure-mode checks
+for the unfixed variants in fp16."""
+
+import numpy as np
+
+from compile.kernels.logprob import tanh_gaussian
+from compile.kernels.ref import tanh_gaussian_ref
+
+
+def rand_head(b, a, seed, mu_scale=1.0, ls_center=-1.0):
+    rng = np.random.default_rng(seed)
+    mu = (rng.standard_normal((b, a)) * mu_scale).astype(np.float32)
+    ls = (ls_center + rng.standard_normal((b, a)) * 0.3).astype(np.float32)
+    eps = rng.standard_normal((b, a)).astype(np.float32)
+    return mu, ls, eps
+
+
+def test_matches_oracle_f32():
+    mu, ls, eps = rand_head(64, 4, 1)
+    a, lp = tanh_gaussian(mu, ls, eps)
+    a_ref, lp_ref = tanh_gaussian_ref(mu, ls, eps)
+    np.testing.assert_allclose(np.asarray(a), a_ref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(lp), lp_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_fix_and_nofix_agree_in_f32():
+    """Statement 1: the rewrites are identities in high precision."""
+    mu, ls, eps = rand_head(32, 3, 2)
+    _, lp_fix = tanh_gaussian(mu, ls, eps, softplus_fix=True, normal_fix=True)
+    _, lp_raw = tanh_gaussian(mu, ls, eps, softplus_fix=False, normal_fix=False)
+    np.testing.assert_allclose(np.asarray(lp_fix), np.asarray(lp_raw),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_softplus_overflow_without_fix_fp16():
+    """u << 0 -> exp(-2u) overflows fp16 without the fix."""
+    mu = np.full((1, 1), -8.0, np.float16)
+    ls = np.full((1, 1), -3.0, np.float16)
+    eps = np.zeros((1, 1), np.float16)
+    _, lp_raw = tanh_gaussian(mu, ls, eps, softplus_fix=False, normal_fix=True)
+    assert not np.isfinite(np.asarray(lp_raw))[0, 0]
+    _, lp_fix = tanh_gaussian(mu, ls, eps, softplus_fix=True, normal_fix=True)
+    assert np.isfinite(np.asarray(lp_fix))[0, 0]
+
+
+def test_normal_underflow_without_fix_fp16():
+    """sigma ~= e^-10: sigma^2 underflows fp16; the ratio form survives."""
+    mu = np.full((1, 1), 0.3, np.float16)
+    ls = np.full((1, 1), -10.0, np.float16)
+    eps = np.full((1, 1), 1.5, np.float16)
+    _, lp_raw = tanh_gaussian(mu, ls, eps, softplus_fix=True, normal_fix=False)
+    assert not np.isfinite(np.asarray(lp_raw))[0, 0]
+    _, lp_fix = tanh_gaussian(mu, ls, eps, softplus_fix=True, normal_fix=True)
+    assert np.isfinite(np.asarray(lp_fix))[0, 0]
+
+
+def test_actions_bounded():
+    mu, ls, eps = rand_head(128, 6, 3, mu_scale=5.0)
+    a, _ = tanh_gaussian(mu.astype(np.float16), ls.astype(np.float16),
+                         eps.astype(np.float16))
+    a = np.asarray(a)
+    assert np.all(a >= -1.0) and np.all(a <= 1.0)

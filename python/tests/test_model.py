@@ -1,0 +1,94 @@
+"""L2 train-step sanity: shapes, finiteness, learning signal, and the
+fp16_naive failure mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def make_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    b, o, a = cfg["batch"], cfg["obs_dim"], cfg["act_dim"]
+    f = np.float32
+    return (
+        rng.standard_normal((b, o)).astype(f),
+        rng.uniform(-1, 1, (b, a)).astype(f),
+        rng.uniform(0, 1, b).astype(f),
+        rng.standard_normal((b, o)).astype(f),
+        np.ones(b, f),
+        rng.standard_normal((b, a)).astype(f),
+        rng.standard_normal((b, a)).astype(f),
+    )
+
+
+@pytest.mark.parametrize("variant", ["fp32", "fp16_ours"])
+def test_train_step_runs_and_updates(variant):
+    cfg = model.default_cfg(obs_dim=3, act_dim=1, hidden=16, batch=8, variant=variant)
+    state = model.init_state(0, cfg)
+    step = jax.jit(model.make_train_step(cfg))
+    batch = make_batch(cfg)
+    s1, metrics = step(state, *batch)
+    m = np.asarray(metrics)
+    assert np.all(np.isfinite(m)), f"metrics {m}"
+    assert float(s1["t"][0]) == 1.0
+    # params moved
+    w0 = np.asarray(jax.tree.leaves(state["params"]["actor"])[0])
+    w1 = np.asarray(jax.tree.leaves(s1["params"]["actor"])[0])
+    assert not np.array_equal(w0, w1)
+    # a second step composes
+    s2, m2 = step(s1, *make_batch(cfg, 1))
+    assert np.all(np.isfinite(np.asarray(m2)))
+    assert float(s2["t"][0]) == 2.0
+
+
+def test_fp16_ours_state_stays_f16_representable():
+    cfg = model.default_cfg(hidden=16, batch=8, variant="fp16_ours")
+    state = model.init_state(0, cfg)
+    step = jax.jit(model.make_train_step(cfg))
+    for i in range(3):
+        state, _ = step(state, *make_batch(cfg, i))
+    for leaf in jax.tree.leaves(state["params"]):
+        x = np.asarray(leaf)
+        np.testing.assert_array_equal(x, x.astype(np.float16).astype(np.float32))
+
+
+def test_critic_loss_decreases_on_fixed_batch():
+    cfg = model.default_cfg(hidden=32, batch=16, variant="fp32")
+    cfg["lr"] = 1e-3
+    state = model.init_state(0, cfg)
+    step = jax.jit(model.make_train_step(cfg))
+    batch = make_batch(cfg, 3)
+    losses = []
+    for _ in range(60):
+        state, m = step(state, *batch)
+        losses.append(float(np.asarray(m)[0]))
+    assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+
+
+def test_act_fn_bounded_actions():
+    cfg = model.default_cfg(hidden=16, batch=8, variant="fp16_ours")
+    state = model.init_state(0, cfg)
+    act = jax.jit(model.make_act(cfg))
+    obs = np.zeros((1, cfg["obs_dim"]), np.float32)
+    eps = np.ones((1, cfg["act_dim"]), np.float32)
+    a = np.asarray(act(state["params"]["actor"], obs, eps))
+    assert a.shape == (1, cfg["act_dim"])
+    assert np.all(np.abs(a) <= 1.0)
+
+
+def test_fp32_and_fp16_ours_agree_initially():
+    """One step from the same init: fp16+ours should track fp32 closely
+    (the whole point of the paper)."""
+    cfg32 = model.default_cfg(hidden=16, batch=8, variant="fp32")
+    cfg16 = model.default_cfg(hidden=16, batch=8, variant="fp16_ours")
+    s32 = model.init_state(0, cfg32)
+    s16 = model.init_state(0, cfg16)
+    batch = make_batch(cfg32, 5)
+    _, m32 = jax.jit(model.make_train_step(cfg32))(s32, *batch)
+    _, m16 = jax.jit(model.make_train_step(cfg16))(s16, *batch)
+    m32, m16 = np.asarray(m32), np.asarray(m16)
+    # critic loss and q-values in the same ballpark
+    assert abs(m32[0] - m16[0]) < 0.1 * (1 + abs(m32[0])), f"{m32} vs {m16}"

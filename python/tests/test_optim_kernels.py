@@ -1,0 +1,110 @@
+"""hAdam and Kahan-EMA Pallas kernels vs the f64 oracles, plus the
+paper's Statement-1 equivalences."""
+
+import numpy as np
+
+from compile.kernels.hadam import hadam_update
+from compile.kernels.kahan import kahan_ema_update
+from compile.kernels.ref import adam_ref, hadam_ref, kahan_ema_ref
+
+
+def test_hadam_matches_oracle_f32():
+    rng = np.random.default_rng(1)
+    n = 300
+    p = rng.standard_normal(n).astype(np.float32)
+    m = np.zeros(n, np.float32)
+    w = np.zeros(n, np.float32)
+    c = np.zeros(n, np.float32)
+    g = (rng.standard_normal(n) * 0.01).astype(np.float32)
+    t = np.asarray([1], np.int32)
+    got = hadam_update(p, m, w, c, g, t, lr=1e-3)
+    want = hadam_ref(p, m, w, c, g, 1, lr=1e-3, dtype=np.float64)
+    for gv, wv in zip(got, want):
+        np.testing.assert_allclose(np.asarray(gv), wv, rtol=2e-5, atol=1e-7)
+
+
+def test_hadam_equals_adam_in_high_precision():
+    """Statement 1: hAdam == Adam when nothing under/overflows."""
+    rng = np.random.default_rng(2)
+    n = 64
+    p = rng.standard_normal(n).astype(np.float32)
+    m = np.zeros(n, np.float32)
+    wh = np.zeros(n, np.float32)
+    c = np.zeros(n, np.float32)
+    v = np.zeros(n, np.float64)
+    pa = p.astype(np.float64)
+    ma = np.zeros(n, np.float64)
+    ph, mh = p.copy(), m.copy()
+    for t in range(1, 30):
+        g = (rng.standard_normal(n) * 0.1).astype(np.float32)
+        ph, mh, wh, c = (np.asarray(x) for x in hadam_update(
+            ph, mh, wh, c, g, np.asarray([t], np.int32), lr=1e-2, kahan=True))
+        pa, ma, v = adam_ref(pa, ma, v, g, t, lr=1e-2)
+    np.testing.assert_allclose(ph, pa, rtol=1e-3, atol=1e-5)
+
+
+def test_hadam_fp16_survives_tiny_gradients():
+    """g = 1e-5: g**2 underflows fp16 (naive Adam stalls/NaNs) but the
+    hypot-form w tracks it."""
+    n = 8
+    p = np.ones(n, np.float16)
+    m = np.zeros(n, np.float16)
+    w = np.zeros(n, np.float16)
+    c = np.zeros(n, np.float16)
+    for t in range(1, 20):
+        g = np.full(n, 1e-2, np.float16)  # representable, g^2 = 1e-4 ok
+        p, m, w, c = hadam_update(p, m, w, c, g, np.asarray([t], np.int32),
+                                  lr=1e-3, gamma=1.0)
+    p = np.asarray(p)
+    assert np.all(np.isfinite(p))
+    assert np.all(p < 1.0), "must make progress"
+    # and with truly tiny grads, w stays alive thanks to hypot
+    w2 = np.zeros(n, np.float16)
+    g = np.full(n, 1e-5, np.float16)
+    _, _, w2, _ = hadam_update(np.ones(n, np.float16), np.zeros(n, np.float16),
+                               w2, np.zeros(n, np.float16), g,
+                               np.asarray([1], np.int32), lr=1e-3)
+    assert np.all(np.asarray(w2) > 0), "hypot second moment must not underflow"
+    assert np.float16(1e-5) ** 2 == 0, "sanity: naive v would underflow"
+
+
+def test_compound_scaling_invariance_f32():
+    """gamma-scaled grads + gamma*eps denominator == unscaled update."""
+    rng = np.random.default_rng(3)
+    n = 50
+    p0 = rng.standard_normal(n).astype(np.float32)
+    g = (rng.standard_normal(n) * 1e-3).astype(np.float32)
+    z = np.zeros(n, np.float32)
+    t = np.asarray([1], np.int32)
+    plain = hadam_update(p0, z, z, z, g, t, lr=1e-2, gamma=1.0)
+    scaled = hadam_update(p0, z, z, z, g * 1e4, t, lr=1e-2, gamma=1e4)
+    np.testing.assert_allclose(np.asarray(plain[0]), np.asarray(scaled[0]),
+                               rtol=1e-4, atol=1e-7)
+
+
+def test_kahan_ema_matches_oracle():
+    rng = np.random.default_rng(4)
+    n = 128
+    buf = rng.standard_normal(n).astype(np.float32)
+    comp = np.zeros(n, np.float32)
+    psi = rng.standard_normal(n).astype(np.float32)
+    got = kahan_ema_update(buf, comp, psi, tau=0.005, scale=1.0)
+    want = kahan_ema_ref(buf, comp, psi, tau=0.005, scale=1.0, dtype=np.float64)
+    np.testing.assert_allclose(np.asarray(got[0]), want[0], rtol=1e-5, atol=1e-6)
+
+
+def test_kahan_ema_fp16_tracks_where_plain_stalls():
+    n = 32
+    tau, scale = 0.005, 1e4
+    psi = np.ones(n, np.float16)
+    buf = (np.full(n, 0.9, np.float16) * np.float16(scale)).astype(np.float16)
+    comp = np.zeros(n, np.float16)
+    plain = np.full(n, 0.9, np.float16)
+    for _ in range(3000):
+        buf, comp = kahan_ema_update(buf, comp, psi, tau=tau, scale=scale)
+        plain = (plain + np.float16(tau) * (psi - plain)).astype(np.float16)
+    hat = np.asarray(buf, np.float32) / scale
+    k_err = float(np.max(np.abs(hat - 1.0)))
+    p_err = float(np.max(np.abs(plain.astype(np.float32) - 1.0)))
+    assert k_err < 6e-3, f"kahan err {k_err}"
+    assert p_err > 3 * max(k_err, 1e-4), f"plain {p_err} vs kahan {k_err}"

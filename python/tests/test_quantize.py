@@ -1,0 +1,65 @@
+"""Pallas quantize kernel vs the f64 oracle and vs IEEE f16 semantics."""
+
+import numpy as np
+import pytest
+
+from compile.kernels.quantize import quantize
+from compile.kernels.ref import quantize_ref
+
+
+def rand(n, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n) * scale).astype(np.float32)
+
+
+@pytest.mark.parametrize("exp,man", [(5, 10), (8, 7), (5, 7), (5, 5), (4, 3)])
+def test_matches_oracle(exp, man):
+    x = np.concatenate([
+        rand(512, 1), rand(512, 2, 1e-4), rand(512, 3, 1e4),
+        np.asarray([0.0, -0.0, 1.0, -1.0, 65504.0, 65520.0, 1e-8], np.float32),
+    ])
+    got = np.asarray(quantize(x, exp, man))
+    want = quantize_ref(x, exp, man)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fp16_matches_numpy_half():
+    """(5, 10) must agree with IEEE binary16 everywhere finite."""
+    rng = np.random.default_rng(7)
+    x = np.concatenate([
+        (rng.standard_normal(4096) * 10 ** rng.uniform(-8, 5, 4096)).astype(np.float32),
+        np.asarray([6.1e-5, 5.96e-8, 2.98e-8, 2.99e-8, 65519.0, 65520.0], np.float32),
+    ])
+    got = np.asarray(quantize(x, 5, 10))
+    want = x.astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_preserves_specials():
+    x = np.asarray([np.inf, -np.inf, 0.0, -0.0], np.float32)
+    got = np.asarray(quantize(x, 5, 10))
+    np.testing.assert_array_equal(got, x)
+    assert np.signbit(got[3])
+    assert np.isnan(quantize(np.asarray([np.nan], np.float32), 5, 10))[0]
+
+
+def test_underflow_to_zero():
+    x = np.asarray([1e-9, -1e-9], np.float32)
+    got = np.asarray(quantize(x, 5, 10))
+    np.testing.assert_array_equal(got, np.asarray([0.0, -0.0], np.float32))
+
+
+def test_fewer_bits_coarser():
+    x = rand(1000, 9)
+    prev_err = 0.0
+    for man in (10, 7, 5, 3):
+        q = np.asarray(quantize(x, 5, man))
+        err = float(np.mean(np.abs(q - x)))
+        assert err >= prev_err
+        prev_err = err
+
+
+def test_shape_preserved_2d():
+    x = rand(600, 11).reshape(20, 30)
+    q = np.asarray(quantize(x, 5, 7))
+    assert q.shape == (20, 30)

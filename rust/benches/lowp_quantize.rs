@@ -1,0 +1,52 @@
+//! Bench: quantization throughput — the single hottest operation in the
+//! simulated-precision engine (every tensor op ends with a quantize
+//! pass). Figure 4's sweep and all fp16 runs are bounded by this.
+
+use lprl::lowp::{e5m, FloatFormat, OverflowMode, RoundMode, BF16, FP16};
+use lprl::rngs::Pcg64;
+use std::time::Instant;
+
+fn bench_fmt(label: &str, fmt: FloatFormat, xs: &[f32], iters: usize) {
+    let mut buf = xs.to_vec();
+    // warmup
+    fmt.quantize_slice(&mut buf);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        buf.copy_from_slice(xs);
+        fmt.quantize_slice(&mut buf);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / (iters * xs.len()) as f64;
+    println!("{label:<28} {ns:>8.2} ns/elem");
+    std::hint::black_box(&buf);
+}
+
+fn main() {
+    let n = 1 << 18;
+    let mut rng = Pcg64::seed(1);
+    let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    let iters = 50;
+
+    println!("quantize_slice throughput ({} elems):", n);
+    bench_fmt("fp16 (e5m10)", FP16, &xs, iters);
+    bench_fmt("bf16 (e8m7)", BF16, &xs, iters);
+    bench_fmt("e5m7", e5m(7), &xs, iters);
+    bench_fmt("e5m5", e5m(5), &xs, iters);
+
+    // stochastic rounding (needs RNG per element)
+    let mut buf = xs.clone();
+    let mut r = Pcg64::seed(2);
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        for v in buf.iter_mut() {
+            *v = FP16.quantize_with(*v, RoundMode::Stochastic, OverflowMode::Infinity, Some(&mut r));
+        }
+        buf.copy_from_slice(&xs);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / (10 * n) as f64;
+    println!("{:<28} {ns:>8.2} ns/elem", "fp16 stochastic");
+    std::hint::black_box(&buf);
+
+    // subnormal-heavy input (the slow path)
+    let tiny: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-6).collect();
+    bench_fmt("fp16 on subnormal inputs", FP16, &tiny, iters);
+}

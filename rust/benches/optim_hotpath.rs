@@ -1,0 +1,57 @@
+//! Bench: the optimizer hot path — ns/element for Adam vs hAdam under
+//! fp32 and simulated fp16, plus the Kahan EMA. These are the L3 kernels
+//! the §Perf pass optimizes.
+
+use lprl::lowp::Precision;
+use lprl::nn::Param;
+use lprl::optim::{Adam, AdamConfig, GradScaler, ScaledKahanEma, SecondMoment, UpdateMode};
+use lprl::rngs::Pcg64;
+use std::time::Instant;
+
+fn bench<F: FnMut()>(label: &str, elems: usize, iters: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / (iters * elems) as f64;
+    println!("{label:<44} {ns:>8.2} ns/elem");
+}
+
+fn main() {
+    let n = 1 << 16;
+    let iters = 30;
+    let mut rng = Pcg64::seed(1);
+    let grads: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-3).collect();
+
+    let cfg = AdamConfig::default();
+    let cases: [(&str, Precision, SecondMoment, UpdateMode, bool); 5] = [
+        ("adam fp32", Precision::Fp32, SecondMoment::Variance, UpdateMode::Plain, false),
+        ("hadam fp32", Precision::Fp32, SecondMoment::Hypot, UpdateMode::Plain, false),
+        ("adam fp16(sim)", Precision::fp16(), SecondMoment::Variance, UpdateMode::Plain, false),
+        ("hadam fp16(sim)", Precision::fp16(), SecondMoment::Hypot, UpdateMode::Plain, false),
+        ("hadam+kahan+compound fp16(sim) [paper]", Precision::fp16(), SecondMoment::Hypot, UpdateMode::Kahan, true),
+    ];
+    for (label, prec, second, update, compound) in cases {
+        let mut opt = Adam::new(cfg, prec, second, update, compound);
+        let mut p = Param::from_values("p", &[n], vec![0.1; n]);
+        let mut sc = if compound { GradScaler::fixed(1e4) } else { GradScaler::disabled() };
+        let gscale = sc.scale();
+        bench(label, n, iters, || {
+            for (g, src) in p.g.iter_mut().zip(&grads) {
+                *g = src * gscale;
+            }
+            opt.step(&mut [&mut p], &mut sc);
+        });
+    }
+
+    let psi: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    for (label, prec, comp) in [
+        ("target EMA plain fp32", Precision::Fp32, false),
+        ("target EMA kahan-momentum fp16(sim)", Precision::fp16(), true),
+    ] {
+        let mut ema = ScaledKahanEma::new(&vec![0.0; n], 1e4, prec, comp);
+        bench(label, n, iters, || ema.update(&psi, 0.005));
+    }
+}

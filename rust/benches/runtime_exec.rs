@@ -1,0 +1,56 @@
+//! Bench: PJRT artifact execution — latency per fused train step and
+//! per policy-inference call, for every variant. Measures the L3 hot
+//! path of the three-layer architecture (host-copy overhead included).
+//!
+//! Requires `make artifacts`; exits cleanly when missing.
+
+use lprl::rngs::Pcg64;
+use lprl::runtime::TrainSession;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("skipping runtime bench: run `make artifacts` first");
+        return Ok(());
+    }
+    for variant in ["fp32", "fp16_naive", "fp16_ours"] {
+        let t0 = Instant::now();
+        let mut sess = TrainSession::new("artifacts", variant)?;
+        let compile_s = t0.elapsed().as_secs_f64();
+        let (o, a, b) = sess.dims();
+        let mut rng = Pcg64::seed(1);
+        let mut v = |n: usize| -> Vec<f32> { (0..n).map(|_| rng.normal_f32()).collect() };
+        let (obs, act, next_obs) = (v(b * o), v(b * a), v(b * o));
+        let (eps_n, eps_c) = (v(b * a), v(b * a));
+        let rew = vec![0.5f32; b];
+        let nd = vec![1.0f32; b];
+
+        // warm
+        for _ in 0..3 {
+            sess.step(&obs, &act, &rew, &next_obs, &nd, &eps_n, &eps_c)?;
+        }
+        let iters = 50;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sess.step(&obs, &act, &rew, &next_obs, &nd, &eps_n, &eps_c)?;
+        }
+        let step_ms = t0.elapsed().as_secs_f64() * 1000.0 / iters as f64;
+
+        let obs1 = v(o);
+        let eps1 = v(a);
+        for _ in 0..3 {
+            sess.act(&obs1, &eps1)?;
+        }
+        let t0 = Instant::now();
+        for _ in 0..200 {
+            sess.act(&obs1, &eps1)?;
+        }
+        let act_us = t0.elapsed().as_secs_f64() * 1e6 / 200.0;
+
+        println!(
+            "{variant:<12} compile {compile_s:>5.1}s   train_step {step_ms:>7.3} ms ({:.0}/s)   act {act_us:>7.1} us",
+            1000.0 / step_ms
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate the paper's Table 2 (pixels) and Table 10 (states)
+//! time-per-minibatch sweeps. `cargo bench --bench table2_states_speed`.
+//!
+//! Custom harness (the offline build has no criterion); timings use the
+//! same warm-start + averaged-iterations protocol as the paper (§H).
+
+fn main() -> anyhow::Result<()> {
+    let kv: Vec<(String, String)> = vec![
+        ("tasks".into(), "cheetah_run".into()),
+        ("seeds".into(), "1".into()),
+    ];
+    lprl::experiments::run("table10", &kv)?;
+    println!();
+    lprl::experiments::run("table2", &kv)?;
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate the paper's Table 3 (pixels) and Table 11 (states)
+//! memory sweeps at paper scale, plus measured replay-buffer bytes.
+
+use lprl::replay::{ReplayBuffer, Storage};
+
+fn main() -> anyhow::Result<()> {
+    let kv: Vec<(String, String)> = vec![("seeds".into(), "1".into())];
+    lprl::experiments::run("table3", &kv)?;
+    println!();
+    lprl::experiments::run("table11", &kv)?;
+
+    // measured (not modeled) replay storage at paper scale
+    println!("\nreplay buffer bytes (measured allocations, capacity 100k, pixel obs 9x84x84):");
+    for (name, st) in [("fp32", Storage::F32), ("fp16", Storage::F16)] {
+        let buf = ReplayBuffer::new(1000, &[9, 84, 84], 6, st);
+        println!("  {name}: {:.1} MB per 1k transitions", buf.bytes() as f64 / 1e6);
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! Training coordinator: the seed/collect/update loop, episode
+//! management (time limits + action repeat), evaluation, pixel
+//! frame-stacking, crash accounting, and multi-seed parallel
+//! orchestration for the experiment harness.
+
+mod pixels;
+mod trainer;
+
+pub use pixels::PixelEnvAdapter;
+pub use trainer::{run_many, train, TrainOutcome};
+
+/// dm_control episode length in raw environment steps.
+pub const EPISODE_ENV_STEPS: usize = 1000;

@@ -1,0 +1,340 @@
+//! The training loop (launcher): seed phase with random actions, then
+//! collect-and-update with periodic deterministic evaluation — the same
+//! schedule as the reference SAC codebase, plus the paper's crash
+//! accounting (a non-finite action scores the run 0 from then on).
+
+use super::pixels::PixelEnvAdapter;
+use super::EPISODE_ENV_STEPS;
+use crate::config::RunConfig;
+use crate::envs::{action_repeat, make_env, sanitize_action, Env};
+use crate::replay::{ReplayBuffer, Storage};
+use crate::rngs::Pcg64;
+use crate::sac::{SacAgent, SacConfig};
+use crate::telemetry::{LogHistogram, Series};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Result of one training run.
+pub struct TrainOutcome {
+    pub cfg: RunConfig,
+    /// Evaluation curve: (agent env-steps × action-repeat, mean return).
+    pub eval_curve: Series,
+    /// Mean return of the final evaluation (0 if crashed).
+    pub final_score: f64,
+    pub crashed: bool,
+    /// |gradient| histogram sampled at a few updates (Figure 6).
+    pub grad_hist: LogHistogram,
+    pub wall_secs: f64,
+    /// Total optimizer steps skipped due to non-finite gradients.
+    pub skipped_steps: u64,
+}
+
+enum Obs {
+    State(Box<dyn Env>),
+    Pixels(PixelEnvAdapter),
+}
+
+impl Obs {
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        match self {
+            Obs::State(e) => e.reset(rng),
+            Obs::Pixels(p) => p.reset(rng),
+        }
+    }
+    fn step(&mut self, a: &[f32]) -> (Vec<f32>, f32) {
+        match self {
+            Obs::State(e) => e.step(a),
+            Obs::Pixels(p) => p.step(a),
+        }
+    }
+    fn act_dim(&self) -> usize {
+        match self {
+            Obs::State(e) => e.act_dim(),
+            Obs::Pixels(p) => p.env.act_dim(),
+        }
+    }
+}
+
+fn build_env(cfg: &RunConfig) -> Obs {
+    let env = make_env(&cfg.task).unwrap_or_else(|| panic!("unknown task {}", cfg.task));
+    if cfg.pixels {
+        Obs::Pixels(PixelEnvAdapter::new(env, cfg.image_size, cfg.frame_stack))
+    } else {
+        Obs::State(env)
+    }
+}
+
+fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
+    let (prec, methods) = cfg
+        .preset()
+        .unwrap_or_else(|| panic!("unknown preset {}", cfg.preset));
+    let mut sac_cfg = if cfg.pixels {
+        SacConfig::pixels(cfg.feature_dim, act_dim, cfg.hidden)
+    } else {
+        SacConfig::states(obs_dim, act_dim, cfg.hidden)
+    };
+    if cfg.lr > 0.0 {
+        sac_cfg.lr = cfg.lr;
+    }
+    if cfg.gamma > 0.0 {
+        sac_cfg.gamma = cfg.gamma;
+    }
+    if cfg.tau > 0.0 {
+        sac_cfg.tau = cfg.tau;
+    }
+    if cfg.init_temp > 0.0 {
+        sac_cfg.init_temperature = cfg.init_temp;
+    }
+    if cfg.min_log_sig != 0.0 {
+        sac_cfg.log_sig_lo = cfg.min_log_sig;
+    }
+    if cfg.pixels {
+        SacAgent::new_pixels(
+            sac_cfg,
+            methods,
+            prec,
+            cfg.seed,
+            cfg.frame_stack * 3,
+            cfg.image_size,
+            cfg.filters,
+        )
+    } else {
+        SacAgent::new(sac_cfg, methods, prec, cfg.seed)
+    }
+}
+
+/// Run `episodes` deterministic evaluation episodes; returns the mean
+/// return (sum of raw env rewards over the 1000-env-step episode).
+fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u64) -> f64 {
+    let repeat = action_repeat(&cfg.task);
+    let steps = EPISODE_ENV_STEPS / repeat;
+    let mut total = 0.0;
+    for ep in 0..episodes {
+        let mut env = build_env(cfg);
+        let mut rng = Pcg64::seed_stream(eval_seed, 1000 + ep as u64);
+        let mut obs = env.reset(&mut rng);
+        for _ in 0..steps {
+            let Some(mut a) = agent.act(&obs, false) else {
+                return 0.0; // crash ⇒ the paper scores the run as 0
+            };
+            if !sanitize_action(&mut a) {
+                agent.crashed = true;
+                return 0.0;
+            }
+            for _ in 0..repeat {
+                let (o, r) = env.step(&a);
+                obs = o;
+                total += r as f64;
+            }
+        }
+    }
+    total / episodes as f64
+}
+
+/// Train one agent per `cfg`; fully deterministic in `cfg.seed`.
+pub fn train(cfg: &RunConfig) -> TrainOutcome {
+    let t0 = std::time::Instant::now();
+    let repeat = action_repeat(&cfg.task);
+    let mut env = build_env(cfg);
+    let act_dim = env.act_dim();
+    let mut rng = Pcg64::seed_stream(cfg.seed, 7);
+
+    let mut obs = env.reset(&mut rng);
+    let obs_shape: Vec<usize> = if cfg.pixels {
+        vec![cfg.frame_stack * 3, cfg.image_size, cfg.image_size]
+    } else {
+        vec![obs.len()]
+    };
+    let mut agent = build_agent(cfg, obs.len(), act_dim);
+    let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
+    let mut replay = ReplayBuffer::new(cfg.replay_capacity, &obs_shape, act_dim, storage);
+
+    let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));
+    let mut grad_hist = LogHistogram::new(-12, 4, 2);
+    let probe_at: Vec<usize> = (1..=3).map(|i| cfg.steps * i / 4).collect();
+
+    let episode_steps = EPISODE_ENV_STEPS / repeat;
+    let mut ep_step = 0usize;
+    let mut crashed = false;
+    let mut skipped = 0u64;
+
+    for step in 0..cfg.steps {
+        // -- act ---------------------------------------------------------
+        let mut a = if step < cfg.seed_steps {
+            (0..act_dim).map(|_| rng.uniform_in(-1.0, 1.0)).collect::<Vec<f32>>()
+        } else {
+            match agent.act(&obs, true) {
+                Some(a) => a,
+                None => {
+                    crashed = true;
+                    break;
+                }
+            }
+        };
+        if !sanitize_action(&mut a) {
+            crashed = true;
+            break;
+        }
+        let mut rew = 0.0f32;
+        let mut next_obs = obs.clone();
+        for _ in 0..repeat {
+            let (o, r) = env.step(&a);
+            next_obs = o;
+            rew += r;
+        }
+        ep_step += 1;
+        let done = ep_step >= episode_steps;
+        // dm_control time limits are not true terminals: not_done stays 1
+        replay.push(&obs, &a, rew, &next_obs, false);
+        obs = next_obs;
+        if done {
+            obs = env.reset(&mut rng);
+            ep_step = 0;
+        }
+
+        // -- update ------------------------------------------------------
+        if step >= cfg.seed_steps && replay.len() >= cfg.batch {
+            if probe_at.contains(&step) {
+                agent.grad_probe = Some(Vec::new());
+            }
+            let batch = if cfg.pixels {
+                replay.sample_aug(cfg.batch, 2, &mut rng)
+            } else {
+                replay.sample(cfg.batch, &mut rng)
+            };
+            let stats = agent.update(&batch);
+            skipped = stats.skipped_steps;
+            if let Some(probe) = agent.grad_probe.take() {
+                grad_hist.record_all(&probe);
+            }
+        }
+
+        // -- eval --------------------------------------------------------
+        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+            let score = if agent.crashed || crashed {
+                0.0
+            } else {
+                evaluate(&mut agent, cfg, cfg.eval_episodes, cfg.seed ^ 0x5EED)
+            };
+            eval_curve.push(((step + 1) * repeat) as f64, score);
+            if agent.crashed {
+                crashed = true;
+                break;
+            }
+        }
+    }
+
+    if crashed || agent.crashed {
+        // paper: crashed runs are scored as 0 for the rest of training
+        eval_curve.push((cfg.steps * repeat) as f64, 0.0);
+    }
+    let final_score = if crashed || agent.crashed { 0.0 } else { eval_curve.last_y() };
+    TrainOutcome {
+        cfg: cfg.clone(),
+        eval_curve,
+        final_score,
+        crashed: crashed || agent.crashed,
+        grad_hist,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        skipped_steps: skipped,
+    }
+}
+
+/// Train many configurations in parallel across OS threads (one run per
+/// thread, capped at the host parallelism). Results keep input order.
+pub fn run_many(cfgs: &[RunConfig]) -> Vec<TrainOutcome> {
+    let n = cfgs.len();
+    let mut results: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
+    let next = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n.max(1));
+    let results_ptr = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let out = train(&cfgs[i]);
+                results_ptr.lock().unwrap()[i] = Some(out);
+            });
+        }
+    });
+    results.into_iter().map(|o| o.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> RunConfig {
+        RunConfig {
+            task: "pendulum_swingup".into(),
+            preset: "fp32".into(),
+            steps: 120,
+            seed_steps: 40,
+            batch: 16,
+            hidden: 24,
+            eval_every: 60,
+            eval_episodes: 1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fp32_short_run_completes() {
+        let out = train(&quick_cfg());
+        assert!(!out.crashed);
+        assert!(!out.eval_curve.points.is_empty());
+        assert!(out.final_score >= 0.0);
+        assert!(out.grad_hist.total() > 0, "grad probe must fire");
+    }
+
+    #[test]
+    fn fp16_ours_short_run_completes() {
+        let mut cfg = quick_cfg();
+        cfg.preset = "fp16_ours".into();
+        let out = train(&cfg);
+        assert!(!out.crashed, "fp16+ours must not crash");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = quick_cfg();
+        let a = train(&cfg);
+        let b = train(&cfg);
+        assert_eq!(a.eval_curve.points, b.eval_curve.points);
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 1;
+        let c = train(&cfg2);
+        assert_ne!(a.eval_curve.points, c.eval_curve.points);
+    }
+
+    #[test]
+    fn run_many_preserves_order() {
+        let mut cfgs = vec![quick_cfg(), quick_cfg()];
+        cfgs[1].seed = 9;
+        let outs = run_many(&cfgs);
+        assert_eq!(outs.len(), 2);
+        assert_eq!(outs[0].cfg.seed, 0);
+        assert_eq!(outs[1].cfg.seed, 9);
+        // same as serial
+        let serial = train(&cfgs[1]);
+        assert_eq!(outs[1].eval_curve.points, serial.eval_curve.points);
+    }
+
+    #[test]
+    fn pixel_run_smoke() {
+        let mut cfg = quick_cfg();
+        cfg.pixels = true;
+        cfg.image_size = 17;
+        cfg.filters = 4;
+        cfg.feature_dim = 8;
+        cfg.hidden = 16;
+        cfg.steps = 50;
+        cfg.seed_steps = 30;
+        cfg.batch = 4;
+        cfg.eval_every = 50;
+        let out = train(&cfg);
+        assert!(!out.crashed);
+    }
+}

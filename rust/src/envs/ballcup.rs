@@ -1,0 +1,176 @@
+//! Ball-in-cup catch: a ball hangs from the cup by an elastic string;
+//! the cup moves in the plane under velocity control and must swing the
+//! ball up and catch it. Reward is 1 while the ball is inside the cup
+//! mouth (dm_control's binary catch reward, with a small smooth margin
+//! so the scaled-down task stays learnable).
+
+use super::render::Canvas;
+use super::tolerance::tolerance;
+use super::Env;
+use crate::rngs::Pcg64;
+
+const DT: f64 = 0.01;
+const SUBSTEPS: usize = 2;
+const G: f64 = 9.81;
+const STRING_LEN: f64 = 0.35;
+const STRING_K: f64 = 120.0; // spring constant when taut
+const STRING_DAMP: f64 = 1.0;
+const CUP_SPEED: f64 = 1.2;
+const CUP_R: f64 = 0.06;
+const WORKSPACE: f64 = 0.5;
+
+/// State: cup `(cx, cy)`, ball `(bx, by, vx, vy)`.
+pub struct BallInCup {
+    cup: (f64, f64),
+    ball: [f64; 4],
+}
+
+impl BallInCup {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        BallInCup { cup: (0.0, 0.2), ball: [0.0, -0.15, 0.0, 0.0] }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![
+            (self.cup.0 / WORKSPACE) as f32,
+            (self.cup.1 / WORKSPACE) as f32,
+            (self.ball[0] / WORKSPACE) as f32,
+            (self.ball[1] / WORKSPACE) as f32,
+            (self.ball[2] / 3.0) as f32,
+            (self.ball[3] / 3.0) as f32,
+            ((self.ball[0] - self.cup.0) / STRING_LEN) as f32,
+            ((self.ball[1] - self.cup.1) / STRING_LEN) as f32,
+        ]
+    }
+
+    fn in_cup(&self) -> f64 {
+        let dx = self.ball[0] - self.cup.0;
+        let dy = self.ball[1] - self.cup.1;
+        (dx * dx + dy * dy).sqrt()
+    }
+}
+
+impl Env for BallInCup {
+    fn name(&self) -> &'static str {
+        "ball_in_cup_catch"
+    }
+    fn obs_dim(&self) -> usize {
+        8
+    }
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        self.cup = (rng.uniform_in(-0.1, 0.1) as f64, 0.2);
+        self.ball = [
+            self.cup.0 + rng.uniform_in(-0.05, 0.05) as f64,
+            self.cup.1 - STRING_LEN,
+            0.0,
+            0.0,
+        ];
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32) {
+        let ax = action[0].clamp(-1.0, 1.0) as f64 * CUP_SPEED;
+        let ay = action[1].clamp(-1.0, 1.0) as f64 * CUP_SPEED;
+        for _ in 0..SUBSTEPS {
+            self.cup.0 = (self.cup.0 + ax * DT).clamp(-WORKSPACE, WORKSPACE);
+            self.cup.1 = (self.cup.1 + ay * DT).clamp(-0.1, WORKSPACE);
+            // ballistic ball
+            let (dx, dy) = (self.ball[0] - self.cup.0, self.ball[1] - self.cup.1);
+            let dist = (dx * dx + dy * dy).sqrt().max(1e-9);
+            let (mut fx, mut fy) = (0.0, -G * 0.1); // m = 0.1
+            if dist > STRING_LEN {
+                // taut string: spring + damping along the string direction
+                let stretch = dist - STRING_LEN;
+                let (ux, uy) = (dx / dist, dy / dist);
+                let v_rad = self.ball[2] * ux + self.ball[3] * uy;
+                let f = -STRING_K * stretch - STRING_DAMP * v_rad;
+                fx += f * ux;
+                fy += f * uy;
+            }
+            self.ball[2] += fx / 0.1 * DT;
+            self.ball[3] += fy / 0.1 * DT;
+            self.ball[0] += self.ball[2] * DT;
+            self.ball[1] += self.ball[3] * DT;
+            // mild velocity clamp for numerical sanity
+            self.ball[2] = self.ball[2].clamp(-8.0, 8.0);
+            self.ball[3] = self.ball[3].clamp(-8.0, 8.0);
+        }
+        let r = tolerance(self.in_cup(), 0.0, CUP_R, 0.08);
+        (self.obs(), r as f32)
+    }
+
+    fn render(&self, c: &mut Canvas) {
+        c.clear([0.95, 0.93, 0.9]);
+        let s = 1.8;
+        let (cx, cy) = (self.cup.0 * s, self.cup.1 * s);
+        // cup: two walls
+        c.line(cx - CUP_R * s, cy + 0.08, cx - CUP_R * s, cy - 0.05, 2, [0.2, 0.3, 0.8]);
+        c.line(cx + CUP_R * s, cy + 0.08, cx + CUP_R * s, cy - 0.05, 2, [0.2, 0.3, 0.8]);
+        c.line(cx - CUP_R * s, cy - 0.05, cx + CUP_R * s, cy - 0.05, 2, [0.2, 0.3, 0.8]);
+        // string + ball
+        c.line(cx, cy, self.ball[0] * s, self.ball[1] * s, 1, [0.5, 0.5, 0.5]);
+        c.disk(self.ball[0] * s, self.ball[1] * s, 0.07, [0.85, 0.2, 0.2]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ball_hangs_below_cup_at_rest() {
+        let mut env = BallInCup::new();
+        env.reset(&mut Pcg64::seed(1));
+        for _ in 0..400 {
+            env.step(&[0.0, 0.0]);
+        }
+        assert!(env.ball[1] < env.cup.1, "ball must hang below");
+        let hang = (env.cup.1 - env.ball[1]).abs();
+        assert!((hang - STRING_LEN).abs() < 0.12, "hang={hang}");
+    }
+
+    #[test]
+    fn ball_in_cup_full_reward() {
+        let mut env = BallInCup::new();
+        env.ball = [env.cup.0, env.cup.1, 0.0, 0.0];
+        let (_, r) = env.step(&[0.0, 0.0]);
+        assert!(r > 0.8, "r={r}");
+    }
+
+    #[test]
+    fn hanging_ball_no_reward() {
+        let mut env = BallInCup::new();
+        env.reset(&mut Pcg64::seed(2));
+        let (_, r) = env.step(&[0.0, 0.0]);
+        assert!(r < 0.05, "r={r}");
+    }
+
+    #[test]
+    fn cup_motion_swings_ball() {
+        let mut env = BallInCup::new();
+        env.reset(&mut Pcg64::seed(3));
+        for i in 0..300 {
+            let a = if (i / 25) % 2 == 0 { 1.0 } else { -1.0 };
+            env.step(&[a, 0.0]);
+        }
+        let speed = (env.ball[2].powi(2) + env.ball[3].powi(2)).sqrt();
+        assert!(speed > 0.2, "swinging should energize the ball: {speed}");
+    }
+
+    #[test]
+    fn string_never_stretches_unboundedly() {
+        let mut env = BallInCup::new();
+        env.reset(&mut Pcg64::seed(4));
+        let mut rng = Pcg64::seed(5);
+        for _ in 0..1000 {
+            let a = [rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)];
+            env.step(&a);
+            assert!(env.in_cup() < STRING_LEN * 2.5, "dist={}", env.in_cup());
+        }
+    }
+}

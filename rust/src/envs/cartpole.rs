@@ -1,0 +1,149 @@
+//! Cartpole swing-up: the classic underactuated cart-pole, dm_control
+//! parameters and reward shape (upright × centered × small-control).
+
+use super::render::Canvas;
+use super::tolerance::tolerance;
+use super::{rk4, Env};
+use crate::rngs::Pcg64;
+
+const GRAVITY: f64 = 9.81;
+const M_CART: f64 = 1.0;
+const M_POLE: f64 = 0.1;
+const L_POLE: f64 = 0.5; // half-length
+const FORCE: f64 = 10.0;
+const DT: f64 = 0.01;
+const SUBSTEPS: usize = 2;
+
+/// State: `[x, ẋ, θ, θ̇]`, θ = 0 is **down** (swing-up starts hanging).
+pub struct CartpoleSwingup {
+    s: [f64; 4],
+}
+
+impl CartpoleSwingup {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        CartpoleSwingup { s: [0.0; 4] }
+    }
+
+    fn dynamics(s: &[f64; 4], f: f64) -> [f64; 4] {
+        let (x_dot, th, th_dot) = (s[1], s[2], s[3]);
+        let _ = x_dot;
+        let (sin, cos) = th.sin_cos();
+        let total = M_CART + M_POLE;
+        let pm = M_POLE * L_POLE;
+        // standard cart-pole equations (θ measured from the downward
+        // vertical, so upright is θ = π)
+        let tmp = (f + pm * th_dot * th_dot * sin) / total;
+        let th_acc = (GRAVITY * sin - cos * tmp) / (L_POLE * (4.0 / 3.0 - M_POLE * cos * cos / total));
+        let x_acc = tmp - pm * th_acc * cos / total;
+        [s[1], x_acc, s[3], th_acc]
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let th = self.s[2];
+        vec![
+            self.s[0] as f32,
+            self.s[1] as f32,
+            th.cos() as f32,
+            th.sin() as f32,
+            self.s[3] as f32,
+        ]
+    }
+}
+
+impl Env for CartpoleSwingup {
+    fn name(&self) -> &'static str {
+        "cartpole_swingup"
+    }
+    fn obs_dim(&self) -> usize {
+        5
+    }
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        self.s = [
+            rng.uniform_in(-0.1, 0.1) as f64,
+            0.0,
+            rng.uniform_in(-0.1, 0.1) as f64, // hanging down
+            0.0,
+        ];
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32) {
+        let f = (action[0].clamp(-1.0, 1.0) as f64) * FORCE;
+        for _ in 0..SUBSTEPS {
+            rk4(&mut self.s, DT, |s| Self::dynamics(s, f));
+        }
+        // keep the cart on the track
+        self.s[0] = self.s[0].clamp(-2.5, 2.5);
+        self.s[2] = wrap_pi(self.s[2]);
+        // upright means θ = ±π (pole up)
+        let upright = (1.0 - self.s[2].cos()) / 2.0;
+        let centered = tolerance(self.s[0], -0.25, 0.25, 2.0);
+        let small_vel = tolerance(self.s[3], -6.0, 6.0, 6.0);
+        let r = upright * (1.0 + centered) / 2.0 * (0.5 + 0.5 * small_vel);
+        (self.obs(), r.clamp(0.0, 1.0) as f32)
+    }
+
+    fn render(&self, c: &mut Canvas) {
+        c.clear([0.9, 0.9, 0.95]);
+        let x = (self.s[0] / 2.5) * 0.8;
+        c.rect(x - 0.15, -0.05, x + 0.15, -0.2, [0.2, 0.2, 0.8]);
+        // pole: θ = 0 is down
+        let th = self.s[2];
+        let (px, py) = (x + 0.5 * th.sin(), -0.1 - 0.5 * th.cos());
+        c.line(x, -0.1, px, py, 2, [0.8, 0.3, 0.2]);
+        c.disk(px, py, 0.08, [0.9, 0.5, 0.1]);
+    }
+}
+
+fn wrap_pi(th: f64) -> f64 {
+    let mut t = (th + std::f64::consts::PI).rem_euclid(2.0 * std::f64::consts::PI);
+    t -= std::f64::consts::PI;
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hanging_pole_gives_low_reward() {
+        let mut env = CartpoleSwingup::new();
+        env.reset(&mut Pcg64::seed(1));
+        let (_, r) = env.step(&[0.0]);
+        assert!(r < 0.1, "hanging reward {r}");
+    }
+
+    #[test]
+    fn upright_pole_gives_high_reward() {
+        let mut env = CartpoleSwingup::new();
+        env.s = [0.0, 0.0, std::f64::consts::PI, 0.0];
+        let (_, r) = env.step(&[0.0]);
+        assert!(r > 0.7, "upright reward {r}");
+    }
+
+    #[test]
+    fn energy_injection_swings_pole() {
+        let mut env = CartpoleSwingup::new();
+        env.reset(&mut Pcg64::seed(2));
+        // bang-bang roughly in phase with the pole
+        for i in 0..400 {
+            let a = if (i / 10) % 2 == 0 { 1.0 } else { -1.0 };
+            env.step(&[a]);
+        }
+        // pole must have left the bottom neighbourhood at some point
+        assert!(env.s[3].abs() > 0.01 || env.s[2].abs() > 0.3);
+    }
+
+    #[test]
+    fn wrap_pi_bounds() {
+        for i in -20..20 {
+            let w = wrap_pi(i as f64);
+            assert!((-std::f64::consts::PI..=std::f64::consts::PI).contains(&w));
+        }
+    }
+}

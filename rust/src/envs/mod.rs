@@ -1,0 +1,214 @@
+//! Continuous-control environment suite — the stand-in for the
+//! dm_control "planet benchmark" (Hafner et al., 2019) used throughout
+//! the paper: finger_spin, cartpole_swingup, reacher_easy, cheetah_run,
+//! walker_walk, ball_in_cup_catch.
+//!
+//! Substitution note (see DESIGN.md): the tasks are low-dimensional
+//! rigid-body / ODE systems with the dm_control task *shape* — actions in
+//! `[-1,1]^n`, per-step rewards in `[0,1]` via the same smooth
+//! [`tolerance`] shaping dm_control uses, 1000-step episodes with the
+//! paper's per-task action repeat (Table 8). Cheetah and walker use
+//! planar locomotion surrogates instead of full contact dynamics.
+//!
+//! Every task also renders itself to small RGB images (see [`render`])
+//! for the RL-from-pixels setting of paper §4.6.
+
+mod ballcup;
+mod cartpole;
+mod cheetah;
+mod finger;
+mod pendulum;
+mod reacher;
+pub mod render;
+mod tolerance;
+mod walker;
+
+pub use ballcup::BallInCup;
+pub use cartpole::CartpoleSwingup;
+pub use cheetah::CheetahRun;
+pub use finger::FingerSpin;
+pub use pendulum::PendulumSwingup;
+pub use reacher::ReacherEasy;
+pub use tolerance::tolerance;
+pub use walker::WalkerWalk;
+
+use crate::rngs::Pcg64;
+
+/// A continuous-control task. Episodes are time-limited by the caller
+/// (dm_control style — `step` never terminates early).
+pub trait Env: Send {
+    fn name(&self) -> &'static str;
+    fn obs_dim(&self) -> usize;
+    fn act_dim(&self) -> usize;
+    /// Reset to a (possibly random) initial state, return the observation.
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32>;
+    /// Advance one physics step with `action ∈ [-1,1]^act_dim`; returns
+    /// `(obs, reward)` with reward in `[0, 1]`.
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32);
+    /// Draw the current state into an RGB canvas.
+    fn render(&self, img: &mut render::Canvas);
+}
+
+/// The six planet-benchmark task names, in the paper's listing order.
+pub const PLANET_TASKS: [&str; 6] = [
+    "finger_spin",
+    "cartpole_swingup",
+    "reacher_easy",
+    "cheetah_run",
+    "walker_walk",
+    "ball_in_cup_catch",
+];
+
+/// Paper Table 8 action-repeat per task (values from Hafner et al. 2019).
+pub fn action_repeat(task: &str) -> usize {
+    match task {
+        "cartpole_swingup" => 8,
+        "reacher_easy" | "cheetah_run" | "ball_in_cup_catch" => 4,
+        "finger_spin" | "walker_walk" => 2,
+        _ => 4,
+    }
+}
+
+/// Instantiate a task by name.
+pub fn make_env(task: &str) -> Option<Box<dyn Env>> {
+    let env: Box<dyn Env> = match task {
+        "finger_spin" => Box::new(FingerSpin::new()),
+        "cartpole_swingup" => Box::new(CartpoleSwingup::new()),
+        "reacher_easy" => Box::new(ReacherEasy::new()),
+        "cheetah_run" => Box::new(CheetahRun::new()),
+        "walker_walk" => Box::new(WalkerWalk::new()),
+        "ball_in_cup_catch" => Box::new(BallInCup::new()),
+        "pendulum_swingup" => Box::new(PendulumSwingup::new()),
+        _ => return None,
+    };
+    Some(env)
+}
+
+/// Clamp an action slice into `[-1, 1]`, reporting whether every
+/// component was finite (`false` = the paper's crash condition).
+pub fn sanitize_action(a: &mut [f32]) -> bool {
+    let mut finite = true;
+    for v in a.iter_mut() {
+        if !v.is_finite() {
+            finite = false;
+            *v = 0.0;
+        }
+        *v = v.clamp(-1.0, 1.0);
+    }
+    finite
+}
+
+/// Classic RK4 integrator over a fixed-size state vector.
+pub(crate) fn rk4<const N: usize>(y: &mut [f64; N], dt: f64, f: impl Fn(&[f64; N]) -> [f64; N]) {
+    let k1 = f(y);
+    let mut y2 = *y;
+    for i in 0..N {
+        y2[i] = y[i] + 0.5 * dt * k1[i];
+    }
+    let k2 = f(&y2);
+    for i in 0..N {
+        y2[i] = y[i] + 0.5 * dt * k2[i];
+    }
+    let k3 = f(&y2);
+    for i in 0..N {
+        y2[i] = y[i] + dt * k3[i];
+    }
+    let k4 = f(&y2);
+    for i in 0..N {
+        y[i] += dt / 6.0 * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_builds_all_planet_tasks() {
+        for task in PLANET_TASKS {
+            let mut env = make_env(task).unwrap_or_else(|| panic!("{task}"));
+            assert_eq!(env.name(), task);
+            let mut rng = Pcg64::seed(1);
+            let obs = env.reset(&mut rng);
+            assert_eq!(obs.len(), env.obs_dim(), "{task}");
+            let act = vec![0.3; env.act_dim()];
+            let (obs2, r) = env.step(&act);
+            assert_eq!(obs2.len(), env.obs_dim());
+            assert!((0.0..=1.0).contains(&r), "{task} reward {r}");
+            assert!(obs2.iter().all(|v| v.is_finite()), "{task}");
+        }
+        assert!(make_env("nope").is_none());
+    }
+
+    #[test]
+    fn rewards_stay_bounded_under_random_policy() {
+        let mut rng = Pcg64::seed(2);
+        for task in PLANET_TASKS {
+            let mut env = make_env(task).unwrap();
+            env.reset(&mut rng);
+            for _ in 0..500 {
+                let act: Vec<f32> =
+                    (0..env.act_dim()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+                let (obs, r) = env.step(&act);
+                assert!((0.0..=1.0).contains(&r), "{task} r={r}");
+                assert!(
+                    obs.iter().all(|v| v.is_finite() && v.abs() < 1e4),
+                    "{task} obs blew up"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resets_are_randomized_but_seeded() {
+        for task in PLANET_TASKS {
+            let mut env = make_env(task).unwrap();
+            let o1 = env.reset(&mut Pcg64::seed(5));
+            let o2 = env.reset(&mut Pcg64::seed(5));
+            assert_eq!(o1, o2, "{task}: same seed, same reset");
+            let o3 = env.reset(&mut Pcg64::seed(6));
+            assert_ne!(o1, o3, "{task}: different seed should differ");
+        }
+    }
+
+    #[test]
+    fn sanitize_action_flags_nonfinite() {
+        let mut a = vec![0.5, f32::NAN, 2.0];
+        assert!(!sanitize_action(&mut a));
+        assert_eq!(a, vec![0.5, 0.0, 1.0]);
+        let mut b = vec![-0.5, 0.2];
+        assert!(sanitize_action(&mut b));
+    }
+
+    #[test]
+    fn rk4_integrates_harmonic_oscillator() {
+        // y'' = -y: one full period ≈ 2π returns to the start
+        let mut y = [1.0f64, 0.0];
+        let dt = 0.01;
+        for _ in 0..628 {
+            rk4(&mut y, dt, |s| [s[1], -s[0]]);
+        }
+        assert!((y[0] - 1.0).abs() < 1e-3, "y0={}", y[0]);
+        assert!(y[1].abs() < 1e-2);
+    }
+
+    #[test]
+    fn action_repeat_matches_table8() {
+        assert_eq!(action_repeat("cartpole_swingup"), 8);
+        assert_eq!(action_repeat("finger_spin"), 2);
+        assert_eq!(action_repeat("cheetah_run"), 4);
+    }
+
+    #[test]
+    fn render_produces_normalized_rgb() {
+        let mut rng = Pcg64::seed(3);
+        for task in PLANET_TASKS {
+            let mut env = make_env(task).unwrap();
+            env.reset(&mut rng);
+            let mut canvas = render::Canvas::new(32);
+            env.render(&mut canvas);
+            assert!(canvas.data.iter().all(|&v| (0.0..=1.0).contains(&v)), "{task}");
+            assert!(canvas.data.iter().any(|&v| v > 0.05), "{task} blank canvas");
+        }
+    }
+}

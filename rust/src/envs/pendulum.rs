@@ -1,0 +1,102 @@
+//! Pendulum swing-up — the simplest task in the suite, used by the
+//! quickstart example and the fast end-to-end tests (not part of the
+//! six-task planet benchmark).
+
+use super::render::Canvas;
+use super::tolerance::tolerance;
+use super::{rk4, Env};
+use crate::rngs::Pcg64;
+
+const G: f64 = 9.81;
+const L: f64 = 1.0;
+const M: f64 = 1.0;
+const TORQUE: f64 = 2.0; // underactuated: max torque < m g l
+const DT: f64 = 0.02;
+const SUBSTEPS: usize = 2;
+
+/// State `[θ, θ̇]`, θ = 0 is up.
+pub struct PendulumSwingup {
+    s: [f64; 2],
+}
+
+impl PendulumSwingup {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        PendulumSwingup { s: [std::f64::consts::PI, 0.0] }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.s[0].cos() as f32, self.s[0].sin() as f32, (self.s[1] / 8.0) as f32]
+    }
+}
+
+impl Env for PendulumSwingup {
+    fn name(&self) -> &'static str {
+        "pendulum_swingup"
+    }
+    fn obs_dim(&self) -> usize {
+        3
+    }
+    fn act_dim(&self) -> usize {
+        1
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        self.s = [
+            std::f64::consts::PI + rng.uniform_in(-0.1, 0.1) as f64,
+            rng.uniform_in(-0.05, 0.05) as f64,
+        ];
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32) {
+        let tau = (action[0].clamp(-1.0, 1.0) as f64) * TORQUE;
+        for _ in 0..SUBSTEPS {
+            rk4(&mut self.s, DT, |s| {
+                [s[1], (-G / L * s[0].sin() - 0.05 * s[1] + tau / (M * L * L))]
+            });
+        }
+        self.s[1] = self.s[1].clamp(-12.0, 12.0);
+        let r = tolerance(self.s[0].cos(), 0.95, 1.0, 0.6);
+        (self.obs(), r as f32)
+    }
+
+    fn render(&self, c: &mut Canvas) {
+        c.clear([0.95, 0.95, 0.9]);
+        let (x, y) = (0.6 * self.s[0].sin(), 0.6 * self.s[0].cos());
+        c.line(0.0, 0.0, x, y, 2, [0.3, 0.3, 0.3]);
+        c.disk(x, y, 0.12, [0.8, 0.2, 0.2]);
+        c.disk(0.0, 0.0, 0.05, [0.1, 0.1, 0.1]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_down_with_no_reward() {
+        let mut env = PendulumSwingup::new();
+        env.reset(&mut Pcg64::seed(1));
+        let (_, r) = env.step(&[0.0]);
+        assert!(r < 0.05, "r={r}");
+    }
+
+    #[test]
+    fn up_position_is_rewarded() {
+        let mut env = PendulumSwingup::new();
+        env.s = [0.0, 0.0];
+        let (_, r) = env.step(&[0.0]);
+        assert!(r > 0.8, "r={r}");
+    }
+
+    #[test]
+    fn torque_accelerates() {
+        let mut env = PendulumSwingup::new();
+        env.s = [std::f64::consts::PI, 0.0];
+        for _ in 0..20 {
+            env.step(&[1.0]);
+        }
+        assert!(env.s[1].abs() > 0.1);
+    }
+}

@@ -1,0 +1,147 @@
+//! Reacher (easy): a 2-link planar arm must put its fingertip on a
+//! random target. Torque-controlled damped joints; dm_control-style
+//! reward `tolerance(dist, 0, target_size)` with a margin that makes the
+//! "easy" variant learnable.
+
+use super::render::Canvas;
+use super::tolerance::tolerance;
+use super::{rk4, Env};
+use crate::rngs::Pcg64;
+
+const L1: f64 = 0.12;
+const L2: f64 = 0.12;
+const DT: f64 = 0.02;
+const TORQUE: f64 = 4.0;
+const DAMPING: f64 = 2.0;
+const TARGET_SIZE: f64 = 0.05;
+
+/// State `[θ₁, θ̇₁, θ₂, θ̇₂]` + target `(tx, ty)`.
+pub struct ReacherEasy {
+    s: [f64; 4],
+    target: (f64, f64),
+}
+
+impl ReacherEasy {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        ReacherEasy { s: [0.0; 4], target: (0.1, 0.1) }
+    }
+
+    fn tip(&self) -> (f64, f64) {
+        let (t1, t2) = (self.s[0], self.s[2]);
+        (L1 * t1.cos() + L2 * (t1 + t2).cos(), L1 * t1.sin() + L2 * (t1 + t2).sin())
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let (tx, ty) = self.target;
+        let (px, py) = self.tip();
+        vec![
+            self.s[0].cos() as f32,
+            self.s[0].sin() as f32,
+            self.s[2].cos() as f32,
+            self.s[2].sin() as f32,
+            (self.s[1] / 10.0) as f32,
+            (self.s[3] / 10.0) as f32,
+            (tx / 0.24) as f32,
+            (ty / 0.24) as f32,
+            ((tx - px) / 0.48) as f32,
+            ((ty - py) / 0.48) as f32,
+        ]
+    }
+}
+
+impl Env for ReacherEasy {
+    fn name(&self) -> &'static str {
+        "reacher_easy"
+    }
+    fn obs_dim(&self) -> usize {
+        10
+    }
+    fn act_dim(&self) -> usize {
+        2
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        self.s = [
+            rng.uniform_in(-3.0, 3.0) as f64,
+            0.0,
+            rng.uniform_in(-3.0, 3.0) as f64,
+            0.0,
+        ];
+        // target somewhere reachable
+        let ang = rng.uniform_in(-3.14, 3.14) as f64;
+        let rad = rng.uniform_in(0.08, 0.20) as f64;
+        self.target = (rad * ang.cos(), rad * ang.sin());
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32) {
+        let a1 = action[0].clamp(-1.0, 1.0) as f64 * TORQUE;
+        let a2 = action[1].clamp(-1.0, 1.0) as f64 * TORQUE;
+        rk4(&mut self.s, DT, |s| {
+            [s[1], a1 - DAMPING * s[1], s[3], a2 - DAMPING * s[3]]
+        });
+        self.s[1] = self.s[1].clamp(-20.0, 20.0);
+        self.s[3] = self.s[3].clamp(-20.0, 20.0);
+        let (px, py) = self.tip();
+        let d = ((px - self.target.0).powi(2) + (py - self.target.1).powi(2)).sqrt();
+        let r = tolerance(d, 0.0, TARGET_SIZE, 0.12);
+        (self.obs(), r as f32)
+    }
+
+    fn render(&self, c: &mut Canvas) {
+        c.clear([0.92, 0.92, 0.92]);
+        let scale = 3.2; // arm world ±0.24 → canvas ±0.8
+        let (t1, t2) = (self.s[0], self.s[2]);
+        let j = (L1 * t1.cos() * scale, L1 * t1.sin() * scale);
+        let (px, py) = self.tip();
+        c.disk(self.target.0 * scale, self.target.1 * scale, 0.12, [0.9, 0.2, 0.2]);
+        c.line(0.0, 0.0, j.0, j.1, 2, [0.2, 0.4, 0.8]);
+        c.line(j.0, j.1, px * scale, py * scale, 2, [0.3, 0.5, 0.9]);
+        c.disk(px * scale, py * scale, 0.07, [0.1, 0.7, 0.3]);
+        let _ = t2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_target_full_reward() {
+        let mut env = ReacherEasy::new();
+        env.reset(&mut Pcg64::seed(1));
+        let (px, py) = env.tip();
+        env.target = (px, py);
+        let (_, r) = env.step(&[0.0, 0.0]);
+        assert!(r > 0.9, "r={r}");
+    }
+
+    #[test]
+    fn far_from_target_low_reward() {
+        let mut env = ReacherEasy::new();
+        env.s = [0.0, 0.0, 0.0, 0.0]; // tip at (0.24, 0)
+        env.target = (-0.2, 0.0);
+        let (_, r) = env.step(&[0.0, 0.0]);
+        assert!(r < 0.05, "r={r}");
+    }
+
+    #[test]
+    fn torque_moves_arm() {
+        let mut env = ReacherEasy::new();
+        env.s = [0.0; 4];
+        for _ in 0..10 {
+            env.step(&[1.0, -0.5]);
+        }
+        assert!(env.s[0] > 0.01);
+        assert!(env.s[2] < -0.005);
+    }
+
+    #[test]
+    fn tip_is_reachable_distance() {
+        let env = ReacherEasy::new();
+        let (px, py) = env.tip();
+        let d = (px * px + py * py).sqrt();
+        assert!((d - (L1 + L2)).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,138 @@
+//! Tiny software rasterizer for the RL-from-pixels setting: each task
+//! draws its state as simple shapes onto an RGB canvas in `[0,1]`,
+//! replacing dm_control's MuJoCo renderer.
+
+/// RGB canvas `[3, side, side]`, channel-major (NCHW-compatible).
+#[derive(Debug, Clone)]
+pub struct Canvas {
+    pub side: usize,
+    pub data: Vec<f32>,
+}
+
+impl Canvas {
+    pub fn new(side: usize) -> Self {
+        Canvas { side, data: vec![0.0; 3 * side * side] }
+    }
+
+    /// Fill with a background color.
+    pub fn clear(&mut self, rgb: [f32; 3]) {
+        let n = self.side * self.side;
+        for c in 0..3 {
+            self.data[c * n..(c + 1) * n].iter_mut().for_each(|v| *v = rgb[c]);
+        }
+    }
+
+    #[inline]
+    fn put(&mut self, x: i64, y: i64, rgb: [f32; 3]) {
+        let s = self.side as i64;
+        if x < 0 || y < 0 || x >= s || y >= s {
+            return;
+        }
+        let n = self.side * self.side;
+        let idx = y as usize * self.side + x as usize;
+        for c in 0..3 {
+            self.data[c * n + idx] = rgb[c];
+        }
+    }
+
+    /// World coordinates are `[-1, 1]²` with y up; convert to pixels.
+    #[inline]
+    fn to_px(&self, wx: f64, wy: f64) -> (i64, i64) {
+        let s = self.side as f64;
+        let x = ((wx + 1.0) * 0.5 * (s - 1.0)).round() as i64;
+        let y = ((1.0 - (wy + 1.0) * 0.5) * (s - 1.0)).round() as i64;
+        (x, y)
+    }
+
+    /// Filled disk at world position with world-units radius.
+    pub fn disk(&mut self, wx: f64, wy: f64, wr: f64, rgb: [f32; 3]) {
+        let (cx, cy) = self.to_px(wx, wy);
+        let r = (wr * 0.5 * (self.side as f64 - 1.0)).max(0.5);
+        let ri = r.ceil() as i64;
+        for dy in -ri..=ri {
+            for dx in -ri..=ri {
+                if (dx * dx + dy * dy) as f64 <= r * r {
+                    self.put(cx + dx, cy + dy, rgb);
+                }
+            }
+        }
+    }
+
+    /// Line segment between world points, with thickness in pixels.
+    pub fn line(&mut self, x0: f64, y0: f64, x1: f64, y1: f64, thick: i64, rgb: [f32; 3]) {
+        let (px0, py0) = self.to_px(x0, y0);
+        let (px1, py1) = self.to_px(x1, y1);
+        let steps = (px1 - px0).abs().max((py1 - py0).abs()).max(1);
+        for t in 0..=steps {
+            let x = px0 + (px1 - px0) * t / steps;
+            let y = py0 + (py1 - py0) * t / steps;
+            for dy in -thick / 2..=thick / 2 {
+                for dx in -thick / 2..=thick / 2 {
+                    self.put(x + dx, y + dy, rgb);
+                }
+            }
+        }
+    }
+
+    /// Axis-aligned filled rectangle in world coordinates.
+    pub fn rect(&mut self, x0: f64, y0: f64, x1: f64, y1: f64, rgb: [f32; 3]) {
+        let (px0, py0) = self.to_px(x0.min(x1), y0.max(y1));
+        let (px1, py1) = self.to_px(x0.max(x1), y0.min(y1));
+        for y in py0..=py1 {
+            for x in px0..=px1 {
+                self.put(x, y, rgb);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clear_sets_background() {
+        let mut c = Canvas::new(8);
+        c.clear([0.2, 0.4, 0.6]);
+        assert_eq!(c.data[0], 0.2);
+        assert_eq!(c.data[64], 0.4);
+        assert_eq!(c.data[128], 0.6);
+    }
+
+    #[test]
+    fn disk_draws_centered_pixels() {
+        let mut c = Canvas::new(17);
+        c.disk(0.0, 0.0, 0.2, [1.0, 0.0, 0.0]);
+        // center pixel is red
+        let center = 8 * 17 + 8;
+        assert_eq!(c.data[center], 1.0);
+        assert_eq!(c.data[17 * 17 + center], 0.0);
+    }
+
+    #[test]
+    fn line_connects_endpoints() {
+        let mut c = Canvas::new(9);
+        c.line(-1.0, -1.0, 1.0, 1.0, 1, [0.0, 1.0, 0.0]);
+        // both corners on the green channel
+        let n = 81;
+        assert_eq!(c.data[n + 8 * 9], 1.0); // bottom-left
+        assert_eq!(c.data[n + 8], 1.0); // top-right
+    }
+
+    #[test]
+    fn out_of_bounds_is_clipped() {
+        let mut c = Canvas::new(4);
+        c.disk(5.0, 5.0, 0.5, [1.0; 3]); // fully off-screen
+        c.line(-3.0, 0.0, 3.0, 0.0, 1, [1.0; 3]); // crosses the canvas
+        assert!(c.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rect_fills_area() {
+        let mut c = Canvas::new(8);
+        c.rect(-1.0, -1.0, 1.0, 0.0, [0.5; 3]);
+        // bottom half filled
+        let filled = c.data[..64].iter().filter(|&&v| v == 0.5).count();
+        assert!(filled >= 24, "filled={filled}");
+    }
+}

@@ -1,0 +1,71 @@
+//! dm_control-style smooth reward shaping.
+//!
+//! `tolerance(x, lo, hi, margin)` is 1 inside `[lo, hi]` and decays
+//! smoothly (Gaussian sigmoid, value 0.1 at distance `margin`) outside —
+//! the same shaping dm_control's `rewards.tolerance` applies, which keeps
+//! every per-step reward in `[0, 1]` and episode returns ≤ 1000.
+
+/// Smooth tolerance reward. 1 inside `[lo, hi]`, Gaussian falloff with
+/// the given `margin` outside (value ≈ 0.1 at exactly `margin` away).
+/// With `margin == 0` it is a hard indicator.
+pub fn tolerance(x: f64, lo: f64, hi: f64, margin: f64) -> f64 {
+    debug_assert!(lo <= hi);
+    let d = if x < lo {
+        lo - x
+    } else if x > hi {
+        x - hi
+    } else {
+        return 1.0;
+    };
+    if margin <= 0.0 {
+        return 0.0;
+    }
+    // Gaussian with value 0.1 at d = margin
+    let scale = (-2.0 * (0.1f64).ln()).sqrt(); // ≈ 2.146
+    let z = d / margin * scale;
+    (-0.5 * z * z).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inside_is_one() {
+        assert_eq!(tolerance(0.5, 0.0, 1.0, 0.1), 1.0);
+        assert_eq!(tolerance(0.0, 0.0, 1.0, 0.1), 1.0);
+        assert_eq!(tolerance(1.0, 0.0, 1.0, 0.1), 1.0);
+    }
+
+    #[test]
+    fn value_at_margin_is_point_one() {
+        let v = tolerance(1.1, 0.0, 1.0, 0.1);
+        assert!((v - 0.1).abs() < 1e-9, "v={v}");
+        let v = tolerance(-0.2, 0.0, 1.0, 0.2);
+        assert!((v - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn monotone_decay() {
+        let mut prev = 1.0;
+        for i in 1..20 {
+            let v = tolerance(1.0 + 0.05 * i as f64, 0.0, 1.0, 0.3);
+            assert!(v < prev);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn zero_margin_is_indicator() {
+        assert_eq!(tolerance(1.01, 0.0, 1.0, 0.0), 0.0);
+        assert_eq!(tolerance(0.99, 0.0, 1.0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn bounded_in_unit_interval() {
+        for i in -100..100 {
+            let v = tolerance(i as f64 * 0.1, -1.0, 1.0, 0.5);
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+}

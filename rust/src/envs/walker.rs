@@ -1,0 +1,170 @@
+//! Walker-walk surrogate: a planar torso that must be held upright
+//! against gravity by leg support while moving forward. Four leg joints
+//! provide support (when planted near vertical) and thrust (when sweeping
+//! back while planted). Reward follows dm_control walker_walk:
+//! `stand × (1 + 5·move) / 6`.
+
+use super::render::Canvas;
+use super::tolerance::tolerance;
+use super::Env;
+use crate::rngs::Pcg64;
+
+const N_LEGS: usize = 4;
+const DT: f64 = 0.01;
+const SUBSTEPS: usize = 2;
+const TORQUE: f64 = 10.0;
+const JOINT_DAMP: f64 = 4.0;
+const JOINT_SPRING: f64 = 5.0;
+const GRAV_PULL: f64 = 1.4;
+const SUPPORT: f64 = 1.8;
+const DRAG: f64 = 1.5;
+const THRUST: f64 = 1.0;
+const STAND_H: f64 = 0.75;
+const TARGET_SPEED: f64 = 1.0;
+
+/// State: height `h`, forward velocity `v`, x (render), legs `(q, q̇)`.
+pub struct WalkerWalk {
+    h: f64,
+    v: f64,
+    x: f64,
+    q: [f64; N_LEGS],
+    qd: [f64; N_LEGS],
+}
+
+impl WalkerWalk {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Self {
+        WalkerWalk { h: 0.4, v: 0.0, x: 0.0, q: [0.0; N_LEGS], qd: [0.0; N_LEGS] }
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let mut o = Vec::with_capacity(2 + 2 * N_LEGS);
+        o.push(self.h as f32);
+        o.push((self.v / TARGET_SPEED) as f32);
+        for i in 0..N_LEGS {
+            o.push(self.q[i] as f32);
+            o.push((self.qd[i] / 10.0) as f32);
+        }
+        o
+    }
+}
+
+impl Env for WalkerWalk {
+    fn name(&self) -> &'static str {
+        "walker_walk"
+    }
+    fn obs_dim(&self) -> usize {
+        2 + 2 * N_LEGS
+    }
+    fn act_dim(&self) -> usize {
+        N_LEGS
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        self.h = 0.35 + rng.uniform_in(0.0, 0.1) as f64;
+        self.v = 0.0;
+        self.x = 0.0;
+        for i in 0..N_LEGS {
+            self.q[i] = rng.uniform_in(-0.2, 0.2) as f64;
+            self.qd[i] = 0.0;
+        }
+        self.obs()
+    }
+
+    fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32) {
+        for _ in 0..SUBSTEPS {
+            let mut support = 0.0;
+            let mut thrust = 0.0;
+            for i in 0..N_LEGS {
+                let a = action[i].clamp(-1.0, 1.0) as f64 * TORQUE;
+                let qdd = a - JOINT_DAMP * self.qd[i] - JOINT_SPRING * self.q[i];
+                self.qd[i] += qdd * DT;
+                self.q[i] = (self.q[i] + self.qd[i] * DT).clamp(-1.2, 1.2);
+                // a leg supports when planted near vertical (normalized
+                // so a neutral leg gives planted = 1)
+                let planted = ((self.q[i].cos() - 0.3) / 0.7).max(0.0);
+                support += SUPPORT * planted / N_LEGS as f64;
+                thrust += THRUST * (-self.qd[i]).max(0.0) * planted / N_LEGS as f64;
+            }
+            // torso height: gravity pulls down, leg support pushes up
+            self.h += (support - GRAV_PULL) * DT;
+            self.h = self.h.clamp(0.0, 1.3);
+            // falling kills forward mobility
+            let mobility = if self.h > 0.3 { 1.0 } else { 0.2 };
+            self.v += (thrust * mobility - DRAG * self.v) * DT;
+            self.x += self.v * DT;
+        }
+        self.v = self.v.clamp(-0.5, 3.0);
+        let stand = tolerance(self.h, STAND_H, f64::INFINITY, 0.4);
+        let movement = (self.v / TARGET_SPEED).clamp(0.0, 1.0);
+        let r = stand * (1.0 + 5.0 * movement) / 6.0;
+        (self.obs(), r.clamp(0.0, 1.0) as f32)
+    }
+
+    fn render(&self, c: &mut Canvas) {
+        c.clear([0.92, 0.96, 1.0]);
+        c.rect(-1.0, -0.7, 1.0, -1.0, [0.45, 0.4, 0.3]);
+        let top = -0.7 + self.h;
+        let phase = (self.x * 2.0).rem_euclid(2.0) - 1.0;
+        c.rect(-0.3, top, 0.3, top - 0.2, [0.7, 0.3, 0.5]);
+        c.disk(phase * 0.3, top - 0.1, 0.05, [0.3, 0.1, 0.2]);
+        for (i, &q) in self.q.iter().enumerate() {
+            let bx = -0.25 + 0.16 * i as f64;
+            let (lx, ly) = (bx + (self.h) * q.sin(), top - 0.2 - self.h * q.cos() * 0.9);
+            c.line(bx, top - 0.2, lx, ly.max(-0.7), 1, [0.25, 0.1, 0.2]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collapses_without_support() {
+        let mut env = WalkerWalk::new();
+        env.reset(&mut Pcg64::seed(1));
+        // bend all legs: no support
+        for _ in 0..300 {
+            env.step(&[1.0; N_LEGS]);
+        }
+        assert!(env.h < 0.3, "h={}", env.h);
+    }
+
+    #[test]
+    fn neutral_legs_hold_height() {
+        let mut env = WalkerWalk::new();
+        env.reset(&mut Pcg64::seed(2));
+        for _ in 0..300 {
+            env.step(&[0.0; N_LEGS]);
+        }
+        assert!(env.h > 0.5, "h={}", env.h);
+    }
+
+    #[test]
+    fn standing_tall_earns_base_reward() {
+        let mut env = WalkerWalk::new();
+        env.h = 1.0;
+        env.v = 0.0;
+        let (_, r) = env.step(&[0.0; N_LEGS]);
+        assert!(r > 0.12 && r < 0.5, "r={r}");
+    }
+
+    #[test]
+    fn walking_beats_standing() {
+        let mut stand = WalkerWalk::new();
+        stand.reset(&mut Pcg64::seed(3));
+        let mut walk = WalkerWalk::new();
+        walk.reset(&mut Pcg64::seed(3));
+        let (mut rs, mut rw) = (0.0f64, 0.0f64);
+        for i in 0..600 {
+            rs += stand.step(&[0.0; N_LEGS]).1 as f64;
+            // gentle alternating sweep keeps support while generating thrust
+            let ph = (i / 20) % 2 == 0;
+            let a: Vec<f32> =
+                (0..N_LEGS).map(|j| if (j % 2 == 0) == ph { 0.25 } else { -0.25 }).collect();
+            rw += walk.step(&a).1 as f64;
+        }
+        assert!(rw > rs, "walking {rw} must beat standing {rs}");
+    }
+}

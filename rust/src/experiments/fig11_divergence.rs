@@ -1,0 +1,112 @@
+//! Figures 11 & 12: train fp32/fp16 twins from the same seed and track
+//! (11) the mean L1 distance between their critic/actor weights and
+//! (12) the mean |ΔQ| on a fixed probe set of states, over training.
+
+use super::helpers::ExpOpts;
+use crate::envs::{action_repeat, make_env, sanitize_action};
+use crate::nn::Tensor;
+use crate::replay::{ReplayBuffer, Storage};
+use crate::rngs::Pcg64;
+use crate::sac::{Methods, SacAgent, SacConfig};
+use crate::telemetry::{write_csv, Series};
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let task = opts.tasks[0].clone();
+    let steps = opts.base.steps.min(3000);
+    let checkpoints = 8usize;
+    println!("Figures 11/12 — fp32 vs fp16 twin divergence on {task} ({steps} steps):");
+
+    let mut env32 = make_env(&task).unwrap();
+    let mut env16 = make_env(&task).unwrap();
+    let repeat = action_repeat(&task);
+    let mut rng = Pcg64::seed(opts.base.seed);
+    let obs_dim = env32.obs_dim();
+    let act_dim = env32.act_dim();
+    let cfg = SacConfig::states(obs_dim, act_dim, opts.base.hidden);
+    let mut a32 = SacAgent::new(cfg, Methods::none(), crate::lowp::Precision::Fp32, opts.base.seed);
+    let mut a16 =
+        SacAgent::new(cfg, Methods::ours(), crate::lowp::Precision::fp16(), opts.base.seed);
+    let mut rp32 = ReplayBuffer::new(opts.base.replay_capacity, &[obs_dim], act_dim, Storage::F32);
+    let mut rp16 = ReplayBuffer::new(opts.base.replay_capacity, &[obs_dim], act_dim, Storage::F16);
+
+    // fixed probe states for |ΔQ| (Figure 12), as in the paper: states
+    // encountered during training
+    let mut probe = Vec::new();
+
+    let mut obs32 = env32.reset(&mut Pcg64::seed(1));
+    let mut obs16 = env16.reset(&mut Pcg64::seed(1));
+    let mut l1_series = Series::new("weight_l1");
+    let mut dq_series = Series::new("abs_dq");
+
+    for step in 0..steps {
+        for (agent, env, rp, obs) in [
+            (&mut a32, &mut env32, &mut rp32, &mut obs32),
+            (&mut a16, &mut env16, &mut rp16, &mut obs16),
+        ] {
+            let mut a = if step < opts.base.seed_steps {
+                let mut r = rng.split(step as u64);
+                (0..act_dim).map(|_| r.uniform_in(-1.0, 1.0)).collect::<Vec<f32>>()
+            } else {
+                agent.act(obs, true).unwrap_or_else(|| vec![0.0; act_dim])
+            };
+            sanitize_action(&mut a);
+            let mut rew = 0.0;
+            let mut next = obs.clone();
+            for _ in 0..repeat {
+                let (o, r) = env.step(&a);
+                next = o;
+                rew += r;
+            }
+            rp.push(obs, &a, rew, &next, false);
+            *obs = next;
+            if step >= opts.base.seed_steps && rp.len() >= opts.base.batch {
+                let mut brng = Pcg64::seed_stream(42, step as u64);
+                let batch = rp.sample(opts.base.batch, &mut brng);
+                agent.update(&batch);
+            }
+        }
+        if probe.len() < 128 {
+            probe.push(obs32.clone());
+        }
+        if (step + 1) % (steps / checkpoints).max(1) == 0 {
+            // Figure 11: mean L1 distance across critic+actor weights
+            let w32: Vec<f32> = a32.critic.flat_params();
+            let w16: Vec<f32> = a16.critic.flat_params();
+            let l1: f64 = w32
+                .iter()
+                .zip(&w16)
+                .map(|(a, b)| (a - b).abs() as f64)
+                .sum::<f64>()
+                / w32.len() as f64;
+            l1_series.push((step + 1) as f64, l1);
+            // Figure 12: |ΔQ| on probe states with the fp32 agent's action
+            let mut dq_sum = 0.0f64;
+            let mut n = 0usize;
+            for s in probe.iter().take(32) {
+                if let Some(mut a) = a32.act(s, false) {
+                    sanitize_action(&mut a);
+                    let obs_t = Tensor::from_vec(&[1, obs_dim], s.clone());
+                    let act_t = Tensor::from_vec(&[1, act_dim], a);
+                    let (q32, _) = a32.critic.forward(&obs_t, &act_t, a32.compute);
+                    let (q16, _) = a16.critic.forward(&obs_t, &act_t, a16.compute);
+                    if q32.data[0].is_finite() && q16.data[0].is_finite() {
+                        dq_sum += (q32.data[0] - q16.data[0]).abs() as f64;
+                        n += 1;
+                    }
+                }
+            }
+            dq_series.push((step + 1) as f64, dq_sum / n.max(1) as f64);
+        }
+    }
+
+    println!("{:<10} {:>14} {:>12}", "step", "weight L1", "|dQ|");
+    for (p, q) in l1_series.points.iter().zip(&dq_series.points) {
+        println!("{:<10} {:>14.5} {:>12.4}", p.0, p.1, q.1);
+    }
+    println!(
+        "(paper: weight distance grows with training; |dQ| grows then plateaus — \
+         twins diverge but remain functionally close)"
+    );
+    write_csv(&opts.out("fig11").join("divergence.csv"), &[l1_series, dq_series])?;
+    Ok(())
+}

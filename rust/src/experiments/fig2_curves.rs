@@ -1,0 +1,23 @@
+//! Figure 2: learning curves for fp32 vs fp16+ours on the six planet
+//! tasks (states). The paper's claim: the curves coincide.
+
+use super::helpers::{run_grid_and_report, summarize, ExpOpts};
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let presets = ["fp32", "fp16_ours"];
+    let outs = run_grid_and_report(
+        opts,
+        "fig2",
+        &presets,
+        "Figure 2 — fp32 vs fp16(ours) final returns per task:",
+    )?;
+    println!("\n{:<20} {:>10} {:>10} {:>8}", "task", "fp32", "fp16_ours", "gap%");
+    for task in &opts.tasks {
+        let t = [task.clone()];
+        let s = summarize(&outs, &presets, &t);
+        let (f32_, f16_) = (s[0].1, s[1].1);
+        let gap = if f32_.abs() > 1e-9 { 100.0 * (f32_ - f16_) / f32_ } else { 0.0 };
+        println!("{task:<20} {f32_:>10.1} {f16_:>10.1} {gap:>7.1}%");
+    }
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Figure 3 (+ per-task Figure 9): the cumulative ablation — start from
+//! naive fp16 and add the six methods one by one.
+//! Figure 7: leave-one-out — all methods minus one.
+
+use super::helpers::{run_grid_and_report, ExpOpts};
+use crate::sac::Methods;
+
+pub fn run(opts: &ExpOpts, leave_one_out: bool) -> anyhow::Result<()> {
+    if leave_one_out {
+        let presets = ["fp16_ours", "loo1", "loo2", "loo3", "loo4", "loo5", "loo6"];
+        run_grid_and_report(
+            opts,
+            "fig7",
+            &presets,
+            "Figure 7 — remove one method from the full agent (paper: every removal hurts):",
+        )?;
+        return Ok(());
+    }
+    let presets = ["cum0", "cum1", "cum2", "cum3", "cum4", "cum5", "cum6", "fp32"];
+    let outs = run_grid_and_report(
+        opts,
+        "fig3",
+        &presets,
+        "Figure 3 — cumulative ablation (add methods one by one):",
+    )?;
+    println!("\ncumulative labels:");
+    for k in 0..=6 {
+        println!("  cum{k} = {}", Methods::cumulative_label(k));
+    }
+    // Figure 9 = per-task breakdown of the same runs
+    println!("\nFigure 9 — per-task breakdown:");
+    println!("{:<20} {}", "task", presets.join("  "));
+    for task in &opts.tasks {
+        let t = [task.clone()];
+        let s = super::helpers::summarize(&outs, &presets, &t);
+        let row: Vec<String> = s.iter().map(|(_, m, _)| format!("{m:>6.0}")).collect();
+        println!("{task:<20} {}", row.join("  "));
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Figure 4: simulate training in e5mX formats (X significand bits,
+//! 5 exponent bits) with all our methods on — the qtorch sweep. The
+//! paper's shape: performance degrades monotonically as bits shrink,
+//! gracefully at first, then collapses around 5 significand bits.
+
+use super::helpers::{run_grid_and_report, summarize, ExpOpts};
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let presets = [
+        "e5m10_ours", // == fp16
+        "e5m9_ours",
+        "e5m8_ours",
+        "e5m7_ours",
+        "e5m6_ours",
+        "e5m5_ours",
+    ];
+    let outs = run_grid_and_report(
+        opts,
+        "fig4",
+        &presets,
+        "Figure 4 — significand-bit sweep (all methods on):",
+    )?;
+    println!("\n{:<6} {:>10} {:>8}", "bits", "return", "std");
+    let s = summarize(&outs, &presets, &opts.tasks);
+    for (i, (p, m, sd)) in s.iter().enumerate() {
+        let bits = 10 - i;
+        println!("{bits:<6} {m:>10.1} {sd:>8.1}   ({p})");
+    }
+    Ok(())
+}

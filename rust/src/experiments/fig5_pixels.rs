@@ -1,0 +1,24 @@
+//! Figure 5 (+ Figure 10): RL from pixels — fp32 vs fp16+ours with the
+//! convolutional encoder, weight standardization, and the layer-norm
+//! downscale guard. (Figure 10's fp32-without-weight-std baseline is the
+//! same fp32 preset: the fp32 agent never enables the guard.)
+
+use super::helpers::{run_grid_and_report, ExpOpts};
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let mut opts = opts.clone();
+    opts.base.pixels = true;
+    // scaled-down pixel defaults unless the caller overrode them
+    if opts.base.steps == crate::config::RunConfig::default().steps {
+        opts.base.steps = 1500;
+        opts.base.eval_every = 500;
+    }
+    let presets = ["fp32", "fp16_ours", "fp16_naive"];
+    run_grid_and_report(
+        &opts,
+        "fig5",
+        &presets,
+        "Figure 5 — RL from pixels, fp32 vs fp16(ours) (naive shown for contrast):",
+    )?;
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Figure 6: histogram of |gradient| for the actor+critic networks of an
+//! fp32 run (cheetah, mid-training). Both axes log-scale; the paper's
+//! point is the many-decade dynamic range, which squares past fp16's
+//! range inside Adam.
+
+use super::helpers::ExpOpts;
+use crate::coordinator::train;
+use crate::lowp::FP16;
+use crate::telemetry::{write_csv, Series};
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let mut cfg = opts.base.clone();
+    cfg.task = opts
+        .tasks
+        .iter()
+        .find(|t| t.contains("cheetah"))
+        .cloned()
+        .unwrap_or_else(|| opts.tasks[0].clone());
+    cfg.preset = "fp32".into();
+    eprintln!("[fig6] training fp32 on {} to probe gradients ...", cfg.task);
+    let out = train(&cfg);
+    let h = &out.grad_hist;
+    println!("Figure 6 — |grad| histogram ({}, fp32):", cfg.task);
+    println!("{:<14} {:>12}", "magnitude", "count");
+    let mut series = Series::new("count");
+    for (center, count) in h.bins() {
+        if count > 0 {
+            println!("{center:<14.3e} {count:>12}");
+        }
+        series.push(center, count as f64);
+    }
+    println!("zeros/underflow: {}   overflow: {}", h.underflow, h.overflow);
+    let decades = h.occupied_decades();
+    println!("dynamic range: {decades:.1} decades (paper: 'many orders of magnitude')");
+    // what fraction of gradients would square below fp16's tiny?
+    let sub_sq: u64 = h
+        .bins()
+        .iter()
+        .filter(|(c, _)| c * c < FP16.min_subnormal() as f64)
+        .map(|(_, n)| n)
+        .sum();
+    let frac = sub_sq as f64 / h.total().max(1) as f64;
+    println!("fraction whose square underflows fp16 (Adam v): {:.1}%", 100.0 * frac);
+    write_csv(&opts.out("fig6").join("grad_hist.csv"), &[series])?;
+    Ok(())
+}

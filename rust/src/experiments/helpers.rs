@@ -1,0 +1,182 @@
+//! Shared experiment plumbing: option parsing, config grids, aggregation
+//! across seeds/tasks, and paper-shaped printing.
+
+use crate::config::RunConfig;
+use crate::coordinator::{run_many, TrainOutcome};
+use crate::envs::PLANET_TASKS;
+use crate::telemetry::{mean_std, write_csv, Series};
+use std::path::PathBuf;
+
+/// Options shared by all experiment drivers.
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    pub base: RunConfig,
+    pub seeds: usize,
+    pub tasks: Vec<String>,
+}
+
+impl ExpOpts {
+    pub fn from_kv(kv: &[(String, String)]) -> anyhow::Result<Self> {
+        let mut base = RunConfig::default();
+        let mut seeds = 3usize;
+        let mut tasks: Vec<String> = PLANET_TASKS.iter().map(|s| s.to_string()).collect();
+        for (k, v) in kv {
+            match k.as_str() {
+                "seeds" => seeds = v.parse()?,
+                "tasks" => tasks = v.split(',').map(|s| s.trim().to_string()).collect(),
+                "paper_full" => {
+                    if v == "true" {
+                        base = RunConfig::paper_full();
+                    }
+                }
+                _ => {
+                    if !base.set(k, v) {
+                        anyhow::bail!("unknown option {k}");
+                    }
+                }
+            }
+        }
+        Ok(ExpOpts { base, seeds, tasks })
+    }
+
+    pub fn out(&self, exp: &str) -> PathBuf {
+        PathBuf::from(&self.base.out_dir).join(exp)
+    }
+}
+
+/// Build the (preset × task × seed) config grid.
+pub fn grid(opts: &ExpOpts, presets: &[&str]) -> Vec<RunConfig> {
+    let mut cfgs = Vec::new();
+    for preset in presets {
+        for task in &opts.tasks {
+            for seed in 0..opts.seeds {
+                let mut c = opts.base.clone();
+                c.preset = preset.to_string();
+                c.task = task.clone();
+                c.seed = seed as u64;
+                cfgs.push(c);
+            }
+        }
+    }
+    cfgs
+}
+
+/// Aggregate outcomes by preset: mean/std of the final score across
+/// tasks and seeds (the paper's cross-task averaging: std per task, then
+/// averaged).
+pub fn summarize(outs: &[TrainOutcome], presets: &[&str], tasks: &[String]) -> Vec<(String, f64, f64)> {
+    presets
+        .iter()
+        .map(|p| {
+            let mut task_means = Vec::new();
+            let mut task_stds = Vec::new();
+            for task in tasks {
+                let scores: Vec<f64> = outs
+                    .iter()
+                    .filter(|o| &o.cfg.preset == p && &o.cfg.task == task)
+                    .map(|o| o.final_score)
+                    .collect();
+                if !scores.is_empty() {
+                    let (m, s) = mean_std(&scores);
+                    task_means.push(m);
+                    task_stds.push(s);
+                }
+            }
+            let (mm, _) = mean_std(&task_means);
+            let (sm, _) = mean_std(&task_stds);
+            (p.to_string(), mm, sm)
+        })
+        .collect()
+}
+
+/// Average learning curves for one preset across seeds (per task).
+pub fn mean_curve(outs: &[TrainOutcome], preset: &str, task: &str) -> Series {
+    let curves: Vec<&Series> = outs
+        .iter()
+        .filter(|o| o.cfg.preset == preset && o.cfg.task == task)
+        .map(|o| &o.eval_curve)
+        .collect();
+    let mut s = Series::new(format!("{task}:{preset}"));
+    if curves.is_empty() {
+        return s;
+    }
+    let xs: Vec<f64> = curves[0].points.iter().map(|p| p.0).collect();
+    for (i, &x) in xs.iter().enumerate() {
+        let ys: Vec<f64> = curves.iter().filter_map(|c| c.points.get(i).map(|p| p.1)).collect();
+        let (m, _) = mean_std(&ys);
+        s.push(x, m);
+    }
+    s
+}
+
+/// Run the grid, print a summary table, dump per-preset curves.
+pub fn run_grid_and_report(
+    opts: &ExpOpts,
+    exp: &str,
+    presets: &[&str],
+    header: &str,
+) -> anyhow::Result<Vec<TrainOutcome>> {
+    let cfgs = grid(opts, presets);
+    eprintln!(
+        "[{exp}] running {} configs ({} presets x {} tasks x {} seeds) ...",
+        cfgs.len(),
+        presets.len(),
+        opts.tasks.len(),
+        opts.seeds
+    );
+    let outs = run_many(&cfgs);
+    println!("\n{header}");
+    println!("{:<16} {:>10} {:>8} {:>8}", "preset", "return", "std", "crashed");
+    let summary = summarize(&outs, presets, &opts.tasks);
+    for (p, m, s) in &summary {
+        let crashes = outs.iter().filter(|o| &o.cfg.preset == p && o.crashed).count();
+        println!("{p:<16} {m:>10.1} {s:>8.1} {crashes:>8}");
+    }
+    // CSVs: per task curves
+    let dir = opts.out(exp);
+    for task in &opts.tasks {
+        let series: Vec<Series> = presets.iter().map(|p| mean_curve(&outs, p, task)).collect();
+        write_csv(&dir.join(format!("{task}.csv")), &series)?;
+    }
+    // summary csv
+    let mut sum_series = Vec::new();
+    for (i, (p, m, s)) in summary.iter().enumerate() {
+        let mut a = Series::new(format!("{p}_mean"));
+        a.push(i as f64, *m);
+        let mut b = Series::new(format!("{p}_std"));
+        b.push(i as f64, *s);
+        sum_series.push(a);
+        sum_series.push(b);
+    }
+    write_csv(&dir.join("summary.csv"), &sum_series)?;
+    eprintln!("[{exp}] wrote CSVs to {}", dir.display());
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opts_parse_and_grid() {
+        let kv = vec![
+            ("seeds".to_string(), "2".to_string()),
+            ("tasks".to_string(), "cartpole_swingup,cheetah_run".to_string()),
+            ("steps".to_string(), "10".to_string()),
+        ];
+        let opts = ExpOpts::from_kv(&kv).unwrap();
+        assert_eq!(opts.seeds, 2);
+        assert_eq!(opts.tasks.len(), 2);
+        assert_eq!(opts.base.steps, 10);
+        let g = grid(&opts, &["fp32", "fp16_ours"]);
+        assert_eq!(g.len(), 2 * 2 * 2);
+        assert!(ExpOpts::from_kv(&[("bogus".into(), "1".into())]).is_err());
+    }
+
+    #[test]
+    fn summarize_empty_is_safe() {
+        let s = summarize(&[], &["fp32"], &["cartpole_swingup".to_string()]);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].1, 0.0);
+    }
+}

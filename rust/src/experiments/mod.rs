@@ -1,0 +1,54 @@
+//! Experiment harness: one driver per figure/table of the paper's
+//! evaluation (see DESIGN.md for the full index). Every driver prints
+//! the paper-shaped rows/series to stdout and writes CSVs under
+//! `<out_dir>/<exp>/`.
+//!
+//! Common overrides (CLI `key=value`): `steps`, `seeds`, `tasks`
+//! (comma-separated), plus everything `RunConfig::set` accepts.
+
+mod fig11_divergence;
+mod fig1_baselines;
+mod fig2_curves;
+mod fig3_ablation;
+mod fig4_formats;
+mod fig5_pixels;
+mod fig6_gradhist;
+mod helpers;
+mod table7_random;
+mod tables_perf;
+
+pub use helpers::{grid, summarize, ExpOpts};
+
+/// Run an experiment by name. `kv` are CLI overrides.
+pub fn run(name: &str, kv: &[(String, String)]) -> anyhow::Result<()> {
+    let opts = ExpOpts::from_kv(kv)?;
+    match name {
+        "fig1" => fig1_baselines::run(&opts),
+        "fig2" => fig2_curves::run(&opts),
+        "fig3" | "fig9" => fig3_ablation::run(&opts, false),
+        "fig7" => fig3_ablation::run(&opts, true),
+        "fig8" => fig1_baselines::run_appendix_variants(&opts),
+        "fig4" => fig4_formats::run(&opts),
+        "fig5" | "fig10" => fig5_pixels::run(&opts),
+        "fig6" => fig6_gradhist::run(&opts),
+        "fig11" | "fig12" => fig11_divergence::run(&opts),
+        "table2" => tables_perf::run_speed(&opts, true),
+        "table10" => tables_perf::run_speed(&opts, false),
+        "table3" => tables_perf::run_memory(&opts, true),
+        "table11" => tables_perf::run_memory(&opts, false),
+        "table7" => table7_random::run(&opts),
+        "all" => {
+            for e in [
+                "fig1", "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig11", "table2",
+                "table3", "table7", "table10", "table11",
+            ] {
+                println!("\n================ {e} ================");
+                run(e, kv)?;
+            }
+            Ok(())
+        }
+        _ => anyhow::bail!(
+            "unknown experiment {name}; try fig1|fig2|fig3|fig4|fig5|fig6|fig7|fig8|fig11|table2|table3|table7|table10|table11|all"
+        ),
+    }
+}

@@ -1,0 +1,60 @@
+//! Table 7: random hyperparameters (Table 6's distributions) — fp32 vs
+//! fp16+ours must stay close for every draw.
+
+use super::helpers::{grid, summarize, ExpOpts};
+use crate::coordinator::run_many;
+use crate::rngs::Pcg64;
+use crate::telemetry::write_csv;
+use crate::telemetry::Series;
+
+/// Draw one hyperparameter set from the paper's Table 6 distributions.
+fn draw(rng: &mut Pcg64) -> (f32, f32, f32, f32, f32, usize) {
+    let log_u = |rng: &mut Pcg64, lo: f32, hi: f32| -> f32 {
+        (rng.uniform_in(lo.ln(), hi.ln())).exp()
+    };
+    let gamma = rng.uniform_in(0.9, 0.99);
+    let lr = log_u(rng, 1e-5, 1e-3);
+    let min_ls = rng.uniform_in(-7.0, -3.0);
+    let tau = rng.uniform_in(0.0025, 0.01);
+    let t0 = log_u(rng, 1e-2, 1e-1);
+    let batch = [32usize, 64, 128][rng.below(3)]; // scaled-down analogue
+    (gamma, lr, min_ls, tau, t0, batch)
+}
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
+    let mut rng = Pcg64::seed(2021);
+    let presets = ["fp32", "fp16_ours"];
+    println!("Table 7 — random hyperparameters, fp32 vs fp16(ours):");
+    println!(
+        "{:<8} {:>7} {:>9} {:>7} {:>7} {:>6} {:>6} | {:>9} {:>11}",
+        "params", "gamma", "lr", "minls", "tau", "T0", "bsize", "fp32", "fp16(ours)"
+    );
+    let mut rows = Vec::new();
+    for p in 0..5 {
+        let (g, lr, mls, tau, t0, batch) = draw(&mut rng);
+        let mut o = opts.clone();
+        o.base.gamma = g;
+        o.base.lr = lr;
+        o.base.min_log_sig = mls;
+        o.base.tau = tau;
+        o.base.init_temp = t0;
+        o.base.batch = batch;
+        let cfgs = grid(&o, &presets);
+        let outs = run_many(&cfgs);
+        let s = summarize(&outs, &presets, &o.tasks);
+        println!(
+            "{:<8} {g:>7.3} {lr:>9.2e} {mls:>7.2} {tau:>7.4} {t0:>6.3} {batch:>6} | {:>6.0}±{:<3.0} {:>7.0}±{:<3.0}",
+            format!("params{}", p + 1),
+            s[0].1, s[0].2, s[1].1, s[1].2
+        );
+        rows.push((p as f64, s[0].1, s[1].1));
+    }
+    let mut a = Series::new("fp32");
+    let mut b = Series::new("fp16_ours");
+    for (x, f32_, f16_) in rows {
+        a.push(x, f32_);
+        b.push(x, f16_);
+    }
+    write_csv(&opts.out("table7").join("random_hparams.csv"), &[a, b])?;
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! # lprl — Low-Precision Reinforcement Learning
+//!
+//! A Rust + JAX + Pallas reproduction of *"Low-Precision Reinforcement
+//! Learning: Running Soft Actor-Critic in Half Precision"* (Bjorck, Chen,
+//! De Sa, Gomes, Weinberger — ICML 2021).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the
+//!   numeric-format hot spots (parameterized quantizer, hAdam update,
+//!   Kahan step, tanh-Gaussian log-prob with the paper's fixes).
+//! * **L2** — JAX model (`python/compile/model.py`): SAC forward/backward
+//!   + optimizer as jitted functions, AOT-lowered to HLO-text artifacts.
+//! * **L3** — this crate: environments, replay, training orchestration,
+//!   the PJRT runtime that executes the artifacts, a native engine for
+//!   large format sweeps, and the experiment harness reproducing every
+//!   figure and table in the paper.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts            # AOT-lower the L2/L1 python to artifacts/
+//! cargo run --release --example quickstart
+//! cargo run --release -- train --task cartpole_swingup --precision fp16_ours
+//! cargo run --release -- exp fig3   # regenerate the ablation figure data
+//! ```
+//!
+//! See `DESIGN.md` for the full systems inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod envs;
+pub mod experiments;
+pub mod lowp;
+pub mod nn;
+pub mod optim;
+pub mod replay;
+pub mod rngs;
+pub mod runtime;
+pub mod sac;
+pub mod telemetry;

@@ -1,0 +1,635 @@
+//! Parameterized floating-point formats with bit-exact quantization.
+//!
+//! A [`FloatFormat`] describes a binary floating-point format in the IEEE
+//! 754 style: 1 sign bit, `exp_bits` exponent bits (biased by
+//! `2^(exp_bits-1) - 1`), and `man_bits` explicit significand bits, with
+//! gradual underflow (subnormals), signed zero, ±∞ and NaN.
+//! [`FloatFormat::quantize`] rounds an `f32` to the nearest value
+//! representable in the format, which is the primitive the whole
+//! low-precision simulation is built on.
+
+use crate::rngs::Pcg64;
+
+/// Rounding mode used when quantizing into a [`FloatFormat`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundMode {
+    /// Round to nearest, ties to even — IEEE default, used everywhere in
+    /// the paper unless stated otherwise.
+    NearestEven,
+    /// Round toward zero (truncation).
+    TowardZero,
+    /// Stochastic rounding: round up with probability equal to the
+    /// fractional position between the two neighbouring representables.
+    Stochastic,
+}
+
+/// What to do when a value exceeds the format's largest finite value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowMode {
+    /// IEEE behaviour: overflow to ±∞ (what fp16 hardware does and what
+    /// the paper's "overflow" failures are about).
+    Infinity,
+    /// Saturate to ±max finite value (the "numeric coercion" baseline of
+    /// the paper's Figure 1 coerces ∞ to the largest representable value).
+    Saturate,
+}
+
+/// A binary floating-point format: 1 sign bit, `exp_bits` exponent bits,
+/// `man_bits` explicit significand bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FloatFormat {
+    /// Number of exponent bits (2..=8).
+    pub exp_bits: u8,
+    /// Number of explicit significand (mantissa) bits (0..=23).
+    pub man_bits: u8,
+}
+
+impl FloatFormat {
+    /// Construct a format. `exp_bits` must be in 2..=8 and `man_bits` in
+    /// 0..=23 (checked in debug builds; `quantize` is only meaningful in
+    /// that range because values are carried in `f32`).
+    pub const fn new(exp_bits: u8, man_bits: u8) -> Self {
+        FloatFormat { exp_bits, man_bits }
+    }
+
+    /// Exponent bias: `2^(exp_bits-1) - 1` (15 for fp16, 127 for fp32).
+    #[inline]
+    pub const fn bias(&self) -> i32 {
+        (1 << (self.exp_bits - 1)) - 1
+    }
+
+    /// Largest unbiased exponent of a normal number (15 for fp16).
+    #[inline]
+    pub const fn emax(&self) -> i32 {
+        self.bias()
+    }
+
+    /// Smallest unbiased exponent of a normal number (-14 for fp16).
+    #[inline]
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest finite value: `2^emax * (2 - 2^-man_bits)` (65504 for fp16).
+    #[inline]
+    pub fn max_value(&self) -> f32 {
+        let ulp = (self.emax() - self.man_bits as i32) as f64;
+        ((2f64.powi(self.emax() + 1)) - 2f64.powi(ulp as i32)) as f32
+    }
+
+    /// Smallest positive normal value: `2^emin` (6.1035e-5 for fp16).
+    #[inline]
+    pub fn min_normal(&self) -> f32 {
+        2f64.powi(self.emin()) as f32
+    }
+
+    /// Smallest positive subnormal value: `2^(emin - man_bits)`
+    /// (5.96e-8 for fp16).
+    #[inline]
+    pub fn min_subnormal(&self) -> f32 {
+        2f64.powi(self.emin() - self.man_bits as i32) as f32
+    }
+
+    /// Machine epsilon: spacing between 1.0 and the next representable
+    /// value, `2^-man_bits` (9.77e-4 for fp16).
+    #[inline]
+    pub fn epsilon(&self) -> f32 {
+        2f64.powi(-(self.man_bits as i32)) as f32
+    }
+
+    /// Round `x` into this format with round-to-nearest-even and IEEE
+    /// overflow-to-infinity. The result is returned as the exactly
+    /// representable `f32`.
+    ///
+    /// This is the hot path of the whole low-precision simulation (every
+    /// tensor op ends here), so it uses a pure integer bit-manipulation
+    /// RNE — no f64, no transcendentals. The slower, more general f64
+    /// reference path lives in [`FloatFormat::quantize_with`] and the two
+    /// are cross-checked exhaustively in the tests.
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        quantize_rne_bits(x, self.exp_bits, self.man_bits)
+    }
+
+    /// Round `x` into this format with explicit rounding and overflow
+    /// behaviour. `rng` is required only for [`RoundMode::Stochastic`].
+    ///
+    /// The RNE + overflow-to-∞ combination dispatches to the fast bit
+    /// path; everything else takes the general f64 route.
+    pub fn quantize_with(
+        &self,
+        x: f32,
+        round: RoundMode,
+        overflow: OverflowMode,
+        rng: Option<&mut Pcg64>,
+    ) -> f32 {
+        if matches!(round, RoundMode::NearestEven) && matches!(overflow, OverflowMode::Infinity) {
+            return quantize_rne_bits(x, self.exp_bits, self.man_bits);
+        }
+        if x == 0.0 || x.is_nan() {
+            return x; // preserves signed zero and NaN
+        }
+        if x.is_infinite() {
+            return match overflow {
+                OverflowMode::Infinity => x,
+                OverflowMode::Saturate => self.max_value().copysign(x),
+            };
+        }
+
+        // Work in f64: the f32 -> f64 conversion is exact, and f64 has
+        // enough precision that `(ax / ulp)` below is exact for every
+        // format with man_bits <= 23.
+        let xd = x as f64;
+        let ax = xd.abs();
+
+        // Unbiased exponent of ax. f32 subnormals become normal f64s, so
+        // reading the f64 exponent field is always correct here.
+        let bits = ax.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+
+        // Spacing of representables around ax: 2^(e - man) in the normal
+        // range, flat 2^(emin - man) in the subnormal range.
+        let ulp_exp = if e < self.emin() {
+            self.emin() - self.man_bits as i32
+        } else {
+            e - self.man_bits as i32
+        };
+        let ulp = 2f64.powi(ulp_exp);
+
+        let steps = ax / ulp; // exact: ax has <= 53 significant bits
+        let rounded_steps = match round {
+            RoundMode::NearestEven => round_ties_even(steps),
+            RoundMode::TowardZero => steps.floor(),
+            RoundMode::Stochastic => {
+                let lo = steps.floor();
+                let frac = steps - lo;
+                let u = rng.expect("stochastic rounding requires an RNG").uniform_f64();
+                if u < frac {
+                    lo + 1.0
+                } else {
+                    lo
+                }
+            }
+        };
+        let q = rounded_steps * ulp;
+
+        // Overflow check: the largest finite magnitude is
+        // 2^emax * (2 - 2^-man). Anything that rounded past it becomes
+        // ±inf (IEEE) or saturates.
+        let maxv = (2f64.powi(self.emax() + 1)) - 2f64.powi(self.emax() - self.man_bits as i32);
+        let out = if q > maxv {
+            match overflow {
+                OverflowMode::Infinity => f64::INFINITY,
+                OverflowMode::Saturate => maxv,
+            }
+        } else {
+            q
+        };
+        (out.copysign(xd)) as f32
+    }
+
+    /// Quantize a slice in place (round-to-nearest-even, IEEE overflow).
+    pub fn quantize_slice(&self, xs: &mut [f32]) {
+        let (e, m) = (self.exp_bits, self.man_bits);
+        for v in xs.iter_mut() {
+            *v = quantize_rne_bits(*v, e, m);
+        }
+    }
+
+    /// True if `x` (an `f32`) is exactly representable in this format.
+    pub fn is_representable(&self, x: f32) -> bool {
+        x.is_nan() || self.quantize(x) == x
+    }
+
+    /// Number of finite representable values >= 0 (for diagnostics).
+    pub fn finite_count_nonneg(&self) -> u64 {
+        // exponent field values 0..2^e-1 are finite (all-ones = inf/nan)
+        let exps = (1u64 << self.exp_bits) - 1;
+        exps * (1u64 << self.man_bits)
+    }
+}
+
+/// f64 round-half-to-even. (`f64::round_ties_even` is stable, but spelled
+/// out here so the rounding rule is auditable against Appendix-style
+/// numerics discussions.)
+#[inline]
+fn round_ties_even(x: f64) -> f64 {
+    x.round_ties_even()
+}
+
+/// Fast RNE quantization of an f32 into `(exp_bits, man_bits)` with IEEE
+/// overflow-to-∞ and gradual underflow — pure integer ops on the f32 bit
+/// pattern (generalization of the classic f32→f16 conversion).
+///
+/// Exhaustively cross-checked against the f64 ULP-grid reference path in
+/// the tests below.
+#[inline]
+pub fn quantize_rne_bits(x: f32, exp_bits: u8, man_bits: u8) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp_f = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+
+    if exp_f == 0xff {
+        return x; // ±inf and NaN pass through
+    }
+    if (bits & 0x7fff_ffff) == 0 {
+        return x; // ±0
+    }
+
+    let bias = (1i32 << (exp_bits - 1)) - 1;
+    let emax = bias;
+    let emin = 1 - bias;
+    let m = man_bits as i32;
+    // f32 subnormal input (exp field 0): value = man · 2^-149. For narrow
+    // exponent formats this is far below half the smallest target
+    // subnormal (→ ±0), but e8 formats (bf16) have subnormals that
+    // overlap f32's — snap onto the 2^(emin-m) grid by shifting.
+    if exp_f == 0 {
+        let shift2 = emin - m + 149;
+        if shift2 >= 24 {
+            return f32::from_bits(sign); // man < 2^23 ⇒ below half a step
+        }
+        if shift2 <= 0 {
+            return x; // target grid is finer than f32 subnormals: exact
+        }
+        let half_m1 = (1u32 << (shift2 - 1)) - 1;
+        let lsb = (man >> shift2) & 1;
+        let rounded = (man + half_m1 + lsb) >> shift2;
+        // value = rounded · 2^(emin-m) = (rounded << shift2) · 2^-149,
+        // which is exactly the f32 bit pattern (incl. the carry into the
+        // normal range when rounded << shift2 == 2^23).
+        return f32::from_bits(sign | (rounded << shift2));
+    }
+    let e = exp_f - 127; // unbiased input exponent
+
+    if e >= emin {
+        // normal target range: RNE on the low (23 - m) mantissa bits
+        let shift = 23 - m;
+        // round-half-to-even trick: add (half - 1) + lsb-of-kept
+        let half_m1 = (1u32 << (shift - 1)) - 1;
+        let lsb = (man >> shift) & 1;
+        let rounded = man + half_m1 + lsb;
+        let carry = (rounded >> 23) & 1; // mantissa overflowed into exponent
+        let new_man = (rounded >> shift) << shift & 0x7f_ffff;
+        let new_e = e + carry as i32;
+        if new_e > emax {
+            return f32::from_bits(sign | 0x7f80_0000); // ±inf
+        }
+        let new_exp_f = (new_e + 127) as u32;
+        f32::from_bits(sign | (new_exp_f << 23) | if carry == 1 { 0 } else { new_man })
+    } else {
+        // subnormal target range: effective shift grows as e drops
+        let extra = emin - e; // >= 1
+        let shift = 23 - m + extra;
+        if shift > 24 {
+            return f32::from_bits(sign); // below half the smallest subnormal
+        }
+        // make the implicit leading 1 explicit (24-bit significand)
+        let full = man | 0x80_0000;
+        if shift == 24 {
+            // result is 0 or the smallest subnormal; tie at exactly 0.5
+            // rounds to even (= 0)
+            let half = 1u32 << 23;
+            let rem = full; // everything below the kept (zero) bits
+            return if rem > half {
+                // smallest subnormal: 2^(emin - m)
+                let v = exp2_f32(emin - m);
+                f32::from_bits(sign | v.to_bits())
+            } else {
+                f32::from_bits(sign)
+            };
+        }
+        let half_m1 = (1u32 << (shift - 1)) - 1;
+        let lsb = (full >> shift) & 1;
+        let rounded = (full + half_m1 + lsb) >> shift; // kept significand
+        if rounded == 0 {
+            return f32::from_bits(sign);
+        }
+        // value = rounded * 2^(emin - m); rounded < 2^(m+1) so this is an
+        // exact integer scaled by a power of two
+        let v = rounded as f32 * exp2_f32(emin - m);
+        f32::from_bits(sign | v.to_bits())
+    }
+}
+
+/// 2^k as f32 for k in the normal range (built via the exponent field).
+#[inline]
+fn exp2_f32(k: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&k));
+    f32::from_bits(((k + 127) as u32) << 23)
+}
+
+/// Bit-exact conversion f32 -> IEEE binary16 bit pattern (RNE). Used only
+/// in tests to prove `FloatFormat::new(5, 10).quantize` agrees with true
+/// IEEE half precision, and by the replay buffer's compact storage.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let mut exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+
+    if exp == 0xff {
+        // inf / nan
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    exp -= 127; // unbias
+
+    if exp > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if exp >= -14 {
+        // normal half
+        let mut m = man >> 13; // keep 10 bits
+        let rem = man & 0x1fff;
+        // RNE on the dropped 13 bits
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut e16 = (exp + 15) as u32;
+        if m == 0x400 {
+            m = 0;
+            e16 += 1;
+            if e16 >= 31 {
+                return sign | 0x7c00;
+            }
+        }
+        sign | ((e16 as u16) << 10) | (m as u16)
+    } else if exp >= -25 {
+        // subnormal half: implicit 1 becomes explicit, shifted right
+        let full = man | 0x80_0000; // 24-bit significand
+        let shift = (-14 - exp) + 13; // how many bits to drop
+        let m = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m = m;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1;
+        }
+        if m == 0x400 {
+            // rounded up into the normal range
+            return sign | (1 << 10);
+        }
+        sign | (m as u16)
+    } else {
+        sign // underflow to zero
+    }
+}
+
+/// Bit-exact conversion IEEE binary16 bit pattern -> f32 (always exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -14i32;
+            let mut m = man;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x3ff;
+            sign | (((e + 127) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7f80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::{BF16, FP16};
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn fp16_constants_match_ieee() {
+        assert_eq!(FP16.bias(), 15);
+        assert_eq!(FP16.emax(), 15);
+        assert_eq!(FP16.emin(), -14);
+        assert_eq!(FP16.max_value(), 65504.0);
+        assert!((FP16.min_normal() - 6.1035e-5).abs() < 1e-9);
+        assert!((FP16.min_subnormal() - 5.9605e-8).abs() < 1e-12);
+        assert!((FP16.epsilon() - 9.7656e-4).abs() < 1e-8);
+    }
+
+    #[test]
+    fn bf16_constants() {
+        assert_eq!(BF16.bias(), 127);
+        assert_eq!(BF16.emax(), 127);
+        // bf16 max = 3.3895e38
+        assert!((BF16.max_value() - 3.3895314e38).abs() / 3.39e38 < 1e-4);
+    }
+
+    #[test]
+    fn quantize_identity_on_representable() {
+        for &v in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, 6.1035156e-5, 2.0, 1.5] {
+            assert_eq!(FP16.quantize(v), v, "v={v}");
+        }
+    }
+
+    #[test]
+    fn quantize_agrees_with_bit_exact_f16_exhaustive_samples() {
+        // Cross-check the generic simulator against the dedicated
+        // bit-manipulation converter across a dense sample of magnitudes,
+        // including subnormals, ties, and near-overflow values.
+        let mut rng = Pcg64::seed(7);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_nan() {
+                continue;
+            }
+            let via_bits = f16_bits_to_f32(f32_to_f16_bits(x));
+            let via_fmt = FP16.quantize(x);
+            assert!(
+                via_bits == via_fmt || (via_bits == 0.0 && via_fmt == 0.0),
+                "x={x:e} bits={via_bits:e} fmt={via_fmt:e}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_ties_to_even() {
+        // 1 + eps/2 is a tie between 1.0 and 1+eps -> even mantissa (1.0)
+        let eps = FP16.epsilon();
+        assert_eq!(FP16.quantize(1.0 + eps / 2.0), 1.0);
+        // 1 + 3*eps/2 ties between 1+eps and 1+2eps -> 1+2eps (even)
+        assert_eq!(FP16.quantize(1.0 + 1.5 * eps), 1.0 + 2.0 * eps);
+    }
+
+    #[test]
+    fn quantize_underflow_and_subnormals() {
+        let sub = FP16.min_subnormal();
+        // below half the smallest subnormal -> 0
+        assert_eq!(FP16.quantize(sub * 0.49), 0.0);
+        // between: rounds to the subnormal
+        assert_eq!(FP16.quantize(sub * 0.75), sub);
+        // the paper's motivating example: (1e-7)^2 underflows
+        assert_eq!(FP16.quantize(1e-7f32 * 1e-7f32), 0.0);
+        // sign is preserved on underflow-to-zero
+        assert_eq!(FP16.quantize(-(sub * 0.25)).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn quantize_overflow_modes() {
+        assert_eq!(FP16.quantize(1e6), f32::INFINITY);
+        assert_eq!(FP16.quantize(-1e6), f32::NEG_INFINITY);
+        let s = FP16.quantize_with(1e6, RoundMode::NearestEven, OverflowMode::Saturate, None);
+        assert_eq!(s, 65504.0);
+        // 65520 is the tie between 65504 and 65536(=inf): RNE -> inf
+        assert_eq!(FP16.quantize(65520.0), f32::INFINITY);
+        assert_eq!(FP16.quantize(65519.0), 65504.0);
+    }
+
+    #[test]
+    fn toward_zero_truncates() {
+        let eps = FP16.epsilon();
+        let x = 1.0 + 1.9 * eps;
+        assert_eq!(
+            FP16.quantize_with(x, RoundMode::TowardZero, OverflowMode::Infinity, None),
+            1.0 + eps
+        );
+    }
+
+    #[test]
+    fn stochastic_rounding_is_unbiased() {
+        let mut rng = Pcg64::seed(42);
+        let eps = FP16.epsilon();
+        let x = 1.0 + 0.25 * eps; // 25% of the way to the next value
+        let n = 20_000;
+        let mut ups = 0;
+        for _ in 0..n {
+            let q = FP16.quantize_with(x, RoundMode::Stochastic, OverflowMode::Infinity, Some(&mut rng));
+            if q > 1.0 {
+                ups += 1;
+            }
+        }
+        let p = ups as f64 / n as f64;
+        assert!((p - 0.25).abs() < 0.02, "p={p}");
+    }
+
+    #[test]
+    fn narrower_formats_lose_values_monotonically() {
+        // every value representable in e5m(k) is representable in e5m(k+1)
+        let mut rng = Pcg64::seed(3);
+        for _ in 0..20_000 {
+            let x = (rng.uniform_f64() as f32 - 0.5) * 100.0;
+            for m in 2..10u8 {
+                let narrow = crate::lowp::e5m(m).quantize(x);
+                assert!(
+                    crate::lowp::e5m(m + 1).is_representable(narrow),
+                    "m={m} x={x} narrow={narrow}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f16_roundtrip_all_bit_patterns() {
+        // every finite f16 bit pattern must round-trip exactly
+        for h in 0..=0xffffu16 {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            let back = f32_to_f16_bits(f);
+            assert_eq!(back, h, "h={h:#x} f={f:e}");
+        }
+    }
+
+    #[test]
+    fn finite_counts() {
+        assert_eq!(FP16.finite_count_nonneg(), 31 * 1024);
+    }
+
+    /// Slow f64 ULP-grid reference (the algorithm the fast bit path
+    /// replaced) — kept here as the oracle for the cross-check below.
+    fn quantize_f64_ref(fmt: FloatFormat, x: f32) -> f32 {
+        if x == 0.0 || !x.is_finite() {
+            return x;
+        }
+        let xd = x as f64;
+        let ax = xd.abs();
+        let bits = ax.to_bits();
+        let e = ((bits >> 52) & 0x7ff) as i32 - 1023;
+        let ulp_exp = if e < fmt.emin() {
+            fmt.emin() - fmt.man_bits as i32
+        } else {
+            e - fmt.man_bits as i32
+        };
+        let ulp = 2f64.powi(ulp_exp);
+        let q = (ax / ulp).round_ties_even() * ulp;
+        let maxv =
+            (2f64.powi(fmt.emax() + 1)) - 2f64.powi(fmt.emax() - fmt.man_bits as i32);
+        let out = if q > maxv { f64::INFINITY } else { q };
+        (out.copysign(xd)) as f32
+    }
+
+    #[test]
+    fn bit_path_matches_f64_reference_across_formats() {
+        let mut rng = Pcg64::seed(99);
+        let formats = [
+            FloatFormat::new(5, 10),
+            FloatFormat::new(8, 7),
+            FloatFormat::new(5, 7),
+            FloatFormat::new(5, 5),
+            FloatFormat::new(4, 3),
+            FloatFormat::new(8, 10),
+            FloatFormat::new(6, 9),
+            FloatFormat::new(2, 1),
+        ];
+        for _ in 0..300_000 {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_nan() {
+                continue;
+            }
+            for fmt in formats {
+                let fast = quantize_rne_bits(x, fmt.exp_bits, fmt.man_bits);
+                let slow = quantize_f64_ref(fmt, x);
+                assert!(
+                    fast == slow || (fast == 0.0 && slow == 0.0),
+                    "fmt=e{}m{} x={x:e} ({:#x}) fast={fast:e} slow={slow:e}",
+                    fmt.exp_bits,
+                    fmt.man_bits,
+                    x.to_bits()
+                );
+            }
+        }
+        // targeted edge cases: ties, boundaries, f32 subnormals, near-max
+        let edges: Vec<f32> = vec![
+            65519.0, 65520.0, 65504.0, 6.1035156e-5, 5.9604645e-8, 2.9802322e-8,
+            2.9802326e-8, 1.0 + 4.8828125e-4, f32::MIN_POSITIVE, f32::from_bits(1),
+            f32::from_bits(0x007f_ffff), 3.389531e38, 1e-40, -1e-40,
+        ];
+        for x in edges {
+            for fmt in formats {
+                let fast = quantize_rne_bits(x, fmt.exp_bits, fmt.man_bits);
+                let slow = quantize_f64_ref(fmt, x);
+                assert!(
+                    fast == slow || (fast == 0.0 && slow == 0.0),
+                    "edge fmt=e{}m{} x={x:e} fast={fast:e} slow={slow:e}",
+                    fmt.exp_bits,
+                    fmt.man_bits
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_keeps_f32_subnormal_overlap() {
+        // 2^-130 is a bf16 subnormal (emin-m = -133): must survive, not
+        // flush to zero.
+        let x = 2f32.powi(-130);
+        let q = BF16.quantize(x);
+        assert_eq!(q, x, "bf16 subnormal must round-trip");
+        // below half of 2^-133 -> 0
+        assert_eq!(BF16.quantize(2f32.powi(-135)), 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! `hypot(a, b) = sqrt(a² + b²)` in simulated low precision.
+//!
+//! The paper's hAdam (§3, method 1) replaces Adam's second-moment update
+//! `v ← β₂ v + (1-β₂) g²` with an update on `w = √v` driven by `hypot`,
+//! because `g²` underflows in fp16 for |g| < 2^-12 or so. The *naive*
+//! hypot squares its arguments and hits exactly that underflow; the
+//! *stable* form (the one the paper writes out) factors out `max(|a|,|b|)`
+//! first so no intermediate leaves the representable range.
+
+use super::format::FloatFormat;
+
+/// Naive `sqrt(a² + b²)`, with every intermediate rounded into `fmt`.
+/// Underflows/overflows exactly like a real low-precision implementation —
+/// kept as the baseline the stable version is tested against.
+pub fn hypot_naive(a: f32, b: f32, fmt: FloatFormat) -> f32 {
+    let a2 = fmt.quantize(a * a);
+    let b2 = fmt.quantize(b * b);
+    let s = fmt.quantize(a2 + b2);
+    fmt.quantize(s.sqrt())
+}
+
+/// Numerically stable hypot, every intermediate rounded into `fmt`:
+///
+/// ```text
+/// hypot(a, b) = max * sqrt(1 + (min / (max + eps))²)
+/// ```
+///
+/// with `max = max(|a|, |b|)`, `min = min(|a|, |b|)` and `eps` the
+/// smallest positive subnormal of `fmt` (the paper's "add a numerical ε to
+/// the denominator" so a = b = 0 is well-defined).
+pub fn hypot_stable(a: f32, b: f32, fmt: FloatFormat) -> f32 {
+    let aa = fmt.quantize(a.abs());
+    let ab = fmt.quantize(b.abs());
+    let (mx, mn) = if aa >= ab { (aa, ab) } else { (ab, aa) };
+    if mx == 0.0 {
+        return 0.0;
+    }
+    let denom = fmt.quantize(mx + fmt.min_subnormal());
+    let r = fmt.quantize(mn / denom);
+    let r2 = fmt.quantize(r * r);
+    let s = fmt.quantize(1.0 + r2);
+    let root = fmt.quantize(s.sqrt());
+    fmt.quantize(mx * root)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::FP16;
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn matches_true_hypot_in_normal_range() {
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..10_000 {
+            let a = rng.uniform_in(-100.0, 100.0);
+            let b = rng.uniform_in(-100.0, 100.0);
+            let h = hypot_stable(a, b, FP16);
+            let t = (a as f64).hypot(b as f64) as f32;
+            let rel = ((h - t) / t.max(1e-6)).abs();
+            assert!(rel < 5e-3, "a={a} b={b} h={h} t={t}");
+        }
+    }
+
+    #[test]
+    fn naive_underflows_where_stable_does_not() {
+        // |g| = 1e-3 is representable in fp16, but g² = 1e-6 is well below
+        // the smallest subnormal (6e-8)? No: 1e-6 > 6e-8 — use 1e-4:
+        // (1e-4)² = 1e-8 < 6e-8 underflows.
+        let g = 1e-4f32;
+        assert_eq!(hypot_naive(0.0, g, FP16), 0.0, "naive must underflow");
+        let h = hypot_stable(0.0, g, FP16);
+        let rel = ((h - g) / g).abs();
+        assert!(rel < 1e-3, "stable hypot got {h}");
+    }
+
+    #[test]
+    fn stable_does_not_overflow_for_large_inputs() {
+        let a = 60000.0f32; // near fp16 max
+        let h = hypot_stable(a, a, FP16);
+        // true answer ~84852 overflows fp16 -> inf is correct IEEE result
+        assert!(h.is_infinite());
+        // but hypot(a, small) must NOT overflow the way a*a would
+        let h2 = hypot_stable(a, 1.0, FP16);
+        assert!((h2 - a).abs() / a < 1e-3, "h2={h2}");
+        assert_eq!(hypot_naive(a, 1.0, FP16), f32::INFINITY);
+    }
+
+    #[test]
+    fn zero_cases() {
+        assert_eq!(hypot_stable(0.0, 0.0, FP16), 0.0);
+        assert_eq!(hypot_stable(-0.0, 0.0, FP16), 0.0);
+        let s = FP16.min_subnormal();
+        // smallest subnormal survives
+        assert!(hypot_stable(s, 0.0, FP16) > 0.0);
+    }
+
+    #[test]
+    fn symmetric_and_sign_invariant() {
+        let mut rng = Pcg64::seed(2);
+        for _ in 0..2_000 {
+            let a = rng.normal_f32() * 10.0;
+            let b = rng.normal_f32() * 0.01;
+            let h1 = hypot_stable(a, b, FP16);
+            let h2 = hypot_stable(b, a, FP16);
+            let h3 = hypot_stable(-a, b, FP16);
+            assert_eq!(h1, h2);
+            assert_eq!(h1, h3);
+            assert!(h1 >= a.abs().max(b.abs()) * 0.999);
+        }
+    }
+}

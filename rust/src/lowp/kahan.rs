@@ -1,0 +1,225 @@
+//! Kahan (compensated) summation in simulated low precision.
+//!
+//! Used by two of the paper's six methods:
+//! * **Kahan-momentum** (§3, method 4): the target network's EMA update
+//!   `ψ̂ ← ψ̂ + (1-β)(ψ - ψ̂)` adds a tiny increment to a large
+//!   accumulator every step — fp16 swallows it. The paper additionally
+//!   scales the accumulated buffer by a constant `C` (1e4) to keep the
+//!   increments out of the subnormal range.
+//! * **Kahan-gradients** (§3, method 6): the parameter update
+//!   `θ ← θ + Δθ` has the same structure.
+//!
+//! Algorithm 2 of the paper, with every operation rounded into the target
+//! format:
+//! ```text
+//! y = delta - c;  t = s + y;  c = (t - s) - y;  s = t
+//! ```
+
+use super::precision::Precision;
+
+/// A single compensated accumulator (used for scalar state like the
+/// entropy temperature α).
+#[derive(Debug, Clone)]
+pub struct KahanScalar {
+    sum: f32,
+    comp: f32,
+    prec: Precision,
+}
+
+impl KahanScalar {
+    pub fn new(init: f32, prec: Precision) -> Self {
+        KahanScalar { sum: prec.q(init), comp: 0.0, prec }
+    }
+
+    #[inline]
+    pub fn value(&self) -> f32 {
+        self.sum
+    }
+
+    /// Overwrite the accumulated value, resetting compensation.
+    pub fn set(&mut self, v: f32) {
+        self.sum = self.prec.q(v);
+        self.comp = 0.0;
+    }
+
+    /// Add `delta` with compensation; all arithmetic in the target format.
+    #[inline]
+    pub fn add(&mut self, delta: f32) {
+        let p = self.prec;
+        let y = p.q(delta - self.comp);
+        let t = p.q(self.sum + y);
+        self.comp = p.q(p.q(t - self.sum) - y);
+        self.sum = t;
+    }
+}
+
+/// A vector of compensated accumulators sharing one compensation buffer —
+/// the shape the paper's Kahan-gradients / Kahan-momentum take over
+/// network parameter tensors.
+#[derive(Debug, Clone)]
+pub struct KahanVec {
+    sum: Vec<f32>,
+    comp: Vec<f32>,
+    prec: Precision,
+}
+
+impl KahanVec {
+    /// Wrap an existing parameter vector. `prec` governs the rounding of
+    /// every internal operation.
+    pub fn new(init: &[f32], prec: Precision) -> Self {
+        let mut sum = init.to_vec();
+        prec.q_slice(&mut sum);
+        KahanVec { comp: vec![0.0; init.len()], sum, prec }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.sum.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.sum.is_empty()
+    }
+
+    /// The accumulated values.
+    #[inline]
+    pub fn values(&self) -> &[f32] {
+        &self.sum
+    }
+
+    /// Mutable access for checkpoint restore; resets compensation.
+    pub fn restore(&mut self, values: &[f32], comp: &[f32]) {
+        self.sum.copy_from_slice(values);
+        self.comp.copy_from_slice(comp);
+    }
+
+    /// The compensation buffer (for checkpointing).
+    pub fn compensation(&self) -> &[f32] {
+        &self.comp
+    }
+
+    /// Compensated `sum[i] += delta[i]` for all i.
+    pub fn add(&mut self, delta: &[f32]) {
+        assert_eq!(delta.len(), self.sum.len());
+        let p = self.prec;
+        for i in 0..self.sum.len() {
+            let y = p.q(delta[i] - self.comp[i]);
+            let t = p.q(self.sum[i] + y);
+            self.comp[i] = p.q(p.q(t - self.sum[i]) - y);
+            self.sum[i] = t;
+        }
+    }
+
+    /// Plain (uncompensated) add in the same precision — the baseline the
+    /// ablation (paper Fig. 3 "kahan grad" step) compares against.
+    pub fn add_uncompensated(&mut self, delta: &[f32]) {
+        assert_eq!(delta.len(), self.sum.len());
+        let p = self.prec;
+        for i in 0..self.sum.len() {
+            self.sum[i] = p.q(self.sum[i] + delta[i]);
+        }
+    }
+
+    /// Memory footprint in bytes under the given storage width (the
+    /// compensation buffer is what Kahan costs; the paper notes this is
+    /// offset by halving the parameter storage).
+    pub fn footprint_bytes(&self, bytes_per_elem: usize) -> usize {
+        2 * self.sum.len() * bytes_per_elem
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::FP16;
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn scalar_kahan_beats_plain_summation() {
+        // add 1e-3 to 10.0 four thousand times in fp16: plain summation
+        // stalls (10 + 0.001 rounds back to ~10 once the ulp at 16 is
+        // 0.0156 > 2*delta... it actually stalls at 10.24), Kahan tracks.
+        let prec = Precision::sim(FP16);
+        let mut k = KahanScalar::new(10.0, prec);
+        let mut plain = 10.0f32;
+        let delta = 1e-3f32;
+        for _ in 0..4000 {
+            k.add(delta);
+            plain = FP16.quantize(plain + delta);
+        }
+        let truth = 10.0 + 4000.0 * 1e-3; // 14.0
+        assert!((k.value() - truth).abs() < 0.05, "kahan={}", k.value());
+        assert!((plain - truth).abs() > 1.0, "plain={plain} unexpectedly good");
+    }
+
+    #[test]
+    fn vector_kahan_tracks_ema_target_update() {
+        // the exact computation from the paper: psi_hat += (1-beta)(psi-psi_hat)
+        // with beta=0.995 tau-style increments, in fp16.
+        let prec = Precision::sim(FP16);
+        let tau = 0.005f32;
+        let psi = vec![1.0f32; 64];
+        let mut hat = KahanVec::new(&vec![0.0f32; 64], prec);
+        let mut plain = vec![0.0f32; 64];
+        for _ in 0..3000 {
+            let delta: Vec<f32> = hat
+                .values()
+                .iter()
+                .zip(&psi)
+                .map(|(&h, &p)| FP16.quantize(tau * FP16.quantize(p - h)))
+                .collect();
+            hat.add(&delta);
+            for i in 0..plain.len() {
+                let d = FP16.quantize(tau * FP16.quantize(psi[i] - plain[i]));
+                plain[i] = FP16.quantize(plain[i] + d);
+            }
+        }
+        // after 3000 steps of tau=0.005 the EMA should be ~1 - (1-tau)^3000 ≈ 1
+        let k_err = (hat.values()[0] - 1.0).abs();
+        let p_err = (plain[0] - 1.0).abs();
+        assert!(k_err < 0.01, "kahan err {k_err}");
+        assert!(p_err > k_err, "plain err {p_err} vs kahan {k_err}");
+    }
+
+    #[test]
+    fn fp32_kahan_matches_f64_reference() {
+        let prec = Precision::Fp32;
+        let mut rng = Pcg64::seed(1);
+        let mut k = KahanScalar::new(0.0, prec);
+        let mut truth = 0.0f64;
+        for _ in 0..100_000 {
+            let d = rng.uniform_in(-1e-4, 1e-4);
+            k.add(d);
+            truth += d as f64;
+        }
+        assert!((k.value() as f64 - truth).abs() < 1e-6);
+    }
+
+    #[test]
+    fn uncompensated_matches_manual_loop() {
+        let prec = Precision::sim(FP16);
+        let mut v = KahanVec::new(&[1.0, 2.0], prec);
+        v.add_uncompensated(&[0.5, -0.5]);
+        assert_eq!(v.values(), &[1.5, 1.5]);
+    }
+
+    #[test]
+    fn footprint_accounts_for_compensation() {
+        let v = KahanVec::new(&vec![0.0; 100], Precision::sim(FP16));
+        assert_eq!(v.footprint_bytes(2), 400); // sum + comp at 2 bytes each
+    }
+
+    #[test]
+    fn restore_roundtrip() {
+        let prec = Precision::sim(FP16);
+        let mut v = KahanVec::new(&[1.0, 2.0, 3.0], prec);
+        v.add(&[0.1, 0.1, 0.1]);
+        let (vals, comp) = (v.values().to_vec(), v.compensation().to_vec());
+        let mut w = KahanVec::new(&[0.0, 0.0, 0.0], prec);
+        w.restore(&vals, &comp);
+        v.add(&[0.01; 3]);
+        w.add(&[0.01; 3]);
+        assert_eq!(v.values(), w.values());
+    }
+}

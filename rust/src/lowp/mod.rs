@@ -1,0 +1,36 @@
+//! Low-precision numeric formats and numerics utilities.
+//!
+//! This module is the foundation of the reproduction: a software simulator
+//! for reduced-precision floating point (the role qtorch plays in the
+//! paper), plus the numerically careful primitives the paper's six
+//! modifications rely on (`hypot`, Kahan summation).
+//!
+//! Simulation model: values are carried in `f32`, and every simulated
+//! operation rounds its result into the target [`FloatFormat`] — i.e.
+//! "compute high, round after each op", exactly the semantics qtorch
+//! (Zhang et al., 2019) implements and the paper uses for Figure 4. For
+//! the IEEE binary16 format this matches true fp16 arithmetic for every
+//! individual operation (each f32 op result rounded to fp16 equals the
+//! correctly-rounded fp16 op result, since f32 carries more than 2×(10+2)
+//! bits of precision — Figueroa, 1995).
+
+pub mod format;
+mod hypot;
+mod kahan;
+mod precision;
+
+pub use format::{f16_bits_to_f32, f32_to_f16_bits, FloatFormat, OverflowMode, RoundMode};
+pub use hypot::{hypot_naive, hypot_stable};
+pub use kahan::{KahanScalar, KahanVec};
+pub use precision::Precision;
+
+/// IEEE binary16 (half precision): 5 exponent bits, 10 significand bits.
+pub const FP16: FloatFormat = FloatFormat::new(5, 10);
+/// bfloat16: 8 exponent bits, 7 significand bits.
+pub const BF16: FloatFormat = FloatFormat::new(8, 7);
+
+/// The e5mX family swept in the paper's Figure 4 (5 exponent bits, X
+/// significand bits, X ∈ {5, ..., 10}).
+pub const fn e5m(man_bits: u8) -> FloatFormat {
+    FloatFormat::new(5, man_bits)
+}

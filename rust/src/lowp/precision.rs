@@ -1,0 +1,198 @@
+//! The precision policy threaded through every numeric component.
+//!
+//! `Precision::Fp32` is native IEEE single (the paper's baseline);
+//! `Precision::Sim(fmt)` rounds the result of every simulated operation
+//! into `fmt` — fp16 for the paper's main experiments, e5mX for Figure 4.
+
+use super::format::{FloatFormat, OverflowMode, RoundMode};
+
+/// Precision policy for a computation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Precision {
+    /// Native f32: quantization is the identity.
+    Fp32,
+    /// Simulated low precision: round every op result into the format.
+    Sim {
+        fmt: FloatFormat,
+        round: RoundMode,
+        overflow: OverflowMode,
+    },
+}
+
+impl Precision {
+    /// Simulated precision with IEEE defaults (RNE, overflow→∞).
+    pub const fn sim(fmt: FloatFormat) -> Self {
+        Precision::Sim {
+            fmt,
+            round: RoundMode::NearestEven,
+            overflow: OverflowMode::Infinity,
+        }
+    }
+
+    /// The fp16 policy used throughout the paper's main experiments.
+    pub const fn fp16() -> Self {
+        Precision::sim(crate::lowp::FP16)
+    }
+
+    /// True if this policy actually rounds (i.e. is not plain f32).
+    #[inline]
+    pub fn is_low(&self) -> bool {
+        !matches!(self, Precision::Fp32)
+    }
+
+    /// The underlying format, if simulated.
+    pub fn format(&self) -> Option<FloatFormat> {
+        match self {
+            Precision::Fp32 => None,
+            Precision::Sim { fmt, .. } => Some(*fmt),
+        }
+    }
+
+    /// Bytes used to *store* one element under this policy (what the
+    /// memory tables count): 4 for f32, 2 for any simulated 16-or-fewer
+    /// bit format (stored as 16-bit words, as fp16 hardware would).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Precision::Fp32 => 4,
+            Precision::Sim { .. } => 2,
+        }
+    }
+
+    /// Quantize a scalar under this policy.
+    #[inline]
+    pub fn q(&self, x: f32) -> f32 {
+        match self {
+            Precision::Fp32 => x,
+            Precision::Sim { fmt, round, overflow } => {
+                debug_assert!(
+                    !matches!(round, RoundMode::Stochastic),
+                    "stochastic rounding needs q_with_rng"
+                );
+                fmt.quantize_with(x, *round, *overflow, None)
+            }
+        }
+    }
+
+    /// Quantize a slice in place under this policy.
+    pub fn q_slice(&self, xs: &mut [f32]) {
+        match self {
+            Precision::Fp32 => {}
+            Precision::Sim { fmt, round, overflow } => {
+                for v in xs.iter_mut() {
+                    *v = fmt.quantize_with(*v, *round, *overflow, None);
+                }
+            }
+        }
+    }
+
+    /// Smallest positive subnormal of the policy's format (f32's if none).
+    pub fn tiny(&self) -> f32 {
+        match self {
+            Precision::Fp32 => f32::from_bits(1),
+            Precision::Sim { fmt, .. } => fmt.min_subnormal(),
+        }
+    }
+
+    /// Largest finite value of the policy's format.
+    pub fn max_value(&self) -> f32 {
+        match self {
+            Precision::Fp32 => f32::MAX,
+            Precision::Sim { fmt, .. } => fmt.max_value(),
+        }
+    }
+
+    /// Machine epsilon of the policy's format.
+    pub fn epsilon(&self) -> f32 {
+        match self {
+            Precision::Fp32 => f32::EPSILON,
+            Precision::Sim { fmt, .. } => fmt.epsilon(),
+        }
+    }
+
+    /// A short name for configs/telemetry ("fp32", "e5m10", ...).
+    pub fn name(&self) -> String {
+        match self {
+            Precision::Fp32 => "fp32".to_string(),
+            Precision::Sim { fmt, .. } => {
+                if (fmt.exp_bits, fmt.man_bits) == (5, 10) {
+                    "fp16".to_string()
+                } else if (fmt.exp_bits, fmt.man_bits) == (8, 7) {
+                    "bf16".to_string()
+                } else {
+                    format!("e{}m{}", fmt.exp_bits, fmt.man_bits)
+                }
+            }
+        }
+    }
+
+    /// Parse a precision name ("fp32", "fp16", "bf16", "e5m7", ...).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "fp32" | "f32" => Some(Precision::Fp32),
+            "fp16" | "f16" | "half" => Some(Precision::fp16()),
+            "bf16" => Some(Precision::sim(crate::lowp::BF16)),
+            _ => {
+                // eXmY grammar
+                let s = s.strip_prefix('e')?;
+                let (e, m) = s.split_once('m')?;
+                let e: u8 = e.parse().ok()?;
+                let m: u8 = m.parse().ok()?;
+                if (2..=8).contains(&e) && m <= 23 {
+                    Some(Precision::sim(FloatFormat::new(e, m)))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::{FP16, e5m};
+
+    #[test]
+    fn fp32_is_identity() {
+        let p = Precision::Fp32;
+        assert_eq!(p.q(1e-30), 1e-30);
+        assert!(!p.is_low());
+        assert_eq!(p.storage_bytes(), 4);
+    }
+
+    #[test]
+    fn fp16_policy_rounds() {
+        let p = Precision::fp16();
+        assert_eq!(p.q(1e-9), 0.0);
+        assert_eq!(p.q(1e6), f32::INFINITY);
+        assert!(p.is_low());
+        assert_eq!(p.storage_bytes(), 2);
+        assert_eq!(p.format(), Some(FP16));
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for s in ["fp32", "fp16", "bf16", "e5m7", "e5m5", "e4m3"] {
+            let p = Precision::parse(s).unwrap();
+            assert_eq!(p.name(), s, "{s}");
+        }
+        assert!(Precision::parse("garbage").is_none());
+        assert!(Precision::parse("e9m2").is_none());
+    }
+
+    #[test]
+    fn e5m_matches_sim() {
+        let p = Precision::sim(e5m(7));
+        assert_eq!(p.name(), "e5m7");
+        // e5m7 epsilon = 2^-7
+        assert_eq!(p.epsilon(), 0.0078125);
+    }
+
+    #[test]
+    fn q_slice_applies_elementwise() {
+        let p = Precision::fp16();
+        let mut xs = vec![1.0, 1e-9, 1e9, -2.5];
+        p.q_slice(&mut xs);
+        assert_eq!(xs, vec![1.0, 0.0, f32::INFINITY, -2.5]);
+    }
+}

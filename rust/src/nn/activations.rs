@@ -1,0 +1,94 @@
+//! Elementwise activations with explicit backward, quantized per tensor.
+
+use super::tensor::Tensor;
+use crate::lowp::Precision;
+
+/// ReLU forward. Returns the activated tensor (quantized).
+pub fn relu(x: &Tensor, prec: Precision) -> Tensor {
+    let mut y = x.clone();
+    for v in y.data.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+    y.quantize(prec);
+    y
+}
+
+/// ReLU backward: `dx = dy ⊙ 1[x > 0]`, where `x` is the forward *input*.
+pub fn relu_backward(dy: &Tensor, x: &Tensor, prec: Precision) -> Tensor {
+    assert_eq!(dy.len(), x.len());
+    let mut dx = dy.clone();
+    for (d, &xv) in dx.data.iter_mut().zip(&x.data) {
+        if xv <= 0.0 {
+            *d = 0.0;
+        }
+    }
+    dx.quantize(prec);
+    dx
+}
+
+/// tanh forward (quantized).
+pub fn tanh_forward(x: &Tensor, prec: Precision) -> Tensor {
+    let mut y = x.clone();
+    for v in y.data.iter_mut() {
+        *v = v.tanh();
+    }
+    y.quantize(prec);
+    y
+}
+
+/// tanh backward given the forward *output* `y`: `dx = dy (1 - y²)`.
+/// In fp16, `1 - y²` rounds to 0 once |y| is within ~5e-4 of 1 — exactly
+/// the saturation the paper's log-prob rewrite avoids; for the plain
+/// activation this is harmless (the true gradient is ~0 there anyway).
+pub fn tanh_backward(dy: &Tensor, y: &Tensor, prec: Precision) -> Tensor {
+    assert_eq!(dy.len(), y.len());
+    let mut dx = dy.clone();
+    for (d, &yv) in dx.data.iter_mut().zip(&y.data) {
+        let one_m = prec.q(1.0 - prec.q(yv * yv));
+        *d *= one_m;
+    }
+    dx.quantize(prec);
+    dx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn relu_forward_backward() {
+        let x = Tensor::from_vec(&[1, 4], vec![-1.0, 0.0, 0.5, 2.0]);
+        let y = relu(&x, Precision::Fp32);
+        assert_eq!(y.data, vec![0.0, 0.0, 0.5, 2.0]);
+        let dy = Tensor::filled(&[1, 4], 1.0);
+        let dx = relu_backward(&dy, &x, Precision::Fp32);
+        assert_eq!(dx.data, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn tanh_gradcheck() {
+        let mut rng = Pcg64::seed(1);
+        let x = Tensor::from_vec(&[1, 8], (0..8).map(|_| rng.normal_f32() * 2.0).collect());
+        let y = tanh_forward(&x, Precision::Fp32);
+        let dy = Tensor::filled(&[1, 8], 1.0);
+        let dx = tanh_backward(&dy, &y, Precision::Fp32);
+        let eps = 1e-3f32;
+        for i in 0..8 {
+            let num = (((x.data[i] + eps).tanh()) - ((x.data[i] - eps).tanh())) / (2.0 * eps);
+            assert!((num - dx.data[i]).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn tanh_saturates_in_fp16() {
+        // |x| large => y rounds to ±1 in fp16 and (1-y²) underflows to 0.
+        let x = Tensor::from_vec(&[1, 1], vec![6.0]);
+        let y = tanh_forward(&x, Precision::fp16());
+        assert_eq!(y.data[0], 1.0);
+        let dx = tanh_backward(&Tensor::filled(&[1, 1], 1.0), &y, Precision::fp16());
+        assert_eq!(dx.data[0], 0.0);
+    }
+}

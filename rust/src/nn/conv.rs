@@ -1,0 +1,253 @@
+//! 2-D convolution (NCHW, valid padding) via im2col + GEMM, with explicit
+//! backward. Used by the pixel encoder (paper §4.6: four 3×3 conv layers,
+//! first stride 2, rest stride 1).
+
+use super::param::Param;
+use super::tensor::{gemm, gemm_tn, Tensor};
+use crate::lowp::Precision;
+use crate::rngs::Pcg64;
+
+/// Conv2d: input `[B, Cin, H, W]` → output `[B, Cout, Ho, Wo]`,
+/// `Ho = (H - k)/stride + 1`, valid padding.
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    pub w: Param, // [Cout, Cin*k*k]
+    pub b: Param, // [Cout]
+    pub cin: usize,
+    pub cout: usize,
+    pub k: usize,
+    pub stride: usize,
+    cols_cache: Vec<f32>, // im2col of last input [B*Ho*Wo, Cin*k*k]
+    in_shape: [usize; 4],
+}
+
+impl Conv2d {
+    pub fn new(name: &str, cin: usize, cout: usize, k: usize, stride: usize, rng: &mut Pcg64) -> Self {
+        let fan = cin * k * k;
+        let mut w = Param::new(format!("{name}.w"), &[cout, fan]);
+        w.w = super::init::orthogonal_init(rng, cout, fan, 1.0);
+        let b = Param::new(format!("{name}.b"), &[cout]);
+        Conv2d { w, b, cin, cout, k, stride, cols_cache: Vec::new(), in_shape: [0; 4] }
+    }
+
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        ((h - self.k) / self.stride + 1, (w - self.k) / self.stride + 1)
+    }
+
+    /// im2col: `[B, Cin, H, W]` → `[B*Ho*Wo, Cin*k*k]` rows of receptive
+    /// fields.
+    fn im2col(&self, x: &Tensor) -> (Vec<f32>, usize, usize) {
+        let [b, c, h, w] = [x.shape[0], x.shape[1], x.shape[2], x.shape[3]];
+        let (ho, wo) = self.out_hw(h, w);
+        let fan = c * self.k * self.k;
+        let mut cols = vec![0.0f32; b * ho * wo * fan];
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((bi * ho + oy) * wo + ox) * fan;
+                    let iy0 = oy * self.stride;
+                    let ix0 = ox * self.stride;
+                    let mut p = row;
+                    for ci in 0..c {
+                        let base = ((bi * c + ci) * h + iy0) * w + ix0;
+                        for ky in 0..self.k {
+                            let src = base + ky * w;
+                            cols[p..p + self.k].copy_from_slice(&x.data[src..src + self.k]);
+                            p += self.k;
+                        }
+                    }
+                }
+            }
+        }
+        (cols, ho, wo)
+    }
+
+    /// Forward; output quantized.
+    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
+        assert_eq!(x.shape.len(), 4);
+        assert_eq!(x.shape[1], self.cin);
+        let [b, _, h, w] = [x.shape[0], x.shape[1], x.shape[2], x.shape[3]];
+        let (cols, ho, wo) = self.im2col(x);
+        self.in_shape = [b, self.cin, h, w];
+        let fan = self.cin * self.k * self.k;
+        let rows = b * ho * wo;
+        // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ
+        let mut yrows = vec![0.0f32; rows * self.cout];
+        super::tensor::gemm_nt(&cols, &self.w.w, &mut yrows, rows, fan, self.cout);
+        self.cols_cache = cols;
+        // transpose to [B, Cout, Ho, Wo] + bias
+        let mut y = Tensor::zeros(&[b, self.cout, ho, wo]);
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let r = ((bi * ho + oy) * wo + ox) * self.cout;
+                    for co in 0..self.cout {
+                        y.data[((bi * self.cout + co) * ho + oy) * wo + ox] =
+                            yrows[r + co] + self.b.w[co];
+                    }
+                }
+            }
+        }
+        y.quantize(prec);
+        y
+    }
+
+    /// Backward; accumulates dW/db, returns dx `[B, Cin, H, W]`.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+        let [b, cin, h, w] = self.in_shape;
+        assert!(b > 0, "forward cache missing");
+        let (ho, wo) = self.out_hw(h, w);
+        assert_eq!(dy.shape, vec![b, self.cout, ho, wo]);
+        let fan = cin * self.k * self.k;
+        let rows = b * ho * wo;
+
+        // dy as rows [rows, cout]
+        let mut dyr = vec![0.0f32; rows * self.cout];
+        for bi in 0..b {
+            for co in 0..self.cout {
+                for oy in 0..ho {
+                    for ox in 0..wo {
+                        dyr[((bi * ho + oy) * wo + ox) * self.cout + co] =
+                            dy.data[((bi * self.cout + co) * ho + oy) * wo + ox];
+                    }
+                }
+            }
+        }
+        // db
+        for r in 0..rows {
+            for co in 0..self.cout {
+                self.b.g[co] += dyr[r * self.cout + co];
+            }
+        }
+        prec.q_slice(&mut self.b.g);
+        // dW[cout, fan] = dyrᵀ @ cols
+        let mut dw = vec![0.0f32; self.cout * fan];
+        gemm_tn(&dyr, &self.cols_cache, &mut dw, self.cout, rows, fan);
+        prec.q_slice(&mut dw);
+        for (acc, d) in self.w.g.iter_mut().zip(&dw) {
+            *acc += d;
+        }
+        prec.q_slice(&mut self.w.g);
+        // dcols[rows, fan] = dyr @ w
+        let mut dcols = vec![0.0f32; rows * fan];
+        gemm(&dyr, &self.w.w, &mut dcols, rows, self.cout, fan);
+        // col2im scatter-add
+        let mut dx = Tensor::zeros(&[b, cin, h, w]);
+        for bi in 0..b {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let row = ((bi * ho + oy) * wo + ox) * fan;
+                    let iy0 = oy * self.stride;
+                    let ix0 = ox * self.stride;
+                    let mut p = row;
+                    for ci in 0..cin {
+                        let base = ((bi * cin + ci) * h + iy0) * w + ix0;
+                        for ky in 0..self.k {
+                            let dst = base + ky * w;
+                            for kx in 0..self.k {
+                                dx.data[dst + kx] += dcols[p];
+                                p += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx.quantize(prec);
+        dx
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.w.zero_grad();
+        self.b.zero_grad();
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loss(y: &Tensor) -> f32 {
+        y.data.iter().map(|v| v * v / 2.0).sum()
+    }
+
+    #[test]
+    fn output_shape_and_identity_kernel() {
+        let mut rng = Pcg64::seed(1);
+        let mut conv = Conv2d::new("c", 1, 1, 3, 1, &mut rng);
+        // delta kernel: picks out the center pixel
+        conv.w.w.iter_mut().for_each(|v| *v = 0.0);
+        conv.w.w[4] = 1.0;
+        let x = Tensor::from_vec(&[1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let y = conv.forward(&x, Precision::Fp32);
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        // centers of each 3x3 window in a 4x4 grid: (1,1),(1,2),(2,1),(2,2)
+        assert_eq!(y.data, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn stride_two_shape() {
+        let mut rng = Pcg64::seed(2);
+        let mut conv = Conv2d::new("c", 3, 8, 3, 2, &mut rng);
+        let x = Tensor::zeros(&[2, 3, 21, 21]);
+        let y = conv.forward(&x, Precision::Fp32);
+        assert_eq!(y.shape, vec![2, 8, 10, 10]);
+    }
+
+    #[test]
+    fn gradcheck_fp32() {
+        let mut rng = Pcg64::seed(3);
+        let mut conv = Conv2d::new("c", 2, 3, 3, 1, &mut rng);
+        let x = Tensor::from_vec(&[1, 2, 5, 5], (0..50).map(|_| rng.normal_f32()).collect());
+        let prec = Precision::Fp32;
+        let y = conv.forward(&x, prec);
+        conv.zero_grad();
+        let dx = conv.backward(&y.clone(), prec);
+
+        let eps = 1e-3f32;
+        for &idx in &[0usize, 7, 20, 49] {
+            let mut x2 = x.clone();
+            x2.data[idx] += eps;
+            let lp = loss(&conv.forward(&x2, prec));
+            x2.data[idx] -= 2.0 * eps;
+            let lm = loss(&conv.forward(&x2, prec));
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - dx.data[idx]).abs() < 3e-2 * (1.0 + num.abs()), "x[{idx}]: {num} vs {}", dx.data[idx]);
+        }
+        let _ = conv.forward(&x, prec);
+        conv.zero_grad();
+        let yy = conv.forward(&x, prec);
+        let _ = conv.backward(&yy.clone(), prec);
+        for &idx in &[0usize, 11, 30] {
+            let orig = conv.w.w[idx];
+            conv.w.w[idx] = orig + eps;
+            let lp = loss(&conv.forward(&x, prec));
+            conv.w.w[idx] = orig - eps;
+            let lm = loss(&conv.forward(&x, prec));
+            conv.w.w[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - conv.w.g[idx]).abs() < 3e-2 * (1.0 + num.abs()), "w[{idx}]");
+        }
+    }
+
+    #[test]
+    fn bias_grad_is_sum_over_positions() {
+        let mut rng = Pcg64::seed(4);
+        let mut conv = Conv2d::new("c", 1, 2, 3, 1, &mut rng);
+        let x = Tensor::zeros(&[1, 1, 3, 3]); // single output position
+        let y = conv.forward(&x, Precision::Fp32);
+        assert_eq!(y.shape, vec![1, 2, 1, 1]);
+        conv.zero_grad();
+        let dy = Tensor::from_vec(&[1, 2, 1, 1], vec![2.0, -3.0]);
+        let _ = conv.backward(&dy, Precision::Fp32);
+        assert_eq!(conv.b.g, vec![2.0, -3.0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Weight initializers.
+//!
+//! The reference SAC codebase (Yarats & Kostrikov, 2020) uses orthogonal
+//! initialization for every linear layer; convolutions use the same
+//! scheme applied to the flattened (out, in·kh·kw) matrix.
+
+use crate::rngs::Pcg64;
+
+/// Orthogonal initialization with gain: fill a `[rows, cols]` matrix with
+/// a (semi-)orthogonal matrix scaled by `gain`. Implemented as modified
+/// Gram–Schmidt on a Gaussian matrix — plenty for the layer sizes here.
+pub fn orthogonal_init(rng: &mut Pcg64, rows: usize, cols: usize, gain: f32) -> Vec<f32> {
+    // Work with the wide orientation so rows are orthonormalizable.
+    let (r, c, transpose) = if rows <= cols { (rows, cols, false) } else { (cols, rows, true) };
+    let mut m: Vec<f32> = (0..r * c).map(|_| rng.normal_f32()).collect();
+    for i in 0..r {
+        // subtract projections onto previous rows
+        for j in 0..i {
+            let mut dot = 0.0f64;
+            for k in 0..c {
+                dot += m[i * c + k] as f64 * m[j * c + k] as f64;
+            }
+            for k in 0..c {
+                m[i * c + k] -= (dot as f32) * m[j * c + k];
+            }
+        }
+        let norm = (0..c).map(|k| (m[i * c + k] as f64).powi(2)).sum::<f64>().sqrt();
+        let inv = if norm > 1e-12 { 1.0 / norm as f32 } else { 0.0 };
+        for k in 0..c {
+            m[i * c + k] *= inv * gain;
+        }
+    }
+    if !transpose {
+        m
+    } else {
+        let mut out = vec![0.0; rows * cols];
+        for i in 0..r {
+            for k in 0..c {
+                out[k * cols + i] = m[i * c + k];
+            }
+        }
+        out
+    }
+}
+
+/// PyTorch default `Linear` init: U(-1/√fan_in, 1/√fan_in).
+pub fn uniform_fan_in(rng: &mut Pcg64, fan_in: usize, n: usize) -> Vec<f32> {
+    let bound = 1.0 / (fan_in as f32).sqrt();
+    (0..n).map(|_| rng.uniform_in(-bound, bound)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row_dot(m: &[f32], c: usize, i: usize, j: usize) -> f64 {
+        (0..c).map(|k| m[i * c + k] as f64 * m[j * c + k] as f64).sum()
+    }
+
+    #[test]
+    fn orthogonal_rows_are_orthonormal_wide() {
+        let mut rng = Pcg64::seed(1);
+        let (r, c) = (8, 32);
+        let m = orthogonal_init(&mut rng, r, c, 1.0);
+        for i in 0..r {
+            for j in 0..r {
+                let d = row_dot(&m, c, i, j);
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j}) dot={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn orthogonal_cols_are_orthonormal_tall() {
+        let mut rng = Pcg64::seed(2);
+        let (r, c) = (32, 8);
+        let m = orthogonal_init(&mut rng, r, c, 1.0);
+        // columns orthonormal
+        for i in 0..c {
+            for j in 0..c {
+                let mut d = 0.0f64;
+                for k in 0..r {
+                    d += m[k * c + i] as f64 * m[k * c + j] as f64;
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-4, "({i},{j}) dot={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn gain_scales_norms() {
+        let mut rng = Pcg64::seed(3);
+        let m = orthogonal_init(&mut rng, 4, 16, 2.0);
+        let d = row_dot(&m, 16, 0, 0);
+        assert!((d - 4.0).abs() < 1e-3, "norm²={d}");
+    }
+
+    #[test]
+    fn uniform_fan_in_bounds() {
+        let mut rng = Pcg64::seed(4);
+        let v = uniform_fan_in(&mut rng, 100, 10_000);
+        let bound = 0.1;
+        assert!(v.iter().all(|x| x.abs() <= bound));
+        let frac_outer = v.iter().filter(|x| x.abs() > bound * 0.5).count() as f64 / v.len() as f64;
+        assert!((frac_outer - 0.5).abs() < 0.05);
+    }
+}

@@ -1,0 +1,192 @@
+//! Layer normalization over the last dimension, with the fp16 overflow
+//! behaviour the paper describes (§4.6): the internal variance is a mean
+//! of *squares*, and in fp16 a pre-activation of magnitude ≳ 256 squares
+//! past 65504 → ∞. We quantize the squared deviations at element level so
+//! the failure (and the weight-standardization fix) reproduce faithfully.
+
+use super::param::Param;
+use super::tensor::Tensor;
+use crate::lowp::Precision;
+
+/// LayerNorm with learnable affine (γ, β), over the last dim.
+#[derive(Debug, Clone)]
+pub struct LayerNorm {
+    pub gamma: Param,
+    pub beta: Param,
+    pub dim: usize,
+    pub eps: f32,
+    // caches
+    xhat: Tensor,
+    inv_std: Vec<f32>,
+}
+
+impl LayerNorm {
+    pub fn new(name: &str, dim: usize) -> Self {
+        let mut gamma = Param::new(format!("{name}.gamma"), &[dim]);
+        gamma.w.iter_mut().for_each(|v| *v = 1.0);
+        let beta = Param::new(format!("{name}.beta"), &[dim]);
+        LayerNorm { gamma, beta, dim, eps: 1e-5, xhat: Tensor::zeros(&[0]), inv_std: Vec::new() }
+    }
+
+    /// Forward. Mean/variance are computed with per-element quantized
+    /// squares (where the paper's overflow lives) and f32 accumulation
+    /// (as a warp-level tree reduction would give on hardware).
+    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
+        assert_eq!(x.cols(), self.dim);
+        let rows = x.rows();
+        let d = self.dim;
+        let mut y = Tensor::zeros(&[rows, d]);
+        self.xhat = Tensor::zeros(&[rows, d]);
+        self.inv_std = vec![0.0; rows];
+        for r in 0..rows {
+            let xr = x.row(r);
+            let mean = prec.q(xr.iter().sum::<f32>() / d as f32);
+            // squared deviations, quantized per element — overflow site
+            let var = prec.q(
+                xr.iter().map(|&v| prec.q(prec.q(v - mean) * prec.q(v - mean))).sum::<f32>()
+                    / d as f32,
+            );
+            let inv = prec.q(1.0 / prec.q((var + self.eps).sqrt()));
+            self.inv_std[r] = inv;
+            let xh = self.xhat.row_mut(r);
+            for c in 0..d {
+                xh[c] = prec.q(prec.q(xr[c] - mean) * inv);
+            }
+            let yr = y.row_mut(r);
+            for c in 0..d {
+                yr[c] = prec.q(self.gamma.w[c] * xh[c] + self.beta.w[c]);
+            }
+        }
+        y
+    }
+
+    /// Backward; accumulates dγ/dβ, returns dx.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+        let rows = dy.rows();
+        let d = self.dim;
+        assert_eq!(self.xhat.rows(), rows, "forward cache missing");
+        let mut dx = Tensor::zeros(&[rows, d]);
+        for r in 0..rows {
+            let dyr = dy.row(r);
+            let xh = self.xhat.row(r);
+            // parameter grads
+            for c in 0..d {
+                self.gamma.g[c] += dyr[c] * xh[c];
+                self.beta.g[c] += dyr[c];
+            }
+            // dx = inv/d * (d*g⊙dy - sum(g⊙dy) - xhat*sum(g⊙dy⊙xhat))
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            let mut gdy = vec![0.0f32; d];
+            for c in 0..d {
+                gdy[c] = prec.q(self.gamma.w[c] * dyr[c]);
+                s1 += gdy[c];
+                s2 += prec.q(gdy[c] * xh[c]);
+            }
+            let (s1, s2) = (prec.q(s1), prec.q(s2));
+            let inv = self.inv_std[r];
+            let dn = d as f32;
+            let dxr = dx.row_mut(r);
+            for c in 0..d {
+                let t = prec.q(dn * gdy[c] - s1 - prec.q(xh[c] * s2));
+                dxr[c] = prec.q(inv / dn * t);
+            }
+        }
+        prec.q_slice(&mut self.gamma.g);
+        prec.q_slice(&mut self.beta.g);
+        dx
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.gamma, &mut self.beta]
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.gamma.zero_grad();
+        self.beta.zero_grad();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn output_is_normalized() {
+        let mut rng = Pcg64::seed(1);
+        let mut ln = LayerNorm::new("ln", 50);
+        let x = Tensor::from_vec(&[4, 50], (0..200).map(|_| rng.normal_f32() * 3.0 + 1.0).collect());
+        let y = ln.forward(&x, Precision::Fp32);
+        for r in 0..4 {
+            let row = y.row(r);
+            let mean: f32 = row.iter().sum::<f32>() / 50.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 50.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn gradcheck_fp32() {
+        let mut rng = Pcg64::seed(2);
+        let d = 6;
+        let mut ln = LayerNorm::new("ln", d);
+        // non-trivial gamma
+        for (i, g) in ln.gamma.w.iter_mut().enumerate() {
+            *g = 1.0 + 0.1 * i as f32;
+        }
+        let x = Tensor::from_vec(&[2, d], (0..2 * d).map(|_| rng.normal_f32()).collect());
+        let y = ln.forward(&x, Precision::Fp32);
+        ln.zero_grad();
+        let dx = ln.backward(&y.clone(), Precision::Fp32); // loss = sum(y²)/2
+
+        let eps = 1e-3f32;
+        let loss = |ln: &mut LayerNorm, x: &Tensor| -> f32 {
+            ln.forward(x, Precision::Fp32).data.iter().map(|v| v * v / 2.0).sum()
+        };
+        let mut x2 = x.clone();
+        for idx in [0usize, 3, 7, 11] {
+            let orig = x2.data[idx];
+            x2.data[idx] = orig + eps;
+            let lp = loss(&mut ln, &x2);
+            x2.data[idx] = orig - eps;
+            let lm = loss(&mut ln, &x2);
+            x2.data[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - dx.data[idx]).abs() < 2e-2 * (1.0 + num.abs()), "x[{idx}]");
+        }
+        // gamma grads
+        let _ = ln.forward(&x, Precision::Fp32);
+        for idx in [0usize, 2, 5] {
+            let orig = ln.gamma.w[idx];
+            ln.gamma.w[idx] = orig + eps;
+            let lp = loss(&mut ln, &x);
+            ln.gamma.w[idx] = orig - eps;
+            let lm = loss(&mut ln, &x);
+            ln.gamma.w[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - ln.gamma.g[idx]).abs() < 2e-2 * (1.0 + num.abs()), "g[{idx}]");
+        }
+    }
+
+    #[test]
+    fn fp16_variance_overflows_for_large_inputs() {
+        // pre-activation deviations of magnitude ~350: 350² = 122500 >
+        // 65504 → ∞, reproducing the failure the paper's weight-std fix
+        // addresses (§4.6).
+        let mut ln = LayerNorm::new("ln", 8);
+        let x = Tensor::from_vec(&[1, 8], (0..8).map(|i| 100.0 * i as f32).collect());
+        let y = ln.forward(&x, Precision::fp16());
+        assert!(y.has_nonfinite() || y.data.iter().all(|&v| v == 0.0), "y={:?}", y.data);
+    }
+
+    #[test]
+    fn fp16_is_fine_for_moderate_inputs() {
+        let mut rng = Pcg64::seed(3);
+        let mut ln = LayerNorm::new("ln", 16);
+        let x = Tensor::from_vec(&[2, 16], (0..32).map(|_| rng.normal_f32() * 5.0).collect());
+        let y = ln.forward(&x, Precision::fp16());
+        assert!(!y.has_nonfinite());
+    }
+}

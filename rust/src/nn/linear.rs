@@ -1,0 +1,283 @@
+//! Fully-connected layer with explicit backward and optional weight
+//! standardization (the paper's fix for layer-norm overflow in the pixel
+//! encoder, §4.6 / Appendix G).
+//!
+//! Layout follows PyTorch: `w` is `[out, in]`, `y = x wᵀ + b`.
+
+use super::param::Param;
+use super::tensor::{gemm_nt, gemm_tn, Tensor};
+use crate::lowp::Precision;
+use crate::rngs::Pcg64;
+
+/// A linear layer `y = x Ŵᵀ + b`, where `Ŵ = w` normally, or the
+/// row-standardized weights when `weight_std` is on.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub w: Param,
+    pub b: Param,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    /// Weight standardization (Qiao et al., 2019): each output row of `w`
+    /// is normalized to zero mean / unit std before use. Combined with
+    /// layer-norm's rescaling invariance this prevents the fp16 overflow
+    /// the paper saw in the encoder head.
+    pub weight_std: bool,
+    // forward cache
+    x_cache: Tensor,
+    what_cache: Vec<f32>, // standardized weights used in forward
+    row_std: Vec<f32>,    // per-row 1/std used by backward
+    row_mean: Vec<f32>,
+}
+
+impl Linear {
+    pub fn new(name: &str, in_dim: usize, out_dim: usize, rng: &mut Pcg64) -> Self {
+        let mut w = Param::new(format!("{name}.w"), &[out_dim, in_dim]);
+        w.w = super::init::orthogonal_init(rng, out_dim, in_dim, 1.0);
+        let b = Param::new(format!("{name}.b"), &[out_dim]);
+        Linear {
+            w,
+            b,
+            in_dim,
+            out_dim,
+            weight_std: false,
+            x_cache: Tensor::zeros(&[0]),
+            what_cache: Vec::new(),
+            row_std: Vec::new(),
+            row_mean: Vec::new(),
+        }
+    }
+
+    pub fn with_weight_std(mut self) -> Self {
+        self.weight_std = true;
+        self
+    }
+
+    /// Effective weights: standardized if `weight_std`, raw otherwise.
+    /// Standardization arithmetic is done in the compute precision.
+    fn effective_weights(&mut self, prec: Precision) -> &[f32] {
+        if !self.weight_std {
+            return &self.w.w;
+        }
+        let (o, i) = (self.out_dim, self.in_dim);
+        self.what_cache.resize(o * i, 0.0);
+        self.row_std.resize(o, 0.0);
+        self.row_mean.resize(o, 0.0);
+        for r in 0..o {
+            let row = &self.w.w[r * i..(r + 1) * i];
+            let mean = prec.q(row.iter().sum::<f32>() / i as f32);
+            let var = prec.q(
+                row.iter().map(|&v| prec.q((v - mean) * (v - mean))).sum::<f32>() / i as f32,
+            );
+            let std = prec.q((var + 1e-5).sqrt());
+            let inv = prec.q(1.0 / std);
+            self.row_mean[r] = mean;
+            self.row_std[r] = inv;
+            for c in 0..i {
+                self.what_cache[r * i + c] = prec.q((row[c] - mean) * inv);
+            }
+        }
+        &self.what_cache
+    }
+
+    /// Forward: `y = x Ŵᵀ + b`, output quantized into `prec`.
+    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
+        assert_eq!(x.cols(), self.in_dim, "{}: bad input dim", self.w.name);
+        let bsz = x.rows();
+        self.x_cache = x.clone();
+        let mut y = Tensor::zeros(&[bsz, self.out_dim]);
+        {
+            let weff = if self.weight_std {
+                self.effective_weights(prec).to_vec()
+            } else {
+                self.w.w.clone()
+            };
+            gemm_nt(&x.data, &weff, &mut y.data, bsz, self.in_dim, self.out_dim);
+        }
+        for r in 0..bsz {
+            let row = y.row_mut(r);
+            for (o, v) in row.iter_mut().enumerate() {
+                *v += self.b.w[o];
+            }
+        }
+        y.quantize(prec);
+        y
+    }
+
+    /// Backward: consumes `dy`, accumulates `dw`/`db`, returns `dx`.
+    /// Gradients are quantized into `prec` (tensor-level), matching the
+    /// all-fp16 training regime of the paper.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+        let bsz = dy.rows();
+        assert_eq!(dy.cols(), self.out_dim);
+        assert_eq!(self.x_cache.rows(), bsz, "forward cache missing");
+        let (o, i) = (self.out_dim, self.in_dim);
+
+        // db = sum_b dy
+        for r in 0..bsz {
+            let row = dy.row(r);
+            for c in 0..o {
+                self.b.g[c] += row[c];
+            }
+        }
+        prec.q_slice(&mut self.b.g);
+
+        // dŴ = dyᵀ x  (into a temp if standardized, else straight in)
+        let mut dwhat = vec![0.0f32; o * i];
+        gemm_tn(&dy.data, &self.x_cache.data, &mut dwhat, o, bsz, i);
+        prec.q_slice(&mut dwhat);
+
+        if self.weight_std {
+            // chain rule through Ŵ = (w - μ_r) * inv_r, per output row.
+            // dμ and d(inv) terms: dW = inv * (dŴ - mean(dŴ) - Ŵ * mean(dŴ ⊙ Ŵ))
+            for r in 0..o {
+                let inv = self.row_std[r];
+                let what = &self.what_cache[r * i..(r + 1) * i];
+                let dwr = &dwhat[r * i..(r + 1) * i];
+                let mean_d = prec.q(dwr.iter().sum::<f32>() / i as f32);
+                let mean_dw = prec.q(
+                    dwr.iter().zip(what).map(|(&d, &h)| prec.q(d * h)).sum::<f32>() / i as f32,
+                );
+                for c in 0..i {
+                    let d = prec.q(prec.q(dwr[c] - mean_d) - prec.q(what[c] * mean_dw));
+                    self.w.g[r * i + c] += prec.q(inv * d);
+                }
+            }
+        } else {
+            for (gacc, d) in self.w.g.iter_mut().zip(&dwhat) {
+                *gacc += d;
+            }
+        }
+        prec.q_slice(&mut self.w.g);
+
+        // dx = dy Ŵ
+        let mut dx = Tensor::zeros(&[bsz, i]);
+        {
+            let weff = if self.weight_std { &self.what_cache[..] } else { &self.w.w[..] };
+            // dx[b,i] = Σ_o dy[b,o] Ŵ[o,i]  — this is gemm notrans with Ŵ as [o,i]
+            super::tensor::gemm(&dy.data, weff, &mut dx.data, bsz, o, i);
+        }
+        dx.quantize(prec);
+        dx
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        vec![&mut self.w, &mut self.b]
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.w.zero_grad();
+        self.b.zero_grad();
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.w.len() + self.b.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::Precision;
+    use crate::rngs::Pcg64;
+
+    /// Finite-difference check of the full layer gradient in fp32.
+    #[test]
+    fn gradcheck_fp32() {
+        let mut rng = Pcg64::seed(1);
+        let mut lin = Linear::new("t", 5, 3, &mut rng);
+        let x = Tensor::from_vec(&[2, 5], (0..10).map(|_| rng.normal_f32()).collect());
+        let prec = Precision::Fp32;
+
+        // loss = sum(y²)/2 ; dy = y
+        let y = lin.forward(&x, prec);
+        let dy = y.clone();
+        lin.zero_grad();
+        let dx = lin.backward(&dy, prec);
+
+        let eps = 1e-3f32;
+        // check dw on a few entries
+        for &idx in &[0usize, 3, 7, 14] {
+            let orig = lin.w.w[idx];
+            lin.w.w[idx] = orig + eps;
+            let yp = lin.forward(&x, prec);
+            lin.w.w[idx] = orig - eps;
+            let ym = lin.forward(&x, prec);
+            lin.w.w[idx] = orig;
+            let lp: f32 = yp.data.iter().map(|v| v * v / 2.0).sum();
+            let lm: f32 = ym.data.iter().map(|v| v * v / 2.0).sum();
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = lin.w.g[idx];
+            assert!((num - ana).abs() < 2e-2 * (1.0 + num.abs()), "w[{idx}]: {num} vs {ana}");
+        }
+        // check dx entries
+        let mut x2 = x.clone();
+        for &idx in &[0usize, 4, 9] {
+            let orig = x2.data[idx];
+            x2.data[idx] = orig + eps;
+            let lp: f32 = lin.forward(&x2, prec).data.iter().map(|v| v * v / 2.0).sum();
+            x2.data[idx] = orig - eps;
+            let lm: f32 = lin.forward(&x2, prec).data.iter().map(|v| v * v / 2.0).sum();
+            x2.data[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - dx.data[idx]).abs() < 2e-2 * (1.0 + num.abs()));
+        }
+        // re-run forward to restore cache consistency (hygiene)
+        let _ = lin.forward(&x, prec);
+    }
+
+    #[test]
+    fn gradcheck_weight_std() {
+        let mut rng = Pcg64::seed(2);
+        let mut lin = Linear::new("t", 6, 4, &mut rng).with_weight_std();
+        let x = Tensor::from_vec(&[3, 6], (0..18).map(|_| rng.normal_f32()).collect());
+        let prec = Precision::Fp32;
+        let y = lin.forward(&x, prec);
+        lin.zero_grad();
+        let _ = lin.backward(&y.clone(), prec);
+
+        let eps = 1e-3f32;
+        for &idx in &[0usize, 5, 11, 23] {
+            let orig = lin.w.w[idx];
+            lin.w.w[idx] = orig + eps;
+            let lp: f32 = lin.forward(&x, prec).data.iter().map(|v| v * v / 2.0).sum();
+            lin.w.w[idx] = orig - eps;
+            let lm: f32 = lin.forward(&x, prec).data.iter().map(|v| v * v / 2.0).sum();
+            lin.w.w[idx] = orig;
+            let num = (lp - lm) / (2.0 * eps);
+            let ana = lin.w.g[idx];
+            assert!(
+                (num - ana).abs() < 3e-2 * (1.0 + num.abs()),
+                "w[{idx}]: num={num} ana={ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn weight_std_rows_are_standardized() {
+        let mut rng = Pcg64::seed(3);
+        let mut lin = Linear::new("t", 64, 4, &mut rng).with_weight_std();
+        // blow up one row; standardization must tame it
+        for v in lin.w.w[0..64].iter_mut() {
+            *v *= 1000.0;
+        }
+        let w = lin.effective_weights(Precision::Fp32).to_vec();
+        for r in 0..4 {
+            let row = &w[r * 64..(r + 1) * 64];
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4, "row {r} mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "row {r} var {var}");
+        }
+    }
+
+    #[test]
+    fn fp16_forward_quantizes_output() {
+        let mut rng = Pcg64::seed(4);
+        let mut lin = Linear::new("t", 8, 8, &mut rng);
+        let x = Tensor::from_vec(&[1, 8], (0..8).map(|_| rng.normal_f32()).collect());
+        let y = lin.forward(&x, Precision::fp16());
+        for &v in &y.data {
+            assert!(crate::lowp::FP16.is_representable(v));
+        }
+    }
+}

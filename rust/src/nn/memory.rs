@@ -1,0 +1,137 @@
+//! Memory accounting for the paper's Table 3 / Table 11.
+//!
+//! The V100 measurements in the paper count peak CUDA bytes; here we model
+//! the same quantities analytically from the layer dimensions: parameter
+//! storage, gradient storage, optimizer state (Adam m/w, Kahan
+//! compensation buffers), and activation storage for a training step at a
+//! given batch size. Under fp16 every tensor halves; Kahan adds one
+//! model-sized buffer per compensated quantity, which is what makes the
+//! paper's improvement ≈1.87× instead of 2×.
+
+/// Memory model of one training step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryModel {
+    /// Total learnable parameters across actor+critic+target (elements).
+    pub params: usize,
+    /// Activation elements stored for backward at batch size 1.
+    pub activations_per_sample: usize,
+    /// Number of parameter elements carrying Kahan compensation
+    /// (critic + α under the paper's method 6, plus target-net momentum
+    /// compensation under method 4).
+    pub kahan_elems: usize,
+}
+
+impl MemoryModel {
+    /// Peak training bytes under a storage width (4 = fp32, 2 = fp16).
+    ///
+    /// params + grads + Adam(m, w) + Kahan compensation + activations.
+    pub fn training_bytes(&self, batch: usize, bytes_per_elem: usize) -> usize {
+        let param_like = self.params       // parameters
+            + self.params                  // gradients
+            + 2 * self.params              // Adam m and v/w
+            + self.kahan_elems;            // compensation buffers
+        let act = self.activations_per_sample * batch;
+        (param_like + act) * bytes_per_elem
+    }
+
+    /// The fp32-over-fp16 improvement factor the paper's Table 3 reports.
+    /// The fp32 baseline carries no Kahan buffers; the fp16 run carries
+    /// them when `kahan_in_fp16` (the paper's full method).
+    pub fn improvement(&self, batch: usize, kahan_in_fp16: bool) -> f64 {
+        let fp32_model = MemoryModel { kahan_elems: 0, ..*self };
+        let m16 = if kahan_in_fp16 { *self } else { fp32_model };
+        fp32_model.training_bytes(batch, 4) as f64 / m16.training_bytes(batch, 2) as f64
+    }
+}
+
+/// Build the memory model for the paper's state-based SAC at a hidden
+/// width (Table 10/11 sweep widths 1024/4096).
+pub fn states_model(obs_dim: usize, act_dim: usize, hidden: usize) -> MemoryModel {
+    // actor: obs -> h -> h -> 2*act ; critic: 2 x (obs+act -> h -> h -> 1)
+    let actor = (obs_dim * hidden + hidden)
+        + (hidden * hidden + hidden)
+        + (hidden * 2 * act_dim + 2 * act_dim);
+    let qin = obs_dim + act_dim;
+    let critic1 = (qin * hidden + hidden) + (hidden * hidden + hidden) + (hidden + 1);
+    let critic = 2 * critic1;
+    let target = critic;
+    let params = actor + critic + target;
+    // activations per sample: the hidden vectors kept for backward
+    let actor_act = hidden * 2 + 2 * act_dim + obs_dim;
+    let critic_act = 2 * (hidden * 2 + 1 + qin);
+    MemoryModel {
+        params,
+        activations_per_sample: actor_act + critic_act,
+        // Kahan on critic params (method 6) + target momentum comp (method 4)
+        kahan_elems: critic + target,
+    }
+}
+
+/// Memory model for the pixel encoder + SAC heads (Table 3 sweep:
+/// `filters` ∈ {32, 64}).
+pub fn pixels_model(img: usize, frames: usize, filters: usize, feature_dim: usize, hidden: usize, act_dim: usize) -> MemoryModel {
+    // encoder: conv(frames->f, s2) + 3x conv(f->f, s1) + linear(flat->feat) + LN
+    let mut h = (img - 3) / 2 + 1;
+    let conv1 = frames * 9 * filters + filters;
+    let mut convs = conv1;
+    let mut acts = frames * img * img + filters * h * h;
+    for _ in 0..3 {
+        convs += filters * filters * 9 + filters;
+        h -= 2;
+        acts += filters * h * h;
+    }
+    let flat = filters * h * h;
+    let head = flat * feature_dim + feature_dim + 2 * feature_dim; // linear + LN affine
+    let enc = convs + head;
+    acts += feature_dim * 3;
+    let m = states_model(feature_dim, act_dim, hidden);
+    MemoryModel {
+        params: m.params + 2 * enc, // encoder shared by actor/critic + target copy
+        activations_per_sample: m.activations_per_sample + acts,
+        kahan_elems: m.kahan_elems + 2 * enc,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_roughly_halves_memory() {
+        let m = states_model(17, 6, 1024);
+        let imp = m.improvement(1024, true);
+        // paper Table 11: 1.53–1.73x (Kahan comp buffers cost something)
+        assert!(imp > 1.4 && imp < 2.0, "imp={imp}");
+    }
+
+    #[test]
+    fn no_kahan_gives_exactly_two_x() {
+        let mut m = states_model(17, 6, 1024);
+        m.kahan_elems = 0;
+        let imp = m.improvement(1024, true);
+        assert!((imp - 2.0).abs() < 1e-9, "imp={imp}");
+    }
+
+    #[test]
+    fn activations_scale_with_batch() {
+        let m = states_model(17, 6, 256);
+        let b1 = m.training_bytes(1, 4);
+        let b2 = m.training_bytes(1025, 4);
+        assert!(b2 > b1 + 1024 * m.activations_per_sample * 4 - 1);
+    }
+
+    #[test]
+    fn pixels_model_bigger_than_states() {
+        let s = states_model(50, 6, 1024);
+        let p = pixels_model(84, 9, 32, 50, 1024, 6);
+        assert!(p.params > s.params);
+        assert!(p.activations_per_sample > s.activations_per_sample);
+    }
+
+    #[test]
+    fn wider_filters_cost_more() {
+        let a = pixels_model(84, 9, 32, 50, 1024, 6);
+        let b = pixels_model(84, 9, 64, 50, 1024, 6);
+        assert!(b.training_bytes(512, 2) > a.training_bytes(512, 2));
+    }
+}

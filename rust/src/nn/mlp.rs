@@ -1,0 +1,149 @@
+//! Multi-layer perceptron trunk: `Linear → ReLU → ... → Linear`.
+//!
+//! The SAC actor and critic of Yarats & Kostrikov (2020) are MLPs with
+//! hidden depth 2; the output layer is linear (no activation).
+
+use super::activations::{relu, relu_backward};
+use super::linear::Linear;
+use super::param::Param;
+use super::tensor::Tensor;
+use crate::lowp::Precision;
+use crate::rngs::Pcg64;
+
+/// An MLP with ReLU between layers and a linear head.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub layers: Vec<Linear>,
+    // pre-activation inputs cached per hidden layer for ReLU backward
+    pre_relu: Vec<Tensor>,
+}
+
+impl Mlp {
+    /// `dims = [in, h1, h2, ..., out]`.
+    pub fn new(name: &str, dims: &[usize], rng: &mut Pcg64) -> Self {
+        assert!(dims.len() >= 2);
+        let layers = (0..dims.len() - 1)
+            .map(|i| Linear::new(&format!("{name}.{i}"), dims[i], dims[i + 1], rng))
+            .collect();
+        Mlp { layers, pre_relu: Vec::new() }
+    }
+
+    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
+        self.pre_relu.clear();
+        let n = self.layers.len();
+        let mut h = x.clone();
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            let z = layer.forward(&h, prec);
+            if i + 1 < n {
+                self.pre_relu.push(z.clone());
+                h = relu(&z, prec);
+            } else {
+                h = z;
+            }
+        }
+        h
+    }
+
+    /// Backward from `dy` at the head; returns gradient w.r.t. the input.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+        let n = self.layers.len();
+        let mut g = dy.clone();
+        for i in (0..n).rev() {
+            g = self.layers[i].backward(&g, prec);
+            if i > 0 {
+                g = relu_backward(&g, &self.pre_relu[i - 1], prec);
+            }
+        }
+        g
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
+    }
+
+    pub fn zero_grad(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.zero_grad();
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum()
+    }
+
+    /// Quantize all parameters (entering a low-precision run).
+    pub fn quantize_params(&mut self, prec: Precision) {
+        for l in self.layers.iter_mut() {
+            l.w.quantize(prec);
+            l.b.quantize(prec);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_compose() {
+        let mut rng = Pcg64::seed(1);
+        let mut mlp = Mlp::new("m", &[10, 32, 32, 4], &mut rng);
+        let x = Tensor::from_vec(&[3, 10], (0..30).map(|_| rng.normal_f32()).collect());
+        let y = mlp.forward(&x, Precision::Fp32);
+        assert_eq!(y.shape, vec![3, 4]);
+        assert_eq!(mlp.n_params(), 10 * 32 + 32 + 32 * 32 + 32 + 32 * 4 + 4);
+    }
+
+    #[test]
+    fn gradcheck_through_two_hidden_layers() {
+        let mut rng = Pcg64::seed(2);
+        let mut mlp = Mlp::new("m", &[4, 8, 8, 2], &mut rng);
+        let x = Tensor::from_vec(&[2, 4], (0..8).map(|_| rng.normal_f32()).collect());
+        let prec = Precision::Fp32;
+        let y = mlp.forward(&x, prec);
+        mlp.zero_grad();
+        let dx = mlp.backward(&y.clone(), prec);
+
+        let eps = 1e-3f32;
+        let loss = |m: &mut Mlp, x: &Tensor| -> f32 {
+            m.forward(x, prec).data.iter().map(|v| v * v / 2.0).sum()
+        };
+        let mut x2 = x.clone();
+        for idx in 0..8 {
+            let o = x2.data[idx];
+            x2.data[idx] = o + eps;
+            let lp = loss(&mut mlp, &x2);
+            x2.data[idx] = o - eps;
+            let lm = loss(&mut mlp, &x2);
+            x2.data[idx] = o;
+            let num = (lp - lm) / (2.0 * eps);
+            assert!((num - dx.data[idx]).abs() < 2e-2 * (1.0 + num.abs()), "x[{idx}]");
+        }
+        // spot-check a weight in the middle layer
+        let _ = mlp.forward(&x, prec);
+        mlp.zero_grad();
+        let y2 = mlp.forward(&x, prec);
+        let _ = mlp.backward(&y2.clone(), prec);
+        let g = mlp.layers[1].w.g[5];
+        let orig = mlp.layers[1].w.w[5];
+        mlp.layers[1].w.w[5] = orig + eps;
+        let lp = loss(&mut mlp, &x);
+        mlp.layers[1].w.w[5] = orig - eps;
+        let lm = loss(&mut mlp, &x);
+        mlp.layers[1].w.w[5] = orig;
+        let num = (lp - lm) / (2.0 * eps);
+        assert!((num - g).abs() < 2e-2 * (1.0 + num.abs()), "{num} vs {g}");
+    }
+
+    #[test]
+    fn fp16_params_quantize() {
+        let mut rng = Pcg64::seed(3);
+        let mut mlp = Mlp::new("m", &[4, 8, 2], &mut rng);
+        mlp.quantize_params(Precision::fp16());
+        for l in &mlp.layers {
+            for &v in &l.w.w {
+                assert!(crate::lowp::FP16.is_representable(v));
+            }
+        }
+    }
+}

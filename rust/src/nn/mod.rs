@@ -1,0 +1,38 @@
+//! Native neural-network engine: tensors, layers with explicit
+//! forward/backward, all routed through a [`crate::lowp::Precision`]
+//! policy.
+//!
+//! ## Simulation semantics
+//!
+//! Quantization is applied at **tensor granularity**: an op computes in
+//! f32 and its *output tensor* is rounded into the target format. This is
+//! the same model as qtorch (which the paper uses for Figure 4) and as
+//! V100 fp16 hardware for GEMMs (tensor cores accumulate partial products
+//! in f32 and store fp16 results). Elementwise trouble spots the paper
+//! targets (squares in Adam and layer-norm, log-prob intermediates,
+//! EMA increments) are quantized at the granularity where the paper
+//! observed the failure — see the respective modules.
+//!
+//! The engine is deliberately dependency-free and deterministic; the same
+//! SAC computation is also AOT-lowered from JAX (L2) and the two are
+//! cross-validated in `rust/tests/artifact_parity.rs`.
+
+mod activations;
+mod conv;
+mod init;
+mod layernorm;
+mod linear;
+mod memory;
+mod mlp;
+mod param;
+mod tensor;
+
+pub use activations::{relu, relu_backward, tanh_backward, tanh_forward};
+pub use conv::Conv2d;
+pub use init::{orthogonal_init, uniform_fan_in};
+pub use layernorm::LayerNorm;
+pub use linear::Linear;
+pub use memory::{pixels_model, states_model, MemoryModel};
+pub use mlp::Mlp;
+pub use param::Param;
+pub use tensor::{gemm, gemm_nt, gemm_tn, Tensor};

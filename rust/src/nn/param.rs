@@ -1,0 +1,111 @@
+//! Learnable parameter storage.
+//!
+//! Every layer owns its parameters as [`Param`]s: a value buffer, a
+//! gradient accumulator, and a shape. Optimizers operate on a
+//! `Vec<&mut Param>` collected from a network (see [`crate::optim`]), so
+//! parameter layout stays local to the layers while optimizer state is
+//! keyed positionally.
+
+use crate::lowp::Precision;
+use crate::rngs::Pcg64;
+
+/// One learnable tensor: values + gradient accumulator.
+#[derive(Debug, Clone)]
+pub struct Param {
+    /// Human-readable name ("actor.trunk.0.w") for telemetry/checkpoints.
+    pub name: String,
+    /// Tensor shape (row-major).
+    pub shape: Vec<usize>,
+    /// Current values.
+    pub w: Vec<f32>,
+    /// Gradient accumulated by the last backward pass.
+    pub g: Vec<f32>,
+}
+
+impl Param {
+    pub fn new(name: impl Into<String>, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Param {
+            name: name.into(),
+            shape: shape.to_vec(),
+            w: vec![0.0; n],
+            g: vec![0.0; n],
+        }
+    }
+
+    /// Initialize from an explicit vector (used by tests / checkpoints).
+    pub fn from_values(name: impl Into<String>, shape: &[usize], w: Vec<f32>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, w.len());
+        Param { name: name.into(), shape: shape.to_vec(), g: vec![0.0; n], w }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.w.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.w.is_empty()
+    }
+
+    /// Zero the gradient accumulator.
+    pub fn zero_grad(&mut self) {
+        self.g.iter_mut().for_each(|v| *v = 0.0);
+    }
+
+    /// Quantize values into the given precision (used when entering a
+    /// low-precision run so the starting point is representable).
+    pub fn quantize(&mut self, prec: Precision) {
+        prec.q_slice(&mut self.w);
+    }
+
+    /// Fill with uniform values in [-bound, bound].
+    pub fn fill_uniform(&mut self, rng: &mut Pcg64, bound: f32) {
+        for v in self.w.iter_mut() {
+            *v = rng.uniform_in(-bound, bound);
+        }
+    }
+
+    /// True if values or grads contain NaN/Inf.
+    pub fn has_nonfinite_grad(&self) -> bool {
+        self.g.iter().any(|v| !v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_is_zeroed_with_shape() {
+        let p = Param::new("w", &[3, 4]);
+        assert_eq!(p.len(), 12);
+        assert!(p.w.iter().all(|&v| v == 0.0));
+        assert_eq!(p.shape, vec![3, 4]);
+    }
+
+    #[test]
+    fn zero_grad_clears() {
+        let mut p = Param::new("w", &[2]);
+        p.g = vec![1.0, 2.0];
+        p.zero_grad();
+        assert_eq!(p.g, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn quantize_rounds_values() {
+        let mut p = Param::from_values("w", &[2], vec![1.0, 1e-9]);
+        p.quantize(Precision::fp16());
+        assert_eq!(p.w, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn nonfinite_grad_detection() {
+        let mut p = Param::new("w", &[2]);
+        assert!(!p.has_nonfinite_grad());
+        p.g[1] = f32::INFINITY;
+        assert!(p.has_nonfinite_grad());
+    }
+}

@@ -1,0 +1,455 @@
+//! Adam and **hAdam** (paper §3, method 1, Algorithm 1), with optional
+//! **compound loss scaling** (method 5) and **Kahan-gradients**
+//! (method 6).
+//!
+//! The three axes are independent switches so the ablation of Figure 3
+//! can flip them one at a time:
+//!
+//! * [`SecondMoment::Variance`] — classic Adam: `v ← β₂v + (1-β₂)g²`.
+//!   In fp16 `g²` underflows for |g| ≲ 2.4e-4, which Figure 6 shows is
+//!   *most* gradients.
+//! * [`SecondMoment::Hypot`] — hAdam: store `w = √v`, update with the
+//!   numerically stable `hypot(√β₂·w, √(1-β₂)·g)`.
+//! * `compound`: gradients arrive pre-multiplied by the scale γ (from
+//!   scaling the loss); the Adam buffers *keep* the γ factor and the
+//!   update uses `m / (w + γε)`, so no unscale pass ever touches the
+//!   small gradients. (Plain loss scaling — the Figure 1 baseline — is
+//!   the same entry point with `compound = false`: grads are divided by
+//!   γ before entering Adam, re-introducing the underflow.)
+//! * `kahan_grads`: the parameter update `θ ← θ + Δθ` goes through
+//!   compensated summation with a persistent per-parameter compensation
+//!   buffer.
+
+use super::scaler::GradScaler;
+use crate::lowp::{hypot_stable, Precision};
+use crate::nn::Param;
+
+/// Hyperparameters (paper Table 4 defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { lr: 1e-4, beta1: 0.9, beta2: 0.999, eps: 1e-8 }
+    }
+}
+
+/// How the second moment is stored and updated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SecondMoment {
+    /// Classic Adam `v` buffer.
+    Variance,
+    /// hAdam `w = √v` buffer, updated via stable hypot (method 1).
+    Hypot,
+}
+
+/// How the final `θ += Δθ` is applied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// Plain addition in the working precision.
+    Plain,
+    /// Kahan-compensated addition (method 6).
+    Kahan,
+}
+
+/// Adam/hAdam over a fixed list of parameter tensors (state is keyed by
+/// position, so always pass the same `params_mut()` ordering).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    pub prec: Precision,
+    pub second: SecondMoment,
+    pub update: UpdateMode,
+    /// Compound scaling (method 5): buffers keep the γ factor.
+    pub compound: bool,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    w: Vec<Vec<f32>>, // v (Variance) or √v (Hypot)
+    comp: Vec<Vec<f32>>, // Kahan compensation (UpdateMode::Kahan)
+    /// Set when the last step was skipped due to non-finite gradients.
+    pub last_step_skipped: bool,
+}
+
+impl Adam {
+    pub fn new(
+        cfg: AdamConfig,
+        prec: Precision,
+        second: SecondMoment,
+        update: UpdateMode,
+        compound: bool,
+    ) -> Self {
+        Adam {
+            cfg,
+            prec,
+            second,
+            update,
+            compound,
+            t: 0,
+            m: Vec::new(),
+            w: Vec::new(),
+            comp: Vec::new(),
+            last_step_skipped: false,
+        }
+    }
+
+    /// The paper's full fp16 recipe: hAdam + compound scaling + Kahan.
+    pub fn ours_fp16(cfg: AdamConfig) -> Self {
+        Adam::new(cfg, Precision::fp16(), SecondMoment::Hypot, UpdateMode::Kahan, true)
+    }
+
+    /// fp32 reference Adam.
+    pub fn fp32(cfg: AdamConfig) -> Self {
+        Adam::new(cfg, Precision::Fp32, SecondMoment::Variance, UpdateMode::Plain, false)
+    }
+
+    fn ensure_state(&mut self, params: &[&mut Param]) {
+        if self.m.len() == params.len() {
+            return;
+        }
+        assert!(self.m.is_empty(), "parameter list changed size");
+        for p in params {
+            self.m.push(vec![0.0; p.len()]);
+            self.w.push(vec![0.0; p.len()]);
+            self.comp.push(if self.update == UpdateMode::Kahan {
+                vec![0.0; p.len()]
+            } else {
+                Vec::new()
+            });
+        }
+    }
+
+    /// Current step count (bias correction uses `t`).
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Optimizer-state memory in elements (for the memory tables).
+    pub fn state_elems(&self) -> usize {
+        self.m.iter().map(Vec::len).sum::<usize>()
+            + self.w.iter().map(Vec::len).sum::<usize>()
+            + self.comp.iter().map(Vec::len).sum::<usize>()
+    }
+
+    /// One optimizer step.
+    ///
+    /// `grads` in the params were accumulated from a loss that was
+    /// multiplied by `scaler.scale()` (1.0 when no scaling). With
+    /// `compound` the scale is *kept* in the buffers; otherwise gradients
+    /// are unscaled first (plain loss scaling — this division is where
+    /// the Figure 1 baseline re-underflows).
+    ///
+    /// If any gradient is non-finite the step is skipped and the scaler
+    /// backs off, exactly like `torch.cuda.amp`.
+    pub fn step(&mut self, params: &mut [&mut Param], scaler: &mut GradScaler) {
+        self.ensure_state(params);
+        let p = self.prec;
+        let gamma = scaler.scale();
+
+        // amp-style skip on non-finite grads
+        let nonfinite = params.iter().any(|q| q.has_nonfinite_grad());
+        scaler.update(nonfinite);
+        if nonfinite {
+            self.last_step_skipped = true;
+            return;
+        }
+        self.last_step_skipped = false;
+
+        self.t += 1;
+        // bias-correction factors, computed in f64 (scalar, free)
+        let bc1 = 1.0 - (self.cfg.beta1 as f64).powi(self.t as i32);
+        let bc2 = (1.0 - (self.cfg.beta2 as f64).powi(self.t as i32)).sqrt();
+        let inv_bc1 = p.q(1.0 / bc1 as f32);
+        let inv_bc2 = p.q(1.0 / bc2 as f32);
+        let sb2 = p.q(self.cfg.beta2.sqrt());
+        let s1mb2 = p.q((1.0 - self.cfg.beta2).sqrt());
+        let b1 = self.cfg.beta1;
+        let one_m_b1 = p.q(1.0 - b1);
+        // effective epsilon: compound keeps γ in numerator and
+        // denominator, so ε must be scaled by γ to preserve semantics.
+        let eps_eff = if self.compound { p.q(self.cfg.eps * gamma) } else { self.cfg.eps };
+
+        for (idx, param) in params.iter_mut().enumerate() {
+            let m = &mut self.m[idx];
+            let w = &mut self.w[idx];
+            let fmt = p;
+            for i in 0..param.len() {
+                // gradient as Adam sees it
+                let g = if self.compound || gamma == 1.0 {
+                    param.g[i] // keep the γ factor (compound) or unscaled
+                } else {
+                    fmt.q(param.g[i] / gamma) // plain loss scaling unscale
+                };
+                // first moment
+                m[i] = fmt.q(b1 * m[i] + one_m_b1 * g);
+                // second moment
+                match self.second {
+                    SecondMoment::Variance => {
+                        let g2 = fmt.q(g * g);
+                        w[i] = fmt.q(self.cfg.beta2 * w[i] + fmt.q((1.0 - self.cfg.beta2) * g2));
+                    }
+                    SecondMoment::Hypot => {
+                        let a = fmt.q(sb2 * w[i]);
+                        let b = fmt.q(s1mb2 * g);
+                        w[i] = match p {
+                            Precision::Fp32 => (a as f64).hypot(b as f64) as f32,
+                            Precision::Sim { fmt: f, .. } => hypot_stable(a, b, f),
+                        };
+                    }
+                }
+                // bias-corrected update
+                let mhat = fmt.q(m[i] * inv_bc1);
+                let denom = match self.second {
+                    SecondMoment::Variance => {
+                        let vhat = fmt.q(w[i] * fmt.q(inv_bc2 * inv_bc2));
+                        fmt.q(fmt.q(vhat.sqrt()) + eps_eff)
+                    }
+                    SecondMoment::Hypot => fmt.q(fmt.q(w[i] * inv_bc2) + eps_eff),
+                };
+                let delta = fmt.q(-self.cfg.lr * fmt.q(mhat / denom));
+                // apply
+                match self.update {
+                    UpdateMode::Plain => {
+                        param.w[i] = fmt.q(param.w[i] + delta);
+                    }
+                    UpdateMode::Kahan => {
+                        let c = &mut self.comp[idx][i];
+                        let y = fmt.q(delta - *c);
+                        let t = fmt.q(param.w[i] + y);
+                        *c = fmt.q(fmt.q(t - param.w[i]) - y);
+                        param.w[i] = t;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::FP16;
+    use crate::optim::ScalerConfig;
+    use crate::rngs::Pcg64;
+
+    fn quad_grad(p: &mut Param, target: &[f32]) {
+        // loss = 0.5*||w - target||²  -> g = w - target
+        for i in 0..p.len() {
+            p.g[i] = p.w[i] - target[i];
+        }
+    }
+
+    #[test]
+    fn fp32_adam_converges_on_quadratic() {
+        let mut p = Param::from_values("w", &[4], vec![5.0, -3.0, 2.0, 0.0]);
+        let target = vec![1.0, 1.0, -1.0, 0.5];
+        let mut opt = Adam::fp32(AdamConfig { lr: 0.05, ..Default::default() });
+        let mut sc = GradScaler::disabled();
+        for _ in 0..2000 {
+            quad_grad(&mut p, &target);
+            opt.step(&mut [&mut p], &mut sc);
+        }
+        for i in 0..4 {
+            assert!((p.w[i] - target[i]).abs() < 1e-2, "w[{i}]={}", p.w[i]);
+        }
+    }
+
+    #[test]
+    fn hadam_equals_adam_in_fp32() {
+        // Statement 1 of the paper: in high precision the two coincide.
+        let init = vec![2.0f32, -1.0, 0.3];
+        let target = vec![0.0f32, 0.0, 0.0];
+        let mut pa = Param::from_values("a", &[3], init.clone());
+        let mut pb = Param::from_values("b", &[3], init);
+        let cfg = AdamConfig { lr: 0.01, ..Default::default() };
+        let mut adam = Adam::fp32(cfg);
+        let mut hadam = Adam::new(cfg, Precision::Fp32, SecondMoment::Hypot, UpdateMode::Plain, false);
+        let mut sc1 = GradScaler::disabled();
+        let mut sc2 = GradScaler::disabled();
+        for _ in 0..500 {
+            quad_grad(&mut pa, &target);
+            quad_grad(&mut pb, &target);
+            adam.step(&mut [&mut pa], &mut sc1);
+            hadam.step(&mut [&mut pb], &mut sc2);
+            for i in 0..3 {
+                assert!((pa.w[i] - pb.w[i]).abs() < 1e-5, "{} vs {}", pa.w[i], pb.w[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn kahan_equals_plain_in_fp32() {
+        let init = vec![1.0f32; 8];
+        let mut pa = Param::from_values("a", &[8], init.clone());
+        let mut pb = Param::from_values("b", &[8], init);
+        let cfg = AdamConfig { lr: 0.003, ..Default::default() };
+        let mut plain = Adam::fp32(cfg);
+        let mut kahan = Adam::new(cfg, Precision::Fp32, SecondMoment::Variance, UpdateMode::Kahan, false);
+        let (mut s1, mut s2) = (GradScaler::disabled(), GradScaler::disabled());
+        let t = vec![0.0f32; 8];
+        for _ in 0..200 {
+            quad_grad(&mut pa, &t);
+            quad_grad(&mut pb, &t);
+            plain.step(&mut [&mut pa], &mut s1);
+            kahan.step(&mut [&mut pb], &mut s2);
+        }
+        for i in 0..8 {
+            assert!((pa.w[i] - pb.w[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn naive_fp16_adam_stalls_on_tiny_gradients() {
+        // gradients of 1e-5 are representable in fp16 but g² = 1e-10
+        // underflows, so naive fp16 Adam's denominator is ~ε and the
+        // update explodes relative to hAdam's well-scaled one; worse, m
+        // underflows too once (1-β₁)g < 2⁻²⁴. Construct the regime the
+        // paper describes: v underflows, hAdam doesn't.
+        let cfg = AdamConfig { lr: 1e-4, ..Default::default() };
+        let prec = Precision::fp16();
+        let mut naive = Adam::new(cfg, prec, SecondMoment::Variance, UpdateMode::Plain, false);
+        let mut ours = Adam::new(cfg, prec, SecondMoment::Hypot, UpdateMode::Plain, false);
+        let mut pa = Param::from_values("a", &[1], vec![1.0]);
+        let mut pb = Param::from_values("b", &[1], vec![1.0]);
+        let (mut s1, mut s2) = (GradScaler::disabled(), GradScaler::disabled());
+        for _ in 0..100 {
+            pa.g[0] = 1e-5;
+            pb.g[0] = 1e-5;
+            naive.step(&mut [&mut pa], &mut s1);
+            ours.step(&mut [&mut pb], &mut s2);
+        }
+        // v underflowed to 0 for naive -> w buffer stayed 0
+        assert_eq!(naive.w[0][0], 0.0, "naive v should underflow");
+        assert!(ours.w[0][0] > 0.0, "hAdam w must track √v");
+    }
+
+    #[test]
+    fn hadam_fp16_matches_fp32_adam_trajectory_closely() {
+        // with the full recipe (hAdam + compound + Kahan) an fp16 run of a
+        // smooth quadratic should track fp32 Adam to ~1e-2.
+        let init: Vec<f32> = vec![2.0, -2.0, 0.7, 1.3];
+        let target = vec![0.1f32, -0.4, 0.0, 0.9];
+        let cfg = AdamConfig { lr: 0.01, ..Default::default() };
+        let mut ref32 = Adam::fp32(cfg);
+        let mut ours = Adam::ours_fp16(cfg);
+        let mut pa = Param::from_values("a", &[4], init.clone());
+        let mut pb = Param::from_values("b", &[4], init);
+        pb.quantize(Precision::fp16());
+        let mut s1 = GradScaler::disabled();
+        let mut s2 = GradScaler::new(ScalerConfig::paper());
+        for _ in 0..1500 {
+            quad_grad(&mut pa, &target);
+            quad_grad(&mut pb, &target);
+            // fp16 grads are scaled by γ (loss scaling happens at the loss)
+            let g = s2.scale();
+            for v in pb.g.iter_mut() {
+                *v = FP16.quantize(*v * g);
+            }
+            ref32.step(&mut [&mut pa], &mut s1);
+            ours.step(&mut [&mut pb], &mut s2);
+        }
+        for i in 0..4 {
+            assert!(
+                (pa.w[i] - pb.w[i]).abs() < 3e-2,
+                "i={i}: fp32={} fp16={}",
+                pa.w[i],
+                pb.w[i]
+            );
+        }
+    }
+
+    #[test]
+    fn skips_step_on_nonfinite_and_backs_off_scale() {
+        let cfg = AdamConfig::default();
+        let mut opt = Adam::ours_fp16(cfg);
+        let mut sc = GradScaler::new(ScalerConfig::paper());
+        let s0 = sc.scale();
+        let mut p = Param::from_values("a", &[2], vec![1.0, 1.0]);
+        p.g = vec![f32::INFINITY, 0.0];
+        let w_before = p.w.clone();
+        opt.step(&mut [&mut p], &mut sc);
+        assert!(opt.last_step_skipped);
+        assert_eq!(p.w, w_before);
+        assert_eq!(sc.scale(), s0 / 2.0);
+        assert_eq!(opt.steps(), 0);
+    }
+
+    #[test]
+    fn compound_scaling_preserves_adam_semantics_in_fp32() {
+        // γ-scaled grads + compound update must equal unscaled Adam
+        // exactly in fp32 (paper Appendix C).
+        let cfg = AdamConfig { lr: 0.02, ..Default::default() };
+        let mut plain = Adam::fp32(cfg);
+        let mut comp = Adam::new(cfg, Precision::Fp32, SecondMoment::Variance, UpdateMode::Plain, true);
+        let mut pa = Param::from_values("a", &[3], vec![1.0, 2.0, 3.0]);
+        let mut pb = Param::from_values("b", &[3], vec![1.0, 2.0, 3.0]);
+        let mut s1 = GradScaler::disabled();
+        let mut s2 = GradScaler::fixed(1024.0);
+        let t = vec![0.0f32; 3];
+        let mut rng = Pcg64::seed(1);
+        for _ in 0..100 {
+            quad_grad(&mut pa, &t);
+            quad_grad(&mut pb, &t);
+            let noise: Vec<f32> = (0..3).map(|_| rng.normal_f32() * 0.01).collect();
+            for i in 0..3 {
+                pa.g[i] += noise[i];
+                pb.g[i] = (pb.g[i] + noise[i]) * 1024.0;
+            }
+            plain.step(&mut [&mut pa], &mut s1);
+            comp.step(&mut [&mut pb], &mut s2);
+            for i in 0..3 {
+                let d = (pa.w[i] - pb.w[i]).abs();
+                assert!(d < 1e-4, "i={i} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn compound_scaling_saves_small_gradients_in_fp16() {
+        // g = 1e-8 underflows to 0 in fp16 (below half the smallest
+        // subnormal 2.98e-8) — the gradient is simply invisible to a bare
+        // fp16 optimizer. With compound scaling at γ=1e4 the loss (and so
+        // the gradient) is scaled before rounding: 1e-4 stays alive and
+        // the buffers keep the γ factor.
+        let cfg = AdamConfig { lr: 1e-3, ..Default::default() };
+        let prec = Precision::fp16();
+        let mut bare = Adam::new(cfg, prec, SecondMoment::Hypot, UpdateMode::Plain, false);
+        let mut comp = Adam::new(cfg, prec, SecondMoment::Hypot, UpdateMode::Plain, true);
+        let mut pa = Param::from_values("a", &[1], vec![1.0]);
+        let mut pb = Param::from_values("b", &[1], vec![1.0]);
+        let mut s1 = GradScaler::disabled();
+        let mut s2 = GradScaler::fixed(1e4);
+        for _ in 0..50 {
+            pa.g[0] = FP16.quantize(1e-8);
+            pb.g[0] = FP16.quantize(1e-8 * 1e4);
+            bare.step(&mut [&mut pa], &mut s1);
+            comp.step(&mut [&mut pb], &mut s2);
+        }
+        // The bare run either sees a zero gradient (no movement) or —
+        // even worse, and exactly what the paper warns about — divides
+        // 0/0 because Adam's ε=1e-8 itself underflows in fp16, yielding
+        // NaN parameters. Either way it makes no progress.
+        assert!(
+            pa.w[0] == 1.0 || pa.w[0].is_nan(),
+            "bare fp16 must fail, got {}",
+            pa.w[0]
+        );
+        assert!(pb.w[0] < 1.0, "compound-scaled run must make progress");
+        assert!(pb.w[0].is_finite());
+    }
+
+    #[test]
+    fn state_elems_counts_kahan_buffers() {
+        let cfg = AdamConfig::default();
+        let mut a = Adam::ours_fp16(cfg);
+        let mut sc = GradScaler::disabled();
+        let mut p = Param::from_values("a", &[10], vec![0.0; 10]);
+        p.g = vec![1e-3; 10];
+        a.step(&mut [&mut p], &mut sc);
+        assert_eq!(a.state_elems(), 30); // m + w + comp
+    }
+}

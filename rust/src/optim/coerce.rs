@@ -1,0 +1,39 @@
+//! Numeric coercion — the "coerc" baseline of the paper's Figure 1:
+//! NaN → 0, ±∞ → ± the format's largest finite value.
+
+/// Coerce non-finite values in place: NaN → 0, ±∞ → ±`max_value`.
+/// Returns the number of values touched (for telemetry).
+pub fn coerce_nonfinite(xs: &mut [f32], max_value: f32) -> usize {
+    let mut n = 0;
+    for v in xs.iter_mut() {
+        if v.is_nan() {
+            *v = 0.0;
+            n += 1;
+        } else if v.is_infinite() {
+            *v = max_value.copysign(*v);
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coerces_all_nonfinite() {
+        let mut xs = vec![1.0, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -2.0];
+        let n = coerce_nonfinite(&mut xs, 65504.0);
+        assert_eq!(n, 3);
+        assert_eq!(xs, vec![1.0, 0.0, 65504.0, -65504.0, -2.0]);
+    }
+
+    #[test]
+    fn finite_values_untouched() {
+        let mut xs = vec![0.0, -0.0, 1e-30, 3.4e38];
+        let n = coerce_nonfinite(&mut xs, 65504.0);
+        assert_eq!(n, 0);
+        assert_eq!(xs, vec![0.0, -0.0, 1e-30, 3.4e38]);
+    }
+}

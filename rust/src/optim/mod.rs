@@ -1,0 +1,19 @@
+//! Optimizers and numeric-stability machinery — the paper's methods
+//! **1 (hAdam)**, **4 (Kahan-momentum)**, **5 (compound loss scaling)**
+//! and **6 (Kahan-gradients)** live here, together with the
+//! supervised-learning baselines of Figure 1 (plain loss scaling, mixed
+//! precision, numeric coercion).
+//!
+//! All optimizer arithmetic is routed through a
+//! [`crate::lowp::Precision`] so the same code runs the fp32 reference,
+//! genuine fp16 state, and the Figure-4 e5mX sweep.
+
+mod adam;
+mod coerce;
+mod kahan_ema;
+mod scaler;
+
+pub use adam::{Adam, AdamConfig, SecondMoment, UpdateMode};
+pub use coerce::coerce_nonfinite;
+pub use kahan_ema::ScaledKahanEma;
+pub use scaler::{GradScaler, ScalerConfig};

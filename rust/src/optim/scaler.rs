@@ -1,0 +1,168 @@
+//! Dynamic gradient scaler — the PyTorch-amp schedule the paper follows
+//! (Appendix B): start at `init_scale`; on any non-finite gradient halve
+//! the scale and skip the step; after `growth_interval` consecutive clean
+//! steps double it.
+//!
+//! Used identically by (a) the plain loss-scaling baseline of Figure 1,
+//! (b) the mixed-precision baseline, and (c) the paper's compound loss
+//! scaling — the difference between them is what the *optimizer* does
+//! with the scaled gradients, not the schedule.
+
+/// Scaler schedule parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ScalerConfig {
+    pub init_scale: f32,
+    pub growth_interval: u64,
+    pub growth_factor: f32,
+    pub backoff_factor: f32,
+    pub max_scale: f32,
+}
+
+impl ScalerConfig {
+    /// The paper's settings (Table 5): init 1e4, growth interval 1e4.
+    pub fn paper() -> Self {
+        ScalerConfig {
+            init_scale: 1e4,
+            growth_interval: 10_000,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            max_scale: 1e8,
+        }
+    }
+
+    /// torch.cuda.amp defaults (Appendix E "amp" baseline): 2¹⁶ / 2000.
+    pub fn amp_default() -> Self {
+        ScalerConfig {
+            init_scale: 65536.0,
+            growth_interval: 2000,
+            growth_factor: 2.0,
+            backoff_factor: 0.5,
+            max_scale: 1e8,
+        }
+    }
+}
+
+/// Dynamic loss/gradient scaler.
+#[derive(Debug, Clone)]
+pub struct GradScaler {
+    scale: f32,
+    cfg: ScalerConfig,
+    good_steps: u64,
+    enabled: bool,
+    /// Number of skipped (non-finite) steps, for telemetry.
+    pub skipped: u64,
+}
+
+impl GradScaler {
+    pub fn new(cfg: ScalerConfig) -> Self {
+        GradScaler { scale: cfg.init_scale, cfg, good_steps: 0, enabled: true, skipped: 0 }
+    }
+
+    /// No scaling at all (fp32 runs): scale() == 1 and update() never
+    /// changes it.
+    pub fn disabled() -> Self {
+        let cfg = ScalerConfig { init_scale: 1.0, ..ScalerConfig::paper() };
+        GradScaler { scale: 1.0, cfg, good_steps: 0, enabled: false, skipped: 0 }
+    }
+
+    /// Fixed scale γ (no dynamics) — used by unit tests and the
+    /// Kahan-momentum buffer scale.
+    pub fn fixed(scale: f32) -> Self {
+        let cfg = ScalerConfig { init_scale: scale, ..ScalerConfig::paper() };
+        GradScaler { scale, cfg, good_steps: 0, enabled: false, skipped: 0 }
+    }
+
+    /// Current multiplier to apply to the loss (and hence gradients).
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Record the outcome of a step: `nonfinite = true` halves the scale;
+    /// enough consecutive clean steps double it.
+    pub fn update(&mut self, nonfinite: bool) {
+        if !self.enabled {
+            if nonfinite {
+                self.skipped += 1;
+            }
+            return;
+        }
+        if nonfinite {
+            self.scale = (self.scale * self.cfg.backoff_factor).max(1.0);
+            self.good_steps = 0;
+            self.skipped += 1;
+        } else {
+            self.good_steps += 1;
+            if self.good_steps >= self.cfg.growth_interval {
+                self.scale = (self.scale * self.cfg.growth_factor).min(self.cfg.max_scale);
+                self.good_steps = 0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_schedule_backs_off_and_recovers() {
+        let mut s = GradScaler::new(ScalerConfig::paper());
+        assert_eq!(s.scale(), 1e4);
+        s.update(true);
+        assert_eq!(s.scale(), 5e3);
+        assert_eq!(s.skipped, 1);
+        for _ in 0..10_000 {
+            s.update(false);
+        }
+        assert_eq!(s.scale(), 1e4);
+    }
+
+    #[test]
+    fn growth_counter_resets_on_backoff() {
+        let mut s = GradScaler::new(ScalerConfig { growth_interval: 10, ..ScalerConfig::paper() });
+        for _ in 0..9 {
+            s.update(false);
+        }
+        s.update(true); // resets the streak
+        for _ in 0..9 {
+            s.update(false);
+        }
+        assert_eq!(s.scale(), 5e3, "must not have grown yet");
+        s.update(false);
+        assert_eq!(s.scale(), 1e4);
+    }
+
+    #[test]
+    fn disabled_never_moves() {
+        let mut s = GradScaler::disabled();
+        s.update(true);
+        s.update(false);
+        assert_eq!(s.scale(), 1.0);
+        assert_eq!(s.skipped, 1);
+    }
+
+    #[test]
+    fn scale_floors_at_one_and_caps_at_max() {
+        let mut s = GradScaler::new(ScalerConfig {
+            init_scale: 2.0,
+            growth_interval: 1,
+            max_scale: 8.0,
+            ..ScalerConfig::paper()
+        });
+        for _ in 0..10 {
+            s.update(true);
+        }
+        assert_eq!(s.scale(), 1.0);
+        for _ in 0..10 {
+            s.update(false);
+        }
+        assert_eq!(s.scale(), 8.0);
+    }
+
+    #[test]
+    fn amp_defaults() {
+        let s = GradScaler::new(ScalerConfig::amp_default());
+        assert_eq!(s.scale(), 65536.0);
+    }
+}

@@ -1,0 +1,285 @@
+//! Replay buffer: fixed-capacity ring buffer over transitions, with
+//! optional fp16 storage (halving the dominant memory consumer, as the
+//! paper's Table 3 exploits) and DRQ-style random-crop augmentation for
+//! the pixel agent.
+
+use crate::lowp::format::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::nn::Tensor;
+use crate::rngs::Pcg64;
+use crate::sac::Batch;
+
+/// How observations/actions are stored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Storage {
+    F32,
+    /// IEEE binary16 words — bit-exact with fp16 hardware storage.
+    F16,
+}
+
+/// Internal storage vector that is either f32 or packed f16.
+#[derive(Debug, Clone)]
+enum Buf {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl Buf {
+    fn new(storage: Storage, n: usize) -> Self {
+        match storage {
+            Storage::F32 => Buf::F32(vec![0.0; n]),
+            Storage::F16 => Buf::F16(vec![0; n]),
+        }
+    }
+
+    #[inline]
+    fn write(&mut self, off: usize, src: &[f32]) {
+        match self {
+            Buf::F32(v) => v[off..off + src.len()].copy_from_slice(src),
+            Buf::F16(v) => {
+                for (d, &s) in v[off..off + src.len()].iter_mut().zip(src) {
+                    *d = f32_to_f16_bits(s);
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn read(&self, off: usize, dst: &mut [f32]) {
+        let n = dst.len();
+        match self {
+            Buf::F32(v) => dst.copy_from_slice(&v[off..off + n]),
+            Buf::F16(v) => {
+                for (d, &s) in dst.iter_mut().zip(&v[off..off + n]) {
+                    *d = f16_bits_to_f32(s);
+                }
+            }
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len() * 4,
+            Buf::F16(v) => v.len() * 2,
+        }
+    }
+}
+
+/// Ring-buffer replay over flat observations (states or flattened
+/// images).
+pub struct ReplayBuffer {
+    capacity: usize,
+    obs_dim: usize,
+    act_dim: usize,
+    obs: Buf,
+    next_obs: Buf,
+    act: Buf,
+    rew: Vec<f32>,
+    not_done: Vec<f32>,
+    len: usize,
+    head: usize,
+    /// Shape to give sampled observations (e.g. `[C, H, W]` for pixels;
+    /// `[obs_dim]` for states).
+    pub obs_shape: Vec<usize>,
+}
+
+impl ReplayBuffer {
+    pub fn new(capacity: usize, obs_shape: &[usize], act_dim: usize, storage: Storage) -> Self {
+        let obs_dim: usize = obs_shape.iter().product();
+        ReplayBuffer {
+            capacity,
+            obs_dim,
+            act_dim,
+            obs: Buf::new(storage, capacity * obs_dim),
+            next_obs: Buf::new(storage, capacity * obs_dim),
+            act: Buf::new(storage, capacity * act_dim),
+            rew: vec![0.0; capacity],
+            not_done: vec![0.0; capacity],
+            len: 0,
+            head: 0,
+            obs_shape: obs_shape.to_vec(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Total storage footprint in bytes (for the memory tables).
+    pub fn bytes(&self) -> usize {
+        self.obs.bytes() + self.next_obs.bytes() + self.act.bytes() + self.rew.len() * 4 + self.not_done.len() * 4
+    }
+
+    /// Append a transition (overwrites the oldest when full).
+    pub fn push(&mut self, obs: &[f32], act: &[f32], rew: f32, next_obs: &[f32], done: bool) {
+        assert_eq!(obs.len(), self.obs_dim);
+        assert_eq!(act.len(), self.act_dim);
+        let i = self.head;
+        self.obs.write(i * self.obs_dim, obs);
+        self.next_obs.write(i * self.obs_dim, next_obs);
+        self.act.write(i * self.act_dim, act);
+        self.rew[i] = rew;
+        self.not_done[i] = if done { 0.0 } else { 1.0 };
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+    }
+
+    /// Sample a uniform minibatch.
+    pub fn sample(&self, batch: usize, rng: &mut Pcg64) -> Batch {
+        assert!(self.len > 0, "empty replay");
+        let mut shape = vec![batch];
+        shape.extend_from_slice(&self.obs_shape);
+        let mut obs = Tensor::zeros(&shape);
+        let mut next_obs = Tensor::zeros(&shape);
+        let mut act = Tensor::zeros(&[batch, self.act_dim]);
+        let mut rew = vec![0.0; batch];
+        let mut not_done = vec![0.0; batch];
+        for b in 0..batch {
+            let i = rng.below(self.len);
+            self.obs.read(i * self.obs_dim, &mut obs.data[b * self.obs_dim..(b + 1) * self.obs_dim]);
+            self.next_obs.read(
+                i * self.obs_dim,
+                &mut next_obs.data[b * self.obs_dim..(b + 1) * self.obs_dim],
+            );
+            self.act.read(i * self.act_dim, &mut act.data[b * self.act_dim..(b + 1) * self.act_dim]);
+            rew[b] = self.rew[i];
+            not_done[b] = self.not_done[i];
+        }
+        Batch { obs, act, rew, next_obs, not_done }
+    }
+
+    /// Sample with DRQ random-crop augmentation (pad-by-4 + crop back):
+    /// requires pixel observations `[C, H, W]`.
+    pub fn sample_aug(&self, batch: usize, pad: usize, rng: &mut Pcg64) -> Batch {
+        let mut b = self.sample(batch, rng);
+        assert_eq!(self.obs_shape.len(), 3, "augmentation needs [C,H,W] obs");
+        let (c, h, w) = (self.obs_shape[0], self.obs_shape[1], self.obs_shape[2]);
+        for t in [&mut b.obs, &mut b.next_obs] {
+            for bi in 0..batch {
+                let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+                let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+                shift_image(&mut t.data[bi * c * h * w..(bi + 1) * c * h * w], c, h, w, dx, dy);
+            }
+        }
+        b
+    }
+}
+
+/// Shift an image by (dx, dy) with zero padding (equivalent to pad+crop).
+fn shift_image(img: &mut [f32], c: usize, h: usize, w: usize, dx: isize, dy: isize) {
+    if dx == 0 && dy == 0 {
+        return;
+    }
+    let orig = img.to_vec();
+    img.iter_mut().for_each(|v| *v = 0.0);
+    for ch in 0..c {
+        for y in 0..h as isize {
+            let sy = y - dy;
+            if sy < 0 || sy >= h as isize {
+                continue;
+            }
+            for x in 0..w as isize {
+                let sx = x - dx;
+                if sx < 0 || sx >= w as isize {
+                    continue;
+                }
+                img[ch * h * w + y as usize * w + x as usize] =
+                    orig[ch * h * w + sy as usize * w + sx as usize];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(buf: &mut ReplayBuffer, n: usize) {
+        for i in 0..n {
+            let v = i as f32;
+            buf.push(&[v, v + 0.5], &[0.1 * v], v, &[v + 1.0, v + 1.5], i % 10 == 9);
+        }
+    }
+
+    #[test]
+    fn push_and_sample_roundtrip_f32() {
+        let mut buf = ReplayBuffer::new(100, &[2], 1, Storage::F32);
+        fill(&mut buf, 50);
+        assert_eq!(buf.len(), 50);
+        let mut rng = Pcg64::seed(1);
+        let b = buf.sample(16, &mut rng);
+        assert_eq!(b.obs.shape, vec![16, 2]);
+        for r in 0..16 {
+            let o = b.obs.row(r)[0];
+            assert_eq!(b.obs.row(r)[1], o + 0.5);
+            assert_eq!(b.next_obs.row(r)[0], o + 1.0);
+            assert_eq!(b.rew[r], o);
+        }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let mut buf = ReplayBuffer::new(10, &[2], 1, Storage::F32);
+        fill(&mut buf, 25);
+        assert_eq!(buf.len(), 10);
+        let mut rng = Pcg64::seed(2);
+        let b = buf.sample(64, &mut rng);
+        // all samples must come from the last 10 pushes (indices 15..25)
+        for r in 0..64 {
+            assert!(b.rew[r] >= 15.0, "rew={}", b.rew[r]);
+        }
+    }
+
+    #[test]
+    fn f16_storage_halves_bytes_and_quantizes() {
+        let mut b32 = ReplayBuffer::new(100, &[4], 2, Storage::F32);
+        let mut b16 = ReplayBuffer::new(100, &[4], 2, Storage::F16);
+        assert!(b16.bytes() < b32.bytes());
+        let obs = [1.0f32, 1e-9, 3.14159, -2.5];
+        b16.push(&obs, &[0.5, -0.5], 1.0, &obs, false);
+        b32.push(&obs, &[0.5, -0.5], 1.0, &obs, false);
+        let mut rng = Pcg64::seed(3);
+        let s = b16.sample(1, &mut rng);
+        assert_eq!(s.obs.data[0], 1.0);
+        assert_eq!(s.obs.data[1], 0.0, "fp16 storage underflows tiny values");
+        assert!((s.obs.data[2] - 3.14159).abs() < 2e-3);
+    }
+
+    #[test]
+    fn shift_image_moves_pixels() {
+        let mut img = vec![0.0; 9];
+        img[4] = 1.0; // center of 3x3
+        shift_image(&mut img, 1, 3, 3, 1, 0);
+        assert_eq!(img[5], 1.0);
+        assert_eq!(img[4], 0.0);
+    }
+
+    #[test]
+    fn aug_sampling_preserves_shape_and_range() {
+        let mut buf = ReplayBuffer::new(20, &[1, 8, 8], 1, Storage::F16);
+        let img: Vec<f32> = (0..64).map(|i| i as f32 / 64.0).collect();
+        for _ in 0..10 {
+            buf.push(&img, &[0.0], 0.0, &img, false);
+        }
+        let mut rng = Pcg64::seed(4);
+        let b = buf.sample_aug(4, 2, &mut rng);
+        assert_eq!(b.obs.shape, vec![4, 1, 8, 8]);
+        assert!(b.obs.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn not_done_flag() {
+        let mut buf = ReplayBuffer::new(10, &[1], 1, Storage::F32);
+        buf.push(&[0.0], &[0.0], 0.0, &[0.0], true);
+        let mut rng = Pcg64::seed(5);
+        let b = buf.sample(4, &mut rng);
+        assert!(b.not_done.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,175 @@
+//! Parser for `artifacts/manifest.txt` — the line-based index emitted by
+//! `python/compile/aot.py` (grammar documented there).
+
+use std::collections::BTreeMap;
+
+/// One named tensor at an artifact boundary. All interface tensors are
+/// f32 by convention (f16 variants cast internally).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// An initial-state blob (raw little-endian f32, concatenated leaves).
+#[derive(Debug, Clone)]
+pub struct StateSpec {
+    pub variant: String,
+    pub file: String,
+    pub n_leaves: usize,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dims: BTreeMap<String, String>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub states: Vec<StateSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest, String> {
+        let mut m = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = |msg: &str| format!("manifest line {}: {msg}: {line}", lineno + 1);
+            match toks[0] {
+                "dims" => {
+                    for t in &toks[1..] {
+                        if let Some((k, v)) = t.split_once('=') {
+                            m.dims.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                }
+                "artifact" => {
+                    if toks.len() != 3 {
+                        return Err(err("want `artifact <name> <file>`"));
+                    }
+                    m.artifacts.push(ArtifactSpec {
+                        name: toks[1].to_string(),
+                        file: toks[2].to_string(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "in" | "out" => {
+                    if toks.len() != 4 || toks[2] != "f32" {
+                        return Err(err("want `in|out <name> f32 <dims>`"));
+                    }
+                    let shape: Result<Vec<usize>, _> =
+                        toks[3].split('x').map(|d| d.parse::<usize>()).collect();
+                    let spec = TensorSpec {
+                        name: toks[1].to_string(),
+                        shape: shape.map_err(|_| err("bad shape"))?,
+                    };
+                    let art = m.artifacts.last_mut().ok_or_else(|| err("no artifact"))?;
+                    if toks[0] == "in" {
+                        art.inputs.push(spec);
+                    } else {
+                        art.outputs.push(spec);
+                    }
+                }
+                "state" => {
+                    if toks.len() != 4 {
+                        return Err(err("want `state <variant> <file> <n>`"));
+                    }
+                    m.states.push(StateSpec {
+                        variant: toks[1].to_string(),
+                        file: toks[2].to_string(),
+                        n_leaves: toks[3].parse().map_err(|_| err("bad count"))?,
+                    });
+                }
+                _ => return Err(err("unknown directive")),
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn state(&self, variant: &str) -> Option<&StateSpec> {
+        self.states.iter().find(|s| s.variant == variant)
+    }
+
+    /// Integer dim from the `dims` line.
+    pub fn dim(&self, key: &str) -> Option<usize> {
+        self.dims.get(key)?.parse().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+dims obs=3 act=1 hidden=64 batch=64 task=pendulum_swingup
+artifact train_fp32 train_fp32.hlo.txt
+in state.params.actor.l0.b f32 64
+in obs f32 64x3
+out state.params.actor.l0.b f32 64
+out metrics f32 4
+state fp32 state_fp32.bin 42
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.dim("obs"), Some(3));
+        assert_eq!(m.dims["task"], "pendulum_swingup");
+        let a = m.artifact("train_fp32").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].shape, vec![64, 3]);
+        assert_eq!(a.inputs[1].elems(), 192);
+        assert_eq!(a.outputs.len(), 2);
+        let s = m.state("fp32").unwrap();
+        assert_eq!(s.n_leaves, 42);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("artifact onlyname").is_err());
+        assert!(Manifest::parse("in x f32 3x3").is_err(), "tensor before artifact");
+        assert!(Manifest::parse("bogus 1 2").is_err());
+        assert!(Manifest::parse("artifact a f\nin x f64 3").is_err(), "non-f32");
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        // integration check against the actual aot.py output when built
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.txt");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            for v in ["fp32", "fp16_naive", "fp16_ours"] {
+                assert!(m.artifact(&format!("train_{v}")).is_some(), "{v}");
+                assert!(m.artifact(&format!("act_{v}")).is_some(), "{v}");
+                assert!(m.state(v).is_some(), "{v}");
+            }
+            let t = m.artifact("train_fp32").unwrap();
+            // outputs = state leaves + metrics
+            assert_eq!(t.outputs.len(), t.inputs.len() - 7 + 1);
+        }
+    }
+}

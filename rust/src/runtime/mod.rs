@@ -1,0 +1,10 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//! Python is never invoked at runtime — the Rust binary is self-contained
+//! once `make artifacts` has run.
+
+mod manifest;
+mod session;
+
+pub use manifest::{ArtifactSpec, Manifest, StateSpec, TensorSpec};
+pub use session::{Runtime, TrainSession};

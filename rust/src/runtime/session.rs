@@ -1,0 +1,229 @@
+//! PJRT session: compile HLO-text artifacts once, keep the training
+//! state resident as device buffers, and step entirely in Rust.
+
+use super::manifest::Manifest;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Artifact registry + PJRT client. Compilation is lazy and cached.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (must contain `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, exes: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact by manifest name.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let art = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with host literals (owned or borrowed);
+    /// returns the decomposed tuple outputs. Validates input count
+    /// against the manifest.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        name: &str,
+        inputs: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.compile(name)?;
+        let art = self.manifest.artifact(name).unwrap();
+        if inputs.len() != art.inputs.len() {
+            bail!(
+                "{name}: got {} inputs, manifest wants {}",
+                inputs.len(),
+                art.inputs.len()
+            );
+        }
+        let exe = self.exes.get(name).unwrap();
+        let result = exe.execute::<L>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let outs = lit.to_tuple()?;
+        if outs.len() != art.outputs.len() {
+            bail!("{name}: got {} outputs, manifest wants {}", outs.len(), art.outputs.len());
+        }
+        Ok(outs)
+    }
+
+    /// Build a literal of the given shape from f32 data.
+    pub fn literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Load an initial-state blob into per-leaf literals for the
+    /// `train_<variant>` artifact.
+    pub fn load_state(&self, variant: &str) -> Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .state(variant)
+            .ok_or_else(|| anyhow!("no state for {variant}"))?;
+        let art = self
+            .manifest
+            .artifact(&format!("train_{variant}"))
+            .ok_or_else(|| anyhow!("no train artifact for {variant}"))?;
+        let bytes = std::fs::read(self.dir.join(&spec.file))?;
+        let mut floats = vec![0f32; bytes.len() / 4];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            floats[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+        let mut out = Vec::with_capacity(spec.n_leaves);
+        let mut off = 0;
+        for t in art.inputs.iter().take(spec.n_leaves) {
+            let n = t.elems();
+            if off + n > floats.len() {
+                bail!("state blob too short at {}", t.name);
+            }
+            out.push(Self::literal(&floats[off..off + n], &t.shape)?);
+            off += n;
+        }
+        if off != floats.len() {
+            bail!("state blob has {} trailing floats", floats.len() - off);
+        }
+        Ok(out)
+    }
+}
+
+/// A full training session over the `train_<variant>` artifact: owns the
+/// state leaves and feeds batches. This is the L3 hot path of the
+/// three-layer architecture — no Python anywhere.
+pub struct TrainSession {
+    pub runtime: Runtime,
+    pub variant: String,
+    /// Current state leaves (kept as host literals between steps; PJRT
+    /// CPU shares the host memory so copies are cheap — see §Perf).
+    pub state: Vec<xla::Literal>,
+    n_state: usize,
+    pub steps: u64,
+}
+
+impl TrainSession {
+    pub fn new(artifact_dir: impl AsRef<Path>, variant: &str) -> Result<Self> {
+        let mut runtime = Runtime::open(artifact_dir)?;
+        runtime.compile(&format!("train_{variant}"))?;
+        runtime.compile(&format!("act_{variant}"))?;
+        let state = runtime.load_state(variant)?;
+        let n_state = state.len();
+        Ok(TrainSession { runtime, variant: variant.to_string(), state, n_state, steps: 0 })
+    }
+
+    pub fn dims(&self) -> (usize, usize, usize) {
+        let m = &self.runtime.manifest;
+        (
+            m.dim("obs").unwrap_or(0),
+            m.dim("act").unwrap_or(0),
+            m.dim("batch").unwrap_or(0),
+        )
+    }
+
+    /// One fused train step. `batch` = (obs, act, rew, next_obs,
+    /// not_done, eps_next, eps_cur) as flat f32 slices. Returns the 4
+    /// metrics [critic_loss, q_mean, logp_mean, alpha].
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        obs: &[f32],
+        act: &[f32],
+        rew: &[f32],
+        next_obs: &[f32],
+        not_done: &[f32],
+        eps_next: &[f32],
+        eps_cur: &[f32],
+    ) -> Result<[f32; 4]> {
+        let name = format!("train_{}", self.variant);
+        let art = self.runtime.manifest.artifact(&name).unwrap().clone();
+        let batch_specs = &art.inputs[self.n_state..];
+        let mut batch_lits: Vec<xla::Literal> = Vec::with_capacity(7);
+        for (spec, data) in batch_specs
+            .iter()
+            .zip([obs, act, rew, next_obs, not_done, eps_next, eps_cur])
+        {
+            if spec.elems() != data.len() {
+                bail!("{}: want {} elems got {}", spec.name, spec.elems(), data.len());
+            }
+            batch_lits.push(Runtime::literal(data, &spec.shape)?);
+        }
+        // borrow state leaves + batch literals without copying state
+        let inputs: Vec<&xla::Literal> =
+            self.state.iter().chain(batch_lits.iter()).collect();
+        let mut outs = self.runtime.execute(&name, &inputs)?;
+        let metrics_lit = outs.pop().ok_or_else(|| anyhow!("no metrics"))?;
+        let metrics = metrics_lit.to_vec::<f32>()?;
+        self.state = outs;
+        self.steps += 1;
+        Ok([metrics[0], metrics[1], metrics[2], metrics[3]])
+    }
+
+    /// Policy inference: single observation -> action (length = act dim).
+    pub fn act(&mut self, obs: &[f32], eps: &[f32]) -> Result<Vec<f32>> {
+        let name = format!("act_{}", self.variant);
+        let art = self.runtime.manifest.artifact(&name).unwrap().clone();
+        let n_actor = art.inputs.len() - 2;
+        // actor leaves are a prefix of the state (params.actor.* come
+        // first in sorted-key order)
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(art.inputs.len());
+        let train = self
+            .runtime
+            .manifest
+            .artifact(&format!("train_{}", self.variant))
+            .unwrap()
+            .clone();
+        for spec in art.inputs.iter().take(n_actor) {
+            // find the matching state leaf by suffix name
+            let want = spec.name.strip_prefix("actor.").unwrap_or(&spec.name);
+            let idx = train
+                .inputs
+                .iter()
+                .position(|t| t.name == format!("state.params.actor.{want}"))
+                .ok_or_else(|| anyhow!("actor leaf {want} not in state"))?;
+            inputs.push(self.state[idx].clone());
+        }
+        inputs.push(Runtime::literal(obs, art.inputs[n_actor].shape.as_slice())?);
+        inputs.push(Runtime::literal(eps, art.inputs[n_actor + 1].shape.as_slice())?);
+        let outs = self.runtime.execute(&name, &inputs)?;
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+
+    /// Copy a named state leaf back to host f32 (telemetry/inspection).
+    pub fn state_leaf(&self, name: &str) -> Result<Vec<f32>> {
+        let train = self
+            .runtime
+            .manifest
+            .artifact(&format!("train_{}", self.variant))
+            .unwrap();
+        let idx = train
+            .inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("no leaf {name}"))?;
+        Ok(self.state[idx].to_vec::<f32>()?)
+    }
+}

@@ -1,0 +1,674 @@
+//! The SAC agent: actor, twin critic, target critic, automatic entropy
+//! temperature, optional pixel encoder — with every one of the paper's
+//! six numerical methods switchable (see [`super::Methods`]).
+//!
+//! Update structure follows Yarats & Kostrikov (2020):
+//! 1. critic step — `L = MSE(Q₁, y) + MSE(Q₂, y)`,
+//!    `y = r + γ·(min Q̂(s', a') − α log π(a'|s'))`, `a' ~ π(s')`;
+//! 2. actor step (every `actor_update_freq`) —
+//!    `L = E[α log π(a|s) − min Q(s, a)]`, reparameterized;
+//! 3. temperature step — `L = −α·E[log π + H̄]`, on `log α`;
+//! 4. target soft update (every `target_update_freq`) —
+//!    `ψ̂ ← ψ̂ + τ(ψ − ψ̂)` (Kahan-momentum when enabled).
+
+use super::critic::Critic;
+use super::encoder::Encoder;
+use super::methods::Methods;
+use super::policy::{PolicyCfg, TanhGaussian};
+use crate::lowp::Precision;
+use crate::nn::{Mlp, Param, Tensor};
+use crate::optim::{coerce_nonfinite, Adam, AdamConfig, GradScaler, ScaledKahanEma, ScalerConfig, SecondMoment, UpdateMode};
+use crate::rngs::Pcg64;
+
+/// A replay minibatch. `obs`/`next_obs` are `[B, D]` states or
+/// `[B, C, H, W]` images (when the agent has an encoder).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub obs: Tensor,
+    pub act: Tensor,
+    pub rew: Vec<f32>,
+    pub next_obs: Tensor,
+    pub not_done: Vec<f32>,
+}
+
+/// Agent hyperparameters (paper Tables 4, 5, 9).
+#[derive(Debug, Clone, Copy)]
+pub struct SacConfig {
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    pub hidden: usize,
+    pub gamma: f32,
+    pub tau: f32,
+    pub init_temperature: f32,
+    pub lr: f32,
+    pub adam_eps: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub target_update_freq: u64,
+    pub actor_update_freq: u64,
+    pub log_sig_lo: f32,
+    pub log_sig_hi: f32,
+    /// σ += this after exp (pixels runs use 1e-4; states 0).
+    pub sigma_eps: f32,
+    /// Kahan-momentum buffer scale C (1e4 states, 100 pixels).
+    pub kahan_momentum_scale: f32,
+    /// Target entropy H̄; the SAC convention is −|A|.
+    pub target_entropy: f32,
+}
+
+impl SacConfig {
+    /// Paper Table 4 defaults (states).
+    pub fn states(obs_dim: usize, act_dim: usize, hidden: usize) -> Self {
+        SacConfig {
+            obs_dim,
+            act_dim,
+            hidden,
+            gamma: 0.99,
+            tau: 0.005,
+            init_temperature: 0.1,
+            lr: 1e-4,
+            adam_eps: 1e-8,
+            beta1: 0.9,
+            beta2: 0.999,
+            target_update_freq: 2,
+            actor_update_freq: 1,
+            log_sig_lo: -5.0,
+            log_sig_hi: 2.0,
+            sigma_eps: 0.0,
+            kahan_momentum_scale: 1e4,
+            target_entropy: -(act_dim as f32),
+        }
+    }
+
+    /// Paper Table 9 deltas for pixels (`obs_dim` = encoder feature dim).
+    pub fn pixels(feature_dim: usize, act_dim: usize, hidden: usize) -> Self {
+        SacConfig {
+            tau: 0.01,
+            lr: 1e-3,
+            actor_update_freq: 2,
+            log_sig_lo: -10.0,
+            sigma_eps: 1e-4,
+            kahan_momentum_scale: 100.0,
+            ..SacConfig::states(feature_dim, act_dim, hidden)
+        }
+    }
+}
+
+/// Per-update diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct UpdateStats {
+    pub critic_loss: f32,
+    pub actor_loss: f32,
+    pub alpha_loss: f32,
+    pub alpha: f32,
+    pub q_mean: f32,
+    pub logp_mean: f32,
+    pub scale: f32,
+    pub skipped_steps: u64,
+}
+
+/// The agent.
+pub struct SacAgent {
+    pub cfg: SacConfig,
+    pub methods: Methods,
+    /// Forward/backward (activation & gradient) precision.
+    pub compute: Precision,
+    /// Parameter & optimizer-state precision (fp32 under mixed precision).
+    pub store: Precision,
+    pub actor: Mlp,
+    pub critic: Critic,
+    pub target: Critic,
+    target_ema: ScaledKahanEma,
+    pub encoder: Option<Encoder>,
+    pub target_encoder: Option<Encoder>,
+    encoder_ema: Option<ScaledKahanEma>,
+    pub log_alpha: Param,
+    opt_actor: Adam,
+    opt_critic: Adam,
+    opt_alpha: Adam,
+    sc_actor: GradScaler,
+    sc_critic: GradScaler,
+    sc_alpha: GradScaler,
+    pub updates: u64,
+    pub rng: Pcg64,
+    /// Set once a non-finite action was produced (the paper scores such
+    /// runs as 0).
+    pub crashed: bool,
+    /// Gradient magnitude telemetry for Figure 6 (filled by experiments).
+    pub grad_probe: Option<Vec<f32>>,
+    /// `(channels, side)` of pixel observations, if this is a pixel agent.
+    pixel_shape: Option<(usize, usize)>,
+}
+
+impl SacAgent {
+    /// Build a state-based agent.
+    pub fn new(cfg: SacConfig, methods: Methods, precision: Precision, seed: u64) -> Self {
+        Self::build(cfg, methods, precision, seed, None)
+    }
+
+    /// Build a pixel-based agent; `enc_proto` describes the encoder
+    /// (frames, image side, filters). `cfg.obs_dim` must equal the
+    /// encoder feature dim.
+    pub fn new_pixels(
+        cfg: SacConfig,
+        methods: Methods,
+        precision: Precision,
+        seed: u64,
+        frames: usize,
+        img: usize,
+        filters: usize,
+    ) -> Self {
+        let mut rng = Pcg64::seed(seed ^ 0xE11C0DE);
+        // The paper applies weight-std + downscale in its fp16 pixel agent.
+        let low = precision.is_low();
+        let enc = Encoder::new(
+            "enc",
+            frames,
+            img,
+            filters,
+            cfg.obs_dim,
+            low,
+            if low { Some(10.0) } else { None },
+            &mut rng,
+        );
+        let mut agent = Self::build(cfg, methods, precision, seed, Some(enc));
+        agent.pixel_shape = Some((frames, img));
+        agent
+    }
+
+    fn build(
+        cfg: SacConfig,
+        methods: Methods,
+        precision: Precision,
+        seed: u64,
+        encoder: Option<Encoder>,
+    ) -> Self {
+        let mut rng = Pcg64::seed(seed);
+        let compute = precision;
+        let store = if methods.mixed_precision { Precision::Fp32 } else { precision };
+
+        let mut actor = Mlp::new(
+            "actor",
+            &[cfg.obs_dim, cfg.hidden, cfg.hidden, 2 * cfg.act_dim],
+            &mut rng,
+        );
+        let mut critic = Critic::new("critic", cfg.obs_dim, cfg.act_dim, cfg.hidden, &mut rng);
+        if store.is_low() {
+            actor.quantize_params(store);
+            critic.quantize_params(store);
+        }
+        let mut target = Critic::new("target", cfg.obs_dim, cfg.act_dim, cfg.hidden, &mut rng);
+        let flat = critic.flat_params();
+        target.load_flat(&flat);
+        let target_ema = ScaledKahanEma::new(
+            &flat,
+            cfg.kahan_momentum_scale,
+            store,
+            methods.kahan_momentum,
+        );
+
+        let mut encoder = encoder;
+        let (target_encoder, encoder_ema) = if let Some(enc) = encoder.as_mut() {
+            if store.is_low() {
+                enc.quantize_params(store);
+            }
+            let flat = enc.flat_params();
+            let mut tgt = enc.clone();
+            tgt.load_flat(&flat);
+            let ema = ScaledKahanEma::new(
+                &flat,
+                cfg.kahan_momentum_scale,
+                store,
+                methods.kahan_momentum,
+            );
+            (Some(tgt), Some(ema))
+        } else {
+            (None, None)
+        };
+
+        let mut log_alpha = Param::from_values("log_alpha", &[1], vec![cfg.init_temperature.ln()]);
+        log_alpha.quantize(store);
+
+        let adam_cfg = AdamConfig { lr: cfg.lr, beta1: cfg.beta1, beta2: cfg.beta2, eps: cfg.adam_eps };
+        let second = if methods.hadam { SecondMoment::Hypot } else { SecondMoment::Variance };
+        let kahan_cr = if methods.kahan_gradients { UpdateMode::Kahan } else { UpdateMode::Plain };
+        // paper: Kahan-gradients on critic + α, not on the actor
+        let opt_actor = Adam::new(adam_cfg, store, second, UpdateMode::Plain, methods.compound_scaling);
+        let opt_critic = Adam::new(adam_cfg, store, second, kahan_cr, methods.compound_scaling);
+        let opt_alpha = Adam::new(
+            AdamConfig { lr: cfg.lr, ..adam_cfg },
+            store,
+            second,
+            kahan_cr,
+            methods.compound_scaling,
+        );
+
+        let mk_scaler = || {
+            if methods.loss_scaling {
+                GradScaler::new(ScalerConfig::paper())
+            } else {
+                GradScaler::disabled()
+            }
+        };
+
+        SacAgent {
+            cfg,
+            methods,
+            compute,
+            store,
+            actor,
+            critic,
+            target,
+            target_ema,
+            encoder,
+            target_encoder,
+            encoder_ema,
+            log_alpha,
+            opt_actor,
+            opt_critic,
+            opt_alpha,
+            sc_actor: mk_scaler(),
+            sc_critic: mk_scaler(),
+            sc_alpha: mk_scaler(),
+            updates: 0,
+            rng,
+            crashed: false,
+            grad_probe: None,
+            pixel_shape: None,
+        }
+    }
+
+    fn policy_cfg(&self) -> PolicyCfg {
+        PolicyCfg {
+            log_sig_lo: self.cfg.log_sig_lo,
+            log_sig_hi: self.cfg.log_sig_hi,
+            softplus_fix: self.methods.softplus_fix,
+            normal_fix: self.methods.normal_fix,
+            sigma_eps: self.cfg.sigma_eps,
+            k_threshold: 10.0,
+        }
+    }
+
+    /// Current temperature α = exp(log α).
+    pub fn alpha(&self) -> f32 {
+        self.compute.q(self.log_alpha.w[0].exp())
+    }
+
+    /// Encode a pixel batch (identity for state agents).
+    fn encode(&mut self, obs: &Tensor, prec: Precision) -> Tensor {
+        match self.encoder.as_mut() {
+            Some(enc) => enc.forward(obs, prec),
+            None => obs.clone(),
+        }
+    }
+
+    fn encode_target(&mut self, obs: &Tensor, prec: Precision) -> Tensor {
+        match self.target_encoder.as_mut() {
+            Some(enc) => enc.forward(obs, prec),
+            None => obs.clone(),
+        }
+    }
+
+    /// Select an action for a single observation. `stochastic` samples
+    /// from π; otherwise uses tanh(μ). Returns `None` (and flags
+    /// `crashed`) if the action is non-finite, mirroring the paper's
+    /// crash accounting.
+    pub fn act(&mut self, obs: &[f32], stochastic: bool) -> Option<Vec<f32>> {
+        let p = self.compute;
+        let obs_t = if let Some((c, h)) = self.pixel_shape {
+            // caller passes a flattened [C, H, W] image
+            Tensor::from_vec(&[1, c, h, h], obs.to_vec())
+        } else {
+            Tensor::from_vec(&[1, obs.len()], obs.to_vec())
+        };
+        let feat = self.encode(&obs_t, p);
+        let head = self.actor.forward(&feat, p);
+        let a = if stochastic {
+            let mut eps = Tensor::zeros(&[1, self.cfg.act_dim]);
+            self.rng.normal_fill(&mut eps.data);
+            TanhGaussian::forward(&head, &eps, self.policy_cfg(), p).a
+        } else {
+            TanhGaussian::mean_action(&head, p)
+        };
+        if a.has_nonfinite() {
+            self.crashed = true;
+            return None;
+        }
+        Some(a.data)
+    }
+
+    /// One gradient update from a replay batch.
+    pub fn update(&mut self, batch: &Batch) -> UpdateStats {
+        let mut stats = UpdateStats { alpha: self.alpha(), ..Default::default() };
+        self.update_critic(batch, &mut stats);
+        if self.updates % self.cfg.actor_update_freq == 0 {
+            self.update_actor_alpha(batch, &mut stats);
+        }
+        if self.updates % self.cfg.target_update_freq == 0 {
+            self.update_target();
+        }
+        self.updates += 1;
+        stats.scale = self.sc_critic.scale();
+        stats.skipped_steps =
+            self.sc_critic.skipped + self.sc_actor.skipped + self.sc_alpha.skipped;
+        stats
+    }
+
+    fn update_critic(&mut self, batch: &Batch, stats: &mut UpdateStats) {
+        let p = self.compute;
+        let b = batch.rew.len();
+        let alpha = self.alpha();
+
+        // -- target value (no gradients kept anywhere) ------------------
+        let feat_next_actor = if self.encoder.is_some() {
+            // DRQ convention: the *actor* uses the online encoder (detached)
+            self.encode(&batch.next_obs, p)
+        } else {
+            batch.next_obs.clone()
+        };
+        let head = self.actor.forward(&feat_next_actor, p);
+        let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
+        self.rng.normal_fill(&mut eps.data);
+        let tg = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p);
+        let feat_next_tgt = self.encode_target(&batch.next_obs, p);
+        let (tq1, tq2) = self.target.forward(&feat_next_tgt, &tg.a, p);
+        let mut y = vec![0.0f32; b];
+        for r in 0..b {
+            let tq = tq1.data[r].min(tq2.data[r]);
+            let v = p.q(tq - p.q(alpha * tg.logp[r]));
+            y[r] = p.q(batch.rew[r] + p.q(self.cfg.gamma * batch.not_done[r]) * v);
+        }
+
+        // -- online critic ---------------------------------------------
+        let feat = self.encode(&batch.obs, p);
+        let (q1, q2) = self.critic.forward(&feat, &batch.act, p);
+        let scale = self.sc_critic.scale();
+        let mut loss = 0.0f64;
+        let mut dq1 = Tensor::zeros(&[b, 1]);
+        let mut dq2 = Tensor::zeros(&[b, 1]);
+        for r in 0..b {
+            let e1 = q1.data[r] - y[r];
+            let e2 = q2.data[r] - y[r];
+            loss += (e1 as f64).powi(2) + (e2 as f64).powi(2);
+            dq1.data[r] = p.q(2.0 * e1 / b as f32 * scale);
+            dq2.data[r] = p.q(2.0 * e2 / b as f32 * scale);
+        }
+        stats.critic_loss = (loss / b as f64) as f32;
+        stats.q_mean = q1.mean();
+
+        self.critic.zero_grad();
+        if let Some(enc) = self.encoder.as_mut() {
+            enc.zero_grad();
+        }
+        if self.encoder.is_some() {
+            let (dobs, _da) = self.critic.backward_full(&dq1, &dq2, p);
+            self.encoder.as_mut().unwrap().backward(&dobs, p);
+        } else {
+            let _ = self.critic.backward(&dq1, &dq2, p);
+        }
+
+        if self.methods.coerce {
+            let mx = p.max_value();
+            for prm in self.critic.params_mut() {
+                coerce_nonfinite(&mut prm.g, mx);
+            }
+        }
+        // probe gradients for Figure 6 telemetry
+        if let Some(probe) = self.grad_probe.as_mut() {
+            for prm in self.critic.params_mut() {
+                probe.extend(prm.g.iter().map(|g| g.abs()));
+            }
+        }
+        // optimizer step (critic + encoder parameters together)
+        let mut params = self.critic.params_mut();
+        if let Some(enc) = self.encoder.as_mut() {
+            params.extend(enc.params_mut());
+        }
+        self.opt_critic.step(&mut params, &mut self.sc_critic);
+    }
+
+    fn update_actor_alpha(&mut self, batch: &Batch, stats: &mut UpdateStats) {
+        let p = self.compute;
+        let b = batch.rew.len();
+        let alpha = self.alpha();
+
+        // actor loss: E[α logπ - min Q], encoder features detached
+        let feat = self.encode(&batch.obs, p);
+        let head = self.actor.forward(&feat, p);
+        let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
+        self.rng.normal_fill(&mut eps.data);
+        let tg = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p);
+        let (q1, q2) = self.critic.forward(&feat, &tg.a, p);
+
+        let scale = self.sc_actor.scale();
+        let mut loss = 0.0f64;
+        let mut dq1 = Tensor::zeros(&[b, 1]);
+        let mut dq2 = Tensor::zeros(&[b, 1]);
+        let coef = p.q(scale / b as f32);
+        for r in 0..b {
+            let qmin = q1.data[r].min(q2.data[r]);
+            loss += (alpha * tg.logp[r] - qmin) as f64;
+            // d(-qmin)/dq: route to the smaller head
+            if q1.data[r] <= q2.data[r] {
+                dq1.data[r] = -coef;
+            } else {
+                dq2.data[r] = -coef;
+            }
+        }
+        stats.actor_loss = (loss / b as f64) as f32;
+        stats.logp_mean =
+            tg.logp.iter().map(|&v| v as f64).sum::<f64>() as f32 / b as f32;
+
+        // dQ/da through the critic (param grads discarded afterwards)
+        self.critic.zero_grad();
+        let da = self.critic.backward(&dq1, &dq2, p);
+        let coefs = vec![p.q(alpha * coef); b];
+        let dhead = tg.backward(&coefs, Some(&da));
+        self.actor.zero_grad();
+        let _ = self.actor.backward(&dhead, p);
+        self.critic.zero_grad(); // discard critic grads from this pass
+
+        if self.methods.coerce {
+            let mx = p.max_value();
+            for prm in self.actor.params_mut() {
+                coerce_nonfinite(&mut prm.g, mx);
+            }
+        }
+        if let Some(probe) = self.grad_probe.as_mut() {
+            for prm in self.actor.params_mut() {
+                probe.extend(prm.g.iter().map(|g| g.abs()));
+            }
+        }
+        let mut params = self.actor.params_mut();
+        self.opt_actor.step(&mut params, &mut self.sc_actor);
+
+        // -- temperature ------------------------------------------------
+        // L(α) = −α · mean(logπ + H̄)  (logπ detached)
+        let mean_term = tg
+            .logp
+            .iter()
+            .map(|&lp| (lp + self.cfg.target_entropy) as f64)
+            .sum::<f64>() as f32
+            / b as f32;
+        stats.alpha_loss = -alpha * mean_term;
+        let ascale = self.sc_alpha.scale();
+        // d/d logα of −exp(logα)·mean_term
+        self.log_alpha.g[0] = p.q(-alpha * mean_term * ascale);
+        if self.methods.coerce {
+            coerce_nonfinite(&mut self.log_alpha.g, p.max_value());
+        }
+        let mut aparams = vec![&mut self.log_alpha];
+        self.opt_alpha.step(&mut aparams, &mut self.sc_alpha);
+    }
+
+    fn update_target(&mut self) {
+        let flat = self.critic.flat_params();
+        self.target_ema.update(&flat, self.cfg.tau);
+        self.target.load_flat(self.target_ema.weights());
+        if let (Some(enc), Some(ema), Some(tgt)) = (
+            self.encoder.as_mut(),
+            self.encoder_ema.as_mut(),
+            self.target_encoder.as_mut(),
+        ) {
+            let flat = enc.flat_params();
+            ema.update(&flat, self.cfg.tau);
+            tgt.load_flat(ema.weights());
+        }
+    }
+
+    /// Total learnable parameters (actor + critic [+ encoder]).
+    pub fn n_params(&mut self) -> usize {
+        let mut n = self.actor.n_params() + self.critic.n_params();
+        if let Some(enc) = self.encoder.as_mut() {
+            n += enc.n_params();
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_batch(b: usize, obs_dim: usize, act_dim: usize, rng: &mut Pcg64) -> Batch {
+        let mut obs = Tensor::zeros(&[b, obs_dim]);
+        rng.normal_fill(&mut obs.data);
+        let mut next_obs = Tensor::zeros(&[b, obs_dim]);
+        rng.normal_fill(&mut next_obs.data);
+        let mut act = Tensor::zeros(&[b, act_dim]);
+        for v in act.data.iter_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        Batch {
+            obs,
+            act,
+            rew: (0..b).map(|_| rng.uniform_f32()).collect(),
+            next_obs,
+            not_done: vec![1.0; b],
+        }
+    }
+
+    #[test]
+    fn fp32_update_runs_and_changes_params() {
+        let mut rng = Pcg64::seed(1);
+        let cfg = SacConfig::states(6, 2, 32);
+        let mut agent = SacAgent::new(cfg, Methods::none(), Precision::Fp32, 7);
+        let before = agent.critic.flat_params();
+        for _ in 0..5 {
+            let b = toy_batch(16, 6, 2, &mut rng);
+            let s = agent.update(&b);
+            assert!(s.critic_loss.is_finite());
+        }
+        let after = agent.critic.flat_params();
+        assert_ne!(before, after);
+    }
+
+    #[test]
+    fn act_returns_bounded_actions() {
+        let cfg = SacConfig::states(4, 3, 16);
+        let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 3);
+        let a = agent.act(&[0.1, -0.2, 0.3, 0.4], true).unwrap();
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
+        let d = agent.act(&[0.1, -0.2, 0.3, 0.4], false).unwrap();
+        assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fp16_ours_stays_finite_over_many_updates() {
+        let mut rng = Pcg64::seed(2);
+        let cfg = SacConfig::states(6, 2, 32);
+        let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 11);
+        for i in 0..30 {
+            let b = toy_batch(8, 6, 2, &mut rng);
+            let s = agent.update(&b);
+            assert!(
+                s.critic_loss.is_finite(),
+                "update {i}: critic loss {}",
+                s.critic_loss
+            );
+        }
+        assert!(!agent.crashed);
+        for prm in agent.critic.params_mut() {
+            assert!(prm.w.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn target_tracks_critic() {
+        let mut rng = Pcg64::seed(3);
+        let cfg = SacConfig { tau: 0.5, ..SacConfig::states(4, 2, 16) };
+        let mut agent = SacAgent::new(cfg, Methods::none(), Precision::Fp32, 5);
+        let c0 = agent.critic.flat_params();
+        let t0 = agent.target.flat_params();
+        assert_eq!(c0, t0, "target initialized to critic");
+        for _ in 0..10 {
+            let b = toy_batch(8, 4, 2, &mut rng);
+            agent.update(&b);
+        }
+        let c = agent.critic.flat_params();
+        let t = agent.target.flat_params();
+        assert_ne!(t, t0, "target must move");
+        // target lags the critic: distance(t, c) > 0 but should be modest
+        let d: f32 = c.iter().zip(&t).map(|(a, b)| (a - b).abs()).sum();
+        assert!(d > 0.0);
+    }
+
+    #[test]
+    fn alpha_adapts_toward_target_entropy() {
+        let mut rng = Pcg64::seed(4);
+        let cfg = SacConfig { lr: 1e-2, ..SacConfig::states(4, 2, 16) };
+        let mut agent = SacAgent::new(cfg, Methods::none(), Precision::Fp32, 6);
+        let a0 = agent.alpha();
+        for _ in 0..50 {
+            let b = toy_batch(16, 4, 2, &mut rng);
+            agent.update(&b);
+        }
+        assert_ne!(agent.alpha(), a0, "temperature must adapt");
+        assert!(agent.alpha() > 0.0);
+    }
+
+    #[test]
+    fn pixel_agent_update_runs() {
+        let mut rng = Pcg64::seed(5);
+        let cfg = SacConfig::pixels(8, 2, 24); // feature_dim 8
+        let mut agent = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        let b = 4;
+        let mut obs = Tensor::zeros(&[b, 3, 21, 21]);
+        for v in obs.data.iter_mut() {
+            *v = rng.uniform_f32();
+        }
+        let mut next_obs = obs.clone();
+        for v in next_obs.data.iter_mut() {
+            *v = (*v + 0.01).min(1.0);
+        }
+        let mut act = Tensor::zeros(&[b, 2]);
+        for v in act.data.iter_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        let batch = Batch {
+            obs,
+            act,
+            rew: vec![0.5; b],
+            next_obs,
+            not_done: vec![1.0; b],
+        };
+        for _ in 0..3 {
+            let s = agent.update(&batch);
+            assert!(s.critic_loss.is_finite(), "loss={}", s.critic_loss);
+        }
+    }
+
+    #[test]
+    fn mixed_precision_keeps_fp32_master_weights() {
+        let cfg = SacConfig::states(4, 2, 16);
+        let agent = SacAgent::new(
+            cfg,
+            Methods::mixed_precision_baseline(),
+            Precision::fp16(),
+            2,
+        );
+        assert_eq!(agent.store, Precision::Fp32);
+        assert_eq!(agent.compute, Precision::fp16());
+    }
+}

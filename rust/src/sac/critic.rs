@@ -1,0 +1,192 @@
+//! Twin-Q critic (clipped double-Q, as in the reference SAC codebase):
+//! two independent MLPs over `concat(obs, action)`, each with hidden
+//! depth 2 and a scalar head.
+
+use crate::lowp::Precision;
+use crate::nn::{Mlp, Param, Tensor};
+use crate::rngs::Pcg64;
+
+/// Twin Q-networks.
+#[derive(Debug, Clone)]
+pub struct Critic {
+    pub q1: Mlp,
+    pub q2: Mlp,
+    pub obs_dim: usize,
+    pub act_dim: usize,
+    in_cache: Tensor,
+}
+
+impl Critic {
+    pub fn new(name: &str, obs_dim: usize, act_dim: usize, hidden: usize, rng: &mut Pcg64) -> Self {
+        let dims = [obs_dim + act_dim, hidden, hidden, 1];
+        Critic {
+            q1: Mlp::new(&format!("{name}.q1"), &dims, rng),
+            q2: Mlp::new(&format!("{name}.q2"), &dims, rng),
+            obs_dim,
+            act_dim,
+            in_cache: Tensor::zeros(&[0]),
+        }
+    }
+
+    /// Concatenate `[obs | act]` rows.
+    pub fn join(obs: &Tensor, act: &Tensor) -> Tensor {
+        let b = obs.rows();
+        assert_eq!(act.rows(), b);
+        let (od, ad) = (obs.cols(), act.cols());
+        let mut x = Tensor::zeros(&[b, od + ad]);
+        for r in 0..b {
+            x.row_mut(r)[..od].copy_from_slice(obs.row(r));
+            x.row_mut(r)[od..].copy_from_slice(act.row(r));
+        }
+        x
+    }
+
+    /// Forward both heads. Returns `(q1, q2)`, each `[B, 1]`.
+    pub fn forward(&mut self, obs: &Tensor, act: &Tensor, prec: Precision) -> (Tensor, Tensor) {
+        let x = Self::join(obs, act);
+        let q1 = self.q1.forward(&x, prec);
+        let q2 = self.q2.forward(&x, prec);
+        self.in_cache = x;
+        (q1, q2)
+    }
+
+    /// Backward from per-head output grads; returns the gradient w.r.t.
+    /// the *action* part of the joined input (the policy path), discarding
+    /// the obs part.
+    pub fn backward(&mut self, dq1: &Tensor, dq2: &Tensor, prec: Precision) -> Tensor {
+        let dx1 = self.q1.backward(dq1, prec);
+        let dx2 = self.q2.backward(dq2, prec);
+        let b = dx1.rows();
+        let mut da = Tensor::zeros(&[b, self.act_dim]);
+        for r in 0..b {
+            for i in 0..self.act_dim {
+                da.data[r * self.act_dim + i] = prec
+                    .q(dx1.row(r)[self.obs_dim + i] + dx2.row(r)[self.obs_dim + i]);
+            }
+        }
+        da
+    }
+
+    /// Gradient w.r.t. the obs part (needed to backprop into a shared
+    /// pixel encoder). Call with the same `dq` tensors used in
+    /// [`Critic::backward`]; re-runs the MLP backward, so prefer
+    /// `backward_full` when both are needed.
+    pub fn backward_full(&mut self, dq1: &Tensor, dq2: &Tensor, prec: Precision) -> (Tensor, Tensor) {
+        let dx1 = self.q1.backward(dq1, prec);
+        let dx2 = self.q2.backward(dq2, prec);
+        let b = dx1.rows();
+        let mut dobs = Tensor::zeros(&[b, self.obs_dim]);
+        let mut da = Tensor::zeros(&[b, self.act_dim]);
+        for r in 0..b {
+            for i in 0..self.obs_dim {
+                dobs.data[r * self.obs_dim + i] =
+                    prec.q(dx1.row(r)[i] + dx2.row(r)[i]);
+            }
+            for i in 0..self.act_dim {
+                da.data[r * self.act_dim + i] =
+                    prec.q(dx1.row(r)[self.obs_dim + i] + dx2.row(r)[self.obs_dim + i]);
+            }
+        }
+        (dobs, da)
+    }
+
+    pub fn params_mut(&mut self) -> Vec<&mut Param> {
+        let mut v = self.q1.params_mut();
+        v.extend(self.q2.params_mut());
+        v
+    }
+
+    /// Flatten all parameter values (target-net EMA operates on this).
+    pub fn flat_params(&mut self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for p in self.params_mut() {
+            out.extend_from_slice(&p.w);
+        }
+        out
+    }
+
+    /// Load flat parameter values (inverse of [`Critic::flat_params`]).
+    pub fn load_flat(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for p in self.params_mut() {
+            let n = p.len();
+            p.w.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        assert_eq!(off, flat.len());
+    }
+
+    pub fn zero_grad(&mut self) {
+        self.q1.zero_grad();
+        self.q2.zero_grad();
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.q1.n_params() + self.q2.n_params()
+    }
+
+    pub fn quantize_params(&mut self, prec: Precision) {
+        self.q1.quantize_params(prec);
+        self.q2.quantize_params(prec);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twin_heads_differ() {
+        let mut rng = Pcg64::seed(1);
+        let mut c = Critic::new("c", 4, 2, 16, &mut rng);
+        let obs = Tensor::from_vec(&[2, 4], (0..8).map(|_| rng.normal_f32()).collect());
+        let act = Tensor::from_vec(&[2, 2], (0..4).map(|_| rng.normal_f32()).collect());
+        let (q1, q2) = c.forward(&obs, &act, Precision::Fp32);
+        assert_eq!(q1.shape, vec![2, 1]);
+        assert_ne!(q1.data, q2.data);
+    }
+
+    #[test]
+    fn action_gradient_matches_finite_difference() {
+        let mut rng = Pcg64::seed(2);
+        let mut c = Critic::new("c", 3, 2, 12, &mut rng);
+        let obs = Tensor::from_vec(&[1, 3], vec![0.1, -0.4, 0.7]);
+        let act = Tensor::from_vec(&[1, 2], vec![0.2, -0.1]);
+        let prec = Precision::Fp32;
+        // loss = q1 + q2 summed
+        let (q1, q2) = c.forward(&obs, &act, prec);
+        let _ = (q1, q2);
+        c.zero_grad();
+        let ones = Tensor::filled(&[1, 1], 1.0);
+        let da = c.backward(&ones, &ones, prec);
+        let eps = 1e-3f32;
+        for i in 0..2 {
+            let mut a2 = act.clone();
+            a2.data[i] += eps;
+            let (p1, p2) = c.forward(&obs, &a2, prec);
+            a2.data[i] -= 2.0 * eps;
+            let (m1, m2) = c.forward(&obs, &a2, prec);
+            let num = (p1.data[0] + p2.data[0] - m1.data[0] - m2.data[0]) / (2.0 * eps);
+            assert!((num - da.data[i]).abs() < 2e-2 * (1.0 + num.abs()), "i={i}");
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let mut rng = Pcg64::seed(3);
+        let mut c = Critic::new("c", 3, 2, 8, &mut rng);
+        let flat = c.flat_params();
+        assert_eq!(flat.len(), c.n_params());
+        let mut c2 = Critic::new("c2", 3, 2, 8, &mut rng);
+        c2.load_flat(&flat);
+        assert_eq!(c2.flat_params(), flat);
+    }
+
+    #[test]
+    fn join_layout() {
+        let obs = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let act = Tensor::from_vec(&[2, 1], vec![9., 8.]);
+        let x = Critic::join(&obs, &act);
+        assert_eq!(x.data, vec![1., 2., 9., 3., 4., 8.]);
+    }
+}

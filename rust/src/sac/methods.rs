@@ -1,0 +1,189 @@
+//! The configuration lattice of the paper's experiments: the six proposed
+//! methods (Table 1) plus the supervised-learning baseline tricks of
+//! Figure 1, as independent switches.
+
+/// Which numerical-stability methods are active. The fields mirror the
+/// paper's Table 1 (methods 1–6) plus the baseline tricks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Methods {
+    /// Method 1: hAdam — store √v, update with stable hypot.
+    pub hadam: bool,
+    /// Method 2: softplus-fix — linearize `log(1+exp(-2u))` for large
+    /// `-2u` so its backward cannot overflow.
+    pub softplus_fix: bool,
+    /// Method 3: normal-fix — compute the Normal log-density via
+    /// `((x-μ)/σ)²` instead of `(x-μ)²/σ²`.
+    pub normal_fix: bool,
+    /// Method 4: Kahan-momentum — compensated, scaled target-net EMA.
+    pub kahan_momentum: bool,
+    /// Method 5: compound loss scaling — keep the γ factor inside the
+    /// Adam buffers instead of unscaling gradients.
+    pub compound_scaling: bool,
+    /// Method 6: Kahan-gradients — compensated parameter updates for the
+    /// critic and α.
+    pub kahan_gradients: bool,
+    /// Baseline trick: dynamic loss scaling (Micikevicius et al., 2017).
+    /// Implied by `compound_scaling`.
+    pub loss_scaling: bool,
+    /// Baseline trick: coerce NaN→0, ±∞→±max after backward ("coerc").
+    pub coerce: bool,
+    /// Baseline trick: mixed precision — fp32 master weights and fp32
+    /// optimizer arithmetic, fp16 forward/backward.
+    pub mixed_precision: bool,
+}
+
+impl Methods {
+    /// Everything off — plain training (the fp32 reference, or the
+    /// "fp16 naive" run when paired with a low-precision policy).
+    pub const fn none() -> Self {
+        Methods {
+            hadam: false,
+            softplus_fix: false,
+            normal_fix: false,
+            kahan_momentum: false,
+            compound_scaling: false,
+            kahan_gradients: false,
+            loss_scaling: false,
+            coerce: false,
+            mixed_precision: false,
+        }
+    }
+
+    /// The paper's full recipe (all six methods).
+    pub const fn ours() -> Self {
+        Methods {
+            hadam: true,
+            softplus_fix: true,
+            normal_fix: true,
+            kahan_momentum: true,
+            compound_scaling: true,
+            kahan_gradients: true,
+            loss_scaling: true,
+            coerce: false,
+            mixed_precision: false,
+        }
+    }
+
+    /// Figure 1 baseline: numeric coercion only.
+    pub const fn coerc_baseline() -> Self {
+        Methods { coerce: true, ..Methods::none() }
+    }
+
+    /// Figure 1 baseline: plain dynamic loss scaling.
+    pub const fn loss_scale_baseline() -> Self {
+        Methods { loss_scaling: true, ..Methods::none() }
+    }
+
+    /// Figure 1 baseline: mixed precision + loss scaling.
+    pub const fn mixed_precision_baseline() -> Self {
+        Methods { loss_scaling: true, mixed_precision: true, ..Methods::none() }
+    }
+
+    /// The cumulative ablation of Figure 3: the first `k` methods of
+    /// Table 1 enabled (k = 0 → naive fp16, k = 6 → full recipe).
+    /// Compound scaling implies loss scaling is active.
+    pub fn cumulative(k: usize) -> Self {
+        let mut m = Methods::none();
+        if k >= 1 {
+            m.hadam = true;
+        }
+        if k >= 2 {
+            m.softplus_fix = true;
+        }
+        if k >= 3 {
+            m.normal_fix = true;
+        }
+        if k >= 4 {
+            m.kahan_momentum = true;
+        }
+        if k >= 5 {
+            m.compound_scaling = true;
+            m.loss_scaling = true;
+        }
+        if k >= 6 {
+            m.kahan_gradients = true;
+        }
+        m
+    }
+
+    /// The leave-one-out ablation of Figure 7: all methods except the
+    /// `i`-th (1-based, following Table 1 numbering).
+    pub fn leave_one_out(i: usize) -> Self {
+        let mut m = Methods::ours();
+        match i {
+            1 => m.hadam = false,
+            2 => m.softplus_fix = false,
+            3 => m.normal_fix = false,
+            4 => m.kahan_momentum = false,
+            5 => {
+                m.compound_scaling = false;
+                // loss scaling itself stays on (it is a baseline trick,
+                // not one of the six); removing method 5 reverts to the
+                // plain unscale-then-Adam behaviour.
+            }
+            6 => m.kahan_gradients = false,
+            _ => panic!("method index must be 1..=6"),
+        }
+        m
+    }
+
+    /// Short label for the cumulative ablation axis (Figure 3 x-axis).
+    pub fn cumulative_label(k: usize) -> &'static str {
+        match k {
+            0 => "fp16",
+            1 => "+hAdam",
+            2 => "+softplus",
+            3 => "+normal",
+            4 => "+kahan mom",
+            5 => "+comp scale",
+            6 => "+kahan grad",
+            _ => "?",
+        }
+    }
+
+    /// Number of the six paper methods that are enabled.
+    pub fn count_enabled(&self) -> usize {
+        [self.hadam, self.softplus_fix, self.normal_fix, self.kahan_momentum, self.compound_scaling, self.kahan_gradients]
+            .iter()
+            .filter(|&&b| b)
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cumulative_is_monotone() {
+        for k in 0..6 {
+            assert_eq!(Methods::cumulative(k).count_enabled(), k);
+        }
+        assert_eq!(Methods::cumulative(6), Methods::ours());
+    }
+
+    #[test]
+    fn leave_one_out_drops_exactly_one() {
+        for i in 1..=6 {
+            let m = Methods::leave_one_out(i);
+            assert_eq!(m.count_enabled(), 5, "i={i}");
+            assert_ne!(m, Methods::ours());
+        }
+    }
+
+    #[test]
+    fn baselines_enable_expected_tricks() {
+        assert!(Methods::coerc_baseline().coerce);
+        assert!(Methods::loss_scale_baseline().loss_scaling);
+        let mp = Methods::mixed_precision_baseline();
+        assert!(mp.mixed_precision && mp.loss_scaling);
+        assert_eq!(Methods::none().count_enabled(), 0);
+    }
+
+    #[test]
+    fn labels_exist() {
+        for k in 0..=6 {
+            assert!(!Methods::cumulative_label(k).is_empty());
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Soft Actor-Critic (Haarnoja et al., 2018), faithful to the reference
+//! implementation of Yarats & Kostrikov (2020) that the paper builds on,
+//! with the paper's six numerical-stability modifications as independent
+//! switches (see [`Methods`]).
+//!
+//! The agent runs identically under fp32, fp16 and any simulated
+//! [`crate::lowp::FloatFormat`]; the *only* difference between the
+//! paper's configurations is which of the six methods are enabled and
+//! which supervised-learning baseline tricks are applied.
+
+mod agent;
+mod critic;
+mod encoder;
+mod methods;
+mod policy;
+
+pub use agent::{Batch, SacAgent, SacConfig, UpdateStats};
+pub use critic::Critic;
+pub use encoder::Encoder;
+pub use methods::Methods;
+pub use policy::{softplus_neg2u, softplus_neg2u_grad, TanhGaussian};

@@ -1,0 +1,472 @@
+//! The tanh-Gaussian policy head and its log-probability — the site of
+//! the paper's methods **2 (softplus-fix)** and **3 (normal-fix)**.
+//!
+//! Actions are `a = tanh(u)`, `u = μ + ε⊙σ`, `ε ~ N(0,1)` (paper eq. 1).
+//! The log-probability needs the change-of-variables correction
+//!
+//! ```text
+//! log π(a|s) = log N(u; μ, σ) − Σᵢ log(1 − tanh²(uᵢ))
+//!            = log N(u; μ, σ) − Σᵢ 2[log 2 − uᵢ − log(1 + exp(−2uᵢ))]
+//! ```
+//!
+//! * Without the **softplus-fix**, `exp(−2u)` overflows fp16 once
+//!   `u < −5.54`; the forward yields ∞ and the backward `e/(1+e)`
+//!   yields NaN — the PyTorch failure the paper describes.
+//! * Without the **normal-fix**, the quadratic term is computed as
+//!   `(u−μ)²/σ²`; both numerator and denominator underflow for small σ
+//!   even when the ratio is O(1).
+//!
+//! Every scalar operation here is quantized into the working precision so
+//! the failures (and the fixes) reproduce bit-faithfully.
+
+use crate::lowp::Precision;
+use crate::nn::Tensor;
+
+const HALF_LOG_2PI: f32 = 0.918_938_5;
+const LOG_2: f32 = std::f32::consts::LN_2;
+
+/// Configuration of the policy head numerics.
+#[derive(Debug, Clone, Copy)]
+pub struct PolicyCfg {
+    /// Bounds for log σ (paper Table 4: [-5, 2] states; [-10, 2] pixels).
+    pub log_sig_lo: f32,
+    pub log_sig_hi: f32,
+    /// Method 2 on/off.
+    pub softplus_fix: bool,
+    /// Method 3 on/off.
+    pub normal_fix: bool,
+    /// Additive ε on σ (paper Appendix G uses 1e-4 for pixels where the
+    /// wider log-σ range would otherwise underflow σ itself).
+    pub sigma_eps: f32,
+    /// Linearization threshold K of eq. (2) (paper: 10).
+    pub k_threshold: f32,
+}
+
+impl Default for PolicyCfg {
+    fn default() -> Self {
+        PolicyCfg {
+            log_sig_lo: -5.0,
+            log_sig_hi: 2.0,
+            softplus_fix: true,
+            normal_fix: true,
+            sigma_eps: 0.0,
+            k_threshold: 10.0,
+        }
+    }
+}
+
+/// Stable softplus of `x = −2u` (eq. 2 of the paper): linear for `x > K`.
+#[inline]
+pub fn softplus_neg2u(x: f32, fix: bool, k: f32, p: Precision) -> f32 {
+    if fix && x > k {
+        x
+    } else {
+        let e = p.q(x.exp()); // overflows in fp16 for x > 11.09 without fix
+        p.q(p.q(1.0 + e).ln())
+    }
+}
+
+/// Derivative of [`softplus_neg2u`] w.r.t. `x`: 1 in the linear region,
+/// `e/(1+e)` otherwise. Without the fix the division ∞/∞ = NaN is the
+/// backward overflow the paper pinpoints.
+#[inline]
+pub fn softplus_neg2u_grad(x: f32, fix: bool, k: f32, p: Precision) -> f32 {
+    if fix && x > k {
+        1.0
+    } else {
+        let e = p.q(x.exp());
+        p.q(e / p.q(1.0 + e))
+    }
+}
+
+/// Forward result + caches of the tanh-Gaussian head over a batch.
+#[derive(Debug, Clone)]
+pub struct TanhGaussian {
+    /// Pre-squash sample `u = μ + ε σ`, shape `[B, A]`.
+    pub u: Tensor,
+    /// Action `a = tanh(u)`, shape `[B, A]`.
+    pub a: Tensor,
+    /// Per-sample log-probability `log π(a|s)`, length `B`.
+    pub logp: Vec<f32>,
+    cfg: PolicyCfg,
+    prec: Precision,
+    act_dim: usize,
+    // caches for backward
+    mu: Vec<f32>,
+    eps: Vec<f32>,
+    sigma: Vec<f32>,
+    exp_ls: Vec<f32>, // dσ/d(log σ)
+    t_bound: Vec<f32>, // tanh(raw log σ) for the bound backward
+}
+
+impl TanhGaussian {
+    /// `head` is the trunk output `[B, 2A]` = `[μ | raw log σ]`;
+    /// `eps` is standard normal noise `[B, A]`.
+    pub fn forward(head: &Tensor, eps: &Tensor, cfg: PolicyCfg, prec: Precision) -> Self {
+        let b = head.rows();
+        let two_a = head.cols();
+        assert_eq!(two_a % 2, 0);
+        let a_dim = two_a / 2;
+        assert_eq!(eps.shape, vec![b, a_dim]);
+        let p = prec;
+
+        let n = b * a_dim;
+        let mut mu = vec![0.0f32; n];
+        let mut sigma = vec![0.0f32; n];
+        let mut exp_ls = vec![0.0f32; n];
+        let mut t_bound = vec![0.0f32; n];
+        let mut ls = vec![0.0f32; n];
+        let half_range = p.q(0.5 * (cfg.log_sig_hi - cfg.log_sig_lo));
+        for r in 0..b {
+            let row = head.row(r);
+            for i in 0..a_dim {
+                let idx = r * a_dim + i;
+                mu[idx] = row[i];
+                let raw = row[a_dim + i];
+                let t = p.q(raw.tanh());
+                t_bound[idx] = t;
+                // log σ = lo + (hi-lo)/2 · (tanh(raw)+1)
+                ls[idx] = p.q(cfg.log_sig_lo + half_range * p.q(t + 1.0));
+                let e = p.q(ls[idx].exp());
+                exp_ls[idx] = e;
+                sigma[idx] = p.q(e + cfg.sigma_eps);
+            }
+        }
+
+        let mut u = Tensor::zeros(&[b, a_dim]);
+        let mut a = Tensor::zeros(&[b, a_dim]);
+        let mut logp = vec![0.0f32; b];
+        for r in 0..b {
+            let mut acc = 0.0f32;
+            for i in 0..a_dim {
+                let idx = r * a_dim + i;
+                let ev = eps.data[idx];
+                let uv = p.q(mu[idx] + p.q(ev * sigma[idx]));
+                u.data[idx] = uv;
+                a.data[idx] = p.q(uv.tanh());
+
+                // Normal log-density (up to the constant)
+                let nl = if cfg.normal_fix {
+                    let rr = p.q(p.q(uv - mu[idx]) / sigma[idx]);
+                    let r2 = p.q(rr * rr);
+                    p.q(-0.5 * r2 - ls[idx] - HALF_LOG_2PI)
+                } else {
+                    let d = p.q(uv - mu[idx]);
+                    let d2 = p.q(d * d);
+                    let s2 = p.q(sigma[idx] * sigma[idx]);
+                    let r2 = p.q(d2 / s2);
+                    p.q(-0.5 * r2 - ls[idx] - HALF_LOG_2PI)
+                };
+
+                // tanh correction: log(1-a²) = 2(log2 - u - softplus(-2u))
+                let x = p.q(-2.0 * uv);
+                let sp = softplus_neg2u(x, cfg.softplus_fix, cfg.k_threshold, p);
+                let tc = p.q(2.0 * p.q(LOG_2 - uv - sp));
+
+                acc += p.q(nl - tc);
+            }
+            logp[r] = p.q(acc);
+        }
+
+        TanhGaussian {
+            u,
+            a,
+            logp,
+            cfg,
+            prec,
+            act_dim: a_dim,
+            mu,
+            eps: eps.data.clone(),
+            sigma,
+            exp_ls,
+            t_bound,
+        }
+    }
+
+    /// Backward pass. `coef_logp[b]` is ∂loss/∂logp[b]; `da` (if present)
+    /// is ∂loss/∂a (the Q-value path of the actor loss). Returns the
+    /// gradient w.r.t. the trunk head `[B, 2A]`.
+    pub fn backward(&self, coef_logp: &[f32], da: Option<&Tensor>) -> Tensor {
+        let p = self.prec;
+        let b = self.logp.len();
+        let a_dim = self.act_dim;
+        assert_eq!(coef_logp.len(), b);
+        let cfg = &self.cfg;
+        let half_range = p.q(0.5 * (cfg.log_sig_hi - cfg.log_sig_lo));
+        let mut dhead = Tensor::zeros(&[b, 2 * a_dim]);
+
+        for r in 0..b {
+            let coef = coef_logp[r];
+            for i in 0..a_dim {
+                let idx = r * a_dim + i;
+                let uv = self.u.data[idx];
+                let av = self.a.data[idx];
+                let sg = self.sigma[idx];
+                let muv = self.mu[idx];
+                let ev = self.eps[idx];
+
+                // -- logπ partials --------------------------------------
+                // normal part
+                let (dnl_du, dnl_dmu, dnl_dsigma) = if cfg.normal_fix {
+                    let rr = p.q(p.q(uv - muv) / sg);
+                    let inv_s = p.q(1.0 / sg);
+                    let dnl_du = p.q(-rr * inv_s);
+                    let dnl_dmu = p.q(rr * inv_s);
+                    let dnl_dsigma = p.q(p.q(rr * rr) * inv_s);
+                    (dnl_du, dnl_dmu, dnl_dsigma)
+                } else {
+                    let d = p.q(uv - muv);
+                    let s2 = p.q(sg * sg);
+                    let dd = p.q(-d / s2); // ∂nl/∂d
+                    let d2 = p.q(d * d);
+                    // ∂nl/∂σ = d²/σ³ = (d²/σ²)·(1/σ)
+                    let dnl_dsigma = p.q(p.q(d2 / s2) / sg);
+                    (dd, p.q(-dd), dnl_dsigma)
+                };
+                // tanh-correction part: tc = 2(log2 - u - sp(x)), x = -2u
+                // ∂tc/∂u = 2(-1 - sp'(x)·(-2)) = 2(-1 + 2 sp'(x))
+                let x = p.q(-2.0 * uv);
+                let spg = softplus_neg2u_grad(x, cfg.softplus_fix, cfg.k_threshold, p);
+                let dtc_du = p.q(2.0 * p.q(-1.0 + 2.0 * spg));
+
+                // logp = Σ (nl - tc)
+                let dlogp_du = p.q(dnl_du - dtc_du);
+
+                // -- assemble total gradients ---------------------------
+                // action path: da/du = 1 - a²
+                let mut gu = p.q(coef * dlogp_du);
+                if let Some(dat) = da {
+                    let one_m_a2 = p.q(1.0 - p.q(av * av));
+                    gu = p.q(gu + p.q(dat.data[idx] * one_m_a2));
+                }
+                // μ: direct + through u (du/dμ = 1)
+                let gmu = p.q(gu + p.q(coef * dnl_dmu));
+                // σ: through u (du/dσ = ε) + direct
+                let gsigma = p.q(p.q(gu * ev) + p.q(coef * dnl_dsigma));
+                // log σ: dσ/d(logσ) = exp(logσ); direct ∂nl/∂lsσ = -1
+                let gls = p.q(p.q(gsigma * self.exp_ls[idx]) - coef);
+                // through the tanh bound: d ls / d raw = half_range·(1-t²)
+                let t = self.t_bound[idx];
+                let dbound = p.q(half_range * p.q(1.0 - p.q(t * t)));
+                let graw = p.q(gls * dbound);
+
+                dhead.data[r * 2 * a_dim + i] = gmu;
+                dhead.data[r * 2 * a_dim + a_dim + i] = graw;
+            }
+        }
+        dhead
+    }
+
+    /// Deterministic action `tanh(μ)` (evaluation-time policy).
+    pub fn mean_action(head: &Tensor, prec: Precision) -> Tensor {
+        let b = head.rows();
+        let a_dim = head.cols() / 2;
+        let mut a = Tensor::zeros(&[b, a_dim]);
+        for r in 0..b {
+            for i in 0..a_dim {
+                a.data[r * a_dim + i] = prec.q(head.row(r)[i].tanh());
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    fn make_head(b: usize, a: usize, rng: &mut Pcg64, mu_scale: f32, ls_raw: f32) -> (Tensor, Tensor) {
+        let mut head = Tensor::zeros(&[b, 2 * a]);
+        for r in 0..b {
+            for i in 0..a {
+                head.data[r * 2 * a + i] = rng.normal_f32() * mu_scale;
+                head.data[r * 2 * a + a + i] = ls_raw + rng.normal_f32() * 0.3;
+            }
+        }
+        let mut eps = Tensor::zeros(&[b, a]);
+        rng.normal_fill(&mut eps.data);
+        (head, eps)
+    }
+
+    /// f64 reference density for a single element.
+    fn ref_logp(mu: f64, ls: f64, eps: f64) -> f64 {
+        let sigma = ls.exp();
+        let u = mu + eps * sigma;
+        let nl = -0.5 * eps * eps - ls - 0.918938533204672_f64;
+        let tc = 2.0 * ((2.0f64).ln() - u - (-2.0 * u).exp().ln_1p());
+        nl - tc
+    }
+
+    #[test]
+    fn fp32_logp_matches_f64_reference() {
+        let mut rng = Pcg64::seed(1);
+        let cfg = PolicyCfg::default();
+        let (head, eps) = make_head(16, 4, &mut rng, 1.0, 0.0);
+        let tg = TanhGaussian::forward(&head, &eps, cfg, Precision::Fp32);
+        for r in 0..16 {
+            let mut want = 0.0f64;
+            for i in 0..4 {
+                let mu = head.data[r * 8 + i] as f64;
+                let raw = head.data[r * 8 + 4 + i] as f64;
+                let ls = -5.0 + 3.5 * (raw.tanh() + 1.0);
+                want += ref_logp(mu, ls, eps.data[r * 4 + i] as f64);
+            }
+            let got = tg.logp[r] as f64;
+            assert!((got - want).abs() < 1e-3 * (1.0 + want.abs()), "r={r}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn fix_and_nofix_agree_in_fp32() {
+        // Statement 1: the rewrites are identities in high precision.
+        let mut rng = Pcg64::seed(2);
+        let (head, eps) = make_head(8, 3, &mut rng, 1.5, 0.5);
+        let f = TanhGaussian::forward(&head, &eps, PolicyCfg::default(), Precision::Fp32);
+        let nofix = PolicyCfg { softplus_fix: false, normal_fix: false, ..Default::default() };
+        let g = TanhGaussian::forward(&head, &eps, nofix, Precision::Fp32);
+        for r in 0..8 {
+            assert!((f.logp[r] - g.logp[r]).abs() < 1e-3 * (1.0 + f.logp[r].abs()));
+        }
+        // gradients agree too
+        let coef = vec![1.0f32; 8];
+        let df = f.backward(&coef, None);
+        let dg = g.backward(&coef, None);
+        for (x, y) in df.data.iter().zip(&dg.data) {
+            assert!((x - y).abs() < 2e-3 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gradcheck_logp_fp32() {
+        let mut rng = Pcg64::seed(3);
+        let (head, eps) = make_head(2, 3, &mut rng, 0.8, 0.2);
+        let cfg = PolicyCfg::default();
+        let prec = Precision::Fp32;
+        let tg = TanhGaussian::forward(&head, &eps, cfg, prec);
+        let coef = vec![1.0f32, 1.0];
+        let dhead = tg.backward(&coef, None);
+
+        let delta = 1e-3f32;
+        let mut h2 = head.clone();
+        for idx in 0..h2.len() {
+            let o = h2.data[idx];
+            h2.data[idx] = o + delta;
+            let lp: f32 = TanhGaussian::forward(&h2, &eps, cfg, prec).logp.iter().sum();
+            h2.data[idx] = o - delta;
+            let lm: f32 = TanhGaussian::forward(&h2, &eps, cfg, prec).logp.iter().sum();
+            h2.data[idx] = o;
+            let num = (lp - lm) / (2.0 * delta);
+            let ana = dhead.data[idx];
+            assert!(
+                (num - ana).abs() < 3e-2 * (1.0 + num.abs()),
+                "idx={idx}: num={num} ana={ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradcheck_action_path_fp32() {
+        // loss = sum(a²)/2 → da = a, no logp term
+        let mut rng = Pcg64::seed(4);
+        let (head, eps) = make_head(2, 2, &mut rng, 0.5, 0.0);
+        let cfg = PolicyCfg::default();
+        let prec = Precision::Fp32;
+        let tg = TanhGaussian::forward(&head, &eps, cfg, prec);
+        let coef = vec![0.0f32; 2];
+        let dhead = tg.backward(&coef, Some(&tg.a.clone()));
+
+        let delta = 1e-3f32;
+        let mut h2 = head.clone();
+        let loss = |h: &Tensor| -> f32 {
+            TanhGaussian::forward(h, &eps, cfg, prec).a.data.iter().map(|v| v * v / 2.0).sum()
+        };
+        for idx in 0..h2.len() {
+            let o = h2.data[idx];
+            h2.data[idx] = o + delta;
+            let lp = loss(&h2);
+            h2.data[idx] = o - delta;
+            let lm = loss(&h2);
+            h2.data[idx] = o;
+            let num = (lp - lm) / (2.0 * delta);
+            assert!(
+                (num - dhead.data[idx]).abs() < 3e-2 * (1.0 + num.abs()),
+                "idx={idx}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_softplus_fix_overflows_fp16_backward() {
+        // Large positive μ → u ≈ 8 → x = -2u = -16: fine this side.
+        // Large NEGATIVE u → x = -2u = +16 → exp(x) overflows fp16.
+        let mut head = Tensor::zeros(&[1, 2]);
+        head.data[0] = -8.0; // μ → u ≈ -8
+        head.data[1] = -3.0; // small σ
+        let eps = Tensor::zeros(&[1, 1]);
+        let prec = Precision::fp16();
+        let nofix = PolicyCfg { softplus_fix: false, normal_fix: true, ..Default::default() };
+        let tg = TanhGaussian::forward(&head, &eps, nofix, prec);
+        assert!(
+            !tg.logp[0].is_finite(),
+            "forward should already blow up: logp={}",
+            tg.logp[0]
+        );
+        let d = tg.backward(&[1.0], None);
+        assert!(d.has_nonfinite(), "backward must produce NaN/∞");
+
+        // with the fix everything is finite
+        let fix = PolicyCfg::default();
+        let tg = TanhGaussian::forward(&head, &eps, fix, prec);
+        assert!(tg.logp[0].is_finite());
+        let d = tg.backward(&[1.0], None);
+        assert!(!d.has_nonfinite());
+    }
+
+    #[test]
+    fn normal_fix_survives_small_sigma_in_fp16() {
+        // raw log σ → lower bound: σ = e^-5 ≈ 6.7e-3 → σ² ≈ 4.5e-5 is
+        // subnormal fp16 (min normal 6.1e-5): (u-μ)²/σ² loses most bits,
+        // and with the pixels bound (lo = -10) σ² underflows to 0
+        // entirely → ±∞ ratios.
+        let mut head = Tensor::zeros(&[1, 2]);
+        head.data[0] = 0.3;
+        head.data[1] = -20.0; // tanh → -1 → log σ at the lower bound
+        let mut eps = Tensor::zeros(&[1, 1]);
+        eps.data[0] = 1.5;
+        let prec = Precision::fp16();
+        let pix_nofix = PolicyCfg {
+            log_sig_lo: -10.0,
+            normal_fix: false,
+            softplus_fix: true,
+            ..Default::default()
+        };
+        let tg = TanhGaussian::forward(&head, &eps, pix_nofix, prec);
+        assert!(
+            !tg.logp[0].is_finite(),
+            "σ² underflow should give non-finite logp, got {}",
+            tg.logp[0]
+        );
+        let pix_fix = PolicyCfg { log_sig_lo: -10.0, normal_fix: true, softplus_fix: true, ..Default::default() };
+        let tg = TanhGaussian::forward(&head, &eps, pix_fix, prec);
+        assert!(tg.logp[0].is_finite(), "normal-fix must survive: {}", tg.logp[0]);
+    }
+
+    #[test]
+    fn mean_action_is_tanh_mu() {
+        let head = Tensor::from_vec(&[1, 4], vec![0.5, -2.0, 0.0, 0.0]);
+        let a = TanhGaussian::mean_action(&head, Precision::Fp32);
+        assert!((a.data[0] - 0.5f32.tanh()).abs() < 1e-6);
+        assert!((a.data[1] - (-2.0f32).tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn actions_are_bounded() {
+        let mut rng = Pcg64::seed(5);
+        let (head, eps) = make_head(32, 6, &mut rng, 5.0, 1.0);
+        let tg = TanhGaussian::forward(&head, &eps, PolicyCfg::default(), Precision::fp16());
+        for &v in &tg.a.data {
+            assert!((-1.0..=1.0).contains(&v));
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! Metrics, CSV series output, and the log-scale histogram used for the
+//! paper's Figure 6 gradient-distribution plot.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A named time series: `(x, y)` rows written as CSV.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Mean of the y values (used for end-of-training scores).
+    pub fn mean_y(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Last y value.
+    pub fn last_y(&self) -> f64 {
+        self.points.last().map(|p| p.1).unwrap_or(0.0)
+    }
+}
+
+/// Write a set of series sharing an x-axis to one CSV file:
+/// `x, <name1>, <name2>, ...` (rows joined on exact x; missing = empty).
+pub fn write_csv(path: &Path, series: &[Series]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut xs: Vec<f64> = series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.dedup();
+    let mut out = String::new();
+    out.push('x');
+    for s in series {
+        let _ = write!(out, ",{}", s.name);
+    }
+    out.push('\n');
+    for &x in &xs {
+        let _ = write!(out, "{x}");
+        for s in series {
+            match s.points.iter().find(|p| p.0 == x) {
+                Some(p) => {
+                    let _ = write!(out, ",{}", p.1);
+                }
+                None => out.push(','),
+            }
+        }
+        out.push('\n');
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(out.as_bytes())
+}
+
+/// Mean and (population) standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Histogram with logarithmically spaced bins — Figure 6's axes are both
+/// logarithmic, so bins span decades of gradient magnitude.
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    /// Left edge of the first bin, as a power of 10.
+    pub min_exp: i32,
+    /// Right edge of the last bin, as a power of 10.
+    pub max_exp: i32,
+    /// Bins per decade.
+    pub per_decade: usize,
+    pub counts: Vec<u64>,
+    /// Values below `10^min_exp` (incl. exact zeros).
+    pub underflow: u64,
+    /// Values at or above `10^max_exp`.
+    pub overflow: u64,
+}
+
+impl LogHistogram {
+    pub fn new(min_exp: i32, max_exp: i32, per_decade: usize) -> Self {
+        assert!(max_exp > min_exp);
+        let nbins = ((max_exp - min_exp) as usize) * per_decade;
+        LogHistogram { min_exp, max_exp, per_decade, counts: vec![0; nbins], underflow: 0, overflow: 0 }
+    }
+
+    /// Record |x|.
+    pub fn record(&mut self, x: f32) {
+        let a = x.abs() as f64;
+        if a <= 0.0 || !a.is_finite() {
+            self.underflow += u64::from(a <= 0.0);
+            self.overflow += u64::from(a.is_infinite());
+            return;
+        }
+        let pos = (a.log10() - self.min_exp as f64) * self.per_decade as f64;
+        if pos < 0.0 {
+            self.underflow += 1;
+        } else if pos as usize >= self.counts.len() {
+            self.overflow += 1;
+        } else {
+            self.counts[pos as usize] += 1;
+        }
+    }
+
+    pub fn record_all(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.record(x);
+        }
+    }
+
+    /// Bin centers (geometric) and counts, for plotting/CSV.
+    pub fn bins(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| {
+                let e = self.min_exp as f64 + (i as f64 + 0.5) / self.per_decade as f64;
+                (10f64.powf(e), c)
+            })
+            .collect()
+    }
+
+    /// Number of decades spanned by non-empty bins — the "orders of
+    /// magnitude of dynamic range" headline of Figure 6.
+    pub fn occupied_decades(&self) -> f64 {
+        let first = self.counts.iter().position(|&c| c > 0);
+        let last = self.counts.iter().rposition(|&c| c > 0);
+        match (first, last) {
+            (Some(f), Some(l)) => (l - f + 1) as f64 / self.per_decade as f64,
+            _ => 0.0,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_bins_by_decade() {
+        let mut h = LogHistogram::new(-8, 0, 1);
+        h.record_all(&[1e-7, 2e-7, 1e-3, 0.5]);
+        let bins = h.bins();
+        assert_eq!(bins.len(), 8);
+        // 1e-7 and 2e-7 fall in the [-7,-6) decade = index 1
+        assert_eq!(h.counts[1], 2);
+        assert_eq!(h.counts[5], 1); // 1e-3 ∈ [1e-3, 1e-2) = index 5
+        assert_eq!(h.counts[7], 1); // 0.5
+        assert_eq!(h.total(), 4);
+    }
+
+    #[test]
+    fn histogram_under_overflow() {
+        let mut h = LogHistogram::new(-4, 0, 1);
+        h.record(0.0);
+        h.record(1e-9);
+        h.record(10.0);
+        h.record(f32::INFINITY);
+        assert_eq!(h.underflow, 2);
+        assert_eq!(h.overflow, 2);
+    }
+
+    #[test]
+    fn occupied_decades() {
+        let mut h = LogHistogram::new(-8, 0, 2);
+        h.record(1e-7);
+        h.record(1e-2);
+        let d = h.occupied_decades();
+        assert!(d >= 5.0, "d={d}");
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut a = Series::new("fp32");
+        a.push(0.0, 1.0);
+        a.push(1.0, 2.0);
+        let mut b = Series::new("fp16");
+        b.push(0.0, 0.5);
+        let dir = std::env::temp_dir().join("lprl_test_csv");
+        let path = dir.join("t.csv");
+        write_csv(&path, &[a, b]).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with("x,fp32,fp16\n"));
+        assert!(s.contains("0,1,0.5"));
+        assert!(s.contains("1,2,"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("s");
+        s.push(0.0, 2.0);
+        s.push(1.0, 4.0);
+        assert_eq!(s.mean_y(), 3.0);
+        assert_eq!(s.last_y(), 4.0);
+    }
+}

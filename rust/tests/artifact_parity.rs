@@ -1,0 +1,104 @@
+//! Cross-engine parity: the native Rust engine and the AOT JAX artifact
+//! must implement the *same* computation. We load the artifact's initial
+//! actor weights into the native `Mlp` and check that both engines
+//! produce the same actions for the same observations and noise.
+//!
+//! Skips cleanly if `make artifacts` hasn't run.
+
+use lprl::lowp::Precision;
+use lprl::nn::{Mlp, Tensor};
+use lprl::rngs::Pcg64;
+use lprl::runtime::TrainSession;
+use lprl::sac::TanhGaussian;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+/// Build a native Mlp whose weights are the artifact's initial actor.
+fn native_actor(sess: &TrainSession, o: usize, a: usize, hidden: usize) -> Mlp {
+    let mut rng = Pcg64::seed(0);
+    let mut mlp = Mlp::new("actor", &[o, hidden, hidden, 2 * a], &mut rng);
+    for (i, layer) in mlp.layers.iter_mut().enumerate() {
+        let w = sess.state_leaf(&format!("state.params.actor.l{i}.w")).unwrap();
+        let b = sess.state_leaf(&format!("state.params.actor.l{i}.b")).unwrap();
+        layer.w.w.copy_from_slice(&w);
+        layer.b.w.copy_from_slice(&b);
+    }
+    mlp
+}
+
+#[test]
+fn native_and_artifact_actions_agree_fp32() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let mut sess = TrainSession::new(&dir, "fp32").unwrap();
+    let (o, a, _) = sess.dims();
+    let hidden = sess.runtime.manifest.dim("hidden").unwrap();
+    let mut actor = native_actor(&sess, o, a, hidden);
+
+    let mut rng = Pcg64::seed(17);
+    for trial in 0..20 {
+        let obs: Vec<f32> = (0..o).map(|_| rng.normal_f32()).collect();
+        let eps: Vec<f32> = (0..a).map(|_| rng.normal_f32()).collect();
+        let art_action = sess.act(&obs, &eps).unwrap();
+        let head = actor.forward(&Tensor::from_vec(&[1, o], obs.clone()), Precision::Fp32);
+        let tg = TanhGaussian::forward(
+            &head,
+            &Tensor::from_vec(&[1, a], eps.clone()),
+            Default::default(),
+            Precision::Fp32,
+        );
+        for i in 0..a {
+            let (x, y) = (art_action[i], tg.a.data[i]);
+            assert!(
+                (x - y).abs() < 2e-3,
+                "trial {trial} dim {i}: artifact {x} vs native {y}"
+            );
+        }
+    }
+}
+
+#[test]
+fn native_and_artifact_actions_agree_fp16_ours() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut sess = TrainSession::new(&dir, "fp16_ours").unwrap();
+    let (o, a, _) = sess.dims();
+    let hidden = sess.runtime.manifest.dim("hidden").unwrap();
+    let mut actor = native_actor(&sess, o, a, hidden);
+    let prec = Precision::fp16();
+
+    let mut rng = Pcg64::seed(23);
+    let mut max_err = 0.0f32;
+    for _ in 0..20 {
+        let obs: Vec<f32> = (0..o).map(|_| rng.normal_f32()).collect();
+        let eps: Vec<f32> = (0..a).map(|_| rng.normal_f32()).collect();
+        let art_action = sess.act(&obs, &eps).unwrap();
+        let head = actor.forward(&Tensor::from_vec(&[1, o], obs.clone()), prec);
+        let tg = TanhGaussian::forward(
+            &head,
+            &Tensor::from_vec(&[1, a], eps.clone()),
+            Default::default(),
+            prec,
+        );
+        for i in 0..a {
+            max_err = max_err.max((art_action[i] - tg.a.data[i]).abs());
+        }
+    }
+    // fp16 engines may differ by a few ulps through the MLP (XLA fuses,
+    // the native engine rounds per tensor-op); actions live in [-1,1]
+    assert!(max_err < 2e-2, "max action error {max_err}");
+}
+
+#[test]
+fn artifact_weights_are_f16_representable_for_fp16_variants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let sess = TrainSession::new(&dir, "fp16_ours").unwrap();
+    let w = sess.state_leaf("state.params.actor.l0.w").unwrap();
+    for &v in &w {
+        assert!(lprl::lowp::FP16.is_representable(v), "{v}");
+    }
+}

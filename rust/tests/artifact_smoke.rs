@@ -1,0 +1,119 @@
+//! Integration: load the AOT artifacts, run train steps and policy
+//! inference for every variant, and check the paper's headline numerics
+//! claims across engines (fp16_ours stays finite; fp32 and fp16_ours
+//! agree closely; fp16_naive degrades or dies).
+//!
+//! Requires `make artifacts` (skips cleanly when absent so `cargo test`
+//! works on a fresh checkout).
+
+use lprl::rngs::Pcg64;
+use lprl::runtime::TrainSession;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.txt").exists().then_some(dir)
+}
+
+struct FakeBatch {
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: Vec<f32>,
+    next_obs: Vec<f32>,
+    not_done: Vec<f32>,
+    eps_next: Vec<f32>,
+    eps_cur: Vec<f32>,
+}
+
+fn fake_batch(b: usize, o: usize, a: usize, rng: &mut Pcg64) -> FakeBatch {
+    fn v(rng: &mut Pcg64, n: usize, s: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * s).collect()
+    }
+    FakeBatch {
+        obs: v(rng, b * o, 1.0),
+        act: v(rng, b * a, 0.5).iter().map(|x| x.clamp(-1.0, 1.0)).collect(),
+        rew: (0..b).map(|_| rng.uniform_f32()).collect(),
+        next_obs: v(rng, b * o, 1.0),
+        not_done: vec![1.0; b],
+        eps_next: v(rng, b * a, 1.0),
+        eps_cur: v(rng, b * a, 1.0),
+    }
+}
+
+fn run_steps(variant: &str, n: usize, seed: u64) -> Vec<[f32; 4]> {
+    let dir = artifacts_dir().unwrap();
+    let mut sess = TrainSession::new(&dir, variant).expect("session");
+    let (o, a, b) = sess.dims();
+    let mut rng = Pcg64::seed(seed);
+    let mut out = Vec::new();
+    for _ in 0..n {
+        let fb = fake_batch(b, o, a, &mut rng);
+        let m = sess
+            .step(&fb.obs, &fb.act, &fb.rew, &fb.next_obs, &fb.not_done, &fb.eps_next, &fb.eps_cur)
+            .expect("step");
+        out.push(m);
+    }
+    out
+}
+
+#[test]
+fn all_variants_step_and_act() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    for variant in ["fp32", "fp16_ours", "fp16_naive"] {
+        let mut sess = TrainSession::new(&dir, variant).expect(variant);
+        let (o, a, b) = sess.dims();
+        assert!(o > 0 && a > 0 && b > 0);
+        let mut rng = Pcg64::seed(1);
+        let fb = fake_batch(b, o, a, &mut rng);
+        let m = sess
+            .step(&fb.obs, &fb.act, &fb.rew, &fb.next_obs, &fb.not_done, &fb.eps_next, &fb.eps_cur)
+            .expect("step");
+        // fp32 and ours must be finite on step one; naive may already NaN
+        if variant != "fp16_naive" {
+            assert!(m.iter().all(|x| x.is_finite()), "{variant}: {m:?}");
+        }
+        let action = sess.act(&vec![0.1; o], &vec![0.3; a]).expect("act");
+        assert_eq!(action.len(), a);
+        if variant != "fp16_naive" {
+            assert!(action.iter().all(|x| x.is_finite() && x.abs() <= 1.0), "{variant}: {action:?}");
+        }
+    }
+}
+
+#[test]
+fn fp16_ours_tracks_fp32_metrics() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let m32 = run_steps("fp32", 10, 42);
+    let m16 = run_steps("fp16_ours", 10, 42);
+    for (a, b) in m32.iter().zip(&m16) {
+        assert!(b.iter().all(|x| x.is_finite()), "fp16_ours must stay finite: {b:?}");
+        // critic loss within a loose factor (identical batches, same seed)
+        let (l32, l16) = (a[0].max(1e-4), b[0].max(1e-4));
+        let ratio = (l32 / l16).max(l16 / l32);
+        assert!(ratio < 3.0, "losses diverged: {l32} vs {l16}");
+    }
+}
+
+#[test]
+fn fp16_ours_state_stays_finite_over_many_steps() {
+    if artifacts_dir().is_none() {
+        return;
+    }
+    let metrics = run_steps("fp16_ours", 30, 7);
+    let last = metrics.last().unwrap();
+    assert!(last.iter().all(|x| x.is_finite()), "{last:?}");
+}
+
+#[test]
+fn state_leaf_access() {
+    let Some(dir) = artifacts_dir() else { return };
+    let sess = TrainSession::new(&dir, "fp32").unwrap();
+    let t = sess.state_leaf("state.t").expect("t leaf");
+    assert_eq!(t, vec![0.0]);
+    let la = sess.state_leaf("state.params.log_alpha").expect("log_alpha");
+    assert!((la[0] - 0.1f32.ln()).abs() < 1e-5);
+}
