@@ -15,7 +15,7 @@ Manifest grammar (one token stream per line):
     out <name> f32 <dims>
     state <variant> <file> <n_leaves>
 
-Run via ``make artifacts`` (no-op when outputs are newer than sources).
+Run via ``python python/compile/aot.py --out artifacts``.
 """
 
 import argparse

@@ -1,0 +1,8 @@
+"""Pytest bootstrap: make the `compile` package importable when the suite
+is invoked from the repository root (`python -m pytest python/tests -q`),
+which is how CI and the quickstart run it."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,129 @@
+//! Bench: the blocked GEMM backend vs the seed's row-parallel scalar
+//! GEMMs (`nn::gemm::reference`), at SAC-sized shapes. Writes the
+//! results to `BENCH_gemm.json` at the repository root so the perf
+//! trajectory is tracked from PR 1 onward.
+//!
+//! ```bash
+//! cargo bench --bench gemm_blocked            # full run, writes JSON
+//! cargo bench --bench gemm_blocked -- --test  # CI smoke: tiny shapes
+//! ```
+
+use lprl::nn::gemm::{self, reference};
+use lprl::rngs::Pcg64;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+type GemmFn = fn(&[f32], &[f32], &mut [f32], usize, usize, usize);
+
+struct Row {
+    op: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    blocked_ms: f64,
+    reference_ms: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.reference_ms / self.blocked_ms
+    }
+
+    fn gflops(&self) -> f64 {
+        2.0 * (self.m * self.k * self.n) as f64 / (self.blocked_ms * 1e6)
+    }
+}
+
+/// Median-of-iters wall time for one gemm call, in ms.
+#[allow(clippy::too_many_arguments)]
+fn time_ms(f: GemmFn, a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize, iters: usize) -> f64 {
+    // warmup (also faults in the buffers)
+    c.iter_mut().for_each(|v| *v = 0.0);
+    f(a, b, c, m, k, n);
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            c.iter_mut().for_each(|v| *v = 0.0);
+            let t0 = Instant::now();
+            f(a, b, c, m, k, n);
+            t0.elapsed().as_secs_f64() * 1000.0
+        })
+        .collect();
+    std::hint::black_box(&c);
+    times.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    times[times.len() / 2]
+}
+
+fn bench_shape(m: usize, k: usize, n: usize, iters: usize, rng: &mut Pcg64) -> Vec<Row> {
+    let cases: [(&'static str, GemmFn, GemmFn, usize, usize); 3] = [
+        // (op, blocked, reference, a_len, b_len)
+        ("gemm", gemm::gemm, reference::gemm, m * k, k * n),
+        ("gemm_nt", gemm::gemm_nt, reference::gemm_nt, m * k, n * k),
+        ("gemm_tn", gemm::gemm_tn, reference::gemm_tn, k * m, k * n),
+    ];
+    let mut rows = Vec::new();
+    for (op, blocked, refr, a_len, b_len) in cases {
+        let a: Vec<f32> = (0..a_len).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..b_len).map(|_| rng.normal_f32()).collect();
+        let mut c = vec![0.0f32; m * n];
+        let blocked_ms = time_ms(blocked, &a, &b, &mut c, m, k, n, iters);
+        let reference_ms = time_ms(refr, &a, &b, &mut c, m, k, n, iters.max(2));
+        let row = Row { op, m, k, n, blocked_ms, reference_ms };
+        println!(
+            "{op:<8} {m:>5}x{k:<5}x{n:<5} blocked {blocked_ms:>9.2} ms ({:>6.1} GFLOP/s)  seed {reference_ms:>9.2} ms  speedup {:>5.2}x",
+            row.gflops(),
+            row.speedup()
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+fn write_json(rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"gemm\",\n  \"unit\": \"ms\",\n  \"shapes\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"op\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"blocked_ms\": {:.4}, \"reference_ms\": {:.4}, \"speedup\": {:.3}, \"blocked_gflops\": {:.2}}}",
+            r.op, r.m, r.k, r.n, r.blocked_ms, r.reference_ms, r.speedup(), r.gflops()
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    // repo root = parent of the package dir
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_gemm.json");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let mut rng = Pcg64::seed(1);
+    let mut rows = Vec::new();
+    if smoke {
+        // CI smoke: exercise both the pooled and serial paths quickly
+        println!("gemm bench smoke (--test): tiny shapes, no JSON");
+        rows.extend(bench_shape(48, 64, 56, 2, &mut rng));
+        rows.extend(bench_shape(130, 70, 90, 2, &mut rng));
+        return;
+    }
+    println!("blocked GEMM backend vs seed row-parallel scalar GEMM:");
+    // SAC-sized hot shapes: hidden 1024, batch 512 (acceptance shape),
+    // plus a mid-size shape closer to the scaled-down CPU configs.
+    rows.extend(bench_shape(512, 1024, 1024, 5, &mut rng));
+    rows.extend(bench_shape(256, 256, 256, 9, &mut rng));
+    rows.extend(bench_shape(64, 1024, 1024, 5, &mut rng));
+    match write_json(&rows) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
+    }
+    let worst = rows
+        .iter()
+        .filter(|r| r.m * r.k * r.n >= 512 * 1024 * 1024)
+        .map(Row::speedup)
+        .fold(f64::INFINITY, f64::min);
+    println!("minimum speedup at SAC scale: {worst:.2}x (target >= 3x)");
+}

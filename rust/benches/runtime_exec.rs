@@ -2,7 +2,8 @@
 //! per policy-inference call, for every variant. Measures the L3 hot
 //! path of the three-layer architecture (host-copy overhead included).
 //!
-//! Requires `make artifacts`; exits cleanly when missing.
+//! Requires AOT artifacts (`python python/compile/aot.py`); exits
+//! cleanly when missing.
 
 use lprl::rngs::Pcg64;
 use lprl::runtime::TrainSession;
@@ -10,7 +11,7 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        println!("skipping runtime bench: run `make artifacts` first");
+        println!("skipping runtime bench: generate artifacts with `python python/compile/aot.py` first");
         return Ok(());
     }
     for variant in ["fp32", "fp16_naive", "fp16_ours"] {

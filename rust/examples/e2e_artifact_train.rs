@@ -7,7 +7,7 @@
 //! and reports the loss/return comparison (naive fp16 for contrast).
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example e2e_artifact_train
+//! python python/compile/aot.py --out artifacts && cargo run --release --example e2e_artifact_train
 //! ```
 
 use lprl::envs::{action_repeat, make_env, sanitize_action};
@@ -111,7 +111,7 @@ fn run_variant(variant: &str, env_steps: usize) -> anyhow::Result<(f64, bool)> {
 
 fn main() -> anyhow::Result<()> {
     if !std::path::Path::new("artifacts/manifest.txt").exists() {
-        anyhow::bail!("run `make artifacts` first");
+        anyhow::bail!("generate artifacts with `python python/compile/aot.py --out artifacts` first");
     }
     let steps: usize = std::env::args()
         .nth(1)

@@ -3,7 +3,7 @@
 //! the paper: finger_spin, cartpole_swingup, reacher_easy, cheetah_run,
 //! walker_walk, ball_in_cup_catch.
 //!
-//! Substitution note (see DESIGN.md): the tasks are low-dimensional
+//! Substitution note (see README.md): the tasks are low-dimensional
 //! rigid-body / ODE systems with the dm_control task *shape* — actions in
 //! `[-1,1]^n`, per-step rewards in `[0,1]` via the same smooth
 //! [`tolerance`] shaping dm_control uses, 1000-step episodes with the

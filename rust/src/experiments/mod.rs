@@ -1,5 +1,5 @@
 //! Experiment harness: one driver per figure/table of the paper's
-//! evaluation (see DESIGN.md for the full index). Every driver prints
+//! evaluation (`lprl exp <name>`; list below in [`run`]). Every driver prints
 //! the paper-shaped rows/series to stdout and writes CSVs under
 //! `<out_dir>/<exp>/`.
 //!

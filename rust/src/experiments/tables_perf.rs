@@ -1,7 +1,7 @@
 //! Tables 2/10 (time per minibatch) and Tables 3/11 (memory), as a
 //! function of network width and batch size, fp32 vs fp16(ours).
 //!
-//! Substitution note (EXPERIMENTS.md): the paper measures V100 CUDA
+//! Substitution note (README.md): the paper measures V100 CUDA
 //! kernels where fp16 halves both time and memory. Here fp16 is
 //! *software-simulated* on CPU, so wall-clock cannot reproduce literally;
 //! we report (a) measured CPU ms (simulation overhead called out), (b)
@@ -66,7 +66,7 @@ pub fn run_speed(opts: &ExpOpts, pixels: bool) -> anyhow::Result<()> {
         ("Table 10 (states)", vec![(128, 64), (128, 256), (512, 64), (512, 256)])
     };
     let iters = if pixels { 4 } else { 20 };
-    println!("{name} — ms per minibatch (CPU; fp16 is software-simulated, see EXPERIMENTS.md):");
+    println!("{name} — ms per minibatch (CPU; fp16 is software-simulated, see README.md):");
     println!(
         "{:<14} {:>10} {:>12} {:>10} {:>12}",
         "width/bsize", "fp32 ms", "fp16sim ms", "meas.ratio", "model.ratio"

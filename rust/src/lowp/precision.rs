@@ -74,10 +74,27 @@ impl Precision {
     }
 
     /// Quantize a slice in place under this policy.
+    ///
+    /// The round/overflow-mode dispatch happens **once per slice**, not
+    /// once per element: the IEEE-default combination (round-to-nearest-
+    /// even, overflow→∞) — which every paper configuration uses — runs
+    /// the pure-integer [`FloatFormat::quantize_slice`] bit path over the
+    /// whole slice; only the exotic combinations take the general f64
+    /// route. Elementwise results are bitwise identical to calling
+    /// [`Precision::q`] / `quantize_with` per element (tested).
     pub fn q_slice(&self, xs: &mut [f32]) {
         match self {
             Precision::Fp32 => {}
+            Precision::Sim {
+                fmt,
+                round: RoundMode::NearestEven,
+                overflow: OverflowMode::Infinity,
+            } => fmt.quantize_slice(xs),
             Precision::Sim { fmt, round, overflow } => {
+                debug_assert!(
+                    !matches!(round, RoundMode::Stochastic),
+                    "stochastic rounding needs an RNG; use quantize_with per element"
+                );
                 for v in xs.iter_mut() {
                     *v = fmt.quantize_with(*v, *round, *overflow, None);
                 }
@@ -194,5 +211,90 @@ mod tests {
         let mut xs = vec![1.0, 1e-9, 1e9, -2.5];
         p.q_slice(&mut xs);
         assert_eq!(xs, vec![1.0, 0.0, f32::INFINITY, -2.5]);
+    }
+
+    /// Values that stress every quantizer branch: ties, subnormals,
+    /// near-overflow, signed zero, infinities.
+    fn edge_values(rng: &mut crate::rngs::Pcg64, n: usize) -> Vec<f32> {
+        let mut xs = vec![
+            0.0,
+            -0.0,
+            1.0,
+            -1.0,
+            65504.0,
+            65519.0,
+            65520.0,
+            1e6,
+            -1e6,
+            1e-9,
+            -1e-9,
+            6.1035156e-5,
+            5.9604645e-8,
+            2.9802322e-8,
+            1.0 + 4.8828125e-4,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1),
+            1e-40,
+            -1e-40,
+        ];
+        for _ in 0..n {
+            let v = f32::from_bits(rng.next_u32());
+            if !v.is_nan() {
+                xs.push(v);
+            }
+        }
+        xs
+    }
+
+    /// Acceptance check: fp16 `q_slice` (slice bit path) is bitwise
+    /// identical to per-element `quantize` / `q`.
+    #[test]
+    fn q_slice_bitwise_matches_per_element_quantize_fp16() {
+        let mut rng = crate::rngs::Pcg64::seed(17);
+        let xs = edge_values(&mut rng, 50_000);
+        let p = Precision::fp16();
+        let mut got = xs.clone();
+        p.q_slice(&mut got);
+        for (x, g) in xs.iter().zip(&got) {
+            let per_elem = FP16.quantize(*x);
+            assert_eq!(
+                g.to_bits(),
+                per_elem.to_bits(),
+                "x={x:e}: slice={g:e} elem={per_elem:e}"
+            );
+            assert_eq!(g.to_bits(), p.q(*x).to_bits(), "x={x:e} vs Precision::q");
+        }
+    }
+
+    /// `q_slice` agrees with per-element `quantize_with` for every
+    /// deterministic round/overflow combination and several formats.
+    #[test]
+    fn q_slice_matches_quantize_with_across_modes() {
+        use crate::lowp::BF16;
+        let mut rng = crate::rngs::Pcg64::seed(23);
+        let xs = edge_values(&mut rng, 20_000);
+        let rounds = [RoundMode::NearestEven, RoundMode::TowardZero];
+        let overflows = [OverflowMode::Infinity, OverflowMode::Saturate];
+        for fmt in [FP16, BF16, e5m(7), e5m(5), FloatFormat::new(4, 3)] {
+            for round in rounds {
+                for overflow in overflows {
+                    let p = Precision::Sim { fmt, round, overflow };
+                    let mut got = xs.clone();
+                    p.q_slice(&mut got);
+                    for (x, g) in xs.iter().zip(&got) {
+                        let want = fmt.quantize_with(*x, round, overflow, None);
+                        assert_eq!(
+                            g.to_bits(),
+                            want.to_bits(),
+                            "fmt=e{}m{} {round:?}/{overflow:?} x={x:e}: {g:e} vs {want:e}",
+                            fmt.exp_bits,
+                            fmt.man_bits
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -140,6 +140,13 @@ fn cmd_info() -> anyhow::Result<()> {
     println!("  L3  rust/src/                coordinator + native engine + PJRT runtime");
     println!("tasks: {} + pendulum_swingup", PLANET_TASKS.join(", "));
     let art = std::path::Path::new("artifacts/manifest.txt");
-    println!("artifacts: {}", if art.exists() { "present" } else { "missing (run `make artifacts`)" });
+    println!(
+        "artifacts: {}",
+        if art.exists() {
+            "present"
+        } else {
+            "missing (generate with `python python/compile/aot.py`; see README.md)"
+        }
+    );
     Ok(())
 }

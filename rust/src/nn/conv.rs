@@ -2,8 +2,9 @@
 //! backward. Used by the pixel encoder (paper §4.6: four 3×3 conv layers,
 //! first stride 2, rest stride 1).
 
+use super::gemm::{gemm, gemm_nt_bias_q, gemm_tn_bias_q};
 use super::param::Param;
-use super::tensor::{gemm, gemm_tn, Tensor};
+use super::tensor::Tensor;
 use crate::lowp::Precision;
 use crate::rngs::Pcg64;
 
@@ -71,24 +72,23 @@ impl Conv2d {
         self.in_shape = [b, self.cin, h, w];
         let fan = self.cin * self.k * self.k;
         let rows = b * ho * wo;
-        // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ
+        // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ, with the
+        // bias add + quantize fused into the GEMM epilogue
         let mut yrows = vec![0.0f32; rows * self.cout];
-        super::tensor::gemm_nt(&cols, &self.w.w, &mut yrows, rows, fan, self.cout);
+        gemm_nt_bias_q(&cols, &self.w.w, &mut yrows, rows, fan, self.cout, Some(&self.b.w), prec);
         self.cols_cache = cols;
-        // transpose to [B, Cout, Ho, Wo] + bias
+        // transpose the finished rows to [B, Cout, Ho, Wo]
         let mut y = Tensor::zeros(&[b, self.cout, ho, wo]);
         for bi in 0..b {
             for oy in 0..ho {
                 for ox in 0..wo {
                     let r = ((bi * ho + oy) * wo + ox) * self.cout;
                     for co in 0..self.cout {
-                        y.data[((bi * self.cout + co) * ho + oy) * wo + ox] =
-                            yrows[r + co] + self.b.w[co];
+                        y.data[((bi * self.cout + co) * ho + oy) * wo + ox] = yrows[r + co];
                     }
                 }
             }
         }
-        y.quantize(prec);
         y
     }
 
@@ -120,10 +120,9 @@ impl Conv2d {
             }
         }
         prec.q_slice(&mut self.b.g);
-        // dW[cout, fan] = dyrᵀ @ cols
+        // dW[cout, fan] = dyrᵀ @ cols (quantize fused into the epilogue)
         let mut dw = vec![0.0f32; self.cout * fan];
-        gemm_tn(&dyr, &self.cols_cache, &mut dw, self.cout, rows, fan);
-        prec.q_slice(&mut dw);
+        gemm_tn_bias_q(&dyr, &self.cols_cache, &mut dw, self.cout, rows, fan, None, prec);
         for (acc, d) in self.w.g.iter_mut().zip(&dw) {
             *acc += d;
         }

@@ -1,0 +1,779 @@
+//! Blocked, register-tiled, persistently-threaded GEMM backend — the hot
+//! path every SAC forward/backward funnels through.
+//!
+//! The seed engine computed all three GEMM variants with row-parallel
+//! scalar loops (kept verbatim in [`reference`] as the perf baseline and
+//! test oracle). This backend replaces them with:
+//!
+//! * **Cache blocking**: `KC`-deep panels of the reduction dimension and
+//!   `MC`-row task blocks keep the working set in L1/L2; transposed
+//!   operands (`gemm_nt`'s B, `gemm_tn`'s A) are packed once per panel so
+//!   the inner kernel always streams unit-stride.
+//! * **Register tiling**: a 4×16 micro-kernel accumulates into a fixed
+//!   `[[f32; NR]; MR]` block — 64 independent FMA chains the compiler
+//!   keeps in vector registers (the scalar seed loop was one chain).
+//! * **Persistent threading**: row blocks are fanned out over the
+//!   process-wide [`super::pool`] worker pool instead of spawning a
+//!   `thread::scope` per call.
+//! * **Fused epilogue**: the `*_bias_q` entry points add a per-column
+//!   bias and quantize into a [`Precision`] while the output block is
+//!   still cache-hot, collapsing `Linear::forward`'s three passes
+//!   (GEMM, bias, quantize) into one.
+//!
+//! Determinism: every output element is accumulated in ascending-`k`
+//! order within fixed `KC` panels, and the task decomposition depends
+//! only on the shape — results are **bitwise identical** for any thread
+//! count, including the serial fallback (covered by tests).
+//!
+//! Non-finite semantics: unlike the seed loops (which skipped `a == 0`
+//! terms as a sparsity shortcut), the kernels accumulate every term, so
+//! `0 × ∞ = NaN` propagates exactly as IEEE GEMM semantics dictate.
+//! This only matters in the overflow regimes the paper *studies*
+//! (fp16-naive runs that are already diverging); the amp-style
+//! skip-on-nonfinite optimizer step handles it identically either way.
+
+use super::pool;
+use crate::lowp::Precision;
+
+/// Micro-kernel rows (register tile height).
+const MR: usize = 4;
+/// Micro-kernel columns (register tile width; 2×8-wide vector lanes).
+const NR: usize = 16;
+/// Rows per parallel task block.
+const MC: usize = 64;
+/// Reduction-dimension panel depth kept cache-resident.
+const KC: usize = 256;
+/// Minimum multiply-accumulate count before fanning out to the pool.
+const PAR_MIN_MACS: usize = 1 << 16;
+
+/// Raw output pointer that may cross the pool boundary. Tasks write
+/// disjoint row ranges, so aliasing is impossible.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+impl SendPtr {
+    /// Accessor instead of field access: under Rust 2021 disjoint
+    /// capture, a closure touching `cp.0` would capture the bare
+    /// `*mut f32` (which is `!Sync`) rather than this `Sync` wrapper.
+    #[inline]
+    fn get(self) -> *mut f32 {
+        self.0
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Exec {
+    /// Fan out over the global pool when the job is large enough.
+    Auto,
+    /// Always run tasks inline, in order (tests: thread-count invariance).
+    #[cfg_attr(not(test), allow(dead_code))]
+    Serial,
+}
+
+/// `c[m,n] += a[m,k] · b[k,n]` (both row-major, no transpose).
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_bias_q(a, b, c, m, k, n, None, Precision::Fp32);
+}
+
+/// `c[m,n] += a[m,k] · b[n,k]ᵀ` — `y = x Wᵀ` with PyTorch-layout weights.
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_nt_bias_q(a, b, c, m, k, n, None, Precision::Fp32);
+}
+
+/// `c[m,n] += a[k,m]ᵀ · b[k,n]` — weight gradients `dW = dyᵀ x`.
+pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    gemm_tn_bias_q(a, b, c, m, k, n, None, Precision::Fp32);
+}
+
+/// [`gemm`] with a fused epilogue: after the product is fully
+/// accumulated, add `bias[j]` to every column (when given) and quantize
+/// the rows into `prec` — one cache-hot pass instead of three.
+pub fn gemm_bias_q(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    check_cb(c, m, n, bias);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_row_blocks(m, m * k * n, Exec::Auto, |i0, i1| {
+        unsafe { task_nn(a, b, cp.get(), i0, i1, k, n) };
+        epilogue(cp.get(), i0, i1, n, bias, prec);
+    });
+}
+
+/// [`gemm_nt`] with the fused bias+quantize epilogue.
+pub fn gemm_nt_bias_q(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_nt_impl(a, b, c, m, k, n, bias, prec, Exec::Auto);
+}
+
+/// [`gemm_tn`] with the fused bias+quantize epilogue.
+pub fn gemm_tn_bias_q(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_tn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto);
+}
+
+fn gemm_nt_impl(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    exec: Exec,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    check_cb(c, m, n, bias);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        unsafe { task_nt(a, b, cp.get(), i0, i1, k, n) };
+        epilogue(cp.get(), i0, i1, n, bias, prec);
+    });
+}
+
+fn gemm_tn_impl(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    exec: Exec,
+) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    check_cb(c, m, n, bias);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        unsafe { task_tn(a, b, cp.get(), i0, i1, m, k, n) };
+        epilogue(cp.get(), i0, i1, n, bias, prec);
+    });
+}
+
+#[cfg(test)]
+fn gemm_nn_impl_for_tests(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    exec: Exec,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        unsafe { task_nn(a, b, cp.get(), i0, i1, k, n) };
+    });
+}
+
+fn check_cb(c: &[f32], m: usize, n: usize, bias: Option<&[f32]>) {
+    assert_eq!(c.len(), m * n);
+    if let Some(b) = bias {
+        assert_eq!(b.len(), n, "bias length must equal the output width");
+    }
+}
+
+/// Split rows into `MC` blocks and run `f(i0, i1)` per block, via the
+/// pool when the job is worth it. The decomposition depends only on `m`.
+fn run_row_blocks(m: usize, macs: usize, exec: Exec, f: impl Fn(usize, usize) + Sync) {
+    if m == 0 {
+        return;
+    }
+    let ntasks = m.div_ceil(MC);
+    let body = |t: usize| {
+        let i0 = t * MC;
+        let i1 = (i0 + MC).min(m);
+        f(i0, i1);
+    };
+    let parallel = exec == Exec::Auto && ntasks > 1 && macs >= PAR_MIN_MACS;
+    if parallel {
+        pool::global().run(ntasks, body);
+    } else {
+        for t in 0..ntasks {
+            body(t);
+        }
+    }
+}
+
+/// Post-accumulation pass over one task's rows: bias add + quantize.
+fn epilogue(c: *mut f32, i0: usize, i1: usize, n: usize, bias: Option<&[f32]>, prec: Precision) {
+    if bias.is_none() && !prec.is_low() {
+        return;
+    }
+    for i in i0..i1 {
+        // safety: this task exclusively owns rows i0..i1
+        let row = unsafe { std::slice::from_raw_parts_mut(c.add(i * n), n) };
+        if let Some(bs) = bias {
+            for (v, &bv) in row.iter_mut().zip(bs) {
+                *v += bv;
+            }
+        }
+        prec.q_slice(row);
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-task bodies
+// ---------------------------------------------------------------------
+
+/// notrans · notrans: stream B panels directly (rows are unit-stride).
+unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: usize, n: usize) {
+    let mut kc = 0;
+    while kc < k {
+        let kl = KC.min(k - kc);
+        inner_tiles(
+            a.as_ptr().add(i0 * k + kc),
+            k,
+            b.as_ptr().add(kc * n),
+            n,
+            c,
+            i0,
+            i1,
+            n,
+            kl,
+        );
+        kc += KC;
+    }
+}
+
+/// notrans · transᵀ: pack Bᵀ panels so the kernel streams unit-stride.
+///
+/// Each row-block task packs its own copy of the panel: the pack is
+/// `k·n` copies against `MC·k·n` MACs of task compute (a fixed ~1/MC ≈
+/// 1.6% overhead, independent of task count), and sharing one packed
+/// panel across tasks would need a cross-task barrier per `KC` step —
+/// not worth the synchronization for that margin.
+unsafe fn task_nt(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: usize, n: usize) {
+    let mut bt = vec![0.0f32; KC.min(k) * n];
+    let mut kc = 0;
+    while kc < k {
+        let kl = KC.min(k - kc);
+        // bt[p][j] = b[j][kc + p]
+        for j in 0..n {
+            let src = &b[j * k + kc..j * k + kc + kl];
+            for (p, &v) in src.iter().enumerate() {
+                bt[p * n + j] = v;
+            }
+        }
+        inner_tiles(a.as_ptr().add(i0 * k + kc), k, bt.as_ptr(), n, c, i0, i1, n, kl);
+        kc += KC;
+    }
+}
+
+/// transᵀ · notrans: pack Aᵀ panels (A is [k, m], we need a[·][i] rows).
+unsafe fn task_tn(
+    a: &[f32],
+    b: &[f32],
+    c: *mut f32,
+    i0: usize,
+    i1: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let rows = i1 - i0;
+    let mut at = vec![0.0f32; rows * KC.min(k)];
+    let mut kc = 0;
+    while kc < k {
+        let kl = KC.min(k - kc);
+        // at[r][p] = a[kc + p][i0 + r]
+        for p in 0..kl {
+            let src = &a[(kc + p) * m..(kc + p) * m + m];
+            for r in 0..rows {
+                at[r * kl + p] = src[i0 + r];
+            }
+        }
+        inner_tiles(at.as_ptr(), kl, b.as_ptr().add(kc * n), n, c, i0, i1, n, kl);
+        kc += KC;
+    }
+}
+
+/// Sweep the (row, column) micro-tiles of one task block for one panel.
+/// `a` points at the panel base for row `i0` with row stride `a_rs`;
+/// `b` points at the panel base with row stride `b_rs`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn inner_tiles(
+    a: *const f32,
+    a_rs: usize,
+    b: *const f32,
+    b_rs: usize,
+    c: *mut f32,
+    i0: usize,
+    i1: usize,
+    n: usize,
+    kl: usize,
+) {
+    let mut j0 = 0;
+    while j0 < n {
+        let nr = NR.min(n - j0);
+        let mut i = i0;
+        while i < i1 {
+            let mr = MR.min(i1 - i);
+            let ap = a.add((i - i0) * a_rs);
+            let bp = b.add(j0);
+            let cp = c.add(i * n + j0);
+            if mr == MR && nr == NR {
+                kernel_4x16(ap, a_rs, bp, b_rs, cp, n, kl);
+            } else {
+                kernel_edge(ap, a_rs, bp, b_rs, cp, n, mr, nr, kl);
+            }
+            i += MR;
+        }
+        j0 += NR;
+    }
+}
+
+/// The full 4×16 register-tiled micro-kernel:
+/// `c[r][j] += Σ_p a[r][p] · b[p][j]` with 64 independent accumulators.
+#[inline(always)]
+unsafe fn kernel_4x16(
+    a: *const f32,
+    a_rs: usize,
+    b: *const f32,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    kl: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kl {
+        let bp = b.add(p * b_rs);
+        let a0 = *a.add(p);
+        let a1 = *a.add(a_rs + p);
+        let a2 = *a.add(2 * a_rs + p);
+        let a3 = *a.add(3 * a_rs + p);
+        for j in 0..NR {
+            let bv = *bp.add(j);
+            acc[0][j] += a0 * bv;
+            acc[1][j] += a1 * bv;
+            acc[2][j] += a2 * bv;
+            acc[3][j] += a3 * bv;
+        }
+    }
+    for (r, row) in acc.iter().enumerate() {
+        let cr = c.add(r * c_rs);
+        for (j, &v) in row.iter().enumerate() {
+            *cr.add(j) += v;
+        }
+    }
+}
+
+/// Edge-tile kernel (`mr ≤ MR`, `nr ≤ NR`) with the identical
+/// ascending-`p` accumulation order as [`kernel_4x16`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn kernel_edge(
+    a: *const f32,
+    a_rs: usize,
+    b: *const f32,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    mr: usize,
+    nr: usize,
+    kl: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kl {
+        let bp = b.add(p * b_rs);
+        for r in 0..mr {
+            let av = *a.add(r * a_rs + p);
+            for j in 0..nr {
+                acc[r][j] += av * *bp.add(j);
+            }
+        }
+    }
+    for (r, row) in acc.iter().enumerate().take(mr) {
+        let cr = c.add(r * c_rs);
+        for (j, &v) in row.iter().enumerate().take(nr) {
+            *cr.add(j) += v;
+        }
+    }
+}
+
+/// The seed engine's row-parallel scalar GEMMs, kept verbatim: the perf
+/// baseline `benches/gemm_blocked.rs` measures against, and a second
+/// oracle for the property tests.
+pub mod reference {
+    /// Threads the reference path fans out over (seed behaviour).
+    fn num_threads() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+    }
+
+    /// Seed `par_rows`: per-call `thread::scope` spawning.
+    fn par_rows(rows: usize, min_serial: usize, f: impl Fn(usize) + Sync) {
+        let nt = num_threads();
+        if rows * 2 < min_serial || nt <= 1 || rows < 2 * nt {
+            for r in 0..rows {
+                f(r);
+            }
+            return;
+        }
+        let chunk = rows.div_ceil(nt);
+        std::thread::scope(|s| {
+            for t in 0..nt {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(rows);
+                if lo >= hi {
+                    break;
+                }
+                let f = &f;
+                s.spawn(move || {
+                    for r in lo..hi {
+                        f(r);
+                    }
+                });
+            }
+        });
+    }
+
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+
+    impl SendPtr {
+        #[inline]
+        fn at(&self, off: usize) -> *mut f32 {
+            unsafe { self.0.add(off) }
+        }
+    }
+
+    /// Seed `gemm`: `c += a·b`, scalar row loop.
+    pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let cptr = SendPtr(c.as_mut_ptr());
+        par_rows(m, 64, |i| {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
+            let arow = &a[i * k..(i + 1) * k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        });
+    }
+
+    /// Seed `gemm_nt`: `c += a·bᵀ`, scalar dot products.
+    pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), n * k);
+        assert_eq!(c.len(), m * n);
+        let cptr = SendPtr(c.as_mut_ptr());
+        par_rows(m, 64, |i| {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
+            let arow = &a[i * k..(i + 1) * k];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                crow[j] += acc;
+            }
+        });
+    }
+
+    /// Seed `gemm_tn`: `c += aᵀ·b`, scalar row loop.
+    pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        assert_eq!(a.len(), k * m);
+        assert_eq!(b.len(), k * n);
+        assert_eq!(c.len(), m * n);
+        let cptr = SendPtr(c.as_mut_ptr());
+        par_rows(m, 64, |i| {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
+            for p in 0..k {
+                let av = a[p * m + i];
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::{OverflowMode, RoundMode, FP16};
+    use crate::rngs::Pcg64;
+
+    /// f64 oracle for `c = a[m,k]·b[k,n]` (row-major, no transpose).
+    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a[i * k + p] as f64 * b[p * n + j] as f64;
+                }
+                c[i * n + j] = acc as f32;
+            }
+        }
+        c
+    }
+
+    fn randn(n: usize, rng: &mut Pcg64) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    fn close(got: &[f32], want: &[f32], tag: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (x, y)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-3 * (1.0 + y.abs()),
+                "{tag}[{i}]: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Odd shapes: unit, primes, tall-skinny, wide, and sizes that cross
+    /// the MR/NR/MC/KC tile boundaries.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 4),
+        (5, 7, 3),
+        (17, 33, 9),
+        (4, 16, 16),
+        (64, 64, 64),
+        (65, 64, 17),
+        (257, 8, 3),   // tall-skinny
+        (3, 8, 257),   // wide
+        (13, 300, 40), // crosses the KC panel boundary
+        (130, 40, 70),
+    ];
+
+    #[test]
+    fn gemm_matches_f64_oracle() {
+        let mut rng = Pcg64::seed(1);
+        for &(m, k, n) in SHAPES {
+            let a = randn(m * k, &mut rng);
+            let b = randn(k * n, &mut rng);
+            let mut c = vec![0.0; m * n];
+            gemm(&a, &b, &mut c, m, k, n);
+            close(&c, &naive_gemm(&a, &b, m, k, n), &format!("nn {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_f64_oracle() {
+        let mut rng = Pcg64::seed(2);
+        for &(m, k, n) in SHAPES {
+            let a = randn(m * k, &mut rng);
+            let b = randn(n * k, &mut rng);
+            // bt[k,n]
+            let mut bt = vec![0.0; k * n];
+            for j in 0..n {
+                for p in 0..k {
+                    bt[p * n + j] = b[j * k + p];
+                }
+            }
+            let mut c = vec![0.0; m * n];
+            gemm_nt(&a, &b, &mut c, m, k, n);
+            close(&c, &naive_gemm(&a, &bt, m, k, n), &format!("nt {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn gemm_tn_matches_f64_oracle() {
+        let mut rng = Pcg64::seed(3);
+        for &(m, k, n) in SHAPES {
+            let a = randn(k * m, &mut rng);
+            let b = randn(k * n, &mut rng);
+            let mut at = vec![0.0; m * k];
+            for i in 0..m {
+                for p in 0..k {
+                    at[i * k + p] = a[p * m + i];
+                }
+            }
+            let mut c = vec![0.0; m * n];
+            gemm_tn(&a, &b, &mut c, m, k, n);
+            close(&c, &naive_gemm(&at, &b, m, k, n), &format!("tn {m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn blocked_matches_seed_reference() {
+        let mut rng = Pcg64::seed(4);
+        let (m, k, n) = (70, 90, 50);
+        let a = randn(m * k, &mut rng);
+        let b = randn(k * n, &mut rng);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm(&a, &b, &mut c1, m, k, n);
+        reference::gemm(&a, &b, &mut c2, m, k, n);
+        close(&c1, &c2, "vs seed nn");
+
+        let bt = randn(n * k, &mut rng);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_nt(&a, &bt, &mut c1, m, k, n);
+        reference::gemm_nt(&a, &bt, &mut c2, m, k, n);
+        close(&c1, &c2, "vs seed nt");
+
+        let at = randn(k * m, &mut rng);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_tn(&at, &b, &mut c1, m, k, n);
+        reference::gemm_tn(&at, &b, &mut c2, m, k, n);
+        close(&c1, &c2, "vs seed tn");
+    }
+
+    #[test]
+    fn gemm_accumulates_into_c() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![2.0, 0.0, 0.0, 2.0];
+        let mut c = vec![1.0; 4];
+        gemm(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, vec![3.0, 1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn pooled_and_serial_execution_are_bitwise_identical() {
+        // large enough to clear PAR_MIN_MACS and span several MC blocks
+        let mut rng = Pcg64::seed(5);
+        let (m, k, n) = (300, 80, 70);
+        let a = randn(m * k, &mut rng);
+        let b = randn(k * n, &mut rng);
+        let mut c_pool = vec![0.0; m * n];
+        let mut c_serial = vec![0.0; m * n];
+        gemm_nn_impl_for_tests(&a, &b, &mut c_pool, m, k, n, Exec::Auto);
+        gemm_nn_impl_for_tests(&a, &b, &mut c_serial, m, k, n, Exec::Serial);
+        assert!(
+            c_pool.iter().zip(&c_serial).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "pooled vs serial results must be bitwise identical"
+        );
+
+        let bt = randn(n * k, &mut rng);
+        let mut c_pool = vec![0.0; m * n];
+        let mut c_serial = vec![0.0; m * n];
+        gemm_nt_impl(&a, &bt, &mut c_pool, m, k, n, None, Precision::fp16(), Exec::Auto);
+        gemm_nt_impl(&a, &bt, &mut c_serial, m, k, n, None, Precision::fp16(), Exec::Serial);
+        assert!(c_pool.iter().zip(&c_serial).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        let at = randn(k * m, &mut rng);
+        let mut c_pool = vec![0.0; m * n];
+        let mut c_serial = vec![0.0; m * n];
+        gemm_tn_impl(&at, &b, &mut c_pool, m, k, n, None, Precision::Fp32, Exec::Auto);
+        gemm_tn_impl(&at, &b, &mut c_serial, m, k, n, None, Precision::Fp32, Exec::Serial);
+        assert!(c_pool.iter().zip(&c_serial).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn repeated_runs_are_bitwise_identical() {
+        let mut rng = Pcg64::seed(6);
+        let (m, k, n) = (200, 128, 96);
+        let a = randn(m * k, &mut rng);
+        let b = randn(n * k, &mut rng);
+        let mut c1 = vec![0.0; m * n];
+        let mut c2 = vec![0.0; m * n];
+        gemm_nt(&a, &b, &mut c1, m, k, n);
+        gemm_nt(&a, &b, &mut c2, m, k, n);
+        assert!(c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn fused_epilogue_is_bitwise_equal_to_separate_passes() {
+        let mut rng = Pcg64::seed(7);
+        for &(m, k, n) in &[(5, 7, 3), (33, 20, 17), (64, 64, 64)] {
+            let a = randn(m * k, &mut rng);
+            let b = randn(n * k, &mut rng);
+            let bias = randn(n, &mut rng);
+            let prec = Precision::fp16();
+
+            let mut fused = vec![0.0; m * n];
+            gemm_nt_bias_q(&a, &b, &mut fused, m, k, n, Some(&bias), prec);
+
+            let mut sep = vec![0.0; m * n];
+            gemm_nt(&a, &b, &mut sep, m, k, n);
+            for i in 0..m {
+                for j in 0..n {
+                    sep[i * n + j] += bias[j];
+                }
+            }
+            prec.q_slice(&mut sep);
+
+            assert!(
+                fused.iter().zip(&sep).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{m}x{k}x{n}: fused epilogue must match gemm+bias+quantize exactly"
+            );
+            for &v in &fused {
+                assert!(FP16.is_representable(v));
+            }
+        }
+    }
+
+    #[test]
+    fn fused_quantize_respects_round_and_overflow_modes() {
+        let mut rng = Pcg64::seed(8);
+        let (m, k, n) = (9, 11, 6);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32() * 200.0).collect();
+        let b: Vec<f32> = (0..n * k).map(|_| rng.normal_f32() * 200.0).collect();
+        let prec = Precision::Sim {
+            fmt: FP16,
+            round: RoundMode::TowardZero,
+            overflow: OverflowMode::Saturate,
+        };
+        let mut fused = vec![0.0; m * n];
+        gemm_nt_bias_q(&a, &b, &mut fused, m, k, n, None, prec);
+        let mut sep = vec![0.0; m * n];
+        gemm_nt(&a, &b, &mut sep, m, k, n);
+        prec.q_slice(&mut sep);
+        assert!(fused.iter().zip(&sep).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // saturate mode must never emit infinities
+        assert!(fused.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn degenerate_shapes_are_safe() {
+        // m = 0: no-op
+        gemm(&[], &[0.0; 12], &mut [], 0, 3, 4);
+        // k = 0: product is zero, epilogue still applies bias+quantize
+        let mut c = vec![0.0; 6];
+        gemm_nt_bias_q(&[], &[], &mut c, 2, 0, 3, Some(&[1.0, 2.0, 1e-9]), Precision::fp16());
+        assert_eq!(c, vec![1.0, 2.0, 0.0, 1.0, 2.0, 0.0]);
+        // n = 0: no columns
+        gemm(&[1.0, 2.0], &[], &mut [], 2, 1, 0);
+    }
+}

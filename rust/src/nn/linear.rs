@@ -4,8 +4,9 @@
 //!
 //! Layout follows PyTorch: `w` is `[out, in]`, `y = x wᵀ + b`.
 
+use super::gemm::{gemm_bias_q, gemm_nt_bias_q, gemm_tn_bias_q};
 use super::param::Param;
-use super::tensor::{gemm_nt, gemm_tn, Tensor};
+use super::tensor::Tensor;
 use crate::lowp::Precision;
 use crate::rngs::Pcg64;
 
@@ -54,10 +55,21 @@ impl Linear {
 
     /// Effective weights: standardized if `weight_std`, raw otherwise.
     /// Standardization arithmetic is done in the compute precision.
+    /// (The forward path reads `what_cache` directly; this accessor is
+    /// kept for the standardization unit tests.)
+    #[cfg(test)]
     fn effective_weights(&mut self, prec: Precision) -> &[f32] {
         if !self.weight_std {
             return &self.w.w;
         }
+        self.refresh_weight_std(prec);
+        &self.what_cache
+    }
+
+    /// Recompute the row-standardized weights into the persistent
+    /// `what_cache` buffer (resized in place — no per-forward allocation
+    /// once warm, and the GEMM reads it without copying).
+    fn refresh_weight_std(&mut self, prec: Precision) {
         let (o, i) = (self.out_dim, self.in_dim);
         self.what_cache.resize(o * i, 0.0);
         self.row_std.resize(o, 0.0);
@@ -76,30 +88,32 @@ impl Linear {
                 self.what_cache[r * i + c] = prec.q((row[c] - mean) * inv);
             }
         }
-        &self.what_cache
     }
 
     /// Forward: `y = x Ŵᵀ + b`, output quantized into `prec`.
+    ///
+    /// The GEMM reads the weights in place (no per-call clone of the
+    /// weight matrix) and fuses the bias add + quantize into its epilogue
+    /// — a single pass over `y` instead of three.
     pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
         assert_eq!(x.cols(), self.in_dim, "{}: bad input dim", self.w.name);
         let bsz = x.rows();
         self.x_cache = x.clone();
+        if self.weight_std {
+            self.refresh_weight_std(prec);
+        }
         let mut y = Tensor::zeros(&[bsz, self.out_dim]);
-        {
-            let weff = if self.weight_std {
-                self.effective_weights(prec).to_vec()
-            } else {
-                self.w.w.clone()
-            };
-            gemm_nt(&x.data, &weff, &mut y.data, bsz, self.in_dim, self.out_dim);
-        }
-        for r in 0..bsz {
-            let row = y.row_mut(r);
-            for (o, v) in row.iter_mut().enumerate() {
-                *v += self.b.w[o];
-            }
-        }
-        y.quantize(prec);
+        let weff: &[f32] = if self.weight_std { &self.what_cache } else { &self.w.w };
+        gemm_nt_bias_q(
+            &x.data,
+            weff,
+            &mut y.data,
+            bsz,
+            self.in_dim,
+            self.out_dim,
+            Some(&self.b.w),
+            prec,
+        );
         y
     }
 
@@ -121,10 +135,10 @@ impl Linear {
         }
         prec.q_slice(&mut self.b.g);
 
-        // dŴ = dyᵀ x  (into a temp if standardized, else straight in)
+        // dŴ = dyᵀ x  (into a temp if standardized, else straight in);
+        // the quantize pass is fused into the GEMM epilogue
         let mut dwhat = vec![0.0f32; o * i];
-        gemm_tn(&dy.data, &self.x_cache.data, &mut dwhat, o, bsz, i);
-        prec.q_slice(&mut dwhat);
+        gemm_tn_bias_q(&dy.data, &self.x_cache.data, &mut dwhat, o, bsz, i, None, prec);
 
         if self.weight_std {
             // chain rule through Ŵ = (w - μ_r) * inv_r, per output row.
@@ -149,14 +163,13 @@ impl Linear {
         }
         prec.q_slice(&mut self.w.g);
 
-        // dx = dy Ŵ
+        // dx = dy Ŵ (quantize fused into the epilogue)
         let mut dx = Tensor::zeros(&[bsz, i]);
         {
             let weff = if self.weight_std { &self.what_cache[..] } else { &self.w.w[..] };
             // dx[b,i] = Σ_o dy[b,o] Ŵ[o,i]  — this is gemm notrans with Ŵ as [o,i]
-            super::tensor::gemm(&dy.data, weff, &mut dx.data, bsz, o, i);
+            gemm_bias_q(&dy.data, weff, &mut dx.data, bsz, o, i, None, prec);
         }
-        dx.quantize(prec);
         dx
     }
 

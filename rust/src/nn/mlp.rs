@@ -1,7 +1,9 @@
 //! Multi-layer perceptron trunk: `Linear → ReLU → ... → Linear`.
 //!
 //! The SAC actor and critic of Yarats & Kostrikov (2020) are MLPs with
-//! hidden depth 2; the output layer is linear (no activation).
+//! hidden depth 2; the output layer is linear (no activation). All layer
+//! math routes through the blocked [`super::gemm`] backend via
+//! [`Linear`], including its fused bias+quantize epilogue.
 
 use super::activations::{relu, relu_backward};
 use super::linear::Linear;

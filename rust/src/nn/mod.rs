@@ -19,20 +19,23 @@
 
 mod activations;
 mod conv;
+pub mod gemm;
 mod init;
 mod layernorm;
 mod linear;
 mod memory;
 mod mlp;
 mod param;
+pub mod pool;
 mod tensor;
 
 pub use activations::{relu, relu_backward, tanh_backward, tanh_forward};
 pub use conv::Conv2d;
+pub use gemm::{gemm, gemm_bias_q, gemm_nt, gemm_nt_bias_q, gemm_tn, gemm_tn_bias_q};
 pub use init::{orthogonal_init, uniform_fan_in};
 pub use layernorm::LayerNorm;
 pub use linear::Linear;
 pub use memory::{pixels_model, states_model, MemoryModel};
 pub use mlp::Mlp;
 pub use param::Param;
-pub use tensor::{gemm, gemm_nt, gemm_tn, Tensor};
+pub use tensor::Tensor;

@@ -1,0 +1,291 @@
+//! Persistent worker pool for the GEMM backend.
+//!
+//! The seed engine spawned a fresh `std::thread::scope` for every GEMM
+//! call (`par_rows`), which costs one spawn+join per thread per call —
+//! measurable at SAC minibatch sizes where a training step issues dozens
+//! of GEMMs. This pool spawns its workers **once** (first use) and reuses
+//! them for every subsequent call.
+//!
+//! Design:
+//! * One job at a time. [`ThreadPool::run`] publishes a job (a task count
+//!   plus a `Fn(usize)` body), wakes the workers, participates in the
+//!   work itself, and returns only when every task index has finished —
+//!   which is what makes the lifetime-erased closure pointer sound.
+//! * Tasks are claimed with an atomic counter, so scheduling is dynamic,
+//!   but *what* each task computes is a pure function of its index —
+//!   results are bitwise identical for any worker count (including the
+//!   serial fallback).
+//! * If a second thread calls [`ThreadPool::run`] while a job is active
+//!   (e.g. `run_many` training several agents in parallel), it simply
+//!   runs its own tasks inline instead of queueing — no blocking, no
+//!   nested-parallelism deadlock, same results.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A published job: a lifetime-erased task body plus claim/finish counters.
+struct Job {
+    /// Borrow of the caller's closure, valid until `completed == total`
+    /// (the submitter blocks in [`ThreadPool::run`] until then).
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    completed: AtomicUsize,
+    total: usize,
+    /// Set when any task body panicked; the submitter re-raises after
+    /// every task has been accounted for.
+    poisoned: AtomicBool,
+}
+
+// Safety: `f` points at a `Sync` closure that outlives every dereference
+// (the submitting thread waits for `completed == total` before returning),
+// and the counters are atomics.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and run tasks until none are left; notify the submitter when
+    /// the last task finishes.
+    ///
+    /// Task panics are caught at the boundary so a claimed task always
+    /// increments `completed` — otherwise a panicking worker would leave
+    /// the submitter waiting forever, and a panicking submitter would
+    /// unwind (freeing the closure and output buffers) while workers
+    /// still execute through the raw pointer. The panic is re-raised on
+    /// the submitting thread once the job is fully drained.
+    fn run(&self, shared: &Shared) {
+        loop {
+            let t = self.next.fetch_add(1, Ordering::Relaxed);
+            if t >= self.total {
+                return;
+            }
+            let f = unsafe { &*self.f };
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))).is_err() {
+                self.poisoned.store(true, Ordering::Release);
+            }
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+                // take the lock so the submitter cannot miss the wakeup
+                let _g = shared.done_mx.lock().unwrap();
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Shared {
+    job: Mutex<Option<Arc<Job>>>,
+    work_cv: Condvar,
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+/// A fixed set of worker threads executing one indexed job at a time.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    /// Number of background workers (the submitter is an extra worker).
+    pub workers: usize,
+    submit: Mutex<()>,
+}
+
+impl ThreadPool {
+    /// Pool with `threads` total lanes (`threads - 1` background workers;
+    /// the submitting thread is the last lane).
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(Shared {
+            job: Mutex::new(None),
+            work_cv: Condvar::new(),
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        let workers = threads.saturating_sub(1);
+        for i in 0..workers {
+            let sh = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("lprl-gemm-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawning pool worker");
+        }
+        ThreadPool { shared, workers, submit: Mutex::new(()) }
+    }
+
+    /// Run `f(0..total)` across the pool; returns when all tasks finished.
+    ///
+    /// Falls back to inline serial execution when the pool has no
+    /// workers, the job is trivial, or another job is already running —
+    /// all three paths execute the identical per-task code, so the output
+    /// is bitwise independent of which path was taken.
+    pub fn run(&self, total: usize, f: impl Fn(usize) + Sync) {
+        if total == 0 {
+            return;
+        }
+        if self.workers == 0 || total == 1 {
+            for t in 0..total {
+                f(t);
+            }
+            return;
+        }
+        let guard = match self.submit.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                // pool busy (another training thread): run inline
+                for t in 0..total {
+                    f(t);
+                }
+                return;
+            }
+        };
+        let fat: &(dyn Fn(usize) + Sync) = &f;
+        // Safety: erase the borrow's lifetime; `run` does not return until
+        // every task completed, so workers never touch `f` after it dies.
+        let fat: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fat) };
+        let job = Arc::new(Job {
+            f: fat,
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            total,
+            poisoned: AtomicBool::new(false),
+        });
+        {
+            let mut g = self.shared.job.lock().unwrap();
+            *g = Some(job.clone());
+            self.shared.work_cv.notify_all();
+        }
+        // participate instead of just waiting
+        job.run(&self.shared);
+        let mut g = self.shared.done_mx.lock().unwrap();
+        while job.completed.load(Ordering::Acquire) < total {
+            g = self.shared.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        *self.shared.job.lock().unwrap() = None;
+        drop(guard);
+        if job.poisoned.load(Ordering::Acquire) {
+            // the original message + backtrace were already printed by
+            // the panicking thread's hook
+            panic!("a thread-pool task panicked (see output above)");
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut g = shared.job.lock().unwrap();
+            loop {
+                if let Some(j) = g.as_ref() {
+                    if j.next.load(Ordering::Relaxed) < j.total {
+                        break j.clone();
+                    }
+                }
+                g = shared.work_cv.wait(g).unwrap();
+            }
+        };
+        job.run(&shared);
+    }
+}
+
+/// Total parallel lanes: `LPRL_THREADS` env override, else host
+/// parallelism capped at 16 (same cap the seed engine used).
+fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("LPRL_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// The process-wide pool, spawned on first use and reused forever.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for total in [0usize, 1, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+            pool.run(total, |t| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "total={total}");
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_many_times() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicU64::new(0);
+        for _ in 0..200 {
+            pool.run(17, |t| {
+                sum.fetch_add(t as u64, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(sum.load(Ordering::Relaxed), 200 * (16 * 17 / 2));
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_serially() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.workers, 0);
+        let sum = AtomicU64::new(0);
+        pool.run(10, |t| {
+            sum.fetch_add(t as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn concurrent_submitters_fall_back_inline() {
+        // two threads hammer the same pool; the busy one must run inline
+        // rather than deadlock, and both must complete all tasks.
+        let pool = ThreadPool::new(4);
+        let sum = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        pool.run(33, |t| {
+                            sum.fetch_add(t as u64, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4 * 50 * (32 * 33 / 2));
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = ThreadPool::new(4);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(64, |t| {
+                if t == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "submitter must re-raise the task panic");
+        // the pool must remain fully usable afterwards
+        let sum = AtomicU64::new(0);
+        pool.run(16, |t| {
+            sum.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 120);
+    }
+
+    #[test]
+    fn global_pool_exists() {
+        let p = global();
+        let sum = AtomicU64::new(0);
+        p.run(8, |t| {
+            sum.fetch_add(t as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 28);
+    }
+}

@@ -1,8 +1,7 @@
-//! Minimal dense tensor plus the three GEMM variants backprop needs.
-//!
-//! All heavy math in the native engine funnels through [`gemm`] /
-//! [`gemm_nt`] / [`gemm_tn`], so the performance pass has a single hot
-//! spot to optimize (blocked micro-kernel + thread parallelism over rows).
+//! Minimal dense tensor. The three GEMM variants all heavy math funnels
+//! through live in [`super::gemm`] (blocked micro-kernel + persistent
+//! thread pool); the seed's scalar versions survive as
+//! [`super::gemm::reference`].
 
 use crate::lowp::Precision;
 
@@ -40,16 +39,31 @@ impl Tensor {
     }
 
     /// Number of rows when viewed as 2-D `[rows, cols]` (product of all
-    /// but the last dim).
+    /// but the last dim). An empty tensor (e.g. the `Tensor::zeros(&[0])`
+    /// cache sentinel) has zero rows rather than dividing by zero.
     #[inline]
     pub fn rows(&self) -> usize {
-        self.len() / self.cols()
+        let c = self.cols();
+        if c == 0 {
+            0
+        } else {
+            self.len() / c
+        }
     }
 
     /// Size of the last dimension.
+    ///
+    /// Panics with the offending shape if the tensor is scalar-shaped
+    /// (`shape == []`) — a 2-D view of it is meaningless.
     #[inline]
     pub fn cols(&self) -> usize {
-        *self.shape.last().expect("tensor has no shape")
+        assert!(
+            !self.shape.is_empty(),
+            "Tensor::cols() needs at least one dimension, got scalar shape {:?} ({} elems)",
+            self.shape,
+            self.data.len()
+        );
+        *self.shape.last().unwrap()
     }
 
     /// Reinterpret the shape (same element count).
@@ -94,202 +108,9 @@ impl Tensor {
     }
 }
 
-/// Number of threads the GEMMs fan out over. Chosen once from the host.
-fn num_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
-}
-
-/// Run `f(r)` for each row index in `0..rows`, splitting rows across
-/// threads when the work is large enough to amortize spawning.
-fn par_rows(rows: usize, min_serial: usize, f: impl Fn(usize) + Sync) {
-    let nt = num_threads();
-    if rows * 2 < min_serial || nt <= 1 || rows < 2 * nt {
-        for r in 0..rows {
-            f(r);
-        }
-        return;
-    }
-    let chunk = rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        for t in 0..nt {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(rows);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || {
-                for r in lo..hi {
-                    f(r);
-                }
-            });
-        }
-    });
-}
-
-/// `c[m,n] += a[m,k] * b[k,n]` (notrans, notrans). `c` must be zeroed by
-/// the caller if accumulation is not wanted.
-pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    let cptr = SendPtr(c.as_mut_ptr());
-    par_rows(m, 64, |i| {
-        // safety: each row of c is touched by exactly one closure call
-        let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
-        let arow = &a[i * k..(i + 1) * k];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    });
-}
-
-/// `c[m,n] += a[m,k] * b[n,k]ᵀ` (notrans, trans) — used for `y = x Wᵀ`
-/// with PyTorch-layout weights and for `dx = dy W`... see `linear.rs`.
-pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), n * k);
-    assert_eq!(c.len(), m * n);
-    let cptr = SendPtr(c.as_mut_ptr());
-    par_rows(m, 64, |i| {
-        let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
-        let arow = &a[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
-            }
-            crow[j] += acc;
-        }
-    });
-}
-
-/// `c[m,n] += a[k,m]ᵀ * b[k,n]` (trans, notrans) — used for weight
-/// gradients `dW = dyᵀ x`.
-pub fn gemm_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.len(), k * m);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    let cptr = SendPtr(c.as_mut_ptr());
-    par_rows(m, 64, |i| {
-        let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
-        for p in 0..k {
-            let av = a[p * m + i];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    });
-}
-
-/// Raw pointer wrapper so disjoint row slices can cross the thread-scope
-/// boundary. Each row index is processed by exactly one thread.
-struct SendPtr(*mut f32);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
-impl SendPtr {
-    /// Pointer to `self.0 + off`. Callers guarantee disjoint row ranges.
-    #[inline]
-    fn at(&self, off: usize) -> *mut f32 {
-        unsafe { self.0.add(off) }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::rngs::Pcg64;
-
-    fn naive_gemm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-        let mut c = vec![0.0; m * n];
-        for i in 0..m {
-            for j in 0..n {
-                let mut acc = 0.0f64;
-                for p in 0..k {
-                    acc += a[i * k + p] as f64 * b[p * n + j] as f64;
-                }
-                c[i * n + j] = acc as f32;
-            }
-        }
-        c
-    }
-
-    #[test]
-    fn gemm_matches_naive() {
-        let mut rng = Pcg64::seed(1);
-        for &(m, k, n) in &[(1, 1, 1), (2, 3, 4), (5, 7, 3), (17, 33, 9), (64, 64, 64), (130, 40, 70)] {
-            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
-            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
-            let mut c = vec![0.0; m * n];
-            gemm(&a, &b, &mut c, m, k, n);
-            let want = naive_gemm(&a, &b, m, k, n);
-            for (x, y) in c.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-3 * (1.0 + y.abs()), "{m}x{k}x{n}: {x} vs {y}");
-            }
-        }
-    }
-
-    #[test]
-    fn gemm_nt_is_b_transposed() {
-        let mut rng = Pcg64::seed(2);
-        let (m, k, n) = (6, 5, 4);
-        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
-        let b: Vec<f32> = (0..n * k).map(|_| rng.normal_f32()).collect();
-        // b_t[k,n]
-        let mut bt = vec![0.0; k * n];
-        for j in 0..n {
-            for p in 0..k {
-                bt[p * n + j] = b[j * k + p];
-            }
-        }
-        let mut c1 = vec![0.0; m * n];
-        gemm_nt(&a, &b, &mut c1, m, k, n);
-        let c2 = naive_gemm(&a, &bt, m, k, n);
-        for (x, y) in c1.iter().zip(&c2) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-    }
-
-    #[test]
-    fn gemm_tn_is_a_transposed() {
-        let mut rng = Pcg64::seed(3);
-        let (m, k, n) = (4, 7, 3);
-        let a: Vec<f32> = (0..k * m).map(|_| rng.normal_f32()).collect();
-        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
-        let mut at = vec![0.0; m * k];
-        for i in 0..m {
-            for p in 0..k {
-                at[i * k + p] = a[p * m + i];
-            }
-        }
-        let mut c1 = vec![0.0; m * n];
-        gemm_tn(&a, &b, &mut c1, m, k, n);
-        let c2 = naive_gemm(&at, &b, m, k, n);
-        for (x, y) in c1.iter().zip(&c2) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
-    }
-
-    #[test]
-    fn gemm_accumulates_into_c() {
-        let a = vec![1.0, 0.0, 0.0, 1.0];
-        let b = vec![2.0, 0.0, 0.0, 2.0];
-        let mut c = vec![1.0; 4];
-        gemm(&a, &b, &mut c, 2, 2, 2);
-        assert_eq!(c, vec![3.0, 1.0, 1.0, 3.0]);
-    }
 
     #[test]
     fn tensor_basics() {
@@ -311,5 +132,21 @@ mod tests {
         let mut t = Tensor::from_vec(&[1, 3], vec![1.0, 1e-9, 1e9]);
         t.quantize(Precision::fp16());
         assert_eq!(t.data, vec![1.0, 0.0, f32::INFINITY]);
+    }
+
+    #[test]
+    fn empty_sentinel_has_zero_rows() {
+        // the `x_cache` sentinel layers use before the first forward
+        let t = Tensor::zeros(&[0]);
+        assert_eq!(t.cols(), 0);
+        assert_eq!(t.rows(), 0, "must not divide by zero");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "scalar shape []")]
+    fn scalar_shape_cols_panics_with_shape_in_message() {
+        let t = Tensor { shape: vec![], data: vec![1.0] };
+        let _ = t.cols();
     }
 }

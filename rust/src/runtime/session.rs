@@ -2,6 +2,7 @@
 //! state resident as device buffers, and step entirely in Rust.
 
 use super::manifest::Manifest;
+use super::xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -18,8 +19,9 @@ impl Runtime {
     /// Open an artifact directory (must contain `manifest.txt`).
     pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
-        let text = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).with_context(|| {
+            format!("reading manifest in {dir:?} — generate with `python python/compile/aot.py`")
+        })?;
         let manifest = Manifest::parse(&text).map_err(|e| anyhow!(e))?;
         let client = xla::PjRtClient::cpu()?;
         Ok(Runtime { client, dir, manifest, exes: HashMap::new() })

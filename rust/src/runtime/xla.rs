@@ -1,0 +1,190 @@
+//! Offline stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The build environment has no XLA/PJRT native library and no registry
+//! access, so the runtime layer compiles against this API-compatible
+//! stub instead of the real `xla` crate. Host-side [`Literal`] plumbing
+//! (construction, reshape, readback) is fully functional; anything that
+//! would need a real PJRT client ([`PjRtClient::cpu`]) fails with an
+//! instructive error, which [`super::Runtime::open`] surfaces to the
+//! caller. Every artifact-dependent test and bench already skips cleanly
+//! when `artifacts/manifest.txt` is absent, so the native engine — the
+//! whole training/experiment stack — is unaffected.
+//!
+//! Swapping in the real bindings is a one-line change in
+//! `runtime/mod.rs` (`pub mod xla;` → `pub use ::xla;`-style re-export)
+//! once the dependency is available.
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring `xla::Error` closely enough for `?` conversion
+/// into `anyhow::Error`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT is unavailable in this offline build — the `xla` bindings are a stub \
+         (rust/src/runtime/xla.rs). The native engine (`lprl train`, examples, experiment \
+         harness) is fully functional; executing AOT artifacts requires a build with the \
+         real `xla` crate."
+    ))
+}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {
+    fn from_f32(x: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(x: f32) -> f32 {
+        x
+    }
+}
+
+/// Host tensor: f32 payload plus dimensions (the interface convention —
+/// all artifact boundaries are f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D literal from host data.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// The literal's dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elems into shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal. The stub cannot produce tuples (they
+    /// only come out of executions), so this is unreachable in practice.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Read the payload back to host memory.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// Parsed HLO module (the stub only records where it came from).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub source: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &Path) -> Result<HloModuleProto> {
+        // reading the text is host-side work the stub can still do; the
+        // failure is deferred to compile/execute
+        match std::fs::read_to_string(path) {
+            Ok(_) => Ok(HloModuleProto { source: path.display().to_string() }),
+            Err(e) => Err(Error(format!("reading {}: {e}", path.display()))),
+        }
+    }
+}
+
+/// An XLA computation built from a proto.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    pub source: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { source: proto.source.clone() }
+    }
+}
+
+/// A compiled executable (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+/// A device buffer handle (never constructible through the stub).
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Opening the CPU client is where the stub reports itself.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn client_reports_stub_clearly() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline build"), "{e}");
+    }
+}

@@ -1,0 +1,208 @@
+//! Minimal offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate: the build environment has no registry access, so the workspace
+//! vendors the small API subset the codebase uses — [`Error`],
+//! [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the
+//! [`Context`] extension trait.
+//!
+//! Semantics follow real anyhow where it matters here:
+//! * `Display` prints the outermost message; `{:#}` prints the whole
+//!   cause chain joined with `": "`.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static` into
+//!   [`Error`], capturing its source chain.
+//! * `Error` deliberately does **not** implement `std::error::Error`
+//!   (same as real anyhow), which is what makes the blanket `From` legal.
+
+use std::fmt;
+
+/// A dynamic error: an outermost message plus a cause chain.
+pub struct Error {
+    /// `chain[0]` is the outermost (most recent context) message.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first (for diagnostics/tests).
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, c) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Early-return with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($t)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = Error::from(io_err()).context("reading manifest");
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: missing file");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let name = "x";
+        let e = anyhow!("unknown artifact {name}");
+        assert_eq!(format!("{e}"), "unknown artifact x");
+        let e = anyhow!(String::from("plain"));
+        assert_eq!(format!("{e}"), "plain");
+        let e = anyhow!("{} + {}", 1, 2);
+        assert_eq!(format!("{e}"), "1 + 2");
+
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag must be set");
+            if flag {
+                Ok(1)
+            } else {
+                bail!("unreachable {}", 0)
+            }
+        }
+        assert_eq!(f(true).unwrap(), 1);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag must be set");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("empty").unwrap_err();
+        assert_eq!(format!("{e}"), "empty");
+        assert_eq!(Some(3u32).with_context(|| "never").unwrap(), 3);
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::from(io_err()).context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer") && d.contains("Caused by") && d.contains("missing file"));
+    }
+}
