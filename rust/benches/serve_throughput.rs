@@ -1,0 +1,215 @@
+//! Serve-layer benchmark: single-request vs micro-batched policy
+//! inference, measured (a) directly against a `Policy` snapshot and
+//! (b) end-to-end through the micro-batching `PolicyServer` (request
+//! p50/p99 latency included). Writes `BENCH_serve.json` at the repo
+//! root next to `BENCH_gemm.json`.
+//!
+//! ```bash
+//! cargo bench --bench serve_throughput            # full run, writes JSON
+//! cargo bench --bench serve_throughput -- --test  # CI smoke: tiny, no JSON
+//! ```
+//!
+//! Before timing anything the bench asserts the serve-layer correctness
+//! invariant: every row of a batch-32 `act_batch` is bitwise identical
+//! to the batch-1 result for that observation.
+
+use lprl::lowp::Precision;
+use lprl::nn::Tensor;
+use lprl::rngs::Pcg64;
+use lprl::sac::{ActMode, Methods, Policy, SacAgent, SacConfig};
+use lprl::serve::{NativeBackend, PolicyServer, ServeConfig};
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+struct DirectRow {
+    batch: usize,
+    per_req_us: f64,
+    reqs_per_s: f64,
+}
+
+struct ServeRow {
+    max_batch: usize,
+    clients: usize,
+    reqs_per_s: f64,
+    mean_batch: f64,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+/// Time `reps` sweeps over a fixed observation pool in chunks of `bsz`.
+fn bench_direct(policy: &Policy, obs: &Tensor, bsz: usize, reps: usize) -> DirectRow {
+    let obs_dim = policy.obs_len();
+    let nobs = obs.rows();
+    // warmup
+    let _ = policy.act_batch(obs, ActMode::Deterministic);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut r0 = 0;
+        while r0 < nobs {
+            let b = bsz.min(nobs - r0);
+            let chunk = Tensor::from_vec(
+                &[b, obs_dim],
+                obs.data[r0 * obs_dim..(r0 + b) * obs_dim].to_vec(),
+            );
+            std::hint::black_box(policy.act_batch(&chunk, ActMode::Deterministic));
+            r0 += b;
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let total = (reps * nobs) as f64;
+    DirectRow { batch: bsz, per_req_us: secs * 1e6 / total, reqs_per_s: total / secs }
+}
+
+/// Drive the server with `clients` threads issuing `reqs` requests each.
+fn bench_serve(policy: &Policy, clients: usize, reqs: usize, max_batch: usize) -> ServeRow {
+    let obs_dim = policy.obs_len();
+    let server = PolicyServer::start(
+        Arc::new(NativeBackend::new(policy.clone())),
+        ServeConfig { max_batch, flush_us: 200, queue_cap: 4096 },
+    );
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let client = server.client();
+            s.spawn(move || {
+                let mut rng = Pcg64::seed_stream(42, c as u64);
+                for _ in 0..reqs {
+                    let obs: Vec<f32> = (0..obs_dim).map(|_| rng.normal_f32()).collect();
+                    client.act(&obs).expect("serve request failed");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, (clients * reqs) as u64);
+    ServeRow {
+        max_batch,
+        clients,
+        reqs_per_s: stats.requests as f64 / wall,
+        mean_batch: stats.mean_batch,
+        p50_us: stats.p50_us,
+        p99_us: stats.p99_us,
+    }
+}
+
+fn write_json(
+    dims: (usize, usize, usize),
+    direct: &[DirectRow],
+    serve: &[ServeRow],
+    direct_speedup: f64,
+    serve_speedup: f64,
+) -> std::io::Result<std::path::PathBuf> {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"serve\",\n");
+    let _ = writeln!(
+        out,
+        "  \"policy\": {{\"obs_dim\": {}, \"act_dim\": {}, \"hidden\": {}, \"precision\": \"fp16\"}},",
+        dims.0, dims.1, dims.2
+    );
+    out.push_str("  \"direct\": [\n");
+    for (i, r) in direct.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"batch\": {}, \"per_req_us\": {:.3}, \"reqs_per_s\": {:.1}}}",
+            r.batch, r.per_req_us, r.reqs_per_s
+        );
+        out.push_str(if i + 1 < direct.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    let _ = writeln!(out, "  \"direct_speedup_batch32_vs_single\": {direct_speedup:.3},");
+    out.push_str("  \"serve\": [\n");
+    for (i, r) in serve.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"max_batch\": {}, \"clients\": {}, \"reqs_per_s\": {:.1}, \"mean_batch\": {:.2}, \"p50_us\": {}, \"p99_us\": {}}}",
+            r.max_batch, r.clients, r.reqs_per_s, r.mean_batch, r.p50_us, r.p99_us
+        );
+        out.push_str(if i + 1 < serve.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    let _ = writeln!(out, "  \"serve_speedup_batch32_vs_single\": {serve_speedup:.3}");
+    out.push_str("}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_serve.json");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    // SAC-shaped policy: cheetah-ish obs, walker-ish act, mid paper-scale
+    // trunk. The smoke config just exercises every path.
+    let (obs_dim, act_dim, hidden) = if smoke { (8, 2, 32) } else { (60, 6, 512) };
+    let agent = SacAgent::new(
+        SacConfig::states(obs_dim, act_dim, hidden),
+        Methods::ours(),
+        Precision::fp16(),
+        7,
+    );
+    let policy = agent.policy();
+
+    let nobs = 32usize;
+    let mut obs = Tensor::zeros(&[nobs, obs_dim]);
+    Pcg64::seed(1).normal_fill(&mut obs.data);
+
+    // -- correctness gate: batch rows == batch-1 results, bitwise -----
+    let full = policy.act_batch(&obs, ActMode::Deterministic);
+    for r in 0..nobs {
+        let one = policy.act_batch(
+            &Tensor::from_vec(&[1, obs_dim], obs.row(r).to_vec()),
+            ActMode::Deterministic,
+        );
+        for (i, (x, y)) in one.data.iter().zip(full.row(r)).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "row {r} dim {i}: batch-1 {x} vs batch-32 {y}"
+            );
+        }
+    }
+    println!("bitwise parity: act_batch(32) rows == 32x act_batch(1)  OK");
+
+    // -- direct policy throughput ------------------------------------
+    let reps = if smoke { 3 } else { 200 };
+    let mut direct = Vec::new();
+    for &bsz in &[1usize, 8, 32] {
+        let row = bench_direct(&policy, &obs, bsz, reps);
+        println!(
+            "direct  batch {:>2}: {:>9.1} req/s  ({:>7.2} us/req)",
+            row.batch, row.reqs_per_s, row.per_req_us
+        );
+        direct.push(row);
+    }
+    let direct_speedup = direct.last().unwrap().reqs_per_s / direct[0].reqs_per_s;
+    println!("direct micro-batch speedup (batch 32 vs single): {direct_speedup:.2}x");
+
+    // -- through the serve layer -------------------------------------
+    let (clients, reqs) = if smoke { (4, 8) } else { (32, 200) };
+    let mut serve = Vec::new();
+    for &mb in &[1usize, 32] {
+        let row = bench_serve(&policy, clients, reqs, mb);
+        println!(
+            "serve   max_batch {:>2}: {:>9.1} req/s  mean_batch {:>5.2}  p50 {:>6} us  p99 {:>6} us",
+            row.max_batch, row.reqs_per_s, row.mean_batch, row.p50_us, row.p99_us
+        );
+        serve.push(row);
+    }
+    let serve_speedup = serve.last().unwrap().reqs_per_s / serve[0].reqs_per_s;
+    println!("serve micro-batch speedup (max_batch 32 vs 1): {serve_speedup:.2}x");
+
+    if smoke {
+        println!("smoke mode: no JSON written");
+        return;
+    }
+    if direct_speedup < 4.0 {
+        eprintln!("WARNING: direct micro-batch speedup {direct_speedup:.2}x below the 4x target");
+    }
+    match write_json((obs_dim, act_dim, hidden), &direct, &serve, direct_speedup, serve_speedup) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -107,6 +107,24 @@ impl RunConfig {
         parse_preset(&self.preset)
     }
 
+    /// Validate the invariants that should fail at config time rather
+    /// than deep inside a run: unknown task names (no silent
+    /// action-repeat default — see `envs::try_action_repeat`) and
+    /// unknown precision presets.
+    pub fn validate(&self) -> Result<(), String> {
+        if crate::envs::try_action_repeat(&self.task).is_none() {
+            return Err(format!(
+                "unknown task {:?} (supported: {})",
+                self.task,
+                crate::envs::SUPPORTED_TASKS.join(" ")
+            ));
+        }
+        if self.preset().is_none() {
+            return Err(format!("unknown preset {:?}", self.preset));
+        }
+        Ok(())
+    }
+
     /// Apply a `key=value` override; returns false for unknown keys.
     pub fn set(&mut self, key: &str, value: &str) -> bool {
         fn p<T: std::str::FromStr>(v: &str) -> Option<T> {
@@ -264,6 +282,21 @@ mod tests {
         assert_eq!(c.task, "cheetah_run");
         assert_eq!(c.steps, 123);
         assert!(c.pixels);
+    }
+
+    #[test]
+    fn validate_rejects_unknown_task_and_preset() {
+        let mut c = RunConfig::default();
+        assert!(c.validate().is_ok());
+        c.task = "pendulum_swingup".into();
+        assert!(c.validate().is_ok(), "pendulum_swingup is a supported task");
+        c.task = "warehouse_sort".into();
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("unknown task"), "{err}");
+        assert!(err.contains("pendulum_swingup"), "error lists supported tasks: {err}");
+        c.task = "cheetah_run".into();
+        c.preset = "fp17_ours".into();
+        assert!(c.validate().unwrap_err().contains("unknown preset"));
     }
 
     #[test]

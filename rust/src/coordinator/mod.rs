@@ -7,7 +7,7 @@ mod pixels;
 mod trainer;
 
 pub use pixels::PixelEnvAdapter;
-pub use trainer::{run_many, train, TrainOutcome};
+pub use trainer::{evaluate_policy, evaluate_policy_batched, run_many, train, TrainOutcome};
 
 /// dm_control episode length in raw environment steps.
 pub const EPISODE_ENV_STEPS: usize = 1000;

@@ -9,7 +9,7 @@ use crate::config::RunConfig;
 use crate::envs::{action_repeat, make_env, sanitize_action, Env};
 use crate::replay::{ReplayBuffer, Storage};
 use crate::rngs::Pcg64;
-use crate::sac::{SacAgent, SacConfig};
+use crate::sac::{ActMode, Policy, SacAgent, SacConfig};
 use crate::telemetry::{LogHistogram, Series};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -26,6 +26,12 @@ pub struct TrainOutcome {
     pub wall_secs: f64,
     /// Total optimizer steps skipped due to non-finite gradients.
     pub skipped_steps: u64,
+    /// Immutable snapshot of the final trained policy — the artifact
+    /// the serve layer consumes. Always `Some` from [`train`]; holds a
+    /// full copy of the actor (and encoder) weights, so [`run_many`]
+    /// (experiment grids that keep every outcome alive and only read
+    /// the scalar results) clears it to keep grid memory flat.
+    pub policy: Option<Policy>,
 }
 
 enum Obs {
@@ -102,32 +108,96 @@ fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
     }
 }
 
-/// Run `episodes` deterministic evaluation episodes; returns the mean
-/// return (sum of raw env rewards over the 1000-env-step episode).
-fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u64) -> f64 {
+/// Run `episodes` deterministic evaluation episodes one at a time with
+/// an immutable [`Policy`] snapshot (batch-1 forwards — the reference
+/// path). Returns `None` if the policy produced a non-finite action
+/// (the paper's crash condition), otherwise the mean return (sum of raw
+/// env rewards over the 1000-env-step episode).
+pub fn evaluate_policy(
+    policy: &Policy,
+    cfg: &RunConfig,
+    episodes: usize,
+    eval_seed: u64,
+) -> Option<f64> {
     let repeat = action_repeat(&cfg.task);
     let steps = EPISODE_ENV_STEPS / repeat;
-    let mut total = 0.0;
+    let mut totals = vec![0.0f64; episodes];
     for ep in 0..episodes {
         let mut env = build_env(cfg);
         let mut rng = Pcg64::seed_stream(eval_seed, 1000 + ep as u64);
         let mut obs = env.reset(&mut rng);
         for _ in 0..steps {
-            let Some(mut a) = agent.act(&obs, false) else {
-                return 0.0; // crash ⇒ the paper scores the run as 0
-            };
+            let t = policy.obs_tensor(&obs, 1);
+            let mut a = policy.act_batch(&t, ActMode::Deterministic).data;
             if !sanitize_action(&mut a) {
-                agent.crashed = true;
-                return 0.0;
+                return None; // crash ⇒ the paper scores the run as 0
             }
             for _ in 0..repeat {
                 let (o, r) = env.step(&a);
                 obs = o;
-                total += r as f64;
+                totals[ep] += r as f64;
             }
         }
     }
-    total / episodes as f64
+    Some(totals.iter().sum::<f64>() / episodes as f64)
+}
+
+/// Same schedule as [`evaluate_policy`], but every episode advances in
+/// lockstep with ONE batched forward per agent step (episodes share the
+/// GEMMs). Bitwise identical to the looped path: episode RNG streams
+/// are untouched, the GEMM backend is batch-size-invariant per row, and
+/// per-episode returns are accumulated separately and reduced in the
+/// same order. Fixed-length dm_control-style episodes make lockstep
+/// exact (no early termination).
+pub fn evaluate_policy_batched(
+    policy: &Policy,
+    cfg: &RunConfig,
+    episodes: usize,
+    eval_seed: u64,
+) -> Option<f64> {
+    if episodes == 0 {
+        return Some(0.0);
+    }
+    let repeat = action_repeat(&cfg.task);
+    let steps = EPISODE_ENV_STEPS / repeat;
+    let obs_len = policy.obs_len();
+    let mut envs: Vec<Obs> = (0..episodes).map(|_| build_env(cfg)).collect();
+    let mut obs_flat = vec![0.0f32; episodes * obs_len];
+    for (ep, env) in envs.iter_mut().enumerate() {
+        let mut rng = Pcg64::seed_stream(eval_seed, 1000 + ep as u64);
+        let o = env.reset(&mut rng);
+        obs_flat[ep * obs_len..(ep + 1) * obs_len].copy_from_slice(&o);
+    }
+    let mut totals = vec![0.0f64; episodes];
+    for _ in 0..steps {
+        let t = policy.obs_tensor(&obs_flat, episodes);
+        let acts = policy.act_batch(&t, ActMode::Deterministic);
+        for (ep, env) in envs.iter_mut().enumerate() {
+            let mut a = acts.row(ep).to_vec();
+            if !sanitize_action(&mut a) {
+                return None;
+            }
+            for _ in 0..repeat {
+                let (o, r) = env.step(&a);
+                totals[ep] += r as f64;
+                obs_flat[ep * obs_len..(ep + 1) * obs_len].copy_from_slice(&o);
+            }
+        }
+    }
+    Some(totals.iter().sum::<f64>() / episodes as f64)
+}
+
+/// Trainer-internal eval: snapshot the agent's policy, run the batched
+/// evaluator, translate a crash into the agent's crash flag.
+fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u64) -> f64 {
+    let policy = agent.policy();
+    match evaluate_policy_batched(&policy, cfg, episodes, eval_seed) {
+        Some(score) => score,
+        None => {
+            agent.crashed = true;
+            0.0
+        }
+    }
 }
 
 /// Train one agent per `cfg`; fully deterministic in `cfg.seed`.
@@ -236,6 +306,7 @@ pub fn train(cfg: &RunConfig) -> TrainOutcome {
         grad_hist,
         wall_secs: t0.elapsed().as_secs_f64(),
         skipped_steps: skipped,
+        policy: Some(agent.policy()),
     }
 }
 
@@ -254,7 +325,10 @@ pub fn run_many(cfgs: &[RunConfig]) -> Vec<TrainOutcome> {
                 if i >= n {
                     break;
                 }
-                let out = train(&cfgs[i]);
+                let mut out = train(&cfgs[i]);
+                // grids only read scalars/curves; don't pin every run's
+                // weight snapshot for the lifetime of the whole grid
+                out.policy = None;
                 results_ptr.lock().unwrap()[i] = Some(out);
             });
         }

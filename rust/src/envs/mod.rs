@@ -59,14 +59,43 @@ pub const PLANET_TASKS: [&str; 6] = [
     "ball_in_cup_catch",
 ];
 
-/// Paper Table 8 action-repeat per task (values from Hafner et al. 2019).
-pub fn action_repeat(task: &str) -> usize {
-    match task {
+/// Every supported task: the planet benchmark plus the cheap
+/// `pendulum_swingup` testbed task.
+pub const SUPPORTED_TASKS: [&str; 7] = [
+    "finger_spin",
+    "cartpole_swingup",
+    "reacher_easy",
+    "cheetah_run",
+    "walker_walk",
+    "ball_in_cup_catch",
+    "pendulum_swingup",
+];
+
+/// Paper Table 8 action-repeat per task (values from Hafner et al.
+/// 2019); `pendulum_swingup` is not in the paper's suite and uses the
+/// table's modal value 4. Every supported task has an explicit arm and
+/// unknown names return `None` — configs are rejected up front
+/// ([`crate::config::RunConfig::validate`]) instead of silently
+/// training with a defaulted repeat.
+pub fn try_action_repeat(task: &str) -> Option<usize> {
+    Some(match task {
         "cartpole_swingup" => 8,
-        "reacher_easy" | "cheetah_run" | "ball_in_cup_catch" => 4,
-        "finger_spin" | "walker_walk" => 2,
-        _ => 4,
-    }
+        "reacher_easy" => 4,
+        "cheetah_run" => 4,
+        "ball_in_cup_catch" => 4,
+        "finger_spin" => 2,
+        "walker_walk" => 2,
+        "pendulum_swingup" => 4,
+        _ => return None,
+    })
+}
+
+/// Infallible [`try_action_repeat`] for call sites past config
+/// validation; panics with the supported-task list on unknown names.
+pub fn action_repeat(task: &str) -> usize {
+    try_action_repeat(task).unwrap_or_else(|| {
+        panic!("unknown task {task:?} — supported: {}", SUPPORTED_TASKS.join(" "))
+    })
 }
 
 /// Instantiate a task by name.
@@ -197,6 +226,22 @@ mod tests {
         assert_eq!(action_repeat("cartpole_swingup"), 8);
         assert_eq!(action_repeat("finger_spin"), 2);
         assert_eq!(action_repeat("cheetah_run"), 4);
+        assert_eq!(action_repeat("pendulum_swingup"), 4);
+    }
+
+    #[test]
+    fn every_supported_task_has_env_and_repeat() {
+        for task in SUPPORTED_TASKS {
+            assert!(make_env(task).is_some(), "{task}: no env");
+            assert!(try_action_repeat(task).is_some(), "{task}: no action repeat");
+        }
+        assert_eq!(try_action_repeat("not_a_task"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown task")]
+    fn action_repeat_panics_on_unknown_task() {
+        let _ = action_repeat("warehouse_sort");
     }
 
     #[test]

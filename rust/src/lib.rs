@@ -21,10 +21,43 @@
 //!
 //! * The **native engine** is self-contained Rust and always available —
 //!   training, experiments, examples and benches below all use it.
-//! * The **PJRT artifact path** (`lprl serve`, `runtime::TrainSession`)
-//!   needs artifacts from `python/compile/aot.py` plus real `xla`
-//!   bindings; the offline build stubs those (see `runtime::xla`), and
-//!   every artifact consumer skips or errors out cleanly without them.
+//! * The **PJRT artifact path** (`runtime::TrainSession`) needs
+//!   artifacts from `python/compile/aot.py` plus real `xla` bindings;
+//!   the offline build stubs those (see `runtime::xla`), and every
+//!   artifact consumer skips or errors out cleanly without them.
+//!
+//! ## Training vs inference
+//!
+//! The forward-pass API is split end to end:
+//!
+//! * **Inference** — every layer `forward` is `&self` and cache-free
+//!   ([`nn`]), so a frozen [`sac::Policy`] snapshot
+//!   ([`sac::SacAgent::policy`]) is `Send + Sync` and serves any number
+//!   of threads with batched [`sac::Policy::act_batch`].
+//! * **Training** — `forward_train` writes activation caches into
+//!   explicit caller-owned workspaces (`nn::LinearWorkspace`,
+//!   `nn::MlpWorkspace`, …) that `backward` consumes; both paths are
+//!   bitwise identical.
+//!
+//! On top of the split sits the [`serve`] subsystem: a micro-batching
+//! policy server (`lprl serve --engine native|pjrt`) that unifies the
+//! native engine and the PJRT artifact path behind one
+//! [`serve::PolicyBackend`] request path.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`nn`] | tensors, layers (&self forward / workspace backward), blocked GEMM + worker pool |
+//! | [`lowp`] | precision formats + quantization policy |
+//! | [`sac`] | the agent (training) and [`sac::Policy`] snapshots (inference) |
+//! | [`optim`] | Adam/hAdam, loss scaling, Kahan accumulators |
+//! | [`envs`] | the continuous-control task suite |
+//! | [`replay`] | replay buffer (f16/f32 storage) |
+//! | [`coordinator`] | train loop + batched deterministic eval |
+//! | [`serve`] | micro-batching policy server over [`serve::PolicyBackend`] |
+//! | [`runtime`] | PJRT artifact execution (AOT path) |
+//! | [`experiments`] / [`telemetry`] | paper exhibits + CSV/JSON reporting |
 //!
 //! ## Quickstart (what works out of the box — see also README.md)
 //!
@@ -32,7 +65,9 @@
 //! cargo run --release --example quickstart
 //! cargo run --release -- train task=cartpole_swingup preset=fp16_ours
 //! cargo run --release -- exp fig3      # regenerate the ablation data
+//! cargo run --release -- serve engine=native   # micro-batching policy server
 //! cargo bench --bench gemm_blocked     # GEMM backend vs seed baseline
+//! cargo bench --bench serve_throughput # single vs micro-batched serving
 //! python -m pytest python/tests -q     # L1/L2 kernel + model tests
 //! ```
 
@@ -53,4 +88,5 @@ pub mod replay;
 pub mod rngs;
 pub mod runtime;
 pub mod sac;
+pub mod serve;
 pub mod telemetry;

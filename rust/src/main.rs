@@ -4,14 +4,17 @@
 //! lprl train  [--config file.toml] [key=value ...]   train one agent
 //! lprl eval   [key=value ...]                        evaluate (train + report)
 //! lprl exp <fig1|fig2|...|table11|all> [key=value]   reproduce a paper exhibit
-//! lprl serve  [--artifacts DIR] [--variant V]        PJRT artifact train loop
+//! lprl serve  [engine=native|pjrt] [key=value ...]   micro-batching policy server
 //! lprl info                                          build/feature summary
 //! ```
 
 use lprl::config::{parse_cli, RunConfig};
 use lprl::coordinator::train;
 use lprl::envs::PLANET_TASKS;
+use lprl::rngs::Pcg64;
+use lprl::serve::{NativeBackend, PjrtBackend, PolicyBackend, PolicyServer, ServeConfig};
 use lprl::telemetry::write_csv;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -44,7 +47,10 @@ fn print_help() {
 USAGE:
   lprl train [--config f.toml] [key=value ...]   e.g. task=cheetah_run preset=fp16_ours seed=1
   lprl exp <name> [key=value ...]                name: fig1..fig12, table2/3/7/10/11, all
-  lprl serve [--artifacts artifacts] [--variant fp16_ours] [--steps N]
+  lprl serve [engine=native|pjrt] [key=value ...]
+       native: task= preset= hidden= seed= train_steps=    (policy source)
+       pjrt:   artifacts= variant= [mode=train steps=N]    (artifact source)
+       both:   clients= requests= max_batch= flush_us=     (serve demo load)
   lprl info
 
 PRESETS: fp32 fp16_naive fp16_ours coerc loss_scale mixed amp cum0..cum6 loo1..loo6 e5mX_ours
@@ -65,8 +71,9 @@ fn cmd_train(kv: &[(String, String)]) -> anyhow::Result<()> {
             anyhow::bail!("unknown option {k}");
         }
     }
-    cfg.preset()
-        .ok_or_else(|| anyhow::anyhow!("unknown preset {}", cfg.preset))?;
+    // config-time validation: unknown tasks/presets fail here, not deep
+    // inside a run with a silently defaulted action repeat
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     eprintln!(
         "training {} / {} (seed {}, {} steps, hidden {}, batch {})",
         cfg.task, cfg.preset, cfg.seed, cfg.steps, cfg.hidden, cfg.batch
@@ -92,24 +99,182 @@ fn cmd_exp(name: &str, kv: &[(String, String)]) -> anyhow::Result<()> {
     lprl::experiments::run(name, kv)
 }
 
+/// `lprl serve`: start the micro-batching policy server over the chosen
+/// engine and drive it with a multi-client demo workload.
+///
+/// * `engine=native` (default): snapshot a [`lprl::sac::Policy`] from a
+///   fresh (optionally briefly trained — `train_steps=N`) native agent.
+/// * `engine=pjrt`: serve the AOT `act_<variant>` artifact; `mode=train`
+///   keeps the legacy artifact train-loop demo.
 fn cmd_serve(kv: &[(String, String)]) -> anyhow::Result<()> {
-    use lprl::rngs::Pcg64;
-    use lprl::runtime::TrainSession;
+    let mut engine = "native".to_string();
+    let mut mode = "serve".to_string();
+    // native-engine policy source
+    let mut task = "cartpole_swingup".to_string();
+    let mut preset = "fp16_ours".to_string();
+    let mut hidden = 128usize;
+    let mut seed = 0u64;
+    let mut train_steps = 0usize;
+    // pjrt artifact source
     let mut dir = "artifacts".to_string();
     let mut variant = "fp16_ours".to_string();
     let mut steps = 50usize;
+    // serve demo load
+    let mut clients = 8usize;
+    let mut requests = 64usize;
+    let mut max_batch = 32usize;
+    let mut flush_us = 200u64;
     for (k, v) in kv {
         match k.as_str() {
+            "engine" => engine = v.clone(),
+            "mode" => mode = v.clone(),
+            "task" => task = v.clone(),
+            "preset" => preset = v.clone(),
+            "hidden" => hidden = v.parse()?,
+            "seed" => seed = v.parse()?,
+            "train_steps" => train_steps = v.parse()?,
             "artifacts" => dir = v.clone(),
             "variant" => variant = v.clone(),
             "steps" => steps = v.parse()?,
+            "clients" => clients = v.parse()?,
+            "requests" => requests = v.parse()?,
+            "max_batch" => max_batch = v.parse()?,
+            "flush_us" => flush_us = v.parse()?,
             _ => anyhow::bail!("unknown option {k}"),
         }
     }
-    let mut sess = TrainSession::new(&dir, &variant)?;
+    let backend: Arc<dyn PolicyBackend> = match engine.as_str() {
+        "native" => {
+            let cfg = RunConfig {
+                task,
+                preset,
+                hidden,
+                seed,
+                steps: train_steps,
+                ..RunConfig::default()
+            };
+            cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+            let policy = native_policy(&cfg, train_steps)?;
+            println!(
+                "serving native policy: task={} preset={} obs={} act={} (trained {train_steps} steps)",
+                cfg.task,
+                cfg.preset,
+                policy.obs_len(),
+                policy.act_dim()
+            );
+            Arc::new(NativeBackend::new(policy))
+        }
+        "pjrt" if mode == "train" => return pjrt_train_loop(&dir, &variant, steps),
+        "pjrt" => {
+            let backend = PjrtBackend::new(&dir, &variant)?;
+            println!(
+                "serving pjrt artifact policy: variant={variant} obs={} act={}",
+                backend.obs_dim(),
+                backend.act_dim()
+            );
+            Arc::new(backend)
+        }
+        other => anyhow::bail!("unknown engine {other} (native|pjrt)"),
+    };
+    serve_demo(backend, clients, requests, ServeConfig { max_batch, flush_us, queue_cap: 1024 })
+}
+
+/// Build the native policy source: a fresh agent (optionally trained
+/// for a few steps so the served policy is not pure init noise).
+fn native_policy(cfg: &RunConfig, train_steps: usize) -> anyhow::Result<lprl::sac::Policy> {
+    use lprl::sac::{SacAgent, SacConfig};
+    if train_steps > 0 {
+        let mut cfg = cfg.clone();
+        cfg.steps = train_steps;
+        cfg.seed_steps = (train_steps / 4).max(1);
+        cfg.eval_every = train_steps; // single final eval
+        cfg.eval_episodes = 1;
+        let out = train(&cfg);
+        anyhow::ensure!(!out.crashed, "pre-serve training crashed");
+        eprintln!("(pre-trained {} steps, final score {:.1})", train_steps, out.final_score);
+        return out
+            .policy
+            .ok_or_else(|| anyhow::anyhow!("train() returned no policy snapshot"));
+    }
+    let env = lprl::envs::make_env(&cfg.task)
+        .ok_or_else(|| anyhow::anyhow!("unknown task {}", cfg.task))?;
+    let (prec, methods) = cfg
+        .preset()
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {}", cfg.preset))?;
+    let sac_cfg = SacConfig::states(env.obs_dim(), env.act_dim(), cfg.hidden);
+    let agent = SacAgent::new(sac_cfg, methods, prec, cfg.seed);
+    Ok(agent.policy())
+}
+
+/// Drive the server with `clients` threads × `requests` observations
+/// each and report throughput + latency.
+fn serve_demo(
+    backend: Arc<dyn PolicyBackend>,
+    clients: usize,
+    requests: usize,
+    cfg: ServeConfig,
+) -> anyhow::Result<()> {
+    let obs_len = backend.obs_dim();
+    println!(
+        "serve: {clients} clients x {requests} requests, max_batch={} flush={}us",
+        cfg.max_batch, cfg.flush_us
+    );
+    let server = PolicyServer::start(backend, cfg);
+    let t0 = std::time::Instant::now();
+    let mut failed = 0usize;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let client = server.client();
+            handles.push(s.spawn(move || -> Result<(), lprl::serve::ServeError> {
+                let mut rng = Pcg64::seed_stream(0x5E17E, c as u64);
+                for _ in 0..requests {
+                    let obs: Vec<f32> = (0..obs_len).map(|_| rng.normal_f32()).collect();
+                    let _ = client.act(&obs)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    eprintln!("client error: {e}");
+                    failed += 1;
+                }
+                Err(_) => failed += 1,
+            }
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = server.shutdown();
+    anyhow::ensure!(failed == 0, "{failed} client thread(s) failed");
+    println!(
+        "served {} requests in {wall:.3}s -> {:.0} req/s over {} batches (mean batch {:.1}, max {})",
+        stats.requests,
+        stats.requests as f64 / wall.max(1e-9),
+        stats.batches,
+        stats.mean_batch,
+        stats.max_batch
+    );
+    println!(
+        "latency p50 {:.2} ms  p99 {:.2} ms  backend busy {:.3}s  errors {}",
+        stats.p50_us as f64 / 1000.0,
+        stats.p99_us as f64 / 1000.0,
+        stats.backend_us as f64 / 1e6,
+        stats.errors
+    );
+    Ok(())
+}
+
+/// The legacy PJRT demo (`engine=pjrt mode=train`): run fused train
+/// steps over the `train_<variant>` artifact.
+fn pjrt_train_loop(dir: &str, variant: &str, steps: usize) -> anyhow::Result<()> {
+    use lprl::runtime::TrainSession;
+    let mut sess = TrainSession::new(dir, variant)?;
     let (o, a, b) = sess.dims();
     println!(
-        "serving {variant} on {} (obs={o} act={a} batch={b})",
+        "artifact train loop: {variant} on {} (obs={o} act={a} batch={b})",
         sess.runtime.platform()
     );
     let mut rng = Pcg64::seed(0);
@@ -137,7 +302,7 @@ fn cmd_info() -> anyhow::Result<()> {
     println!("layers:");
     println!("  L1  python/compile/kernels/  Pallas: quantize, hAdam, Kahan, logprob");
     println!("  L2  python/compile/model.py  JAX SAC fwd/bwd+optimizer -> HLO text");
-    println!("  L3  rust/src/                coordinator + native engine + PJRT runtime");
+    println!("  L3  rust/src/                coordinator + native engine + serve layer + PJRT runtime");
     println!("tasks: {} + pendulum_swingup", PLANET_TASKS.join(", "));
     let art = std::path::Path::new("artifacts/manifest.txt");
     println!(

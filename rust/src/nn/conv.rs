@@ -1,12 +1,24 @@
 //! 2-D convolution (NCHW, valid padding) via im2col + GEMM, with explicit
 //! backward. Used by the pixel encoder (paper §4.6: four 3×3 conv layers,
 //! first stride 2, rest stride 1).
+//!
+//! `forward` is `&self` (inference, shareable); the im2col panel the
+//! backward pass reuses is cached in an explicit [`Conv2dWorkspace`] by
+//! `forward_train`.
 
 use super::gemm::{gemm, gemm_nt_bias_q, gemm_tn_bias_q};
 use super::param::Param;
 use super::tensor::Tensor;
 use crate::lowp::Precision;
 use crate::rngs::Pcg64;
+
+/// Training-time caches for one [`Conv2d`]: the im2col panel of the last
+/// `forward_train` input and its shape.
+#[derive(Debug, Clone, Default)]
+pub struct Conv2dWorkspace {
+    cols: Vec<f32>, // im2col of last input [B*Ho*Wo, Cin*k*k]
+    in_shape: [usize; 4],
+}
 
 /// Conv2d: input `[B, Cin, H, W]` → output `[B, Cout, Ho, Wo]`,
 /// `Ho = (H - k)/stride + 1`, valid padding.
@@ -18,8 +30,6 @@ pub struct Conv2d {
     pub cout: usize,
     pub k: usize,
     pub stride: usize,
-    cols_cache: Vec<f32>, // im2col of last input [B*Ho*Wo, Cin*k*k]
-    in_shape: [usize; 4],
 }
 
 impl Conv2d {
@@ -28,7 +38,7 @@ impl Conv2d {
         let mut w = Param::new(format!("{name}.w"), &[cout, fan]);
         w.w = super::init::orthogonal_init(rng, cout, fan, 1.0);
         let b = Param::new(format!("{name}.b"), &[cout]);
-        Conv2d { w, b, cin, cout, k, stride, cols_cache: Vec::new(), in_shape: [0; 4] }
+        Conv2d { w, b, cin, cout, k, stride }
     }
 
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
@@ -63,20 +73,21 @@ impl Conv2d {
         (cols, ho, wo)
     }
 
-    /// Forward; output quantized.
-    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
-        assert_eq!(x.shape.len(), 4);
-        assert_eq!(x.shape[1], self.cin);
-        let [b, _, h, w] = [x.shape[0], x.shape[1], x.shape[2], x.shape[3]];
-        let (cols, ho, wo) = self.im2col(x);
-        self.in_shape = [b, self.cin, h, w];
+    /// GEMM over a prepared im2col panel + transpose to NCHW, with the
+    /// bias add + quantize fused into the GEMM epilogue.
+    fn forward_from_cols(
+        &self,
+        cols: &[f32],
+        b: usize,
+        ho: usize,
+        wo: usize,
+        prec: Precision,
+    ) -> Tensor {
         let fan = self.cin * self.k * self.k;
         let rows = b * ho * wo;
-        // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ, with the
-        // bias add + quantize fused into the GEMM epilogue
+        // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ
         let mut yrows = vec![0.0f32; rows * self.cout];
-        gemm_nt_bias_q(&cols, &self.w.w, &mut yrows, rows, fan, self.cout, Some(&self.b.w), prec);
-        self.cols_cache = cols;
+        gemm_nt_bias_q(cols, &self.w.w, &mut yrows, rows, fan, self.cout, Some(&self.b.w), prec);
         // transpose the finished rows to [B, Cout, Ho, Wo]
         let mut y = Tensor::zeros(&[b, self.cout, ho, wo]);
         for bi in 0..b {
@@ -92,10 +103,31 @@ impl Conv2d {
         y
     }
 
+    /// Inference forward; output quantized. Bitwise identical to
+    /// [`Conv2d::forward_train`].
+    pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
+        assert_eq!(x.shape.len(), 4);
+        assert_eq!(x.shape[1], self.cin);
+        let (cols, ho, wo) = self.im2col(x);
+        self.forward_from_cols(&cols, x.shape[0], ho, wo, prec)
+    }
+
+    /// Training forward: keeps the im2col panel in `ws` for
+    /// [`Conv2d::backward`].
+    pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut Conv2dWorkspace) -> Tensor {
+        assert_eq!(x.shape.len(), 4);
+        assert_eq!(x.shape[1], self.cin);
+        let (cols, ho, wo) = self.im2col(x);
+        let y = self.forward_from_cols(&cols, x.shape[0], ho, wo, prec);
+        ws.cols = cols;
+        ws.in_shape = [x.shape[0], self.cin, x.shape[2], x.shape[3]];
+        y
+    }
+
     /// Backward; accumulates dW/db, returns dx `[B, Cin, H, W]`.
-    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
-        let [b, cin, h, w] = self.in_shape;
-        assert!(b > 0, "forward cache missing");
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &Conv2dWorkspace) -> Tensor {
+        let [b, cin, h, w] = ws.in_shape;
+        assert!(b > 0, "forward_train workspace missing");
         let (ho, wo) = self.out_hw(h, w);
         assert_eq!(dy.shape, vec![b, self.cout, ho, wo]);
         let fan = cin * self.k * self.k;
@@ -122,7 +154,7 @@ impl Conv2d {
         prec.q_slice(&mut self.b.g);
         // dW[cout, fan] = dyrᵀ @ cols (quantize fused into the epilogue)
         let mut dw = vec![0.0f32; self.cout * fan];
-        gemm_tn_bias_q(&dyr, &self.cols_cache, &mut dw, self.cout, rows, fan, None, prec);
+        gemm_tn_bias_q(&dyr, &ws.cols, &mut dw, self.cout, rows, fan, None, prec);
         for (acc, d) in self.w.g.iter_mut().zip(&dw) {
             *acc += d;
         }
@@ -195,7 +227,7 @@ mod tests {
     #[test]
     fn stride_two_shape() {
         let mut rng = Pcg64::seed(2);
-        let mut conv = Conv2d::new("c", 3, 8, 3, 2, &mut rng);
+        let conv = Conv2d::new("c", 3, 8, 3, 2, &mut rng);
         let x = Tensor::zeros(&[2, 3, 21, 21]);
         let y = conv.forward(&x, Precision::Fp32);
         assert_eq!(y.shape, vec![2, 8, 10, 10]);
@@ -207,9 +239,10 @@ mod tests {
         let mut conv = Conv2d::new("c", 2, 3, 3, 1, &mut rng);
         let x = Tensor::from_vec(&[1, 2, 5, 5], (0..50).map(|_| rng.normal_f32()).collect());
         let prec = Precision::Fp32;
-        let y = conv.forward(&x, prec);
+        let mut ws = Conv2dWorkspace::default();
+        let y = conv.forward_train(&x, prec, &mut ws);
         conv.zero_grad();
-        let dx = conv.backward(&y.clone(), prec);
+        let dx = conv.backward(&y.clone(), prec, &ws);
 
         let eps = 1e-3f32;
         for &idx in &[0usize, 7, 20, 49] {
@@ -221,10 +254,9 @@ mod tests {
             let num = (lp - lm) / (2.0 * eps);
             assert!((num - dx.data[idx]).abs() < 3e-2 * (1.0 + num.abs()), "x[{idx}]: {num} vs {}", dx.data[idx]);
         }
-        let _ = conv.forward(&x, prec);
         conv.zero_grad();
-        let yy = conv.forward(&x, prec);
-        let _ = conv.backward(&yy.clone(), prec);
+        let yy = conv.forward_train(&x, prec, &mut ws);
+        let _ = conv.backward(&yy.clone(), prec, &ws);
         for &idx in &[0usize, 11, 30] {
             let orig = conv.w.w[idx];
             conv.w.w[idx] = orig + eps;
@@ -242,11 +274,25 @@ mod tests {
         let mut rng = Pcg64::seed(4);
         let mut conv = Conv2d::new("c", 1, 2, 3, 1, &mut rng);
         let x = Tensor::zeros(&[1, 1, 3, 3]); // single output position
-        let y = conv.forward(&x, Precision::Fp32);
+        let mut ws = Conv2dWorkspace::default();
+        let y = conv.forward_train(&x, Precision::Fp32, &mut ws);
         assert_eq!(y.shape, vec![1, 2, 1, 1]);
         conv.zero_grad();
         let dy = Tensor::from_vec(&[1, 2, 1, 1], vec![2.0, -3.0]);
-        let _ = conv.backward(&dy, Precision::Fp32);
+        let _ = conv.backward(&dy, Precision::Fp32, &ws);
         assert_eq!(conv.b.g, vec![2.0, -3.0]);
+    }
+
+    #[test]
+    fn inference_and_train_forward_agree_bitwise() {
+        let mut rng = Pcg64::seed(5);
+        let conv = Conv2d::new("c", 2, 4, 3, 2, &mut rng);
+        let x = Tensor::from_vec(&[2, 2, 9, 9], (0..2 * 2 * 81).map(|_| rng.normal_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let mut ws = Conv2dWorkspace::default();
+            let a = conv.forward(&x, prec);
+            let b = conv.forward_train(&x, prec, &mut ws);
+            assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
     }
 }

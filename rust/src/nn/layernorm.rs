@@ -3,10 +3,22 @@
 //! of *squares*, and in fp16 a pre-activation of magnitude ≳ 256 squares
 //! past 65504 → ∞. We quantize the squared deviations at element level so
 //! the failure (and the weight-standardization fix) reproduce faithfully.
+//!
+//! `forward` is `&self` (inference); the normalized activations the
+//! backward pass reuses are cached in a [`LayerNormWorkspace`] by
+//! `forward_train`.
 
 use super::param::Param;
 use super::tensor::Tensor;
 use crate::lowp::Precision;
+
+/// Training-time caches for one [`LayerNorm`]: normalized activations
+/// and per-row inverse std.
+#[derive(Debug, Clone, Default)]
+pub struct LayerNormWorkspace {
+    xhat: Tensor,
+    inv_std: Vec<f32>,
+}
 
 /// LayerNorm with learnable affine (γ, β), over the last dim.
 #[derive(Debug, Clone)]
@@ -15,9 +27,6 @@ pub struct LayerNorm {
     pub beta: Param,
     pub dim: usize,
     pub eps: f32,
-    // caches
-    xhat: Tensor,
-    inv_std: Vec<f32>,
 }
 
 impl LayerNorm {
@@ -25,19 +34,46 @@ impl LayerNorm {
         let mut gamma = Param::new(format!("{name}.gamma"), &[dim]);
         gamma.w.iter_mut().for_each(|v| *v = 1.0);
         let beta = Param::new(format!("{name}.beta"), &[dim]);
-        LayerNorm { gamma, beta, dim, eps: 1e-5, xhat: Tensor::zeros(&[0]), inv_std: Vec::new() }
+        LayerNorm { gamma, beta, dim, eps: 1e-5 }
     }
 
-    /// Forward. Mean/variance are computed with per-element quantized
-    /// squares (where the paper's overflow lives) and f32 accumulation
-    /// (as a warp-level tree reduction would give on hardware).
-    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
+    /// Inference forward: `&self`, genuinely cache-free (no workspace
+    /// tensor is materialized). The per-element op sequence is the same
+    /// as [`LayerNorm::forward_train`], so outputs are bitwise
+    /// identical.
+    pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
         assert_eq!(x.cols(), self.dim);
         let rows = x.rows();
         let d = self.dim;
         let mut y = Tensor::zeros(&[rows, d]);
-        self.xhat = Tensor::zeros(&[rows, d]);
-        self.inv_std = vec![0.0; rows];
+        for r in 0..rows {
+            let xr = x.row(r);
+            let mean = prec.q(xr.iter().sum::<f32>() / d as f32);
+            let var = prec.q(
+                xr.iter().map(|&v| prec.q(prec.q(v - mean) * prec.q(v - mean))).sum::<f32>()
+                    / d as f32,
+            );
+            let inv = prec.q(1.0 / prec.q((var + self.eps).sqrt()));
+            let yr = y.row_mut(r);
+            for c in 0..d {
+                let xh = prec.q(prec.q(xr[c] - mean) * inv);
+                yr[c] = prec.q(self.gamma.w[c] * xh + self.beta.w[c]);
+            }
+        }
+        y
+    }
+
+    /// Training forward. Mean/variance are computed with per-element
+    /// quantized squares (where the paper's overflow lives) and f32
+    /// accumulation (as a warp-level tree reduction would give on
+    /// hardware). Caches into `ws` for [`LayerNorm::backward`].
+    pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut LayerNormWorkspace) -> Tensor {
+        assert_eq!(x.cols(), self.dim);
+        let rows = x.rows();
+        let d = self.dim;
+        let mut y = Tensor::zeros(&[rows, d]);
+        ws.xhat = Tensor::zeros(&[rows, d]);
+        ws.inv_std = vec![0.0; rows];
         for r in 0..rows {
             let xr = x.row(r);
             let mean = prec.q(xr.iter().sum::<f32>() / d as f32);
@@ -47,8 +83,8 @@ impl LayerNorm {
                     / d as f32,
             );
             let inv = prec.q(1.0 / prec.q((var + self.eps).sqrt()));
-            self.inv_std[r] = inv;
-            let xh = self.xhat.row_mut(r);
+            ws.inv_std[r] = inv;
+            let xh = ws.xhat.row_mut(r);
             for c in 0..d {
                 xh[c] = prec.q(prec.q(xr[c] - mean) * inv);
             }
@@ -61,14 +97,14 @@ impl LayerNorm {
     }
 
     /// Backward; accumulates dγ/dβ, returns dx.
-    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &LayerNormWorkspace) -> Tensor {
         let rows = dy.rows();
         let d = self.dim;
-        assert_eq!(self.xhat.rows(), rows, "forward cache missing");
+        assert_eq!(ws.xhat.rows(), rows, "forward_train workspace missing");
         let mut dx = Tensor::zeros(&[rows, d]);
         for r in 0..rows {
             let dyr = dy.row(r);
-            let xh = self.xhat.row(r);
+            let xh = ws.xhat.row(r);
             // parameter grads
             for c in 0..d {
                 self.gamma.g[c] += dyr[c] * xh[c];
@@ -84,7 +120,7 @@ impl LayerNorm {
                 s2 += prec.q(gdy[c] * xh[c]);
             }
             let (s1, s2) = (prec.q(s1), prec.q(s2));
-            let inv = self.inv_std[r];
+            let inv = ws.inv_std[r];
             let dn = d as f32;
             let dxr = dx.row_mut(r);
             for c in 0..d {
@@ -115,7 +151,7 @@ mod tests {
     #[test]
     fn output_is_normalized() {
         let mut rng = Pcg64::seed(1);
-        let mut ln = LayerNorm::new("ln", 50);
+        let ln = LayerNorm::new("ln", 50);
         let x = Tensor::from_vec(&[4, 50], (0..200).map(|_| rng.normal_f32() * 3.0 + 1.0).collect());
         let y = ln.forward(&x, Precision::Fp32);
         for r in 0..4 {
@@ -137,33 +173,33 @@ mod tests {
             *g = 1.0 + 0.1 * i as f32;
         }
         let x = Tensor::from_vec(&[2, d], (0..2 * d).map(|_| rng.normal_f32()).collect());
-        let y = ln.forward(&x, Precision::Fp32);
+        let mut ws = LayerNormWorkspace::default();
+        let y = ln.forward_train(&x, Precision::Fp32, &mut ws);
         ln.zero_grad();
-        let dx = ln.backward(&y.clone(), Precision::Fp32); // loss = sum(y²)/2
+        let dx = ln.backward(&y.clone(), Precision::Fp32, &ws); // loss = sum(y²)/2
 
         let eps = 1e-3f32;
-        let loss = |ln: &mut LayerNorm, x: &Tensor| -> f32 {
+        let loss = |ln: &LayerNorm, x: &Tensor| -> f32 {
             ln.forward(x, Precision::Fp32).data.iter().map(|v| v * v / 2.0).sum()
         };
         let mut x2 = x.clone();
         for idx in [0usize, 3, 7, 11] {
             let orig = x2.data[idx];
             x2.data[idx] = orig + eps;
-            let lp = loss(&mut ln, &x2);
+            let lp = loss(&ln, &x2);
             x2.data[idx] = orig - eps;
-            let lm = loss(&mut ln, &x2);
+            let lm = loss(&ln, &x2);
             x2.data[idx] = orig;
             let num = (lp - lm) / (2.0 * eps);
             assert!((num - dx.data[idx]).abs() < 2e-2 * (1.0 + num.abs()), "x[{idx}]");
         }
         // gamma grads
-        let _ = ln.forward(&x, Precision::Fp32);
         for idx in [0usize, 2, 5] {
             let orig = ln.gamma.w[idx];
             ln.gamma.w[idx] = orig + eps;
-            let lp = loss(&mut ln, &x);
+            let lp = loss(&ln, &x);
             ln.gamma.w[idx] = orig - eps;
-            let lm = loss(&mut ln, &x);
+            let lm = loss(&ln, &x);
             ln.gamma.w[idx] = orig;
             let num = (lp - lm) / (2.0 * eps);
             assert!((num - ln.gamma.g[idx]).abs() < 2e-2 * (1.0 + num.abs()), "g[{idx}]");
@@ -175,7 +211,7 @@ mod tests {
         // pre-activation deviations of magnitude ~350: 350² = 122500 >
         // 65504 → ∞, reproducing the failure the paper's weight-std fix
         // addresses (§4.6).
-        let mut ln = LayerNorm::new("ln", 8);
+        let ln = LayerNorm::new("ln", 8);
         let x = Tensor::from_vec(&[1, 8], (0..8).map(|i| 100.0 * i as f32).collect());
         let y = ln.forward(&x, Precision::fp16());
         assert!(y.has_nonfinite() || y.data.iter().all(|&v| v == 0.0), "y={:?}", y.data);
@@ -184,9 +220,25 @@ mod tests {
     #[test]
     fn fp16_is_fine_for_moderate_inputs() {
         let mut rng = Pcg64::seed(3);
-        let mut ln = LayerNorm::new("ln", 16);
+        let ln = LayerNorm::new("ln", 16);
         let x = Tensor::from_vec(&[2, 16], (0..32).map(|_| rng.normal_f32() * 5.0).collect());
         let y = ln.forward(&x, Precision::fp16());
         assert!(!y.has_nonfinite());
+    }
+
+    #[test]
+    fn inference_and_train_forward_agree_bitwise() {
+        let mut rng = Pcg64::seed(4);
+        let mut ln = LayerNorm::new("ln", 12);
+        for (i, g) in ln.gamma.w.iter_mut().enumerate() {
+            *g = 1.0 + 0.05 * i as f32;
+        }
+        let x = Tensor::from_vec(&[3, 12], (0..36).map(|_| rng.normal_f32() * 4.0).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let mut ws = LayerNormWorkspace::default();
+            let a = ln.forward(&x, prec);
+            let b = ln.forward_train(&x, prec, &mut ws);
+            assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
     }
 }

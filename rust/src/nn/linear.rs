@@ -3,12 +3,29 @@
 //! encoder, §4.6 / Appendix G).
 //!
 //! Layout follows PyTorch: `w` is `[out, in]`, `y = x wᵀ + b`.
+//!
+//! The forward pass is `&self` — a layer can be shared across threads
+//! for inference. Training-time activation caches live in an explicit
+//! [`LinearWorkspace`] owned by the caller: `forward_train` fills it,
+//! `backward` consumes it.
 
 use super::gemm::{gemm_bias_q, gemm_nt_bias_q, gemm_tn_bias_q};
 use super::param::Param;
 use super::tensor::Tensor;
 use crate::lowp::Precision;
 use crate::rngs::Pcg64;
+
+/// Training-time caches for one [`Linear`]: the forward input plus the
+/// standardized weights (and their per-row statistics) when
+/// `weight_std` is on. Populated by [`Linear::forward_train`], read by
+/// [`Linear::backward`].
+#[derive(Debug, Clone, Default)]
+pub struct LinearWorkspace {
+    x: Tensor,
+    what: Vec<f32>,    // standardized weights used in the last forward
+    row_std: Vec<f32>, // per-row 1/std used by backward
+    row_mean: Vec<f32>,
+}
 
 /// A linear layer `y = x Ŵᵀ + b`, where `Ŵ = w` normally, or the
 /// row-standardized weights when `weight_std` is on.
@@ -23,11 +40,6 @@ pub struct Linear {
     /// layer-norm's rescaling invariance this prevents the fp16 overflow
     /// the paper saw in the encoder head.
     pub weight_std: bool,
-    // forward cache
-    x_cache: Tensor,
-    what_cache: Vec<f32>, // standardized weights used in forward
-    row_std: Vec<f32>,    // per-row 1/std used by backward
-    row_mean: Vec<f32>,
 }
 
 impl Linear {
@@ -35,17 +47,7 @@ impl Linear {
         let mut w = Param::new(format!("{name}.w"), &[out_dim, in_dim]);
         w.w = super::init::orthogonal_init(rng, out_dim, in_dim, 1.0);
         let b = Param::new(format!("{name}.b"), &[out_dim]);
-        Linear {
-            w,
-            b,
-            in_dim,
-            out_dim,
-            weight_std: false,
-            x_cache: Tensor::zeros(&[0]),
-            what_cache: Vec::new(),
-            row_std: Vec::new(),
-            row_mean: Vec::new(),
-        }
+        Linear { w, b, in_dim, out_dim, weight_std: false }
     }
 
     pub fn with_weight_std(mut self) -> Self {
@@ -53,27 +55,38 @@ impl Linear {
         self
     }
 
-    /// Effective weights: standardized if `weight_std`, raw otherwise.
-    /// Standardization arithmetic is done in the compute precision.
-    /// (The forward path reads `what_cache` directly; this accessor is
-    /// kept for the standardization unit tests.)
-    #[cfg(test)]
-    fn effective_weights(&mut self, prec: Precision) -> &[f32] {
+    /// Freeze the weight standardization into the stored weights: `w`
+    /// becomes the standardized `Ŵ` (computed in `prec`, exactly as the
+    /// forward would) and `weight_std` turns off. For frozen snapshots
+    /// (policies that will never train again) this removes the
+    /// per-forward re-standardization from the inference hot path while
+    /// keeping every output bitwise identical — the GEMM sees the same
+    /// `Ŵ` either way. No-op for plain layers.
+    pub fn bake_weight_std(&mut self, prec: Precision) {
         if !self.weight_std {
-            return &self.w.w;
+            return;
         }
-        self.refresh_weight_std(prec);
-        &self.what_cache
+        let (mut what, mut mean, mut std) = (Vec::new(), Vec::new(), Vec::new());
+        self.standardize_into(prec, &mut what, &mut mean, &mut std);
+        self.w.w = what;
+        self.weight_std = false;
     }
 
-    /// Recompute the row-standardized weights into the persistent
-    /// `what_cache` buffer (resized in place — no per-forward allocation
-    /// once warm, and the GEMM reads it without copying).
-    fn refresh_weight_std(&mut self, prec: Precision) {
+    /// Row-standardize `w` into `what` (resized in place — no per-call
+    /// allocation once warm); `row_mean`/`row_std` get the per-row mean
+    /// and 1/std the weight-std backward chain rule needs.
+    /// Standardization arithmetic is done in the compute precision.
+    fn standardize_into(
+        &self,
+        prec: Precision,
+        what: &mut Vec<f32>,
+        row_mean: &mut Vec<f32>,
+        row_std: &mut Vec<f32>,
+    ) {
         let (o, i) = (self.out_dim, self.in_dim);
-        self.what_cache.resize(o * i, 0.0);
-        self.row_std.resize(o, 0.0);
-        self.row_mean.resize(o, 0.0);
+        what.resize(o * i, 0.0);
+        row_std.resize(o, 0.0);
+        row_mean.resize(o, 0.0);
         for r in 0..o {
             let row = &self.w.w[r * i..(r + 1) * i];
             let mean = prec.q(row.iter().sum::<f32>() / i as f32);
@@ -82,28 +95,21 @@ impl Linear {
             );
             let std = prec.q((var + 1e-5).sqrt());
             let inv = prec.q(1.0 / std);
-            self.row_mean[r] = mean;
-            self.row_std[r] = inv;
+            row_mean[r] = mean;
+            row_std[r] = inv;
             for c in 0..i {
-                self.what_cache[r * i + c] = prec.q((row[c] - mean) * inv);
+                what[r * i + c] = prec.q((row[c] - mean) * inv);
             }
         }
     }
 
-    /// Forward: `y = x Ŵᵀ + b`, output quantized into `prec`.
-    ///
-    /// The GEMM reads the weights in place (no per-call clone of the
-    /// weight matrix) and fuses the bias add + quantize into its epilogue
-    /// — a single pass over `y` instead of three.
-    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
+    /// Shared GEMM core: `y = x weffᵀ + b`, with the bias add + quantize
+    /// fused into the GEMM epilogue — a single pass over `y` instead of
+    /// three. The weights are read in place (no per-call clone).
+    fn forward_with(&self, x: &Tensor, weff: &[f32], prec: Precision) -> Tensor {
         assert_eq!(x.cols(), self.in_dim, "{}: bad input dim", self.w.name);
         let bsz = x.rows();
-        self.x_cache = x.clone();
-        if self.weight_std {
-            self.refresh_weight_std(prec);
-        }
         let mut y = Tensor::zeros(&[bsz, self.out_dim]);
-        let weff: &[f32] = if self.weight_std { &self.what_cache } else { &self.w.w };
         gemm_nt_bias_q(
             &x.data,
             weff,
@@ -117,13 +123,40 @@ impl Linear {
         y
     }
 
-    /// Backward: consumes `dy`, accumulates `dw`/`db`, returns `dx`.
-    /// Gradients are quantized into `prec` (tensor-level), matching the
-    /// all-fp16 training regime of the paper.
-    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+    /// Inference forward: `y = x Ŵᵀ + b`, output quantized into `prec`.
+    /// `&self` and cache-free — safe to call from many threads at once.
+    /// Bitwise identical to [`Linear::forward_train`].
+    pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
+        if self.weight_std {
+            let (mut what, mut mean, mut std) = (Vec::new(), Vec::new(), Vec::new());
+            self.standardize_into(prec, &mut what, &mut mean, &mut std);
+            self.forward_with(x, &what, prec)
+        } else {
+            self.forward_with(x, &self.w.w, prec)
+        }
+    }
+
+    /// Training forward: same numbers as [`Linear::forward`], but caches
+    /// the input (and standardization buffers) into `ws` for
+    /// [`Linear::backward`].
+    pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut LinearWorkspace) -> Tensor {
+        ws.x = x.clone();
+        if self.weight_std {
+            self.standardize_into(prec, &mut ws.what, &mut ws.row_mean, &mut ws.row_std);
+            self.forward_with(x, &ws.what, prec)
+        } else {
+            self.forward_with(x, &self.w.w, prec)
+        }
+    }
+
+    /// Backward: consumes `dy` and the workspace filled by the matching
+    /// `forward_train`, accumulates `dw`/`db`, returns `dx`. Gradients
+    /// are quantized into `prec` (tensor-level), matching the all-fp16
+    /// training regime of the paper.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &LinearWorkspace) -> Tensor {
         let bsz = dy.rows();
         assert_eq!(dy.cols(), self.out_dim);
-        assert_eq!(self.x_cache.rows(), bsz, "forward cache missing");
+        assert_eq!(ws.x.rows(), bsz, "forward_train workspace missing");
         let (o, i) = (self.out_dim, self.in_dim);
 
         // db = sum_b dy
@@ -138,14 +171,14 @@ impl Linear {
         // dŴ = dyᵀ x  (into a temp if standardized, else straight in);
         // the quantize pass is fused into the GEMM epilogue
         let mut dwhat = vec![0.0f32; o * i];
-        gemm_tn_bias_q(&dy.data, &self.x_cache.data, &mut dwhat, o, bsz, i, None, prec);
+        gemm_tn_bias_q(&dy.data, &ws.x.data, &mut dwhat, o, bsz, i, None, prec);
 
         if self.weight_std {
             // chain rule through Ŵ = (w - μ_r) * inv_r, per output row.
             // dμ and d(inv) terms: dW = inv * (dŴ - mean(dŴ) - Ŵ * mean(dŴ ⊙ Ŵ))
             for r in 0..o {
-                let inv = self.row_std[r];
-                let what = &self.what_cache[r * i..(r + 1) * i];
+                let inv = ws.row_std[r];
+                let what = &ws.what[r * i..(r + 1) * i];
                 let dwr = &dwhat[r * i..(r + 1) * i];
                 let mean_d = prec.q(dwr.iter().sum::<f32>() / i as f32);
                 let mean_dw = prec.q(
@@ -166,7 +199,7 @@ impl Linear {
         // dx = dy Ŵ (quantize fused into the epilogue)
         let mut dx = Tensor::zeros(&[bsz, i]);
         {
-            let weff = if self.weight_std { &self.what_cache[..] } else { &self.w.w[..] };
+            let weff = if self.weight_std { &ws.what[..] } else { &self.w.w[..] };
             // dx[b,i] = Σ_o dy[b,o] Ŵ[o,i]  — this is gemm notrans with Ŵ as [o,i]
             gemm_bias_q(&dy.data, weff, &mut dx.data, bsz, o, i, None, prec);
         }
@@ -202,10 +235,11 @@ mod tests {
         let prec = Precision::Fp32;
 
         // loss = sum(y²)/2 ; dy = y
-        let y = lin.forward(&x, prec);
+        let mut ws = LinearWorkspace::default();
+        let y = lin.forward_train(&x, prec, &mut ws);
         let dy = y.clone();
         lin.zero_grad();
-        let dx = lin.backward(&dy, prec);
+        let dx = lin.backward(&dy, prec, &ws);
 
         let eps = 1e-3f32;
         // check dw on a few entries
@@ -234,8 +268,6 @@ mod tests {
             let num = (lp - lm) / (2.0 * eps);
             assert!((num - dx.data[idx]).abs() < 2e-2 * (1.0 + num.abs()));
         }
-        // re-run forward to restore cache consistency (hygiene)
-        let _ = lin.forward(&x, prec);
     }
 
     #[test]
@@ -244,9 +276,10 @@ mod tests {
         let mut lin = Linear::new("t", 6, 4, &mut rng).with_weight_std();
         let x = Tensor::from_vec(&[3, 6], (0..18).map(|_| rng.normal_f32()).collect());
         let prec = Precision::Fp32;
-        let y = lin.forward(&x, prec);
+        let mut ws = LinearWorkspace::default();
+        let y = lin.forward_train(&x, prec, &mut ws);
         lin.zero_grad();
-        let _ = lin.backward(&y.clone(), prec);
+        let _ = lin.backward(&y.clone(), prec, &ws);
 
         let eps = 1e-3f32;
         for &idx in &[0usize, 5, 11, 23] {
@@ -273,7 +306,8 @@ mod tests {
         for v in lin.w.w[0..64].iter_mut() {
             *v *= 1000.0;
         }
-        let w = lin.effective_weights(Precision::Fp32).to_vec();
+        let (mut w, mut mean, mut std) = (Vec::new(), Vec::new(), Vec::new());
+        lin.standardize_into(Precision::Fp32, &mut w, &mut mean, &mut std);
         for r in 0..4 {
             let row = &w[r * 64..(r + 1) * 64];
             let mean: f32 = row.iter().sum::<f32>() / 64.0;
@@ -286,11 +320,47 @@ mod tests {
     #[test]
     fn fp16_forward_quantizes_output() {
         let mut rng = Pcg64::seed(4);
-        let mut lin = Linear::new("t", 8, 8, &mut rng);
+        let lin = Linear::new("t", 8, 8, &mut rng);
         let x = Tensor::from_vec(&[1, 8], (0..8).map(|_| rng.normal_f32()).collect());
         let y = lin.forward(&x, Precision::fp16());
         for &v in &y.data {
             assert!(crate::lowp::FP16.is_representable(v));
+        }
+    }
+
+    #[test]
+    fn baked_weight_std_forward_is_bitwise_identical() {
+        let mut rng = Pcg64::seed(6);
+        let lin = Linear::new("t", 10, 6, &mut rng).with_weight_std();
+        let x = Tensor::from_vec(&[4, 10], (0..40).map(|_| rng.normal_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let live = lin.forward(&x, prec);
+            let mut frozen = lin.clone();
+            frozen.bake_weight_std(prec);
+            assert!(!frozen.weight_std);
+            let baked = frozen.forward(&x, prec);
+            assert!(live.data.iter().zip(&baked.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
+    }
+
+    #[test]
+    fn forward_and_forward_train_are_bitwise_identical() {
+        let mut rng = Pcg64::seed(5);
+        for weight_std in [false, true] {
+            let mut lin = Linear::new("t", 12, 7, &mut rng);
+            if weight_std {
+                lin = lin.with_weight_std();
+            }
+            let x = Tensor::from_vec(&[3, 12], (0..36).map(|_| rng.normal_f32()).collect());
+            for prec in [Precision::Fp32, Precision::fp16()] {
+                let mut ws = LinearWorkspace::default();
+                let a = lin.forward(&x, prec);
+                let b = lin.forward_train(&x, prec, &mut ws);
+                assert!(
+                    a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()),
+                    "weight_std={weight_std}"
+                );
+            }
         }
     }
 }

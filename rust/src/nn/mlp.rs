@@ -4,20 +4,30 @@
 //! hidden depth 2; the output layer is linear (no activation). All layer
 //! math routes through the blocked [`super::gemm`] backend via
 //! [`Linear`], including its fused bias+quantize epilogue.
+//!
+//! Like [`Linear`], the trunk's `forward` is `&self` (inference,
+//! shareable across threads); training caches live in an explicit
+//! [`MlpWorkspace`].
 
 use super::activations::{relu, relu_backward};
-use super::linear::Linear;
+use super::linear::{Linear, LinearWorkspace};
 use super::param::Param;
 use super::tensor::Tensor;
 use crate::lowp::Precision;
 use crate::rngs::Pcg64;
 
+/// Training-time caches for one [`Mlp`]: per-layer [`LinearWorkspace`]s
+/// plus the pre-activation inputs each hidden ReLU needs for backward.
+#[derive(Debug, Clone, Default)]
+pub struct MlpWorkspace {
+    layers: Vec<LinearWorkspace>,
+    pre_relu: Vec<Tensor>,
+}
+
 /// An MLP with ReLU between layers and a linear head.
 #[derive(Debug, Clone)]
 pub struct Mlp {
     pub layers: Vec<Linear>,
-    // pre-activation inputs cached per hidden layer for ReLU backward
-    pre_relu: Vec<Tensor>,
 }
 
 impl Mlp {
@@ -27,17 +37,32 @@ impl Mlp {
         let layers = (0..dims.len() - 1)
             .map(|i| Linear::new(&format!("{name}.{i}"), dims[i], dims[i + 1], rng))
             .collect();
-        Mlp { layers, pre_relu: Vec::new() }
+        Mlp { layers }
     }
 
-    pub fn forward(&mut self, x: &Tensor, prec: Precision) -> Tensor {
-        self.pre_relu.clear();
+    /// Inference forward: `&self`, no caches. Bitwise identical to
+    /// [`Mlp::forward_train`].
+    pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
         let n = self.layers.len();
         let mut h = x.clone();
-        for (i, layer) in self.layers.iter_mut().enumerate() {
+        for (i, layer) in self.layers.iter().enumerate() {
             let z = layer.forward(&h, prec);
+            h = if i + 1 < n { relu(&z, prec) } else { z };
+        }
+        h
+    }
+
+    /// Training forward: caches activations into `ws` for
+    /// [`Mlp::backward`].
+    pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut MlpWorkspace) -> Tensor {
+        let n = self.layers.len();
+        ws.layers.resize_with(n, LinearWorkspace::default);
+        ws.pre_relu.clear();
+        let mut h = x.clone();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let z = layer.forward_train(&h, prec, &mut ws.layers[i]);
             if i + 1 < n {
-                self.pre_relu.push(z.clone());
+                ws.pre_relu.push(z.clone());
                 h = relu(&z, prec);
             } else {
                 h = z;
@@ -46,14 +71,17 @@ impl Mlp {
         h
     }
 
-    /// Backward from `dy` at the head; returns gradient w.r.t. the input.
-    pub fn backward(&mut self, dy: &Tensor, prec: Precision) -> Tensor {
+    /// Backward from `dy` at the head, through the workspace filled by
+    /// the matching `forward_train`; returns the gradient w.r.t. the
+    /// input.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &MlpWorkspace) -> Tensor {
         let n = self.layers.len();
+        assert_eq!(ws.layers.len(), n, "forward_train workspace missing");
         let mut g = dy.clone();
         for i in (0..n).rev() {
-            g = self.layers[i].backward(&g, prec);
+            g = self.layers[i].backward(&g, prec, &ws.layers[i]);
             if i > 0 {
-                g = relu_backward(&g, &self.pre_relu[i - 1], prec);
+                g = relu_backward(&g, &ws.pre_relu[i - 1], prec);
             }
         }
         g
@@ -89,7 +117,7 @@ mod tests {
     #[test]
     fn shapes_compose() {
         let mut rng = Pcg64::seed(1);
-        let mut mlp = Mlp::new("m", &[10, 32, 32, 4], &mut rng);
+        let mlp = Mlp::new("m", &[10, 32, 32, 4], &mut rng);
         let x = Tensor::from_vec(&[3, 10], (0..30).map(|_| rng.normal_f32()).collect());
         let y = mlp.forward(&x, Precision::Fp32);
         assert_eq!(y.shape, vec![3, 4]);
@@ -102,36 +130,36 @@ mod tests {
         let mut mlp = Mlp::new("m", &[4, 8, 8, 2], &mut rng);
         let x = Tensor::from_vec(&[2, 4], (0..8).map(|_| rng.normal_f32()).collect());
         let prec = Precision::Fp32;
-        let y = mlp.forward(&x, prec);
+        let mut ws = MlpWorkspace::default();
+        let y = mlp.forward_train(&x, prec, &mut ws);
         mlp.zero_grad();
-        let dx = mlp.backward(&y.clone(), prec);
+        let dx = mlp.backward(&y.clone(), prec, &ws);
 
         let eps = 1e-3f32;
-        let loss = |m: &mut Mlp, x: &Tensor| -> f32 {
+        let loss = |m: &Mlp, x: &Tensor| -> f32 {
             m.forward(x, prec).data.iter().map(|v| v * v / 2.0).sum()
         };
         let mut x2 = x.clone();
         for idx in 0..8 {
             let o = x2.data[idx];
             x2.data[idx] = o + eps;
-            let lp = loss(&mut mlp, &x2);
+            let lp = loss(&mlp, &x2);
             x2.data[idx] = o - eps;
-            let lm = loss(&mut mlp, &x2);
+            let lm = loss(&mlp, &x2);
             x2.data[idx] = o;
             let num = (lp - lm) / (2.0 * eps);
             assert!((num - dx.data[idx]).abs() < 2e-2 * (1.0 + num.abs()), "x[{idx}]");
         }
         // spot-check a weight in the middle layer
-        let _ = mlp.forward(&x, prec);
         mlp.zero_grad();
-        let y2 = mlp.forward(&x, prec);
-        let _ = mlp.backward(&y2.clone(), prec);
+        let y2 = mlp.forward_train(&x, prec, &mut ws);
+        let _ = mlp.backward(&y2.clone(), prec, &ws);
         let g = mlp.layers[1].w.g[5];
         let orig = mlp.layers[1].w.w[5];
         mlp.layers[1].w.w[5] = orig + eps;
-        let lp = loss(&mut mlp, &x);
+        let lp = loss(&mlp, &x);
         mlp.layers[1].w.w[5] = orig - eps;
-        let lm = loss(&mut mlp, &x);
+        let lm = loss(&mlp, &x);
         mlp.layers[1].w.w[5] = orig;
         let num = (lp - lm) / (2.0 * eps);
         assert!((num - g).abs() < 2e-2 * (1.0 + num.abs()), "{num} vs {g}");
@@ -146,6 +174,19 @@ mod tests {
             for &v in &l.w.w {
                 assert!(crate::lowp::FP16.is_representable(v));
             }
+        }
+    }
+
+    #[test]
+    fn inference_and_train_forward_agree_bitwise() {
+        let mut rng = Pcg64::seed(4);
+        let mlp = Mlp::new("m", &[6, 16, 16, 3], &mut rng);
+        let x = Tensor::from_vec(&[5, 6], (0..30).map(|_| rng.normal_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let mut ws = MlpWorkspace::default();
+            let a = mlp.forward(&x, prec);
+            let b = mlp.forward_train(&x, prec, &mut ws);
+            assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
         }
     }
 }

@@ -16,6 +16,16 @@
 //! The engine is deliberately dependency-free and deterministic; the same
 //! SAC computation is also AOT-lowered from JAX (L2) and the two are
 //! cross-validated in `rust/tests/artifact_parity.rs`.
+//!
+//! ## Train/inference split
+//!
+//! Every layer's `forward` is `&self` and cache-free, so a frozen layer
+//! (or a whole [`crate::sac::Policy`] snapshot) is `Send + Sync` and can
+//! serve many threads at once. Training uses `forward_train`, which
+//! writes the activation caches the explicit `backward` needs into a
+//! caller-owned `*Workspace` ([`LinearWorkspace`], [`MlpWorkspace`],
+//! [`Conv2dWorkspace`], [`LayerNormWorkspace`]); both paths produce
+//! bitwise-identical outputs.
 
 mod activations;
 mod conv;
@@ -30,12 +40,12 @@ pub mod pool;
 mod tensor;
 
 pub use activations::{relu, relu_backward, tanh_backward, tanh_forward};
-pub use conv::Conv2d;
+pub use conv::{Conv2d, Conv2dWorkspace};
 pub use gemm::{gemm, gemm_bias_q, gemm_nt, gemm_nt_bias_q, gemm_tn, gemm_tn_bias_q};
 pub use init::{orthogonal_init, uniform_fan_in};
-pub use layernorm::LayerNorm;
-pub use linear::Linear;
+pub use layernorm::{LayerNorm, LayerNormWorkspace};
+pub use linear::{Linear, LinearWorkspace};
 pub use memory::{pixels_model, states_model, MemoryModel};
-pub use mlp::Mlp;
+pub use mlp::{Mlp, MlpWorkspace};
 pub use param::Param;
 pub use tensor::Tensor;

@@ -12,6 +12,13 @@ pub struct Tensor {
     pub data: Vec<f32>,
 }
 
+impl Default for Tensor {
+    /// The empty sentinel (`zeros(&[0])`) training workspaces start from.
+    fn default() -> Self {
+        Tensor::zeros(&[0])
+    }
+}
+
 impl Tensor {
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();

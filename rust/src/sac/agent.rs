@@ -10,13 +10,20 @@
 //! 3. temperature step — `L = −α·E[log π + H̄]`, on `log α`;
 //! 4. target soft update (every `target_update_freq`) —
 //!    `ψ̂ ← ψ̂ + τ(ψ − ψ̂)` (Kahan-momentum when enabled).
+//!
+//! Train/inference split: gradient-producing forwards go through
+//! `forward_train` + the agent-owned workspaces; everything that needs
+//! no backward (target values, the detached actor features, action
+//! selection) uses the cache-free `&self` forwards. A frozen, shareable
+//! snapshot of the action path is available via [`SacAgent::policy`].
 
-use super::critic::Critic;
-use super::encoder::Encoder;
+use super::critic::{Critic, CriticWorkspace};
+use super::encoder::{Encoder, EncoderWorkspace};
 use super::methods::Methods;
 use super::policy::{PolicyCfg, TanhGaussian};
+use super::snapshot::Policy;
 use crate::lowp::Precision;
-use crate::nn::{Mlp, Param, Tensor};
+use crate::nn::{Mlp, MlpWorkspace, Param, Tensor};
 use crate::optim::{coerce_nonfinite, Adam, AdamConfig, GradScaler, ScaledKahanEma, ScalerConfig, SecondMoment, UpdateMode};
 use crate::rngs::Pcg64;
 
@@ -129,6 +136,12 @@ pub struct SacAgent {
     sc_actor: GradScaler,
     sc_critic: GradScaler,
     sc_alpha: GradScaler,
+    // training-time activation workspaces (see nn::*Workspace)
+    ws_actor: MlpWorkspace,
+    ws_critic: CriticWorkspace,
+    ws_encoder: EncoderWorkspace,
+    /// Reusable `[1, …]` staging buffer for single-observation `act`.
+    act_buf: Tensor,
     pub updates: u64,
     pub rng: Pcg64,
     /// Set once a non-finite action was produced (the paper scores such
@@ -270,6 +283,10 @@ impl SacAgent {
             sc_actor: mk_scaler(),
             sc_critic: mk_scaler(),
             sc_alpha: mk_scaler(),
+            ws_actor: MlpWorkspace::default(),
+            ws_critic: CriticWorkspace::default(),
+            ws_encoder: EncoderWorkspace::default(),
+            act_buf: Tensor::default(),
             updates: 0,
             rng,
             crashed: false,
@@ -289,21 +306,49 @@ impl SacAgent {
         }
     }
 
+    /// Snapshot the action path (actor + pixel encoder) into an
+    /// immutable, `Send + Sync` [`Policy`]: weights only — no optimizer
+    /// state, activation caches or RNG. Later agent updates do not
+    /// affect an existing snapshot.
+    pub fn policy(&self) -> Policy {
+        let obs_len = match self.pixel_shape {
+            Some((c, h)) => c * h * h,
+            None => self.cfg.obs_dim,
+        };
+        // The snapshot never trains again, so weight standardization can
+        // be baked into the frozen weights (bitwise-identical forward,
+        // no per-request re-standardization on the serve hot path).
+        let encoder = self.encoder.clone().map(|mut enc| {
+            enc.bake_weight_std(self.compute);
+            enc
+        });
+        Policy::new(
+            self.actor.clone(),
+            encoder,
+            self.policy_cfg(),
+            self.compute,
+            obs_len,
+            self.cfg.act_dim,
+            self.pixel_shape,
+        )
+    }
+
     /// Current temperature α = exp(log α).
     pub fn alpha(&self) -> f32 {
         self.compute.q(self.log_alpha.w[0].exp())
     }
 
-    /// Encode a pixel batch (identity for state agents).
-    fn encode(&mut self, obs: &Tensor, prec: Precision) -> Tensor {
-        match self.encoder.as_mut() {
+    /// Encode a pixel batch with the online encoder (identity for state
+    /// agents). Inference-only: no gradient caches.
+    fn encode(&self, obs: &Tensor, prec: Precision) -> Tensor {
+        match self.encoder.as_ref() {
             Some(enc) => enc.forward(obs, prec),
             None => obs.clone(),
         }
     }
 
-    fn encode_target(&mut self, obs: &Tensor, prec: Precision) -> Tensor {
-        match self.target_encoder.as_mut() {
+    fn encode_target(&self, obs: &Tensor, prec: Precision) -> Tensor {
+        match self.target_encoder.as_ref() {
             Some(enc) => enc.forward(obs, prec),
             None => obs.clone(),
         }
@@ -313,18 +358,42 @@ impl SacAgent {
     /// from π; otherwise uses tanh(μ). Returns `None` (and flags
     /// `crashed`) if the action is non-finite, mirroring the paper's
     /// crash accounting.
+    ///
+    /// This is [`SacAgent::act_batch`] with batch 1, staged through a
+    /// reusable buffer — no per-call observation allocation.
     pub fn act(&mut self, obs: &[f32], stochastic: bool) -> Option<Vec<f32>> {
-        let p = self.compute;
-        let obs_t = if let Some((c, h)) = self.pixel_shape {
+        let shape: Vec<usize> = match self.pixel_shape {
             // caller passes a flattened [C, H, W] image
-            Tensor::from_vec(&[1, c, h, h], obs.to_vec())
-        } else {
-            Tensor::from_vec(&[1, obs.len()], obs.to_vec())
+            Some((c, h)) => vec![1, c, h, h],
+            None => vec![1, obs.len()],
         };
-        let feat = self.encode(&obs_t, p);
+        if self.act_buf.shape != shape {
+            self.act_buf = Tensor::zeros(&shape);
+        }
+        self.act_buf.data.copy_from_slice(obs);
+        // temporarily take the buffer so act_batch can borrow &mut self
+        let buf = std::mem::take(&mut self.act_buf);
+        let out = self.act_batch(&buf, stochastic);
+        self.act_buf = buf;
+        out.map(|a| a.data)
+    }
+
+    /// Batched action selection: `[B, D]` states (or `[B, C, H, W]`
+    /// images) → `[B, act_dim]`, one shared GEMM per layer for all B
+    /// observations. In deterministic mode (`stochastic = false`) row
+    /// `r` is bitwise identical to [`SacAgent::act`] on observation `r`
+    /// alone (the GEMM backend accumulates output rows independently of
+    /// the batch size); in stochastic mode the rows draw consecutive
+    /// slices of the agent's RNG stream, so only batch 1 reproduces a
+    /// single `act` call exactly. Returns `None` (and flags `crashed`)
+    /// if any action is non-finite.
+    pub fn act_batch(&mut self, obs: &Tensor, stochastic: bool) -> Option<Tensor> {
+        let p = self.compute;
+        let feat = self.encode(obs, p);
         let head = self.actor.forward(&feat, p);
         let a = if stochastic {
-            let mut eps = Tensor::zeros(&[1, self.cfg.act_dim]);
+            let b = head.rows();
+            let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
             self.rng.normal_fill(&mut eps.data);
             TanhGaussian::forward(&head, &eps, self.policy_cfg(), p).a
         } else {
@@ -334,7 +403,7 @@ impl SacAgent {
             self.crashed = true;
             return None;
         }
-        Some(a.data)
+        Some(a)
     }
 
     /// One gradient update from a replay batch.
@@ -359,13 +428,9 @@ impl SacAgent {
         let b = batch.rew.len();
         let alpha = self.alpha();
 
-        // -- target value (no gradients kept anywhere) ------------------
-        let feat_next_actor = if self.encoder.is_some() {
-            // DRQ convention: the *actor* uses the online encoder (detached)
-            self.encode(&batch.next_obs, p)
-        } else {
-            batch.next_obs.clone()
-        };
+        // -- target value (no gradients kept anywhere: inference path) --
+        // DRQ convention: the *actor* uses the online encoder (detached)
+        let feat_next_actor = self.encode(&batch.next_obs, p);
         let head = self.actor.forward(&feat_next_actor, p);
         let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
         self.rng.normal_fill(&mut eps.data);
@@ -379,9 +444,12 @@ impl SacAgent {
             y[r] = p.q(batch.rew[r] + p.q(self.cfg.gamma * batch.not_done[r]) * v);
         }
 
-        // -- online critic ---------------------------------------------
-        let feat = self.encode(&batch.obs, p);
-        let (q1, q2) = self.critic.forward(&feat, &batch.act, p);
+        // -- online critic (training path: fills the workspaces) --------
+        let feat = match self.encoder.as_ref() {
+            Some(enc) => enc.forward_train(&batch.obs, p, &mut self.ws_encoder),
+            None => batch.obs.clone(),
+        };
+        let (q1, q2) = self.critic.forward_train(&feat, &batch.act, p, &mut self.ws_critic);
         let scale = self.sc_critic.scale();
         let mut loss = 0.0f64;
         let mut dq1 = Tensor::zeros(&[b, 1]);
@@ -401,10 +469,10 @@ impl SacAgent {
             enc.zero_grad();
         }
         if self.encoder.is_some() {
-            let (dobs, _da) = self.critic.backward_full(&dq1, &dq2, p);
-            self.encoder.as_mut().unwrap().backward(&dobs, p);
+            let (dobs, _da) = self.critic.backward_full(&dq1, &dq2, p, &self.ws_critic);
+            self.encoder.as_mut().unwrap().backward(&dobs, p, &self.ws_encoder);
         } else {
-            let _ = self.critic.backward(&dq1, &dq2, p);
+            let _ = self.critic.backward(&dq1, &dq2, p, &self.ws_critic);
         }
 
         if self.methods.coerce {
@@ -433,12 +501,13 @@ impl SacAgent {
         let alpha = self.alpha();
 
         // actor loss: E[α logπ - min Q], encoder features detached
+        // (inference encode — no gradient flows into the encoder here)
         let feat = self.encode(&batch.obs, p);
-        let head = self.actor.forward(&feat, p);
+        let head = self.actor.forward_train(&feat, p, &mut self.ws_actor);
         let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
         self.rng.normal_fill(&mut eps.data);
         let tg = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p);
-        let (q1, q2) = self.critic.forward(&feat, &tg.a, p);
+        let (q1, q2) = self.critic.forward_train(&feat, &tg.a, p, &mut self.ws_critic);
 
         let scale = self.sc_actor.scale();
         let mut loss = 0.0f64;
@@ -461,11 +530,11 @@ impl SacAgent {
 
         // dQ/da through the critic (param grads discarded afterwards)
         self.critic.zero_grad();
-        let da = self.critic.backward(&dq1, &dq2, p);
+        let da = self.critic.backward(&dq1, &dq2, p, &self.ws_critic);
         let coefs = vec![p.q(alpha * coef); b];
         let dhead = tg.backward(&coefs, Some(&da));
         self.actor.zero_grad();
-        let _ = self.actor.backward(&dhead, p);
+        let _ = self.actor.backward(&dhead, p, &self.ws_actor);
         self.critic.zero_grad(); // discard critic grads from this pass
 
         if self.methods.coerce {
@@ -572,6 +641,23 @@ mod tests {
         assert!(a.iter().all(|v| (-1.0..=1.0).contains(v)));
         let d = agent.act(&[0.1, -0.2, 0.3, 0.4], false).unwrap();
         assert!(d.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn act_batch_rows_equal_single_act() {
+        let mut rng = Pcg64::seed(9);
+        let cfg = SacConfig::states(5, 2, 24);
+        let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 4);
+        let b = 7;
+        let mut obs = Tensor::zeros(&[b, 5]);
+        rng.normal_fill(&mut obs.data);
+        let batched = agent.act_batch(&obs, false).unwrap();
+        for r in 0..b {
+            let single = agent.act(obs.row(r), false).unwrap();
+            for (x, y) in single.iter().zip(batched.row(r)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "row {r}");
+            }
+        }
     }
 
     #[test]

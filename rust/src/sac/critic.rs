@@ -3,8 +3,17 @@
 //! depth 2 and a scalar head.
 
 use crate::lowp::Precision;
-use crate::nn::{Mlp, Param, Tensor};
+use crate::nn::{Mlp, MlpWorkspace, Param, Tensor};
 use crate::rngs::Pcg64;
+
+/// Training-time caches for one [`Critic`] (one [`MlpWorkspace`] per
+/// head). Populated by [`Critic::forward_train`], read by the backward
+/// passes.
+#[derive(Debug, Clone, Default)]
+pub struct CriticWorkspace {
+    q1: MlpWorkspace,
+    q2: MlpWorkspace,
+}
 
 /// Twin Q-networks.
 #[derive(Debug, Clone)]
@@ -13,7 +22,6 @@ pub struct Critic {
     pub q2: Mlp,
     pub obs_dim: usize,
     pub act_dim: usize,
-    in_cache: Tensor,
 }
 
 impl Critic {
@@ -24,7 +32,6 @@ impl Critic {
             q2: Mlp::new(&format!("{name}.q2"), &dims, rng),
             obs_dim,
             act_dim,
-            in_cache: Tensor::zeros(&[0]),
         }
     }
 
@@ -41,21 +48,40 @@ impl Critic {
         x
     }
 
-    /// Forward both heads. Returns `(q1, q2)`, each `[B, 1]`.
-    pub fn forward(&mut self, obs: &Tensor, act: &Tensor, prec: Precision) -> (Tensor, Tensor) {
+    /// Inference forward of both heads (`&self`, cache-free — used for
+    /// target values and Q probes). Returns `(q1, q2)`, each `[B, 1]`.
+    pub fn forward(&self, obs: &Tensor, act: &Tensor, prec: Precision) -> (Tensor, Tensor) {
         let x = Self::join(obs, act);
-        let q1 = self.q1.forward(&x, prec);
-        let q2 = self.q2.forward(&x, prec);
-        self.in_cache = x;
+        (self.q1.forward(&x, prec), self.q2.forward(&x, prec))
+    }
+
+    /// Training forward: caches activations into `ws` for the backward
+    /// passes. Bitwise identical to [`Critic::forward`].
+    pub fn forward_train(
+        &self,
+        obs: &Tensor,
+        act: &Tensor,
+        prec: Precision,
+        ws: &mut CriticWorkspace,
+    ) -> (Tensor, Tensor) {
+        let x = Self::join(obs, act);
+        let q1 = self.q1.forward_train(&x, prec, &mut ws.q1);
+        let q2 = self.q2.forward_train(&x, prec, &mut ws.q2);
         (q1, q2)
     }
 
     /// Backward from per-head output grads; returns the gradient w.r.t.
     /// the *action* part of the joined input (the policy path), discarding
     /// the obs part.
-    pub fn backward(&mut self, dq1: &Tensor, dq2: &Tensor, prec: Precision) -> Tensor {
-        let dx1 = self.q1.backward(dq1, prec);
-        let dx2 = self.q2.backward(dq2, prec);
+    pub fn backward(
+        &mut self,
+        dq1: &Tensor,
+        dq2: &Tensor,
+        prec: Precision,
+        ws: &CriticWorkspace,
+    ) -> Tensor {
+        let dx1 = self.q1.backward(dq1, prec, &ws.q1);
+        let dx2 = self.q2.backward(dq2, prec, &ws.q2);
         let b = dx1.rows();
         let mut da = Tensor::zeros(&[b, self.act_dim]);
         for r in 0..b {
@@ -67,13 +93,17 @@ impl Critic {
         da
     }
 
-    /// Gradient w.r.t. the obs part (needed to backprop into a shared
-    /// pixel encoder). Call with the same `dq` tensors used in
-    /// [`Critic::backward`]; re-runs the MLP backward, so prefer
-    /// `backward_full` when both are needed.
-    pub fn backward_full(&mut self, dq1: &Tensor, dq2: &Tensor, prec: Precision) -> (Tensor, Tensor) {
-        let dx1 = self.q1.backward(dq1, prec);
-        let dx2 = self.q2.backward(dq2, prec);
+    /// Like [`Critic::backward`], but also returns the gradient w.r.t.
+    /// the obs part (needed to backprop into a shared pixel encoder).
+    pub fn backward_full(
+        &mut self,
+        dq1: &Tensor,
+        dq2: &Tensor,
+        prec: Precision,
+        ws: &CriticWorkspace,
+    ) -> (Tensor, Tensor) {
+        let dx1 = self.q1.backward(dq1, prec, &ws.q1);
+        let dx2 = self.q2.backward(dq2, prec, &ws.q2);
         let b = dx1.rows();
         let mut dobs = Tensor::zeros(&[b, self.obs_dim]);
         let mut da = Tensor::zeros(&[b, self.act_dim]);
@@ -138,7 +168,7 @@ mod tests {
     #[test]
     fn twin_heads_differ() {
         let mut rng = Pcg64::seed(1);
-        let mut c = Critic::new("c", 4, 2, 16, &mut rng);
+        let c = Critic::new("c", 4, 2, 16, &mut rng);
         let obs = Tensor::from_vec(&[2, 4], (0..8).map(|_| rng.normal_f32()).collect());
         let act = Tensor::from_vec(&[2, 2], (0..4).map(|_| rng.normal_f32()).collect());
         let (q1, q2) = c.forward(&obs, &act, Precision::Fp32);
@@ -154,11 +184,12 @@ mod tests {
         let act = Tensor::from_vec(&[1, 2], vec![0.2, -0.1]);
         let prec = Precision::Fp32;
         // loss = q1 + q2 summed
-        let (q1, q2) = c.forward(&obs, &act, prec);
+        let mut ws = CriticWorkspace::default();
+        let (q1, q2) = c.forward_train(&obs, &act, prec, &mut ws);
         let _ = (q1, q2);
         c.zero_grad();
         let ones = Tensor::filled(&[1, 1], 1.0);
-        let da = c.backward(&ones, &ones, prec);
+        let da = c.backward(&ones, &ones, prec, &ws);
         let eps = 1e-3f32;
         for i in 0..2 {
             let mut a2 = act.clone();

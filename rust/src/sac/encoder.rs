@@ -7,10 +7,29 @@
 //! before layer-norm (layer-norm is invariant to both, so the semantics
 //! are unchanged in exact arithmetic, but the variance no longer
 //! overflows).
+//!
+//! `forward` is `&self` and cache-free, so an encoder inside a frozen
+//! [`super::Policy`] snapshot can serve many threads; training caches
+//! live in an explicit [`EncoderWorkspace`].
 
 use crate::lowp::Precision;
-use crate::nn::{relu, relu_backward, Conv2d, LayerNorm, Linear, Param, Tensor};
+use crate::nn::{
+    relu, relu_backward, Conv2d, Conv2dWorkspace, LayerNorm, LayerNormWorkspace, Linear,
+    LinearWorkspace, Param, Tensor,
+};
 use crate::rngs::Pcg64;
+
+/// Training-time caches for one [`Encoder`]: per-conv im2col panels,
+/// pre-ReLU activations, the head/layer-norm workspaces and the
+/// per-sample downscale factors.
+#[derive(Debug, Clone, Default)]
+pub struct EncoderWorkspace {
+    convs: Vec<Conv2dWorkspace>,
+    pre_relu: Vec<Tensor>,
+    head: LinearWorkspace,
+    ln: LayerNormWorkspace,
+    scale: Vec<f32>,
+}
 
 /// Convolutional encoder: `[B, C, H, W] → [B, feature_dim]`.
 #[derive(Debug, Clone)]
@@ -23,11 +42,6 @@ pub struct Encoder {
     /// scale, valid because layer-norm is scale-invariant).
     pub downscale_clip: Option<f32>,
     pub feature_dim: usize,
-    // caches
-    pre_relu: Vec<Tensor>,
-    head_in: Tensor,
-    scale_cache: Vec<f32>,
-    in_shape: [usize; 4],
 }
 
 impl Encoder {
@@ -59,77 +73,94 @@ impl Encoder {
             head = head.with_weight_std();
         }
         let ln = LayerNorm::new(&format!("{name}.ln"), feature_dim);
-        Encoder {
-            convs,
-            head,
-            ln,
-            downscale_clip,
-            feature_dim,
-            pre_relu: Vec::new(),
-            head_in: Tensor::zeros(&[0]),
-            scale_cache: Vec::new(),
-            in_shape: [0; 4],
+        Encoder { convs, head, ln, downscale_clip, feature_dim }
+    }
+
+    /// Per-sample stop-grad downscale of the pre-LN activations;
+    /// `scales` (when given) records the factor each row used, for the
+    /// backward pass.
+    fn apply_downscale(&self, z: &mut Tensor, prec: Precision, mut scales: Option<&mut Vec<f32>>) {
+        let b = z.rows();
+        if let Some(s) = scales.as_mut() {
+            s.clear();
+            s.resize(b, 1.0);
+        }
+        if let Some(clip) = self.downscale_clip {
+            for r in 0..b {
+                let mx = z.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if mx > clip {
+                    let sc = prec.q(clip / mx); // stop-grad scale
+                    if let Some(s) = scales.as_mut() {
+                        s[r] = sc;
+                    }
+                    for v in z.row_mut(r) {
+                        *v = prec.q(*v * sc);
+                    }
+                }
+            }
         }
     }
 
-    /// Forward `[B, C, H, W] → [B, feature_dim]`.
-    pub fn forward(&mut self, img: &Tensor, prec: Precision) -> Tensor {
+    /// Inference forward `[B, C, H, W] → [B, feature_dim]` (`&self`,
+    /// cache-free). Bitwise identical to [`Encoder::forward_train`].
+    pub fn forward(&self, img: &Tensor, prec: Precision) -> Tensor {
         assert_eq!(img.shape.len(), 4);
-        self.in_shape = [img.shape[0], img.shape[1], img.shape[2], img.shape[3]];
-        self.pre_relu.clear();
         let mut h = img.clone();
-        let n = self.convs.len();
-        for i in 0..n {
-            let z = self.convs[i].forward(&h, prec);
-            self.pre_relu.push(z.clone());
+        for conv in &self.convs {
+            let z = conv.forward(&h, prec);
             h = relu(&z, prec);
         }
         let b = h.shape[0];
         let flat = h.len() / b;
         let hflat = h.reshape(&[b, flat]);
-        self.head_in = hflat.clone();
         let mut z = self.head.forward(&hflat, prec);
-        // down-scale guard
-        self.scale_cache = vec![1.0; b];
-        if let Some(clip) = self.downscale_clip {
-            for r in 0..b {
-                let mx = z.row(r).iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-                if mx > clip {
-                    let s = prec.q(clip / mx); // stop-grad scale
-                    self.scale_cache[r] = s;
-                    for v in z.row_mut(r) {
-                        *v = prec.q(*v * s);
-                    }
-                }
-            }
-        }
+        self.apply_downscale(&mut z, prec, None);
         self.ln.forward(&z, prec)
+    }
+
+    /// Training forward: caches everything [`Encoder::backward`] needs
+    /// into `ws`.
+    pub fn forward_train(&self, img: &Tensor, prec: Precision, ws: &mut EncoderWorkspace) -> Tensor {
+        assert_eq!(img.shape.len(), 4);
+        let n = self.convs.len();
+        ws.convs.resize_with(n, Conv2dWorkspace::default);
+        ws.pre_relu.clear();
+        let mut h = img.clone();
+        for (i, conv) in self.convs.iter().enumerate() {
+            let z = conv.forward_train(&h, prec, &mut ws.convs[i]);
+            ws.pre_relu.push(z.clone());
+            h = relu(&z, prec);
+        }
+        let b = h.shape[0];
+        let flat = h.len() / b;
+        let hflat = h.reshape(&[b, flat]);
+        let mut z = self.head.forward_train(&hflat, prec, &mut ws.head);
+        self.apply_downscale(&mut z, prec, Some(&mut ws.scale));
+        self.ln.forward_train(&z, prec, &mut ws.ln)
     }
 
     /// Backward from `dfeat` `[B, feature_dim]`; accumulates all encoder
     /// grads, returns nothing (images need no gradient).
-    pub fn backward(&mut self, dfeat: &Tensor, prec: Precision) {
-        let mut g = self.ln.backward(dfeat, prec);
+    pub fn backward(&mut self, dfeat: &Tensor, prec: Precision, ws: &EncoderWorkspace) {
+        let mut g = self.ln.backward(dfeat, prec, &ws.ln);
         // through the stop-grad downscale: dy/dz = s per sample
         for r in 0..g.rows() {
-            let s = self.scale_cache[r];
+            let s = ws.scale[r];
             if s != 1.0 {
                 for v in g.row_mut(r) {
                     *v = prec.q(*v * s);
                 }
             }
         }
-        let g = self.head.backward(&g, prec);
-        let b = self.in_shape[0];
+        let g = self.head.backward(&g, prec, &ws.head);
         // reshape to conv output shape
         let n = self.convs.len();
-        let last_shape = self.pre_relu[n - 1].shape.clone();
+        let last_shape = ws.pre_relu[n - 1].shape.clone();
         let mut g = g.reshape(&last_shape);
         for i in (0..n).rev() {
-            g = relu_backward(&g, &self.pre_relu[i], prec);
-            g = self.convs[i].backward(&g, prec);
+            g = relu_backward(&g, &ws.pre_relu[i], prec);
+            g = self.convs[i].backward(&g, prec, &ws.convs[i]);
         }
-        debug_assert_eq!(g.shape[0], b);
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
@@ -177,6 +208,14 @@ impl Encoder {
             p.quantize(prec);
         }
     }
+
+    /// Freeze the head's weight standardization into its stored weights
+    /// (see [`Linear::bake_weight_std`]) — used when snapshotting an
+    /// encoder into an immutable policy, where re-standardizing
+    /// never-changing weights on every forward would be pure waste.
+    pub fn bake_weight_std(&mut self, prec: Precision) {
+        self.head.bake_weight_std(prec);
+    }
 }
 
 #[cfg(test)]
@@ -191,7 +230,7 @@ mod tests {
     #[test]
     fn forward_shape() {
         let mut rng = Pcg64::seed(1);
-        let mut e = tiny_encoder(&mut rng);
+        let e = tiny_encoder(&mut rng);
         let img = Tensor::from_vec(&[2, 3, 21, 21], (0..2 * 3 * 21 * 21).map(|_| rng.uniform_f32()).collect());
         let f = e.forward(&img, Precision::Fp32);
         assert_eq!(f.shape, vec![2, 10]);
@@ -203,9 +242,10 @@ mod tests {
         let mut rng = Pcg64::seed(2);
         let mut e = tiny_encoder(&mut rng);
         let img = Tensor::from_vec(&[1, 3, 21, 21], (0..3 * 21 * 21).map(|_| rng.uniform_f32()).collect());
-        let f = e.forward(&img, Precision::Fp32);
+        let mut ws = EncoderWorkspace::default();
+        let f = e.forward_train(&img, Precision::Fp32, &mut ws);
         e.zero_grad();
-        e.backward(&f.clone(), Precision::Fp32);
+        e.backward(&f.clone(), Precision::Fp32, &ws);
         let nonzero = e
             .params_mut()
             .iter()
@@ -221,9 +261,10 @@ mod tests {
         let mut e = Encoder::new("e", 1, 17, 2, 4, false, None, &mut rng);
         let img = Tensor::from_vec(&[1, 1, 17, 17], (0..289).map(|_| rng.normal_f32()).collect());
         let prec = Precision::Fp32;
-        let f = e.forward(&img, prec);
+        let mut ws = EncoderWorkspace::default();
+        let f = e.forward_train(&img, prec, &mut ws);
         e.zero_grad();
-        e.backward(&f.clone(), prec); // loss = sum(f²)/2
+        e.backward(&f.clone(), prec, &ws); // loss = sum(f²)/2
         let g = e.convs[0].w.g[3];
         let eps = 1e-3f32;
         let orig = e.convs[0].w.w[3];
@@ -262,8 +303,8 @@ mod tests {
             }
             e
         };
-        let mut bad = build(None, &mut rng);
-        let mut good = build(Some(10.0), &mut rng);
+        let bad = build(None, &mut rng);
+        let good = build(Some(10.0), &mut rng);
         let img = Tensor::from_vec(
             &[1, 1, 17, 17],
             (0..289).map(|_| rng.uniform_f32() + 0.5).collect(),
@@ -296,5 +337,18 @@ mod tests {
         let mut e2 = tiny_encoder(&mut rng);
         e2.load_flat(&flat);
         assert_eq!(e2.flat_params(), flat);
+    }
+
+    #[test]
+    fn inference_and_train_forward_agree_bitwise() {
+        let mut rng = Pcg64::seed(6);
+        let e = tiny_encoder(&mut rng);
+        let img = Tensor::from_vec(&[2, 3, 21, 21], (0..2 * 3 * 21 * 21).map(|_| rng.uniform_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let mut ws = EncoderWorkspace::default();
+            let a = e.forward(&img, prec);
+            let b = e.forward_train(&img, prec, &mut ws);
+            assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
     }
 }

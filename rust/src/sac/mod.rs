@@ -7,15 +7,23 @@
 //! [`crate::lowp::FloatFormat`]; the *only* difference between the
 //! paper's configurations is which of the six methods are enabled and
 //! which supervised-learning baseline tricks are applied.
+//!
+//! Training and inference are split: [`SacAgent`] owns the optimizers
+//! and training workspaces, while [`Policy`] is an immutable
+//! `Send + Sync` snapshot of the action path ([`SacAgent::policy`])
+//! with batched `act_batch` — the type the serve layer and the
+//! deterministic evaluator consume.
 
 mod agent;
 mod critic;
 mod encoder;
 mod methods;
 mod policy;
+mod snapshot;
 
 pub use agent::{Batch, SacAgent, SacConfig, UpdateStats};
-pub use critic::Critic;
-pub use encoder::Encoder;
+pub use critic::{Critic, CriticWorkspace};
+pub use encoder::{Encoder, EncoderWorkspace};
 pub use methods::Methods;
-pub use policy::{softplus_neg2u, softplus_neg2u_grad, TanhGaussian};
+pub use policy::{softplus_neg2u, softplus_neg2u_grad, PolicyCfg, TanhGaussian};
+pub use snapshot::{ActMode, Policy};

@@ -1,0 +1,165 @@
+//! Immutable policy snapshots — the inference half of the
+//! train/inference API split.
+//!
+//! A [`Policy`] is cloned out of a live [`super::SacAgent`] (weights
+//! only: no optimizer state, no activation caches, no RNG) and is
+//! `Send + Sync` because every layer forward is `&self`. One snapshot
+//! can therefore be shared by any number of threads, and
+//! [`Policy::act_batch`] lets N concurrent observations share a single
+//! GEMM per layer — the native backend of the [`crate::serve`]
+//! micro-batching server, and the engine behind the trainer's batched
+//! deterministic evaluation.
+
+use super::encoder::Encoder;
+use super::policy::{PolicyCfg, TanhGaussian};
+use crate::lowp::Precision;
+use crate::nn::{Mlp, Tensor};
+use crate::rngs::Pcg64;
+
+/// How [`Policy::act_batch`] turns the actor head into actions.
+pub enum ActMode<'a> {
+    /// Evaluation-time policy `tanh(μ)`.
+    Deterministic,
+    /// Exploration policy `a = tanh(μ + ε σ)`, with the Gaussian noise
+    /// drawn from the caller's RNG (the snapshot itself stays immutable
+    /// and shareable).
+    Sample(&'a mut Pcg64),
+}
+
+/// An immutable snapshot of a SAC actor (and pixel encoder, when
+/// present), detached from training.
+#[derive(Debug, Clone)]
+pub struct Policy {
+    actor: Mlp,
+    encoder: Option<Encoder>,
+    cfg: PolicyCfg,
+    compute: Precision,
+    /// Flat length of one observation (states: `obs_dim`; pixels:
+    /// `C·H·W`).
+    obs_len: usize,
+    act_dim: usize,
+    /// `(channels, side)` when this policy consumes images.
+    pixel_shape: Option<(usize, usize)>,
+}
+
+impl Policy {
+    pub(crate) fn new(
+        actor: Mlp,
+        encoder: Option<Encoder>,
+        cfg: PolicyCfg,
+        compute: Precision,
+        obs_len: usize,
+        act_dim: usize,
+        pixel_shape: Option<(usize, usize)>,
+    ) -> Self {
+        Policy { actor, encoder, cfg, compute, obs_len, act_dim, pixel_shape }
+    }
+
+    /// Flat f32 length of one observation.
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// The compute precision the snapshot runs its forward passes in.
+    pub fn precision(&self) -> Precision {
+        self.compute
+    }
+
+    pub fn is_pixels(&self) -> bool {
+        self.pixel_shape.is_some()
+    }
+
+    /// Shape a flat buffer of `batch` concatenated observations into the
+    /// tensor [`Policy::act_batch`] expects (`[B, obs]` for states,
+    /// `[B, C, H, W]` for pixels).
+    pub fn obs_tensor(&self, flat: &[f32], batch: usize) -> Tensor {
+        assert_eq!(
+            flat.len(),
+            batch * self.obs_len,
+            "obs buffer: want {} floats for batch {batch}",
+            batch * self.obs_len
+        );
+        match self.pixel_shape {
+            Some((c, h)) => Tensor::from_vec(&[batch, c, h, h], flat.to_vec()),
+            None => Tensor::from_vec(&[batch, self.obs_len], flat.to_vec()),
+        }
+    }
+
+    /// Batched action selection: `[B, …] → [B, act_dim]`.
+    ///
+    /// In [`ActMode::Deterministic`], row `r` of the result is bitwise
+    /// identical to a batch-1 call on observation `r` alone: the GEMM
+    /// backend accumulates every output row independently in the same
+    /// ascending-k panel order regardless of the batch size, so
+    /// micro-batching is a pure throughput win. In [`ActMode::Sample`]
+    /// the rows consume consecutive slices of the caller's RNG stream,
+    /// so batching changes which noise lands on which row.
+    pub fn act_batch(&self, obs: &Tensor, mode: ActMode) -> Tensor {
+        let p = self.compute;
+        let head = match self.encoder.as_ref() {
+            Some(enc) => {
+                let feat = enc.forward(obs, p);
+                self.actor.forward(&feat, p)
+            }
+            None => self.actor.forward(obs, p),
+        };
+        match mode {
+            ActMode::Deterministic => TanhGaussian::mean_action(&head, p),
+            ActMode::Sample(rng) => {
+                let b = head.rows();
+                let mut eps = Tensor::zeros(&[b, self.act_dim]);
+                rng.normal_fill(&mut eps.data);
+                TanhGaussian::forward(&head, &eps, self.cfg, p).a
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sac::{Methods, SacAgent, SacConfig};
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn policy_is_send_sync() {
+        assert_send_sync::<Policy>();
+    }
+
+    #[test]
+    fn snapshot_matches_live_agent_deterministically() {
+        let mut rng = Pcg64::seed(1);
+        let mut agent =
+            SacAgent::new(SacConfig::states(5, 2, 16), Methods::ours(), Precision::fp16(), 3);
+        let policy = agent.policy();
+        assert_eq!(policy.obs_len(), 5);
+        assert_eq!(policy.act_dim(), 2);
+        let mut obs = Tensor::zeros(&[3, 5]);
+        rng.normal_fill(&mut obs.data);
+        let live = agent.act_batch(&obs, false).unwrap();
+        let snap = policy.act_batch(&obs, ActMode::Deterministic);
+        assert!(live.data.iter().zip(&snap.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn sampled_actions_are_bounded_and_deterministic_in_the_rng() {
+        let mut agent =
+            SacAgent::new(SacConfig::states(4, 3, 16), Methods::ours(), Precision::fp16(), 5);
+        let policy = agent.policy();
+        let mut obs = Tensor::zeros(&[8, 4]);
+        Pcg64::seed(2).normal_fill(&mut obs.data);
+        let mut r1 = Pcg64::seed(7);
+        let mut r2 = Pcg64::seed(7);
+        let a1 = policy.act_batch(&obs, ActMode::Sample(&mut r1));
+        let a2 = policy.act_batch(&obs, ActMode::Sample(&mut r2));
+        assert_eq!(a1.data, a2.data, "same RNG stream, same sample");
+        assert!(a1.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+        // the agent itself was not consulted — its RNG is untouched
+        let _ = agent.act(&[0.1, 0.2, 0.3, 0.4], false);
+    }
+}

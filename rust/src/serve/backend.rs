@@ -1,0 +1,154 @@
+//! The [`PolicyBackend`] trait: one deterministic batched-inference
+//! request path for both execution engines — the native Rust engine
+//! (via [`crate::sac::Policy`]) and the PJRT artifact runtime (via
+//! [`crate::runtime::TrainSession`]). `lprl serve --engine native|pjrt`
+//! and the micro-batching [`super::PolicyServer`] only ever see this
+//! trait.
+
+use crate::runtime::TrainSession;
+use crate::sac::{ActMode, Policy};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A deterministic batched policy-inference engine. Implementations
+/// must be thread-safe: the serve layer calls `act_batch` from its
+/// batcher thread while clients inspect dims from theirs.
+pub trait PolicyBackend: Send + Sync {
+    /// Flat f32 length of one observation.
+    fn obs_dim(&self) -> usize;
+    /// Length of one action.
+    fn act_dim(&self) -> usize;
+    /// Deterministic inference over `batch` row-major observations
+    /// (`batch · obs_dim` floats in, `batch · act_dim` floats out).
+    fn act_batch(&self, obs: &[f32], batch: usize) -> Result<Vec<f32>, String>;
+    /// Engine name for logs/telemetry.
+    fn name(&self) -> &'static str;
+}
+
+/// Native-engine backend: an immutable [`Policy`] snapshot. The batched
+/// forward runs on the process-wide GEMM worker pool, so micro-batched
+/// requests share both the GEMMs and the pool.
+pub struct NativeBackend {
+    policy: Policy,
+}
+
+impl NativeBackend {
+    pub fn new(policy: Policy) -> Self {
+        NativeBackend { policy }
+    }
+}
+
+impl PolicyBackend for NativeBackend {
+    fn obs_dim(&self) -> usize {
+        self.policy.obs_len()
+    }
+
+    fn act_dim(&self) -> usize {
+        self.policy.act_dim()
+    }
+
+    fn act_batch(&self, obs: &[f32], batch: usize) -> Result<Vec<f32>, String> {
+        if obs.len() != batch * self.policy.obs_len() {
+            return Err(format!(
+                "native backend: want {} floats for batch {batch}, got {}",
+                batch * self.policy.obs_len(),
+                obs.len()
+            ));
+        }
+        let t = self.policy.obs_tensor(obs, batch);
+        Ok(self.policy.act_batch(&t, ActMode::Deterministic).data)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT artifact backend: the `act_<variant>` artifact executed through
+/// [`TrainSession`]. The artifact is compiled for a single observation,
+/// so a batch is served as a loop under one session lock — the request
+/// path is still the shared [`PolicyBackend`] one, and a future batched
+/// artifact drops in without touching the server. Deterministic actions
+/// come from ε = 0 (`tanh(μ + 0·σ) = tanh(μ)`).
+pub struct PjrtBackend {
+    sess: Mutex<TrainSession>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl PjrtBackend {
+    /// Open an artifact directory (errors cleanly when the artifacts or
+    /// the real `xla` bindings are absent — see `runtime::xla`).
+    pub fn new(artifact_dir: impl AsRef<Path>, variant: &str) -> anyhow::Result<Self> {
+        let sess = TrainSession::new(artifact_dir, variant)?;
+        let (obs_dim, act_dim, _) = sess.dims();
+        Ok(PjrtBackend { sess: Mutex::new(sess), obs_dim, act_dim })
+    }
+}
+
+impl PolicyBackend for PjrtBackend {
+    fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    fn act_batch(&self, obs: &[f32], batch: usize) -> Result<Vec<f32>, String> {
+        if obs.len() != batch * self.obs_dim {
+            return Err(format!(
+                "pjrt backend: want {} floats for batch {batch}, got {}",
+                batch * self.obs_dim,
+                obs.len()
+            ));
+        }
+        let mut sess = self.sess.lock().map_err(|e| e.to_string())?;
+        let eps = vec![0.0f32; self.act_dim];
+        let mut out = Vec::with_capacity(batch * self.act_dim);
+        for r in 0..batch {
+            let a = sess
+                .act(&obs[r * self.obs_dim..(r + 1) * self.obs_dim], &eps)
+                .map_err(|e| e.to_string())?;
+            out.extend_from_slice(&a);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowp::Precision;
+    use crate::rngs::Pcg64;
+    use crate::sac::{Methods, SacAgent, SacConfig};
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn backends_are_send_sync() {
+        assert_send_sync::<NativeBackend>();
+        assert_send_sync::<PjrtBackend>();
+    }
+
+    #[test]
+    fn native_backend_matches_policy() {
+        let agent =
+            SacAgent::new(SacConfig::states(4, 2, 16), Methods::ours(), Precision::fp16(), 1);
+        let policy = agent.policy();
+        let backend = NativeBackend::new(policy.clone());
+        assert_eq!(backend.obs_dim(), 4);
+        assert_eq!(backend.act_dim(), 2);
+        assert_eq!(backend.name(), "native");
+        let mut rng = Pcg64::seed(2);
+        let obs: Vec<f32> = (0..3 * 4).map(|_| rng.normal_f32()).collect();
+        let got = backend.act_batch(&obs, 3).unwrap();
+        let want = policy.act_batch(&policy.obs_tensor(&obs, 3), ActMode::Deterministic);
+        assert_eq!(got, want.data);
+        assert!(backend.act_batch(&obs, 2).is_err(), "length mismatch must error");
+    }
+}

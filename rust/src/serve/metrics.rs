@@ -1,0 +1,152 @@
+//! Serve-layer telemetry: throughput/latency counters shared between
+//! the batcher thread and observers. Atomic counters plus a bounded
+//! sliding window of request latencies: once the window is full the
+//! oldest samples are overwritten, so the percentiles always describe
+//! recent traffic (an append-and-stop buffer would freeze p50/p99 at
+//! the server's first-hour behaviour forever).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Size of the sliding latency window (per-request samples).
+const MAX_LATENCY_SAMPLES: usize = 1 << 20;
+
+/// Live counters owned by a [`super::PolicyServer`].
+#[derive(Debug, Default)]
+pub(crate) struct Metrics {
+    requests: AtomicU64,
+    batches: AtomicU64,
+    max_batch_rows: AtomicU64,
+    backend_us: AtomicU64,
+    errors: AtomicU64,
+    latencies_us: Mutex<LatencyWindow>,
+}
+
+/// Fixed-capacity ring of the most recent request latencies.
+#[derive(Debug, Default)]
+struct LatencyWindow {
+    samples: Vec<u64>,
+    next: usize,
+}
+
+impl LatencyWindow {
+    fn push(&mut self, us: u64) {
+        if self.samples.len() < MAX_LATENCY_SAMPLES {
+            self.samples.push(us);
+        } else {
+            self.samples[self.next] = us;
+        }
+        self.next = (self.next + 1) % MAX_LATENCY_SAMPLES;
+    }
+}
+
+impl Metrics {
+    /// One request answered; `latency` is enqueue → reply.
+    pub fn record_request(&self, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64);
+    }
+
+    /// One batch flushed through the backend.
+    pub fn record_batch(&self, rows: usize, backend: Duration) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.max_batch_rows.fetch_max(rows as u64, Ordering::Relaxed);
+        self.backend_us.fetch_add(backend.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// One request answered with an error.
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> ServeStats {
+        let mut lat = self.latencies_us.lock().unwrap().samples.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let requests = self.requests.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        ServeStats {
+            requests,
+            batches,
+            errors: self.errors.load(Ordering::Relaxed),
+            mean_batch: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
+            max_batch: self.max_batch_rows.load(Ordering::Relaxed) as usize,
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+            backend_us: self.backend_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time snapshot of the serve counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    /// Requests answered successfully.
+    pub requests: u64,
+    /// Batched forwards executed.
+    pub batches: u64,
+    /// Requests answered with an error.
+    pub errors: u64,
+    /// Mean rows per flushed batch — the micro-batching win.
+    pub mean_batch: f64,
+    /// Largest batch flushed.
+    pub max_batch: usize,
+    /// End-to-end (enqueue → reply) request latency over the sliding
+    /// window of recent requests, 50th percentile, µs.
+    pub p50_us: u64,
+    /// End-to-end request latency over the sliding window, 99th
+    /// percentile, µs.
+    pub p99_us: u64,
+    /// Total wall time spent inside the backend's batched forward, µs.
+    pub backend_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_aggregate() {
+        let m = Metrics::default();
+        m.record_batch(4, Duration::from_micros(100));
+        for i in 0..4u64 {
+            m.record_request(Duration::from_micros(10 * (i + 1)));
+        }
+        m.record_batch(2, Duration::from_micros(50));
+        for _ in 0..2 {
+            m.record_request(Duration::from_micros(1000));
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.errors, 1);
+        assert_eq!(s.max_batch, 4);
+        assert!((s.mean_batch - 3.0).abs() < 1e-9);
+        assert_eq!(s.backend_us, 150);
+        assert!(s.p50_us <= s.p99_us);
+        assert_eq!(s.p99_us, 1000);
+    }
+
+    #[test]
+    fn latency_window_overwrites_oldest_when_full() {
+        let mut w = LatencyWindow::default();
+        for _ in 0..MAX_LATENCY_SAMPLES {
+            w.push(1);
+        }
+        assert_eq!(w.samples.len(), MAX_LATENCY_SAMPLES);
+        for _ in 0..5 {
+            w.push(99);
+        }
+        assert_eq!(w.samples.len(), MAX_LATENCY_SAMPLES, "window stays bounded");
+        assert_eq!(&w.samples[..5], &[99; 5], "oldest samples are overwritten");
+        assert_eq!(w.samples[5], 1);
+    }
+}

@@ -1,0 +1,33 @@
+//! Native serve layer: low-precision policy inference as a product
+//! surface, not a training by-product.
+//!
+//! The paper's pitch is that fp16 SAC halves memory and compute; this
+//! module is where that pays off at request time. It is built on the
+//! train/inference API split:
+//!
+//! * [`crate::sac::Policy`] — an immutable, `Send + Sync` snapshot of a
+//!   trained actor with batched `act_batch` (every layer forward is
+//!   `&self`; training caches live in explicit workspaces).
+//! * [`PolicyBackend`] — one deterministic batched-inference trait over
+//!   both execution engines: [`NativeBackend`] (the blocked-GEMM native
+//!   engine) and [`PjrtBackend`] (the AOT artifact runtime). `lprl
+//!   serve --engine native|pjrt` picks one; the request path is shared.
+//! * [`PolicyServer`] — a micro-batching server: a bounded request
+//!   queue, one batcher thread that flushes at max-batch-or-deadline,
+//!   one batched forward per flush (on the process-wide GEMM worker
+//!   pool), per-request replies, and throughput/latency counters
+//!   ([`ServeStats`]).
+//!
+//! Because the GEMM backend accumulates output rows independently of
+//! the batch size, a micro-batched reply is **bitwise identical** to a
+//! serial one — batching is purely a throughput optimization
+//! (`benches/serve_throughput.rs` measures it; `tests/policy_serve.rs`
+//! proves the equivalence).
+
+mod backend;
+mod metrics;
+mod server;
+
+pub use backend::{NativeBackend, PjrtBackend, PolicyBackend};
+pub use metrics::ServeStats;
+pub use server::{PolicyServer, ServeClient, ServeConfig, ServeError};

@@ -1,0 +1,382 @@
+//! The micro-batching policy server.
+//!
+//! N client threads each submit one observation at a time; a single
+//! batcher thread coalesces whatever is queued into one batched forward
+//! (flushing at `max_batch` rows or when the oldest request has waited
+//! `flush_us`), then fans the per-row actions back out to the waiting
+//! clients. Because the backend's batched forward is row-invariant
+//! (see [`crate::sac::Policy::act_batch`]), every client receives
+//! bitwise the same action it would have gotten from a serial call —
+//! micro-batching is a pure throughput optimization.
+//!
+//! The request queue is bounded (`queue_cap`): saturated clients block
+//! in `send`, which is the backpressure story — the queue cannot grow
+//! without limit ahead of a slow backend.
+
+use super::backend::PolicyBackend;
+use super::metrics::{Metrics, ServeStats};
+use std::fmt;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Tuning knobs for [`PolicyServer`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Flush as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// … or when the oldest queued request has waited this long (µs).
+    pub flush_us: u64,
+    /// Bound on the request queue (backpressure: senders block).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { max_batch: 32, flush_us: 200, queue_cap: 1024 }
+    }
+}
+
+/// Errors a [`ServeClient`] can observe.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The observation had the wrong flat length.
+    BadObsLen { want: usize, got: usize },
+    /// The server has shut down.
+    Closed,
+    /// The backend rejected the batch.
+    Backend(String),
+    /// The policy produced a non-finite action for this observation
+    /// (the paper's crash condition, surfaced per request).
+    NonFinite,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::BadObsLen { want, got } => {
+                write!(f, "bad observation length: want {want} floats, got {got}")
+            }
+            ServeError::Closed => write!(f, "policy server is shut down"),
+            ServeError::Backend(e) => write!(f, "backend error: {e}"),
+            ServeError::NonFinite => write!(f, "policy produced a non-finite action"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+struct Request {
+    obs: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::SyncSender<Result<Vec<f32>, ServeError>>,
+}
+
+enum Msg {
+    Req(Request),
+    Stop,
+}
+
+/// A micro-batching inference server over any [`PolicyBackend`].
+/// Create with [`PolicyServer::start`], hand [`ServeClient`]s to
+/// request threads, and call [`PolicyServer::shutdown`] for the final
+/// stats.
+pub struct PolicyServer {
+    tx: mpsc::SyncSender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl PolicyServer {
+    /// Spawn the batcher thread and start serving.
+    pub fn start(backend: Arc<dyn PolicyBackend>, cfg: ServeConfig) -> Self {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        assert!(cfg.queue_cap >= 1, "queue_cap must be at least 1");
+        let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+        let metrics = Arc::new(Metrics::default());
+        let obs_dim = backend.obs_dim();
+        let act_dim = backend.act_dim();
+        let m = Arc::clone(&metrics);
+        let worker = std::thread::spawn(move || batch_loop(backend, rx, cfg, m));
+        PolicyServer { tx, worker: Some(worker), metrics, obs_dim, act_dim }
+    }
+
+    /// A handle request threads use to submit observations. Clone one
+    /// per thread.
+    pub fn client(&self) -> ServeClient {
+        ServeClient { tx: self.tx.clone(), obs_dim: self.obs_dim, act_dim: self.act_dim }
+    }
+
+    /// Live counters (the server keeps running).
+    pub fn stats(&self) -> ServeStats {
+        self.metrics.snapshot()
+    }
+
+    /// Stop accepting work, drain the queue, join the batcher and
+    /// return the final stats. Outstanding [`ServeClient`]s observe
+    /// [`ServeError::Closed`] afterwards.
+    pub fn shutdown(mut self) -> ServeStats {
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for PolicyServer {
+    fn drop(&mut self) {
+        // blocking send: if the queue is momentarily full the batcher is
+        // draining it, so a slot frees up; on a dead batcher the channel
+        // is disconnected and send returns immediately.
+        let _ = self.tx.send(Msg::Stop);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A cheap, cloneable handle for submitting single observations.
+#[derive(Clone)]
+pub struct ServeClient {
+    tx: mpsc::SyncSender<Msg>,
+    obs_dim: usize,
+    act_dim: usize,
+}
+
+impl ServeClient {
+    pub fn obs_dim(&self) -> usize {
+        self.obs_dim
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// Submit one observation and block for its action. The reply is
+    /// bitwise identical to a serial `act_batch(obs, 1)` on the backend.
+    pub fn act(&self, obs: &[f32]) -> Result<Vec<f32>, ServeError> {
+        if obs.len() != self.obs_dim {
+            return Err(ServeError::BadObsLen { want: self.obs_dim, got: obs.len() });
+        }
+        let (rtx, rrx) = mpsc::sync_channel(1);
+        let req = Request { obs: obs.to_vec(), enqueued: Instant::now(), reply: rtx };
+        self.tx.send(Msg::Req(req)).map_err(|_| ServeError::Closed)?;
+        match rrx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServeError::Closed),
+        }
+    }
+}
+
+fn batch_loop(
+    backend: Arc<dyn PolicyBackend>,
+    rx: mpsc::Receiver<Msg>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+) {
+    let obs_dim = backend.obs_dim();
+    let act_dim = backend.act_dim();
+    let flush = Duration::from_micros(cfg.flush_us);
+    let mut pending: Vec<Request> = Vec::with_capacity(cfg.max_batch);
+    let mut stop = false;
+    while !stop {
+        // block for the first request of the next batch
+        match rx.recv() {
+            Ok(Msg::Req(r)) => pending.push(r),
+            Ok(Msg::Stop) | Err(_) => break,
+        }
+        // coalesce until the batch fills or the flush deadline passes
+        let deadline = Instant::now() + flush;
+        while pending.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Req(r)) => pending.push(r),
+                Ok(Msg::Stop) => {
+                    stop = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    stop = true;
+                    break;
+                }
+            }
+        }
+        flush_batch(&*backend, &mut pending, obs_dim, act_dim, &metrics);
+    }
+    // drain whatever made it into the queue before Stop
+    while let Ok(Msg::Req(r)) = rx.try_recv() {
+        pending.push(r);
+        if pending.len() == cfg.max_batch {
+            flush_batch(&*backend, &mut pending, obs_dim, act_dim, &metrics);
+        }
+    }
+    flush_batch(&*backend, &mut pending, obs_dim, act_dim, &metrics);
+}
+
+/// One batched forward + per-request fan-out.
+fn flush_batch(
+    backend: &dyn PolicyBackend,
+    pending: &mut Vec<Request>,
+    obs_dim: usize,
+    act_dim: usize,
+    metrics: &Metrics,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let b = pending.len();
+    let mut flat = Vec::with_capacity(b * obs_dim);
+    for r in pending.iter() {
+        flat.extend_from_slice(&r.obs);
+    }
+    let t0 = Instant::now();
+    let result = backend.act_batch(&flat, b);
+    metrics.record_batch(b, t0.elapsed());
+    match result {
+        Ok(acts) => {
+            for (i, req) in pending.drain(..).enumerate() {
+                let a = acts[i * act_dim..(i + 1) * act_dim].to_vec();
+                if a.iter().all(|v| v.is_finite()) {
+                    metrics.record_request(req.enqueued.elapsed());
+                    let _ = req.reply.send(Ok(a));
+                } else {
+                    metrics.record_error();
+                    let _ = req.reply.send(Err(ServeError::NonFinite));
+                }
+            }
+        }
+        Err(e) => {
+            for req in pending.drain(..) {
+                metrics.record_error();
+                let _ = req.reply.send(Err(ServeError::Backend(e.clone())));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A backend that doubles each observation element pairwise, so the
+    /// reply for a request is a pure function of its own row.
+    struct Doubler {
+        obs: usize,
+    }
+
+    impl PolicyBackend for Doubler {
+        fn obs_dim(&self) -> usize {
+            self.obs
+        }
+        fn act_dim(&self) -> usize {
+            self.obs
+        }
+        fn act_batch(&self, obs: &[f32], batch: usize) -> Result<Vec<f32>, String> {
+            assert_eq!(obs.len(), batch * self.obs);
+            Ok(obs.iter().map(|v| 2.0 * v).collect())
+        }
+        fn name(&self) -> &'static str {
+            "doubler"
+        }
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let server = PolicyServer::start(
+            Arc::new(Doubler { obs: 3 }),
+            ServeConfig { max_batch: 4, flush_us: 500, queue_cap: 16 },
+        );
+        let client = server.client();
+        assert_eq!(client.obs_dim(), 3);
+        assert_eq!(client.act_dim(), 3);
+        let a = client.act(&[1.0, -2.0, 0.5]).unwrap();
+        assert_eq!(a, vec![2.0, -4.0, 1.0]);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.batches, 1);
+    }
+
+    #[test]
+    fn wrong_length_is_rejected_client_side() {
+        let server = PolicyServer::start(Arc::new(Doubler { obs: 3 }), ServeConfig::default());
+        let client = server.client();
+        assert_eq!(
+            client.act(&[1.0]),
+            Err(ServeError::BadObsLen { want: 3, got: 1 })
+        );
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn closed_server_reports_closed() {
+        let server = PolicyServer::start(Arc::new(Doubler { obs: 2 }), ServeConfig::default());
+        let client = server.client();
+        let _ = server.shutdown();
+        assert_eq!(client.act(&[0.0, 0.0]), Err(ServeError::Closed));
+    }
+
+    #[test]
+    fn concurrent_clients_coalesce_into_batches() {
+        let server = PolicyServer::start(
+            Arc::new(Doubler { obs: 2 }),
+            ServeConfig { max_batch: 8, flush_us: 20_000, queue_cap: 64 },
+        );
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for i in 0..16 {
+                let client = server.client();
+                handles.push(s.spawn(move || {
+                    let obs = [i as f32, -(i as f32)];
+                    client.act(&obs).unwrap()
+                }));
+            }
+            for (i, h) in handles.into_iter().enumerate() {
+                let a = h.join().unwrap();
+                assert_eq!(a, vec![2.0 * i as f32, -2.0 * i as f32]);
+            }
+        });
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 16);
+        assert!(
+            stats.batches < 16,
+            "16 concurrent requests must coalesce, got {} batches",
+            stats.batches
+        );
+        assert!(stats.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn nonfinite_actions_surface_per_request() {
+        struct NanMaker;
+        impl PolicyBackend for NanMaker {
+            fn obs_dim(&self) -> usize {
+                1
+            }
+            fn act_dim(&self) -> usize {
+                1
+            }
+            fn act_batch(&self, obs: &[f32], _batch: usize) -> Result<Vec<f32>, String> {
+                Ok(obs.iter().map(|&v| if v < 0.0 { f32::NAN } else { v }).collect())
+            }
+            fn name(&self) -> &'static str {
+                "nan"
+            }
+        }
+        let server = PolicyServer::start(Arc::new(NanMaker), ServeConfig::default());
+        let client = server.client();
+        assert_eq!(client.act(&[1.0]), Ok(vec![1.0]));
+        assert_eq!(client.act(&[-1.0]), Err(ServeError::NonFinite));
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.errors, 1);
+    }
+}

@@ -50,7 +50,7 @@ fn native_and_artifact_actions_agree_fp32() {
     let Some(mut sess) = open_session(&dir, "fp32") else { return };
     let (o, a, _) = sess.dims();
     let hidden = sess.runtime.manifest.dim("hidden").unwrap();
-    let mut actor = native_actor(&sess, o, a, hidden);
+    let actor = native_actor(&sess, o, a, hidden);
 
     let mut rng = Pcg64::seed(17);
     for trial in 0..20 {
@@ -80,7 +80,7 @@ fn native_and_artifact_actions_agree_fp16_ours() {
     let Some(mut sess) = open_session(&dir, "fp16_ours") else { return };
     let (o, a, _) = sess.dims();
     let hidden = sess.runtime.manifest.dim("hidden").unwrap();
-    let mut actor = native_actor(&sess, o, a, hidden);
+    let actor = native_actor(&sess, o, a, hidden);
     let prec = Precision::fp16();
 
     let mut rng = Pcg64::seed(23);

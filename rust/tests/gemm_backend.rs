@@ -4,7 +4,7 @@
 //! reproducible — the native engine's determinism guarantee.
 
 use lprl::lowp::Precision;
-use lprl::nn::{gemm, Conv2d, Linear, Mlp, Tensor};
+use lprl::nn::{gemm, Conv2d, Linear, Mlp, MlpWorkspace, Tensor};
 use lprl::rngs::Pcg64;
 
 /// Naive `y = x Wᵀ + b` in f64 (PyTorch layout: w is `[out, in]`).
@@ -27,7 +27,7 @@ fn naive_linear(x: &Tensor, w: &[f32], b: &[f32], out_dim: usize) -> Vec<f32> {
 fn linear_forward_matches_naive_oracle() {
     let mut rng = Pcg64::seed(1);
     for &(bsz, in_dim, out_dim) in &[(1, 1, 1), (3, 7, 5), (33, 20, 17), (130, 65, 40)] {
-        let mut lin = Linear::new("t", in_dim, out_dim, &mut rng);
+        let lin = Linear::new("t", in_dim, out_dim, &mut rng);
         let x = Tensor::from_vec(
             &[bsz, in_dim],
             (0..bsz * in_dim).map(|_| rng.normal_f32()).collect(),
@@ -47,7 +47,7 @@ fn linear_forward_matches_naive_oracle() {
 fn linear_forward_is_bitwise_reproducible() {
     // exercises the pooled path (batch x dims large enough to fan out)
     let mut rng = Pcg64::seed(2);
-    let mut lin = Linear::new("t", 128, 96, &mut rng);
+    let lin = Linear::new("t", 128, 96, &mut rng);
     let x = Tensor::from_vec(&[200, 128], (0..200 * 128).map(|_| rng.normal_f32()).collect());
     let y1 = lin.forward(&x, Precision::fp16());
     let y2 = lin.forward(&x, Precision::fp16());
@@ -60,7 +60,7 @@ fn linear_forward_is_bitwise_reproducible() {
 #[test]
 fn linear_fp16_output_is_representable() {
     let mut rng = Pcg64::seed(3);
-    let mut lin = Linear::new("t", 40, 24, &mut rng);
+    let lin = Linear::new("t", 40, 24, &mut rng);
     let x = Tensor::from_vec(&[9, 40], (0..360).map(|_| rng.normal_f32()).collect());
     let y = lin.forward(&x, Precision::fp16());
     for &v in &y.data {
@@ -72,7 +72,7 @@ fn linear_fp16_output_is_representable() {
 fn conv_forward_matches_direct_convolution() {
     let mut rng = Pcg64::seed(4);
     let (b, cin, cout, h, w, k, stride) = (2, 3, 5, 9, 9, 3, 2);
-    let mut conv = Conv2d::new("c", cin, cout, k, stride, &mut rng);
+    let conv = Conv2d::new("c", cin, cout, k, stride, &mut rng);
     let x = Tensor::from_vec(
         &[b, cin, h, w],
         (0..b * cin * h * w).map(|_| rng.normal_f32()).collect(),
@@ -116,21 +116,22 @@ fn mlp_forward_backward_still_gradchecks_through_backend() {
     let mut mlp = Mlp::new("m", &[6, 48, 48, 3], &mut rng);
     let x = Tensor::from_vec(&[4, 6], (0..24).map(|_| rng.normal_f32()).collect());
     let prec = Precision::Fp32;
-    let y = mlp.forward(&x, prec);
+    let mut ws = MlpWorkspace::default();
+    let y = mlp.forward_train(&x, prec, &mut ws);
     mlp.zero_grad();
-    let dx = mlp.backward(&y.clone(), prec);
+    let dx = mlp.backward(&y.clone(), prec, &ws);
 
     let eps = 1e-3f32;
-    let loss = |m: &mut Mlp, x: &Tensor| -> f32 {
+    let loss = |m: &Mlp, x: &Tensor| -> f32 {
         m.forward(x, prec).data.iter().map(|v| v * v / 2.0).sum()
     };
     let mut x2 = x.clone();
     for idx in [0usize, 5, 11, 23] {
         let o = x2.data[idx];
         x2.data[idx] = o + eps;
-        let lp = loss(&mut mlp, &x2);
+        let lp = loss(&mlp, &x2);
         x2.data[idx] = o - eps;
-        let lm = loss(&mut mlp, &x2);
+        let lm = loss(&mlp, &x2);
         x2.data[idx] = o;
         let num = (lp - lm) / (2.0 * eps);
         assert!(

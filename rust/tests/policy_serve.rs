@@ -1,0 +1,248 @@
+//! Integration tests for the train/inference API split:
+//!
+//! * `act` vs `act_batch(1)` vs `Policy::act_batch` bitwise parity,
+//!   under every precision preset (the serve layer's correctness
+//!   invariant);
+//! * looped vs batched deterministic evaluation parity on every
+//!   supported task;
+//! * snapshot independence (training after `policy()` must not change
+//!   the snapshot's outputs);
+//! * K concurrent serve clients receive exactly the actions serial
+//!   calls produce.
+
+use lprl::config::{parse_preset, RunConfig};
+use lprl::coordinator::{evaluate_policy, evaluate_policy_batched};
+use lprl::envs::{make_env, SUPPORTED_TASKS};
+use lprl::nn::Tensor;
+use lprl::rngs::Pcg64;
+use lprl::sac::{ActMode, Batch, SacAgent, SacConfig};
+use lprl::serve::{NativeBackend, PolicyServer, ServeConfig};
+use std::sync::Arc;
+
+fn toy_agent(obs_dim: usize, act_dim: usize, preset: &str, seed: u64) -> SacAgent {
+    let (prec, methods) = parse_preset(preset).unwrap_or_else(|| panic!("preset {preset}"));
+    SacAgent::new(SacConfig::states(obs_dim, act_dim, 32), methods, prec, seed)
+}
+
+fn toy_batch(b: usize, obs_dim: usize, act_dim: usize, rng: &mut Pcg64) -> Batch {
+    let mut obs = Tensor::zeros(&[b, obs_dim]);
+    rng.normal_fill(&mut obs.data);
+    let mut next_obs = Tensor::zeros(&[b, obs_dim]);
+    rng.normal_fill(&mut next_obs.data);
+    let mut act = Tensor::zeros(&[b, act_dim]);
+    for v in act.data.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    Batch {
+        obs,
+        act,
+        rew: (0..b).map(|_| rng.uniform_f32()).collect(),
+        next_obs,
+        not_done: vec![1.0; b],
+    }
+}
+
+fn assert_bitwise(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Acceptance invariant: batch-32 `act_batch` rows are bitwise equal to
+/// per-observation `act`, for every precision preset, and the immutable
+/// `Policy` snapshot agrees with the live agent.
+#[test]
+fn act_batch_rows_match_single_act_under_every_preset() {
+    let presets = [
+        "fp32",
+        "fp16_naive",
+        "fp16_ours",
+        "coerc",
+        "loss_scale",
+        "mixed",
+        "amp",
+        "bf16_ours",
+        "e5m7_ours",
+    ];
+    for preset in presets {
+        let (od, ad, b) = (6, 3, 32);
+        let mut agent = toy_agent(od, ad, preset, 5);
+        let mut obs = Tensor::zeros(&[b, od]);
+        Pcg64::seed(11).normal_fill(&mut obs.data);
+        let batched = agent.act_batch(&obs, false).expect("finite actions");
+        for r in 0..b {
+            let single = agent.act(obs.row(r), false).expect("finite action");
+            assert_bitwise(&single, batched.row(r), &format!("{preset} row {r}"));
+        }
+        let policy = agent.policy();
+        let snap = policy.act_batch(&obs, ActMode::Deterministic);
+        assert_bitwise(&snap.data, &batched.data, preset);
+    }
+}
+
+/// The stochastic path consumes the agent RNG identically whether it
+/// goes through `act` or `act_batch(1)` (act is act_batch with batch 1).
+#[test]
+fn stochastic_act_is_act_batch_of_one() {
+    let mut a1 = toy_agent(5, 2, "fp16_ours", 9);
+    let mut a2 = toy_agent(5, 2, "fp16_ours", 9);
+    let mut rng = Pcg64::seed(3);
+    for step in 0..10 {
+        let obs: Vec<f32> = (0..5).map(|_| rng.normal_f32()).collect();
+        let x = a1.act(&obs, true).unwrap();
+        let t = Tensor::from_vec(&[1, 5], obs.clone());
+        let y = a2.act_batch(&t, true).unwrap();
+        assert_bitwise(&x, &y.data, &format!("step {step}"));
+    }
+}
+
+/// Updating the agent after `policy()` must not change the snapshot.
+#[test]
+fn policy_snapshot_is_independent_of_later_updates() {
+    let mut rng = Pcg64::seed(4);
+    let mut agent = toy_agent(6, 2, "fp32", 1);
+    let mut obs = Tensor::zeros(&[4, 6]);
+    rng.normal_fill(&mut obs.data);
+    let policy = agent.policy();
+    let before = policy.act_batch(&obs, ActMode::Deterministic);
+    for _ in 0..5 {
+        let b = toy_batch(16, 6, 2, &mut rng);
+        agent.update(&b);
+    }
+    let after = policy.act_batch(&obs, ActMode::Deterministic);
+    assert_bitwise(&before.data, &after.data, "snapshot must be frozen");
+    // ... while the live agent has moved on
+    let live = agent.act_batch(&obs, false).unwrap();
+    assert_ne!(live.data, before.data, "agent must keep training");
+    // and a fresh snapshot tracks the live agent again
+    let fresh = agent.policy().act_batch(&obs, ActMode::Deterministic);
+    assert_bitwise(&fresh.data, &live.data, "fresh snapshot");
+}
+
+/// Batched lockstep evaluation is bitwise identical to one-episode-at-
+/// a-time evaluation on every supported task.
+#[test]
+fn batched_eval_matches_looped_eval_on_every_task() {
+    for task in SUPPORTED_TASKS {
+        let cfg = RunConfig {
+            task: task.to_string(),
+            preset: "fp16_ours".into(),
+            hidden: 24,
+            ..Default::default()
+        };
+        let env = make_env(task).unwrap();
+        let (prec, methods) = cfg.preset().unwrap();
+        let agent = SacAgent::new(
+            SacConfig::states(env.obs_dim(), env.act_dim(), cfg.hidden),
+            methods,
+            prec,
+            3,
+        );
+        let policy = agent.policy();
+        let looped = evaluate_policy(&policy, &cfg, 2, 0x5EED).unwrap();
+        let batched = evaluate_policy_batched(&policy, &cfg, 2, 0x5EED).unwrap();
+        assert_eq!(
+            looped.to_bits(),
+            batched.to_bits(),
+            "{task}: looped {looped} vs batched {batched}"
+        );
+    }
+}
+
+/// The same parity guarantees hold on the pixel path, where the policy
+/// snapshot additionally carries the conv encoder with its weight
+/// standardization baked into the frozen head weights: the snapshot
+/// matches the live agent bitwise, and batched lockstep eval matches
+/// looped eval bitwise.
+#[test]
+fn pixel_policy_snapshot_and_batched_eval_parity() {
+    let cfg = RunConfig {
+        task: "pendulum_swingup".into(),
+        preset: "fp16_ours".into(),
+        pixels: true,
+        image_size: 17,
+        filters: 4,
+        frame_stack: 3,
+        feature_dim: 8,
+        hidden: 16,
+        ..Default::default()
+    };
+    let (prec, methods) = cfg.preset().unwrap();
+    let env = make_env(&cfg.task).unwrap();
+    let sac_cfg = SacConfig::pixels(cfg.feature_dim, env.act_dim(), cfg.hidden);
+    let mut agent = SacAgent::new_pixels(
+        sac_cfg,
+        methods,
+        prec,
+        3,
+        cfg.frame_stack * 3,
+        cfg.image_size,
+        cfg.filters,
+    );
+
+    // snapshot vs live agent, batch vs single, all bitwise
+    let (c, h) = (cfg.frame_stack * 3, cfg.image_size);
+    let mut img = Tensor::zeros(&[2, c, h, h]);
+    let mut rng = Pcg64::seed(6);
+    for v in img.data.iter_mut() {
+        *v = rng.uniform_f32();
+    }
+    let live = agent.act_batch(&img, false).unwrap();
+    let policy = agent.policy();
+    assert_eq!(policy.obs_len(), c * h * h);
+    let snap = policy.act_batch(&img, ActMode::Deterministic);
+    assert_bitwise(&live.data, &snap.data, "pixel snapshot vs live");
+    let img_len = c * h * h;
+    for r in 0..2 {
+        // act takes one flattened [C, H, W] image
+        let single = agent.act(&img.data[r * img_len..(r + 1) * img_len], false).unwrap();
+        assert_bitwise(&single, snap.row(r), &format!("pixel row {r}"));
+    }
+
+    // looped vs batched deterministic eval through the pixel adapter
+    let looped = evaluate_policy(&policy, &cfg, 2, 0x5EED).unwrap();
+    let batched = evaluate_policy_batched(&policy, &cfg, 2, 0x5EED).unwrap();
+    assert_eq!(looped.to_bits(), batched.to_bits(), "{looped} vs {batched}");
+}
+
+/// K concurrent clients through the micro-batching server receive
+/// exactly the actions that serial `act_batch(·, 1)` calls produce.
+#[test]
+fn concurrent_serve_clients_match_serial_calls() {
+    let agent = toy_agent(8, 3, "fp16_ours", 2);
+    let policy = agent.policy();
+    let k = 16usize;
+    let mut rng = Pcg64::seed(5);
+    let obs: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..8).map(|_| rng.normal_f32()).collect())
+        .collect();
+    // serial reference, batch-1 each
+    let serial: Vec<Vec<f32>> = obs
+        .iter()
+        .map(|o| {
+            policy
+                .act_batch(&Tensor::from_vec(&[1, 8], o.clone()), ActMode::Deterministic)
+                .data
+        })
+        .collect();
+
+    let server = PolicyServer::start(
+        Arc::new(NativeBackend::new(policy.clone())),
+        ServeConfig { max_batch: 4, flush_us: 5_000, queue_cap: 64 },
+    );
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for o in &obs {
+            let client = server.client();
+            handles.push(s.spawn(move || client.act(o).unwrap()));
+        }
+        for (i, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_bitwise(&got, &serial[i], &format!("client {i}"));
+        }
+    });
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, k as u64);
+    assert_eq!(stats.errors, 0);
+}
