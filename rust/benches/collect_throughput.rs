@@ -1,0 +1,154 @@
+//! Collection-throughput benchmark: env-steps/sec of the vectorized
+//! collector as a function of `num_envs`, across precision presets, on
+//! the states task. The paper's Table 3 speedups come from amortizing
+//! half-precision compute over batches; this bench tracks how far one
+//! shared forward per collect round amortizes the rollout the same way.
+//! Writes `BENCH_collect.json` at the repo root next to
+//! `BENCH_gemm.json` and `BENCH_serve.json`.
+//!
+//! ```bash
+//! cargo bench --bench collect_throughput            # full run, writes JSON
+//! cargo bench --bench collect_throughput -- --test  # CI smoke: tiny, no JSON
+//! ```
+//!
+//! Before timing anything the bench asserts the vectorized-collection
+//! correctness invariant: two identical `num_envs = 4` runs produce the
+//! same eval curve (determinism in the seed).
+
+use lprl::config::RunConfig;
+use lprl::coordinator::train;
+use std::fmt::Write as _;
+
+struct Row {
+    preset: &'static str,
+    num_envs: usize,
+    collect_sps: f64,
+    updates_per_sec: f64,
+    wall_secs: f64,
+    final_score: f64,
+}
+
+fn bench_cfg(preset: &str, num_envs: usize, steps: usize, hidden: usize, batch: usize) -> RunConfig {
+    RunConfig {
+        task: "pendulum_swingup".into(),
+        preset: preset.into(),
+        steps,
+        seed_steps: (steps / 8).max(num_envs),
+        batch,
+        hidden,
+        eval_every: steps, // single final eval, outside both stage timers
+        eval_episodes: 1,
+        num_envs,
+        ..Default::default()
+    }
+}
+
+fn bench_one(preset: &'static str, num_envs: usize, steps: usize, hidden: usize, batch: usize) -> Row {
+    let cfg = bench_cfg(preset, num_envs, steps, hidden, batch);
+    let out = train(&cfg);
+    assert!(!out.crashed, "{preset} num_envs={num_envs} crashed");
+    Row {
+        preset,
+        num_envs,
+        collect_sps: out.collect_steps_per_sec,
+        updates_per_sec: out.updates_per_sec,
+        wall_secs: out.wall_secs,
+        final_score: out.final_score,
+    }
+}
+
+fn write_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"collect\",\n");
+    let _ = writeln!(out, "  \"task\": \"{task}\",");
+    let _ = writeln!(out, "  \"steps\": {steps},");
+    let _ = writeln!(out, "  \"hidden\": {hidden},");
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"num_envs\": {}, \"collect_steps_per_sec\": {:.1}, \"updates_per_sec\": {:.2}, \"wall_secs\": {:.3}, \"final_score\": {:.2}}}",
+            r.preset, r.num_envs, r.collect_sps, r.updates_per_sec, r.wall_secs, r.final_score
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"scaling\": [\n");
+    let presets: Vec<&str> = {
+        let mut p: Vec<&str> = rows.iter().map(|r| r.preset).collect();
+        p.dedup();
+        p
+    };
+    for (i, preset) in presets.iter().enumerate() {
+        let of = |n: usize| rows.iter().find(|r| r.preset == *preset && r.num_envs == n);
+        let base = of(1).expect("num_envs=1 row");
+        let top = rows
+            .iter()
+            .filter(|r| r.preset == *preset)
+            .max_by_key(|r| r.num_envs)
+            .unwrap();
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"num_envs\": {}, \"collect_speedup_vs_1\": {:.3}}}",
+            preset,
+            top.num_envs,
+            top.collect_sps / base.collect_sps
+        );
+        out.push_str(if i + 1 < presets.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_collect.json");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+    let (steps, hidden, batch, envs, presets): (usize, usize, usize, Vec<usize>, Vec<&'static str>) =
+        if smoke {
+            (64, 32, 16, vec![1, 4], vec!["fp16_ours"])
+        } else {
+            (1500, 256, 128, vec![1, 2, 4, 8], vec!["fp32", "fp16_ours"])
+        };
+
+    // -- correctness gate: vectorized collection is deterministic ------
+    let det_cfg = bench_cfg("fp16_ours", 4, 48, 24, 8);
+    let a = train(&det_cfg);
+    let b = train(&det_cfg);
+    assert_eq!(
+        a.eval_curve.points, b.eval_curve.points,
+        "num_envs=4 training must be deterministic in the seed"
+    );
+    println!("determinism gate: two num_envs=4 runs match  OK");
+
+    let mut rows = Vec::new();
+    for &preset in &presets {
+        for &n in &envs {
+            let row = bench_one(preset, n, steps, hidden, batch);
+            println!(
+                "{:>9}  num_envs {:>2}: collect {:>9.1} steps/s  learner {:>7.2} upd/s  wall {:>6.2}s",
+                row.preset, row.num_envs, row.collect_sps, row.updates_per_sec, row.wall_secs
+            );
+            rows.push(row);
+        }
+        let base = rows.iter().find(|r| r.preset == preset && r.num_envs == 1).unwrap();
+        let top = rows.iter().filter(|r| r.preset == preset).max_by_key(|r| r.num_envs).unwrap();
+        println!(
+            "{:>9}  collect speedup (num_envs {} vs 1): {:.2}x",
+            preset,
+            top.num_envs,
+            top.collect_sps / base.collect_sps
+        );
+    }
+
+    if smoke {
+        println!("smoke mode: no JSON written");
+        return;
+    }
+    match write_json("pendulum_swingup", steps, hidden, &rows) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_collect.json: {e}"),
+    }
+}

@@ -23,6 +23,11 @@ pub struct RunConfig {
     pub batch: usize,
     pub hidden: usize,
     pub replay_capacity: usize,
+    /// Parallel env streams the collector steps in lockstep (one shared
+    /// policy forward per round; the SAC 1-update-per-transition
+    /// schedule is preserved). `1` reproduces the single-env trainer
+    /// bitwise; see `coordinator::train`'s determinism contract.
+    pub num_envs: usize,
     /// Evaluate every this many agent steps.
     pub eval_every: usize,
     pub eval_episodes: usize,
@@ -61,6 +66,7 @@ impl Default for RunConfig {
             batch: 64,
             hidden: 128,
             replay_capacity: 100_000,
+            num_envs: 1,
             eval_every: 500,
             eval_episodes: 4,
             pixels: false,
@@ -122,6 +128,12 @@ impl RunConfig {
         if self.preset().is_none() {
             return Err(format!("unknown preset {:?}", self.preset));
         }
+        if self.num_envs == 0 {
+            return Err("num_envs must be >= 1".into());
+        }
+        if self.eval_every == 0 {
+            return Err("eval_every must be >= 1".into());
+        }
         Ok(())
     }
 
@@ -139,6 +151,7 @@ impl RunConfig {
             "batch" => self.batch = p(value).unwrap_or(self.batch),
             "hidden" => self.hidden = p(value).unwrap_or(self.hidden),
             "replay_capacity" => self.replay_capacity = p(value).unwrap_or(self.replay_capacity),
+            "num_envs" => self.num_envs = p(value).unwrap_or(self.num_envs),
             "eval_every" => self.eval_every = p(value).unwrap_or(self.eval_every),
             "eval_episodes" => self.eval_episodes = p(value).unwrap_or(self.eval_episodes),
             "pixels" => self.pixels = value == "true" || value == "1",
@@ -278,10 +291,23 @@ mod tests {
         assert!(c.set("task", "cheetah_run"));
         assert!(c.set("steps", "123"));
         assert!(c.set("pixels", "true"));
+        assert!(c.set("num_envs", "8"));
         assert!(!c.set("bogus_key", "1"));
         assert_eq!(c.task, "cheetah_run");
         assert_eq!(c.steps, 123);
         assert!(c.pixels);
+        assert_eq!(c.num_envs, 8);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_schedules() {
+        let mut c = RunConfig { num_envs: 0, ..Default::default() };
+        assert!(c.validate().unwrap_err().contains("num_envs"));
+        c.num_envs = 4;
+        c.eval_every = 0;
+        assert!(c.validate().unwrap_err().contains("eval_every"));
+        c.eval_every = 100;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

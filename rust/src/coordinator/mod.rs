@@ -1,12 +1,13 @@
-//! Training coordinator: the seed/collect/update loop, episode
-//! management (time limits + action repeat), evaluation, pixel
-//! frame-stacking, crash accounting, and multi-seed parallel
-//! orchestration for the experiment harness.
+//! Training coordinator: the collector/learner loop over vectorized
+//! environments (collect → update → eval rounds, episode time limits +
+//! action repeat), batched deterministic evaluation, crash accounting,
+//! and multi-seed parallel orchestration for the experiment harness.
 
-mod pixels;
 mod trainer;
 
-pub use pixels::PixelEnvAdapter;
+// `PixelEnvAdapter` moved into `envs` (it is an env concern and
+// `envs::VecEnv` consumes it); re-exported here for compatibility.
+pub use crate::envs::PixelEnvAdapter;
 pub use trainer::{evaluate_policy, evaluate_policy_batched, run_many, train, TrainOutcome};
 
 /// dm_control episode length in raw environment steps.

@@ -1,17 +1,48 @@
-//! The training loop (launcher): seed phase with random actions, then
-//! collect-and-update with periodic deterministic evaluation — the same
-//! schedule as the reference SAC codebase, plus the paper's crash
-//! accounting (a non-finite action scores the run 0 from then on).
+//! The training loop, restructured as an explicit collector/learner
+//! architecture over vectorized environments.
+//!
+//! One training round = **collect → update → eval**:
+//!
+//! * **collect** — one shared (batched) policy forward produces an
+//!   action row per env stream; all `num_envs` streams advance one agent
+//!   step in lockstep and their transitions enter the replay buffer as a
+//!   chunk (`ReplayBuffer::push_batch`).
+//! * **update** — one gradient step per collected transition (the SAC
+//!   1-update-per-transition schedule is preserved exactly: `N`
+//!   transitions per shared forward, `N` updates), sampling through the
+//!   allocation-free `ReplayBuffer::sample_into` path.
+//! * **eval** — periodic deterministic evaluation with an immutable
+//!   [`Policy`] snapshot, plus the paper's crash accounting (a
+//!   non-finite action scores the run 0 from then on).
+//!
+//! Rounds are split at the seed-phase and eval boundaries, so every
+//! round is phase-pure and evals land on the same agent-step grid for
+//! every `num_envs`.
+//!
+//! Determinism contract: runs are fully deterministic in `cfg.seed` for
+//! any `num_envs`. With `num_envs = 1` the loop degenerates to the
+//! original single-env trainer draw for draw — the shared trainer
+//! stream (`seed_stream(seed, 7)`) serves resets, seed-phase actions
+//! and replay sampling, and exploration noise comes from the agent's
+//! own stream — so eval curves are bitwise identical to the
+//! pre-vectorization trainer. With `num_envs > 1` each env stream owns
+//! an independent `Pcg64` stream for its resets, seed-phase actions and
+//! exploration noise.
 
-use super::pixels::PixelEnvAdapter;
 use super::EPISODE_ENV_STEPS;
 use crate::config::RunConfig;
-use crate::envs::{action_repeat, make_env, sanitize_action, Env};
+use crate::envs::{sanitize_action, VecEnv};
+use crate::nn::Tensor;
 use crate::replay::{ReplayBuffer, Storage};
 use crate::rngs::Pcg64;
-use crate::sac::{ActMode, Policy, SacAgent, SacConfig};
+use crate::sac::{ActMode, Batch, Policy, SacAgent, SacConfig};
 use crate::telemetry::{LogHistogram, Series};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Stream ids on `cfg.seed`: 7 is the legacy shared trainer stream;
+/// per-env streams for `num_envs > 1` start here.
+const ENV_STREAM_BASE: u64 = 0x1000;
 
 /// Result of one training run.
 pub struct TrainOutcome {
@@ -26,47 +57,19 @@ pub struct TrainOutcome {
     pub wall_secs: f64,
     /// Total optimizer steps skipped due to non-finite gradients.
     pub skipped_steps: u64,
+    /// Collection throughput: agent transitions gathered per second of
+    /// collect-stage wall time (action selection + env stepping +
+    /// replay pushes).
+    pub collect_steps_per_sec: f64,
+    /// Learner throughput: gradient updates per second of update-stage
+    /// wall time (replay sampling + SAC update).
+    pub updates_per_sec: f64,
     /// Immutable snapshot of the final trained policy — the artifact
     /// the serve layer consumes. Always `Some` from [`train`]; holds a
     /// full copy of the actor (and encoder) weights, so [`run_many`]
     /// (experiment grids that keep every outcome alive and only read
     /// the scalar results) clears it to keep grid memory flat.
     pub policy: Option<Policy>,
-}
-
-enum Obs {
-    State(Box<dyn Env>),
-    Pixels(PixelEnvAdapter),
-}
-
-impl Obs {
-    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
-        match self {
-            Obs::State(e) => e.reset(rng),
-            Obs::Pixels(p) => p.reset(rng),
-        }
-    }
-    fn step(&mut self, a: &[f32]) -> (Vec<f32>, f32) {
-        match self {
-            Obs::State(e) => e.step(a),
-            Obs::Pixels(p) => p.step(a),
-        }
-    }
-    fn act_dim(&self) -> usize {
-        match self {
-            Obs::State(e) => e.act_dim(),
-            Obs::Pixels(p) => p.env.act_dim(),
-        }
-    }
-}
-
-fn build_env(cfg: &RunConfig) -> Obs {
-    let env = make_env(&cfg.task).unwrap_or_else(|| panic!("unknown task {}", cfg.task));
-    if cfg.pixels {
-        Obs::Pixels(PixelEnvAdapter::new(env, cfg.image_size, cfg.frame_stack))
-    } else {
-        Obs::State(env)
-    }
 }
 
 fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
@@ -108,6 +111,46 @@ fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
     }
 }
 
+/// Stage a flat lockstep observation buffer into a persistent `[B, …]`
+/// tensor for the agent's shared forward: the buffer is reallocated
+/// only when the round size changes (seed/eval boundaries), so the
+/// steady-state collect loop allocates nothing.
+fn stage_obs<'a>(stage: &'a mut Tensor, flat: &[f32], batch: usize, obs_shape: &[usize]) -> &'a Tensor {
+    let mut shape = vec![batch];
+    shape.extend_from_slice(obs_shape);
+    if stage.shape != shape {
+        *stage = Tensor::zeros(&shape);
+    }
+    stage.data.copy_from_slice(flat);
+    stage
+}
+
+/// Shared lockstep evaluation core: run the env streams `ids[i]` (each
+/// seeded as `seed_stream(eval_seed, 1000 + ids[i])`) for one fixed
+/// 1000-env-step episode under the deterministic policy, all advancing
+/// with one batched forward per agent step. Returns per-episode raw
+/// returns, or `None` if the policy produced a non-finite action (the
+/// paper's crash condition).
+fn eval_lockstep(policy: &Policy, cfg: &RunConfig, ids: &[u64], eval_seed: u64) -> Option<Vec<f64>> {
+    let mut venv = VecEnv::new(cfg, ids.len());
+    let steps = EPISODE_ENV_STEPS / venv.action_repeat();
+    let obs_len = venv.obs_len();
+    let mut obs_flat = vec![0.0f32; ids.len() * obs_len];
+    for (i, &id) in ids.iter().enumerate() {
+        let mut rng = Pcg64::seed_stream(eval_seed, 1000 + id);
+        venv.reset_into(i, &mut rng, &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
+    }
+    let mut totals = vec![0.0f64; ids.len()];
+    for _ in 0..steps {
+        let t = policy.obs_tensor(&obs_flat, ids.len());
+        let mut acts = policy.act_batch(&t, ActMode::Deterministic);
+        if !venv.step_lockstep(&mut acts, &mut obs_flat, &mut totals) {
+            return None; // crash ⇒ the paper scores the run as 0
+        }
+    }
+    Some(totals)
+}
+
 /// Run `episodes` deterministic evaluation episodes one at a time with
 /// an immutable [`Policy`] snapshot (batch-1 forwards — the reference
 /// path). Returns `None` if the policy produced a non-finite action
@@ -119,25 +162,12 @@ pub fn evaluate_policy(
     episodes: usize,
     eval_seed: u64,
 ) -> Option<f64> {
-    let repeat = action_repeat(&cfg.task);
-    let steps = EPISODE_ENV_STEPS / repeat;
-    let mut totals = vec![0.0f64; episodes];
+    if episodes == 0 {
+        return Some(0.0); // same degenerate-input answer as the batched path
+    }
+    let mut totals = Vec::with_capacity(episodes);
     for ep in 0..episodes {
-        let mut env = build_env(cfg);
-        let mut rng = Pcg64::seed_stream(eval_seed, 1000 + ep as u64);
-        let mut obs = env.reset(&mut rng);
-        for _ in 0..steps {
-            let t = policy.obs_tensor(&obs, 1);
-            let mut a = policy.act_batch(&t, ActMode::Deterministic).data;
-            if !sanitize_action(&mut a) {
-                return None; // crash ⇒ the paper scores the run as 0
-            }
-            for _ in 0..repeat {
-                let (o, r) = env.step(&a);
-                obs = o;
-                totals[ep] += r as f64;
-            }
-        }
+        totals.extend(eval_lockstep(policy, cfg, &[ep as u64], eval_seed)?);
     }
     Some(totals.iter().sum::<f64>() / episodes as f64)
 }
@@ -158,32 +188,8 @@ pub fn evaluate_policy_batched(
     if episodes == 0 {
         return Some(0.0);
     }
-    let repeat = action_repeat(&cfg.task);
-    let steps = EPISODE_ENV_STEPS / repeat;
-    let obs_len = policy.obs_len();
-    let mut envs: Vec<Obs> = (0..episodes).map(|_| build_env(cfg)).collect();
-    let mut obs_flat = vec![0.0f32; episodes * obs_len];
-    for (ep, env) in envs.iter_mut().enumerate() {
-        let mut rng = Pcg64::seed_stream(eval_seed, 1000 + ep as u64);
-        let o = env.reset(&mut rng);
-        obs_flat[ep * obs_len..(ep + 1) * obs_len].copy_from_slice(&o);
-    }
-    let mut totals = vec![0.0f64; episodes];
-    for _ in 0..steps {
-        let t = policy.obs_tensor(&obs_flat, episodes);
-        let acts = policy.act_batch(&t, ActMode::Deterministic);
-        for (ep, env) in envs.iter_mut().enumerate() {
-            let mut a = acts.row(ep).to_vec();
-            if !sanitize_action(&mut a) {
-                return None;
-            }
-            for _ in 0..repeat {
-                let (o, r) = env.step(&a);
-                totals[ep] += r as f64;
-                obs_flat[ep * obs_len..(ep + 1) * obs_len].copy_from_slice(&o);
-            }
-        }
-    }
+    let ids: Vec<u64> = (0..episodes as u64).collect();
+    let totals = eval_lockstep(policy, cfg, &ids, eval_seed)?;
     Some(totals.iter().sum::<f64>() / episodes as f64)
 }
 
@@ -202,93 +208,178 @@ fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u
 
 /// Train one agent per `cfg`; fully deterministic in `cfg.seed`.
 pub fn train(cfg: &RunConfig) -> TrainOutcome {
-    let t0 = std::time::Instant::now();
-    let repeat = action_repeat(&cfg.task);
-    let mut env = build_env(cfg);
-    let act_dim = env.act_dim();
-    let mut rng = Pcg64::seed_stream(cfg.seed, 7);
+    let venv = VecEnv::new(cfg, cfg.num_envs.max(1));
+    let agent = build_agent(cfg, venv.obs_len(), venv.act_dim());
+    train_agent(cfg, venv, agent)
+}
 
-    let mut obs = env.reset(&mut rng);
-    let obs_shape: Vec<usize> = if cfg.pixels {
-        vec![cfg.frame_stack * 3, cfg.image_size, cfg.image_size]
+/// The collector/learner loop over a pre-built agent — the seam the
+/// crash-path tests use to inject poisoned weights.
+fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainOutcome {
+    let t0 = Instant::now();
+    let n = venv.num_envs();
+    let repeat = venv.action_repeat();
+    let obs_len = venv.obs_len();
+    let act_dim = venv.act_dim();
+    let eval_every = cfg.eval_every.max(1);
+    let mut rng = Pcg64::seed_stream(cfg.seed, 7);
+    // Per-env streams (resets + seed actions + exploration noise) for
+    // n > 1. n == 1 keeps the legacy layout — shared `rng` plus the
+    // agent's own noise stream — for bitwise compatibility with the
+    // original single-env trainer (see the module docs).
+    let mut env_rngs: Vec<Pcg64> = if n > 1 {
+        (0..n).map(|i| Pcg64::seed_stream(cfg.seed, ENV_STREAM_BASE + i as u64)).collect()
     } else {
-        vec![obs.len()]
+        Vec::new()
     };
-    let mut agent = build_agent(cfg, obs.len(), act_dim);
+
+    let mut obs_flat = vec![0.0f32; n * obs_len];
+    for i in 0..n {
+        let r = if n == 1 { &mut rng } else { &mut env_rngs[i] };
+        venv.reset_into(i, r, &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
+    }
     let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
-    let mut replay = ReplayBuffer::new(cfg.replay_capacity, &obs_shape, act_dim, storage);
+    let mut replay = ReplayBuffer::new(cfg.replay_capacity, venv.obs_shape(), act_dim, storage);
 
     let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));
     let mut grad_hist = LogHistogram::new(-12, 4, 2);
+    // probe schedule, consumed front to back (no per-step scan)
     let probe_at: Vec<usize> = (1..=3).map(|i| cfg.steps * i / 4).collect();
+    let mut next_probe = 0usize;
 
     let episode_steps = EPISODE_ENV_STEPS / repeat;
-    let mut ep_step = 0usize;
+    let mut ep_step = vec![0usize; n];
     let mut crashed = false;
     let mut skipped = 0u64;
 
-    for step in 0..cfg.steps {
-        // -- act ---------------------------------------------------------
-        let mut a = if step < cfg.seed_steps {
-            (0..act_dim).map(|_| rng.uniform_in(-1.0, 1.0)).collect::<Vec<f32>>()
+    // collector staging buffers + the learner's reusable sample batch
+    let mut next_flat = vec![0.0f32; n * obs_len];
+    let mut rew_buf = vec![0.0f32; n];
+    let done_buf = vec![false; n]; // dm_control time limits are not true terminals
+    let mut batch_buf = Batch::default();
+    let mut obs_stage = Tensor::default();
+
+    let mut updates_done = 0u64;
+    let mut collect_secs = 0.0f64;
+    let mut update_secs = 0.0f64;
+
+    let mut step = 0usize;
+    'train: while step < cfg.steps {
+        // round size: up to one transition per env stream, clipped so a
+        // round never straddles the seed-phase or an eval boundary
+        let mut k = n.min(cfg.steps - step);
+        if step < cfg.seed_steps {
+            k = k.min(cfg.seed_steps - step);
+        }
+        k = k.min((step / eval_every + 1) * eval_every - step);
+
+        // -- collect: one shared forward drives k env streams ----------
+        let tc = Instant::now();
+        let mut acts = if step < cfg.seed_steps {
+            let mut t = Tensor::zeros(&[k, act_dim]);
+            for i in 0..k {
+                let r = if n == 1 { &mut rng } else { &mut env_rngs[i] };
+                for v in t.row_mut(i) {
+                    *v = r.uniform_in(-1.0, 1.0);
+                }
+            }
+            t
         } else {
-            match agent.act(&obs, true) {
+            let obs_t = stage_obs(&mut obs_stage, &obs_flat[..k * obs_len], k, venv.obs_shape());
+            let a = if n == 1 {
+                agent.act_batch(obs_t, true)
+            } else {
+                agent.act_batch_envs(obs_t, &mut env_rngs[..k])
+            };
+            match a {
                 Some(a) => a,
                 None => {
                     crashed = true;
-                    break;
+                    collect_secs += tc.elapsed().as_secs_f64();
+                    break 'train;
                 }
             }
         };
-        if !sanitize_action(&mut a) {
-            crashed = true;
-            break;
+        for i in 0..k {
+            if !sanitize_action(acts.row_mut(i)) {
+                crashed = true;
+            }
         }
-        let mut rew = 0.0f32;
-        let mut next_obs = obs.clone();
-        for _ in 0..repeat {
-            let (o, r) = env.step(&a);
-            next_obs = o;
-            rew += r;
+        if crashed {
+            collect_secs += tc.elapsed().as_secs_f64();
+            break 'train;
         }
-        ep_step += 1;
-        let done = ep_step >= episode_steps;
-        // dm_control time limits are not true terminals: not_done stays 1
-        replay.push(&obs, &a, rew, &next_obs, false);
-        obs = next_obs;
-        if done {
-            obs = env.reset(&mut rng);
-            ep_step = 0;
+        for i in 0..k {
+            rew_buf[i] =
+                venv.step_into(i, acts.row(i), &mut next_flat[i * obs_len..(i + 1) * obs_len]);
+            ep_step[i] += 1;
         }
+        replay.push_batch(
+            k,
+            &obs_flat[..k * obs_len],
+            &acts.data,
+            &rew_buf[..k],
+            &next_flat[..k * obs_len],
+            &done_buf[..k],
+        );
+        obs_flat[..k * obs_len].copy_from_slice(&next_flat[..k * obs_len]);
+        for i in 0..k {
+            if ep_step[i] >= episode_steps {
+                let r = if n == 1 { &mut rng } else { &mut env_rngs[i] };
+                venv.reset_into(i, r, &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
+                ep_step[i] = 0;
+            }
+        }
+        collect_secs += tc.elapsed().as_secs_f64();
 
-        // -- update ------------------------------------------------------
-        if step >= cfg.seed_steps && replay.len() >= cfg.batch {
-            if probe_at.contains(&step) {
-                agent.grad_probe = Some(Vec::new());
+        // -- update: one gradient step per collected transition --------
+        if step >= cfg.seed_steps {
+            let tu = Instant::now();
+            for j in 0..k {
+                let s = step + j;
+                // warm-up gate, per transition so update counts stay
+                // num_envs-invariant: the update for transition s runs
+                // only once the per-step trainer would have had >= batch
+                // transitions (it had min(s + 1, len) at step s)
+                if (s + 1).min(replay.len()) < cfg.batch {
+                    continue;
+                }
+                // advance past probe points that never saw an update
+                // (seed phase / replay warm-up)
+                while next_probe < probe_at.len() && probe_at[next_probe] < s {
+                    next_probe += 1;
+                }
+                if next_probe < probe_at.len() && probe_at[next_probe] == s {
+                    agent.grad_probe = Some(Vec::new());
+                    next_probe += 1;
+                }
+                if cfg.pixels {
+                    replay.sample_aug_into(cfg.batch, 2, &mut rng, &mut batch_buf);
+                } else {
+                    replay.sample_into(cfg.batch, &mut rng, &mut batch_buf);
+                }
+                let stats = agent.update(&batch_buf);
+                skipped = stats.skipped_steps;
+                updates_done += 1;
+                if let Some(probe) = agent.grad_probe.take() {
+                    grad_hist.record_all(&probe);
+                }
             }
-            let batch = if cfg.pixels {
-                replay.sample_aug(cfg.batch, 2, &mut rng)
-            } else {
-                replay.sample(cfg.batch, &mut rng)
-            };
-            let stats = agent.update(&batch);
-            skipped = stats.skipped_steps;
-            if let Some(probe) = agent.grad_probe.take() {
-                grad_hist.record_all(&probe);
-            }
+            update_secs += tu.elapsed().as_secs_f64();
         }
+        step += k;
 
         // -- eval --------------------------------------------------------
-        if (step + 1) % cfg.eval_every == 0 || step + 1 == cfg.steps {
+        if step % eval_every == 0 || step == cfg.steps {
             let score = if agent.crashed || crashed {
                 0.0
             } else {
                 evaluate(&mut agent, cfg, cfg.eval_episodes, cfg.seed ^ 0x5EED)
             };
-            eval_curve.push(((step + 1) * repeat) as f64, score);
+            eval_curve.push((step * repeat) as f64, score);
             if agent.crashed {
                 crashed = true;
-                break;
+                break 'train;
             }
         }
     }
@@ -306,6 +397,8 @@ pub fn train(cfg: &RunConfig) -> TrainOutcome {
         grad_hist,
         wall_secs: t0.elapsed().as_secs_f64(),
         skipped_steps: skipped,
+        collect_steps_per_sec: if collect_secs > 0.0 { step as f64 / collect_secs } else { 0.0 },
+        updates_per_sec: if update_secs > 0.0 { updates_done as f64 / update_secs } else { 0.0 },
         policy: Some(agent.policy()),
     }
 }
@@ -361,6 +454,8 @@ mod tests {
         assert!(!out.eval_curve.points.is_empty());
         assert!(out.final_score >= 0.0);
         assert!(out.grad_hist.total() > 0, "grad probe must fire");
+        assert!(out.collect_steps_per_sec > 0.0);
+        assert!(out.updates_per_sec > 0.0);
     }
 
     #[test]
@@ -381,6 +476,103 @@ mod tests {
         cfg2.seed = 1;
         let c = train(&cfg2);
         assert_ne!(a.eval_curve.points, c.eval_curve.points);
+    }
+
+    #[test]
+    fn vectorized_runs_are_deterministic() {
+        // two num_envs=4 runs must match exactly; a different seed must not
+        let mut cfg = quick_cfg();
+        cfg.num_envs = 4;
+        let a = train(&cfg);
+        let b = train(&cfg);
+        assert!(!a.crashed);
+        assert_eq!(a.eval_curve.points, b.eval_curve.points, "N=4 must be deterministic");
+        let mut cfg2 = cfg.clone();
+        cfg2.seed = 3;
+        let c = train(&cfg2);
+        assert_ne!(a.eval_curve.points, c.eval_curve.points);
+    }
+
+    #[test]
+    fn vectorized_eval_grid_matches_single_env() {
+        // rounds split at eval boundaries, so the eval x-grid (and the
+        // number of updates implied by 1-update-per-transition) is
+        // identical for every num_envs
+        let mut c1 = quick_cfg();
+        c1.preset = "fp16_ours".into();
+        let mut c4 = c1.clone();
+        c4.num_envs = 4;
+        let a = train(&c1);
+        let b = train(&c4);
+        let xs = |o: &TrainOutcome| o.eval_curve.points.iter().map(|p| p.0).collect::<Vec<_>>();
+        assert_eq!(xs(&a), xs(&b), "same eval step grid regardless of num_envs");
+    }
+
+    #[test]
+    fn vectorized_num_envs_not_dividing_steps() {
+        // steps % num_envs != 0 and eval boundaries mid-round: the final
+        // partial round must still stop exactly at cfg.steps
+        let mut cfg = quick_cfg();
+        cfg.num_envs = 7;
+        cfg.steps = 100;
+        cfg.eval_every = 30;
+        let out = train(&cfg);
+        assert!(!out.crashed);
+        let repeat = crate::envs::action_repeat(&cfg.task);
+        assert_eq!(
+            out.eval_curve.points.last().unwrap().0,
+            (cfg.steps * repeat) as f64,
+            "final eval lands exactly on cfg.steps"
+        );
+    }
+
+    #[test]
+    fn crash_mid_training_scores_zero_and_pads_curve() {
+        // the paper's crash accounting: a policy emitting a non-finite
+        // action mid-training scores 0 from then on and the eval curve
+        // is padded out to the full training length
+        let cfg = quick_cfg();
+        let venv = VecEnv::new(&cfg, 1);
+        let mut agent = build_agent(&cfg, venv.obs_len(), venv.act_dim());
+        for prm in agent.actor.params_mut() {
+            for w in prm.w.iter_mut() {
+                *w = f32::NAN;
+            }
+        }
+        let out = train_agent(&cfg, venv, agent);
+        assert!(out.crashed, "poisoned actor must crash the run");
+        assert_eq!(out.final_score, 0.0);
+        let repeat = crate::envs::action_repeat(&cfg.task);
+        let last = out.eval_curve.points.last().unwrap();
+        assert_eq!(last.0, (cfg.steps * repeat) as f64, "curve padded to full length");
+        assert_eq!(last.1, 0.0, "crashed runs score 0 from then on");
+        // the crash fired at the first policy action (seed phase ends at
+        // 40, eval_every 60): no pre-crash eval point exists
+        assert_eq!(out.eval_curve.points.len(), 1);
+    }
+
+    #[test]
+    fn crash_after_an_eval_keeps_earlier_scores() {
+        // crash later than the first eval: the pre-crash point survives
+        // and the padding point is appended after it
+        let mut cfg = quick_cfg();
+        cfg.seed_steps = 70; // first eval (step 60) happens pre-crash
+        let venv = VecEnv::new(&cfg, 1);
+        let mut agent = build_agent(&cfg, venv.obs_len(), venv.act_dim());
+        for prm in agent.actor.params_mut() {
+            for w in prm.w.iter_mut() {
+                *w = f32::NAN;
+            }
+        }
+        let out = train_agent(&cfg, venv, agent);
+        assert!(out.crashed);
+        assert_eq!(out.final_score, 0.0);
+        let repeat = crate::envs::action_repeat(&cfg.task);
+        assert_eq!(out.eval_curve.points.len(), 2);
+        // eval at step 60 ran the (NaN) policy deterministically -> the
+        // evaluator flags the crash and scores it 0
+        assert_eq!(out.eval_curve.points[0], ((60 * repeat) as f64, 0.0));
+        assert_eq!(out.eval_curve.points[1], (((cfg.steps) * repeat) as f64, 0.0));
     }
 
     #[test]
@@ -410,5 +602,23 @@ mod tests {
         cfg.eval_every = 50;
         let out = train(&cfg);
         assert!(!out.crashed);
+    }
+
+    #[test]
+    fn vectorized_pixel_run_smoke() {
+        let mut cfg = quick_cfg();
+        cfg.pixels = true;
+        cfg.image_size = 17;
+        cfg.filters = 4;
+        cfg.feature_dim = 8;
+        cfg.hidden = 16;
+        cfg.steps = 40;
+        cfg.seed_steps = 20;
+        cfg.batch = 4;
+        cfg.eval_every = 40;
+        cfg.num_envs = 3;
+        let out = train(&cfg);
+        assert!(!out.crashed);
+        assert!(!out.eval_curve.points.is_empty());
     }
 }

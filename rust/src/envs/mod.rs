@@ -11,16 +11,20 @@
 //! planar locomotion surrogates instead of full contact dynamics.
 //!
 //! Every task also renders itself to small RGB images (see [`render`])
-//! for the RL-from-pixels setting of paper §4.6.
+//! for the RL-from-pixels setting of paper §4.6, and [`VecEnv`] steps
+//! any number of instances (state- or pixel-observed) in lockstep for
+//! vectorized collection and batched evaluation.
 
 mod ballcup;
 mod cartpole;
 mod cheetah;
 mod finger;
 mod pendulum;
+mod pixels;
 mod reacher;
 pub mod render;
 mod tolerance;
+mod vec;
 mod walker;
 
 pub use ballcup::BallInCup;
@@ -28,8 +32,10 @@ pub use cartpole::CartpoleSwingup;
 pub use cheetah::CheetahRun;
 pub use finger::FingerSpin;
 pub use pendulum::PendulumSwingup;
+pub use pixels::PixelEnvAdapter;
 pub use reacher::ReacherEasy;
 pub use tolerance::tolerance;
+pub use vec::VecEnv;
 pub use walker::WalkerWalk;
 
 use crate::rngs::Pcg64;

@@ -1,8 +1,9 @@
 //! Pixel observation adapter: renders the env state to RGB and maintains
-//! the DRQ-style frame stack (3 frames × 3 channels).
+//! the DRQ-style frame stack (3 frames × 3 channels). Lives in `envs`
+//! so [`super::VecEnv`] can treat state and pixel streams uniformly.
 
-use crate::envs::render::Canvas;
-use crate::envs::Env;
+use super::render::Canvas;
+use super::Env;
 
 /// Wraps an [`Env`] to produce stacked-frame pixel observations
 /// `[stack*3, side, side]` flattened.

@@ -1,0 +1,267 @@
+//! Vectorized environments: a lockstep vector of per-env instances that
+//! the collector/learner trainer and the batched evaluator share.
+//!
+//! A [`VecEnv`] owns `n` independent env streams (state- or pixel-
+//! observed — it subsumes the state/pixels dispatch that used to be
+//! duplicated across the trainer and the two evaluators) and steps them
+//! in lockstep: one batched policy forward produces one action row per
+//! stream, and every stream advances by one agent step (action repeat
+//! applied) per round. Episodes are fixed-length (dm_control style), so
+//! lockstep is exact — no early termination, no ragged batches.
+//!
+//! RNG discipline: a `VecEnv` owns no RNG state. Every reset draws from
+//! a caller-supplied [`Pcg64`], so the caller decides the stream layout
+//! (the trainer keeps the legacy shared stream at `num_envs = 1` for
+//! bitwise compatibility and independent per-env streams otherwise; the
+//! evaluator seeds one stream per episode).
+
+use super::pixels::PixelEnvAdapter;
+use super::{action_repeat, make_env, sanitize_action, Env};
+use crate::config::RunConfig;
+use crate::nn::Tensor;
+use crate::rngs::Pcg64;
+
+/// One environment stream: a raw state-observed [`Env`] or a pixel
+/// adapter around it.
+enum EnvObs {
+    State(Box<dyn Env>),
+    Pixels(PixelEnvAdapter),
+}
+
+impl EnvObs {
+    fn build(cfg: &RunConfig) -> EnvObs {
+        let env = make_env(&cfg.task).unwrap_or_else(|| panic!("unknown task {}", cfg.task));
+        if cfg.pixels {
+            EnvObs::Pixels(PixelEnvAdapter::new(env, cfg.image_size, cfg.frame_stack))
+        } else {
+            EnvObs::State(env)
+        }
+    }
+
+    fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
+        match self {
+            EnvObs::State(e) => e.reset(rng),
+            EnvObs::Pixels(p) => p.reset(rng),
+        }
+    }
+
+    fn step(&mut self, a: &[f32]) -> (Vec<f32>, f32) {
+        match self {
+            EnvObs::State(e) => e.step(a),
+            EnvObs::Pixels(p) => p.step(a),
+        }
+    }
+
+    fn act_dim(&self) -> usize {
+        match self {
+            EnvObs::State(e) => e.act_dim(),
+            EnvObs::Pixels(p) => p.env.act_dim(),
+        }
+    }
+}
+
+/// A lockstep vector of `n` env streams sharing one task configuration.
+pub struct VecEnv {
+    envs: Vec<EnvObs>,
+    obs_shape: Vec<usize>,
+    obs_len: usize,
+    act_dim: usize,
+    repeat: usize,
+}
+
+impl VecEnv {
+    /// Build `n` independent instances of the configured task. Panics on
+    /// unknown task names — call sites sit behind
+    /// [`RunConfig::validate`].
+    pub fn new(cfg: &RunConfig, n: usize) -> VecEnv {
+        // env construction draws no RNG, so the dims probe doubles as
+        // stream 0 instead of being thrown away
+        let probe = EnvObs::build(cfg);
+        let act_dim = probe.act_dim();
+        let obs_shape: Vec<usize> = if cfg.pixels {
+            vec![cfg.frame_stack * 3, cfg.image_size, cfg.image_size]
+        } else {
+            match &probe {
+                EnvObs::State(e) => vec![e.obs_dim()],
+                EnvObs::Pixels(_) => unreachable!(),
+            }
+        };
+        let obs_len = obs_shape.iter().product();
+        let mut envs = Vec::with_capacity(n);
+        if n > 0 {
+            envs.push(probe);
+            envs.extend((1..n).map(|_| EnvObs::build(cfg)));
+        }
+        VecEnv { envs, obs_shape, obs_len, act_dim, repeat: action_repeat(&cfg.task) }
+    }
+
+    pub fn num_envs(&self) -> usize {
+        self.envs.len()
+    }
+
+    /// Flat f32 length of one observation (states: `obs_dim`; pixels:
+    /// `stack·3·side²`).
+    pub fn obs_len(&self) -> usize {
+        self.obs_len
+    }
+
+    pub fn act_dim(&self) -> usize {
+        self.act_dim
+    }
+
+    /// Per-observation shape (`[D]` states, `[C, H, W]` pixels) — what
+    /// the replay buffer stores and the agent consumes.
+    pub fn obs_shape(&self) -> &[usize] {
+        &self.obs_shape
+    }
+
+    /// The task's paper action repeat; one agent step = `repeat` raw
+    /// env steps.
+    pub fn action_repeat(&self) -> usize {
+        self.repeat
+    }
+
+    /// Reset env `i` with the caller's RNG, writing its observation into
+    /// `out` (length [`VecEnv::obs_len`]).
+    pub fn reset_into(&mut self, i: usize, rng: &mut Pcg64, out: &mut [f32]) {
+        let o = self.envs[i].reset(rng);
+        out.copy_from_slice(&o);
+    }
+
+    /// Advance env `i` one agent step (action repeat applied), writing
+    /// the next observation into `out`; returns the reward summed over
+    /// the repeated raw steps (the trainer's transition reward). Only
+    /// the final repeated step's observation survives, so it alone is
+    /// copied out.
+    pub fn step_into(&mut self, i: usize, a: &[f32], out: &mut [f32]) -> f32 {
+        let mut rew = 0.0f32;
+        let mut last = Vec::new();
+        for _ in 0..self.repeat {
+            let (o, r) = self.envs[i].step(a);
+            last = o;
+            rew += r;
+        }
+        out.copy_from_slice(&last);
+        rew
+    }
+
+    /// Lockstep evaluation step: sanitize row `i` of `acts` in place,
+    /// advance env `i` one agent step with it, overwrite row `i` of
+    /// `obs_flat` with the next observation and accumulate each raw
+    /// step's reward into `totals[i]`. Returns `false` as soon as any
+    /// action row is non-finite (the paper's crash condition) — envs
+    /// before that row have already stepped, matching the reference
+    /// evaluator's early-out.
+    pub fn step_lockstep(
+        &mut self,
+        acts: &mut Tensor,
+        obs_flat: &mut [f32],
+        totals: &mut [f64],
+    ) -> bool {
+        let n = self.envs.len();
+        assert_eq!(acts.rows(), n);
+        assert_eq!(obs_flat.len(), n * self.obs_len);
+        assert_eq!(totals.len(), n);
+        for i in 0..n {
+            if !sanitize_action(acts.row_mut(i)) {
+                return false;
+            }
+            let mut last = Vec::new();
+            for _ in 0..self.repeat {
+                let (o, r) = self.envs[i].step(acts.row(i));
+                totals[i] += r as f64;
+                last = o;
+            }
+            obs_flat[i * self.obs_len..(i + 1) * self.obs_len].copy_from_slice(&last);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::SUPPORTED_TASKS;
+
+    fn cfg(task: &str) -> RunConfig {
+        RunConfig { task: task.into(), ..Default::default() }
+    }
+
+    #[test]
+    fn builds_every_supported_task() {
+        for task in SUPPORTED_TASKS {
+            let mut v = VecEnv::new(&cfg(task), 2);
+            assert_eq!(v.num_envs(), 2);
+            assert_eq!(v.obs_shape().iter().product::<usize>(), v.obs_len());
+            let mut rng = Pcg64::seed(1);
+            let mut obs = vec![0.0f32; v.obs_len()];
+            v.reset_into(0, &mut rng, &mut obs);
+            assert!(obs.iter().all(|x| x.is_finite()), "{task}");
+        }
+    }
+
+    #[test]
+    fn streams_match_raw_envs_in_lockstep() {
+        // Each VecEnv stream must be indistinguishable from a standalone
+        // env driven with the same RNG stream and actions.
+        let c = cfg("cartpole_swingup");
+        let n = 3;
+        let mut v = VecEnv::new(&c, n);
+        let mut raw: Vec<Box<dyn Env>> =
+            (0..n).map(|_| make_env(&c.task).unwrap()).collect();
+        let repeat = v.action_repeat();
+        let mut obs = vec![0.0f32; v.obs_len()];
+        for i in 0..n {
+            let mut rng = Pcg64::seed_stream(9, i as u64);
+            v.reset_into(i, &mut rng, &mut obs);
+            let want = raw[i].reset(&mut Pcg64::seed_stream(9, i as u64));
+            assert_eq!(obs, want, "env {i} reset");
+            let a = vec![0.25f32; v.act_dim()];
+            let rew = v.step_into(i, &a, &mut obs);
+            let mut want_rew = 0.0f32;
+            let mut want_obs = Vec::new();
+            for _ in 0..repeat {
+                let (o, r) = raw[i].step(&a);
+                want_obs = o;
+                want_rew += r;
+            }
+            assert_eq!(obs, want_obs, "env {i} step obs");
+            assert_eq!(rew, want_rew, "env {i} step reward");
+        }
+    }
+
+    #[test]
+    fn pixel_streams_have_stacked_shape() {
+        let mut c = cfg("pendulum_swingup");
+        c.pixels = true;
+        c.image_size = 12;
+        c.frame_stack = 3;
+        let mut v = VecEnv::new(&c, 2);
+        assert_eq!(v.obs_shape(), &[9, 12, 12]);
+        assert_eq!(v.obs_len(), 9 * 12 * 12);
+        let mut rng = Pcg64::seed(4);
+        let mut obs = vec![0.0f32; v.obs_len()];
+        v.reset_into(1, &mut rng, &mut obs);
+        assert!(obs.iter().all(|x| (0.0..=1.0).contains(x)));
+    }
+
+    #[test]
+    fn lockstep_flags_nonfinite_actions() {
+        let c = cfg("pendulum_swingup");
+        let mut v = VecEnv::new(&c, 2);
+        let mut rngs: Vec<Pcg64> = (0..2).map(|i| Pcg64::seed_stream(1, i)).collect();
+        let mut obs = vec![0.0f32; 2 * v.obs_len()];
+        for i in 0..2 {
+            let (lo, hi) = (i * v.obs_len(), (i + 1) * v.obs_len());
+            let mut row = vec![0.0f32; v.obs_len()];
+            v.reset_into(i, &mut rngs[i], &mut row);
+            obs[lo..hi].copy_from_slice(&row);
+        }
+        let mut totals = vec![0.0f64; 2];
+        let mut good = Tensor::from_vec(&[2, 1], vec![0.1, -0.1]);
+        assert!(v.step_lockstep(&mut good, &mut obs, &mut totals));
+        assert!(totals.iter().all(|&t| t >= 0.0));
+        let mut bad = Tensor::from_vec(&[2, 1], vec![0.1, f32::NAN]);
+        assert!(!v.step_lockstep(&mut bad, &mut obs, &mut totals));
+    }
+}

@@ -52,9 +52,9 @@
 //! | [`lowp`] | precision formats + quantization policy |
 //! | [`sac`] | the agent (training) and [`sac::Policy`] snapshots (inference) |
 //! | [`optim`] | Adam/hAdam, loss scaling, Kahan accumulators |
-//! | [`envs`] | the continuous-control task suite |
-//! | [`replay`] | replay buffer (f16/f32 storage) |
-//! | [`coordinator`] | train loop + batched deterministic eval |
+//! | [`envs`] | the continuous-control task suite + lockstep [`envs::VecEnv`] |
+//! | [`replay`] | replay buffer (f16/f32 storage, batch push / allocation-free sampling) |
+//! | [`coordinator`] | collector/learner loop over vectorized envs + batched deterministic eval |
 //! | [`serve`] | micro-batching policy server over [`serve::PolicyBackend`] |
 //! | [`runtime`] | PJRT artifact execution (AOT path) |
 //! | [`experiments`] / [`telemetry`] | paper exhibits + CSV/JSON reporting |
@@ -66,8 +66,10 @@
 //! cargo run --release -- train task=cartpole_swingup preset=fp16_ours
 //! cargo run --release -- exp fig3      # regenerate the ablation data
 //! cargo run --release -- serve engine=native   # micro-batching policy server
+//! cargo run --release -- train task=cheetah_run num_envs=8   # vectorized collection
 //! cargo bench --bench gemm_blocked     # GEMM backend vs seed baseline
 //! cargo bench --bench serve_throughput # single vs micro-batched serving
+//! cargo bench --bench collect_throughput # env-steps/sec vs num_envs
 //! python -m pytest python/tests -q     # L1/L2 kernel + model tests
 //! ```
 

@@ -46,6 +46,8 @@ fn print_help() {
 
 USAGE:
   lprl train [--config f.toml] [key=value ...]   e.g. task=cheetah_run preset=fp16_ours seed=1
+       num_envs=N collects from N lockstep env streams (one shared
+       forward per round; num_envs=1 == the reference single-env trainer)
   lprl exp <name> [key=value ...]                name: fig1..fig12, table2/3/7/10/11, all
   lprl serve [engine=native|pjrt] [key=value ...]
        native: task= preset= hidden= seed= train_steps=    (policy source)
@@ -75,8 +77,8 @@ fn cmd_train(kv: &[(String, String)]) -> anyhow::Result<()> {
     // inside a run with a silently defaulted action repeat
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     eprintln!(
-        "training {} / {} (seed {}, {} steps, hidden {}, batch {})",
-        cfg.task, cfg.preset, cfg.seed, cfg.steps, cfg.hidden, cfg.batch
+        "training {} / {} (seed {}, {} steps, hidden {}, batch {}, num_envs {})",
+        cfg.task, cfg.preset, cfg.seed, cfg.steps, cfg.hidden, cfg.batch, cfg.num_envs
     );
     let out = train(&cfg);
     println!("task={} preset={} seed={}", cfg.task, cfg.preset, cfg.seed);
@@ -86,6 +88,10 @@ fn cmd_train(kv: &[(String, String)]) -> anyhow::Result<()> {
     println!(
         "final={:.1} crashed={} skipped_opt_steps={} wall={:.1}s",
         out.final_score, out.crashed, out.skipped_steps, out.wall_secs
+    );
+    println!(
+        "throughput: collect {:.0} steps/s ({} envs)  learner {:.1} updates/s",
+        out.collect_steps_per_sec, cfg.num_envs, out.updates_per_sec
     );
     let path = std::path::Path::new(&cfg.out_dir)
         .join("train")

@@ -131,67 +131,145 @@ impl ReplayBuffer {
         self.len = (self.len + 1).min(self.capacity);
     }
 
-    /// Sample a uniform minibatch.
+    /// Append `n` transitions from flat row-major chunks (transition `i`
+    /// occupies rows `i` of `obs`/`act`/`next_obs` and element `i` of
+    /// `rew`/`done`) — the vectorized-producer path: one call per
+    /// collect round, equivalent to `n` [`ReplayBuffer::push`] calls in
+    /// row order.
+    pub fn push_batch(
+        &mut self,
+        n: usize,
+        obs: &[f32],
+        act: &[f32],
+        rew: &[f32],
+        next_obs: &[f32],
+        done: &[bool],
+    ) {
+        assert_eq!(obs.len(), n * self.obs_dim);
+        assert_eq!(next_obs.len(), n * self.obs_dim);
+        assert_eq!(act.len(), n * self.act_dim);
+        assert_eq!(rew.len(), n);
+        assert_eq!(done.len(), n);
+        for i in 0..n {
+            self.push(
+                &obs[i * self.obs_dim..(i + 1) * self.obs_dim],
+                &act[i * self.act_dim..(i + 1) * self.act_dim],
+                rew[i],
+                &next_obs[i * self.obs_dim..(i + 1) * self.obs_dim],
+                done[i],
+            );
+        }
+    }
+
+    /// Sample a uniform minibatch (allocating convenience wrapper over
+    /// [`ReplayBuffer::sample_into`]).
     pub fn sample(&self, batch: usize, rng: &mut Pcg64) -> Batch {
+        let mut out = Batch::default();
+        self.sample_into(batch, rng, &mut out);
+        out
+    }
+
+    /// Allocation-free [`ReplayBuffer::sample`]: draws the identical
+    /// index sequence from `rng` and fills the caller-owned batch,
+    /// resizing its buffers only when the batch shape changes (i.e. on
+    /// first use) — the learner's steady-state path allocates nothing.
+    pub fn sample_into(&self, batch: usize, rng: &mut Pcg64, out: &mut Batch) {
         assert!(self.len > 0, "empty replay");
         let mut shape = vec![batch];
         shape.extend_from_slice(&self.obs_shape);
-        let mut obs = Tensor::zeros(&shape);
-        let mut next_obs = Tensor::zeros(&shape);
-        let mut act = Tensor::zeros(&[batch, self.act_dim]);
-        let mut rew = vec![0.0; batch];
-        let mut not_done = vec![0.0; batch];
+        ensure_shape(&mut out.obs, &shape);
+        ensure_shape(&mut out.next_obs, &shape);
+        ensure_shape(&mut out.act, &[batch, self.act_dim]);
+        out.rew.resize(batch, 0.0);
+        out.not_done.resize(batch, 0.0);
         for b in 0..batch {
             let i = rng.below(self.len);
-            self.obs.read(i * self.obs_dim, &mut obs.data[b * self.obs_dim..(b + 1) * self.obs_dim]);
+            self.obs
+                .read(i * self.obs_dim, &mut out.obs.data[b * self.obs_dim..(b + 1) * self.obs_dim]);
             self.next_obs.read(
                 i * self.obs_dim,
-                &mut next_obs.data[b * self.obs_dim..(b + 1) * self.obs_dim],
+                &mut out.next_obs.data[b * self.obs_dim..(b + 1) * self.obs_dim],
             );
-            self.act.read(i * self.act_dim, &mut act.data[b * self.act_dim..(b + 1) * self.act_dim]);
-            rew[b] = self.rew[i];
-            not_done[b] = self.not_done[i];
+            self.act.read(
+                i * self.act_dim,
+                &mut out.act.data[b * self.act_dim..(b + 1) * self.act_dim],
+            );
+            out.rew[b] = self.rew[i];
+            out.not_done[b] = self.not_done[i];
         }
-        Batch { obs, act, rew, next_obs, not_done }
     }
 
-    /// Sample with DRQ random-crop augmentation (pad-by-4 + crop back):
-    /// requires pixel observations `[C, H, W]`.
+    /// Sample with DRQ random-crop augmentation (allocating wrapper over
+    /// [`ReplayBuffer::sample_aug_into`]).
     pub fn sample_aug(&self, batch: usize, pad: usize, rng: &mut Pcg64) -> Batch {
-        let mut b = self.sample(batch, rng);
+        let mut out = Batch::default();
+        self.sample_aug_into(batch, pad, rng, &mut out);
+        out
+    }
+
+    /// Allocation-free sampling with DRQ random-crop augmentation
+    /// (pad-by-`pad` + crop back): requires pixel observations
+    /// `[C, H, W]`. The shifts run fully in place (see [`shift_image`]),
+    /// so the pixel learner's hot loop allocates nothing.
+    pub fn sample_aug_into(&self, batch: usize, pad: usize, rng: &mut Pcg64, out: &mut Batch) {
+        self.sample_into(batch, rng, out);
         assert_eq!(self.obs_shape.len(), 3, "augmentation needs [C,H,W] obs");
         let (c, h, w) = (self.obs_shape[0], self.obs_shape[1], self.obs_shape[2]);
-        for t in [&mut b.obs, &mut b.next_obs] {
+        for t in [&mut out.obs, &mut out.next_obs] {
             for bi in 0..batch {
                 let dx = rng.below(2 * pad + 1) as isize - pad as isize;
                 let dy = rng.below(2 * pad + 1) as isize - pad as isize;
                 shift_image(&mut t.data[bi * c * h * w..(bi + 1) * c * h * w], c, h, w, dx, dy);
             }
         }
-        b
+    }
+}
+
+fn ensure_shape(t: &mut Tensor, shape: &[usize]) {
+    if t.shape != shape {
+        *t = Tensor::zeros(shape);
     }
 }
 
 /// Shift an image by (dx, dy) with zero padding (equivalent to pad+crop).
+///
+/// Runs fully in place, row by row: destination rows are visited in the
+/// order that keeps every source row unread until it has been copied
+/// (bottom-up for downward shifts, top-down for upward), and the
+/// horizontal shift within a row is an overlapping `copy_within`
+/// (memmove). No scratch copy of the image is made, so DRQ augmentation
+/// does not allocate in the learner hot loop.
 fn shift_image(img: &mut [f32], c: usize, h: usize, w: usize, dx: isize, dy: isize) {
     if dx == 0 && dy == 0 {
         return;
     }
-    let orig = img.to_vec();
-    img.iter_mut().for_each(|v| *v = 0.0);
+    if dx.unsigned_abs() >= w || dy.unsigned_abs() >= h {
+        img.iter_mut().for_each(|v| *v = 0.0);
+        return;
+    }
+    // horizontal window: dst[dst_x..dst_x+len_x] <- src[src_x..src_x+len_x]
+    let (src_x, dst_x, len_x) = if dx >= 0 {
+        (0usize, dx as usize, w - dx as usize)
+    } else {
+        (dx.unsigned_abs(), 0usize, w - dx.unsigned_abs())
+    };
     for ch in 0..c {
-        for y in 0..h as isize {
-            let sy = y - dy;
+        let base = ch * h * w;
+        for yi in 0..h {
+            let y = if dy > 0 { h - 1 - yi } else { yi };
+            let sy = y as isize - dy;
+            let dst = base + y * w;
             if sy < 0 || sy >= h as isize {
+                img[dst..dst + w].iter_mut().for_each(|v| *v = 0.0);
                 continue;
             }
-            for x in 0..w as isize {
-                let sx = x - dx;
-                if sx < 0 || sx >= w as isize {
-                    continue;
-                }
-                img[ch * h * w + y as usize * w + x as usize] =
-                    orig[ch * h * w + sy as usize * w + sx as usize];
+            let src = base + sy as usize * w;
+            img.copy_within(src + src_x..src + src_x + len_x, dst + dst_x);
+            // zero the margin the horizontal shift exposed
+            if dx > 0 {
+                img[dst..dst + dst_x].iter_mut().for_each(|v| *v = 0.0);
+            } else if dx < 0 {
+                img[dst + len_x..dst + w].iter_mut().for_each(|v| *v = 0.0);
             }
         }
     }
@@ -259,6 +337,109 @@ mod tests {
         shift_image(&mut img, 1, 3, 3, 1, 0);
         assert_eq!(img[5], 1.0);
         assert_eq!(img[4], 0.0);
+    }
+
+    /// The original clone-based shift, kept as the test oracle for the
+    /// in-place implementation.
+    fn shift_image_reference(img: &mut [f32], c: usize, h: usize, w: usize, dx: isize, dy: isize) {
+        let orig = img.to_vec();
+        img.iter_mut().for_each(|v| *v = 0.0);
+        for ch in 0..c {
+            for y in 0..h as isize {
+                let sy = y - dy;
+                if sy < 0 || sy >= h as isize {
+                    continue;
+                }
+                for x in 0..w as isize {
+                    let sx = x - dx;
+                    if sx < 0 || sx >= w as isize {
+                        continue;
+                    }
+                    img[ch * h * w + y as usize * w + x as usize] =
+                        orig[ch * h * w + sy as usize * w + sx as usize];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inplace_shift_matches_clone_reference_for_all_offsets() {
+        let (c, h, w) = (2usize, 5usize, 7usize);
+        let mut rng = Pcg64::seed(11);
+        let base: Vec<f32> = (0..c * h * w).map(|_| rng.uniform_f32()).collect();
+        for dy in -6isize..=6 {
+            for dx in -8isize..=8 {
+                let mut got = base.clone();
+                let mut want = base.clone();
+                shift_image(&mut got, c, h, w, dx, dy);
+                shift_image_reference(&mut want, c, h, w, dx, dy);
+                assert_eq!(got, want, "dx={dx} dy={dy}");
+            }
+        }
+    }
+
+    #[test]
+    fn push_batch_matches_sequential_push() {
+        for storage in [Storage::F32, Storage::F16] {
+            let mut seq = ReplayBuffer::new(7, &[2], 1, storage); // capacity 7: wraps
+            let mut bat = ReplayBuffer::new(7, &[2], 1, storage);
+            let n = 10usize;
+            let obs: Vec<f32> = (0..2 * n).map(|i| i as f32 * 0.25).collect();
+            let next: Vec<f32> = (0..2 * n).map(|i| i as f32 * 0.25 + 1.0).collect();
+            let act: Vec<f32> = (0..n).map(|i| i as f32 * 0.1 - 0.4).collect();
+            let rew: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let done: Vec<bool> = (0..n).map(|i| i % 3 == 0).collect();
+            for i in 0..n {
+                seq.push(&obs[2 * i..2 * i + 2], &act[i..i + 1], rew[i], &next[2 * i..2 * i + 2], done[i]);
+            }
+            bat.push_batch(n, &obs, &act, &rew, &next, &done);
+            assert_eq!(seq.len(), bat.len());
+            let mut r1 = Pcg64::seed(5);
+            let mut r2 = Pcg64::seed(5);
+            let a = seq.sample(16, &mut r1);
+            let b = bat.sample(16, &mut r2);
+            assert_eq!(a.obs.data, b.obs.data);
+            assert_eq!(a.next_obs.data, b.next_obs.data);
+            assert_eq!(a.act.data, b.act.data);
+            assert_eq!(a.rew, b.rew);
+            assert_eq!(a.not_done, b.not_done);
+        }
+    }
+
+    #[test]
+    fn sample_into_reuses_buffers_and_matches_sample() {
+        let mut buf = ReplayBuffer::new(50, &[2], 1, Storage::F16);
+        fill(&mut buf, 30);
+        let mut r1 = Pcg64::seed(8);
+        let mut r2 = Pcg64::seed(8);
+        let want = buf.sample(12, &mut r1);
+        let mut got = Batch::default();
+        buf.sample_into(12, &mut r2, &mut got);
+        assert_eq!(want.obs.data, got.obs.data);
+        assert_eq!(want.rew, got.rew);
+        // second fill into the same batch: no reallocation of the tensor
+        // buffers (same shape), identical rng stream continuation
+        let ptr = got.obs.data.as_ptr();
+        buf.sample_into(12, &mut r2, &mut got);
+        assert_eq!(ptr, got.obs.data.as_ptr(), "steady state must not reallocate");
+        let again = buf.sample(12, &mut r1);
+        assert_eq!(again.obs.data, got.obs.data);
+    }
+
+    #[test]
+    fn sample_aug_into_matches_sample_aug() {
+        let mut buf = ReplayBuffer::new(20, &[1, 6, 6], 1, Storage::F32);
+        let img: Vec<f32> = (0..36).map(|i| i as f32 / 36.0).collect();
+        for _ in 0..8 {
+            buf.push(&img, &[0.2], 0.5, &img, false);
+        }
+        let mut r1 = Pcg64::seed(9);
+        let mut r2 = Pcg64::seed(9);
+        let want = buf.sample_aug(5, 2, &mut r1);
+        let mut got = Batch::default();
+        buf.sample_aug_into(5, 2, &mut r2, &mut got);
+        assert_eq!(want.obs.data, got.obs.data);
+        assert_eq!(want.next_obs.data, got.next_obs.data);
     }
 
     #[test]

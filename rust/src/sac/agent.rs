@@ -28,8 +28,10 @@ use crate::optim::{coerce_nonfinite, Adam, AdamConfig, GradScaler, ScaledKahanEm
 use crate::rngs::Pcg64;
 
 /// A replay minibatch. `obs`/`next_obs` are `[B, D]` states or
-/// `[B, C, H, W]` images (when the agent has an encoder).
-#[derive(Debug, Clone)]
+/// `[B, C, H, W]` images (when the agent has an encoder). `Default`
+/// gives an empty staging batch for the allocation-free
+/// `ReplayBuffer::sample_into` path (filled/resized on first use).
+#[derive(Debug, Clone, Default)]
 pub struct Batch {
     pub obs: Tensor,
     pub act: Tensor,
@@ -399,6 +401,32 @@ impl SacAgent {
         } else {
             TanhGaussian::mean_action(&head, p)
         };
+        self.guard_actions(a)
+    }
+
+    /// Stochastic batched action selection over vectorized env streams:
+    /// one shared forward for all rows, with row `i`'s exploration noise
+    /// drawn from `rngs[i]` instead of the agent's own stream (the same
+    /// noise layout as `ActMode::SamplePerEnv`). Each env stream
+    /// therefore owns an independent noise sequence, which makes an
+    /// N-env rollout bitwise reproducible and row results invariant to
+    /// how streams are batched (the GEMM backend accumulates rows
+    /// independently). Crash semantics match [`SacAgent::act_batch`].
+    pub fn act_batch_envs(&mut self, obs: &Tensor, rngs: &mut [Pcg64]) -> Option<Tensor> {
+        let p = self.compute;
+        // obs is [B, D] or [B, C, H, W]: the batch is the leading dim.
+        // Drawing (and shape-checking) the noise first keeps a
+        // mismatched rngs slice from wasting the forward.
+        let eps = super::snapshot::per_env_eps(obs.shape[0], self.cfg.act_dim, rngs);
+        let feat = self.encode(obs, p);
+        let head = self.actor.forward(&feat, p);
+        let a = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p).a;
+        self.guard_actions(a)
+    }
+
+    /// Shared crash guard: a non-finite action flags the agent as
+    /// crashed (the paper's accounting) and yields `None`.
+    fn guard_actions(&mut self, a: Tensor) -> Option<Tensor> {
         if a.has_nonfinite() {
             self.crashed = true;
             return None;
@@ -658,6 +686,32 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "row {r}");
             }
         }
+    }
+
+    #[test]
+    fn act_batch_envs_matches_policy_per_env_sampling() {
+        // The live agent's per-env sampling path and a Policy snapshot's
+        // SamplePerEnv mode run the same weights and the same per-row
+        // noise streams — their actions must agree bitwise, and the
+        // agent's own RNG must stay untouched.
+        use crate::sac::ActMode;
+        let cfg = SacConfig::states(5, 2, 24);
+        let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 8);
+        let policy = agent.policy();
+        let before = agent.rng.clone().next_u64();
+        let n = 4;
+        let mut obs = Tensor::zeros(&[n, 5]);
+        Pcg64::seed(6).normal_fill(&mut obs.data);
+        let mut r1: Vec<Pcg64> = (0..n).map(|i| Pcg64::seed_stream(3, i as u64)).collect();
+        let mut r2 = r1.clone();
+        let live = agent.act_batch_envs(&obs, &mut r1).unwrap();
+        let snap = policy.act_batch(&obs, ActMode::SamplePerEnv(&mut r2));
+        assert!(live.data.iter().zip(&snap.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(agent.rng.clone().next_u64(), before, "agent RNG untouched");
+        // deterministic in the streams: fresh clones reproduce exactly
+        let mut r3: Vec<Pcg64> = (0..n).map(|i| Pcg64::seed_stream(3, i as u64)).collect();
+        let again = agent.act_batch_envs(&obs, &mut r3).unwrap();
+        assert_eq!(live.data, again.data);
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub enum ActMode<'a> {
     /// drawn from the caller's RNG (the snapshot itself stays immutable
     /// and shareable).
     Sample(&'a mut Pcg64),
+    /// Exploration policy over vectorized env streams: row `i` draws its
+    /// noise from `rngs[i]`, so each stream owns an independent noise
+    /// sequence and a row's action depends only on its observation and
+    /// its own stream — not on how rows are batched together.
+    SamplePerEnv(&'a mut [Pcg64]),
 }
 
 /// An immutable snapshot of a SAC actor (and pixel encoder, when
@@ -115,8 +120,25 @@ impl Policy {
                 rng.normal_fill(&mut eps.data);
                 TanhGaussian::forward(&head, &eps, self.cfg, p).a
             }
+            ActMode::SamplePerEnv(rngs) => {
+                let eps = per_env_eps(head.rows(), self.act_dim, rngs);
+                TanhGaussian::forward(&head, &eps, self.cfg, p).a
+            }
         }
     }
+}
+
+/// Fill a `[B, A]` exploration-noise tensor with one row per env
+/// stream, row `i` drawn from `rngs[i]` — the single definition of the
+/// per-env noise layout, shared by [`Policy::act_batch`]'s
+/// [`ActMode::SamplePerEnv`] and `SacAgent::act_batch_envs`.
+pub(crate) fn per_env_eps(b: usize, act_dim: usize, rngs: &mut [Pcg64]) -> Tensor {
+    assert_eq!(rngs.len(), b, "one RNG stream per observation row");
+    let mut eps = Tensor::zeros(&[b, act_dim]);
+    for (i, rng) in rngs.iter_mut().enumerate() {
+        rng.normal_fill(&mut eps.data[i * act_dim..(i + 1) * act_dim]);
+    }
+    eps
 }
 
 #[cfg(test)]
@@ -161,5 +183,29 @@ mod tests {
         assert!(a1.data.iter().all(|v| (-1.0..=1.0).contains(v)));
         // the agent itself was not consulted — its RNG is untouched
         let _ = agent.act(&[0.1, 0.2, 0.3, 0.4], false);
+    }
+
+    #[test]
+    fn per_env_sampling_rows_are_batch_invariant() {
+        // Row i of a SamplePerEnv batch must be bitwise identical to a
+        // batch-1 call on (obs row i, rng stream i): the GEMM backend is
+        // row-invariant and the noise comes from the row's own stream.
+        let agent =
+            SacAgent::new(SacConfig::states(6, 3, 16), Methods::ours(), Precision::fp16(), 2);
+        let policy = agent.policy();
+        let n = 5;
+        let mut obs = Tensor::zeros(&[n, 6]);
+        Pcg64::seed(3).normal_fill(&mut obs.data);
+        let mut rngs: Vec<Pcg64> =
+            (0..n).map(|i| Pcg64::seed_stream(11, 100 + i as u64)).collect();
+        let batched = policy.act_batch(&obs, ActMode::SamplePerEnv(&mut rngs));
+        for i in 0..n {
+            let one = Tensor::from_vec(&[1, 6], obs.row(i).to_vec());
+            let mut solo = vec![Pcg64::seed_stream(11, 100 + i as u64)];
+            let a = policy.act_batch(&one, ActMode::SamplePerEnv(&mut solo));
+            for (x, y) in a.data.iter().zip(batched.row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "row {i}");
+            }
+        }
     }
 }

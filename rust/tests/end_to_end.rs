@@ -77,6 +77,27 @@ fn all_ablation_presets_run() {
 }
 
 #[test]
+fn vectorized_collection_trains_and_is_deterministic() {
+    // the collector/learner loop over 4 lockstep env streams: must
+    // complete, produce the same eval grid as the single-env trainer,
+    // and be exactly reproducible in the seed
+    let mut cfg = quick("pendulum_swingup", "fp16_ours", 120);
+    cfg.eval_every = 60;
+    cfg.seed_steps = 40;
+    let single = train(&cfg);
+    cfg.num_envs = 4;
+    let a = train(&cfg);
+    let b = train(&cfg);
+    assert!(!a.crashed);
+    assert_eq!(a.eval_curve.points, b.eval_curve.points, "N=4 reruns must match exactly");
+    let xs = |o: &lprl::coordinator::TrainOutcome| {
+        o.eval_curve.points.iter().map(|p| p.0).collect::<Vec<_>>()
+    };
+    assert_eq!(xs(&single), xs(&a), "eval step grid is num_envs-invariant");
+    assert!(a.collect_steps_per_sec > 0.0 && a.updates_per_sec > 0.0);
+}
+
+#[test]
 fn grad_probe_feeds_figure6() {
     let cfg = quick("cartpole_swingup", "fp32", 200);
     let out = train(&cfg);
