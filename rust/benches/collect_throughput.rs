@@ -1,19 +1,27 @@
-//! Collection-throughput benchmark: env-steps/sec of the vectorized
-//! collector as a function of `num_envs`, across precision presets, on
-//! the states task. The paper's Table 3 speedups come from amortizing
-//! half-precision compute over batches; this bench tracks how far one
-//! shared forward per collect round amortizes the rollout the same way.
-//! Writes `BENCH_collect.json` at the repo root next to
-//! `BENCH_gemm.json` and `BENCH_serve.json`.
+//! Collection-throughput benchmark: env-steps/sec of the collector as a
+//! function of `num_envs`, across precision presets and **interleave
+//! modes** (strict single-thread loop vs the async collector/learner
+//! pipeline with pooled env stepping). The paper's Table 3 speedups come
+//! from amortizing half-precision compute over batches; this bench
+//! tracks how far one shared forward per collect round (strict) and
+//! overlapping collection with learning (async) amortize the rollout
+//! the same way.
+//!
+//! Writes two JSON reports at the repo root:
+//! * `BENCH_collect.json` — the strict-mode states matrix (schema
+//!   unchanged from PR 3);
+//! * `BENCH_async.json` — the sync-vs-async matrix: env-steps/sec,
+//!   updates/sec and snapshot-refresh latency per (preset, mode,
+//!   num_envs), for states *and* a pixel preset (where pooled parallel
+//!   rendering is the payoff).
 //!
 //! ```bash
 //! cargo bench --bench collect_throughput            # full run, writes JSON
 //! cargo bench --bench collect_throughput -- --test  # CI smoke: tiny, no JSON
 //! ```
 //!
-//! Before timing anything the bench asserts the vectorized-collection
-//! correctness invariant: two identical `num_envs = 4` runs produce the
-//! same eval curve (determinism in the seed).
+//! Before timing anything the bench asserts the correctness gates:
+//! identical `num_envs = 4` runs must match bitwise in *both* modes.
 
 use lprl::config::RunConfig;
 use lprl::coordinator::train;
@@ -21,43 +29,74 @@ use std::fmt::Write as _;
 
 struct Row {
     preset: &'static str,
+    mode: &'static str,
+    pixels: bool,
     num_envs: usize,
     collect_sps: f64,
     updates_per_sec: f64,
+    snapshot_refresh_us: f64,
     wall_secs: f64,
     final_score: f64,
 }
 
-fn bench_cfg(preset: &str, num_envs: usize, steps: usize, hidden: usize, batch: usize) -> RunConfig {
-    RunConfig {
+struct Shape {
+    steps: usize,
+    hidden: usize,
+    batch: usize,
+    pixel_steps: usize,
+    image_size: usize,
+    filters: usize,
+    feature_dim: usize,
+}
+
+fn bench_cfg(preset: &str, mode: &'static str, pixels: bool, num_envs: usize, sh: &Shape) -> RunConfig {
+    let steps = if pixels { sh.pixel_steps } else { sh.steps };
+    let mut cfg = RunConfig {
         task: "pendulum_swingup".into(),
         preset: preset.into(),
         steps,
         seed_steps: (steps / 8).max(num_envs),
-        batch,
-        hidden,
+        batch: if pixels { sh.batch.min(16) } else { sh.batch },
+        hidden: if pixels { sh.hidden.min(64) } else { sh.hidden },
         eval_every: steps, // single final eval, outside both stage timers
         eval_episodes: 1,
         num_envs,
+        sync_mode: mode.into(),
         ..Default::default()
+    };
+    if pixels {
+        cfg.pixels = true;
+        cfg.image_size = sh.image_size;
+        cfg.filters = sh.filters;
+        cfg.feature_dim = sh.feature_dim;
     }
+    cfg
 }
 
-fn bench_one(preset: &'static str, num_envs: usize, steps: usize, hidden: usize, batch: usize) -> Row {
-    let cfg = bench_cfg(preset, num_envs, steps, hidden, batch);
+fn bench_one(preset: &'static str, mode: &'static str, pixels: bool, num_envs: usize, sh: &Shape) -> Row {
+    let cfg = bench_cfg(preset, mode, pixels, num_envs, sh);
     let out = train(&cfg);
-    assert!(!out.crashed, "{preset} num_envs={num_envs} crashed");
+    assert!(!out.crashed, "{preset} {mode} pixels={pixels} num_envs={num_envs} crashed");
     Row {
         preset,
+        mode,
+        pixels,
         num_envs,
         collect_sps: out.collect_steps_per_sec,
         updates_per_sec: out.updates_per_sec,
+        snapshot_refresh_us: if out.snapshot_refreshes > 0 {
+            out.snapshot_publish_secs * 1e6 / out.snapshot_refreshes as f64
+        } else {
+            0.0
+        },
         wall_secs: out.wall_secs,
         final_score: out.final_score,
     }
 }
 
-fn write_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+/// The PR-3 report: strict-mode states rows only, schema unchanged.
+fn write_collect_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+    let rows: Vec<&Row> = rows.iter().filter(|r| r.mode == "strict" && !r.pixels).collect();
     let mut out = String::new();
     out.push_str("{\n  \"bench\": \"collect\",\n");
     let _ = writeln!(out, "  \"task\": \"{task}\",");
@@ -79,8 +118,10 @@ fn write_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> std::io:
         p
     };
     for (i, preset) in presets.iter().enumerate() {
-        let of = |n: usize| rows.iter().find(|r| r.preset == *preset && r.num_envs == n);
-        let base = of(1).expect("num_envs=1 row");
+        let base = rows
+            .iter()
+            .find(|r| r.preset == *preset && r.num_envs == 1)
+            .expect("num_envs=1 row");
         let top = rows
             .iter()
             .filter(|r| r.preset == *preset)
@@ -96,59 +137,151 @@ fn write_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> std::io:
         out.push_str(if i + 1 < presets.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
+    write_report("BENCH_collect.json", &out)
+}
+
+/// The sync-vs-async matrix: every row, plus async-vs-strict speedup
+/// summaries at the largest env count per (preset, pixels) pair.
+fn write_async_json(task: &str, sh: &Shape, rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"collect_async\",\n");
+    let _ = writeln!(out, "  \"task\": \"{task}\",");
+    let _ = writeln!(out, "  \"states_steps\": {}, \"pixel_steps\": {},", sh.steps, sh.pixel_steps);
+    let _ = writeln!(out, "  \"image_size\": {},", sh.image_size);
+    out.push_str("  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"mode\": \"{}\", \"pixels\": {}, \"num_envs\": {}, \"collect_steps_per_sec\": {:.1}, \"updates_per_sec\": {:.2}, \"snapshot_refresh_us\": {:.1}, \"wall_secs\": {:.3}}}",
+            r.preset, r.mode, r.pixels, r.num_envs, r.collect_sps, r.updates_per_sec, r.snapshot_refresh_us, r.wall_secs
+        );
+        out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"async_vs_strict\": [\n");
+    let mut pairs: Vec<(&str, bool)> = rows.iter().map(|r| (r.preset, r.pixels)).collect();
+    pairs.dedup();
+    let mut summaries = Vec::new();
+    for (preset, pixels) in pairs {
+        let sel = |mode: &str| {
+            rows.iter()
+                .filter(|r| r.preset == preset && r.pixels == pixels && r.mode == mode)
+                .max_by_key(|r| r.num_envs)
+        };
+        if let (Some(st), Some(asy)) = (sel("strict"), sel("async")) {
+            if st.num_envs == asy.num_envs {
+                summaries.push(format!(
+                    "    {{\"preset\": \"{}\", \"pixels\": {}, \"num_envs\": {}, \"collect_speedup_async\": {:.3}, \"wall_speedup_async\": {:.3}}}",
+                    preset,
+                    pixels,
+                    st.num_envs,
+                    asy.collect_sps / st.collect_sps,
+                    st.wall_secs / asy.wall_secs
+                ));
+            }
+        }
+    }
+    out.push_str(&summaries.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    write_report("BENCH_async.json", &out)
+}
+
+fn write_report(name: &str, contents: &str) -> std::io::Result<std::path::PathBuf> {
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .parent()
         .unwrap()
-        .join("BENCH_collect.json");
-    std::fs::write(&path, out)?;
+        .join(name);
+    std::fs::write(&path, contents)?;
     Ok(path)
 }
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
-    let (steps, hidden, batch, envs, presets): (usize, usize, usize, Vec<usize>, Vec<&'static str>) =
+    let (shape, envs, pixel_envs, presets): (Shape, Vec<usize>, Vec<usize>, Vec<&'static str>) =
         if smoke {
-            (64, 32, 16, vec![1, 4], vec!["fp16_ours"])
+            (
+                Shape { steps: 64, hidden: 32, batch: 16, pixel_steps: 32, image_size: 17, filters: 4, feature_dim: 8 },
+                vec![1, 4],
+                vec![4],
+                vec!["fp16_ours"],
+            )
         } else {
-            (1500, 256, 128, vec![1, 2, 4, 8], vec!["fp32", "fp16_ours"])
+            (
+                Shape { steps: 1500, hidden: 256, batch: 128, pixel_steps: 256, image_size: 21, filters: 8, feature_dim: 16 },
+                vec![1, 2, 4, 8],
+                vec![4, 8],
+                vec!["fp32", "fp16_ours"],
+            )
         };
+    let modes: [&'static str; 2] = ["strict", "async"];
 
-    // -- correctness gate: vectorized collection is deterministic ------
-    let det_cfg = bench_cfg("fp16_ours", 4, 48, 24, 8);
-    let a = train(&det_cfg);
-    let b = train(&det_cfg);
-    assert_eq!(
-        a.eval_curve.points, b.eval_curve.points,
-        "num_envs=4 training must be deterministic in the seed"
-    );
-    println!("determinism gate: two num_envs=4 runs match  OK");
+    // -- correctness gates: both interleaves deterministic in the seed --
+    for mode in modes {
+        let det_cfg = bench_cfg("fp16_ours", mode, false, 4, &Shape {
+            steps: 48,
+            hidden: 24,
+            batch: 8,
+            pixel_steps: 32,
+            image_size: 17,
+            filters: 4,
+            feature_dim: 8,
+        });
+        let a = train(&det_cfg);
+        let b = train(&det_cfg);
+        assert_eq!(
+            a.eval_curve.points, b.eval_curve.points,
+            "{mode} num_envs=4 training must be deterministic in the seed"
+        );
+        assert_eq!(a.replay_fingerprint, b.replay_fingerprint, "{mode} transition multiset");
+        println!("determinism gate [{mode}]: two num_envs=4 runs match  OK");
+    }
 
     let mut rows = Vec::new();
     for &preset in &presets {
-        for &n in &envs {
-            let row = bench_one(preset, n, steps, hidden, batch);
-            println!(
-                "{:>9}  num_envs {:>2}: collect {:>9.1} steps/s  learner {:>7.2} upd/s  wall {:>6.2}s",
-                row.preset, row.num_envs, row.collect_sps, row.updates_per_sec, row.wall_secs
-            );
-            rows.push(row);
+        for (pixels, env_list) in [(false, &envs), (true, &pixel_envs)] {
+            if pixels && preset == "fp32" {
+                continue; // pixel matrix: the paper's fp16_ours operating point
+            }
+            for mode in modes {
+                for &n in env_list {
+                    let row = bench_one(preset, mode, pixels, n, &shape);
+                    println!(
+                        "{:>9} {:>6} pixels={:<5} num_envs {:>2}: collect {:>9.1} steps/s  learner {:>7.2} upd/s  snap {:>6.1} us  wall {:>6.2}s",
+                        row.preset, row.mode, row.pixels, row.num_envs,
+                        row.collect_sps, row.updates_per_sec, row.snapshot_refresh_us, row.wall_secs
+                    );
+                    rows.push(row);
+                }
+            }
         }
-        let base = rows.iter().find(|r| r.preset == preset && r.num_envs == 1).unwrap();
-        let top = rows.iter().filter(|r| r.preset == preset).max_by_key(|r| r.num_envs).unwrap();
-        println!(
-            "{:>9}  collect speedup (num_envs {} vs 1): {:.2}x",
-            preset,
-            top.num_envs,
-            top.collect_sps / base.collect_sps
-        );
+    }
+    for (pixels, label) in [(false, "states"), (true, "pixels")] {
+        for &preset in &presets {
+            let top = |mode: &str| {
+                rows.iter()
+                    .filter(|r| r.preset == preset && r.pixels == pixels && r.mode == mode)
+                    .max_by_key(|r| r.num_envs)
+            };
+            if let (Some(st), Some(asy)) = (top("strict"), top("async")) {
+                println!(
+                    "{preset:>9} {label}: async vs strict @ num_envs {}: collect {:.2}x  wall {:.2}x",
+                    st.num_envs,
+                    asy.collect_sps / st.collect_sps,
+                    st.wall_secs / asy.wall_secs
+                );
+            }
+        }
     }
 
     if smoke {
         println!("smoke mode: no JSON written");
         return;
     }
-    match write_json("pendulum_swingup", steps, hidden, &rows) {
+    match write_collect_json("pendulum_swingup", shape.steps, shape.hidden, &rows) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_collect.json: {e}"),
+    }
+    match write_async_json("pendulum_swingup", &shape, &rows) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_async.json: {e}"),
     }
 }

@@ -28,6 +28,19 @@ pub struct RunConfig {
     /// schedule is preserved). `1` reproduces the single-env trainer
     /// bitwise; see `coordinator::train`'s determinism contract.
     pub num_envs: usize,
+    /// Collector/learner interleave contract: `"strict"` runs the
+    /// single-thread collect → update → eval loop (bitwise identical to
+    /// the pre-async trainer); `"async"` runs the collector in its own
+    /// thread on lag-2 [`crate::sac::Policy`] snapshots with pooled
+    /// parallel env stepping, feeding the learner through a bounded
+    /// transition queue. Async runs are seed-deterministic (two async
+    /// runs match bitwise) but are *not* bitwise-equal to strict runs —
+    /// see the README determinism table.
+    pub sync_mode: String,
+    /// Transition-queue capacity of the async pipeline, in collect
+    /// rounds (backpressure bound: the collector blocks once this many
+    /// unconsumed rounds are queued). Ignored in strict mode.
+    pub queue_rounds: usize,
     /// Evaluate every this many agent steps.
     pub eval_every: usize,
     pub eval_episodes: usize,
@@ -67,6 +80,8 @@ impl Default for RunConfig {
             hidden: 128,
             replay_capacity: 100_000,
             num_envs: 1,
+            sync_mode: "strict".into(),
+            queue_rounds: 4,
             eval_every: 500,
             eval_episodes: 4,
             pixels: false,
@@ -131,6 +146,12 @@ impl RunConfig {
         if self.num_envs == 0 {
             return Err("num_envs must be >= 1".into());
         }
+        if self.sync_mode != "strict" && self.sync_mode != "async" {
+            return Err(format!("unknown sync_mode {:?} (strict|async)", self.sync_mode));
+        }
+        if self.queue_rounds == 0 {
+            return Err("queue_rounds must be >= 1".into());
+        }
         if self.eval_every == 0 {
             return Err("eval_every must be >= 1".into());
         }
@@ -152,6 +173,8 @@ impl RunConfig {
             "hidden" => self.hidden = p(value).unwrap_or(self.hidden),
             "replay_capacity" => self.replay_capacity = p(value).unwrap_or(self.replay_capacity),
             "num_envs" => self.num_envs = p(value).unwrap_or(self.num_envs),
+            "sync_mode" => self.sync_mode = value.into(),
+            "queue_rounds" => self.queue_rounds = p(value).unwrap_or(self.queue_rounds),
             "eval_every" => self.eval_every = p(value).unwrap_or(self.eval_every),
             "eval_episodes" => self.eval_episodes = p(value).unwrap_or(self.eval_episodes),
             "pixels" => self.pixels = value == "true" || value == "1",
@@ -292,11 +315,15 @@ mod tests {
         assert!(c.set("steps", "123"));
         assert!(c.set("pixels", "true"));
         assert!(c.set("num_envs", "8"));
+        assert!(c.set("sync_mode", "async"));
+        assert!(c.set("queue_rounds", "2"));
         assert!(!c.set("bogus_key", "1"));
         assert_eq!(c.task, "cheetah_run");
         assert_eq!(c.steps, 123);
         assert!(c.pixels);
         assert_eq!(c.num_envs, 8);
+        assert_eq!(c.sync_mode, "async");
+        assert_eq!(c.queue_rounds, 2);
     }
 
     #[test]
@@ -307,6 +334,13 @@ mod tests {
         c.eval_every = 0;
         assert!(c.validate().unwrap_err().contains("eval_every"));
         c.eval_every = 100;
+        assert!(c.validate().is_ok());
+        c.sync_mode = "eventually".into();
+        assert!(c.validate().unwrap_err().contains("sync_mode"));
+        c.sync_mode = "async".into();
+        c.queue_rounds = 0;
+        assert!(c.validate().unwrap_err().contains("queue_rounds"));
+        c.queue_rounds = 1;
         assert!(c.validate().is_ok());
     }
 

@@ -2,13 +2,24 @@
 //! environments (collect → update → eval rounds, episode time limits +
 //! action repeat), batched deterministic evaluation, crash accounting,
 //! and multi-seed parallel orchestration for the experiment harness.
+//!
+//! Two interleave contracts, selected by `RunConfig::sync_mode`:
+//! [`trainer`]'s strict loop (collect, update and eval alternate in one
+//! thread — the bitwise reference) and [`pipeline`]'s async loop (the
+//! collector runs in its own thread on lagged policy snapshots with
+//! pooled parallel env stepping, overlapping physics/rendering with the
+//! learner's GEMMs).
 
+mod pipeline;
 mod trainer;
 
 // `PixelEnvAdapter` moved into `envs` (it is an env concern and
 // `envs::VecEnv` consumes it); re-exported here for compatibility.
 pub use crate::envs::PixelEnvAdapter;
-pub use trainer::{evaluate_policy, evaluate_policy_batched, run_many, train, TrainOutcome};
+pub use trainer::{
+    evaluate_policy, evaluate_policy_batched, run_many, train, TrainOutcome,
+    FINGERPRINT_MAX_FLOATS,
+};
 
 /// dm_control episode length in raw environment steps.
 pub const EPISODE_ENV_STEPS: usize = 1000;

@@ -1,0 +1,620 @@
+//! Asynchronous collector/learner pipeline (`sync_mode = "async"`).
+//!
+//! The strict trainer interleaves collect → update → eval in one
+//! thread, so the learner idles while physics/rendering runs and the
+//! collector idles during GEMMs. This module runs them concurrently:
+//!
+//! * the **collector** thread steps the `VecEnv` streams on an
+//!   immutable [`Policy`] snapshot, fanning per-env physics/rendering
+//!   across its own [`ThreadPool`] (`min(num_envs, default_threads())`
+//!   lanes — separate from the GEMM pool so env stepping never falls
+//!   back inline just because the learner is inside a GEMM), and feeds
+//!   transition chunks through a bounded queue;
+//! * the **learner** (the calling thread) drains chunks, pushes them
+//!   into replay (`ReplayBuffer::push_batch`), runs the SAC
+//!   1-update-per-transition schedule against the same step-budget
+//!   accountant as the strict loop (update counts match it exactly),
+//!   evaluates on the same step grid, and republishes a fresh policy
+//!   snapshot every round.
+//!
+//! ## Determinism contract (relaxed, but still exact)
+//!
+//! Rounds are the same schedule the strict trainer uses (round = up to
+//! `num_envs` transitions, clipped at seed-phase and eval boundaries).
+//! The snapshot protocol is **deterministically lagged**: the actions
+//! of round `r` always come from the weights after round
+//! `r - PIPELINE_LAG`'s updates (clamped to the initial weights for the
+//! first rounds), never from "whatever is freshest". Queue timing
+//! therefore affects
+//! *wall time only* — two async runs of the same config are bitwise
+//! identical, and the whole run is deterministic in `cfg.seed`.
+//!
+//! Relative to strict mode the contract is relaxed, not broken:
+//!
+//! * the update count and the eval step grid are identical (tested);
+//! * seed-phase transitions are bitwise identical for `num_envs > 1`
+//!   (same per-env streams → same multiset in replay, tested via
+//!   [`ReplayBuffer::fingerprint`]);
+//! * post-seed transitions differ only through the policy lag (the
+//!   collector acts with weights `PIPELINE_LAG - 1` rounds stale), so
+//!   async eval curves are *not* bitwise-equal to strict ones;
+//! * `num_envs = 1` async uses the per-env stream layout (not the
+//!   legacy shared stream strict keeps for bitwise seed-compat).
+//!
+//! Backpressure: the queue holds at most `cfg.queue_rounds` unconsumed
+//! rounds; a full queue blocks the collector, an empty one blocks the
+//! learner, and both resume without affecting results (only timing).
+//! Crash accounting matches the strict loop: a non-finite action in the
+//! collector (or an eval-time crash in the learner) scores the run 0
+//! from then on and pads the curve.
+
+use super::trainer::{
+    evaluate, replay_fingerprint_capped, round_len, TrainOutcome, UpdateSchedule, ENV_STREAM_BASE,
+};
+use crate::config::RunConfig;
+use crate::envs::{sanitize_action, VecEnv};
+use crate::nn::pool::{default_threads, ThreadPool};
+use crate::nn::Tensor;
+use crate::replay::{ReplayBuffer, Storage};
+use crate::rngs::Pcg64;
+use crate::sac::{ActMode, Batch, Policy, SacAgent};
+use crate::telemetry::{LogHistogram, Series};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Snapshot lag in rounds: round `r` acts with the weights left by
+/// round `r - PIPELINE_LAG`'s updates (the initial weights for early
+/// rounds). Lag 2 is the minimum that lets the collector collect round
+/// `r` while the learner is still updating on round `r - 1`; a larger
+/// lag would only add policy staleness, not overlap.
+const PIPELINE_LAG: u64 = 2;
+
+/// Lazy walk of the collect-round schedule: `(round, base_step, k)`
+/// per round, where `k ≤ num_envs` transitions are collected and
+/// rounds never straddle the seed-phase or an eval boundary. Both
+/// pipeline threads iterate their own copy and the strict trainer
+/// computes the same splits online — all three through the single
+/// `trainer::round_len` rule, so the update count and eval grid are
+/// `sync_mode`-invariant by construction (and nothing materializes a
+/// paper-scale schedule as a Vec).
+struct Rounds<'a> {
+    cfg: &'a RunConfig,
+    n: usize,
+    step: usize,
+    round: usize,
+}
+
+fn rounds(cfg: &RunConfig, n: usize) -> Rounds<'_> {
+    Rounds { cfg, n, step: 0, round: 0 }
+}
+
+impl Iterator for Rounds<'_> {
+    type Item = (usize, usize, usize);
+
+    fn next(&mut self) -> Option<(usize, usize, usize)> {
+        if self.step >= self.cfg.steps {
+            return None;
+        }
+        let k = round_len(self.cfg, self.n, self.step);
+        let item = (self.round, self.step, k);
+        self.step += k;
+        self.round += 1;
+        Some(item)
+    }
+}
+
+/// One collect round crossing the thread boundary: `k` transitions in
+/// flat row-major chunks, exactly the `ReplayBuffer::push_batch` layout.
+struct Chunk {
+    base_step: usize,
+    k: usize,
+    obs: Vec<f32>,
+    act: Vec<f32>,
+    rew: Vec<f32>,
+    next_obs: Vec<f32>,
+}
+
+enum Msg {
+    Chunk(Chunk),
+    /// The collector hit a non-finite action (the paper's crash
+    /// condition) and stopped.
+    Crash,
+}
+
+/// Bounded transition queue (mutex + condvars — one lock round-trip per
+/// *round*, not per transition, so the lock is far off the hot path).
+struct Queue {
+    q: Mutex<VecDeque<Msg>>,
+    cap: usize,
+    not_full: Condvar,
+    not_empty: Condvar,
+    /// Learner-initiated abort (crash mid-run): unblocks the collector.
+    stop: AtomicBool,
+    /// Collector exited (normally or by panic): unblocks the learner.
+    closed: AtomicBool,
+}
+
+impl Queue {
+    fn new(cap: usize) -> Queue {
+        Queue {
+            q: Mutex::new(VecDeque::new()),
+            cap: cap.max(1),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            stop: AtomicBool::new(false),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Blocking push with backpressure; returns `false` if the learner
+    /// asked the pipeline to stop.
+    fn push(&self, m: Msg) -> bool {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                return false;
+            }
+            if g.len() < self.cap {
+                g.push_back(m);
+                drop(g);
+                self.not_empty.notify_one();
+                return true;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` means the collector is gone and nothing is
+    /// left to drain (it died — a normally-finished collector has
+    /// already queued every scheduled round).
+    fn pop(&self) -> Option<Msg> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(m) = g.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(m);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Learner-side abort: wake a collector blocked on a full queue.
+    fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        let _g = self.q.lock().unwrap();
+        self.not_full.notify_all();
+    }
+
+    /// Collector-side close: wake a learner blocked on an empty queue.
+    /// Runs in a drop guard so a panicking collector still closes.
+    fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        let _g = self.q.lock().unwrap();
+        self.not_empty.notify_all();
+    }
+}
+
+/// Closes the queue when the collector exits — including by panic, so
+/// the learner never deadlocks on a dead producer.
+struct CloseGuard<'a>(&'a Queue);
+
+impl Drop for CloseGuard<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// The learner-side twin of [`CloseGuard`]: stops the collector's
+/// blocking waits when the learner body exits — including by panic.
+/// Without it, a panicking learner would unwind into
+/// `std::thread::scope`'s implicit join while the collector is parked
+/// on a full queue or an unpublished snapshot version, deadlocking the
+/// process instead of propagating the panic.
+struct StopGuard<'a>(&'a Queue, &'a SnapshotSlot);
+
+impl Drop for StopGuard<'_> {
+    fn drop(&mut self) {
+        self.0.stop();
+        self.1.stop();
+    }
+}
+
+/// The versioned snapshot slot: the learner publishes `(version, Arc)`
+/// pairs, the collector fetches *exact* versions. Keeping the last
+/// `PIPELINE_LAG + 1` publications is enough: the collector's needed
+/// version trails the newest publication by at most `PIPELINE_LAG`
+/// (the learner cannot process a round whose chunk has not been
+/// collected yet).
+#[derive(Default)]
+struct SnapshotSlot {
+    inner: Mutex<VecDeque<(u64, Arc<Policy>)>>,
+    cv: Condvar,
+    stop: AtomicBool,
+}
+
+impl SnapshotSlot {
+    fn publish(&self, version: u64, policy: Arc<Policy>) {
+        let mut g = self.inner.lock().unwrap();
+        g.push_back((version, policy));
+        while g.len() > PIPELINE_LAG as usize + 1 {
+            g.pop_front();
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Block until `version` is published and return it; `None` on stop.
+    fn fetch(&self, version: u64) -> Option<Arc<Policy>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some((_, p)) = g.iter().find(|(v, _)| *v == version) {
+                return Some(p.clone());
+            }
+            if self.stop.load(Ordering::Acquire) {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+        let _g = self.inner.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+/// The collector thread body: walk the round schedule, act on the
+/// deterministically-lagged snapshot, step the env streams across the
+/// env pool, queue the chunk. Returns the productive collect wall time
+/// (queue/snapshot waits excluded — they are the pipeline's slack, not
+/// collection work).
+fn collector(
+    mut venv: VecEnv,
+    cfg: &RunConfig,
+    queue: &Queue,
+    slot: &SnapshotSlot,
+    env_pool: &ThreadPool,
+) -> f64 {
+    let _close = CloseGuard(queue);
+    let n = venv.num_envs();
+    let obs_len = venv.obs_len();
+    let act_dim = venv.act_dim();
+    let episode_steps = super::EPISODE_ENV_STEPS / venv.action_repeat();
+    // Async mode always uses the per-env stream layout (resets +
+    // seed-phase actions + exploration noise), including n = 1.
+    let mut env_rngs: Vec<Pcg64> =
+        (0..n).map(|i| Pcg64::seed_stream(cfg.seed, ENV_STREAM_BASE + i as u64)).collect();
+    let mut obs_flat = vec![0.0f32; n * obs_len];
+    for i in 0..n {
+        venv.reset_into(i, &mut env_rngs[i], &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
+    }
+    let mut next_flat = vec![0.0f32; n * obs_len];
+    let mut rew_buf = vec![0.0f32; n];
+    let mut ep_step = vec![0usize; n];
+    let mut obs_stage = Tensor::default();
+    let mut collect_secs = 0.0f64;
+    // Claim-grain policy: pixel steps (physics + rendering + frame
+    // stack) are heavy, so claim one env per RMW for load balance;
+    // state steps are a handful of RK4 microseconds, so chunk them to
+    // one claim per lane and skip the per-env atomic traffic.
+    let pixels = venv.obs_shape().len() == 3;
+    let lanes = env_pool.workers + 1;
+
+    for (round, base_step, k) in rounds(cfg, n) {
+        // Resolve the round's policy before starting the timer: the
+        // fetch may block on the learner, and that wait is pipeline
+        // slack, not collection work.
+        let policy = if base_step < cfg.seed_steps {
+            None
+        } else {
+            let version = (round as u64 + 1).saturating_sub(PIPELINE_LAG);
+            match slot.fetch(version) {
+                Some(p) => Some(p),
+                None => return collect_secs, // learner aborted
+            }
+        };
+
+        let tc = Instant::now();
+        let mut acts = match policy {
+            None => {
+                let mut t = Tensor::zeros(&[k, act_dim]);
+                for i in 0..k {
+                    for v in t.row_mut(i) {
+                        *v = env_rngs[i].uniform_in(-1.0, 1.0);
+                    }
+                }
+                t
+            }
+            Some(p) => {
+                let obs_t = p.stage_obs(&mut obs_stage, &obs_flat[..k * obs_len], k);
+                p.act_batch(obs_t, ActMode::SamplePerEnv(&mut env_rngs[..k]))
+            }
+        };
+        let mut crashed = false;
+        for i in 0..k {
+            if !sanitize_action(acts.row_mut(i)) {
+                crashed = true;
+            }
+        }
+        if crashed {
+            collect_secs += tc.elapsed().as_secs_f64();
+            queue.push(Msg::Crash);
+            return collect_secs;
+        }
+        let grain = if pixels { 1 } else { k.div_ceil(lanes) };
+        venv.par_step_into(k, &acts, &mut next_flat[..k * obs_len], &mut rew_buf[..k], env_pool, grain);
+        let chunk = Chunk {
+            base_step,
+            k,
+            obs: obs_flat[..k * obs_len].to_vec(),
+            act: acts.data,
+            rew: rew_buf[..k].to_vec(),
+            next_obs: next_flat[..k * obs_len].to_vec(),
+        };
+        obs_flat[..k * obs_len].copy_from_slice(&next_flat[..k * obs_len]);
+        for i in 0..k {
+            ep_step[i] += 1;
+            if ep_step[i] >= episode_steps {
+                venv.reset_into(i, &mut env_rngs[i], &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
+                ep_step[i] = 0;
+            }
+        }
+        collect_secs += tc.elapsed().as_secs_f64();
+        if !queue.push(Msg::Chunk(chunk)) {
+            return collect_secs; // learner aborted
+        }
+    }
+    collect_secs
+}
+
+/// The async collector/learner pipeline over a pre-built agent — the
+/// seam the crash-path tests use to inject poisoned weights (the async
+/// twin of the strict `train_agent`). Called via `coordinator::train`
+/// when `cfg.sync_mode == "async"`.
+pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAgent) -> TrainOutcome {
+    let t0 = Instant::now();
+    let n = venv.num_envs();
+    let repeat = venv.action_repeat();
+    let act_dim = venv.act_dim();
+    let eval_every = cfg.eval_every.max(1);
+    let queue = Queue::new(cfg.queue_rounds);
+    let slot = SnapshotSlot::default();
+    let env_pool = ThreadPool::new(n.min(default_threads()));
+
+    // Learner-side state: the shared trainer stream drives replay
+    // sampling only (env streams live in the collector).
+    let mut rng = Pcg64::seed_stream(cfg.seed, 7);
+    let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
+    let mut replay = ReplayBuffer::new(cfg.replay_capacity, venv.obs_shape(), act_dim, storage);
+    let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));
+    let mut grad_hist = LogHistogram::new(-12, 4, 2);
+    let mut sched = UpdateSchedule::new(cfg);
+    let mut batch_buf = Batch::default();
+    let done_buf = vec![false; n];
+
+    let mut crashed = false;
+    let mut update_secs = 0.0f64;
+    let mut snapshot_refreshes = 0u64;
+    let mut snapshot_publish_secs = 0.0f64;
+    let mut step = 0usize;
+
+    // Version 0 = the initial weights, published before the collector
+    // starts so round 0's fetch never waits.
+    let mut last_snapshot = Arc::new(agent.policy());
+    slot.publish(0, last_snapshot.clone());
+
+    let collect_secs = std::thread::scope(|s| {
+        let handle = {
+            let queue = &queue;
+            let slot = &slot;
+            let env_pool = &env_pool;
+            s.spawn(move || collector(venv, cfg, queue, slot, env_pool))
+        };
+        let _stop = StopGuard(&queue, &slot);
+
+        let mut collector_died = false;
+        'learn: for (round, base_step, k) in rounds(cfg, n) {
+            match queue.pop() {
+                None => {
+                    collector_died = true;
+                    break 'learn;
+                }
+                Some(Msg::Crash) => {
+                    crashed = true;
+                    break 'learn;
+                }
+                Some(Msg::Chunk(c)) => {
+                    debug_assert_eq!((c.base_step, c.k), (base_step, k));
+                    replay.push_batch(k, &c.obs, &c.act, &c.rew, &c.next_obs, &done_buf[..k]);
+                    // the exact strict-loop update accountant, shared
+                    // code — update counts cannot drift between modes
+                    let mut updated = false;
+                    if base_step >= cfg.seed_steps {
+                        let tu = Instant::now();
+                        updated = sched.run_round(
+                            cfg,
+                            &mut agent,
+                            &replay,
+                            &mut rng,
+                            &mut batch_buf,
+                            &mut grad_hist,
+                            base_step,
+                            k,
+                        );
+                        update_secs += tu.elapsed().as_secs_f64();
+                    }
+                    step = base_step + k;
+
+                    // Republish before evaluating: eval is slow and the
+                    // collector should not stall behind it.
+                    let tp = Instant::now();
+                    if updated {
+                        last_snapshot = Arc::new(agent.policy());
+                        snapshot_refreshes += 1;
+                    }
+                    slot.publish(round as u64 + 1, last_snapshot.clone());
+                    if updated {
+                        // clone + publish (lock + wakeup) — the full
+                        // refresh cost on the learner's critical path
+                        snapshot_publish_secs += tp.elapsed().as_secs_f64();
+                    }
+
+                    if step % eval_every == 0 || step == cfg.steps {
+                        let score = if agent.crashed || crashed {
+                            0.0
+                        } else {
+                            evaluate(&mut agent, cfg, cfg.eval_episodes, cfg.seed ^ 0x5EED)
+                        };
+                        eval_curve.push((step * repeat) as f64, score);
+                        if agent.crashed {
+                            crashed = true;
+                            break 'learn;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Unblock the collector whatever state it is in, then join.
+        queue.stop();
+        slot.stop();
+        let secs = match handle.join() {
+            Ok(secs) => secs,
+            Err(e) => std::panic::resume_unwind(e),
+        };
+        // A normally-returning collector queues every scheduled round
+        // (or a Crash) before closing, so an empty closed queue without
+        // a panic payload is an invariant violation, not a timing case.
+        assert!(!collector_died, "collector exited without delivering its rounds");
+        secs
+    });
+
+    if crashed || agent.crashed {
+        // paper: crashed runs are scored as 0 for the rest of training
+        eval_curve.push((cfg.steps * repeat) as f64, 0.0);
+    }
+    let final_score = if crashed || agent.crashed { 0.0 } else { eval_curve.last_y() };
+    TrainOutcome {
+        cfg: cfg.clone(),
+        eval_curve,
+        final_score,
+        crashed: crashed || agent.crashed,
+        grad_hist,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        skipped_steps: sched.skipped,
+        collect_steps_per_sec: if collect_secs > 0.0 { step as f64 / collect_secs } else { 0.0 },
+        updates_per_sec: if update_secs > 0.0 {
+            sched.updates_done as f64 / update_secs
+        } else {
+            0.0
+        },
+        updates: sched.updates_done,
+        replay_fingerprint: replay_fingerprint_capped(&replay),
+        snapshot_refreshes,
+        snapshot_publish_secs,
+        policy: Some(agent.policy()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::train;
+    use crate::coordinator::trainer::build_agent;
+
+    fn quick_cfg() -> RunConfig {
+        RunConfig {
+            task: "pendulum_swingup".into(),
+            preset: "fp32".into(),
+            steps: 120,
+            seed_steps: 40,
+            batch: 16,
+            hidden: 24,
+            eval_every: 60,
+            eval_episodes: 1,
+            num_envs: 4,
+            sync_mode: "async".into(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn round_schedule_matches_strict_round_splitting() {
+        // the schedule must reproduce the strict loop's online round
+        // computation: cover every step once, never straddle the seed
+        // phase or an eval boundary, never exceed num_envs
+        for (steps, seed_steps, eval_every, n) in
+            [(120, 40, 60, 4), (100, 30, 30, 7), (64, 16, 64, 1), (10, 20, 4, 3)]
+        {
+            let cfg = RunConfig {
+                steps,
+                seed_steps,
+                eval_every,
+                num_envs: n,
+                ..quick_cfg()
+            };
+            let sched: Vec<(usize, usize, usize)> = rounds(&cfg, n).collect();
+            let mut step = 0usize;
+            for (i, &(round, base, k)) in sched.iter().enumerate() {
+                assert_eq!(round, i, "round indices are sequential");
+                assert_eq!(base, step, "rounds are contiguous");
+                assert!((1..=n).contains(&k));
+                assert!(
+                    !(base < seed_steps && base + k > seed_steps),
+                    "round must not straddle the seed phase"
+                );
+                assert_eq!(
+                    (base / eval_every),
+                    ((base + k - 1) / eval_every),
+                    "round must not straddle an eval boundary"
+                );
+                step += k;
+            }
+            assert_eq!(step, steps, "schedule covers exactly cfg.steps");
+        }
+    }
+
+    #[test]
+    fn async_poisoned_actor_crashes_scores_zero_and_pads_curve() {
+        // the paper's crash accounting must survive the thread hop: a
+        // NaN actor crashes in the *collector*, the learner sees the
+        // crash message, scores 0 and pads the curve to full length
+        let cfg = quick_cfg();
+        let venv = VecEnv::new(&cfg, cfg.num_envs).unwrap();
+        let mut agent = build_agent(&cfg, venv.obs_len(), venv.act_dim());
+        for prm in agent.actor.params_mut() {
+            for w in prm.w.iter_mut() {
+                *w = f32::NAN;
+            }
+        }
+        let out = train_agent_async(&cfg, venv, agent);
+        assert!(out.crashed, "poisoned actor must crash the async run");
+        assert_eq!(out.final_score, 0.0);
+        let repeat = crate::envs::action_repeat(&cfg.task);
+        let last = out.eval_curve.points.last().unwrap();
+        assert_eq!(last.0, (cfg.steps * repeat) as f64, "curve padded to full length");
+        assert_eq!(last.1, 0.0);
+        // crash fires at the first policy round (step 40 < eval 60):
+        // only the padding point exists
+        assert_eq!(out.eval_curve.points.len(), 1);
+        assert_eq!(out.updates, 0, "no update ran before the crash");
+    }
+
+    #[test]
+    fn async_short_run_completes_with_throughput_stats() {
+        let out = train(&quick_cfg());
+        assert!(!out.crashed);
+        assert!(!out.eval_curve.points.is_empty());
+        assert!(out.collect_steps_per_sec > 0.0);
+        assert!(out.updates_per_sec > 0.0);
+        assert!(out.snapshot_refreshes > 0, "learner must republish snapshots");
+        assert!(out.grad_hist.total() > 0, "grad probe must fire in async mode too");
+    }
+}

@@ -41,8 +41,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// Stream ids on `cfg.seed`: 7 is the legacy shared trainer stream;
-/// per-env streams for `num_envs > 1` start here.
-const ENV_STREAM_BASE: u64 = 0x1000;
+/// per-env streams for `num_envs > 1` (and every async-mode stream)
+/// start here.
+pub(super) const ENV_STREAM_BASE: u64 = 0x1000;
 
 /// Result of one training run.
 pub struct TrainOutcome {
@@ -64,6 +65,26 @@ pub struct TrainOutcome {
     /// Learner throughput: gradient updates per second of update-stage
     /// wall time (replay sampling + SAC update).
     pub updates_per_sec: f64,
+    /// Total gradient updates executed. Structural under the
+    /// 1-update-per-transition schedule: identical for every `num_envs`
+    /// *and* every `sync_mode` given the same `(steps, seed_steps,
+    /// batch)` — the contract the async relaxed-determinism tests pin.
+    pub updates: u64,
+    /// Order-independent multiset hash of the final replay contents
+    /// ([`ReplayBuffer::fingerprint`]): the observable for "same
+    /// transition multiset" claims across interleaves. `0` when the
+    /// buffer exceeds [`FINGERPRINT_MAX_FLOATS`] (hashing a paper-scale
+    /// pixel replay would add minutes of dead time to every run) — the
+    /// contract tests all use small buffers.
+    pub replay_fingerprint: u64,
+    /// Async mode: number of fresh policy snapshots published to the
+    /// collector (0 in strict mode, where the collector reads live
+    /// weights).
+    pub snapshot_refreshes: u64,
+    /// Async mode: total wall time spent cloning + publishing those
+    /// snapshots (`snapshot_publish_secs / snapshot_refreshes` = mean
+    /// refresh latency).
+    pub snapshot_publish_secs: f64,
     /// Immutable snapshot of the final trained policy — the artifact
     /// the serve layer consumes. Always `Some` from [`train`]; holds a
     /// full copy of the actor (and encoder) weights, so [`run_many`]
@@ -72,7 +93,111 @@ pub struct TrainOutcome {
     pub policy: Option<Policy>,
 }
 
-fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
+/// Round size at `step`: up to one transition per env stream, clipped
+/// so a round never straddles the seed phase or an eval boundary. The
+/// single definition of the round-splitting rule — the strict loop
+/// calls it online and the async pipeline walks it through
+/// `pipeline`'s lazy schedule iterator, so the eval grid and the
+/// update accountant are `sync_mode`-invariant by construction.
+pub(super) fn round_len(cfg: &RunConfig, n: usize, step: usize) -> usize {
+    let eval_every = cfg.eval_every.max(1);
+    let mut k = n.min(cfg.steps - step);
+    if step < cfg.seed_steps {
+        k = k.min(cfg.seed_steps - step);
+    }
+    k.min((step / eval_every + 1) * eval_every - step)
+}
+
+/// The per-round learner body shared by the strict and async loops:
+/// warm-up gate, grad-probe schedule, replay sampling and SAC update
+/// for the `k` transitions of the round starting at `base_step`. One
+/// definition ⇒ update counts (and probe points) cannot drift between
+/// `sync_mode`s — the invariance the async contract tests pin.
+pub(super) struct UpdateSchedule {
+    /// Probe points (Figure 6), consumed front to back (no per-step scan).
+    probe_at: Vec<usize>,
+    next_probe: usize,
+    pub(super) updates_done: u64,
+    /// Skipped-optimizer-step count from the most recent update.
+    pub(super) skipped: u64,
+}
+
+impl UpdateSchedule {
+    pub(super) fn new(cfg: &RunConfig) -> Self {
+        UpdateSchedule {
+            probe_at: (1..=3).map(|i| cfg.steps * i / 4).collect(),
+            next_probe: 0,
+            updates_done: 0,
+            skipped: 0,
+        }
+    }
+
+    /// One gradient step per transition of the round; returns whether
+    /// any update ran (the async learner republishes its snapshot only
+    /// then).
+    #[allow(clippy::too_many_arguments)]
+    pub(super) fn run_round(
+        &mut self,
+        cfg: &RunConfig,
+        agent: &mut SacAgent,
+        replay: &ReplayBuffer,
+        rng: &mut Pcg64,
+        batch_buf: &mut Batch,
+        grad_hist: &mut LogHistogram,
+        base_step: usize,
+        k: usize,
+    ) -> bool {
+        let mut updated = false;
+        for j in 0..k {
+            let s = base_step + j;
+            // warm-up gate, per transition so update counts stay
+            // num_envs-invariant: the update for transition s runs only
+            // once the per-step trainer would have had >= batch
+            // transitions (it had min(s + 1, len) at step s)
+            if (s + 1).min(replay.len()) < cfg.batch {
+                continue;
+            }
+            // advance past probe points that never saw an update
+            // (seed phase / replay warm-up)
+            while self.next_probe < self.probe_at.len() && self.probe_at[self.next_probe] < s {
+                self.next_probe += 1;
+            }
+            if self.next_probe < self.probe_at.len() && self.probe_at[self.next_probe] == s {
+                agent.grad_probe = Some(Vec::new());
+                self.next_probe += 1;
+            }
+            if cfg.pixels {
+                replay.sample_aug_into(cfg.batch, 2, rng, batch_buf);
+            } else {
+                replay.sample_into(cfg.batch, rng, batch_buf);
+            }
+            let stats = agent.update(batch_buf);
+            self.skipped = stats.skipped_steps;
+            self.updates_done += 1;
+            updated = true;
+            if let Some(probe) = agent.grad_probe.take() {
+                grad_hist.record_all(&probe);
+            }
+        }
+        updated
+    }
+}
+
+/// Upper bound (in stored f32 values, ~64 MB as f32) up to which
+/// [`TrainOutcome::replay_fingerprint`] is computed; larger buffers
+/// report 0 instead of stalling the end of the run on a byte-wise hash.
+pub const FINGERPRINT_MAX_FLOATS: usize = 1 << 24;
+
+/// [`ReplayBuffer::fingerprint`] behind the size cap above.
+pub(super) fn replay_fingerprint_capped(replay: &ReplayBuffer) -> u64 {
+    if replay.stored_floats() <= FINGERPRINT_MAX_FLOATS {
+        replay.fingerprint()
+    } else {
+        0
+    }
+}
+
+pub(super) fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
     let (prec, methods) = cfg
         .preset()
         .unwrap_or_else(|| panic!("unknown preset {}", cfg.preset));
@@ -111,19 +236,6 @@ fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> SacAgent {
     }
 }
 
-/// Stage a flat lockstep observation buffer into a persistent `[B, …]`
-/// tensor for the agent's shared forward: the buffer is reallocated
-/// only when the round size changes (seed/eval boundaries), so the
-/// steady-state collect loop allocates nothing.
-fn stage_obs<'a>(stage: &'a mut Tensor, flat: &[f32], batch: usize, obs_shape: &[usize]) -> &'a Tensor {
-    let mut shape = vec![batch];
-    shape.extend_from_slice(obs_shape);
-    if stage.shape != shape {
-        *stage = Tensor::zeros(&shape);
-    }
-    stage.data.copy_from_slice(flat);
-    stage
-}
 
 /// Shared lockstep evaluation core: run the env streams `ids[i]` (each
 /// seeded as `seed_stream(eval_seed, 1000 + ids[i])`) for one fixed
@@ -132,7 +244,7 @@ fn stage_obs<'a>(stage: &'a mut Tensor, flat: &[f32], batch: usize, obs_shape: &
 /// returns, or `None` if the policy produced a non-finite action (the
 /// paper's crash condition).
 fn eval_lockstep(policy: &Policy, cfg: &RunConfig, ids: &[u64], eval_seed: u64) -> Option<Vec<f64>> {
-    let mut venv = VecEnv::new(cfg, ids.len());
+    let mut venv = VecEnv::new(cfg, ids.len()).unwrap_or_else(|e| panic!("{e}"));
     let steps = EPISODE_ENV_STEPS / venv.action_repeat();
     let obs_len = venv.obs_len();
     let mut obs_flat = vec![0.0f32; ids.len() * obs_len];
@@ -141,9 +253,10 @@ fn eval_lockstep(policy: &Policy, cfg: &RunConfig, ids: &[u64], eval_seed: u64) 
         venv.reset_into(i, &mut rng, &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
     }
     let mut totals = vec![0.0f64; ids.len()];
+    let mut stage = Tensor::default();
     for _ in 0..steps {
-        let t = policy.obs_tensor(&obs_flat, ids.len());
-        let mut acts = policy.act_batch(&t, ActMode::Deterministic);
+        let t = policy.stage_obs(&mut stage, &obs_flat, ids.len());
+        let mut acts = policy.act_batch(t, ActMode::Deterministic);
         if !venv.step_lockstep(&mut acts, &mut obs_flat, &mut totals) {
             return None; // crash ⇒ the paper scores the run as 0
         }
@@ -195,7 +308,7 @@ pub fn evaluate_policy_batched(
 
 /// Trainer-internal eval: snapshot the agent's policy, run the batched
 /// evaluator, translate a crash into the agent's crash flag.
-fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u64) -> f64 {
+pub(super) fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u64) -> f64 {
     let policy = agent.policy();
     match evaluate_policy_batched(&policy, cfg, episodes, eval_seed) {
         Some(score) => score,
@@ -207,10 +320,21 @@ fn evaluate(agent: &mut SacAgent, cfg: &RunConfig, episodes: usize, eval_seed: u
 }
 
 /// Train one agent per `cfg`; fully deterministic in `cfg.seed`.
+///
+/// Dispatches on `cfg.sync_mode`: `"strict"` (default) runs the
+/// single-thread collect → update → eval loop below; `"async"` runs the
+/// pipelined collector/learner in [`super::pipeline`]. Invalid configs
+/// (unknown task) panic with the validation message — call
+/// [`RunConfig::validate`] first to get it as an `Err`.
 pub fn train(cfg: &RunConfig) -> TrainOutcome {
-    let venv = VecEnv::new(cfg, cfg.num_envs.max(1));
+    let venv =
+        VecEnv::new(cfg, cfg.num_envs.max(1)).unwrap_or_else(|e| panic!("{e}"));
     let agent = build_agent(cfg, venv.obs_len(), venv.act_dim());
-    train_agent(cfg, venv, agent)
+    if cfg.sync_mode == "async" {
+        super::pipeline::train_agent_async(cfg, venv, agent)
+    } else {
+        train_agent(cfg, venv, agent)
+    }
 }
 
 /// The collector/learner loop over a pre-built agent — the seam the
@@ -243,14 +367,11 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
 
     let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));
     let mut grad_hist = LogHistogram::new(-12, 4, 2);
-    // probe schedule, consumed front to back (no per-step scan)
-    let probe_at: Vec<usize> = (1..=3).map(|i| cfg.steps * i / 4).collect();
-    let mut next_probe = 0usize;
+    let mut sched = UpdateSchedule::new(cfg);
 
     let episode_steps = EPISODE_ENV_STEPS / repeat;
     let mut ep_step = vec![0usize; n];
     let mut crashed = false;
-    let mut skipped = 0u64;
 
     // collector staging buffers + the learner's reusable sample batch
     let mut next_flat = vec![0.0f32; n * obs_len];
@@ -259,19 +380,12 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
     let mut batch_buf = Batch::default();
     let mut obs_stage = Tensor::default();
 
-    let mut updates_done = 0u64;
     let mut collect_secs = 0.0f64;
     let mut update_secs = 0.0f64;
 
     let mut step = 0usize;
     'train: while step < cfg.steps {
-        // round size: up to one transition per env stream, clipped so a
-        // round never straddles the seed-phase or an eval boundary
-        let mut k = n.min(cfg.steps - step);
-        if step < cfg.seed_steps {
-            k = k.min(cfg.seed_steps - step);
-        }
-        k = k.min((step / eval_every + 1) * eval_every - step);
+        let k = round_len(cfg, n, step);
 
         // -- collect: one shared forward drives k env streams ----------
         let tc = Instant::now();
@@ -285,7 +399,7 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
             }
             t
         } else {
-            let obs_t = stage_obs(&mut obs_stage, &obs_flat[..k * obs_len], k, venv.obs_shape());
+            let obs_t = obs_stage.stage_rows(&obs_flat[..k * obs_len], k, venv.obs_shape());
             let a = if n == 1 {
                 agent.act_batch(obs_t, true)
             } else {
@@ -335,36 +449,9 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
         // -- update: one gradient step per collected transition --------
         if step >= cfg.seed_steps {
             let tu = Instant::now();
-            for j in 0..k {
-                let s = step + j;
-                // warm-up gate, per transition so update counts stay
-                // num_envs-invariant: the update for transition s runs
-                // only once the per-step trainer would have had >= batch
-                // transitions (it had min(s + 1, len) at step s)
-                if (s + 1).min(replay.len()) < cfg.batch {
-                    continue;
-                }
-                // advance past probe points that never saw an update
-                // (seed phase / replay warm-up)
-                while next_probe < probe_at.len() && probe_at[next_probe] < s {
-                    next_probe += 1;
-                }
-                if next_probe < probe_at.len() && probe_at[next_probe] == s {
-                    agent.grad_probe = Some(Vec::new());
-                    next_probe += 1;
-                }
-                if cfg.pixels {
-                    replay.sample_aug_into(cfg.batch, 2, &mut rng, &mut batch_buf);
-                } else {
-                    replay.sample_into(cfg.batch, &mut rng, &mut batch_buf);
-                }
-                let stats = agent.update(&batch_buf);
-                skipped = stats.skipped_steps;
-                updates_done += 1;
-                if let Some(probe) = agent.grad_probe.take() {
-                    grad_hist.record_all(&probe);
-                }
-            }
+            sched.run_round(
+                cfg, &mut agent, &replay, &mut rng, &mut batch_buf, &mut grad_hist, step, k,
+            );
             update_secs += tu.elapsed().as_secs_f64();
         }
         step += k;
@@ -396,34 +483,66 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
         crashed: crashed || agent.crashed,
         grad_hist,
         wall_secs: t0.elapsed().as_secs_f64(),
-        skipped_steps: skipped,
+        skipped_steps: sched.skipped,
         collect_steps_per_sec: if collect_secs > 0.0 { step as f64 / collect_secs } else { 0.0 },
-        updates_per_sec: if update_secs > 0.0 { updates_done as f64 / update_secs } else { 0.0 },
+        updates_per_sec: if update_secs > 0.0 {
+            sched.updates_done as f64 / update_secs
+        } else {
+            0.0
+        },
+        updates: sched.updates_done,
+        replay_fingerprint: replay_fingerprint_capped(&replay),
+        snapshot_refreshes: 0,
+        snapshot_publish_secs: 0.0,
         policy: Some(agent.policy()),
     }
 }
 
 /// Train many configurations in parallel across OS threads (one run per
 /// thread, capped at the host parallelism). Results keep input order.
+///
+/// Each worker claims config indices from a shared counter and keeps
+/// its finished outcomes in a thread-local vector, merged once after
+/// the joins — no shared lock anywhere on the result path (the previous
+/// implementation funneled every finishing run through one
+/// `Mutex<Vec<Option<_>>>`, serializing grids exactly when parallel
+/// runs finish back-to-back).
 pub fn run_many(cfgs: &[RunConfig]) -> Vec<TrainOutcome> {
     let n = cfgs.len();
     let mut results: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
     let next = AtomicUsize::new(0);
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n.max(1));
-    let results_ptr = std::sync::Mutex::new(&mut results);
     std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut mine = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let mut out = train(&cfgs[i]);
+                        // grids only read scalars/curves; don't pin every
+                        // run's weight snapshot for the whole grid
+                        out.policy = None;
+                        mine.push((i, out));
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(mine) => {
+                    for (i, out) in mine {
+                        results[i] = Some(out);
+                    }
                 }
-                let mut out = train(&cfgs[i]);
-                // grids only read scalars/curves; don't pin every run's
-                // weight snapshot for the lifetime of the whole grid
-                out.policy = None;
-                results_ptr.lock().unwrap()[i] = Some(out);
-            });
+                // surface the worker's original panic payload, exactly
+                // as the pre-refactor scope-propagated panic did
+                Err(e) => std::panic::resume_unwind(e),
+            }
         }
     });
     results.into_iter().map(|o| o.expect("worker died")).collect()
@@ -532,7 +651,7 @@ mod tests {
         // action mid-training scores 0 from then on and the eval curve
         // is padded out to the full training length
         let cfg = quick_cfg();
-        let venv = VecEnv::new(&cfg, 1);
+        let venv = VecEnv::new(&cfg, 1).unwrap();
         let mut agent = build_agent(&cfg, venv.obs_len(), venv.act_dim());
         for prm in agent.actor.params_mut() {
             for w in prm.w.iter_mut() {
@@ -557,7 +676,7 @@ mod tests {
         // and the padding point is appended after it
         let mut cfg = quick_cfg();
         cfg.seed_steps = 70; // first eval (step 60) happens pre-crash
-        let venv = VecEnv::new(&cfg, 1);
+        let venv = VecEnv::new(&cfg, 1).unwrap();
         let mut agent = build_agent(&cfg, venv.obs_len(), venv.act_dim());
         for prm in agent.actor.params_mut() {
             for w in prm.w.iter_mut() {

@@ -14,10 +14,19 @@
 //! (the trainer keeps the legacy shared stream at `num_envs = 1` for
 //! bitwise compatibility and independent per-env streams otherwise; the
 //! evaluator seeds one stream per episode).
+//!
+//! Stepping can be fanned across a [`ThreadPool`]
+//! ([`VecEnv::par_step_into`]): each env stream is stepped by exactly
+//! one pool task and every output location is written by exactly one
+//! stream, so the parallel path is bitwise identical to the serial
+//! [`VecEnv::step_into`] loop — which is what lets the async collector
+//! parallelize physics/rendering (the wall-time sink for pixel tasks)
+//! without touching the determinism contract.
 
 use super::pixels::PixelEnvAdapter;
-use super::{action_repeat, make_env, sanitize_action, Env};
+use super::{make_env, sanitize_action, try_action_repeat, Env, SUPPORTED_TASKS};
 use crate::config::RunConfig;
+use crate::nn::pool::ThreadPool;
 use crate::nn::Tensor;
 use crate::rngs::Pcg64;
 
@@ -29,13 +38,18 @@ enum EnvObs {
 }
 
 impl EnvObs {
-    fn build(cfg: &RunConfig) -> EnvObs {
-        let env = make_env(&cfg.task).unwrap_or_else(|| panic!("unknown task {}", cfg.task));
-        if cfg.pixels {
+    /// Fallible construction — unknown task names become an `Err`
+    /// naming the supported suite instead of a panic deep inside a run
+    /// (the same contract as [`RunConfig::validate`]).
+    fn build(cfg: &RunConfig) -> Result<EnvObs, String> {
+        let env = make_env(&cfg.task).ok_or_else(|| {
+            format!("unknown task {:?} (supported: {})", cfg.task, SUPPORTED_TASKS.join(" "))
+        })?;
+        Ok(if cfg.pixels {
             EnvObs::Pixels(PixelEnvAdapter::new(env, cfg.image_size, cfg.frame_stack))
         } else {
             EnvObs::State(env)
-        }
+        })
     }
 
     fn reset(&mut self, rng: &mut Pcg64) -> Vec<f32> {
@@ -69,14 +83,53 @@ pub struct VecEnv {
     repeat: usize,
 }
 
+/// `Sync` wrapper over the raw output/env pointers
+/// [`VecEnv::par_step_into`] hands to the pool; each task touches only
+/// its own index, so the shared pointer never aliases a write.
+struct ParPtrs {
+    envs: *mut EnvObs,
+    next: *mut f32,
+    rew: *mut f32,
+}
+// Safety: tasks access disjoint env slots / output rows (index i only),
+// and `EnvObs` is `Send` (asserted below), so moving the exclusive
+// access to a worker thread is sound.
+unsafe impl Send for ParPtrs {}
+unsafe impl Sync for ParPtrs {}
+
+#[allow(dead_code)]
+fn assert_env_obs_is_send(e: EnvObs) -> impl Send {
+    e
+}
+
+/// One agent step of a single env stream: `repeat` raw steps, reward
+/// summed, only the final observation copied out. The single definition
+/// both [`VecEnv::step_into`] and [`VecEnv::par_step_into`] execute —
+/// which is what makes the pooled path bitwise identical to the serial
+/// one by construction.
+fn agent_step(env: &mut EnvObs, repeat: usize, a: &[f32], out: &mut [f32]) -> f32 {
+    let mut rew = 0.0f32;
+    let mut last = Vec::new();
+    for _ in 0..repeat {
+        let (o, r) = env.step(a);
+        last = o;
+        rew += r;
+    }
+    out.copy_from_slice(&last);
+    rew
+}
+
 impl VecEnv {
-    /// Build `n` independent instances of the configured task. Panics on
-    /// unknown task names — call sites sit behind
-    /// [`RunConfig::validate`].
-    pub fn new(cfg: &RunConfig, n: usize) -> VecEnv {
+    /// Build `n` independent instances of the configured task. Unknown
+    /// task names are an `Err` (the fallible path behind
+    /// [`RunConfig::validate`]) — nothing here panics.
+    pub fn new(cfg: &RunConfig, n: usize) -> Result<VecEnv, String> {
+        let repeat = try_action_repeat(&cfg.task).ok_or_else(|| {
+            format!("unknown task {:?} (supported: {})", cfg.task, SUPPORTED_TASKS.join(" "))
+        })?;
         // env construction draws no RNG, so the dims probe doubles as
         // stream 0 instead of being thrown away
-        let probe = EnvObs::build(cfg);
+        let probe = EnvObs::build(cfg)?;
         let act_dim = probe.act_dim();
         let obs_shape: Vec<usize> = if cfg.pixels {
             vec![cfg.frame_stack * 3, cfg.image_size, cfg.image_size]
@@ -90,9 +143,11 @@ impl VecEnv {
         let mut envs = Vec::with_capacity(n);
         if n > 0 {
             envs.push(probe);
-            envs.extend((1..n).map(|_| EnvObs::build(cfg)));
+            for _ in 1..n {
+                envs.push(EnvObs::build(cfg)?);
+            }
         }
-        VecEnv { envs, obs_shape, obs_len, act_dim, repeat: action_repeat(&cfg.task) }
+        Ok(VecEnv { envs, obs_shape, obs_len, act_dim, repeat })
     }
 
     pub fn num_envs(&self) -> usize {
@@ -134,15 +189,46 @@ impl VecEnv {
     /// the final repeated step's observation survives, so it alone is
     /// copied out.
     pub fn step_into(&mut self, i: usize, a: &[f32], out: &mut [f32]) -> f32 {
-        let mut rew = 0.0f32;
-        let mut last = Vec::new();
-        for _ in 0..self.repeat {
-            let (o, r) = self.envs[i].step(a);
-            last = o;
-            rew += r;
-        }
-        out.copy_from_slice(&last);
-        rew
+        agent_step(&mut self.envs[i], self.repeat, a, out)
+    }
+
+    /// Advance env streams `0..k` one agent step each, in parallel
+    /// across `pool` (`grain` streams per claim — see
+    /// [`ThreadPool::run_chunked`]): stream `i` consumes `acts.row(i)`
+    /// and writes row `i` of `next_flat` plus `rew[i]`. Bitwise
+    /// identical to `k` serial [`VecEnv::step_into`] calls — streams are
+    /// independent and every output location has exactly one writer —
+    /// so the collector can fan physics/rendering out without touching
+    /// the determinism contract.
+    pub fn par_step_into(
+        &mut self,
+        k: usize,
+        acts: &Tensor,
+        next_flat: &mut [f32],
+        rew: &mut [f32],
+        pool: &ThreadPool,
+        grain: usize,
+    ) {
+        assert!(k <= self.envs.len());
+        assert_eq!(acts.rows(), k);
+        assert_eq!(next_flat.len(), k * self.obs_len);
+        assert_eq!(rew.len(), k);
+        let obs_len = self.obs_len;
+        let repeat = self.repeat;
+        let p = ParPtrs {
+            envs: self.envs.as_mut_ptr(),
+            next: next_flat.as_mut_ptr(),
+            rew: rew.as_mut_ptr(),
+        };
+        pool.run_chunked(k, grain, |i| {
+            // Safety: task i exclusively owns env slot i, output row i
+            // and rew[i]; bounds are checked by the asserts above.
+            unsafe {
+                let env = &mut *p.envs.add(i);
+                let out = std::slice::from_raw_parts_mut(p.next.add(i * obs_len), obs_len);
+                *p.rew.add(i) = agent_step(env, repeat, acts.row(i), out);
+            }
+        });
     }
 
     /// Lockstep evaluation step: sanitize row `i` of `acts` in place,
@@ -190,7 +276,7 @@ mod tests {
     #[test]
     fn builds_every_supported_task() {
         for task in SUPPORTED_TASKS {
-            let mut v = VecEnv::new(&cfg(task), 2);
+            let mut v = VecEnv::new(&cfg(task), 2).unwrap();
             assert_eq!(v.num_envs(), 2);
             assert_eq!(v.obs_shape().iter().product::<usize>(), v.obs_len());
             let mut rng = Pcg64::seed(1);
@@ -201,12 +287,19 @@ mod tests {
     }
 
     #[test]
+    fn unknown_task_is_an_error_not_a_panic() {
+        let err = VecEnv::new(&cfg("warehouse_sort"), 1).unwrap_err();
+        assert!(err.contains("unknown task"), "{err}");
+        assert!(err.contains("pendulum_swingup"), "error lists the supported suite: {err}");
+    }
+
+    #[test]
     fn streams_match_raw_envs_in_lockstep() {
         // Each VecEnv stream must be indistinguishable from a standalone
         // env driven with the same RNG stream and actions.
         let c = cfg("cartpole_swingup");
         let n = 3;
-        let mut v = VecEnv::new(&c, n);
+        let mut v = VecEnv::new(&c, n).unwrap();
         let mut raw: Vec<Box<dyn Env>> =
             (0..n).map(|_| make_env(&c.task).unwrap()).collect();
         let repeat = v.action_repeat();
@@ -231,12 +324,65 @@ mod tests {
     }
 
     #[test]
+    fn par_step_into_matches_serial_step_into_bitwise() {
+        for (task, pixels) in [("cheetah_run", false), ("pendulum_swingup", true)] {
+            let mut c = cfg(task);
+            if pixels {
+                c.pixels = true;
+                c.image_size = 11;
+                c.frame_stack = 3;
+            }
+            let n = 5;
+            let mut serial = VecEnv::new(&c, n).unwrap();
+            let mut par = VecEnv::new(&c, n).unwrap();
+            let obs_len = serial.obs_len();
+            let mut buf = vec![0.0f32; obs_len];
+            for i in 0..n {
+                let mut r1 = Pcg64::seed_stream(5, i as u64);
+                let mut r2 = Pcg64::seed_stream(5, i as u64);
+                serial.reset_into(i, &mut r1, &mut buf);
+                par.reset_into(i, &mut r2, &mut buf);
+            }
+            let pool = ThreadPool::new(4);
+            let mut acts = Tensor::zeros(&[n, serial.act_dim()]);
+            let mut rng = Pcg64::seed(77);
+            for round in 0..3 {
+                for v in acts.data.iter_mut() {
+                    *v = rng.uniform_in(-1.0, 1.0);
+                }
+                let mut want_next = vec![0.0f32; n * obs_len];
+                let mut want_rew = vec![0.0f32; n];
+                for i in 0..n {
+                    want_rew[i] = serial
+                        .step_into(i, acts.row(i), &mut want_next[i * obs_len..(i + 1) * obs_len]);
+                }
+                let mut got_next = vec![0.0f32; n * obs_len];
+                let mut got_rew = vec![0.0f32; n];
+                // stepping mutates the envs, so each round exercises one
+                // grain; alternating rounds cover both grain values
+                let grain = 1 + round % 2;
+                par.par_step_into(n, &acts, &mut got_next, &mut got_rew, &pool, grain);
+                assert_eq!(
+                    want_next.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got_next.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{task} round {round} next obs"
+                );
+                assert_eq!(
+                    want_rew.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    got_rew.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{task} round {round} rewards"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn pixel_streams_have_stacked_shape() {
         let mut c = cfg("pendulum_swingup");
         c.pixels = true;
         c.image_size = 12;
         c.frame_stack = 3;
-        let mut v = VecEnv::new(&c, 2);
+        let mut v = VecEnv::new(&c, 2).unwrap();
         assert_eq!(v.obs_shape(), &[9, 12, 12]);
         assert_eq!(v.obs_len(), 9 * 12 * 12);
         let mut rng = Pcg64::seed(4);
@@ -248,7 +394,7 @@ mod tests {
     #[test]
     fn lockstep_flags_nonfinite_actions() {
         let c = cfg("pendulum_swingup");
-        let mut v = VecEnv::new(&c, 2);
+        let mut v = VecEnv::new(&c, 2).unwrap();
         let mut rngs: Vec<Pcg64> = (0..2).map(|i| Pcg64::seed_stream(1, i)).collect();
         let mut obs = vec![0.0f32; 2 * v.obs_len()];
         for i in 0..2 {

@@ -54,7 +54,7 @@
 //! | [`optim`] | Adam/hAdam, loss scaling, Kahan accumulators |
 //! | [`envs`] | the continuous-control task suite + lockstep [`envs::VecEnv`] |
 //! | [`replay`] | replay buffer (f16/f32 storage, batch push / allocation-free sampling) |
-//! | [`coordinator`] | collector/learner loop over vectorized envs + batched deterministic eval |
+//! | [`coordinator`] | strict + async collector/learner loops over vectorized envs, batched deterministic eval |
 //! | [`serve`] | micro-batching policy server over [`serve::PolicyBackend`] |
 //! | [`runtime`] | PJRT artifact execution (AOT path) |
 //! | [`experiments`] / [`telemetry`] | paper exhibits + CSV/JSON reporting |
@@ -67,9 +67,10 @@
 //! cargo run --release -- exp fig3      # regenerate the ablation data
 //! cargo run --release -- serve engine=native   # micro-batching policy server
 //! cargo run --release -- train task=cheetah_run num_envs=8   # vectorized collection
+//! cargo run --release -- train task=cheetah_run num_envs=8 sync_mode=async  # pipelined collector/learner
 //! cargo bench --bench gemm_blocked     # GEMM backend vs seed baseline
 //! cargo bench --bench serve_throughput # single vs micro-batched serving
-//! cargo bench --bench collect_throughput # env-steps/sec vs num_envs
+//! cargo bench --bench collect_throughput # sync-vs-async collection matrix
 //! python -m pytest python/tests -q     # L1/L2 kernel + model tests
 //! ```
 

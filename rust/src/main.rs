@@ -48,6 +48,9 @@ USAGE:
   lprl train [--config f.toml] [key=value ...]   e.g. task=cheetah_run preset=fp16_ours seed=1
        num_envs=N collects from N lockstep env streams (one shared
        forward per round; num_envs=1 == the reference single-env trainer)
+       sync_mode=strict|async: async runs the collector in its own
+       thread on lagged policy snapshots with pooled env stepping
+       (seed-deterministic; queue_rounds=N bounds the transition queue)
   lprl exp <name> [key=value ...]                name: fig1..fig12, table2/3/7/10/11, all
   lprl serve [engine=native|pjrt] [key=value ...]
        native: task= preset= hidden= seed= train_steps=    (policy source)
@@ -77,8 +80,8 @@ fn cmd_train(kv: &[(String, String)]) -> anyhow::Result<()> {
     // inside a run with a silently defaulted action repeat
     cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
     eprintln!(
-        "training {} / {} (seed {}, {} steps, hidden {}, batch {}, num_envs {})",
-        cfg.task, cfg.preset, cfg.seed, cfg.steps, cfg.hidden, cfg.batch, cfg.num_envs
+        "training {} / {} (seed {}, {} steps, hidden {}, batch {}, num_envs {}, {})",
+        cfg.task, cfg.preset, cfg.seed, cfg.steps, cfg.hidden, cfg.batch, cfg.num_envs, cfg.sync_mode
     );
     let out = train(&cfg);
     println!("task={} preset={} seed={}", cfg.task, cfg.preset, cfg.seed);
@@ -90,9 +93,16 @@ fn cmd_train(kv: &[(String, String)]) -> anyhow::Result<()> {
         out.final_score, out.crashed, out.skipped_steps, out.wall_secs
     );
     println!(
-        "throughput: collect {:.0} steps/s ({} envs)  learner {:.1} updates/s",
-        out.collect_steps_per_sec, cfg.num_envs, out.updates_per_sec
+        "throughput: collect {:.0} steps/s ({} envs, {})  learner {:.1} updates/s ({} updates)",
+        out.collect_steps_per_sec, cfg.num_envs, cfg.sync_mode, out.updates_per_sec, out.updates
     );
+    if out.snapshot_refreshes > 0 {
+        println!(
+            "snapshots: {} refreshes, mean publish {:.1} us",
+            out.snapshot_refreshes,
+            out.snapshot_publish_secs * 1e6 / out.snapshot_refreshes as f64
+        );
+    }
     let path = std::path::Path::new(&cfg.out_dir)
         .join("train")
         .join(format!("{}_{}_s{}.csv", cfg.task, cfg.preset, cfg.seed));

@@ -1,4 +1,5 @@
-//! Persistent worker pool for the GEMM backend.
+//! Persistent worker pool for the GEMM backend and the vectorized
+//! env-stepping collector.
 //!
 //! The seed engine spawned a fresh `std::thread::scope` for every GEMM
 //! call (`par_rows`), which costs one spawn+join per thread per call —
@@ -15,38 +16,57 @@
 //!   but *what* each task computes is a pure function of its index —
 //!   results are bitwise identical for any worker count (including the
 //!   serial fallback).
+//! * Claiming is **chunked** ([`ThreadPool::run_chunked`]): workers claim
+//!   `grain` consecutive indices per atomic RMW, so jobs made of many
+//!   tiny tasks (per-env physics stepping, thin GEMM rows) don't pay one
+//!   contended `fetch_add` per index. `run` is the `grain = 1` special
+//!   case. Chunking only changes how indices are *batched onto* workers,
+//!   never what an index computes, so the thread-count/grain bitwise
+//!   invariance is preserved.
 //! * If a second thread calls [`ThreadPool::run`] while a job is active
 //!   (e.g. `run_many` training several agents in parallel), it simply
 //!   runs its own tasks inline instead of queueing — no blocking, no
 //!   nested-parallelism deadlock, same results.
+//! * Dropping a pool shuts its workers down and joins them, so
+//!   short-lived pools (the async collector builds one per training run,
+//!   sized to `num_envs`) don't leak parked threads. The [`global`] pool
+//!   is never dropped.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// A published job: a lifetime-erased task body plus claim/finish counters.
 struct Job {
-    /// Borrow of the caller's closure, valid until `completed == total`
+    /// Borrow of the caller's closure, valid until `completed == units`
     /// (the submitter blocks in [`ThreadPool::run`] until then).
     f: *const (dyn Fn(usize) + Sync),
+    /// Next *chunk* to claim (chunk `u` covers indices
+    /// `u*grain .. min((u+1)*grain, total)`).
     next: AtomicUsize,
+    /// Chunks fully executed.
     completed: AtomicUsize,
+    /// Number of claim units: `ceil(total / grain)`.
+    units: usize,
+    /// Total task-index count.
     total: usize,
+    /// Indices claimed per atomic RMW.
+    grain: usize,
     /// Set when any task body panicked; the submitter re-raises after
     /// every task has been accounted for.
     poisoned: AtomicBool,
 }
 
 // Safety: `f` points at a `Sync` closure that outlives every dereference
-// (the submitting thread waits for `completed == total` before returning),
+// (the submitting thread waits for `completed == units` before returning),
 // and the counters are atomics.
 unsafe impl Send for Job {}
 unsafe impl Sync for Job {}
 
 impl Job {
-    /// Claim and run tasks until none are left; notify the submitter when
-    /// the last task finishes.
+    /// Claim and run chunks until none are left; notify the submitter
+    /// when the last chunk finishes.
     ///
-    /// Task panics are caught at the boundary so a claimed task always
+    /// Task panics are caught at the boundary so a claimed chunk always
     /// increments `completed` — otherwise a panicking worker would leave
     /// the submitter waiting forever, and a panicking submitter would
     /// unwind (freeing the closure and output buffers) while workers
@@ -54,15 +74,23 @@ impl Job {
     /// the submitting thread once the job is fully drained.
     fn run(&self, shared: &Shared) {
         loop {
-            let t = self.next.fetch_add(1, Ordering::Relaxed);
-            if t >= self.total {
+            let u = self.next.fetch_add(1, Ordering::Relaxed);
+            if u >= self.units {
                 return;
             }
+            let lo = u * self.grain;
+            let hi = (lo + self.grain).min(self.total);
             let f = unsafe { &*self.f };
-            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t))).is_err() {
+            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for t in lo..hi {
+                    f(t);
+                }
+            }))
+            .is_err()
+            {
                 self.poisoned.store(true, Ordering::Release);
             }
-            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.units {
                 // take the lock so the submitter cannot miss the wakeup
                 let _g = shared.done_mx.lock().unwrap();
                 shared.done_cv.notify_all();
@@ -76,6 +104,8 @@ struct Shared {
     work_cv: Condvar,
     done_mx: Mutex<()>,
     done_cv: Condvar,
+    /// Tells the workers to exit (set by [`ThreadPool::drop`]).
+    shutdown: AtomicBool,
 }
 
 /// A fixed set of worker threads executing one indexed job at a time.
@@ -84,6 +114,7 @@ pub struct ThreadPool {
     /// Number of background workers (the submitter is an extra worker).
     pub workers: usize,
     submit: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
@@ -95,29 +126,44 @@ impl ThreadPool {
             work_cv: Condvar::new(),
             done_mx: Mutex::new(()),
             done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
         });
         let workers = threads.saturating_sub(1);
+        let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
             let sh = shared.clone();
-            std::thread::Builder::new()
-                .name(format!("lprl-gemm-{i}"))
-                .spawn(move || worker_loop(sh))
-                .expect("spawning pool worker");
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("lprl-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawning pool worker"),
+            );
         }
-        ThreadPool { shared, workers, submit: Mutex::new(()) }
+        ThreadPool { shared, workers, submit: Mutex::new(()), handles }
     }
 
     /// Run `f(0..total)` across the pool; returns when all tasks finished.
+    /// One claim per index — see [`ThreadPool::run_chunked`] for jobs
+    /// made of many tiny tasks.
+    pub fn run(&self, total: usize, f: impl Fn(usize) + Sync) {
+        self.run_chunked(total, 1, f)
+    }
+
+    /// Run `f(0..total)` with workers claiming `grain` consecutive
+    /// indices per atomic RMW; returns when all tasks finished.
     ///
     /// Falls back to inline serial execution when the pool has no
-    /// workers, the job is trivial, or another job is already running —
-    /// all three paths execute the identical per-task code, so the output
-    /// is bitwise independent of which path was taken.
-    pub fn run(&self, total: usize, f: impl Fn(usize) + Sync) {
+    /// workers, the job fits a single claim unit, or another job is
+    /// already running — all paths execute the identical per-index code
+    /// in ascending order within a chunk, so the output is bitwise
+    /// independent of which path (and which grain) was taken.
+    pub fn run_chunked(&self, total: usize, grain: usize, f: impl Fn(usize) + Sync) {
         if total == 0 {
             return;
         }
-        if self.workers == 0 || total == 1 {
+        let grain = grain.max(1);
+        let units = total.div_ceil(grain);
+        if self.workers == 0 || units == 1 {
             for t in 0..total {
                 f(t);
             }
@@ -134,14 +180,17 @@ impl ThreadPool {
             }
         };
         let fat: &(dyn Fn(usize) + Sync) = &f;
-        // Safety: erase the borrow's lifetime; `run` does not return until
-        // every task completed, so workers never touch `f` after it dies.
+        // Safety: erase the borrow's lifetime; `run_chunked` does not
+        // return until every task completed, so workers never touch `f`
+        // after it dies.
         let fat: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fat) };
         let job = Arc::new(Job {
             f: fat,
             next: AtomicUsize::new(0),
             completed: AtomicUsize::new(0),
+            units,
             total,
+            grain,
             poisoned: AtomicBool::new(false),
         });
         {
@@ -152,7 +201,7 @@ impl ThreadPool {
         // participate instead of just waiting
         job.run(&self.shared);
         let mut g = self.shared.done_mx.lock().unwrap();
-        while job.completed.load(Ordering::Acquire) < total {
+        while job.completed.load(Ordering::Acquire) < units {
             g = self.shared.done_cv.wait(g).unwrap();
         }
         drop(g);
@@ -166,13 +215,32 @@ impl ThreadPool {
     }
 }
 
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // No job can be active here: `run_chunked` borrows `&self` and
+        // blocks until its job drains, so reaching Drop means the pool
+        // is idle. Wake the parked workers and join them.
+        self.shared.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.shared.job.lock().unwrap();
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
             let mut g = shared.job.lock().unwrap();
             loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
                 if let Some(j) = g.as_ref() {
-                    if j.next.load(Ordering::Relaxed) < j.total {
+                    if j.next.load(Ordering::Relaxed) < j.units {
                         break j.clone();
                     }
                 }
@@ -184,8 +252,10 @@ fn worker_loop(shared: Arc<Shared>) {
 }
 
 /// Total parallel lanes: `LPRL_THREADS` env override, else host
-/// parallelism capped at 16 (same cap the seed engine used).
-fn default_threads() -> usize {
+/// parallelism capped at 16 (same cap the seed engine used). Governs
+/// both the [`global`] GEMM pool and the size of per-run env-stepping
+/// pools (`min(num_envs, default_threads())`).
+pub fn default_threads() -> usize {
     if let Ok(v) = std::env::var("LPRL_THREADS") {
         if let Ok(n) = v.parse::<usize>() {
             return n.clamp(1, 64);
@@ -215,6 +285,54 @@ mod tests {
             });
             assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "total={total}");
         }
+    }
+
+    #[test]
+    fn chunked_claiming_runs_every_index_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for total in [1usize, 2, 7, 64, 1000] {
+            for grain in [1usize, 2, 3, 16, 1000, 5000] {
+                let hits: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+                pool.run_chunked(total, grain, |t| {
+                    hits[t].fetch_add(1, Ordering::Relaxed);
+                });
+                assert!(
+                    hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                    "total={total} grain={grain}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_results_are_grain_and_thread_count_invariant() {
+        // every (pool size, grain) combination must produce bitwise the
+        // same per-index outputs: an index's result is a pure function
+        // of the index, never of the batching
+        let total = 257usize;
+        let compute = |t: usize| (t as f64 + 0.5).sqrt().to_bits();
+        let reference: Vec<u64> = (0..total).map(compute).collect();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            for grain in [1usize, 3, 64, 300] {
+                let out: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+                pool.run_chunked(total, grain, |t| {
+                    out[t].store(compute(t), Ordering::Relaxed);
+                });
+                let got: Vec<u64> = out.iter().map(|v| v.load(Ordering::Relaxed)).collect();
+                assert_eq!(got, reference, "threads={threads} grain={grain}");
+            }
+        }
+    }
+
+    #[test]
+    fn grain_zero_is_treated_as_one() {
+        let pool = ThreadPool::new(3);
+        let sum = AtomicU64::new(0);
+        pool.run_chunked(10, 0, |t| {
+            sum.fetch_add(t as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
     }
 
     #[test]
@@ -250,7 +368,7 @@ mod tests {
             for _ in 0..4 {
                 s.spawn(|| {
                     for _ in 0..50 {
-                        pool.run(33, |t| {
+                        pool.run_chunked(33, 4, |t| {
                             sum.fetch_add(t as u64, Ordering::Relaxed);
                         });
                     }
@@ -277,6 +395,21 @@ mod tests {
             sum.fetch_add(t as u64, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 120);
+    }
+
+    #[test]
+    fn dropping_a_pool_joins_its_workers() {
+        // short-lived pools (async collector) must not leak parked
+        // threads: build, use, drop many pools in a row
+        for _ in 0..8 {
+            let pool = ThreadPool::new(3);
+            let sum = AtomicU64::new(0);
+            pool.run_chunked(20, 4, |t| {
+                sum.fetch_add(t as u64, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 190);
+            drop(pool);
+        }
     }
 
     #[test]

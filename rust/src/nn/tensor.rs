@@ -35,6 +35,24 @@ impl Tensor {
         Tensor { shape: shape.to_vec(), data: vec![v; n] }
     }
 
+    /// Stage `batch` flat rows of shape `row_shape` into this tensor as
+    /// `[batch, row_shape…]`, reallocating only when the target shape
+    /// changes — the shared allocation-free staging path behind the
+    /// collectors' and evaluators' per-step forwards (one definition;
+    /// `sac::Policy::stage_obs` and the trainers delegate here).
+    pub fn stage_rows(&mut self, flat: &[f32], batch: usize, row_shape: &[usize]) -> &Tensor {
+        let row_len: usize = row_shape.iter().product();
+        assert_eq!(flat.len(), batch * row_len, "staging buffer: want {} floats", batch * row_len);
+        let mut shape = Vec::with_capacity(row_shape.len() + 1);
+        shape.push(batch);
+        shape.extend_from_slice(row_shape);
+        if self.shape != shape {
+            *self = Tensor::zeros(&shape);
+        }
+        self.data.copy_from_slice(flat);
+        self
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.data.len()

@@ -199,6 +199,46 @@ impl ReplayBuffer {
         }
     }
 
+    /// Total f32 values currently stored across all transition fields —
+    /// the cost model for [`ReplayBuffer::fingerprint`] (callers cap on
+    /// it to keep the hash off paper-scale hot paths).
+    pub fn stored_floats(&self) -> usize {
+        self.len * (2 * self.obs_dim + self.act_dim + 2)
+    }
+
+    /// Order-independent multiset hash of every stored transition: each
+    /// transition hashes (FNV-1a over its raw f32 bits) independently
+    /// and the per-transition hashes are combined with wrapping
+    /// addition, so two buffers match iff they hold the same transition
+    /// *multiset* — regardless of insertion order or ring position.
+    /// This is the observable behind the async trainer's relaxed
+    /// determinism contract ("same transitions, any interleave").
+    pub fn fingerprint(&self) -> u64 {
+        let mut obs = vec![0.0f32; self.obs_dim];
+        let mut next = vec![0.0f32; self.obs_dim];
+        let mut act = vec![0.0f32; self.act_dim];
+        let mut total = 0u64;
+        for i in 0..self.len {
+            self.obs.read(i * self.obs_dim, &mut obs);
+            self.next_obs.read(i * self.obs_dim, &mut next);
+            self.act.read(i * self.act_dim, &mut act);
+            let mut h = 0xcbf29ce484222325u64; // FNV offset basis
+            let mut eat = |v: f32| {
+                for b in v.to_bits().to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+            };
+            obs.iter().for_each(|&v| eat(v));
+            act.iter().for_each(|&v| eat(v));
+            eat(self.rew[i]);
+            next.iter().for_each(|&v| eat(v));
+            eat(self.not_done[i]);
+            total = total.wrapping_add(h);
+        }
+        total
+    }
+
     /// Sample with DRQ random-crop augmentation (allocating wrapper over
     /// [`ReplayBuffer::sample_aug_into`]).
     pub fn sample_aug(&self, batch: usize, pad: usize, rng: &mut Pcg64) -> Batch {
@@ -453,6 +493,28 @@ mod tests {
         let b = buf.sample_aug(4, 2, &mut rng);
         assert_eq!(b.obs.shape, vec![4, 1, 8, 8]);
         assert!(b.obs.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn fingerprint_is_order_independent_and_content_sensitive() {
+        let mk = || ReplayBuffer::new(16, &[2], 1, Storage::F32);
+        let t = |i: f32| ([i, i + 0.5], [0.1 * i], i, [i + 1.0, i + 1.5], i as usize % 3 == 0);
+        let mut a = mk();
+        let mut b = mk();
+        for i in 0..6 {
+            let (o, ac, r, n, d) = t(i as f32);
+            a.push(&o, &ac, r, &n, d);
+        }
+        for i in (0..6).rev() {
+            let (o, ac, r, n, d) = t(i as f32);
+            b.push(&o, &ac, r, &n, d);
+        }
+        assert_eq!(a.fingerprint(), b.fingerprint(), "same multiset, any order");
+        let (o, ac, r, n, d) = t(99.0);
+        b.push(&o, &ac, r, &n, d);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "extra transition must change the hash");
+        // empty buffers agree
+        assert_eq!(mk().fingerprint(), mk().fingerprint());
     }
 
     #[test]

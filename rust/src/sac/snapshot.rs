@@ -94,6 +94,20 @@ impl Policy {
         }
     }
 
+    /// Allocation-free [`Policy::obs_tensor`]: stage `batch`
+    /// concatenated observations into a caller-owned tensor, resizing it
+    /// only when the batch size changes (delegates to
+    /// [`Tensor::stage_rows`]). Hot paths that act every step on the
+    /// same batch shape (the async collector, the lockstep evaluator)
+    /// reuse one staging tensor instead of allocating a copy of the
+    /// observation buffer per forward.
+    pub fn stage_obs<'a>(&self, stage: &'a mut Tensor, flat: &[f32], batch: usize) -> &'a Tensor {
+        match self.pixel_shape {
+            Some((c, h)) => stage.stage_rows(flat, batch, &[c, h, h]),
+            None => stage.stage_rows(flat, batch, &[self.obs_len]),
+        }
+    }
+
     /// Batched action selection: `[B, …] → [B, act_dim]`.
     ///
     /// In [`ActMode::Deterministic`], row `r` of the result is bitwise
@@ -183,6 +197,24 @@ mod tests {
         assert!(a1.data.iter().all(|v| (-1.0..=1.0).contains(v)));
         // the agent itself was not consulted — its RNG is untouched
         let _ = agent.act(&[0.1, 0.2, 0.3, 0.4], false);
+    }
+
+    #[test]
+    fn stage_obs_matches_obs_tensor_and_reuses_the_buffer() {
+        let agent =
+            SacAgent::new(SacConfig::states(4, 2, 16), Methods::ours(), Precision::fp16(), 1);
+        let policy = agent.policy();
+        let flat: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let want = policy.obs_tensor(&flat, 3);
+        let mut stage = Tensor::default();
+        let got = policy.stage_obs(&mut stage, &flat, 3);
+        assert_eq!(want.shape, got.shape);
+        assert_eq!(want.data, got.data);
+        let ptr = stage.data.as_ptr();
+        let flat2: Vec<f32> = (0..12).map(|i| i as f32 * 0.3).collect();
+        policy.stage_obs(&mut stage, &flat2, 3);
+        assert_eq!(ptr, stage.data.as_ptr(), "same batch shape must not reallocate");
+        assert_eq!(stage.data, flat2);
     }
 
     #[test]
