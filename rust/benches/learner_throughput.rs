@@ -1,0 +1,395 @@
+//! Learner-throughput benchmark: gradient updates/sec of the SAC hot
+//! loop after the PR-5 overhaul (pool-parallel optimizer, allocation-
+//! free update rounds, fused target-side forwards).
+//!
+//! Two layers of measurement:
+//!
+//! * **micro** — the isolated learner loop (pre-filled replay → round
+//!   arena → `SacAgent::update_round`), with a counting global
+//!   allocator reporting steady-state heap allocations per update
+//!   (the driver path — sampling, optimizer, EMA, gradient staging —
+//!   is allocation-free; what remains is forward/backward activation
+//!   tensors, tracked here so future PRs can drive it to zero);
+//! * **train** — full `coordinator::train` runs (states + pixels,
+//!   strict + async) reporting the `TrainOutcome` updates/sec next to
+//!   collection throughput.
+//!
+//! Before timing anything the bench asserts the bitwise gates: fused
+//! rounds vs per-update calls (states and pixels), and strict
+//! `num_envs=1` seed-determinism.
+//!
+//! ```bash
+//! cargo bench --bench learner_throughput            # full run, writes BENCH_learner.json
+//! cargo bench --bench learner_throughput -- --test  # CI smoke: tiny, no JSON
+//! ```
+
+use lprl::config::RunConfig;
+use lprl::coordinator::train;
+use lprl::lowp::Precision;
+use lprl::replay::{ReplayBuffer, RoundArena, Storage};
+use lprl::rngs::Pcg64;
+use lprl::sac::{Methods, SacAgent, SacConfig};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counts every heap allocation so the bench can report steady-state
+/// allocations per update.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn preset(name: &str) -> (Methods, Precision) {
+    match name {
+        "fp32" => (Methods::none(), Precision::Fp32),
+        "fp16_ours" => (Methods::ours(), Precision::fp16()),
+        "fp16_naive" => (Methods::none(), Precision::fp16()),
+        other => panic!("unknown preset {other}"),
+    }
+}
+
+struct MicroShape {
+    obs_dim: usize,
+    act_dim: usize,
+    hidden: usize,
+    batch: usize,
+    /// Updates per round (exercises the fused grouping when > 1).
+    round: usize,
+    pixels: bool,
+    img: usize,
+    filters: usize,
+}
+
+fn build_agent(name: &str, sh: &MicroShape, seed: u64) -> SacAgent {
+    let (methods, prec) = preset(name);
+    if sh.pixels {
+        SacAgent::new_pixels(
+            SacConfig::pixels(sh.obs_dim, sh.act_dim, sh.hidden),
+            methods,
+            prec,
+            seed,
+            3,
+            sh.img,
+            sh.filters,
+        )
+    } else {
+        SacAgent::new(SacConfig::states(sh.obs_dim, sh.act_dim, sh.hidden), methods, prec, seed)
+    }
+}
+
+fn fill_replay(sh: &MicroShape, storage: Storage, n: usize, rng: &mut Pcg64) -> ReplayBuffer {
+    let obs_shape: Vec<usize> =
+        if sh.pixels { vec![3, sh.img, sh.img] } else { vec![sh.obs_dim] };
+    let mut replay = ReplayBuffer::new(n, &obs_shape, sh.act_dim, storage);
+    let obs_len: usize = obs_shape.iter().product();
+    let mut obs = vec![0.0f32; obs_len];
+    let mut next = vec![0.0f32; obs_len];
+    let mut act = vec![0.0f32; sh.act_dim];
+    for _ in 0..n {
+        for v in obs.iter_mut() {
+            *v = if sh.pixels { rng.uniform_f32() } else { rng.normal_f32() };
+        }
+        for v in next.iter_mut() {
+            *v = if sh.pixels { rng.uniform_f32() } else { rng.normal_f32() };
+        }
+        for v in act.iter_mut() {
+            *v = rng.uniform_in(-1.0, 1.0);
+        }
+        replay.push(&obs, &act, rng.uniform_f32(), &next, false);
+    }
+    replay
+}
+
+struct MicroRow {
+    preset: &'static str,
+    obs: &'static str,
+    batch: usize,
+    hidden: usize,
+    round: usize,
+    updates_per_sec: f64,
+    allocs_per_update: f64,
+}
+
+fn micro_bench(name: &'static str, sh: &MicroShape, rounds: usize) -> MicroRow {
+    let mut agent = build_agent(name, sh, 5);
+    let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
+    let mut rng = Pcg64::seed(11);
+    let replay = {
+        let mut r = Pcg64::seed(23);
+        fill_replay(sh, storage, 512.max(sh.batch * 2), &mut r)
+    };
+    let aug = if sh.pixels { Some(2) } else { None };
+    let mut arena = RoundArena::default();
+    // warm-up: fills every workspace/arena buffer
+    for _ in 0..3 {
+        replay.sample_round_into(sh.round, sh.batch, aug, &mut rng, &mut arena);
+        agent.update_round(arena.batches());
+    }
+    let a0 = ALLOCS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        replay.sample_round_into(sh.round, sh.batch, aug, &mut rng, &mut arena);
+        agent.update_round(arena.batches());
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let allocs = ALLOCS.load(Ordering::Relaxed) - a0;
+    let n_updates = (rounds * sh.round) as f64;
+    MicroRow {
+        preset: name,
+        obs: if sh.pixels { "pixels" } else { "states" },
+        batch: sh.batch,
+        hidden: sh.hidden,
+        round: sh.round,
+        updates_per_sec: n_updates / secs,
+        allocs_per_update: allocs as f64 / n_updates,
+    }
+}
+
+/// Bitwise gate: a fused round must equal per-update calls for the
+/// paper's preset shapes. Mirrors the `learner_parity` integration test
+/// so a bench run is self-validating.
+fn assert_fused_parity(name: &'static str, sh: &MicroShape) {
+    let mut a = build_agent(name, sh, 17);
+    let mut b = build_agent(name, sh, 17);
+    let storage = if a.compute.is_low() { Storage::F16 } else { Storage::F32 };
+    let replay = {
+        let mut r = Pcg64::seed(29);
+        fill_replay(sh, storage, 128.max(sh.batch * 2), &mut r)
+    };
+    let aug = if sh.pixels { Some(2) } else { None };
+    let mut r1 = Pcg64::seed(31);
+    let mut r2 = Pcg64::seed(31);
+    let mut arena = RoundArena::default();
+    for _ in 0..4 {
+        replay.sample_round_into(sh.round, sh.batch, aug, &mut r1, &mut arena);
+        for bt in arena.batches() {
+            a.update(bt);
+        }
+        let mut arena_b = RoundArena::default();
+        replay.sample_round_into(sh.round, sh.batch, aug, &mut r2, &mut arena_b);
+        b.update_round(arena_b.batches());
+    }
+    let (ca, cb) = (a.critic.flat_params(), b.critic.flat_params());
+    assert!(
+        ca.iter().zip(&cb).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{name} fused round diverged from the per-update path"
+    );
+    let (ta, tb) = (a.target.flat_params(), b.target.flat_params());
+    assert!(
+        ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "{name} fused target diverged"
+    );
+    println!(
+        "parity gate [{name} {}]: fused round bitwise == per-update  OK",
+        if sh.pixels { "pixels" } else { "states" }
+    );
+}
+
+struct TrainRow {
+    preset: &'static str,
+    obs: &'static str,
+    mode: &'static str,
+    num_envs: usize,
+    updates_per_sec: f64,
+    collect_sps: f64,
+    wall_secs: f64,
+}
+
+fn train_bench(
+    name: &'static str,
+    mode: &'static str,
+    pixels: bool,
+    num_envs: usize,
+    steps: usize,
+    hidden: usize,
+    batch: usize,
+) -> TrainRow {
+    let mut cfg = RunConfig {
+        task: "pendulum_swingup".into(),
+        preset: name.into(),
+        steps,
+        seed_steps: (steps / 8).max(num_envs),
+        batch,
+        hidden,
+        eval_every: steps, // single final eval, outside the update timer
+        eval_episodes: 1,
+        num_envs,
+        sync_mode: mode.into(),
+        ..Default::default()
+    };
+    if pixels {
+        cfg.pixels = true;
+        cfg.image_size = 21;
+        cfg.filters = 8;
+        cfg.feature_dim = 16;
+        cfg.hidden = hidden.min(64);
+        cfg.batch = batch.min(16);
+    }
+    let out = train(&cfg);
+    assert!(!out.crashed, "{name} {mode} pixels={pixels} crashed");
+    TrainRow {
+        preset: name,
+        obs: if pixels { "pixels" } else { "states" },
+        mode,
+        num_envs,
+        updates_per_sec: out.updates_per_sec,
+        collect_sps: out.collect_steps_per_sec,
+        wall_secs: out.wall_secs,
+    }
+}
+
+fn write_json(micro: &[MicroRow], trains: &[TrainRow]) -> std::io::Result<std::path::PathBuf> {
+    let mut out = String::new();
+    out.push_str("{\n  \"bench\": \"learner\",\n  \"task\": \"pendulum_swingup\",\n");
+    out.push_str("  \"gates\": {\"fused_parity\": \"bitwise\", \"strict_determinism\": true},\n");
+    out.push_str("  \"micro\": [\n");
+    for (i, r) in micro.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"obs\": \"{}\", \"batch\": {}, \"hidden\": {}, \"round\": {}, \"updates_per_sec\": {:.2}, \"allocs_per_update\": {:.1}}}",
+            r.preset, r.obs, r.batch, r.hidden, r.round, r.updates_per_sec, r.allocs_per_update
+        );
+        out.push_str(if i + 1 < micro.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"train\": [\n");
+    for (i, r) in trains.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"obs\": \"{}\", \"mode\": \"{}\", \"num_envs\": {}, \"updates_per_sec\": {:.2}, \"collect_steps_per_sec\": {:.1}, \"wall_secs\": {:.3}}}",
+            r.preset, r.obs, r.mode, r.num_envs, r.updates_per_sec, r.collect_sps, r.wall_secs
+        );
+        out.push_str(if i + 1 < trains.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .unwrap()
+        .join("BENCH_learner.json");
+    std::fs::write(&path, out)?;
+    Ok(path)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--test");
+
+    // -- correctness gates ------------------------------------------------
+    let states_gate = MicroShape {
+        obs_dim: 6,
+        act_dim: 2,
+        hidden: 24,
+        batch: 8,
+        round: 5,
+        pixels: false,
+        img: 0,
+        filters: 0,
+    };
+    let pixels_gate = MicroShape {
+        obs_dim: 8,
+        act_dim: 2,
+        hidden: 24,
+        batch: 2,
+        round: 3,
+        pixels: true,
+        img: 17,
+        filters: 4,
+    };
+    for name in ["fp32", "fp16_ours", "fp16_naive"] {
+        assert_fused_parity(name, &states_gate);
+    }
+    assert_fused_parity("fp16_ours", &pixels_gate);
+
+    // strict num_envs=1 determinism (the seed-trainer contract)
+    let det_cfg = RunConfig {
+        task: "pendulum_swingup".into(),
+        preset: "fp16_ours".into(),
+        steps: 48,
+        seed_steps: 16,
+        batch: 8,
+        hidden: 24,
+        eval_every: 24,
+        eval_episodes: 1,
+        ..Default::default()
+    };
+    let (d1, d2) = (train(&det_cfg), train(&det_cfg));
+    assert_eq!(d1.eval_curve.points, d2.eval_curve.points, "strict run must be deterministic");
+    println!("determinism gate [strict num_envs=1]: reruns match  OK");
+
+    // -- micro: the isolated learner loop ---------------------------------
+    let (micro_shapes, micro_rounds): (Vec<(&'static str, MicroShape)>, usize) = if smoke {
+        (
+            vec![
+                ("fp32", MicroShape { obs_dim: 6, act_dim: 2, hidden: 32, batch: 16, round: 4, pixels: false, img: 0, filters: 0 }),
+                ("fp16_ours", MicroShape { obs_dim: 6, act_dim: 2, hidden: 32, batch: 16, round: 4, pixels: false, img: 0, filters: 0 }),
+            ],
+            10,
+        )
+    } else {
+        (
+            vec![
+                ("fp32", MicroShape { obs_dim: 17, act_dim: 6, hidden: 256, batch: 128, round: 8, pixels: false, img: 0, filters: 0 }),
+                ("fp16_ours", MicroShape { obs_dim: 17, act_dim: 6, hidden: 256, batch: 128, round: 8, pixels: false, img: 0, filters: 0 }),
+                ("fp16_ours", MicroShape { obs_dim: 16, act_dim: 2, hidden: 64, batch: 16, round: 8, pixels: true, img: 21, filters: 8 }),
+            ],
+            40,
+        )
+    };
+    let mut micro = Vec::new();
+    for &(name, ref sh) in &micro_shapes {
+        let row = micro_bench(name, sh, micro_rounds);
+        println!(
+            "micro {:>10} {:<6} batch {:>3} hidden {:>3} round {}: {:>9.1} upd/s  {:>7.1} allocs/upd",
+            row.preset, row.obs, row.batch, row.hidden, row.round, row.updates_per_sec, row.allocs_per_update
+        );
+        micro.push(row);
+    }
+
+    // -- train: updates/sec inside the full trainer -----------------------
+    let mut trains = Vec::new();
+    if smoke {
+        trains.push(train_bench("fp16_ours", "strict", false, 4, 64, 32, 16));
+    } else {
+        for name in ["fp32", "fp16_ours"] {
+            for mode in ["strict", "async"] {
+                trains.push(train_bench(name, mode, false, 8, 1500, 256, 128));
+            }
+        }
+        for mode in ["strict", "async"] {
+            trains.push(train_bench("fp16_ours", mode, true, 8, 256, 64, 16));
+        }
+    }
+    for r in &trains {
+        println!(
+            "train {:>10} {:<6} {:>6} num_envs {}: learner {:>8.2} upd/s  collect {:>9.1} steps/s  wall {:>6.2}s",
+            r.preset, r.obs, r.mode, r.num_envs, r.updates_per_sec, r.collect_sps, r.wall_secs
+        );
+    }
+
+    if smoke {
+        println!("smoke mode: no JSON written");
+        return;
+    }
+    match write_json(&micro, &trains) {
+        Ok(p) => println!("wrote {}", p.display()),
+        Err(e) => eprintln!("could not write BENCH_learner.json: {e}"),
+    }
+}

@@ -55,9 +55,9 @@ use crate::config::RunConfig;
 use crate::envs::{sanitize_action, VecEnv};
 use crate::nn::pool::{default_threads, ThreadPool};
 use crate::nn::Tensor;
-use crate::replay::{ReplayBuffer, Storage};
+use crate::replay::{ReplayBuffer, RoundArena, Storage};
 use crate::rngs::Pcg64;
-use crate::sac::{ActMode, Batch, Policy, SacAgent};
+use crate::sac::{ActMode, Policy, SacAgent};
 use crate::telemetry::{LogHistogram, Series};
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -107,6 +107,12 @@ impl Iterator for Rounds<'_> {
 
 /// One collect round crossing the thread boundary: `k` transitions in
 /// flat row-major chunks, exactly the `ReplayBuffer::push_batch` layout.
+/// Consumed chunks flow back to the collector through the queue's spare
+/// stack ([`Queue::recycle`]), so the steady-state pipeline re-fills
+/// existing vectors instead of allocating fresh ones every round — for
+/// pixel observations the obs/next-obs chunks are by far the largest
+/// recurring allocation the async trainer made.
+#[derive(Default)]
 struct Chunk {
     base_step: usize,
     k: usize,
@@ -114,6 +120,33 @@ struct Chunk {
     act: Vec<f32>,
     rew: Vec<f32>,
     next_obs: Vec<f32>,
+}
+
+impl Chunk {
+    /// Re-fill a (possibly recycled) chunk in place: `clear` +
+    /// `extend_from_slice` keeps each vector's capacity, so a chunk that
+    /// has been through the queue once never reallocates.
+    #[allow(clippy::too_many_arguments)]
+    fn fill(
+        &mut self,
+        base_step: usize,
+        k: usize,
+        obs: &[f32],
+        act: &[f32],
+        rew: &[f32],
+        next_obs: &[f32],
+    ) {
+        self.base_step = base_step;
+        self.k = k;
+        self.obs.clear();
+        self.obs.extend_from_slice(obs);
+        self.act.clear();
+        self.act.extend_from_slice(act);
+        self.rew.clear();
+        self.rew.extend_from_slice(rew);
+        self.next_obs.clear();
+        self.next_obs.extend_from_slice(next_obs);
+    }
 }
 
 enum Msg {
@@ -134,6 +167,10 @@ struct Queue {
     stop: AtomicBool,
     /// Collector exited (normally or by panic): unblocks the learner.
     closed: AtomicBool,
+    /// Consumed chunks flowing back to the collector for reuse, bounded
+    /// by the queue depth (at most `cap + 1` chunks are ever in flight:
+    /// `cap` queued plus the one the collector is filling).
+    spare: Mutex<Vec<Chunk>>,
 }
 
 impl Queue {
@@ -145,6 +182,23 @@ impl Queue {
             not_empty: Condvar::new(),
             stop: AtomicBool::new(false),
             closed: AtomicBool::new(false),
+            spare: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// A recycled chunk if one is waiting, else a fresh (empty) one.
+    /// Never blocks.
+    fn take_spare(&self) -> Chunk {
+        self.spare.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Hand a consumed chunk back to the collector. Drops the chunk
+    /// instead of hoarding it once the spare stack covers the maximum
+    /// number in flight.
+    fn recycle(&self, chunk: Chunk) {
+        let mut g = self.spare.lock().unwrap();
+        if g.len() <= self.cap {
+            g.push(chunk);
         }
     }
 
@@ -350,14 +404,15 @@ fn collector(
         }
         let grain = if pixels { 1 } else { k.div_ceil(lanes) };
         venv.par_step_into(k, &acts, &mut next_flat[..k * obs_len], &mut rew_buf[..k], env_pool, grain);
-        let chunk = Chunk {
+        let mut chunk = queue.take_spare();
+        chunk.fill(
             base_step,
             k,
-            obs: obs_flat[..k * obs_len].to_vec(),
-            act: acts.data,
-            rew: rew_buf[..k].to_vec(),
-            next_obs: next_flat[..k * obs_len].to_vec(),
-        };
+            &obs_flat[..k * obs_len],
+            &acts.data,
+            &rew_buf[..k],
+            &next_flat[..k * obs_len],
+        );
         obs_flat[..k * obs_len].copy_from_slice(&next_flat[..k * obs_len]);
         for i in 0..k {
             ep_step[i] += 1;
@@ -396,7 +451,7 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
     let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));
     let mut grad_hist = LogHistogram::new(-12, 4, 2);
     let mut sched = UpdateSchedule::new(cfg);
-    let mut batch_buf = Batch::default();
+    let mut arena = RoundArena::default();
     let done_buf = vec![false; n];
 
     let mut crashed = false;
@@ -433,6 +488,10 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
                 Some(Msg::Chunk(c)) => {
                     debug_assert_eq!((c.base_step, c.k), (base_step, k));
                     replay.push_batch(k, &c.obs, &c.act, &c.rew, &c.next_obs, &done_buf[..k]);
+                    // hand the consumed chunk straight back to the
+                    // collector: its vectors get re-filled, not
+                    // reallocated
+                    queue.recycle(c);
                     // the exact strict-loop update accountant, shared
                     // code — update counts cannot drift between modes
                     let mut updated = false;
@@ -443,7 +502,7 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
                             &mut agent,
                             &replay,
                             &mut rng,
-                            &mut batch_buf,
+                            &mut arena,
                             &mut grad_hist,
                             base_step,
                             k,
@@ -605,6 +664,33 @@ mod tests {
         // only the padding point exists
         assert_eq!(out.eval_curve.points.len(), 1);
         assert_eq!(out.updates, 0, "no update ran before the crash");
+    }
+
+    #[test]
+    fn chunk_recycling_reuses_capacity_and_is_bounded() {
+        let q = Queue::new(2);
+        // nothing recycled yet: a fresh empty chunk
+        let mut c = q.take_spare();
+        assert_eq!(c.obs.capacity(), 0);
+        c.fill(0, 2, &[1.0; 8], &[0.5; 2], &[0.1; 2], &[2.0; 8]);
+        let obs_ptr = c.obs.as_ptr();
+        let obs_cap = c.obs.capacity();
+        q.recycle(c);
+        // the recycled chunk comes back with its buffers intact...
+        let mut c2 = q.take_spare();
+        assert_eq!(c2.obs.as_ptr(), obs_ptr);
+        // ...and re-filling a same-size round does not reallocate
+        c2.fill(4, 2, &[3.0; 8], &[0.2; 2], &[0.3; 2], &[4.0; 8]);
+        assert_eq!(c2.obs.capacity(), obs_cap);
+        assert_eq!(c2.obs.as_ptr(), obs_ptr);
+        assert_eq!(c2.obs, vec![3.0; 8]);
+        assert_eq!(c2.base_step, 4);
+        q.recycle(c2);
+        // the spare stack is bounded by cap + 1 = 3
+        for _ in 0..10 {
+            q.recycle(Chunk::default());
+        }
+        assert!(q.spare.lock().unwrap().len() <= 3);
     }
 
     #[test]

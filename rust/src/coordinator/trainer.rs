@@ -33,9 +33,9 @@ use super::EPISODE_ENV_STEPS;
 use crate::config::RunConfig;
 use crate::envs::{sanitize_action, VecEnv};
 use crate::nn::Tensor;
-use crate::replay::{ReplayBuffer, Storage};
+use crate::replay::{ReplayBuffer, RoundArena, Storage};
 use crate::rngs::Pcg64;
-use crate::sac::{ActMode, Batch, Policy, SacAgent, SacConfig};
+use crate::sac::{ActMode, Policy, SacAgent, SacConfig};
 use crate::telemetry::{LogHistogram, Series};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
@@ -135,6 +135,19 @@ impl UpdateSchedule {
     /// One gradient step per transition of the round; returns whether
     /// any update ran (the async learner republishes its snapshot only
     /// then).
+    ///
+    /// The round runs in two phases. First the **plan** pass replays the
+    /// legacy per-transition accounting (warm-up gate, probe-point
+    /// consumption) without touching any state, so update counts and
+    /// probe placement are byte-for-byte the old schedule. Then all of
+    /// the round's minibatches are pre-sampled into the reusable arena
+    /// ([`ReplayBuffer::sample_round_into`] — replay is frozen during
+    /// the update phase and the replay-sampling stream is independent of
+    /// the agent's noise stream, so this reordering is bitwise-neutral)
+    /// and handed to `SacAgent::update_round`, which fuses target-side
+    /// forwards across consecutive updates where the target weights are
+    /// shared. A probed update runs as its own one-update round so the
+    /// probe captures exactly that update's gradients, as before.
     #[allow(clippy::too_many_arguments)]
     pub(super) fn run_round(
         &mut self,
@@ -142,12 +155,18 @@ impl UpdateSchedule {
         agent: &mut SacAgent,
         replay: &ReplayBuffer,
         rng: &mut Pcg64,
-        batch_buf: &mut Batch,
+        arena: &mut RoundArena,
         grad_hist: &mut LogHistogram,
         base_step: usize,
         k: usize,
     ) -> bool {
-        let mut updated = false;
+        // -- plan: which transitions update, and where probes land ------
+        let mut n_updates = 0usize;
+        // a round can contain several probe points (tiny steps with wide
+        // rounds); each probed update runs as its own segment below.
+        // `Vec::new` does not allocate, so probe-free rounds (all but
+        // ~3 per run) stay allocation-free.
+        let mut probe_updates: Vec<usize> = Vec::new();
         for j in 0..k {
             let s = base_step + j;
             // warm-up gate, per transition so update counts stay
@@ -163,23 +182,38 @@ impl UpdateSchedule {
                 self.next_probe += 1;
             }
             if self.next_probe < self.probe_at.len() && self.probe_at[self.next_probe] == s {
-                agent.grad_probe = Some(Vec::new());
+                probe_updates.push(n_updates);
                 self.next_probe += 1;
             }
-            if cfg.pixels {
-                replay.sample_aug_into(cfg.batch, 2, rng, batch_buf);
-            } else {
-                replay.sample_into(cfg.batch, rng, batch_buf);
+            n_updates += 1;
+        }
+        if n_updates == 0 {
+            return false;
+        }
+
+        // -- sample the whole round into the arena, then update --------
+        let aug_pad = if cfg.pixels { Some(2) } else { None };
+        replay.sample_round_into(n_updates, cfg.batch, aug_pad, rng, arena);
+        let batches = arena.batches();
+        let mut run_seg = |agent: &mut SacAgent, lo: usize, hi: usize| {
+            if lo < hi {
+                let stats = agent.update_round(&batches[lo..hi]);
+                self.skipped = stats.skipped_steps;
             }
-            let stats = agent.update(batch_buf);
-            self.skipped = stats.skipped_steps;
-            self.updates_done += 1;
-            updated = true;
+        };
+        let mut lo = 0usize;
+        for &pu in &probe_updates {
+            run_seg(agent, lo, pu);
+            agent.grad_probe = Some(Vec::new());
+            run_seg(agent, pu, pu + 1);
             if let Some(probe) = agent.grad_probe.take() {
                 grad_hist.record_all(&probe);
             }
+            lo = pu + 1;
         }
-        updated
+        run_seg(agent, lo, n_updates);
+        self.updates_done += n_updates as u64;
+        true
     }
 }
 
@@ -373,11 +407,11 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
     let mut ep_step = vec![0usize; n];
     let mut crashed = false;
 
-    // collector staging buffers + the learner's reusable sample batch
+    // collector staging buffers + the learner's reusable round arena
     let mut next_flat = vec![0.0f32; n * obs_len];
     let mut rew_buf = vec![0.0f32; n];
     let done_buf = vec![false; n]; // dm_control time limits are not true terminals
-    let mut batch_buf = Batch::default();
+    let mut arena = RoundArena::default();
     let mut obs_stage = Tensor::default();
 
     let mut collect_secs = 0.0f64;
@@ -450,7 +484,7 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
         if step >= cfg.seed_steps {
             let tu = Instant::now();
             sched.run_round(
-                cfg, &mut agent, &replay, &mut rng, &mut batch_buf, &mut grad_hist, step, k,
+                cfg, &mut agent, &replay, &mut rng, &mut arena, &mut grad_hist, step, k,
             );
             update_secs += tu.elapsed().as_secs_f64();
         }

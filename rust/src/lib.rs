@@ -71,6 +71,7 @@
 //! cargo bench --bench gemm_blocked     # GEMM backend vs seed baseline
 //! cargo bench --bench serve_throughput # single vs micro-batched serving
 //! cargo bench --bench collect_throughput # sync-vs-async collection matrix
+//! cargo bench --bench learner_throughput # learner updates/sec + fused-parity gates
 //! python -m pytest python/tests -q     # L1/L2 kernel + model tests
 //! ```
 

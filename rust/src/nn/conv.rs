@@ -192,6 +192,19 @@ impl Conv2d {
         vec![&mut self.w, &mut self.b]
     }
 
+    /// Visit the parameters in [`Conv2d::params_mut`] order without
+    /// materializing a `Vec`.
+    pub fn for_each_param(&self, f: &mut impl FnMut(&Param)) {
+        f(&self.w);
+        f(&self.b);
+    }
+
+    /// Mutable twin of [`Conv2d::for_each_param`], same order.
+    pub fn for_each_param_mut(&mut self, f: &mut impl FnMut(&mut Param)) {
+        f(&mut self.w);
+        f(&mut self.b);
+    }
+
     pub fn zero_grad(&mut self) {
         self.w.zero_grad();
         self.b.zero_grad();

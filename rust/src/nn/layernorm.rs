@@ -137,6 +137,23 @@ impl LayerNorm {
         vec![&mut self.gamma, &mut self.beta]
     }
 
+    /// Visit the parameters in [`LayerNorm::params_mut`] order without
+    /// materializing a `Vec`.
+    pub fn for_each_param(&self, f: &mut impl FnMut(&Param)) {
+        f(&self.gamma);
+        f(&self.beta);
+    }
+
+    /// Mutable twin of [`LayerNorm::for_each_param`], same order.
+    pub fn for_each_param_mut(&mut self, f: &mut impl FnMut(&mut Param)) {
+        f(&mut self.gamma);
+        f(&mut self.beta);
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.gamma.len() + self.beta.len()
+    }
+
     pub fn zero_grad(&mut self) {
         self.gamma.zero_grad();
         self.beta.zero_grad();

@@ -140,7 +140,11 @@ impl Linear {
     /// the input (and standardization buffers) into `ws` for
     /// [`Linear::backward`].
     pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut LinearWorkspace) -> Tensor {
-        ws.x = x.clone();
+        // clone_from reuses the cached tensor's allocation when shapes
+        // repeat — the steady-state training loop caches without
+        // allocating
+        ws.x.shape.clone_from(&x.shape);
+        ws.x.data.clone_from(&x.data);
         if self.weight_std {
             self.standardize_into(prec, &mut ws.what, &mut ws.row_mean, &mut ws.row_std);
             self.forward_with(x, &ws.what, prec)
@@ -208,6 +212,19 @@ impl Linear {
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
         vec![&mut self.w, &mut self.b]
+    }
+
+    /// Visit the parameters in [`Linear::params_mut`] order without
+    /// materializing a `Vec` (the allocation-free hot-path walk).
+    pub fn for_each_param(&self, f: &mut impl FnMut(&Param)) {
+        f(&self.w);
+        f(&self.b);
+    }
+
+    /// Mutable twin of [`Linear::for_each_param`], same order.
+    pub fn for_each_param_mut(&mut self, f: &mut impl FnMut(&mut Param)) {
+        f(&mut self.w);
+        f(&mut self.b);
     }
 
     pub fn zero_grad(&mut self) {

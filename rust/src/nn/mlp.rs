@@ -41,32 +41,31 @@ impl Mlp {
     }
 
     /// Inference forward: `&self`, no caches. Bitwise identical to
-    /// [`Mlp::forward_train`].
+    /// [`Mlp::forward_train`]. The input feeds the first layer directly
+    /// (no staging clone).
     pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
         let n = self.layers.len();
-        let mut h = x.clone();
-        for (i, layer) in self.layers.iter().enumerate() {
-            let z = layer.forward(&h, prec);
-            h = if i + 1 < n { relu(&z, prec) } else { z };
+        let mut h = self.layers[0].forward(x, prec);
+        for layer in &self.layers[1..n] {
+            let a = relu(&h, prec);
+            h = layer.forward(&a, prec);
         }
         h
     }
 
     /// Training forward: caches activations into `ws` for
-    /// [`Mlp::backward`].
+    /// [`Mlp::backward`]. The pre-ReLU tensors move into the workspace
+    /// (no per-layer clone), and the input feeds the first layer
+    /// directly — bitwise identical to the allocating layout.
     pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut MlpWorkspace) -> Tensor {
         let n = self.layers.len();
         ws.layers.resize_with(n, LinearWorkspace::default);
         ws.pre_relu.clear();
-        let mut h = x.clone();
-        for (i, layer) in self.layers.iter().enumerate() {
-            let z = layer.forward_train(&h, prec, &mut ws.layers[i]);
-            if i + 1 < n {
-                ws.pre_relu.push(z.clone());
-                h = relu(&z, prec);
-            } else {
-                h = z;
-            }
+        let mut h = self.layers[0].forward_train(x, prec, &mut ws.layers[0]);
+        for (i, layer) in self.layers.iter().enumerate().skip(1) {
+            let a = relu(&h, prec);
+            ws.pre_relu.push(h);
+            h = layer.forward_train(&a, prec, &mut ws.layers[i]);
         }
         h
     }
@@ -89,6 +88,21 @@ impl Mlp {
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
         self.layers.iter_mut().flat_map(|l| l.params_mut()).collect()
+    }
+
+    /// Visit the parameters in [`Mlp::params_mut`] order without
+    /// materializing a `Vec`.
+    pub fn for_each_param(&self, f: &mut impl FnMut(&Param)) {
+        for l in &self.layers {
+            l.for_each_param(f);
+        }
+    }
+
+    /// Mutable twin of [`Mlp::for_each_param`], same order.
+    pub fn for_each_param_mut(&mut self, f: &mut impl FnMut(&mut Param)) {
+        for l in self.layers.iter_mut() {
+            l.for_each_param_mut(f);
+        }
     }
 
     pub fn zero_grad(&mut self) {

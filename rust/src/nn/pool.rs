@@ -35,6 +35,39 @@
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+/// Elements claimed per span by the pooled elementwise kernels
+/// ([`ThreadPool::run_spans`] callers: Adam/hAdam steps, the Kahan EMA,
+/// non-finite coercion, the grad-probe pass). The decomposition depends
+/// only on the element count — never on the thread count — so pooled
+/// results stay bitwise identical to the serial loop.
+pub const ELEMWISE_SPAN: usize = 8192;
+
+/// Raw mutable pointer that may cross the pool boundary. Used by
+/// elementwise span kernels whose tasks write disjoint index ranges, so
+/// aliasing is impossible (same contract as the GEMM backend's output
+/// pointer).
+#[derive(Clone, Copy)]
+pub struct SendMut<T>(*mut T);
+
+// The `T: Send` bound keeps the wrapper from smuggling non-thread-safe
+// types (Rc, thread-local handles) across the pool boundary.
+unsafe impl<T: Send> Send for SendMut<T> {}
+unsafe impl<T: Send> Sync for SendMut<T> {}
+
+impl<T> SendMut<T> {
+    pub fn new(p: *mut T) -> Self {
+        SendMut(p)
+    }
+
+    /// Accessor instead of field access: under Rust 2021 disjoint
+    /// capture, a closure touching the field would capture the bare
+    /// `*mut T` (which is `!Sync`) rather than this `Sync` wrapper.
+    #[inline]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
 /// A published job: a lifetime-erased task body plus claim/finish counters.
 struct Job {
     /// Borrow of the caller's closure, valid until `completed == units`
@@ -147,6 +180,23 @@ impl ThreadPool {
     /// made of many tiny tasks.
     pub fn run(&self, total: usize, f: impl Fn(usize) + Sync) {
         self.run_chunked(total, 1, f)
+    }
+
+    /// Fan an elementwise kernel over `0..total` as half-open spans:
+    /// `f(lo, hi)` with `hi - lo ≤ span`, one pool task (and one dynamic
+    /// dispatch) per span instead of one per element. The span
+    /// decomposition is a pure function of `total` and `span`, so when
+    /// every element's result depends only on its own index the output
+    /// is bitwise identical for any worker count — including the serial
+    /// inline fallbacks `run_chunked` takes for tiny jobs or a busy
+    /// pool.
+    pub fn run_spans(&self, total: usize, span: usize, f: impl Fn(usize, usize) + Sync) {
+        let span = span.max(1);
+        let units = total.div_ceil(span);
+        self.run_chunked(units, 1, |u| {
+            let lo = u * span;
+            f(lo, (lo + span).min(total));
+        });
     }
 
     /// Run `f(0..total)` with workers claiming `grain` consecutive
@@ -321,6 +371,31 @@ mod tests {
                 });
                 let got: Vec<u64> = out.iter().map(|v| v.load(Ordering::Relaxed)).collect();
                 assert_eq!(got, reference, "threads={threads} grain={grain}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_spans_covers_every_index_once_and_is_invariant() {
+        let compute = |t: usize| (t as f64 + 0.25).sqrt().to_bits();
+        for total in [0usize, 1, 7, 100, 1000] {
+            let reference: Vec<u64> = (0..total).map(compute).collect();
+            for threads in [1usize, 4] {
+                let pool = ThreadPool::new(threads);
+                for span in [1usize, 3, 64, 5000] {
+                    let out: Vec<AtomicU64> = (0..total).map(|_| AtomicU64::new(0)).collect();
+                    let max_len = AtomicU64::new(0);
+                    pool.run_spans(total, span, |lo, hi| {
+                        assert!(lo < hi && hi <= total);
+                        max_len.fetch_max((hi - lo) as u64, Ordering::Relaxed);
+                        for t in lo..hi {
+                            out[t].store(compute(t), Ordering::Relaxed);
+                        }
+                    });
+                    let got: Vec<u64> = out.iter().map(|v| v.load(Ordering::Relaxed)).collect();
+                    assert_eq!(got, reference, "threads={threads} span={span} total={total}");
+                    assert!(max_len.load(Ordering::Relaxed) as usize <= span.max(1));
+                }
             }
         }
     }

@@ -46,11 +46,20 @@ impl Tensor {
         let mut shape = Vec::with_capacity(row_shape.len() + 1);
         shape.push(batch);
         shape.extend_from_slice(row_shape);
-        if self.shape != shape {
-            *self = Tensor::zeros(&shape);
-        }
+        self.ensure_shape(&shape);
         self.data.copy_from_slice(flat);
         self
+    }
+
+    /// Make this tensor hold `shape`, reallocating only when the shape
+    /// actually changes (fresh zeros then). When the shape is unchanged
+    /// the existing contents are kept — callers that rely on this are
+    /// expected to overwrite every element. The workspace-reuse
+    /// primitive behind the allocation-free learner buffers.
+    pub fn ensure_shape(&mut self, shape: &[usize]) {
+        if self.shape != shape {
+            *self = Tensor::zeros(shape);
+        }
     }
 
     #[inline]

@@ -22,7 +22,25 @@
 
 use super::scaler::GradScaler;
 use crate::lowp::{hypot_stable, Precision};
+use crate::nn::pool::{self, SendMut, ThreadPool, ELEMWISE_SPAN};
 use crate::nn::Param;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Pooled non-finite scan: `true` iff any element is NaN/±∞. The result
+/// is a disjunction over disjoint spans, so it is exact and independent
+/// of the span schedule; spans short-circuit once the flag is set.
+pub(crate) fn slice_has_nonfinite(pool: &ThreadPool, xs: &[f32]) -> bool {
+    let found = AtomicBool::new(false);
+    pool.run_spans(xs.len(), ELEMWISE_SPAN, |lo, hi| {
+        if found.load(Ordering::Relaxed) {
+            return;
+        }
+        if xs[lo..hi].iter().any(|v| !v.is_finite()) {
+            found.store(true, Ordering::Relaxed);
+        }
+    });
+    found.load(Ordering::Relaxed)
+}
 
 /// Hyperparameters (paper Table 4 defaults).
 #[derive(Debug, Clone, Copy)]
@@ -145,13 +163,25 @@ impl Adam {
     ///
     /// If any gradient is non-finite the step is skipped and the scaler
     /// backs off, exactly like `torch.cuda.amp`.
+    ///
+    /// The per-element work fans out over the global worker pool; every
+    /// element's result is a pure function of its own index, so the step
+    /// is bitwise identical for any thread count (see
+    /// [`Adam::step_on`]).
     pub fn step(&mut self, params: &mut [&mut Param], scaler: &mut GradScaler) {
+        self.step_on(pool::global(), params, scaler)
+    }
+
+    /// [`Adam::step`] over an explicit pool — the seam the
+    /// thread-count-invariance tests use (compare a 1-lane pool against
+    /// a wide one, bitwise).
+    pub fn step_on(&mut self, pool: &ThreadPool, params: &mut [&mut Param], scaler: &mut GradScaler) {
         self.ensure_state(params);
         let p = self.prec;
         let gamma = scaler.scale();
 
-        // amp-style skip on non-finite grads
-        let nonfinite = params.iter().any(|q| q.has_nonfinite_grad());
+        // amp-style skip on non-finite grads (pooled scan)
+        let nonfinite = params.iter().any(|q| slice_has_nonfinite(pool, &q.g));
         scaler.update(nonfinite);
         if nonfinite {
             self.last_step_skipped = true;
@@ -169,62 +199,84 @@ impl Adam {
         let s1mb2 = p.q((1.0 - self.cfg.beta2).sqrt());
         let b1 = self.cfg.beta1;
         let one_m_b1 = p.q(1.0 - b1);
+        let beta2 = self.cfg.beta2;
+        let lr = self.cfg.lr;
+        let (second, update, compound) = (self.second, self.update, self.compound);
         // effective epsilon: compound keeps γ in numerator and
         // denominator, so ε must be scaled by γ to preserve semantics.
         let eps_eff = if self.compound { p.q(self.cfg.eps * gamma) } else { self.cfg.eps };
 
         for (idx, param) in params.iter_mut().enumerate() {
-            let m = &mut self.m[idx];
-            let w = &mut self.w[idx];
+            let n = param.len();
+            let g: &[f32] = &param.g;
+            let theta = SendMut::new(param.w.as_mut_ptr());
+            let m = SendMut::new(self.m[idx].as_mut_ptr());
+            let w = SendMut::new(self.w[idx].as_mut_ptr());
+            let comp = SendMut::new(self.comp[idx].as_mut_ptr());
             let fmt = p;
-            for i in 0..param.len() {
-                // gradient as Adam sees it
-                let g = if self.compound || gamma == 1.0 {
-                    param.g[i] // keep the γ factor (compound) or unscaled
-                } else {
-                    fmt.q(param.g[i] / gamma) // plain loss scaling unscale
+            pool.run_spans(n, ELEMWISE_SPAN, |lo, hi| {
+                // Safety: spans are disjoint, so each task holds the only
+                // live views of its `lo..hi` stretch of the buffers.
+                let len = hi - lo;
+                let th = unsafe { std::slice::from_raw_parts_mut(theta.get().add(lo), len) };
+                let m = unsafe { std::slice::from_raw_parts_mut(m.get().add(lo), len) };
+                let w = unsafe { std::slice::from_raw_parts_mut(w.get().add(lo), len) };
+                let comp: &mut [f32] = match update {
+                    UpdateMode::Kahan => unsafe {
+                        std::slice::from_raw_parts_mut(comp.get().add(lo), len)
+                    },
+                    UpdateMode::Plain => &mut [],
                 };
-                // first moment
-                m[i] = fmt.q(b1 * m[i] + one_m_b1 * g);
-                // second moment
-                match self.second {
-                    SecondMoment::Variance => {
-                        let g2 = fmt.q(g * g);
-                        w[i] = fmt.q(self.cfg.beta2 * w[i] + fmt.q((1.0 - self.cfg.beta2) * g2));
+                let g = &g[lo..hi];
+                for i in 0..len {
+                    // gradient as Adam sees it
+                    let g = if compound || gamma == 1.0 {
+                        g[i] // keep the γ factor (compound) or unscaled
+                    } else {
+                        fmt.q(g[i] / gamma) // plain loss scaling unscale
+                    };
+                    // first moment
+                    m[i] = fmt.q(b1 * m[i] + one_m_b1 * g);
+                    // second moment
+                    match second {
+                        SecondMoment::Variance => {
+                            let g2 = fmt.q(g * g);
+                            w[i] = fmt.q(beta2 * w[i] + fmt.q((1.0 - beta2) * g2));
+                        }
+                        SecondMoment::Hypot => {
+                            let a = fmt.q(sb2 * w[i]);
+                            let b = fmt.q(s1mb2 * g);
+                            w[i] = match p {
+                                Precision::Fp32 => (a as f64).hypot(b as f64) as f32,
+                                Precision::Sim { fmt: f, .. } => hypot_stable(a, b, f),
+                            };
+                        }
                     }
-                    SecondMoment::Hypot => {
-                        let a = fmt.q(sb2 * w[i]);
-                        let b = fmt.q(s1mb2 * g);
-                        w[i] = match p {
-                            Precision::Fp32 => (a as f64).hypot(b as f64) as f32,
-                            Precision::Sim { fmt: f, .. } => hypot_stable(a, b, f),
-                        };
+                    // bias-corrected update
+                    let mhat = fmt.q(m[i] * inv_bc1);
+                    let denom = match second {
+                        SecondMoment::Variance => {
+                            let vhat = fmt.q(w[i] * fmt.q(inv_bc2 * inv_bc2));
+                            fmt.q(fmt.q(vhat.sqrt()) + eps_eff)
+                        }
+                        SecondMoment::Hypot => fmt.q(fmt.q(w[i] * inv_bc2) + eps_eff),
+                    };
+                    let delta = fmt.q(-lr * fmt.q(mhat / denom));
+                    // apply
+                    match update {
+                        UpdateMode::Plain => {
+                            th[i] = fmt.q(th[i] + delta);
+                        }
+                        UpdateMode::Kahan => {
+                            let c = &mut comp[i];
+                            let y = fmt.q(delta - *c);
+                            let t = fmt.q(th[i] + y);
+                            *c = fmt.q(fmt.q(t - th[i]) - y);
+                            th[i] = t;
+                        }
                     }
                 }
-                // bias-corrected update
-                let mhat = fmt.q(m[i] * inv_bc1);
-                let denom = match self.second {
-                    SecondMoment::Variance => {
-                        let vhat = fmt.q(w[i] * fmt.q(inv_bc2 * inv_bc2));
-                        fmt.q(fmt.q(vhat.sqrt()) + eps_eff)
-                    }
-                    SecondMoment::Hypot => fmt.q(fmt.q(w[i] * inv_bc2) + eps_eff),
-                };
-                let delta = fmt.q(-self.cfg.lr * fmt.q(mhat / denom));
-                // apply
-                match self.update {
-                    UpdateMode::Plain => {
-                        param.w[i] = fmt.q(param.w[i] + delta);
-                    }
-                    UpdateMode::Kahan => {
-                        let c = &mut self.comp[idx][i];
-                        let y = fmt.q(delta - *c);
-                        let t = fmt.q(param.w[i] + y);
-                        *c = fmt.q(fmt.q(t - param.w[i]) - y);
-                        param.w[i] = t;
-                    }
-                }
-            }
+            });
         }
     }
 }
@@ -440,6 +492,79 @@ mod tests {
         );
         assert!(pb.w[0] < 1.0, "compound-scaled run must make progress");
         assert!(pb.w[0].is_finite());
+    }
+
+    #[test]
+    fn pooled_step_is_thread_count_invariant() {
+        // a parameter long enough to span several claim units; every
+        // optimizer flavour must produce bitwise-identical weights and
+        // buffers on a 1-lane pool (serial inline) and wide pools
+        use crate::nn::pool::{ThreadPool, ELEMWISE_SPAN};
+        let n = 3 * ELEMWISE_SPAN + 17;
+        let mut rng = Pcg64::seed(33);
+        let init: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let grads: Vec<Vec<f32>> =
+            (0..5).map(|_| (0..n).map(|_| rng.normal_f32() * 1e-3).collect()).collect();
+        let cfg = AdamConfig { lr: 0.01, ..Default::default() };
+        let cases: [(Precision, SecondMoment, UpdateMode, bool); 4] = [
+            (Precision::Fp32, SecondMoment::Variance, UpdateMode::Plain, false),
+            (Precision::Fp32, SecondMoment::Hypot, UpdateMode::Kahan, false),
+            (Precision::fp16(), SecondMoment::Hypot, UpdateMode::Kahan, true),
+            (Precision::fp16(), SecondMoment::Variance, UpdateMode::Plain, false),
+        ];
+        for (prec, second, update, compound) in cases {
+            let run = |threads: usize| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+                let pool = ThreadPool::new(threads);
+                let mut opt = Adam::new(cfg, prec, second, update, compound);
+                let mut sc =
+                    if compound { GradScaler::fixed(1024.0) } else { GradScaler::disabled() };
+                let mut p = Param::from_values("p", &[n], init.clone());
+                for g in &grads {
+                    p.g.copy_from_slice(g);
+                    if compound {
+                        for v in p.g.iter_mut() {
+                            *v *= 1024.0;
+                        }
+                    }
+                    opt.step_on(&pool, &mut [&mut p], &mut sc);
+                }
+                (p.w, opt.m[0].clone(), opt.w[0].clone())
+            };
+            let want = run(1);
+            for threads in [2usize, 8] {
+                let got = run(threads);
+                assert!(
+                    got.0.iter().zip(&want.0).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "weights differ: {prec:?} {second:?} {update:?} threads={threads}"
+                );
+                assert!(
+                    got.1.iter().zip(&want.1).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "m buffer differs: threads={threads}"
+                );
+                assert!(
+                    got.2.iter().zip(&want.2).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "v/w buffer differs: threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_nonfinite_scan_still_skips_and_backs_off() {
+        use crate::nn::pool::{ThreadPool, ELEMWISE_SPAN};
+        let n = 2 * ELEMWISE_SPAN + 5;
+        let pool = ThreadPool::new(4);
+        let mut opt = Adam::ours_fp16(AdamConfig::default());
+        let mut sc = GradScaler::new(ScalerConfig::paper());
+        let s0 = sc.scale();
+        let mut p = Param::from_values("a", &[n], vec![1.0; n]);
+        p.g = vec![1e-3; n];
+        p.g[n - 1] = f32::NAN; // non-finite in the LAST span
+        let w_before = p.w.clone();
+        opt.step_on(&pool, &mut [&mut p], &mut sc);
+        assert!(opt.last_step_skipped);
+        assert_eq!(p.w, w_before);
+        assert_eq!(sc.scale(), s0 / 2.0);
     }
 
     #[test]

@@ -1,25 +1,47 @@
 //! Numeric coercion — the "coerc" baseline of the paper's Figure 1:
 //! NaN → 0, ±∞ → ± the format's largest finite value.
 
+use crate::nn::pool::{self, SendMut, ThreadPool, ELEMWISE_SPAN};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
 /// Coerce non-finite values in place: NaN → 0, ±∞ → ±`max_value`.
-/// Returns the number of values touched (for telemetry).
+/// Returns the number of values touched (for telemetry). Large slices
+/// fan out over the global pool; the per-element rewrite and the touch
+/// count are both independent of how elements are batched onto workers,
+/// so results are identical to the serial loop.
 pub fn coerce_nonfinite(xs: &mut [f32], max_value: f32) -> usize {
-    let mut n = 0;
-    for v in xs.iter_mut() {
-        if v.is_nan() {
-            *v = 0.0;
-            n += 1;
-        } else if v.is_infinite() {
-            *v = max_value.copysign(*v);
-            n += 1;
+    coerce_nonfinite_on(pool::global(), xs, max_value)
+}
+
+/// [`coerce_nonfinite`] over an explicit pool (the seam the
+/// thread-count-invariance tests pin).
+pub fn coerce_nonfinite_on(pool: &ThreadPool, xs: &mut [f32], max_value: f32) -> usize {
+    let total = AtomicUsize::new(0);
+    let ptr = SendMut::new(xs.as_mut_ptr());
+    pool.run_spans(xs.len(), ELEMWISE_SPAN, |lo, hi| {
+        // Safety: spans are disjoint — each task owns its stretch.
+        let span = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
+        let mut n = 0;
+        for v in span.iter_mut() {
+            if v.is_nan() {
+                *v = 0.0;
+                n += 1;
+            } else if v.is_infinite() {
+                *v = max_value.copysign(*v);
+                n += 1;
+            }
         }
-    }
-    n
+        if n > 0 {
+            total.fetch_add(n, Ordering::Relaxed);
+        }
+    });
+    total.into_inner()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::pool::ThreadPool;
 
     #[test]
     fn coerces_all_nonfinite() {
@@ -35,5 +57,33 @@ mod tests {
         let n = coerce_nonfinite(&mut xs, 65504.0);
         assert_eq!(n, 0);
         assert_eq!(xs, vec![0.0, -0.0, 1e-30, 3.4e38]);
+    }
+
+    #[test]
+    fn pooled_coercion_matches_serial_for_any_pool_size() {
+        // large buffer spanning several claim units, non-finite values
+        // sprinkled at deterministic positions
+        let n = 3 * ELEMWISE_SPAN + 17;
+        let base: Vec<f32> = (0..n)
+            .map(|i| match i % 1013 {
+                0 => f32::NAN,
+                1 => f32::INFINITY,
+                2 => f32::NEG_INFINITY,
+                k => k as f32 * 0.5 - 100.0,
+            })
+            .collect();
+        let serial_pool = ThreadPool::new(1);
+        let mut want = base.clone();
+        let want_n = coerce_nonfinite_on(&serial_pool, &mut want, 65504.0);
+        for threads in [2usize, 8] {
+            let pool = ThreadPool::new(threads);
+            let mut got = base.clone();
+            let got_n = coerce_nonfinite_on(&pool, &mut got, 65504.0);
+            assert_eq!(got_n, want_n, "threads={threads}");
+            assert!(
+                got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "threads={threads}"
+            );
+        }
     }
 }

@@ -5,6 +5,7 @@
 //! for pixels).
 
 use crate::lowp::Precision;
+use crate::nn::pool::{self, SendMut, ThreadPool, ELEMWISE_SPAN};
 
 /// Scaled, Kahan-compensated exponential moving average of a parameter
 /// vector — the target network's weights.
@@ -41,17 +42,55 @@ impl ScaledKahanEma {
         &self.view
     }
 
+    /// Number of tracked weights.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
     /// Soft update toward `psi` with rate `tau` (= 1-β in the paper's
-    /// notation), all arithmetic in the working precision.
+    /// notation), all arithmetic in the working precision. Fans the
+    /// per-element work over the global pool; every element is
+    /// independent, so the result is bitwise thread-count-invariant.
     pub fn update(&mut self, psi: &[f32], tau: f32) {
         assert_eq!(psi.len(), self.buf.len());
+        self.update_span_on(pool::global(), 0, psi, tau)
+    }
+
+    /// Update the `offset..offset + psi.len()` stretch of the tracked
+    /// vector toward `psi`. Walking a parameter list span by span is
+    /// bitwise identical to one flat [`ScaledKahanEma::update`] call
+    /// (elements are independent) — the entry point that lets the
+    /// target-network sync read ψ straight out of per-layer parameter
+    /// slices instead of a flattened copy.
+    pub fn update_span(&mut self, offset: usize, psi: &[f32], tau: f32) {
+        self.update_span_on(pool::global(), offset, psi, tau)
+    }
+
+    /// [`ScaledKahanEma::update_span`] over an explicit pool (the seam
+    /// the thread-count-invariance tests pin).
+    pub fn update_span_on(&mut self, pool: &ThreadPool, offset: usize, psi: &[f32], tau: f32) {
+        assert!(offset + psi.len() <= self.buf.len(), "span out of range");
         let p = self.prec;
+        let n = psi.len();
+        let buf = SendMut::new(self.buf[offset..].as_mut_ptr());
+        let view = SendMut::new(self.view[offset..].as_mut_ptr());
         if !self.compensated {
-            for i in 0..self.buf.len() {
-                let d = p.q(tau * p.q(psi[i] - self.buf[i]));
-                self.buf[i] = p.q(self.buf[i] + d);
-                self.view[i] = self.buf[i];
-            }
+            pool.run_spans(n, ELEMWISE_SPAN, |lo, hi| {
+                // Safety: spans are disjoint — each task owns its stretch.
+                let len = hi - lo;
+                let buf = unsafe { std::slice::from_raw_parts_mut(buf.get().add(lo), len) };
+                let view = unsafe { std::slice::from_raw_parts_mut(view.get().add(lo), len) };
+                let psi = &psi[lo..hi];
+                for i in 0..len {
+                    let d = p.q(tau * p.q(psi[i] - buf[i]));
+                    buf[i] = p.q(buf[i] + d);
+                    view[i] = buf[i];
+                }
+            });
             return;
         }
         let c = self.c;
@@ -59,17 +98,26 @@ impl ScaledKahanEma {
         // multiply C·τ *first*: (C·τ)·(ψ-ψ̂) keeps the tiny difference out
         // of the subnormal range, which is the whole point of the scale.
         let ct = p.q(c * tau);
-        for i in 0..self.buf.len() {
-            // increment on the scaled buffer: (C·τ)·(ψ - ψ̂)
-            let hat = self.view[i];
-            let delta = p.q(ct * p.q(psi[i] - hat));
-            // Kahan add into buf
-            let y = p.q(delta - self.comp[i]);
-            let t = p.q(self.buf[i] + y);
-            self.comp[i] = p.q(p.q(t - self.buf[i]) - y);
-            self.buf[i] = t;
-            self.view[i] = p.q(self.buf[i] * inv_c);
-        }
+        let comp = SendMut::new(self.comp[offset..].as_mut_ptr());
+        pool.run_spans(n, ELEMWISE_SPAN, |lo, hi| {
+            // Safety: spans are disjoint — each task owns its stretch.
+            let len = hi - lo;
+            let buf = unsafe { std::slice::from_raw_parts_mut(buf.get().add(lo), len) };
+            let view = unsafe { std::slice::from_raw_parts_mut(view.get().add(lo), len) };
+            let comp = unsafe { std::slice::from_raw_parts_mut(comp.get().add(lo), len) };
+            let psi = &psi[lo..hi];
+            for i in 0..len {
+                // increment on the scaled buffer: (C·τ)·(ψ - ψ̂)
+                let hat = view[i];
+                let delta = p.q(ct * p.q(psi[i] - hat));
+                // Kahan add into buf
+                let y = p.q(delta - comp[i]);
+                let t = p.q(buf[i] + y);
+                comp[i] = p.q(p.q(t - buf[i]) - y);
+                buf[i] = t;
+                view[i] = p.q(buf[i] * inv_c);
+            }
+        });
     }
 
     /// Memory elements used (buffer + compensation + view).
@@ -140,6 +188,58 @@ mod tests {
         // sanity: near convergence the *unscaled* increment τ·(ψ-ψ̂) is
         // one subnormal step times τ — far below fp16's resolution.
         assert_eq!(FP16.quantize(tau * FP16.min_subnormal()), 0.0);
+    }
+
+    #[test]
+    fn pooled_update_is_thread_count_invariant() {
+        use crate::nn::pool::{ThreadPool, ELEMWISE_SPAN};
+        let n = 2 * ELEMWISE_SPAN + 33;
+        let mut rng = crate::rngs::Pcg64::seed(51);
+        let init: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let psi: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        for (prec, comp) in [(Precision::Fp32, true), (Precision::fp16(), true), (Precision::fp16(), false)] {
+            let run = |threads: usize| -> Vec<f32> {
+                let pool = ThreadPool::new(threads);
+                let mut ema = ScaledKahanEma::new(&init, 1e4, prec, comp);
+                for _ in 0..20 {
+                    ema.update_span_on(&pool, 0, &psi, 0.005);
+                }
+                ema.weights().to_vec()
+            };
+            let want = run(1);
+            for threads in [2usize, 8] {
+                let got = run(threads);
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "prec={prec:?} comp={comp} threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn update_span_walk_matches_flat_update() {
+        // walking the vector in per-layer spans (the in-place target
+        // sync) must equal one flat update call, bitwise
+        let n = 300usize;
+        let mut rng = crate::rngs::Pcg64::seed(52);
+        let init: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let psi: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let prec = Precision::fp16();
+        let mut flat = ScaledKahanEma::new(&init, 1e4, prec, true);
+        let mut spans = ScaledKahanEma::new(&init, 1e4, prec, true);
+        let cuts = [0usize, 7, 130, 131, 300];
+        for _ in 0..50 {
+            flat.update(&psi, 0.005);
+            for w in cuts.windows(2) {
+                spans.update_span(w[0], &psi[w[0]..w[1]], 0.005);
+            }
+        }
+        assert!(flat
+            .weights()
+            .iter()
+            .zip(spans.weights())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

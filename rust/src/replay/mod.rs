@@ -4,7 +4,6 @@
 //! the pixel agent.
 
 use crate::lowp::format::{f16_bits_to_f32, f32_to_f16_bits};
-use crate::nn::Tensor;
 use crate::rngs::Pcg64;
 use crate::sac::Batch;
 
@@ -169,6 +168,36 @@ impl ReplayBuffer {
         out
     }
 
+    /// Pre-sample all `count` minibatches of a learner round into the
+    /// reusable arena — the allocation-free round path behind
+    /// `UpdateSchedule::run_round`. Draws the identical `rng` sequence
+    /// as `count` sequential [`ReplayBuffer::sample_into`] /
+    /// [`ReplayBuffer::sample_aug_into`] calls (`aug_pad` selects the
+    /// DRQ-augmented path), and replay contents are frozen during a
+    /// round's update phase in both trainer modes, so sampling up front
+    /// is bitwise-neutral for the whole run: the replay stream and the
+    /// agent's own noise stream are independent, and pre-sampling only
+    /// reorders draws *across* those two streams, never within one.
+    pub fn sample_round_into(
+        &self,
+        count: usize,
+        batch: usize,
+        aug_pad: Option<usize>,
+        rng: &mut Pcg64,
+        arena: &mut RoundArena,
+    ) {
+        if arena.batches.len() < count {
+            arena.batches.resize_with(count, Batch::default);
+        }
+        arena.len = count;
+        for out in &mut arena.batches[..count] {
+            match aug_pad {
+                Some(pad) => self.sample_aug_into(batch, pad, rng, out),
+                None => self.sample_into(batch, rng, out),
+            }
+        }
+    }
+
     /// Allocation-free [`ReplayBuffer::sample`]: draws the identical
     /// index sequence from `rng` and fills the caller-owned batch,
     /// resizing its buffers only when the batch shape changes (i.e. on
@@ -177,9 +206,9 @@ impl ReplayBuffer {
         assert!(self.len > 0, "empty replay");
         let mut shape = vec![batch];
         shape.extend_from_slice(&self.obs_shape);
-        ensure_shape(&mut out.obs, &shape);
-        ensure_shape(&mut out.next_obs, &shape);
-        ensure_shape(&mut out.act, &[batch, self.act_dim]);
+        out.obs.ensure_shape(&shape);
+        out.next_obs.ensure_shape(&shape);
+        out.act.ensure_shape(&[batch, self.act_dim]);
         out.rew.resize(batch, 0.0);
         out.not_done.resize(batch, 0.0);
         for b in 0..batch {
@@ -265,9 +294,28 @@ impl ReplayBuffer {
     }
 }
 
-fn ensure_shape(t: &mut Tensor, shape: &[usize]) {
-    if t.shape != shape {
-        *t = Tensor::zeros(shape);
+/// Reusable storage for one learner round's pre-sampled minibatches
+/// ([`ReplayBuffer::sample_round_into`]). The `Vec<Batch>` grows to the
+/// largest round seen (≤ `num_envs` updates) and every batch keeps its
+/// tensors, so the steady-state round loop allocates nothing.
+#[derive(Default)]
+pub struct RoundArena {
+    batches: Vec<Batch>,
+    len: usize,
+}
+
+impl RoundArena {
+    /// The round's batches, in sampling order.
+    pub fn batches(&self) -> &[Batch] {
+        &self.batches[..self.len]
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
     }
 }
 
@@ -464,6 +512,57 @@ mod tests {
         assert_eq!(ptr, got.obs.data.as_ptr(), "steady state must not reallocate");
         let again = buf.sample(12, &mut r1);
         assert_eq!(again.obs.data, got.obs.data);
+    }
+
+    #[test]
+    fn sample_round_into_matches_sequential_sample_into() {
+        let mut buf = ReplayBuffer::new(50, &[2], 1, Storage::F16);
+        fill(&mut buf, 30);
+        let mut r1 = Pcg64::seed(12);
+        let mut r2 = Pcg64::seed(12);
+        let mut arena = RoundArena::default();
+        buf.sample_round_into(4, 8, None, &mut r1, &mut arena);
+        assert_eq!(arena.len(), 4);
+        for got in arena.batches() {
+            let mut want = Batch::default();
+            buf.sample_into(8, &mut r2, &mut want);
+            assert_eq!(got.obs.data, want.obs.data);
+            assert_eq!(got.next_obs.data, want.next_obs.data);
+            assert_eq!(got.act.data, want.act.data);
+            assert_eq!(got.rew, want.rew);
+            assert_eq!(got.not_done, want.not_done);
+        }
+        // both walked the same rng distance
+        assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn sample_round_into_aug_matches_sequential_and_reuses_buffers() {
+        let mut buf = ReplayBuffer::new(20, &[1, 6, 6], 1, Storage::F32);
+        let img: Vec<f32> = (0..36).map(|i| i as f32 / 36.0).collect();
+        for _ in 0..8 {
+            buf.push(&img, &[0.2], 0.5, &img, false);
+        }
+        let mut r1 = Pcg64::seed(14);
+        let mut r2 = Pcg64::seed(14);
+        let mut arena = RoundArena::default();
+        buf.sample_round_into(3, 5, Some(2), &mut r1, &mut arena);
+        for got in arena.batches() {
+            let mut want = Batch::default();
+            buf.sample_aug_into(5, 2, &mut r2, &mut want);
+            assert_eq!(got.obs.data, want.obs.data);
+            assert_eq!(got.next_obs.data, want.next_obs.data);
+        }
+        // steady state: refilling the same round shape must not
+        // reallocate any batch tensor, and a SHORTER round must reuse
+        // the prefix
+        let ptrs: Vec<*const f32> = arena.batches().iter().map(|b| b.obs.data.as_ptr()).collect();
+        buf.sample_round_into(3, 5, Some(2), &mut r1, &mut arena);
+        let now: Vec<*const f32> = arena.batches().iter().map(|b| b.obs.data.as_ptr()).collect();
+        assert_eq!(ptrs, now, "arena must not reallocate in steady state");
+        buf.sample_round_into(2, 5, Some(2), &mut r1, &mut arena);
+        assert_eq!(arena.len(), 2);
+        assert_eq!(arena.batches()[0].obs.data.as_ptr(), ptrs[0]);
     }
 
     #[test]

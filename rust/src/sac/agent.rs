@@ -23,9 +23,97 @@ use super::methods::Methods;
 use super::policy::{PolicyCfg, TanhGaussian};
 use super::snapshot::Policy;
 use crate::lowp::Precision;
+use crate::nn::pool::{self, SendMut, ELEMWISE_SPAN};
 use crate::nn::{Mlp, MlpWorkspace, Param, Tensor};
 use crate::optim::{coerce_nonfinite, Adam, AdamConfig, GradScaler, ScaledKahanEma, ScalerConfig, SecondMoment, UpdateMode};
 use crate::rngs::Pcg64;
+
+/// Append `|g|` for every element of `g` to `probe` (Figure 6
+/// telemetry), filling the freshly-reserved tail over the worker pool.
+/// Values land in the same order as a serial `extend`, and `|·|` is
+/// elementwise, so the result is bitwise thread-count-invariant.
+fn append_abs_pooled(probe: &mut Vec<f32>, g: &[f32]) {
+    let start = probe.len();
+    probe.reserve(g.len());
+    // raw writes straight into the reserved tail: one pass over the
+    // memory instead of zero-fill + overwrite, and no reference to
+    // uninitialized elements is ever formed
+    let dst = SendMut::new(unsafe { probe.as_mut_ptr().add(start) });
+    pool::global().run_spans(g.len(), ELEMWISE_SPAN, |lo, hi| {
+        // Safety: spans are disjoint — each index is written exactly once.
+        for (i, v) in g[lo..hi].iter().enumerate() {
+            unsafe { dst.get().add(lo + i).write(v.abs()) };
+        }
+    });
+    // Safety: every element of the reserved tail was written above.
+    unsafe { probe.set_len(start + g.len()) };
+}
+
+/// Reusable positional parameter list for the optimizer step: the
+/// parameter walk collects raw pointers into a persistent `Vec` whose
+/// capacity survives across updates (the old code built a fresh
+/// `Vec<&mut Param>` — plus one `Vec` per layer — on every update),
+/// then hands them back out as the `&mut [&mut Param]` the optimizer
+/// expects.
+#[derive(Default)]
+struct ParamScratch {
+    ptrs: Vec<*mut Param>,
+}
+
+// Safety: the pointers are transient scratch — refilled from live
+// `&mut Param`s at the start of every optimizer step and only
+// dereferenced inside that step, while the owning agent is exclusively
+// borrowed. Between updates they are never read.
+unsafe impl Send for ParamScratch {}
+
+impl ParamScratch {
+    fn clear(&mut self) {
+        self.ptrs.clear();
+    }
+
+    fn push(&mut self, p: &mut Param) {
+        self.ptrs.push(p);
+    }
+
+    /// View the collected pointers as an optimizer parameter list.
+    /// Sound because every pointer was collected from a distinct live
+    /// `&mut Param` during this update and nothing else touches those
+    /// params while the returned borrow lives.
+    fn as_params(&mut self) -> &mut [&mut Param] {
+        unsafe { &mut *(self.ptrs.as_mut_slice() as *mut [*mut Param] as *mut [&mut Param]) }
+    }
+}
+
+/// Persistent buffers for the learner hot loop: every per-update
+/// scratch the old `update_*` bodies allocated fresh — the noise
+/// tensor, TD targets, output gradients, α-path coefficients, the
+/// optimizer parameter list and the fused target-encoder staging — now
+/// lives here and is reused round after round (zero steady-state
+/// allocations on the update driver path).
+#[derive(Default)]
+struct UpdateWorkspace {
+    /// Reparameterization noise `[B, A]`.
+    eps: Tensor,
+    /// TD targets, length B.
+    y: Vec<f32>,
+    dq1: Tensor,
+    dq2: Tensor,
+    /// Per-row `α·coef` for the actor's logπ backward.
+    coefs: Vec<f32>,
+    /// Optimizer parameter list (critic [+ encoder] / actor).
+    params: ParamScratch,
+    /// Per-update `[B, feature_dim]` staging of fused target features.
+    feat_tgt: Tensor,
+    /// Concatenated `[G·B, C, H, W]` next-obs staging for a fused group.
+    fused_stage: Tensor,
+    /// The current fused group's target-encoder output `[G·B, feat]`.
+    fused_feat: Tensor,
+    /// Per-update row offset into the update's group `fused_feat`
+    /// (`usize::MAX` = unfused).
+    fused_off: Vec<usize>,
+    /// Scratch `(start, end)` group list for the round partition.
+    fused_groups: Vec<(usize, usize)>,
+}
 
 /// A replay minibatch. `obs`/`next_obs` are `[B, D]` states or
 /// `[B, C, H, W]` images (when the agent has an encoder). `Default`
@@ -142,6 +230,9 @@ pub struct SacAgent {
     ws_actor: MlpWorkspace,
     ws_critic: CriticWorkspace,
     ws_encoder: EncoderWorkspace,
+    /// Persistent per-update scratch (noise, targets, grads, optimizer
+    /// parameter list, fused target staging) — see [`UpdateWorkspace`].
+    update_ws: UpdateWorkspace,
     /// Reusable `[1, …]` staging buffer for single-observation `act`.
     act_buf: Tensor,
     pub updates: u64,
@@ -288,6 +379,7 @@ impl SacAgent {
             ws_actor: MlpWorkspace::default(),
             ws_critic: CriticWorkspace::default(),
             ws_encoder: EncoderWorkspace::default(),
+            update_ws: UpdateWorkspace::default(),
             act_buf: Tensor::default(),
             updates: 0,
             rng,
@@ -344,13 +436,6 @@ impl SacAgent {
     /// agents). Inference-only: no gradient caches.
     fn encode(&self, obs: &Tensor, prec: Precision) -> Tensor {
         match self.encoder.as_ref() {
-            Some(enc) => enc.forward(obs, prec),
-            None => obs.clone(),
-        }
-    }
-
-    fn encode_target(&self, obs: &Tensor, prec: Precision) -> Tensor {
-        match self.target_encoder.as_ref() {
             Some(enc) => enc.forward(obs, prec),
             None => obs.clone(),
         }
@@ -434,12 +519,123 @@ impl SacAgent {
         Some(a)
     }
 
-    /// One gradient update from a replay batch.
+    /// One gradient update from a replay batch — a round of one (see
+    /// [`SacAgent::update_round`]).
     pub fn update(&mut self, batch: &Batch) -> UpdateStats {
+        self.update_round(std::slice::from_ref(batch))
+    }
+
+    /// Run one gradient update per batch, in order, over a round of
+    /// pre-sampled minibatches. Bitwise identical to calling
+    /// [`SacAgent::update`] once per batch: the only cross-update work
+    /// is the fused target-encoder forward, which groups consecutive
+    /// updates that *read the same target weights* (boundaries are cut
+    /// wherever a target sync lands) and relies on the GEMM backend's
+    /// row invariance — so every preset, including `batches.len() == 1`,
+    /// reproduces the per-update path exactly. Returns the last update's
+    /// stats.
+    pub fn update_round(&mut self, batches: &[Batch]) -> UpdateStats {
+        let mut ws = std::mem::take(&mut self.update_ws);
+        self.plan_fused_groups(batches, &mut ws);
+        let mut last = UpdateStats::default();
+        let mut next_group = 0usize;
+        for (j, batch) in batches.iter().enumerate() {
+            // A fused group's forward runs exactly when its first update
+            // is reached: the previous update (and its target sync, which
+            // is what cut the boundary) has fully executed, so the
+            // weights the whole group reads are current here.
+            while next_group < ws.fused_groups.len() && ws.fused_groups[next_group].0 == j {
+                let (a, b) = ws.fused_groups[next_group];
+                next_group += 1;
+                if b - a >= 2 {
+                    self.fuse_group(&batches[a..b], a, &mut ws);
+                }
+            }
+            let fused = ws.fused_off[j] != usize::MAX;
+            if fused {
+                // stage this update's precomputed [B, feature_dim] rows
+                let fd = self.cfg.obs_dim;
+                let off = ws.fused_off[j] * fd;
+                let rows = batch.rew.len();
+                ws.feat_tgt.stage_rows(&ws.fused_feat.data[off..off + rows * fd], rows, &[fd]);
+            }
+            last = self.update_one(batch, fused, &mut ws);
+        }
+        self.update_ws = ws;
+        last
+    }
+
+    /// Partition a round into maximal runs of updates that read the same
+    /// target-network weights. Update `c` syncs the target after its own
+    /// step iff `c % target_update_freq == 0`, so a boundary falls
+    /// before local update `j > 0` iff update `updates + j - 1` syncs.
+    /// Only the *boundaries* are computed here — each multi-update
+    /// group's fused forward runs lazily at the group's first update
+    /// ([`SacAgent::fuse_group`]), after every preceding sync has
+    /// landed. The target *critic* forward cannot be fused the same
+    /// way: its input `a'` comes from the actor (through the online
+    /// encoder), and both step inside the group (see the README's
+    /// learner-throughput notes).
+    fn plan_fused_groups(&self, batches: &[Batch], ws: &mut UpdateWorkspace) {
+        ws.fused_off.clear();
+        ws.fused_off.resize(batches.len(), usize::MAX);
+        ws.fused_groups.clear();
+        if self.target_encoder.is_none() {
+            return;
+        }
+        let n = batches.len();
+        if n < 2 {
+            return;
+        }
+        let freq = self.cfg.target_update_freq.max(1);
+        let c0 = self.updates;
+        let mut start = 0usize;
+        for j in 1..=n {
+            if j == n || (c0 + j as u64 - 1) % freq == 0 {
+                ws.fused_groups.push((start, j));
+                start = j;
+            }
+        }
+    }
+
+    /// Run ONE target-encoder forward for a whole group of updates
+    /// (`[G·B, C, H, W]` instead of G separate `[B, …]` forwards —
+    /// shared im2col GEMMs), and record each update's row offset into
+    /// the fused output. Rows are bitwise equal to the per-batch
+    /// forwards (row-invariant GEMM backend), so consuming a staged
+    /// slice reproduces the unfused path exactly.
+    fn fuse_group(&self, group: &[Batch], base_j: usize, ws: &mut UpdateWorkspace) {
+        let Some(tenc) = self.target_encoder.as_ref() else { return };
+        let p = self.compute;
+        let rows: usize = group.iter().map(|bt| bt.rew.len()).sum();
+        // stage the group's next-obs rows contiguously
+        let mut shape = vec![rows];
+        shape.extend_from_slice(&group[0].next_obs.shape[1..]);
+        ws.fused_stage.ensure_shape(&shape);
+        let mut off = 0usize;
+        for bt in group {
+            let nfl = bt.next_obs.data.len();
+            ws.fused_stage.data[off..off + nfl].copy_from_slice(&bt.next_obs.data);
+            off += nfl;
+        }
+        // the forward allocates its output either way; move it into the
+        // workspace instead of copying
+        ws.fused_feat = tenc.forward(&ws.fused_stage, p);
+        let mut r = 0usize;
+        for (jj, bt) in group.iter().enumerate() {
+            ws.fused_off[base_j + jj] = r;
+            r += bt.rew.len();
+        }
+    }
+
+    /// The per-update body shared by [`SacAgent::update`] and
+    /// [`SacAgent::update_round`]; `fused_tgt` means the round
+    /// precomputed this update's target features into the workspace.
+    fn update_one(&mut self, batch: &Batch, fused_tgt: bool, ws: &mut UpdateWorkspace) -> UpdateStats {
         let mut stats = UpdateStats { alpha: self.alpha(), ..Default::default() };
-        self.update_critic(batch, &mut stats);
+        self.update_critic(batch, fused_tgt, ws, &mut stats);
         if self.updates % self.cfg.actor_update_freq == 0 {
-            self.update_actor_alpha(batch, &mut stats);
+            self.update_actor_alpha(batch, ws, &mut stats);
         }
         if self.updates % self.cfg.target_update_freq == 0 {
             self.update_target();
@@ -451,43 +647,73 @@ impl SacAgent {
         stats
     }
 
-    fn update_critic(&mut self, batch: &Batch, stats: &mut UpdateStats) {
+    fn update_critic(
+        &mut self,
+        batch: &Batch,
+        fused_tgt: bool,
+        ws: &mut UpdateWorkspace,
+        stats: &mut UpdateStats,
+    ) {
         let p = self.compute;
         let b = batch.rew.len();
         let alpha = self.alpha();
 
         // -- target value (no gradients kept anywhere: inference path) --
-        // DRQ convention: the *actor* uses the online encoder (detached)
-        let feat_next_actor = self.encode(&batch.next_obs, p);
-        let head = self.actor.forward(&feat_next_actor, p);
-        let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
-        self.rng.normal_fill(&mut eps.data);
-        let tg = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p);
-        let feat_next_tgt = self.encode_target(&batch.next_obs, p);
-        let (tq1, tq2) = self.target.forward(&feat_next_tgt, &tg.a, p);
-        let mut y = vec![0.0f32; b];
+        // DRQ convention: the *actor* uses the online encoder (detached).
+        // State agents feed the raw observations straight through — no
+        // staging clone.
+        let actor_feat;
+        let feat_next_actor: &Tensor = match self.encoder.as_ref() {
+            Some(enc) => {
+                actor_feat = enc.forward(&batch.next_obs, p);
+                &actor_feat
+            }
+            None => &batch.next_obs,
+        };
+        let head = self.actor.forward(feat_next_actor, p);
+        ws.eps.ensure_shape(&[b, self.cfg.act_dim]);
+        self.rng.normal_fill(&mut ws.eps.data);
+        let tg = TanhGaussian::forward(&head, &ws.eps, self.policy_cfg(), p);
+        let tgt_feat;
+        let feat_next_tgt: &Tensor = if fused_tgt {
+            &ws.feat_tgt
+        } else {
+            match self.target_encoder.as_ref() {
+                Some(enc) => {
+                    tgt_feat = enc.forward(&batch.next_obs, p);
+                    &tgt_feat
+                }
+                None => &batch.next_obs,
+            }
+        };
+        let (tq1, tq2) = self.target.forward(feat_next_tgt, &tg.a, p);
+        ws.y.resize(b, 0.0);
         for r in 0..b {
             let tq = tq1.data[r].min(tq2.data[r]);
             let v = p.q(tq - p.q(alpha * tg.logp[r]));
-            y[r] = p.q(batch.rew[r] + p.q(self.cfg.gamma * batch.not_done[r]) * v);
+            ws.y[r] = p.q(batch.rew[r] + p.q(self.cfg.gamma * batch.not_done[r]) * v);
         }
 
         // -- online critic (training path: fills the workspaces) --------
-        let feat = match self.encoder.as_ref() {
-            Some(enc) => enc.forward_train(&batch.obs, p, &mut self.ws_encoder),
-            None => batch.obs.clone(),
+        let online_feat;
+        let feat: &Tensor = match self.encoder.as_ref() {
+            Some(enc) => {
+                online_feat = enc.forward_train(&batch.obs, p, &mut self.ws_encoder);
+                &online_feat
+            }
+            None => &batch.obs,
         };
-        let (q1, q2) = self.critic.forward_train(&feat, &batch.act, p, &mut self.ws_critic);
+        let (q1, q2) = self.critic.forward_train(feat, &batch.act, p, &mut self.ws_critic);
         let scale = self.sc_critic.scale();
         let mut loss = 0.0f64;
-        let mut dq1 = Tensor::zeros(&[b, 1]);
-        let mut dq2 = Tensor::zeros(&[b, 1]);
+        ws.dq1.ensure_shape(&[b, 1]);
+        ws.dq2.ensure_shape(&[b, 1]);
         for r in 0..b {
-            let e1 = q1.data[r] - y[r];
-            let e2 = q2.data[r] - y[r];
+            let e1 = q1.data[r] - ws.y[r];
+            let e2 = q2.data[r] - ws.y[r];
             loss += (e1 as f64).powi(2) + (e2 as f64).powi(2);
-            dq1.data[r] = p.q(2.0 * e1 / b as f32 * scale);
-            dq2.data[r] = p.q(2.0 * e2 / b as f32 * scale);
+            ws.dq1.data[r] = p.q(2.0 * e1 / b as f32 * scale);
+            ws.dq2.data[r] = p.q(2.0 * e2 / b as f32 * scale);
         }
         stats.critic_loss = (loss / b as f64) as f32;
         stats.q_mean = q1.mean();
@@ -497,59 +723,70 @@ impl SacAgent {
             enc.zero_grad();
         }
         if self.encoder.is_some() {
-            let (dobs, _da) = self.critic.backward_full(&dq1, &dq2, p, &self.ws_critic);
+            let (dobs, _da) = self.critic.backward_full(&ws.dq1, &ws.dq2, p, &self.ws_critic);
             self.encoder.as_mut().unwrap().backward(&dobs, p, &self.ws_encoder);
         } else {
-            let _ = self.critic.backward(&dq1, &dq2, p, &self.ws_critic);
+            let _ = self.critic.backward(&ws.dq1, &ws.dq2, p, &self.ws_critic);
         }
 
         if self.methods.coerce {
             let mx = p.max_value();
-            for prm in self.critic.params_mut() {
+            self.critic.for_each_param_mut(&mut |prm: &mut Param| {
                 coerce_nonfinite(&mut prm.g, mx);
-            }
+            });
         }
-        // probe gradients for Figure 6 telemetry
+        // probe gradients for Figure 6 telemetry (pooled |g| append)
         if let Some(probe) = self.grad_probe.as_mut() {
-            for prm in self.critic.params_mut() {
-                probe.extend(prm.g.iter().map(|g| g.abs()));
-            }
+            self.critic.for_each_param(&mut |prm: &Param| {
+                append_abs_pooled(probe, &prm.g);
+            });
         }
-        // optimizer step (critic + encoder parameters together)
-        let mut params = self.critic.params_mut();
+        // optimizer step (critic + encoder parameters together), through
+        // the persistent pointer scratch — no per-update Vec builds
+        ws.params.clear();
+        self.critic.for_each_param_mut(&mut |prm: &mut Param| ws.params.push(prm));
         if let Some(enc) = self.encoder.as_mut() {
-            params.extend(enc.params_mut());
+            enc.for_each_param_mut(&mut |prm: &mut Param| ws.params.push(prm));
         }
-        self.opt_critic.step(&mut params, &mut self.sc_critic);
+        self.opt_critic.step(ws.params.as_params(), &mut self.sc_critic);
     }
 
-    fn update_actor_alpha(&mut self, batch: &Batch, stats: &mut UpdateStats) {
+    fn update_actor_alpha(&mut self, batch: &Batch, ws: &mut UpdateWorkspace, stats: &mut UpdateStats) {
         let p = self.compute;
         let b = batch.rew.len();
         let alpha = self.alpha();
 
         // actor loss: E[α logπ - min Q], encoder features detached
         // (inference encode — no gradient flows into the encoder here)
-        let feat = self.encode(&batch.obs, p);
-        let head = self.actor.forward_train(&feat, p, &mut self.ws_actor);
-        let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
-        self.rng.normal_fill(&mut eps.data);
-        let tg = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p);
-        let (q1, q2) = self.critic.forward_train(&feat, &tg.a, p, &mut self.ws_critic);
+        let enc_feat;
+        let feat: &Tensor = match self.encoder.as_ref() {
+            Some(enc) => {
+                enc_feat = enc.forward(&batch.obs, p);
+                &enc_feat
+            }
+            None => &batch.obs,
+        };
+        let head = self.actor.forward_train(feat, p, &mut self.ws_actor);
+        ws.eps.ensure_shape(&[b, self.cfg.act_dim]);
+        self.rng.normal_fill(&mut ws.eps.data);
+        let tg = TanhGaussian::forward(&head, &ws.eps, self.policy_cfg(), p);
+        let (q1, q2) = self.critic.forward_train(feat, &tg.a, p, &mut self.ws_critic);
 
         let scale = self.sc_actor.scale();
         let mut loss = 0.0f64;
-        let mut dq1 = Tensor::zeros(&[b, 1]);
-        let mut dq2 = Tensor::zeros(&[b, 1]);
+        ws.dq1.ensure_shape(&[b, 1]);
+        ws.dq2.ensure_shape(&[b, 1]);
+        ws.dq1.data.fill(0.0);
+        ws.dq2.data.fill(0.0);
         let coef = p.q(scale / b as f32);
         for r in 0..b {
             let qmin = q1.data[r].min(q2.data[r]);
             loss += (alpha * tg.logp[r] - qmin) as f64;
             // d(-qmin)/dq: route to the smaller head
             if q1.data[r] <= q2.data[r] {
-                dq1.data[r] = -coef;
+                ws.dq1.data[r] = -coef;
             } else {
-                dq2.data[r] = -coef;
+                ws.dq2.data[r] = -coef;
             }
         }
         stats.actor_loss = (loss / b as f64) as f32;
@@ -558,26 +795,28 @@ impl SacAgent {
 
         // dQ/da through the critic (param grads discarded afterwards)
         self.critic.zero_grad();
-        let da = self.critic.backward(&dq1, &dq2, p, &self.ws_critic);
-        let coefs = vec![p.q(alpha * coef); b];
-        let dhead = tg.backward(&coefs, Some(&da));
+        let da = self.critic.backward(&ws.dq1, &ws.dq2, p, &self.ws_critic);
+        ws.coefs.clear();
+        ws.coefs.resize(b, p.q(alpha * coef));
+        let dhead = tg.backward(&ws.coefs, Some(&da));
         self.actor.zero_grad();
         let _ = self.actor.backward(&dhead, p, &self.ws_actor);
         self.critic.zero_grad(); // discard critic grads from this pass
 
         if self.methods.coerce {
             let mx = p.max_value();
-            for prm in self.actor.params_mut() {
+            self.actor.for_each_param_mut(&mut |prm: &mut Param| {
                 coerce_nonfinite(&mut prm.g, mx);
-            }
+            });
         }
         if let Some(probe) = self.grad_probe.as_mut() {
-            for prm in self.actor.params_mut() {
-                probe.extend(prm.g.iter().map(|g| g.abs()));
-            }
+            self.actor.for_each_param(&mut |prm: &Param| {
+                append_abs_pooled(probe, &prm.g);
+            });
         }
-        let mut params = self.actor.params_mut();
-        self.opt_actor.step(&mut params, &mut self.sc_actor);
+        ws.params.clear();
+        self.actor.for_each_param_mut(&mut |prm: &mut Param| ws.params.push(prm));
+        self.opt_actor.step(ws.params.as_params(), &mut self.sc_actor);
 
         // -- temperature ------------------------------------------------
         // L(α) = −α · mean(logπ + H̄)  (logπ detached)
@@ -594,29 +833,56 @@ impl SacAgent {
         if self.methods.coerce {
             coerce_nonfinite(&mut self.log_alpha.g, p.max_value());
         }
-        let mut aparams = vec![&mut self.log_alpha];
-        self.opt_alpha.step(&mut aparams, &mut self.sc_alpha);
+        self.opt_alpha.step(&mut [&mut self.log_alpha], &mut self.sc_alpha);
     }
 
+    /// Soft-update the target critic (and target encoder) toward the
+    /// online weights. The EMA reads ψ straight out of the per-layer
+    /// parameter slices and the target parameters copy straight from the
+    /// refreshed view — the old `flat_params()` → `update` → `load_flat`
+    /// path materialized a fresh flattened copy of every critic weight
+    /// on each sync; now the only data movement is the EMA math itself
+    /// (pooled) plus one memcpy per layer into the target.
     fn update_target(&mut self) {
-        let flat = self.critic.flat_params();
-        self.target_ema.update(&flat, self.cfg.tau);
-        self.target.load_flat(self.target_ema.weights());
+        let tau = self.cfg.tau;
+        let ema = &mut self.target_ema;
+        let mut off = 0usize;
+        self.critic.for_each_param(&mut |prm: &Param| {
+            ema.update_span(off, &prm.w, tau);
+            off += prm.len();
+        });
+        debug_assert_eq!(off, ema.len(), "EMA must cover every critic weight");
+        let view = ema.weights();
+        let mut off = 0usize;
+        self.target.for_each_param_mut(&mut |prm: &mut Param| {
+            prm.w.copy_from_slice(&view[off..off + prm.len()]);
+            off += prm.len();
+        });
         if let (Some(enc), Some(ema), Some(tgt)) = (
-            self.encoder.as_mut(),
+            self.encoder.as_ref(),
             self.encoder_ema.as_mut(),
             self.target_encoder.as_mut(),
         ) {
-            let flat = enc.flat_params();
-            ema.update(&flat, self.cfg.tau);
-            tgt.load_flat(ema.weights());
+            let mut off = 0usize;
+            enc.for_each_param(&mut |prm: &Param| {
+                ema.update_span(off, &prm.w, tau);
+                off += prm.len();
+            });
+            debug_assert_eq!(off, ema.len(), "EMA must cover every encoder weight");
+            let view = ema.weights();
+            let mut off = 0usize;
+            tgt.for_each_param_mut(&mut |prm: &mut Param| {
+                prm.w.copy_from_slice(&view[off..off + prm.len()]);
+                off += prm.len();
+            });
         }
     }
 
-    /// Total learnable parameters (actor + critic [+ encoder]).
-    pub fn n_params(&mut self) -> usize {
+    /// Total learnable parameters (actor + critic [+ encoder]) — a
+    /// read-only count.
+    pub fn n_params(&self) -> usize {
         let mut n = self.actor.n_params() + self.critic.n_params();
-        if let Some(enc) = self.encoder.as_mut() {
+        if let Some(enc) = self.encoder.as_ref() {
             n += enc.n_params();
         }
         n
@@ -797,6 +1063,118 @@ mod tests {
             let s = agent.update(&batch);
             assert!(s.critic_loss.is_finite(), "loss={}", s.critic_loss);
         }
+    }
+
+    #[test]
+    fn update_workspace_buffers_are_reused_steady_state() {
+        // after the first update warms the workspace, further updates of
+        // the same batch shape must not reallocate any driver buffer
+        let mut rng = Pcg64::seed(21);
+        let cfg = SacConfig::states(6, 2, 32);
+        let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 13);
+        let b = toy_batch(16, 6, 2, &mut rng);
+        agent.update(&b);
+        let ptrs = (
+            agent.update_ws.eps.data.as_ptr(),
+            agent.update_ws.y.as_ptr(),
+            agent.update_ws.dq1.data.as_ptr(),
+            agent.update_ws.dq2.data.as_ptr(),
+            agent.update_ws.coefs.as_ptr(),
+            agent.update_ws.params.ptrs.as_ptr(),
+        );
+        for _ in 0..3 {
+            let b = toy_batch(16, 6, 2, &mut rng);
+            agent.update(&b);
+            let now = (
+                agent.update_ws.eps.data.as_ptr(),
+                agent.update_ws.y.as_ptr(),
+                agent.update_ws.dq1.data.as_ptr(),
+                agent.update_ws.dq2.data.as_ptr(),
+                agent.update_ws.coefs.as_ptr(),
+                agent.update_ws.params.ptrs.as_ptr(),
+            );
+            assert_eq!(ptrs, now, "steady-state update must not reallocate the workspace");
+        }
+    }
+
+    #[test]
+    fn update_round_matches_sequential_updates_states() {
+        // a round of per-update calls vs one update_round call over the
+        // same batches: bitwise-identical weights and RNG position
+        let mut rng = Pcg64::seed(31);
+        let cfg = SacConfig::states(6, 2, 24);
+        let mut a = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 17);
+        let mut b = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 17);
+        for _ in 0..4 {
+            let batches: Vec<Batch> = (0..3).map(|_| toy_batch(8, 6, 2, &mut rng)).collect();
+            for bt in &batches {
+                a.update(bt);
+            }
+            b.update_round(&batches);
+        }
+        assert_eq!(a.updates, b.updates);
+        let (ca, cb) = (a.critic.flat_params(), b.critic.flat_params());
+        assert!(ca.iter().zip(&cb).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let (ta, tb) = (a.target.flat_params(), b.target.flat_params());
+        assert!(ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(a.rng.clone().next_u64(), b.rng.clone().next_u64(), "same RNG position");
+    }
+
+    #[test]
+    fn fused_target_groups_cut_at_sync_boundaries() {
+        // pixels agent, target_update_freq = 2: starting from updates = 0
+        // the groups must be {0}, {1,2}, {3,4}, ... — update 0 syncs the
+        // target right after its own step
+        let mut rng = Pcg64::seed(41);
+        let cfg = SacConfig::pixels(8, 2, 24);
+        assert_eq!(cfg.target_update_freq, 2);
+        let agent = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        let mut ws = UpdateWorkspace::default();
+        let batches: Vec<Batch> = (0..5)
+            .map(|_| {
+                let mut obs = Tensor::zeros(&[2, 3, 21, 21]);
+                for v in obs.data.iter_mut() {
+                    *v = rng.uniform_f32();
+                }
+                Batch {
+                    obs: obs.clone(),
+                    act: Tensor::zeros(&[2, 2]),
+                    rew: vec![0.0; 2],
+                    next_obs: obs,
+                    not_done: vec![1.0; 2],
+                }
+            })
+            .collect();
+        agent.plan_fused_groups(&batches, &mut ws);
+        assert_eq!(ws.fused_groups, vec![(0, 1), (1, 3), (3, 5)]);
+        assert!(ws.fused_off.iter().all(|&o| o == usize::MAX), "plan runs no forwards");
+        // fuse the (1, 3) group: the rows must equal the per-batch
+        // target-encoder forwards, and offsets must be consecutive
+        agent.fuse_group(&batches[1..3], 1, &mut ws);
+        assert_eq!(ws.fused_off[0], usize::MAX, "singleton group stays unfused");
+        assert_eq!(ws.fused_off[1], 0);
+        assert_eq!(ws.fused_off[2], 2, "consecutive rows inside a group");
+        let p = agent.compute;
+        let tenc = agent.target_encoder.as_ref().unwrap();
+        for j in 1..3 {
+            let want = tenc.forward(&batches[j].next_obs, p);
+            let off = ws.fused_off[j] * 8;
+            let got = &ws.fused_feat.data[off..off + want.data.len()];
+            assert!(
+                want.data.iter().zip(got).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "fused rows for update {j} must match the unfused forward"
+            );
+        }
+    }
+
+    #[test]
+    fn n_params_is_read_only() {
+        fn count(a: &SacAgent) -> usize {
+            a.n_params() // &self receiver: callable on a shared reference
+        }
+        let cfg = SacConfig::states(4, 2, 16);
+        let agent = SacAgent::new(cfg, Methods::none(), Precision::Fp32, 5);
+        assert_eq!(count(&agent), agent.actor.n_params() + agent.critic.n_params());
     }
 
     #[test]

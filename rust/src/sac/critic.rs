@@ -126,6 +126,20 @@ impl Critic {
         v
     }
 
+    /// Visit the parameters in [`Critic::params_mut`] order without
+    /// materializing a `Vec` — the walk the learner hot loop (optimizer
+    /// scratch fill, coercion, grad probe, in-place target EMA) uses.
+    pub fn for_each_param(&self, f: &mut impl FnMut(&Param)) {
+        self.q1.for_each_param(f);
+        self.q2.for_each_param(f);
+    }
+
+    /// Mutable twin of [`Critic::for_each_param`], same order.
+    pub fn for_each_param_mut(&mut self, f: &mut impl FnMut(&mut Param)) {
+        self.q1.for_each_param_mut(f);
+        self.q2.for_each_param_mut(f);
+    }
+
     /// Flatten all parameter values (target-net EMA operates on this).
     pub fn flat_params(&mut self) -> Vec<f32> {
         let mut out = Vec::new();
@@ -211,6 +225,20 @@ mod tests {
         let mut c2 = Critic::new("c2", 3, 2, 8, &mut rng);
         c2.load_flat(&flat);
         assert_eq!(c2.flat_params(), flat);
+    }
+
+    #[test]
+    fn visitor_order_matches_params_mut() {
+        // positional optimizer state depends on the two walks agreeing
+        let mut rng = Pcg64::seed(7);
+        let mut c = Critic::new("c", 3, 2, 8, &mut rng);
+        let mut names = Vec::new();
+        c.for_each_param(&mut |p: &Param| names.push(p.name.clone()));
+        let want: Vec<String> = c.params_mut().iter().map(|p| p.name.clone()).collect();
+        assert_eq!(names, want);
+        let mut names_mut = Vec::new();
+        c.for_each_param_mut(&mut |p: &mut Param| names_mut.push(p.name.clone()));
+        assert_eq!(names_mut, want);
     }
 
     #[test]

@@ -103,10 +103,11 @@ impl Encoder {
 
     /// Inference forward `[B, C, H, W] → [B, feature_dim]` (`&self`,
     /// cache-free). Bitwise identical to [`Encoder::forward_train`].
+    /// The image feeds the first conv directly (no staging clone).
     pub fn forward(&self, img: &Tensor, prec: Precision) -> Tensor {
         assert_eq!(img.shape.len(), 4);
-        let mut h = img.clone();
-        for conv in &self.convs {
+        let mut h = relu(&self.convs[0].forward(img, prec), prec);
+        for conv in &self.convs[1..] {
             let z = conv.forward(&h, prec);
             h = relu(&z, prec);
         }
@@ -119,17 +120,25 @@ impl Encoder {
     }
 
     /// Training forward: caches everything [`Encoder::backward`] needs
-    /// into `ws`.
+    /// into `ws`. The pre-ReLU conv outputs move into the workspace (no
+    /// per-layer clone) and the image feeds the first conv directly —
+    /// bitwise identical to the allocating layout.
     pub fn forward_train(&self, img: &Tensor, prec: Precision, ws: &mut EncoderWorkspace) -> Tensor {
         assert_eq!(img.shape.len(), 4);
         let n = self.convs.len();
         ws.convs.resize_with(n, Conv2dWorkspace::default);
         ws.pre_relu.clear();
-        let mut h = img.clone();
-        for (i, conv) in self.convs.iter().enumerate() {
+        let mut h = {
+            let z = self.convs[0].forward_train(img, prec, &mut ws.convs[0]);
+            let a = relu(&z, prec);
+            ws.pre_relu.push(z);
+            a
+        };
+        for (i, conv) in self.convs.iter().enumerate().skip(1) {
             let z = conv.forward_train(&h, prec, &mut ws.convs[i]);
-            ws.pre_relu.push(z.clone());
-            h = relu(&z, prec);
+            let a = relu(&z, prec);
+            ws.pre_relu.push(z);
+            h = a;
         }
         let b = h.shape[0];
         let flat = h.len() / b;
@@ -173,6 +182,25 @@ impl Encoder {
         v
     }
 
+    /// Visit the parameters in [`Encoder::params_mut`] order without
+    /// materializing a `Vec`.
+    pub fn for_each_param(&self, f: &mut impl FnMut(&Param)) {
+        for c in &self.convs {
+            c.for_each_param(f);
+        }
+        self.head.for_each_param(f);
+        self.ln.for_each_param(f);
+    }
+
+    /// Mutable twin of [`Encoder::for_each_param`], same order.
+    pub fn for_each_param_mut(&mut self, f: &mut impl FnMut(&mut Param)) {
+        for c in self.convs.iter_mut() {
+            c.for_each_param_mut(f);
+        }
+        self.head.for_each_param_mut(f);
+        self.ln.for_each_param_mut(f);
+    }
+
     pub fn flat_params(&mut self) -> Vec<f32> {
         let mut out = Vec::new();
         for p in self.params_mut() {
@@ -199,8 +227,11 @@ impl Encoder {
         self.ln.zero_grad();
     }
 
-    pub fn n_params(&mut self) -> usize {
-        self.params_mut().iter().map(|p| p.len()).sum()
+    /// Total learnable parameters (a read-only count — no `&mut self`).
+    pub fn n_params(&self) -> usize {
+        self.convs.iter().map(|c| c.n_params()).sum::<usize>()
+            + self.head.n_params()
+            + self.ln.n_params()
     }
 
     pub fn quantize_params(&mut self, prec: Precision) {

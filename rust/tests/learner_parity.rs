@@ -1,0 +1,194 @@
+//! Learner hot-path contracts (PR 5): the pooled optimizer, the
+//! pre-sampled round arena and the fused target-side forwards must all
+//! be bitwise-identical to the legacy per-update path, for every preset
+//! shape the paper runs — states and pixels, fp32, fp16_ours and
+//! fp16_naive.
+
+use lprl::lowp::Precision;
+use lprl::nn::Tensor;
+use lprl::replay::{ReplayBuffer, RoundArena, Storage};
+use lprl::rngs::Pcg64;
+use lprl::sac::{Batch, Methods, SacAgent, SacConfig};
+
+/// The preset grid the parity tests sweep.
+fn presets() -> Vec<(&'static str, Methods, Precision)> {
+    vec![
+        ("fp32", Methods::none(), Precision::Fp32),
+        ("fp16_ours", Methods::ours(), Precision::fp16()),
+        ("fp16_naive", Methods::none(), Precision::fp16()),
+    ]
+}
+
+fn build_states(methods: Methods, prec: Precision) -> SacAgent {
+    SacAgent::new(SacConfig::states(6, 2, 24), methods, prec, 17)
+}
+
+fn build_pixels(methods: Methods, prec: Precision) -> SacAgent {
+    SacAgent::new_pixels(SacConfig::pixels(8, 2, 24), methods, prec, 17, 3, 21, 4)
+}
+
+fn states_batch(b: usize, rng: &mut Pcg64) -> Batch {
+    let mut obs = Tensor::zeros(&[b, 6]);
+    rng.normal_fill(&mut obs.data);
+    let mut next_obs = Tensor::zeros(&[b, 6]);
+    rng.normal_fill(&mut next_obs.data);
+    let mut act = Tensor::zeros(&[b, 2]);
+    for v in act.data.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    Batch {
+        obs,
+        act,
+        rew: (0..b).map(|_| rng.uniform_f32()).collect(),
+        next_obs,
+        not_done: vec![1.0; b],
+    }
+}
+
+fn pixels_batch(b: usize, rng: &mut Pcg64) -> Batch {
+    let mut obs = Tensor::zeros(&[b, 3, 21, 21]);
+    for v in obs.data.iter_mut() {
+        *v = rng.uniform_f32();
+    }
+    let mut next_obs = obs.clone();
+    for v in next_obs.data.iter_mut() {
+        *v = (*v + 0.01).min(1.0);
+    }
+    let mut act = Tensor::zeros(&[b, 2]);
+    for v in act.data.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    Batch {
+        obs,
+        act,
+        rew: (0..b).map(|_| rng.uniform_f32()).collect(),
+        next_obs,
+        not_done: vec![1.0; b],
+    }
+}
+
+fn assert_agents_bitwise_equal(a: &mut SacAgent, b: &mut SacAgent, label: &str) {
+    assert_eq!(a.updates, b.updates, "{label}: update counters");
+    let pairs = [
+        (a.critic.flat_params(), b.critic.flat_params(), "critic"),
+        (a.target.flat_params(), b.target.flat_params(), "target"),
+    ];
+    for (x, y, what) in &pairs {
+        assert_eq!(x.len(), y.len());
+        for (i, (u, v)) in x.iter().zip(y.iter()).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "{label}: {what}[{i}]");
+        }
+    }
+    for (la, lb) in a.actor.params_mut().iter().zip(b.actor.params_mut().iter()) {
+        assert!(
+            la.w.iter().zip(&lb.w).all(|(u, v)| u.to_bits() == v.to_bits()),
+            "{label}: actor weights"
+        );
+    }
+    if let (Some(ea), Some(eb)) = (a.encoder.as_mut(), b.encoder.as_mut()) {
+        let (fa, fb) = (ea.flat_params(), eb.flat_params());
+        assert!(
+            fa.iter().zip(&fb).all(|(u, v)| u.to_bits() == v.to_bits()),
+            "{label}: encoder weights"
+        );
+    }
+    if let (Some(ta), Some(tb)) = (a.target_encoder.as_mut(), b.target_encoder.as_mut()) {
+        let (fa, fb) = (ta.flat_params(), tb.flat_params());
+        assert!(
+            fa.iter().zip(&fb).all(|(u, v)| u.to_bits() == v.to_bits()),
+            "{label}: target-encoder weights"
+        );
+    }
+    assert_eq!(
+        a.log_alpha.w[0].to_bits(),
+        b.log_alpha.w[0].to_bits(),
+        "{label}: log_alpha"
+    );
+    assert_eq!(
+        a.rng.clone().next_u64(),
+        b.rng.clone().next_u64(),
+        "{label}: agent RNG position"
+    );
+}
+
+/// Fused round updates vs one-at-a-time updates on identical batch
+/// streams: the whole agent state must match bitwise, for every preset.
+#[test]
+fn fused_rounds_match_sequential_updates_across_presets() {
+    for pixels in [false, true] {
+        for (name, methods, prec) in presets() {
+            let (mut a, mut b) = if pixels {
+                (build_pixels(methods, prec), build_pixels(methods, prec))
+            } else {
+                (build_states(methods, prec), build_states(methods, prec))
+            };
+            let mut rng = Pcg64::seed(71);
+            let (bsz, rounds, per_round) = if pixels { (2, 3, 3) } else { (8, 4, 5) };
+            for _ in 0..rounds {
+                let batches: Vec<Batch> = (0..per_round)
+                    .map(|_| if pixels { pixels_batch(bsz, &mut rng) } else { states_batch(bsz, &mut rng) })
+                    .collect();
+                for bt in &batches {
+                    a.update(bt);
+                }
+                b.update_round(&batches);
+            }
+            let label = format!("{name} pixels={pixels}");
+            assert_agents_bitwise_equal(&mut a, &mut b, &label);
+        }
+    }
+}
+
+/// The round arena path end to end: sampling a round up front and
+/// updating through `update_round` must equal the legacy
+/// sample-one/update-one interleave (the replay stream and the agent's
+/// noise stream are independent).
+#[test]
+fn arena_round_equals_interleaved_sample_update() {
+    let mut fill_rng = Pcg64::seed(3);
+    let mut replay = ReplayBuffer::new(256, &[6], 2, Storage::F16);
+    for _ in 0..200 {
+        let o: Vec<f32> = (0..6).map(|_| fill_rng.normal_f32()).collect();
+        let no: Vec<f32> = (0..6).map(|_| fill_rng.normal_f32()).collect();
+        let act: Vec<f32> = (0..2).map(|_| fill_rng.uniform_in(-1.0, 1.0)).collect();
+        replay.push(&o, &act, fill_rng.uniform_f32(), &no, false);
+    }
+    let mut legacy = build_states(Methods::ours(), Precision::fp16());
+    let mut round = build_states(Methods::ours(), Precision::fp16());
+    let mut r1 = Pcg64::seed_stream(9, 7);
+    let mut r2 = Pcg64::seed_stream(9, 7);
+    let mut arena = RoundArena::default();
+    for _ in 0..6 {
+        // legacy: sample → update, one at a time
+        for _ in 0..4 {
+            let batch = replay.sample(16, &mut r1);
+            legacy.update(&batch);
+        }
+        // arena: sample the whole round, then update the round
+        replay.sample_round_into(4, 16, None, &mut r2, &mut arena);
+        round.update_round(arena.batches());
+    }
+    assert_agents_bitwise_equal(&mut legacy, &mut round, "arena round");
+}
+
+/// Pixel agents: fusion must engage (groups of target_update_freq) and
+/// still match, including across round boundaries that move the group
+/// phase.
+#[test]
+fn pixel_fusion_alignment_shifts_with_update_counter() {
+    let (mut a, mut b) = (
+        build_pixels(Methods::ours(), Precision::fp16()),
+        build_pixels(Methods::ours(), Precision::fp16()),
+    );
+    let mut rng = Pcg64::seed(77);
+    // odd-sized rounds so fused groups land on every phase of the
+    // target_update_freq=2 cycle
+    for round_len in [3usize, 2, 5, 1, 4] {
+        let batches: Vec<Batch> = (0..round_len).map(|_| pixels_batch(2, &mut rng)).collect();
+        for bt in &batches {
+            a.update(bt);
+        }
+        b.update_round(&batches);
+    }
+    assert_agents_bitwise_equal(&mut a, &mut b, "pixel fusion phases");
+}
