@@ -26,9 +26,10 @@
 use lprl::config::RunConfig;
 use lprl::coordinator::train;
 use lprl::lowp::Precision;
+use lprl::nn::Tensor;
 use lprl::replay::{ReplayBuffer, RoundArena, Storage};
 use lprl::rngs::Pcg64;
-use lprl::sac::{Methods, SacAgent, SacConfig};
+use lprl::sac::{Critic, Methods, SacAgent, SacConfig};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -40,19 +41,30 @@ struct CountingAlloc;
 
 static ALLOCS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a pure pass-through to `System` plus a relaxed counter bump —
+// the allocator contract is exactly `System`'s.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: callers uphold `GlobalAlloc::alloc`'s contract; the layout
+    // is forwarded to `System` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: same layout the caller vouched for.
+        unsafe { System.alloc(layout) }
     }
 
+    // SAFETY: callers pass a pointer this allocator returned with this
+    // exact layout, which is what `System` requires.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: `ptr`/`layout` come straight from the caller's contract.
+        unsafe { System.dealloc(ptr, layout) }
     }
 
+    // SAFETY: callers pass a live allocation of `layout` and a non-zero
+    // `new_size`, forwarded to `System` unchanged.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: `ptr`/`layout`/`new_size` come straight from the caller.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
 }
 
@@ -205,6 +217,56 @@ fn assert_fused_parity(name: &'static str, sh: &MicroShape) {
     );
 }
 
+struct PairRow {
+    preset: &'static str,
+    batch: usize,
+    hidden: usize,
+    paired_per_sec: f64,
+    sequential_per_sec: f64,
+}
+
+/// Gate + time the paired twin-critic forward against two explicit head
+/// forwards. The gate asserts bitwise identity per head; the timing pair
+/// shows what halving the GEMM dispatches (6 → 3 per critic forward)
+/// buys at this shape. Both loops include the `[obs | act]` join so the
+/// comparison isolates the dispatch structure.
+fn critic_pair_bench(
+    preset: &'static str,
+    prec: Precision,
+    batch: usize,
+    hidden: usize,
+    iters: usize,
+) -> PairRow {
+    let mut rng = Pcg64::seed(41);
+    let c = Critic::new("bench", 17, 6, hidden, &mut rng);
+    let obs = Tensor::from_vec(&[batch, 17], (0..batch * 17).map(|_| rng.normal_f32()).collect());
+    let act = Tensor::from_vec(&[batch, 6], (0..batch * 6).map(|_| rng.normal_f32()).collect());
+
+    // bitwise gate: paired dispatch == two sequential head forwards
+    let x = Critic::join(&obs, &act);
+    let (s1, s2) = (c.q1.forward(&x, prec), c.q2.forward(&x, prec));
+    let (q1, q2) = c.forward(&obs, &act, prec);
+    assert!(
+        q1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits())
+            && q2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()),
+        "{preset} paired critic forward diverged from sequential heads"
+    );
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let _ = c.forward(&obs, &act, prec);
+    }
+    let paired_per_sec = iters as f64 / t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        let xi = Critic::join(&obs, &act);
+        let _ = c.q1.forward(&xi, prec);
+        let _ = c.q2.forward(&xi, prec);
+    }
+    let sequential_per_sec = iters as f64 / t1.elapsed().as_secs_f64();
+    PairRow { preset, batch, hidden, paired_per_sec, sequential_per_sec }
+}
+
 struct TrainRow {
     preset: &'static str,
     obs: &'static str,
@@ -258,11 +320,31 @@ fn train_bench(
     }
 }
 
-fn write_json(micro: &[MicroRow], trains: &[TrainRow]) -> std::io::Result<std::path::PathBuf> {
+fn write_json(
+    micro: &[MicroRow],
+    pairs: &[PairRow],
+    trains: &[TrainRow],
+) -> std::io::Result<std::path::PathBuf> {
     let mut out = String::new();
     out.push_str("{\n  \"bench\": \"learner\",\n  \"task\": \"pendulum_swingup\",\n");
-    out.push_str("  \"gates\": {\"fused_parity\": \"bitwise\", \"strict_determinism\": true},\n");
-    out.push_str("  \"micro\": [\n");
+    out.push_str(
+        "  \"gates\": {\"fused_parity\": \"bitwise\", \"strict_determinism\": true, \"critic_pair_parity\": \"bitwise\"},\n",
+    );
+    out.push_str("  \"critic_pair\": [\n");
+    for (i, r) in pairs.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"batch\": {}, \"hidden\": {}, \"paired_fwd_per_sec\": {:.1}, \"sequential_fwd_per_sec\": {:.1}, \"speedup\": {:.3}}}",
+            r.preset,
+            r.batch,
+            r.hidden,
+            r.paired_per_sec,
+            r.sequential_per_sec,
+            r.paired_per_sec / r.sequential_per_sec
+        );
+        out.push_str(if i + 1 < pairs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"micro\": [\n");
     for (i, r) in micro.iter().enumerate() {
         let _ = write!(
             out,
@@ -317,6 +399,24 @@ fn main() {
         assert_fused_parity(name, &states_gate);
     }
     assert_fused_parity("fp16_ours", &pixels_gate);
+
+    // -- paired twin-critic forward: gate + dispatch-halving timing -------
+    let pair_iters = if smoke { 20 } else { 400 };
+    let pairs = vec![
+        critic_pair_bench("fp32", Precision::Fp32, 128, 256, pair_iters),
+        critic_pair_bench("fp16_ours", Precision::fp16(), 128, 256, pair_iters),
+    ];
+    for r in &pairs {
+        println!(
+            "critic_pair {:>10} batch {:>3} hidden {:>3}: paired {:>8.1} fwd/s  sequential {:>8.1} fwd/s  ({:.2}x)",
+            r.preset,
+            r.batch,
+            r.hidden,
+            r.paired_per_sec,
+            r.sequential_per_sec,
+            r.paired_per_sec / r.sequential_per_sec
+        );
+    }
 
     // strict num_envs=1 determinism (the seed-trainer contract)
     let det_cfg = RunConfig {
@@ -388,7 +488,7 @@ fn main() {
         println!("smoke mode: no JSON written");
         return;
     }
-    match write_json(&micro, &trains) {
+    match write_json(&micro, &pairs, &trains) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_learner.json: {e}"),
     }

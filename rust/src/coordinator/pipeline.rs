@@ -189,6 +189,9 @@ impl Queue {
     /// A recycled chunk if one is waiting, else a fresh (empty) one.
     /// Never blocks.
     fn take_spare(&self) -> Chunk {
+        // tidy-allow(panic): lock poisoning means the other side already
+        // panicked — propagating is correct (applies to every queue lock
+        // and condvar wait in this module).
         self.spare.lock().unwrap().pop().unwrap_or_default()
     }
 
@@ -196,7 +199,7 @@ impl Queue {
     /// instead of hoarding it once the spare stack covers the maximum
     /// number in flight.
     fn recycle(&self, chunk: Chunk) {
-        let mut g = self.spare.lock().unwrap();
+        let mut g = self.spare.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         if g.len() <= self.cap {
             g.push(chunk);
         }
@@ -205,7 +208,7 @@ impl Queue {
     /// Blocking push with backpressure; returns `false` if the learner
     /// asked the pipeline to stop.
     fn push(&self, m: Msg) -> bool {
-        let mut g = self.q.lock().unwrap();
+        let mut g = self.q.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         loop {
             if self.stop.load(Ordering::Acquire) {
                 return false;
@@ -216,7 +219,7 @@ impl Queue {
                 self.not_empty.notify_one();
                 return true;
             }
-            g = self.not_full.wait(g).unwrap();
+            g = self.not_full.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         }
     }
 
@@ -224,7 +227,7 @@ impl Queue {
     /// left to drain (it died — a normally-finished collector has
     /// already queued every scheduled round).
     fn pop(&self) -> Option<Msg> {
-        let mut g = self.q.lock().unwrap();
+        let mut g = self.q.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         loop {
             if let Some(m) = g.pop_front() {
                 drop(g);
@@ -234,14 +237,14 @@ impl Queue {
             if self.closed.load(Ordering::Acquire) {
                 return None;
             }
-            g = self.not_empty.wait(g).unwrap();
+            g = self.not_empty.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         }
     }
 
     /// Learner-side abort: wake a collector blocked on a full queue.
     fn stop(&self) {
         self.stop.store(true, Ordering::Release);
-        let _g = self.q.lock().unwrap();
+        let _g = self.q.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         self.not_full.notify_all();
     }
 
@@ -249,7 +252,7 @@ impl Queue {
     /// Runs in a drop guard so a panicking collector still closes.
     fn close(&self) {
         self.closed.store(true, Ordering::Release);
-        let _g = self.q.lock().unwrap();
+        let _g = self.q.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         self.not_empty.notify_all();
     }
 }
@@ -294,7 +297,7 @@ struct SnapshotSlot {
 
 impl SnapshotSlot {
     fn publish(&self, version: u64, policy: Arc<Policy>) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         g.push_back((version, policy));
         while g.len() > PIPELINE_LAG as usize + 1 {
             g.pop_front();
@@ -305,7 +308,7 @@ impl SnapshotSlot {
 
     /// Block until `version` is published and return it; `None` on stop.
     fn fetch(&self, version: u64) -> Option<Arc<Policy>> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         loop {
             if let Some((_, p)) = g.iter().find(|(v, _)| *v == version) {
                 return Some(p.clone());
@@ -313,13 +316,13 @@ impl SnapshotSlot {
             if self.stop.load(Ordering::Acquire) {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         }
     }
 
     fn stop(&self) {
         self.stop.store(true, Ordering::Release);
-        let _g = self.inner.lock().unwrap();
+        let _g = self.inner.lock().unwrap(); // tidy-allow(panic): poisoned lock — see take_spare
         self.cv.notify_all();
     }
 }
@@ -375,6 +378,8 @@ fn collector(
             }
         };
 
+        // tidy-allow(determinism): wall-clock feeds throughput telemetry
+        // only — no training decision reads it.
         let tc = Instant::now();
         let mut acts = match policy {
             None => {
@@ -434,6 +439,8 @@ fn collector(
 /// twin of the strict `train_agent`). Called via `coordinator::train`
 /// when `cfg.sync_mode == "async"`.
 pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAgent) -> TrainOutcome {
+    // tidy-allow(determinism): wall-clock feeds throughput telemetry
+    // only — no training decision reads it.
     let t0 = Instant::now();
     let n = venv.num_envs();
     let repeat = venv.action_repeat();
@@ -465,6 +472,9 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
     let mut last_snapshot = Arc::new(agent.policy());
     slot.publish(0, last_snapshot.clone());
 
+    // tidy-allow(determinism): the collector/learner split is the one
+    // sanctioned structured-concurrency seam; round schedule, snapshot
+    // lag, and env stepping stay bitwise reproducible by construction.
     let collect_secs = std::thread::scope(|s| {
         let handle = {
             let queue = &queue;
@@ -496,6 +506,7 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
                     // code — update counts cannot drift between modes
                     let mut updated = false;
                     if base_step >= cfg.seed_steps {
+                        // tidy-allow(determinism): telemetry-only timing.
                         let tu = Instant::now();
                         updated = sched.run_round(
                             cfg,
@@ -513,6 +524,7 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
 
                     // Republish before evaluating: eval is slow and the
                     // collector should not stall behind it.
+                    // tidy-allow(determinism): telemetry-only timing.
                     let tp = Instant::now();
                     if updated {
                         last_snapshot = Arc::new(agent.policy());

@@ -374,6 +374,8 @@ pub fn train(cfg: &RunConfig) -> TrainOutcome {
 /// The collector/learner loop over a pre-built agent — the seam the
 /// crash-path tests use to inject poisoned weights.
 fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainOutcome {
+    // tidy-allow(determinism): wall-clock feeds throughput telemetry
+    // only — no training decision reads it.
     let t0 = Instant::now();
     let n = venv.num_envs();
     let repeat = venv.action_repeat();
@@ -422,6 +424,7 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
         let k = round_len(cfg, n, step);
 
         // -- collect: one shared forward drives k env streams ----------
+        // tidy-allow(determinism): telemetry-only timing.
         let tc = Instant::now();
         let mut acts = if step < cfg.seed_steps {
             let mut t = Tensor::zeros(&[k, act_dim]);
@@ -482,6 +485,7 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
 
         // -- update: one gradient step per collected transition --------
         if step >= cfg.seed_steps {
+            // tidy-allow(determinism): telemetry-only timing.
             let tu = Instant::now();
             sched.run_round(
                 cfg, &mut agent, &replay, &mut rng, &mut arena, &mut grad_hist, step, k,
@@ -545,7 +549,12 @@ pub fn run_many(cfgs: &[RunConfig]) -> Vec<TrainOutcome> {
     let n = cfgs.len();
     let mut results: Vec<Option<TrainOutcome>> = (0..n).map(|_| None).collect();
     let next = AtomicUsize::new(0);
+    // tidy-allow(determinism): machine shape only sizes the worker count
+    // for independent runs; every run's result is seed-determined and
+    // written back to its own slot, so ordering cannot leak in.
     let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(n.max(1));
+    // tidy-allow(determinism): sanctioned structured-concurrency seam for
+    // fully independent grid runs — see the worker-count note above.
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|_| {
@@ -579,6 +588,8 @@ pub fn run_many(cfgs: &[RunConfig]) -> Vec<TrainOutcome> {
             }
         }
     });
+    // tidy-allow(panic): every index is filled unless a worker panicked,
+    // and a worker panic has already been re-raised above.
     results.into_iter().map(|o| o.expect("worker died")).collect()
 }
 

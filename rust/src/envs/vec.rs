@@ -91,10 +91,11 @@ struct ParPtrs {
     next: *mut f32,
     rew: *mut f32,
 }
-// Safety: tasks access disjoint env slots / output rows (index i only),
+// SAFETY: tasks access disjoint env slots / output rows (index i only),
 // and `EnvObs` is `Send` (asserted below), so moving the exclusive
 // access to a worker thread is sound.
 unsafe impl Send for ParPtrs {}
+// SAFETY: as above — every task touches only its own index i.
 unsafe impl Sync for ParPtrs {}
 
 #[allow(dead_code)]
@@ -221,7 +222,7 @@ impl VecEnv {
             rew: rew.as_mut_ptr(),
         };
         pool.run_chunked(k, grain, |i| {
-            // Safety: task i exclusively owns env slot i, output row i
+            // SAFETY: task i exclusively owns env slot i, output row i
             // and rew[i]; bounds are checked by the asserts above.
             unsafe {
                 let env = &mut *p.envs.add(i);

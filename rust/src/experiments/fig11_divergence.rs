@@ -3,6 +3,7 @@
 //! (12) the mean |ΔQ| on a fixed probe set of states, over training.
 
 use super::helpers::ExpOpts;
+use anyhow::Context;
 use crate::envs::{action_repeat, make_env, sanitize_action};
 use crate::nn::Tensor;
 use crate::replay::{ReplayBuffer, Storage};
@@ -16,8 +17,8 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<()> {
     let checkpoints = 8usize;
     println!("Figures 11/12 — fp32 vs fp16 twin divergence on {task} ({steps} steps):");
 
-    let mut env32 = make_env(&task).unwrap();
-    let mut env16 = make_env(&task).unwrap();
+    let mut env32 = make_env(&task).with_context(|| format!("unknown task {task}"))?;
+    let mut env16 = make_env(&task).with_context(|| format!("unknown task {task}"))?;
     let repeat = action_repeat(&task);
     let mut rng = Pcg64::seed(opts.base.seed);
     let obs_dim = env32.obs_dim();

@@ -80,6 +80,10 @@
 // GEMM entry points carry shape + epilogue parameters; these two
 // pedantic lints fight that style without making it safer.
 #![allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+// Unsafe hygiene (enforced by `cargo run -p xtask -- tidy`): raw ops
+// inside an `unsafe fn` still need their own `unsafe {}` block, so
+// every dereference is pinned to a written SAFETY argument.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod config;
 pub mod coordinator;

@@ -163,6 +163,8 @@ impl FloatFormat {
             RoundMode::Stochastic => {
                 let lo = steps.floor();
                 let frac = steps - lo;
+                // tidy-allow(panic): misconfiguration — stochastic rounding
+                // without an RNG stream cannot produce a defined result.
                 let u = rng.expect("stochastic rounding requires an RNG").uniform_f64();
                 if u < frac {
                     lo + 1.0

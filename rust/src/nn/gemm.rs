@@ -50,7 +50,11 @@ const PAR_MIN_MACS: usize = 1 << 16;
 /// disjoint row ranges, so aliasing is impossible.
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
+// SAFETY: every dispatch hands each task a disjoint i0..i1 row range of
+// the output, so no two threads ever touch the same element through
+// this pointer.
 unsafe impl Send for SendPtr {}
+// SAFETY: as above — concurrent access is always to disjoint rows.
 unsafe impl Sync for SendPtr {}
 
 impl SendPtr {
@@ -105,6 +109,8 @@ pub fn gemm_bias_q(
     check_cb(c, m, n, bias);
     let cp = SendPtr(c.as_mut_ptr());
     run_row_blocks(m, m * k * n, Exec::Auto, |i0, i1| {
+        // SAFETY: this task exclusively owns output rows i0..i1; the
+        // operand slices are only read.
         unsafe { task_nn(a, b, cp.get(), i0, i1, k, n) };
         epilogue(cp.get(), i0, i1, n, bias, prec);
     });
@@ -138,6 +144,89 @@ pub fn gemm_tn_bias_q(
     gemm_tn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto);
 }
 
+/// Two same-shape [`gemm_nt_bias_q`] products under a **single** pool
+/// dispatch — the twin-critic fast path. SAC's `q1`/`q2` heads always
+/// share layer shapes, so batching both heads' row-block tasks into one
+/// fan-out halves the GEMM dispatches per critic forward (6 → 3 for the
+/// standard 2-hidden-layer critic).
+///
+/// Each head's blocks run the unchanged [`task_nt`] + [`epilogue`]
+/// bodies over the same `MC` decomposition as a standalone call, so the
+/// per-head results are **bitwise identical** to two separate
+/// [`gemm_nt_bias_q`] calls — the thread-count-invariance contract of
+/// the single-product entries carries over (covered by tests).
+pub fn gemm_nt_bias_q_pair(
+    a1: &[f32],
+    b1: &[f32],
+    c1: &mut [f32],
+    bias1: Option<&[f32]>,
+    a2: &[f32],
+    b2: &[f32],
+    c2: &mut [f32],
+    bias2: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    prec: Precision,
+) {
+    gemm_nt_pair_impl(a1, b1, c1, bias1, a2, b2, c2, bias2, m, k, n, prec, Exec::Auto);
+}
+
+fn gemm_nt_pair_impl(
+    a1: &[f32],
+    b1: &[f32],
+    c1: &mut [f32],
+    bias1: Option<&[f32]>,
+    a2: &[f32],
+    b2: &[f32],
+    c2: &mut [f32],
+    bias2: Option<&[f32]>,
+    m: usize,
+    k: usize,
+    n: usize,
+    prec: Precision,
+    exec: Exec,
+) {
+    assert_eq!(a1.len(), m * k);
+    assert_eq!(a2.len(), m * k);
+    assert_eq!(b1.len(), n * k);
+    assert_eq!(b2.len(), n * k);
+    check_cb(c1, m, n, bias1);
+    check_cb(c2, m, n, bias2);
+    if m == 0 {
+        return;
+    }
+    // Task t < nb is head 1's row block t; task t >= nb is head 2's
+    // block t - nb. Each block is the exact body a standalone
+    // `gemm_nt_impl` would run, so scheduling cannot change results.
+    let nb = m.div_ceil(MC);
+    let ntasks = 2 * nb;
+    let c1p = SendPtr(c1.as_mut_ptr());
+    let c2p = SendPtr(c2.as_mut_ptr());
+    let body = |t: usize| {
+        let (blk, a, b, cp, bias) = if t < nb {
+            (t, a1, b1, c1p, bias1)
+        } else {
+            (t - nb, a2, b2, c2p, bias2)
+        };
+        let i0 = blk * MC;
+        let i1 = (i0 + MC).min(m);
+        // SAFETY: this task exclusively owns rows i0..i1 of its own
+        // head's output; the two heads write through distinct buffers.
+        unsafe { task_nt(a, b, cp.get(), i0, i1, k, n) };
+        epilogue(cp.get(), i0, i1, n, bias, prec);
+    };
+    // The combined job: both products count toward the pool threshold.
+    let parallel = exec == Exec::Auto && ntasks > 1 && 2 * m * k * n >= PAR_MIN_MACS;
+    if parallel {
+        pool::global().run(ntasks, body);
+    } else {
+        for t in 0..ntasks {
+            body(t);
+        }
+    }
+}
+
 fn gemm_nt_impl(
     a: &[f32],
     b: &[f32],
@@ -154,6 +243,8 @@ fn gemm_nt_impl(
     check_cb(c, m, n, bias);
     let cp = SendPtr(c.as_mut_ptr());
     run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        // SAFETY: this task exclusively owns output rows i0..i1; the
+        // operand slices are only read.
         unsafe { task_nt(a, b, cp.get(), i0, i1, k, n) };
         epilogue(cp.get(), i0, i1, n, bias, prec);
     });
@@ -175,6 +266,8 @@ fn gemm_tn_impl(
     check_cb(c, m, n, bias);
     let cp = SendPtr(c.as_mut_ptr());
     run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        // SAFETY: this task exclusively owns output rows i0..i1; the
+        // operand slices are only read.
         unsafe { task_tn(a, b, cp.get(), i0, i1, m, k, n) };
         epilogue(cp.get(), i0, i1, n, bias, prec);
     });
@@ -195,6 +288,7 @@ fn gemm_nn_impl_for_tests(
     assert_eq!(c.len(), m * n);
     let cp = SendPtr(c.as_mut_ptr());
     run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        // SAFETY: this task exclusively owns output rows i0..i1.
         unsafe { task_nn(a, b, cp.get(), i0, i1, k, n) };
     });
 }
@@ -234,7 +328,7 @@ fn epilogue(c: *mut f32, i0: usize, i1: usize, n: usize, bias: Option<&[f32]>, p
         return;
     }
     for i in i0..i1 {
-        // safety: this task exclusively owns rows i0..i1
+        // SAFETY: this task exclusively owns rows i0..i1.
         let row = unsafe { std::slice::from_raw_parts_mut(c.add(i * n), n) };
         if let Some(bs) = bias {
             for (v, &bv) in row.iter_mut().zip(bs) {
@@ -250,21 +344,28 @@ fn epilogue(c: *mut f32, i0: usize, i1: usize, n: usize, bias: Option<&[f32]>, p
 // ---------------------------------------------------------------------
 
 /// notrans · notrans: stream B panels directly (rows are unit-stride).
+// SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
+// i1×n row-major output, grant this task exclusive access to those
+// rows, and size `a` as [≥i1, k] and `b` as [k, n].
 unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: usize, n: usize) {
     let mut kc = 0;
     while kc < k {
         let kl = KC.min(k - kc);
-        inner_tiles(
-            a.as_ptr().add(i0 * k + kc),
-            k,
-            b.as_ptr().add(kc * n),
-            n,
-            c,
-            i0,
-            i1,
-            n,
-            kl,
-        );
+        // SAFETY: panel bases stay inside `a`/`b` (kc < k), and the
+        // caller contract covers every write through `c`.
+        unsafe {
+            inner_tiles(
+                a.as_ptr().add(i0 * k + kc),
+                k,
+                b.as_ptr().add(kc * n),
+                n,
+                c,
+                i0,
+                i1,
+                n,
+                kl,
+            );
+        }
         kc += KC;
     }
 }
@@ -276,6 +377,9 @@ unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: us
 /// 1.6% overhead, independent of task count), and sharing one packed
 /// panel across tasks would need a cross-task barrier per `KC` step —
 /// not worth the synchronization for that margin.
+// SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
+// i1×n row-major output, grant this task exclusive access to those
+// rows, and size `a` as [≥i1, k] and `b` as [n, k].
 unsafe fn task_nt(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: usize, n: usize) {
     let mut bt = vec![0.0f32; KC.min(k) * n];
     let mut kc = 0;
@@ -288,12 +392,20 @@ unsafe fn task_nt(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: us
                 bt[p * n + j] = v;
             }
         }
-        inner_tiles(a.as_ptr().add(i0 * k + kc), k, bt.as_ptr(), n, c, i0, i1, n, kl);
+        // SAFETY: `bt` holds the packed kl×n panel, the `a` base stays
+        // in bounds (kc < k), and the caller contract covers every
+        // write through `c`.
+        unsafe {
+            inner_tiles(a.as_ptr().add(i0 * k + kc), k, bt.as_ptr(), n, c, i0, i1, n, kl);
+        }
         kc += KC;
     }
 }
 
 /// transᵀ · notrans: pack Aᵀ panels (A is [k, m], we need a[·][i] rows).
+// SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
+// m×n row-major output, grant this task exclusive access to those
+// rows, and size `a` as [k, m] and `b` as [k, n] with i1 <= m.
 unsafe fn task_tn(
     a: &[f32],
     b: &[f32],
@@ -316,7 +428,12 @@ unsafe fn task_tn(
                 at[r * kl + p] = src[i0 + r];
             }
         }
-        inner_tiles(at.as_ptr(), kl, b.as_ptr().add(kc * n), n, c, i0, i1, n, kl);
+        // SAFETY: `at` holds the packed rows×kl panel, the `b` base
+        // stays in bounds (kc < k), and the caller contract covers
+        // every write through `c`.
+        unsafe {
+            inner_tiles(at.as_ptr(), kl, b.as_ptr().add(kc * n), n, c, i0, i1, n, kl);
+        }
         kc += KC;
     }
 }
@@ -324,6 +441,9 @@ unsafe fn task_tn(
 /// Sweep the (row, column) micro-tiles of one task block for one panel.
 /// `a` points at the panel base for row `i0` with row stride `a_rs`;
 /// `b` points at the panel base with row stride `b_rs`.
+// SAFETY: callers pass `a`/`b` panels holding kl full rows from their
+// bases at the given strides, and `c` writable over rows i0..i1 of an
+// i1×n row-major output that this call exclusively owns.
 #[allow(clippy::too_many_arguments)]
 unsafe fn inner_tiles(
     a: *const f32,
@@ -342,13 +462,18 @@ unsafe fn inner_tiles(
         let mut i = i0;
         while i < i1 {
             let mr = MR.min(i1 - i);
-            let ap = a.add((i - i0) * a_rs);
-            let bp = b.add(j0);
-            let cp = c.add(i * n + j0);
-            if mr == MR && nr == NR {
-                kernel_4x16(ap, a_rs, bp, b_rs, cp, n, kl);
-            } else {
-                kernel_edge(ap, a_rs, bp, b_rs, cp, n, mr, nr, kl);
+            // SAFETY: tile bases stay inside the panels / output rows
+            // the caller contract grants (i < i1, j0 < n), and the
+            // kernels only touch mr×nr elements from those bases.
+            unsafe {
+                let ap = a.add((i - i0) * a_rs);
+                let bp = b.add(j0);
+                let cp = c.add(i * n + j0);
+                if mr == MR && nr == NR {
+                    kernel_4x16(ap, a_rs, bp, b_rs, cp, n, kl);
+                } else {
+                    kernel_edge(ap, a_rs, bp, b_rs, cp, n, mr, nr, kl);
+                }
             }
             i += MR;
         }
@@ -358,6 +483,9 @@ unsafe fn inner_tiles(
 
 /// The full 4×16 register-tiled micro-kernel:
 /// `c[r][j] += Σ_p a[r][p] · b[p][j]` with 64 independent accumulators.
+// SAFETY: callers pass `a`/`b` panels holding kl rows of MR/NR live
+// columns at their strides, and `c` writable for a full MR×NR tile at
+// row stride `c_rs` that this call exclusively owns.
 #[inline(always)]
 unsafe fn kernel_4x16(
     a: *const f32,
@@ -369,30 +497,37 @@ unsafe fn kernel_4x16(
     kl: usize,
 ) {
     let mut acc = [[0.0f32; NR]; MR];
-    for p in 0..kl {
-        let bp = b.add(p * b_rs);
-        let a0 = *a.add(p);
-        let a1 = *a.add(a_rs + p);
-        let a2 = *a.add(2 * a_rs + p);
-        let a3 = *a.add(3 * a_rs + p);
-        for j in 0..NR {
-            let bv = *bp.add(j);
-            acc[0][j] += a0 * bv;
-            acc[1][j] += a1 * bv;
-            acc[2][j] += a2 * bv;
-            acc[3][j] += a3 * bv;
+    // SAFETY: every offset below stays inside the MR×kl / kl×NR panels
+    // and the MR×NR output tile the caller contract grants.
+    unsafe {
+        for p in 0..kl {
+            let bp = b.add(p * b_rs);
+            let a0 = *a.add(p);
+            let a1 = *a.add(a_rs + p);
+            let a2 = *a.add(2 * a_rs + p);
+            let a3 = *a.add(3 * a_rs + p);
+            for j in 0..NR {
+                let bv = *bp.add(j);
+                acc[0][j] += a0 * bv;
+                acc[1][j] += a1 * bv;
+                acc[2][j] += a2 * bv;
+                acc[3][j] += a3 * bv;
+            }
         }
-    }
-    for (r, row) in acc.iter().enumerate() {
-        let cr = c.add(r * c_rs);
-        for (j, &v) in row.iter().enumerate() {
-            *cr.add(j) += v;
+        for (r, row) in acc.iter().enumerate() {
+            let cr = c.add(r * c_rs);
+            for (j, &v) in row.iter().enumerate() {
+                *cr.add(j) += v;
+            }
         }
     }
 }
 
 /// Edge-tile kernel (`mr ≤ MR`, `nr ≤ NR`) with the identical
 /// ascending-`p` accumulation order as [`kernel_4x16`].
+// SAFETY: callers pass `a`/`b` panels holding kl rows of mr/nr live
+// columns at their strides, and `c` writable for an mr×nr tile at row
+// stride `c_rs` that this call exclusively owns.
 #[allow(clippy::too_many_arguments)]
 unsafe fn kernel_edge(
     a: *const f32,
@@ -406,19 +541,23 @@ unsafe fn kernel_edge(
     kl: usize,
 ) {
     let mut acc = [[0.0f32; NR]; MR];
-    for p in 0..kl {
-        let bp = b.add(p * b_rs);
-        for r in 0..mr {
-            let av = *a.add(r * a_rs + p);
-            for j in 0..nr {
-                acc[r][j] += av * *bp.add(j);
+    // SAFETY: every offset below stays inside the mr×kl / kl×nr panels
+    // and the mr×nr output tile the caller contract grants.
+    unsafe {
+        for p in 0..kl {
+            let bp = b.add(p * b_rs);
+            for r in 0..mr {
+                let av = *a.add(r * a_rs + p);
+                for j in 0..nr {
+                    acc[r][j] += av * *bp.add(j);
+                }
             }
         }
-    }
-    for (r, row) in acc.iter().enumerate().take(mr) {
-        let cr = c.add(r * c_rs);
-        for (j, &v) in row.iter().enumerate().take(nr) {
-            *cr.add(j) += v;
+        for (r, row) in acc.iter().enumerate().take(mr) {
+            let cr = c.add(r * c_rs);
+            for (j, &v) in row.iter().enumerate().take(nr) {
+                *cr.add(j) += v;
+            }
         }
     }
 }
@@ -429,6 +568,8 @@ unsafe fn kernel_edge(
 pub mod reference {
     /// Threads the reference path fans out over (seed behaviour).
     fn num_threads() -> usize {
+        // tidy-allow(determinism): seed baseline kept verbatim — the
+        // thread count only picks the row split, never the results.
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
     }
 
@@ -442,6 +583,9 @@ pub mod reference {
             return;
         }
         let chunk = rows.div_ceil(nt);
+        // tidy-allow(determinism): seed baseline kept verbatim — each
+        // row is computed independently, so the thread split cannot
+        // change results.
         std::thread::scope(|s| {
             for t in 0..nt {
                 let lo = t * chunk;
@@ -460,12 +604,16 @@ pub mod reference {
     }
 
     struct SendPtr(*mut f32);
+    // SAFETY: par_rows hands every spawned thread a disjoint row range,
+    // so all access through this pointer is to disjoint elements.
     unsafe impl Send for SendPtr {}
+    // SAFETY: as above — concurrent access is always to disjoint rows.
     unsafe impl Sync for SendPtr {}
 
     impl SendPtr {
         #[inline]
         fn at(&self, off: usize) -> *mut f32 {
+            // SAFETY: callers pass offsets inside the m×n output buffer.
             unsafe { self.0.add(off) }
         }
     }
@@ -477,6 +625,7 @@ pub mod reference {
         assert_eq!(c.len(), m * n);
         let cptr = SendPtr(c.as_mut_ptr());
         par_rows(m, 64, |i| {
+            // SAFETY: row i is exclusively owned by this task.
             let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
             let arow = &a[i * k..(i + 1) * k];
             for (p, &av) in arow.iter().enumerate() {
@@ -498,6 +647,7 @@ pub mod reference {
         assert_eq!(c.len(), m * n);
         let cptr = SendPtr(c.as_mut_ptr());
         par_rows(m, 64, |i| {
+            // SAFETY: row i is exclusively owned by this task.
             let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
             let arow = &a[i * k..(i + 1) * k];
             for j in 0..n {
@@ -518,6 +668,7 @@ pub mod reference {
         assert_eq!(c.len(), m * n);
         let cptr = SendPtr(c.as_mut_ptr());
         par_rows(m, 64, |i| {
+            // SAFETY: row i is exclusively owned by this task.
             let crow = unsafe { std::slice::from_raw_parts_mut(cptr.at(i * n), n) };
             for p in 0..k {
                 let av = a[p * m + i];
@@ -775,5 +926,78 @@ mod tests {
         assert_eq!(c, vec![1.0, 2.0, 0.0, 1.0, 2.0, 0.0]);
         // n = 0: no columns
         gemm(&[1.0, 2.0], &[], &mut [], 2, 1, 0);
+    }
+
+    #[test]
+    fn paired_dispatch_is_bitwise_equal_to_two_calls() {
+        let mut rng = Pcg64::seed(9);
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (33, 20, 17), (130, 64, 96)] {
+            let a1 = randn(m * k, &mut rng);
+            let a2 = randn(m * k, &mut rng);
+            let b1 = randn(n * k, &mut rng);
+            let b2 = randn(n * k, &mut rng);
+            let bias1 = randn(n, &mut rng);
+            let bias2 = randn(n, &mut rng);
+            let prec = Precision::fp16();
+
+            let mut p1 = vec![0.0; m * n];
+            let mut p2 = vec![0.0; m * n];
+            gemm_nt_bias_q_pair(
+                &a1,
+                &b1,
+                &mut p1,
+                Some(&bias1),
+                &a2,
+                &b2,
+                &mut p2,
+                Some(&bias2),
+                m,
+                k,
+                n,
+                prec,
+            );
+
+            let mut s1 = vec![0.0; m * n];
+            let mut s2 = vec![0.0; m * n];
+            gemm_nt_bias_q(&a1, &b1, &mut s1, m, k, n, Some(&bias1), prec);
+            gemm_nt_bias_q(&a2, &b2, &mut s2, m, k, n, Some(&bias2), prec);
+
+            assert!(
+                p1.iter().zip(&s1).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{m}x{k}x{n}: paired head 1 must match a standalone call bitwise"
+            );
+            assert!(
+                p2.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{m}x{k}x{n}: paired head 2 must match a standalone call bitwise"
+            );
+        }
+    }
+
+    #[test]
+    fn paired_pool_and_serial_are_bitwise_identical() {
+        // large enough to clear the combined PAR_MIN_MACS threshold
+        let mut rng = Pcg64::seed(10);
+        let (m, k, n) = (300, 80, 70);
+        let a1 = randn(m * k, &mut rng);
+        let a2 = randn(m * k, &mut rng);
+        let b1 = randn(n * k, &mut rng);
+        let b2 = randn(n * k, &mut rng);
+        let mut p1 = vec![0.0; m * n];
+        let mut p2 = vec![0.0; m * n];
+        let mut s1 = vec![0.0; m * n];
+        let mut s2 = vec![0.0; m * n];
+        let prec = Precision::fp16();
+        gemm_nt_pair_impl(
+            &a1, &b1, &mut p1, None, &a2, &b2, &mut p2, None, m, k, n, prec, Exec::Auto,
+        );
+        gemm_nt_pair_impl(
+            &a1, &b1, &mut s1, None, &a2, &b2, &mut s2, None, m, k, n, prec, Exec::Serial,
+        );
+        assert!(p1.iter().zip(&s1).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(p2.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        // m = 0 degenerate pair: no-op
+        let bz = [0.0; 12];
+        gemm_nt_bias_q_pair(&[], &bz, &mut [], None, &[], &bz, &mut [], None, 0, 3, 4, prec);
     }
 }

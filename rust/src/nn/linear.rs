@@ -9,7 +9,7 @@
 //! [`LinearWorkspace`] owned by the caller: `forward_train` fills it,
 //! `backward` consumes it.
 
-use super::gemm::{gemm_bias_q, gemm_nt_bias_q, gemm_tn_bias_q};
+use super::gemm::{gemm_bias_q, gemm_nt_bias_q, gemm_nt_bias_q_pair, gemm_tn_bias_q};
 use super::param::Param;
 use super::tensor::Tensor;
 use crate::lowp::Precision;
@@ -151,6 +151,72 @@ impl Linear {
         } else {
             self.forward_with(x, &self.w.w, prec)
         }
+    }
+
+    /// Inference forwards of two same-shape layers fused into a single
+    /// pool dispatch (the twin-critic fast path, see
+    /// [`gemm_nt_bias_q_pair`]). Per-layer outputs are bitwise identical
+    /// to two [`Linear::forward`] calls, and the method falls back to
+    /// exactly those when the layers cannot share a dispatch
+    /// (weight standardization, or mismatched shapes).
+    pub fn forward_pair(
+        l1: &Linear,
+        l2: &Linear,
+        x1: &Tensor,
+        x2: &Tensor,
+        prec: Precision,
+    ) -> (Tensor, Tensor) {
+        if l1.weight_std
+            || l2.weight_std
+            || l1.in_dim != l2.in_dim
+            || l1.out_dim != l2.out_dim
+            || x1.rows() != x2.rows()
+        {
+            return (l1.forward(x1, prec), l2.forward(x2, prec));
+        }
+        assert_eq!(x1.cols(), l1.in_dim, "{}: bad input dim", l1.w.name);
+        assert_eq!(x2.cols(), l2.in_dim, "{}: bad input dim", l2.w.name);
+        let bsz = x1.rows();
+        let mut y1 = Tensor::zeros(&[bsz, l1.out_dim]);
+        let mut y2 = Tensor::zeros(&[bsz, l2.out_dim]);
+        gemm_nt_bias_q_pair(
+            &x1.data,
+            &l1.w.w,
+            &mut y1.data,
+            Some(&l1.b.w),
+            &x2.data,
+            &l2.w.w,
+            &mut y2.data,
+            Some(&l2.b.w),
+            bsz,
+            l1.in_dim,
+            l1.out_dim,
+            prec,
+        );
+        (y1, y2)
+    }
+
+    /// Training twin of [`Linear::forward_pair`]: fills each layer's
+    /// workspace exactly as [`Linear::forward_train`] would.
+    pub fn forward_train_pair(
+        l1: &Linear,
+        l2: &Linear,
+        x1: &Tensor,
+        x2: &Tensor,
+        prec: Precision,
+        ws1: &mut LinearWorkspace,
+        ws2: &mut LinearWorkspace,
+    ) -> (Tensor, Tensor) {
+        if l1.weight_std || l2.weight_std {
+            // standardized layers also cache Ŵ and its row statistics —
+            // let the plain path fill everything
+            return (l1.forward_train(x1, prec, ws1), l2.forward_train(x2, prec, ws2));
+        }
+        ws1.x.shape.clone_from(&x1.shape);
+        ws1.x.data.clone_from(&x1.data);
+        ws2.x.shape.clone_from(&x2.shape);
+        ws2.x.data.clone_from(&x2.data);
+        Self::forward_pair(l1, l2, x1, x2, prec)
     }
 
     /// Backward: consumes `dy` and the workspace filled by the matching
@@ -358,6 +424,41 @@ mod tests {
             let baked = frozen.forward(&x, prec);
             assert!(live.data.iter().zip(&baked.data).all(|(u, v)| u.to_bits() == v.to_bits()));
         }
+    }
+
+    #[test]
+    fn pair_forwards_match_sequential_bitwise() {
+        let mut rng = Pcg64::seed(7);
+        let l1 = Linear::new("q1", 9, 5, &mut rng);
+        let l2 = Linear::new("q2", 9, 5, &mut rng);
+        let x1 = Tensor::from_vec(&[4, 9], (0..36).map(|_| rng.normal_f32()).collect());
+        let x2 = Tensor::from_vec(&[4, 9], (0..36).map(|_| rng.normal_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let (y1, y2) = Linear::forward_pair(&l1, &l2, &x1, &x2, prec);
+            let s1 = l1.forward(&x1, prec);
+            let s2 = l2.forward(&x2, prec);
+            assert!(y1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(y2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+
+            let (mut wa, mut wb) = (LinearWorkspace::default(), LinearWorkspace::default());
+            let (t1, t2) = Linear::forward_train_pair(&l1, &l2, &x1, &x2, prec, &mut wa, &mut wb);
+            assert!(t1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(t2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            // the workspaces must be filled exactly as forward_train fills them
+            assert_eq!(wa.x.data, x1.data);
+            assert_eq!(wb.x.data, x2.data);
+        }
+
+        // weight-std layers take the sequential fallback — still identical
+        let l1 = Linear::new("q1", 6, 4, &mut rng).with_weight_std();
+        let l2 = Linear::new("q2", 6, 4, &mut rng).with_weight_std();
+        let x = Tensor::from_vec(&[2, 6], (0..12).map(|_| rng.normal_f32()).collect());
+        let prec = Precision::fp16();
+        let (y1, y2) = Linear::forward_pair(&l1, &l2, &x, &x, prec);
+        let s1 = l1.forward(&x, prec);
+        let s2 = l2.forward(&x, prec);
+        assert!(y1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        assert!(y2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 
     #[test]

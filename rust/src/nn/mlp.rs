@@ -70,6 +70,71 @@ impl Mlp {
         h
     }
 
+    /// Inference forwards of two same-architecture trunks walked in
+    /// lockstep, each layer pair fused into one pool dispatch via
+    /// [`Linear::forward_pair`] (the twin-critic fast path). Per-trunk
+    /// outputs are bitwise identical to two [`Mlp::forward`] calls; any
+    /// layer pair that cannot share a dispatch falls back to sequential
+    /// inside [`Linear::forward_pair`].
+    pub fn forward_pair(m1: &Mlp, m2: &Mlp, x: &Tensor, prec: Precision) -> (Tensor, Tensor) {
+        if m1.layers.len() != m2.layers.len() {
+            return (m1.forward(x, prec), m2.forward(x, prec));
+        }
+        let n = m1.layers.len();
+        let (mut h1, mut h2) = Linear::forward_pair(&m1.layers[0], &m2.layers[0], x, x, prec);
+        for (l1, l2) in m1.layers[1..n].iter().zip(&m2.layers[1..n]) {
+            let a1 = relu(&h1, prec);
+            let a2 = relu(&h2, prec);
+            (h1, h2) = Linear::forward_pair(l1, l2, &a1, &a2, prec);
+        }
+        (h1, h2)
+    }
+
+    /// Training twin of [`Mlp::forward_pair`]: fills each trunk's
+    /// workspace exactly as [`Mlp::forward_train`] would.
+    pub fn forward_train_pair(
+        m1: &Mlp,
+        m2: &Mlp,
+        x: &Tensor,
+        prec: Precision,
+        ws1: &mut MlpWorkspace,
+        ws2: &mut MlpWorkspace,
+    ) -> (Tensor, Tensor) {
+        if m1.layers.len() != m2.layers.len() {
+            return (m1.forward_train(x, prec, ws1), m2.forward_train(x, prec, ws2));
+        }
+        let n = m1.layers.len();
+        ws1.layers.resize_with(n, LinearWorkspace::default);
+        ws2.layers.resize_with(n, LinearWorkspace::default);
+        ws1.pre_relu.clear();
+        ws2.pre_relu.clear();
+        let (mut h1, mut h2) = Linear::forward_train_pair(
+            &m1.layers[0],
+            &m2.layers[0],
+            x,
+            x,
+            prec,
+            &mut ws1.layers[0],
+            &mut ws2.layers[0],
+        );
+        for i in 1..n {
+            let a1 = relu(&h1, prec);
+            let a2 = relu(&h2, prec);
+            ws1.pre_relu.push(h1);
+            ws2.pre_relu.push(h2);
+            (h1, h2) = Linear::forward_train_pair(
+                &m1.layers[i],
+                &m2.layers[i],
+                &a1,
+                &a2,
+                prec,
+                &mut ws1.layers[i],
+                &mut ws2.layers[i],
+            );
+        }
+        (h1, h2)
+    }
+
     /// Backward from `dy` at the head, through the workspace filled by
     /// the matching `forward_train`; returns the gradient w.r.t. the
     /// input.
@@ -187,6 +252,38 @@ mod tests {
         for l in &mlp.layers {
             for &v in &l.w.w {
                 assert!(crate::lowp::FP16.is_representable(v));
+            }
+        }
+    }
+
+    #[test]
+    fn pair_walk_matches_sequential_bitwise() {
+        let mut rng = Pcg64::seed(5);
+        let m1 = Mlp::new("q1", &[7, 24, 24, 1], &mut rng);
+        let m2 = Mlp::new("q2", &[7, 24, 24, 1], &mut rng);
+        let x = Tensor::from_vec(&[6, 7], (0..42).map(|_| rng.normal_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let s1 = m1.forward(&x, prec);
+            let s2 = m2.forward(&x, prec);
+            let (y1, y2) = Mlp::forward_pair(&m1, &m2, &x, prec);
+            assert!(y1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(y2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+
+            let (mut wa, mut wb) = (MlpWorkspace::default(), MlpWorkspace::default());
+            let (t1, t2) = Mlp::forward_train_pair(&m1, &m2, &x, prec, &mut wa, &mut wb);
+            assert!(t1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(t2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+
+            // the cached workspaces must match what forward_train fills,
+            // so the existing backward path stays valid after a pair walk
+            let (mut ra, mut rb) = (MlpWorkspace::default(), MlpWorkspace::default());
+            let _ = m1.forward_train(&x, prec, &mut ra);
+            let _ = m2.forward_train(&x, prec, &mut rb);
+            for (w, r) in wa.pre_relu.iter().zip(&ra.pre_relu) {
+                assert!(w.data.iter().zip(&r.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            }
+            for (w, r) in wb.pre_relu.iter().zip(&rb.pre_relu) {
+                assert!(w.data.iter().zip(&r.data).all(|(u, v)| u.to_bits() == v.to_bits()));
             }
         }
     }

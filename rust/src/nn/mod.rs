@@ -41,7 +41,9 @@ mod tensor;
 
 pub use activations::{relu, relu_backward, tanh_backward, tanh_forward};
 pub use conv::{Conv2d, Conv2dWorkspace};
-pub use gemm::{gemm, gemm_bias_q, gemm_nt, gemm_nt_bias_q, gemm_tn, gemm_tn_bias_q};
+pub use gemm::{
+    gemm, gemm_bias_q, gemm_nt, gemm_nt_bias_q, gemm_nt_bias_q_pair, gemm_tn, gemm_tn_bias_q,
+};
 pub use init::{orthogonal_init, uniform_fan_in};
 pub use layernorm::{LayerNorm, LayerNormWorkspace};
 pub use linear::{Linear, LinearWorkspace};

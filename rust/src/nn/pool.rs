@@ -49,9 +49,12 @@ pub const ELEMWISE_SPAN: usize = 8192;
 #[derive(Clone, Copy)]
 pub struct SendMut<T>(*mut T);
 
-// The `T: Send` bound keeps the wrapper from smuggling non-thread-safe
-// types (Rc, thread-local handles) across the pool boundary.
+// SAFETY: callers hand every pool task a disjoint index range, so no
+// two threads touch the same element; the `T: Send` bound keeps the
+// wrapper from smuggling non-thread-safe types (Rc, thread-local
+// handles) across the pool boundary.
 unsafe impl<T: Send> Send for SendMut<T> {}
+// SAFETY: as above — concurrent access is always to disjoint elements.
 unsafe impl<T: Send> Sync for SendMut<T> {}
 
 impl<T> SendMut<T> {
@@ -89,10 +92,11 @@ struct Job {
     poisoned: AtomicBool,
 }
 
-// Safety: `f` points at a `Sync` closure that outlives every dereference
+// SAFETY: `f` points at a `Sync` closure that outlives every dereference
 // (the submitting thread waits for `completed == units` before returning),
 // and the counters are atomics.
 unsafe impl Send for Job {}
+// SAFETY: as above.
 unsafe impl Sync for Job {}
 
 impl Job {
@@ -113,6 +117,9 @@ impl Job {
             }
             let lo = u * self.grain;
             let hi = (lo + self.grain).min(self.total);
+            // SAFETY: the submitter keeps the closure alive until
+            // `completed == units`, and we only reach here while chunks
+            // remain unclaimed.
             let f = unsafe { &*self.f };
             if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 for t in lo..hi {
@@ -125,6 +132,8 @@ impl Job {
             }
             if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.units {
                 // take the lock so the submitter cannot miss the wakeup
+                // tidy-allow(panic): lock poisoning means another task
+                // already panicked — propagating is correct
                 let _g = shared.done_mx.lock().unwrap();
                 shared.done_cv.notify_all();
             }
@@ -166,10 +175,13 @@ impl ThreadPool {
         for i in 0..workers {
             let sh = shared.clone();
             handles.push(
+                // tidy-allow(determinism): this pool IS the sanctioned
+                // parallelism primitive; worker count never changes what
+                // an index computes
                 std::thread::Builder::new()
                     .name(format!("lprl-pool-{i}"))
                     .spawn(move || worker_loop(sh))
-                    .expect("spawning pool worker"),
+                    .expect("spawning pool worker"), // tidy-allow(panic): cannot run without workers — fail loudly at startup
             );
         }
         ThreadPool { shared, workers, submit: Mutex::new(()), handles }
@@ -230,7 +242,7 @@ impl ThreadPool {
             }
         };
         let fat: &(dyn Fn(usize) + Sync) = &f;
-        // Safety: erase the borrow's lifetime; `run_chunked` does not
+        // SAFETY: erase the borrow's lifetime; `run_chunked` does not
         // return until every task completed, so workers never touch `f`
         // after it dies.
         let fat: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fat) };
@@ -244,18 +256,21 @@ impl ThreadPool {
             poisoned: AtomicBool::new(false),
         });
         {
+            // tidy-allow(panic): lock poisoning means another task
+            // already panicked — propagating is correct (applies to
+            // every pool lock/wait below)
             let mut g = self.shared.job.lock().unwrap();
             *g = Some(job.clone());
             self.shared.work_cv.notify_all();
         }
         // participate instead of just waiting
         job.run(&self.shared);
-        let mut g = self.shared.done_mx.lock().unwrap();
+        let mut g = self.shared.done_mx.lock().unwrap(); // tidy-allow(panic): poisoned lock — see above
         while job.completed.load(Ordering::Acquire) < units {
-            g = self.shared.done_cv.wait(g).unwrap();
+            g = self.shared.done_cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see above
         }
         drop(g);
-        *self.shared.job.lock().unwrap() = None;
+        *self.shared.job.lock().unwrap() = None; // tidy-allow(panic): poisoned lock — see above
         drop(guard);
         if job.poisoned.load(Ordering::Acquire) {
             // the original message + backtrace were already printed by
@@ -272,7 +287,7 @@ impl Drop for ThreadPool {
         // is idle. Wake the parked workers and join them.
         self.shared.shutdown.store(true, Ordering::Release);
         {
-            let _g = self.shared.job.lock().unwrap();
+            let _g = self.shared.job.lock().unwrap(); // tidy-allow(panic): poisoned lock means a task panicked — propagating is correct
             self.shared.work_cv.notify_all();
         }
         for h in self.handles.drain(..) {
@@ -284,7 +299,7 @@ impl Drop for ThreadPool {
 fn worker_loop(shared: Arc<Shared>) {
     loop {
         let job = {
-            let mut g = shared.job.lock().unwrap();
+            let mut g = shared.job.lock().unwrap(); // tidy-allow(panic): poisoned lock means a task panicked — propagating is correct
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
@@ -294,7 +309,7 @@ fn worker_loop(shared: Arc<Shared>) {
                         break j.clone();
                     }
                 }
-                g = shared.work_cv.wait(g).unwrap();
+                g = shared.work_cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see above
             }
         };
         job.run(&shared);
@@ -311,6 +326,8 @@ pub fn default_threads() -> usize {
             return n.clamp(1, 64);
         }
     }
+    // tidy-allow(determinism): machine shape only sizes the sanctioned
+    // pool; every pooled kernel is thread-count invariant by contract
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
 }
 

@@ -97,7 +97,7 @@ impl Tensor {
             self.shape,
             self.data.len()
         );
-        *self.shape.last().unwrap()
+        *self.shape.last().unwrap() // tidy-allow(panic): non-empty asserted directly above
     }
 
     /// Reinterpret the shape (same element count).

@@ -215,13 +215,14 @@ impl Adam {
             let comp = SendMut::new(self.comp[idx].as_mut_ptr());
             let fmt = p;
             pool.run_spans(n, ELEMWISE_SPAN, |lo, hi| {
-                // Safety: spans are disjoint, so each task holds the only
-                // live views of its `lo..hi` stretch of the buffers.
                 let len = hi - lo;
+                // SAFETY: spans are disjoint, so each task holds the only
+                // live views of its `lo..hi` stretch of the buffers.
                 let th = unsafe { std::slice::from_raw_parts_mut(theta.get().add(lo), len) };
                 let m = unsafe { std::slice::from_raw_parts_mut(m.get().add(lo), len) };
                 let w = unsafe { std::slice::from_raw_parts_mut(w.get().add(lo), len) };
                 let comp: &mut [f32] = match update {
+                    // SAFETY: same disjoint-span contract as the slices above.
                     UpdateMode::Kahan => unsafe {
                         std::slice::from_raw_parts_mut(comp.get().add(lo), len)
                     },

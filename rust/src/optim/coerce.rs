@@ -19,7 +19,7 @@ pub fn coerce_nonfinite_on(pool: &ThreadPool, xs: &mut [f32], max_value: f32) ->
     let total = AtomicUsize::new(0);
     let ptr = SendMut::new(xs.as_mut_ptr());
     pool.run_spans(xs.len(), ELEMWISE_SPAN, |lo, hi| {
-        // Safety: spans are disjoint — each task owns its stretch.
+        // SAFETY: spans are disjoint — each task owns its stretch.
         let span = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(lo), hi - lo) };
         let mut n = 0;
         for v in span.iter_mut() {

@@ -80,8 +80,8 @@ impl ScaledKahanEma {
         let view = SendMut::new(self.view[offset..].as_mut_ptr());
         if !self.compensated {
             pool.run_spans(n, ELEMWISE_SPAN, |lo, hi| {
-                // Safety: spans are disjoint — each task owns its stretch.
                 let len = hi - lo;
+                // SAFETY: spans are disjoint — each task owns its stretch.
                 let buf = unsafe { std::slice::from_raw_parts_mut(buf.get().add(lo), len) };
                 let view = unsafe { std::slice::from_raw_parts_mut(view.get().add(lo), len) };
                 let psi = &psi[lo..hi];
@@ -100,8 +100,8 @@ impl ScaledKahanEma {
         let ct = p.q(c * tau);
         let comp = SendMut::new(self.comp[offset..].as_mut_ptr());
         pool.run_spans(n, ELEMWISE_SPAN, |lo, hi| {
-            // Safety: spans are disjoint — each task owns its stretch.
             let len = hi - lo;
+            // SAFETY: spans are disjoint — each task owns its stretch.
             let buf = unsafe { std::slice::from_raw_parts_mut(buf.get().add(lo), len) };
             let view = unsafe { std::slice::from_raw_parts_mut(view.get().add(lo), len) };
             let comp = unsafe { std::slice::from_raw_parts_mut(comp.get().add(lo), len) };

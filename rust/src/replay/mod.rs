@@ -253,6 +253,8 @@ impl ReplayBuffer {
             self.act.read(i * self.act_dim, &mut act);
             let mut h = 0xcbf29ce484222325u64; // FNV offset basis
             let mut eat = |v: f32| {
+                // tidy-allow(precision): bit pattern feeds the FNV content
+                // hash — a checksum, not a numeric conversion.
                 for b in v.to_bits().to_le_bytes() {
                     h ^= b as u64;
                     h = h.wrapping_mul(0x100000001b3);

@@ -4,15 +4,17 @@
 use super::manifest::Manifest;
 use super::xla;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 /// Artifact registry + PJRT client. Compilation is lazy and cached.
+/// The executable cache is a `BTreeMap` so iteration order (and any
+/// future eviction/debug-dump walk) is name-sorted, not hash-seeded.
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     pub manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
@@ -24,7 +26,7 @@ impl Runtime {
         })?;
         let manifest = Manifest::parse(&text).map_err(|e| anyhow!(e))?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, dir, manifest, exes: HashMap::new() })
+        Ok(Runtime { client, dir, manifest, exes: BTreeMap::new() })
     }
 
     pub fn platform(&self) -> String {
@@ -57,7 +59,8 @@ impl Runtime {
         inputs: &[L],
     ) -> Result<Vec<xla::Literal>> {
         self.compile(name)?;
-        let art = self.manifest.artifact(name).unwrap();
+        let art =
+            self.manifest.artifact(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         if inputs.len() != art.inputs.len() {
             bail!(
                 "{name}: got {} inputs, manifest wants {}",
@@ -65,7 +68,8 @@ impl Runtime {
                 art.inputs.len()
             );
         }
-        let exe = self.exes.get(name).unwrap();
+        let exe =
+            self.exes.get(name).ok_or_else(|| anyhow!("artifact {name} failed to compile"))?;
         let result = exe.execute::<L>(inputs)?;
         let lit = result[0][0].to_literal_sync()?;
         let outs = lit.to_tuple()?;
@@ -161,7 +165,12 @@ impl TrainSession {
         eps_cur: &[f32],
     ) -> Result<[f32; 4]> {
         let name = format!("train_{}", self.variant);
-        let art = self.runtime.manifest.artifact(&name).unwrap().clone();
+        let art = self
+            .runtime
+            .manifest
+            .artifact(&name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
         let batch_specs = &art.inputs[self.n_state..];
         let mut batch_lits: Vec<xla::Literal> = Vec::with_capacity(7);
         for (spec, data) in batch_specs
@@ -187,7 +196,12 @@ impl TrainSession {
     /// Policy inference: single observation -> action (length = act dim).
     pub fn act(&mut self, obs: &[f32], eps: &[f32]) -> Result<Vec<f32>> {
         let name = format!("act_{}", self.variant);
-        let art = self.runtime.manifest.artifact(&name).unwrap().clone();
+        let art = self
+            .runtime
+            .manifest
+            .artifact(&name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?
+            .clone();
         let n_actor = art.inputs.len() - 2;
         // actor leaves are a prefix of the state (params.actor.* come
         // first in sorted-key order)
@@ -196,7 +210,7 @@ impl TrainSession {
             .runtime
             .manifest
             .artifact(&format!("train_{}", self.variant))
-            .unwrap()
+            .ok_or_else(|| anyhow!("no train artifact for {}", self.variant))?
             .clone();
         for spec in art.inputs.iter().take(n_actor) {
             // find the matching state leaf by suffix name
@@ -220,7 +234,7 @@ impl TrainSession {
             .runtime
             .manifest
             .artifact(&format!("train_{}", self.variant))
-            .unwrap();
+            .ok_or_else(|| anyhow!("no train artifact for {}", self.variant))?;
         let idx = train
             .inputs
             .iter()

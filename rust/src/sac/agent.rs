@@ -35,17 +35,18 @@ use crate::rngs::Pcg64;
 fn append_abs_pooled(probe: &mut Vec<f32>, g: &[f32]) {
     let start = probe.len();
     probe.reserve(g.len());
-    // raw writes straight into the reserved tail: one pass over the
-    // memory instead of zero-fill + overwrite, and no reference to
-    // uninitialized elements is ever formed
+    // SAFETY: raw writes straight into the reserved tail — one pass
+    // over the memory instead of zero-fill + overwrite, and no
+    // reference to uninitialized elements is ever formed.
     let dst = SendMut::new(unsafe { probe.as_mut_ptr().add(start) });
     pool::global().run_spans(g.len(), ELEMWISE_SPAN, |lo, hi| {
-        // Safety: spans are disjoint — each index is written exactly once.
         for (i, v) in g[lo..hi].iter().enumerate() {
+            // SAFETY: spans are disjoint — each index is written
+            // exactly once, inside the reserved tail.
             unsafe { dst.get().add(lo + i).write(v.abs()) };
         }
     });
-    // Safety: every element of the reserved tail was written above.
+    // SAFETY: every element of the reserved tail was written above.
     unsafe { probe.set_len(start + g.len()) };
 }
 
@@ -60,7 +61,7 @@ struct ParamScratch {
     ptrs: Vec<*mut Param>,
 }
 
-// Safety: the pointers are transient scratch — refilled from live
+// SAFETY: the pointers are transient scratch — refilled from live
 // `&mut Param`s at the start of every optimizer step and only
 // dereferenced inside that step, while the owning agent is exclusively
 // borrowed. Between updates they are never read.
@@ -80,6 +81,9 @@ impl ParamScratch {
     /// `&mut Param` during this update and nothing else touches those
     /// params while the returned borrow lives.
     fn as_params(&mut self) -> &mut [&mut Param] {
+        // SAFETY: every pointer was collected from a distinct live
+        // `&mut Param` during this update, and nothing else touches
+        // those params while the returned borrow lives.
         unsafe { &mut *(self.ptrs.as_mut_slice() as *mut [*mut Param] as *mut [&mut Param]) }
     }
 }
@@ -724,6 +728,7 @@ impl SacAgent {
         }
         if self.encoder.is_some() {
             let (dobs, _da) = self.critic.backward_full(&ws.dq1, &ws.dq2, p, &self.ws_critic);
+            // tidy-allow(panic): guarded by the `is_some()` check directly above.
             self.encoder.as_mut().unwrap().backward(&dobs, p, &self.ws_encoder);
         } else {
             let _ = self.critic.backward(&ws.dq1, &ws.dq2, p, &self.ws_critic);

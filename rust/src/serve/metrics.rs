@@ -45,7 +45,7 @@ impl Metrics {
     /// One request answered; `latency` is enqueue → reply.
     pub fn record_request(&self, latency: Duration) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64);
+        self.latencies_us.lock().unwrap().push(latency.as_micros() as u64); // tidy-allow(panic): poisoned lock — another thread already panicked
     }
 
     /// One batch flushed through the backend.
@@ -61,7 +61,7 @@ impl Metrics {
     }
 
     pub fn snapshot(&self) -> ServeStats {
-        let mut lat = self.latencies_us.lock().unwrap().samples.clone();
+        let mut lat = self.latencies_us.lock().unwrap().samples.clone(); // tidy-allow(panic): poisoned lock — another thread already panicked
         lat.sort_unstable();
         let pct = |p: f64| -> u64 {
             if lat.is_empty() {

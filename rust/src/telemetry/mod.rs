@@ -42,7 +42,7 @@ pub fn write_csv(path: &Path, series: &[Series]) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
     }
     let mut xs: Vec<f64> = series.iter().flat_map(|s| s.points.iter().map(|p| p.0)).collect();
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.total_cmp(b));
     xs.dedup();
     let mut out = String::new();
     out.push('x');

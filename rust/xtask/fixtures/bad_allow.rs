@@ -1,0 +1,10 @@
+// Known-bad fixture: tidy-allow escapes that name an unknown rule or
+// omit the mandatory reason must themselves be flagged.
+
+pub fn f(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // tidy-allow(everything): not a real rule
+}
+
+pub fn g(m: &std::sync::Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // tidy-allow(panic):
+}

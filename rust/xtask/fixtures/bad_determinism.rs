@@ -1,0 +1,19 @@
+// Known-bad fixture (scanned as a deterministic-core module): hasher
+// maps, wall clocks, and ad-hoc threads without tidy-allow escapes.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+pub fn tally(xs: &[u32]) -> usize {
+    let mut m: HashMap<u32, u32> = HashMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m.len()
+}
+
+pub fn timed() -> f64 {
+    let t0 = Instant::now();
+    std::thread::spawn(|| {}).join().ok();
+    t0.elapsed().as_secs_f64()
+}

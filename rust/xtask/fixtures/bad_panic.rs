@@ -1,0 +1,6 @@
+// Known-bad fixture: bare unwrap/expect in library (non-test) code.
+
+pub fn load(path: &str) -> String {
+    let text = std::fs::read_to_string(path).unwrap();
+    text.lines().next().expect("empty file").to_string()
+}

@@ -1,0 +1,6 @@
+// Known-bad fixture (scanned as a non-lowp module): raw float bit
+// twiddling outside lowp/ without a tidy-allow escape.
+
+pub fn truncate_mantissa(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & 0xffff_0000)
+}

@@ -1,0 +1,14 @@
+// Known-bad fixture: every `unsafe` here lacks a `// SAFETY:` header,
+// so tidy must flag each site (rule: safety).
+
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+
+pub fn read_first(p: *const f32) -> f32 {
+    // a comment that is not a safety argument
+    unsafe { *p }
+}
+
+unsafe fn write(p: *mut f32, v: f32) {
+    unsafe { *p = v };
+}

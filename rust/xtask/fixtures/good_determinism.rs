@@ -1,0 +1,18 @@
+// Known-good fixture: deterministic containers by default, and the one
+// wall-clock read is an audited telemetry-only escape.
+
+use std::collections::BTreeMap;
+
+pub fn tally(xs: &[u32]) -> usize {
+    let mut m: BTreeMap<u32, u32> = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0) += 1;
+    }
+    m.len()
+}
+
+pub fn timed(work: impl FnOnce()) -> f64 {
+    let t0 = std::time::Instant::now(); // tidy-allow(determinism): telemetry only — never feeds computation
+    work();
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,21 @@
+// Known-good fixture: library code returns errors; a poisoned-lock
+// unwrap is an audited escape; tests may unwrap freely.
+
+use std::sync::Mutex;
+
+pub fn load(path: &str) -> Result<String, std::io::Error> {
+    std::fs::read_to_string(path)
+}
+
+pub fn peek(m: &Mutex<u32>) -> u32 {
+    *m.lock().unwrap() // tidy-allow(panic): lock poisoning means another task already panicked — propagating is correct
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,10 @@
+// Known-good fixture: bit patterns may be observed (not used to round)
+// behind an audited escape; quantization itself stays in lowp.
+
+pub fn fingerprint(v: f32, h: &mut u64) {
+    // tidy-allow(precision): hashing the bit pattern for a replay
+    // fingerprint — no rounding decision is made here.
+    for b in v.to_bits().to_le_bytes() {
+        *h = (*h ^ u64::from(b)).wrapping_mul(0x100_0000_01b3);
+    }
+}

@@ -1,0 +1,25 @@
+// Known-good fixture: every `unsafe` carries a SAFETY justification,
+// including one header covering a contiguous run and an attribute
+// between the comment and the item.
+
+struct SendPtr(*mut f32);
+// SAFETY: the pointer is only dereferenced at disjoint offsets by the
+// pool tasks, so sharing it across threads cannot alias.
+unsafe impl Send for SendPtr {}
+// SAFETY: as above — disjoint offsets only.
+unsafe impl Sync for SendPtr {}
+
+/// Reads the first element.
+// SAFETY: callers must pass a pointer valid for reads of one f32.
+#[inline]
+unsafe fn read_first(p: *const f32) -> f32 {
+    // SAFETY: delegated caller contract: `p` is valid for reads.
+    unsafe { *p }
+}
+
+pub fn run(a: *mut f32, b: *mut f32) {
+    // SAFETY: spans are disjoint — each task owns its stretch.
+    let x = unsafe { *a };
+    let y = unsafe { *b };
+    let _ = (x, y);
+}

@@ -1,0 +1,669 @@
+//! `lprl-tidy` — project-invariant static analysis for the lprl tree.
+//!
+//! Run with `cargo run -p xtask -- tidy`. Zero external dependencies:
+//! every pass is lexical/line-level over `rust/src`, `rust/tests`, and
+//! `rust/benches`, in the style of rustc's `tidy`. The contracts being
+//! enforced are documented in `INVARIANTS.md` at the repo root; the
+//! rule families are:
+//!
+//! * **safety** — every `unsafe` block/fn/impl must be covered by an
+//!   immediately preceding `// SAFETY:` justification (a single header
+//!   may cover a contiguous run of unsafe lines). No escape hatch.
+//! * **determinism** — inside the deterministic-core modules
+//!   ([`DETERMINISM_CORE`]), constructs that make results depend on
+//!   hasher seeds, wall clocks, machine shape, or ad-hoc threads/RNG
+//!   are forbidden unless escaped with `// tidy-allow(determinism): <reason>`.
+//! * **precision** — `to_bits`/`from_bits` bit twiddling is only legal
+//!   inside `lowp/`, so `lowp::Precision` stays the single source of
+//!   numerical truth. Escape: `// tidy-allow(precision): <reason>`.
+//! * **panic** — no `.unwrap()` / `.expect(` in library code outside
+//!   `#[cfg(test)]` regions without `// tidy-allow(panic): <reason>`.
+//! * **lint-wall** — the workspace lint table (`[workspace.lints]`,
+//!   `unsafe_op_in_unsafe_fn = "deny"`) and the lib-level deny must not
+//!   be silently dropped.
+//!
+//! The scanner blanks comments, string literals, and char literals
+//! before matching, so tokens inside docs or messages never trip a
+//! rule; `//` comment text is kept separately for the `SAFETY:` /
+//! `tidy-allow` lookups. Fixtures under `rust/xtask/fixtures/` pin the
+//! behaviour of every rule family (see the tests at the bottom), and
+//! `tree_is_clean` asserts the real tree passes — so `cargo test`
+//! fails if either the rules or the codebase regress.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Modules under `rust/src/` forming the deterministic core: everything
+/// a seeded training run flows through, where bitwise reproducibility
+/// is a tested contract.
+const DETERMINISM_CORE: &[&str] =
+    &["nn", "lowp", "optim", "sac", "replay", "rngs", "envs", "coordinator"];
+
+/// Forbidden-in-core constructs and why each breaks determinism.
+const DETERMINISM_TOKENS: &[(&str, &str)] = &[
+    ("HashMap", "nondeterministic iteration order"),
+    ("HashSet", "nondeterministic iteration order"),
+    ("RandomState", "randomized hasher state"),
+    ("Instant::now", "wall-clock value flowing into computation"),
+    ("SystemTime", "wall-clock value flowing into computation"),
+    ("thread::spawn", "ad-hoc thread: parallelism must flow through nn::pool"),
+    ("thread::scope", "ad-hoc threads: parallelism must flow through nn::pool"),
+    ("thread::Builder", "ad-hoc thread: parallelism must flow through nn::pool"),
+    ("available_parallelism", "machine-shape value"),
+    ("thread_rng", "ad-hoc RNG: randomness must flow through rngs::Pcg64"),
+    ("from_entropy", "ad-hoc RNG: randomness must flow through rngs::Pcg64"),
+];
+
+/// Rules that may be escaped with `// tidy-allow(<rule>): <reason>`.
+/// `safety` is deliberately absent: a SAFETY argument is never optional.
+const ALLOWABLE_RULES: &[&str] = &["determinism", "precision", "panic"];
+
+/// One source line after scanning: code with comments/strings blanked,
+/// plus the text of any `//` comment that appeared on the line.
+#[derive(Debug, Default)]
+struct Line {
+    code: String,
+    comment: String,
+}
+
+/// One rule violation, reported as `file:line: [rule] message`.
+#[derive(Debug)]
+struct Diag {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl Diag {
+    fn render(&self) -> String {
+        format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// --------------------------------------------------------------- scanner
+
+/// Length of the char literal starting at `ch[i] == '\''`, or `None`
+/// if this quote is a lifetime. Handles `'a'`, `'\n'`, `'\''`, `'\u{..}'`.
+fn char_lit_len(ch: &[char], i: usize) -> Option<usize> {
+    let next = *ch.get(i + 1)?;
+    if next == '\\' {
+        (3..12).find(|&k| ch.get(i + k) == Some(&'\'')).map(|k| k + 1)
+    } else if next != '\'' && ch.get(i + 2) == Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// If `ch[j..]` is `#*"` (a raw-string opener after `r`), the hash count.
+fn raw_open(ch: &[char], j: usize) -> Option<usize> {
+    let mut h = 0;
+    while ch.get(j + h) == Some(&'#') {
+        h += 1;
+    }
+    (ch.get(j + h) == Some(&'"')).then_some(h)
+}
+
+/// Split source text into [`Line`]s: comments, string literals, and
+/// char literals are blanked out of `code`; `//` comment text (doc or
+/// plain) is collected into `comment`.
+fn scan(text: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        Block(usize),
+        Str,
+        RawStr(usize),
+    }
+    let ch: Vec<char> = text.chars().collect();
+    let n = ch.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < n {
+        let c = ch[i];
+        let next = if i + 1 < n { ch[i + 1] } else { '\0' };
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let prev_ident = i > 0 && (ch[i - 1].is_alphanumeric() || ch[i - 1] == '_');
+                if c == '/' && next == '/' {
+                    st = St::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::Block(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if c == 'r' && !prev_ident && raw_open(&ch, i + 1).is_some() {
+                    let h = raw_open(&ch, i + 1).unwrap_or(0);
+                    st = St::RawStr(h);
+                    cur.code.push(' ');
+                    i += 2 + h;
+                } else if c == '\'' {
+                    match char_lit_len(&ch, i) {
+                        Some(len) => {
+                            cur.code.push(' ');
+                            i += len;
+                        }
+                        None => {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && next == '/' {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        st = St::Code;
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                let closes = c == '"'
+                    && ch.get(i + 1..i + 1 + h).is_some_and(|s| s.iter().all(|&x| x == '#'));
+                if closes {
+                    st = St::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// True if `code` contains `tok` bounded by non-identifier characters.
+fn has_token(code: &str, tok: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let p = start + pos;
+        let before_ok = code[..p]
+            .chars()
+            .next_back()
+            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        let after_ok = code[p + tok.len()..]
+            .chars()
+            .next()
+            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + tok.len();
+    }
+    false
+}
+
+/// Mark lines inside `#[cfg(test)]`-gated items (attribute through the
+/// matching close brace, via brace counting over blanked code).
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut j = i;
+        'item: while j < lines.len() {
+            mask[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth = depth.saturating_sub(1);
+                        if opened && depth == 0 {
+                            break 'item;
+                        }
+                    }
+                    ';' if !opened => break 'item, // braceless item (use, decl)
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// True if the comment block covering `lines[i]` satisfies `pred`: a
+/// trailing comment on the line itself, or the contiguous `//` block
+/// directly above (skipping attributes and doc comments; when
+/// `through_unsafe_runs`, also skipping adjacent lines that themselves
+/// contain `unsafe`, so one `// SAFETY:` header can cover a run).
+fn covered(
+    lines: &[Line],
+    i: usize,
+    through_unsafe_runs: bool,
+    pred: impl Fn(&str) -> bool,
+) -> bool {
+    if pred(&lines[i].comment) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let com = lines[j].comment.trim();
+        if code.is_empty() && com.is_empty() {
+            return false; // blank line terminates the block
+        }
+        if code.is_empty() {
+            if com.starts_with("///") || com.starts_with("//!") {
+                continue; // doc comments are transparent
+            }
+            if pred(com) {
+                return true;
+            }
+            continue;
+        }
+        if code.starts_with('#') {
+            continue; // attributes are transparent
+        }
+        if through_unsafe_runs && has_token(code, "unsafe") {
+            if pred(com) {
+                return true;
+            }
+            continue;
+        }
+        return pred(com);
+    }
+    false
+}
+
+/// True if a well-formed `// tidy-allow(<rule>): <reason>` covers line `i`.
+fn allowed(lines: &[Line], i: usize, rule: &str) -> bool {
+    let needle = format!("tidy-allow({rule}):");
+    covered(lines, i, false, |c| {
+        c.find(&needle).is_some_and(|p| !c[p + needle.len()..].trim().is_empty())
+    })
+}
+
+// ----------------------------------------------------------------- rules
+
+/// Run every per-file rule over one source file. `rel` is the
+/// repo-relative path (forward slashes); it decides which rules apply.
+fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
+    let lines = scan(text);
+    let mask = test_mask(&lines);
+    let in_src = rel.starts_with("rust/src/");
+    let in_core = DETERMINISM_CORE
+        .iter()
+        .any(|m| rel.starts_with(&format!("rust/src/{m}/")) || rel == &format!("rust/src/{m}.rs"));
+    let in_lowp = rel.starts_with("rust/src/lowp/");
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, msg: String| {
+        out.push(Diag { file: rel.to_string(), line, rule, msg });
+    };
+
+    for (idx, l) in lines.iter().enumerate() {
+        let ln = idx + 1;
+        let code = &l.code;
+
+        // safety: everywhere, including tests and benches — unsafe is
+        // unsafe no matter where it appears.
+        if has_token(code, "unsafe") && !covered(&lines, idx, true, |c| c.contains("SAFETY:")) {
+            push(
+                ln,
+                "safety",
+                "`unsafe` without an immediately preceding `// SAFETY:` justification".to_string(),
+            );
+        }
+
+        let lib_code = in_src && !mask[idx];
+
+        if lib_code && in_core {
+            for &(tok, why) in DETERMINISM_TOKENS {
+                if has_token(code, tok) && !allowed(&lines, idx, "determinism") {
+                    push(
+                        ln,
+                        "determinism",
+                        format!(
+                            "`{tok}` in a deterministic-core module ({why}); \
+                             fix or escape with `// tidy-allow(determinism): <reason>`"
+                        ),
+                    );
+                    break; // one determinism diag per line
+                }
+            }
+        }
+
+        if lib_code && !in_lowp {
+            for tok in ["to_bits", "from_bits"] {
+                if has_token(code, tok) && !allowed(&lines, idx, "precision") {
+                    push(
+                        ln,
+                        "precision",
+                        format!(
+                            "`{tok}` outside lowp/ — bit twiddling belongs behind \
+                             lowp::Precision; fix or escape with \
+                             `// tidy-allow(precision): <reason>`"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        if lib_code
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+            && !allowed(&lines, idx, "panic")
+        {
+            push(
+                ln,
+                "panic",
+                "`.unwrap()`/`.expect()` in library code — return an error, or escape \
+                 with `// tidy-allow(panic): <reason>`"
+                    .to_string(),
+            );
+        }
+
+        // allow-syntax: every escape must name a known rule and carry a
+        // reason, so stale or typo'd annotations cannot silence anything.
+        if let Some(p) = l.comment.find("tidy-allow(") {
+            let rest = &l.comment[p + "tidy-allow(".len()..];
+            match rest.find(')') {
+                Some(q) => {
+                    let rule = &rest[..q];
+                    let reason_ok = rest[q + 1..]
+                        .trim_start()
+                        .strip_prefix(':')
+                        .is_some_and(|r| !r.trim().is_empty());
+                    if !ALLOWABLE_RULES.contains(&rule) {
+                        push(
+                            ln,
+                            "allow-syntax",
+                            format!(
+                                "tidy-allow names unknown rule `{rule}` (allowed: {})",
+                                ALLOWABLE_RULES.join(", ")
+                            ),
+                        );
+                    } else if !reason_ok {
+                        push(
+                            ln,
+                            "allow-syntax",
+                            format!("tidy-allow({rule}) must carry a reason: `// tidy-allow({rule}): <reason>`"),
+                        );
+                    }
+                }
+                None => push(ln, "allow-syntax", "malformed tidy-allow comment".to_string()),
+            }
+        }
+    }
+    out
+}
+
+/// The lint wall: fail if the workspace lint table or the lib-level
+/// `unsafe_op_in_unsafe_fn` deny is dropped.
+fn lint_wall(root: &Path, diags: &mut Vec<Diag>) {
+    let checks: &[(&str, &str)] = &[
+        ("Cargo.toml", "[workspace.lints.rust]"),
+        ("Cargo.toml", "unsafe_op_in_unsafe_fn = \"deny\""),
+        ("rust/Cargo.toml", "[lints]"),
+        ("rust/Cargo.toml", "workspace = true"),
+        ("rust/src/lib.rs", "#![deny(unsafe_op_in_unsafe_fn)]"),
+    ];
+    for &(file, needle) in checks {
+        let ok = std::fs::read_to_string(root.join(file))
+            .map(|t| t.contains(needle))
+            .unwrap_or(false);
+        if !ok {
+            diags.push(Diag {
+                file: file.to_string(),
+                line: 0,
+                rule: "lint-wall",
+                msg: format!("expected `{needle}` — the lint wall must not be dropped"),
+            });
+        }
+    }
+}
+
+// ------------------------------------------------------------------ walk
+
+/// Collect `.rs` files under `dir`, recursively, in sorted order so
+/// diagnostics are stable across platforms.
+fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = std::fs::read_dir(dir) else { return };
+    let mut entries: Vec<PathBuf> = rd.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            rust_files(&p, out);
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Run the full tidy pass over a repo checkout.
+fn run_tidy(root: &Path) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    lint_wall(root, &mut diags);
+    let mut files = Vec::new();
+    for d in ["rust/src", "rust/tests", "rust/benches"] {
+        rust_files(&root.join(d), &mut files);
+    }
+    for f in &files {
+        let rel =
+            f.strip_prefix(root).unwrap_or(f).to_string_lossy().replace('\\', "/");
+        match std::fs::read_to_string(f) {
+            Ok(text) => diags.extend(analyze_file(&rel, &text)),
+            Err(e) => diags.push(Diag {
+                file: rel,
+                line: 0,
+                rule: "lint-wall",
+                msg: format!("unreadable source file: {e}"),
+            }),
+        }
+    }
+    diags
+}
+
+/// Repo root: xtask lives at `<root>/rust/xtask`.
+fn repo_root() -> PathBuf {
+    let md = std::env::var("CARGO_MANIFEST_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    Path::new(&md)
+        .ancestors()
+        .nth(2)
+        .expect("xtask sits two levels below the repo root")
+        .to_path_buf()
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) != Some("tidy") {
+        eprintln!("usage: cargo run -p xtask -- tidy [--root <repo>]");
+        return ExitCode::from(2);
+    }
+    let root = if args.get(1).map(String::as_str) == Some("--root") {
+        PathBuf::from(args.get(2).map(String::as_str).unwrap_or("."))
+    } else {
+        repo_root()
+    };
+    let diags = run_tidy(&root);
+    if diags.is_empty() {
+        eprintln!("tidy: clean (safety, determinism, precision, panic, lint-wall)");
+        return ExitCode::SUCCESS;
+    }
+    for d in &diags {
+        eprintln!("{}", d.render());
+    }
+    eprintln!("tidy: {} violation(s)", diags.len());
+    ExitCode::FAILURE
+}
+
+// ----------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("fixtures").join(name);
+        std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+    }
+
+    fn rules_hit(rel: &str, name: &str) -> Vec<&'static str> {
+        analyze_file(rel, &fixture(name)).iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn scanner_blanks_comments_and_strings() {
+        let lines = scan("let x = \"unsafe HashMap\"; // unsafe in a comment\n/* unsafe */ let y = 1;\n");
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(!has_token(&lines[0].code, "HashMap"));
+        assert!(lines[0].comment.contains("unsafe in a comment"));
+        assert!(!has_token(&lines[1].code, "unsafe"));
+        assert!(lines[1].code.contains("let y"));
+    }
+
+    #[test]
+    fn scanner_char_literals_vs_lifetimes() {
+        let lines = scan("fn f<'a>(s: &'a str) { s.split('\"').count(); let c = '\\''; }\n");
+        // the quoted chars must not open a string and swallow the rest
+        assert!(lines[0].code.contains("count()"));
+        assert!(lines[0].code.contains("let c"));
+        let lines = scan("let s = r#\"unsafe \"quoted\" text\"#; let t = 2;\n");
+        assert!(!has_token(&lines[0].code, "unsafe"));
+        assert!(lines[0].code.contains("let t"));
+    }
+
+    #[test]
+    fn multiline_strings_stay_blanked() {
+        let lines = scan("let s = \"line one\nunsafe line two\";\nlet x = 1;\n");
+        assert!(!has_token(&lines[1].code, "unsafe"));
+        assert!(lines[2].code.contains("let x"));
+    }
+
+    #[test]
+    fn cfg_test_mask_covers_gated_mod() {
+        let text = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\nfn tail() {}\n";
+        let lines = scan(text);
+        let mask = test_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn token_boundaries_respected() {
+        assert!(has_token("unsafe fn f()", "unsafe"));
+        assert!(!has_token("#![deny(unsafe_op_in_unsafe_fn)]", "unsafe"));
+        assert!(has_token("let m: HashMap<u32, u32>", "HashMap"));
+        assert!(!has_token("let m = MyHashMapLike::new()", "HashMap"));
+    }
+
+    #[test]
+    fn safety_header_covers_contiguous_unsafe_run() {
+        let text = "// SAFETY: spans are disjoint.\nlet a = unsafe { f(p) };\nlet b = unsafe { f(q) };\n";
+        let d = analyze_file("rust/src/nn/x.rs", text);
+        assert!(d.iter().all(|d| d.rule != "safety"), "{d:?}");
+        // ...but a non-unsafe code line breaks the run
+        let text = "// SAFETY: spans are disjoint.\nlet a = unsafe { f(p) };\nlet c = 1;\nlet b = unsafe { f(q) };\n";
+        let d = analyze_file("rust/src/nn/x.rs", text);
+        assert!(d.iter().any(|d| d.rule == "safety" && d.line == 4), "{d:?}");
+    }
+
+    #[test]
+    fn bad_fixtures_are_flagged() {
+        assert!(rules_hit("rust/src/nn/x.rs", "bad_safety.rs").contains(&"safety"));
+        assert!(rules_hit("rust/src/sac/x.rs", "bad_determinism.rs").contains(&"determinism"));
+        assert!(rules_hit("rust/src/replay/x.rs", "bad_precision.rs").contains(&"precision"));
+        assert!(rules_hit("rust/src/runtime/x.rs", "bad_panic.rs").contains(&"panic"));
+        assert!(rules_hit("rust/src/nn/x.rs", "bad_allow.rs").contains(&"allow-syntax"));
+    }
+
+    #[test]
+    fn good_fixtures_pass() {
+        for (rel, name) in [
+            ("rust/src/nn/x.rs", "good_safety.rs"),
+            ("rust/src/sac/x.rs", "good_determinism.rs"),
+            ("rust/src/replay/x.rs", "good_precision.rs"),
+            ("rust/src/runtime/x.rs", "good_panic.rs"),
+        ] {
+            let d = analyze_file(rel, &fixture(name));
+            assert!(d.is_empty(), "{name}: {d:?}");
+        }
+    }
+
+    #[test]
+    fn rules_scope_by_path() {
+        let det = "pub fn f() { let t = Instant::now(); t.elapsed(); }\n";
+        // core module: flagged; non-core (serve) module: not a determinism target
+        assert!(analyze_file("rust/src/nn/x.rs", det).iter().any(|d| d.rule == "determinism"));
+        assert!(analyze_file("rust/src/serve/x.rs", det).iter().all(|d| d.rule != "determinism"));
+        let bits = "pub fn f(x: f32) -> u32 { x.to_bits() }\n";
+        // lowp owns bit twiddling; tests/benches are exempt from panic/precision
+        assert!(analyze_file("rust/src/lowp/x.rs", bits).is_empty());
+        assert!(analyze_file("rust/src/sac/x.rs", bits).iter().any(|d| d.rule == "precision"));
+        assert!(analyze_file("rust/benches/x.rs", "fn f() { x.unwrap(); }\n").is_empty());
+    }
+
+    #[test]
+    fn allow_requires_reason_and_known_rule() {
+        let d = analyze_file("rust/src/nn/x.rs", "let x = m.lock().unwrap(); // tidy-allow(panic):\n");
+        assert!(d.iter().any(|d| d.rule == "allow-syntax"), "{d:?}");
+        let d = analyze_file("rust/src/nn/x.rs", "let x = 1; // tidy-allow(safety): nope\n");
+        assert!(d.iter().any(|d| d.rule == "allow-syntax"), "{d:?}");
+        let d = analyze_file(
+            "rust/src/nn/x.rs",
+            "let x = m.lock().unwrap(); // tidy-allow(panic): poisoned lock means a task panicked\n",
+        );
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn tree_is_clean() {
+        let diags = run_tidy(&repo_root());
+        assert!(
+            diags.is_empty(),
+            "tidy violations:\n{}",
+            diags.iter().map(Diag::render).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
