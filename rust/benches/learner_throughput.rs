@@ -6,10 +6,12 @@
 //!
 //! * **micro** — the isolated learner loop (pre-filled replay → round
 //!   arena → `SacAgent::update_round`), with a counting global
-//!   allocator reporting steady-state heap allocations per update
-//!   (the driver path — sampling, optimizer, EMA, gradient staging —
-//!   is allocation-free; what remains is forward/backward activation
-//!   tensors, tracked here so future PRs can drive it to zero);
+//!   allocator reporting steady-state heap allocations per update.
+//!   The states path is fully allocation-free after warm-up — sampling,
+//!   forwards, backwards, optimizer, EMA all reuse workspace buffers —
+//!   and the bench asserts `allocs_per_update == 0` for it. The pixels
+//!   path still allocates conv/encoder activations (tracked here so a
+//!   future PR can drive it to zero too);
 //! * **train** — full `coordinator::train` runs (states + pixels,
 //!   strict + async) reporting the `TrainOutcome` updates/sec next to
 //!   collection throughput.
@@ -460,6 +462,15 @@ fn main() {
             "micro {:>10} {:<6} batch {:>3} hidden {:>3} round {}: {:>9.1} upd/s  {:>7.1} allocs/upd",
             row.preset, row.obs, row.batch, row.hidden, row.round, row.updates_per_sec, row.allocs_per_update
         );
+        // steady-state zero-allocation gate: the states learner loop must
+        // not touch the heap once every workspace buffer is warm
+        if !sh.pixels {
+            assert_eq!(
+                row.allocs_per_update, 0.0,
+                "{name} states learner loop allocated in steady state"
+            );
+            println!("alloc gate [{name} states]: 0 allocs/update  OK");
+        }
         micro.push(row);
     }
 

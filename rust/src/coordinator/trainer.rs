@@ -164,8 +164,8 @@ impl UpdateSchedule {
         let mut n_updates = 0usize;
         // a round can contain several probe points (tiny steps with wide
         // rounds); each probed update runs as its own segment below.
-        // `Vec::new` does not allocate, so probe-free rounds (all but
-        // ~3 per run) stay allocation-free.
+        // tidy-allow(alloc): `Vec::new` is capacity-0 (no heap touch);
+        // probe-free rounds (all but ~3 per run) never push into it
         let mut probe_updates: Vec<usize> = Vec::new();
         for j in 0..k {
             let s = base_step + j;
@@ -204,6 +204,8 @@ impl UpdateSchedule {
         let mut lo = 0usize;
         for &pu in &probe_updates {
             run_seg(agent, lo, pu);
+            // tidy-allow(alloc): probe segments only (~3 per run), not the
+            // steady-state update loop
             agent.grad_probe = Some(Vec::new());
             run_seg(agent, pu, pu + 1);
             if let Some(probe) = agent.grad_probe.take() {

@@ -32,6 +32,8 @@ impl BallInCup {
     }
 
     fn obs(&self) -> Vec<f32> {
+        // tidy-allow(alloc): per-step obs crosses the Env trait boundary
+        // as an owned Vec (collection path, not the learner loop)
         vec![
             (self.cup.0 / WORKSPACE) as f32,
             (self.cup.1 / WORKSPACE) as f32,

@@ -41,6 +41,8 @@ impl CartpoleSwingup {
 
     fn obs(&self) -> Vec<f32> {
         let th = self.s[2];
+        // tidy-allow(alloc): per-step obs crosses the Env trait boundary
+        // as an owned Vec (collection path, not the learner loop)
         vec![
             self.s[0] as f32,
             self.s[1] as f32,

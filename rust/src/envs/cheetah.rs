@@ -35,6 +35,8 @@ impl CheetahRun {
     }
 
     fn obs(&self) -> Vec<f32> {
+        // tidy-allow(alloc): per-step obs crosses the Env trait boundary
+        // as an owned Vec (collection path, not the learner loop)
         let mut o = Vec::with_capacity(1 + 2 * N_LEGS);
         o.push((self.v / TARGET_SPEED) as f32);
         for i in 0..N_LEGS {

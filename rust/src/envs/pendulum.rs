@@ -26,6 +26,8 @@ impl PendulumSwingup {
     }
 
     fn obs(&self) -> Vec<f32> {
+        // tidy-allow(alloc): per-step obs crosses the Env trait boundary
+        // as an owned Vec (collection path, not the learner loop)
         vec![self.s[0].cos() as f32, self.s[0].sin() as f32, (self.s[1] / 8.0) as f32]
     }
 }

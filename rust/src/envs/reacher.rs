@@ -35,6 +35,8 @@ impl ReacherEasy {
     fn obs(&self) -> Vec<f32> {
         let (tx, ty) = self.target;
         let (px, py) = self.tip();
+        // tidy-allow(alloc): per-step obs crosses the Env trait boundary
+        // as an owned Vec (collection path, not the learner loop)
         vec![
             self.s[0].cos() as f32,
             self.s[0].sin() as f32,

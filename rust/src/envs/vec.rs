@@ -110,6 +110,8 @@ fn assert_env_obs_is_send(e: EnvObs) -> impl Send {
 /// one by construction.
 fn agent_step(env: &mut EnvObs, repeat: usize, a: &[f32], out: &mut [f32]) -> f32 {
     let mut rew = 0.0f32;
+    // tidy-allow(alloc): `Vec::new` is capacity-0; the obs Vec moved in
+    // from `step` is the (annotated) env-boundary allocation
     let mut last = Vec::new();
     for _ in 0..repeat {
         let (o, r) = env.step(a);

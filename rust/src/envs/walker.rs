@@ -38,6 +38,8 @@ impl WalkerWalk {
     }
 
     fn obs(&self) -> Vec<f32> {
+        // tidy-allow(alloc): per-step obs crosses the Env trait boundary
+        // as an owned Vec (collection path, not the learner loop)
         let mut o = Vec::with_capacity(2 + 2 * N_LEGS);
         o.push(self.h as f32);
         o.push((self.v / TARGET_SPEED) as f32);

@@ -7,9 +7,10 @@
 use super::format::{FloatFormat, OverflowMode, RoundMode};
 
 /// Precision policy for a computation.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub enum Precision {
     /// Native f32: quantization is the identity.
+    #[default]
     Fp32,
     /// Simulated low precision: round every op result into the format.
     Sim {

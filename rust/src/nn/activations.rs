@@ -5,27 +5,51 @@ use crate::lowp::Precision;
 
 /// ReLU forward. Returns the activated tensor (quantized).
 pub fn relu(x: &Tensor, prec: Precision) -> Tensor {
+    // tidy-allow(alloc): allocating wrapper for cold/inference callers —
+    // the learner hot path uses `relu_into` with a workspace buffer
     let mut y = x.clone();
+    relu_in_place(&mut y, prec);
+    y
+}
+
+/// Allocation-free ReLU forward: write `relu(x)` into `out`, reusing
+/// `out`'s buffer whenever the shape already matches. Bitwise identical
+/// to [`relu`] (same zeroing condition, same quantize pass).
+pub fn relu_into(x: &Tensor, prec: Precision, out: &mut Tensor) {
+    out.ensure_shape(&x.shape);
+    out.data.copy_from_slice(&x.data);
+    relu_in_place(out, prec);
+}
+
+fn relu_in_place(y: &mut Tensor, prec: Precision) {
     for v in y.data.iter_mut() {
         if *v < 0.0 {
             *v = 0.0;
         }
     }
     y.quantize(prec);
-    y
 }
 
 /// ReLU backward: `dx = dy ⊙ 1[x > 0]`, where `x` is the forward *input*.
 pub fn relu_backward(dy: &Tensor, x: &Tensor, prec: Precision) -> Tensor {
-    assert_eq!(dy.len(), x.len());
+    // tidy-allow(alloc): allocating wrapper for cold callers — the
+    // learner hot path masks its gradient buffer with `relu_backward_in_place`
     let mut dx = dy.clone();
-    for (d, &xv) in dx.data.iter_mut().zip(&x.data) {
+    relu_backward_in_place(&mut dx, x, prec);
+    dx
+}
+
+/// Allocation-free ReLU backward: mask the gradient `g` in place by the
+/// forward input's sign, then quantize. Bitwise identical to
+/// [`relu_backward`] on the same values (same mask, same quantize pass).
+pub fn relu_backward_in_place(g: &mut Tensor, x: &Tensor, prec: Precision) {
+    assert_eq!(g.len(), x.len());
+    for (d, &xv) in g.data.iter_mut().zip(&x.data) {
         if xv <= 0.0 {
             *d = 0.0;
         }
     }
-    dx.quantize(prec);
-    dx
+    g.quantize(prec);
 }
 
 /// tanh forward (quantized).

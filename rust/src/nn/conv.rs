@@ -51,6 +51,8 @@ impl Conv2d {
         let [b, c, h, w] = [x.shape[0], x.shape[1], x.shape[2], x.shape[3]];
         let (ho, wo) = self.out_hw(h, w);
         let fan = c * self.k * self.k;
+        // tidy-allow(alloc): pixels-path im2col panel; threading a caller
+        // workspace through the encoder is a ROADMAP carryover
         let mut cols = vec![0.0f32; b * ho * wo * fan];
         for bi in 0..b {
             for oy in 0..ho {
@@ -86,6 +88,8 @@ impl Conv2d {
         let fan = self.cin * self.k * self.k;
         let rows = b * ho * wo;
         // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ
+        // tidy-allow(alloc): pixels-path activation buffer (states preset
+        // never reaches conv); workspace reuse is a ROADMAP carryover
         let mut yrows = vec![0.0f32; rows * self.cout];
         gemm_nt_bias_q(cols, &self.w.w, &mut yrows, rows, fan, self.cout, Some(&self.b.w), prec);
         // transpose the finished rows to [B, Cout, Ho, Wo]
@@ -129,11 +133,13 @@ impl Conv2d {
         let [b, cin, h, w] = ws.in_shape;
         assert!(b > 0, "forward_train workspace missing");
         let (ho, wo) = self.out_hw(h, w);
-        assert_eq!(dy.shape, vec![b, self.cout, ho, wo]);
+        assert_eq!(dy.shape, [b, self.cout, ho, wo]);
         let fan = cin * self.k * self.k;
         let rows = b * ho * wo;
 
         // dy as rows [rows, cout]
+        // tidy-allow(alloc): pixels-path gradient scratch; workspace reuse
+        // is a ROADMAP carryover
         let mut dyr = vec![0.0f32; rows * self.cout];
         for bi in 0..b {
             for co in 0..self.cout {
@@ -153,6 +159,8 @@ impl Conv2d {
         }
         prec.q_slice(&mut self.b.g);
         // dW[cout, fan] = dyrᵀ @ cols (quantize fused into the epilogue)
+        // tidy-allow(alloc): pixels-path gradient scratch; workspace reuse
+        // is a ROADMAP carryover
         let mut dw = vec![0.0f32; self.cout * fan];
         gemm_tn_bias_q(&dyr, &ws.cols, &mut dw, self.cout, rows, fan, None, prec);
         for (acc, d) in self.w.g.iter_mut().zip(&dw) {
@@ -160,6 +168,8 @@ impl Conv2d {
         }
         prec.q_slice(&mut self.w.g);
         // dcols[rows, fan] = dyr @ w
+        // tidy-allow(alloc): pixels-path gradient scratch; workspace reuse
+        // is a ROADMAP carryover
         let mut dcols = vec![0.0f32; rows * fan];
         gemm(&dyr, &self.w.w, &mut dcols, rows, self.cout, fan);
         // col2im scatter-add

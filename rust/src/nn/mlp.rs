@@ -9,7 +9,7 @@
 //! shareable across threads); training caches live in an explicit
 //! [`MlpWorkspace`].
 
-use super::activations::{relu, relu_backward};
+use super::activations::{relu, relu_backward, relu_backward_in_place, relu_into};
 use super::linear::{Linear, LinearWorkspace};
 use super::param::Param;
 use super::tensor::Tensor;
@@ -18,10 +18,26 @@ use crate::rngs::Pcg64;
 
 /// Training-time caches for one [`Mlp`]: per-layer [`LinearWorkspace`]s
 /// plus the pre-activation inputs each hidden ReLU needs for backward.
+/// The `act` slots hold the post-ReLU activations and `grad_a`/`grad_b`
+/// ping-pong the backward gradient, so the `_into` walks reuse every
+/// buffer across steps (zero steady-state allocations).
 #[derive(Debug, Clone, Default)]
 pub struct MlpWorkspace {
     layers: Vec<LinearWorkspace>,
     pre_relu: Vec<Tensor>,
+    act: Vec<Tensor>,
+    grad_a: Tensor,
+    grad_b: Tensor,
+}
+
+impl MlpWorkspace {
+    /// Size the per-layer slot vectors for an `n`-layer trunk. The slots
+    /// themselves are grown lazily by `ensure_shape` inside the walks.
+    fn ensure(&mut self, n: usize) {
+        self.layers.resize_with(n, LinearWorkspace::default);
+        self.pre_relu.resize_with(n.saturating_sub(1), Tensor::default);
+        self.act.resize_with(n.saturating_sub(1), Tensor::default);
+    }
 }
 
 /// An MLP with ReLU between layers and a linear head.
@@ -44,6 +60,9 @@ impl Mlp {
     /// [`Mlp::forward_train`]. The input feeds the first layer directly
     /// (no staging clone).
     pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
+        // allocating walk for cold/shared-`&self` callers — the learner
+        // hot path uses `forward_into` (the allocations live inside the
+        // individually-allowed `relu`/`Linear::forward` wrappers)
         let n = self.layers.len();
         let mut h = self.layers[0].forward(x, prec);
         for layer in &self.layers[1..n] {
@@ -53,21 +72,65 @@ impl Mlp {
         h
     }
 
-    /// Training forward: caches activations into `ws` for
-    /// [`Mlp::backward`]. The pre-ReLU tensors move into the workspace
-    /// (no per-layer clone), and the input feeds the first layer
-    /// directly — bitwise identical to the allocating layout.
-    pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut MlpWorkspace) -> Tensor {
+    /// Allocation-free twin of [`Mlp::forward`]: hidden activations go
+    /// through the workspace slots and the head writes into `out`, all
+    /// reused whenever the shapes repeat. Bitwise identical.
+    pub fn forward_into(&self, x: &Tensor, prec: Precision, ws: &mut MlpWorkspace, out: &mut Tensor) {
         let n = self.layers.len();
-        ws.layers.resize_with(n, LinearWorkspace::default);
-        ws.pre_relu.clear();
-        let mut h = self.layers[0].forward_train(x, prec, &mut ws.layers[0]);
-        for (i, layer) in self.layers.iter().enumerate().skip(1) {
-            let a = relu(&h, prec);
-            ws.pre_relu.push(h);
-            h = layer.forward_train(&a, prec, &mut ws.layers[i]);
+        ws.ensure(n);
+        if n == 1 {
+            self.layers[0].forward_into(x, prec, out);
+            return;
         }
-        h
+        self.layers[0].forward_into(x, prec, &mut ws.pre_relu[0]);
+        for i in 1..n {
+            relu_into(&ws.pre_relu[i - 1], prec, &mut ws.act[i - 1]);
+            if i == n - 1 {
+                self.layers[i].forward_into(&ws.act[i - 1], prec, out);
+            } else {
+                self.layers[i].forward_into(&ws.act[i - 1], prec, &mut ws.pre_relu[i]);
+            }
+        }
+    }
+
+    /// Training forward: caches activations into `ws` for
+    /// [`Mlp::backward`]. Bitwise identical to [`Mlp::forward`].
+    pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut MlpWorkspace) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_train_into(x, prec, ws, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`Mlp::forward_train`]: the pre-ReLU
+    /// caches, hidden activations, and the head output all reuse their
+    /// buffers whenever the shapes repeat.
+    pub fn forward_train_into(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        ws: &mut MlpWorkspace,
+        out: &mut Tensor,
+    ) {
+        let n = self.layers.len();
+        ws.ensure(n);
+        if n == 1 {
+            self.layers[0].forward_train_into(x, prec, &mut ws.layers[0], out);
+            return;
+        }
+        {
+            let (ws0, pre0) = (&mut ws.layers[0], &mut ws.pre_relu[0]);
+            self.layers[0].forward_train_into(x, prec, ws0, pre0);
+        }
+        for i in 1..n {
+            relu_into(&ws.pre_relu[i - 1], prec, &mut ws.act[i - 1]);
+            if i == n - 1 {
+                let (lws, a) = (&mut ws.layers[i], &ws.act[i - 1]);
+                self.layers[i].forward_train_into(a, prec, lws, out);
+            } else {
+                let MlpWorkspace { layers, pre_relu, act, .. } = ws;
+                self.layers[i].forward_train_into(&act[i - 1], prec, &mut layers[i], &mut pre_relu[i]);
+            }
+        }
     }
 
     /// Inference forwards of two same-architecture trunks walked in
@@ -77,6 +140,8 @@ impl Mlp {
     /// layer pair that cannot share a dispatch falls back to sequential
     /// inside [`Linear::forward_pair`].
     pub fn forward_pair(m1: &Mlp, m2: &Mlp, x: &Tensor, prec: Precision) -> (Tensor, Tensor) {
+        // allocating walk for cold callers — the learner hot path uses
+        // `forward_pair_into` / `forward_train_pair_into`
         if m1.layers.len() != m2.layers.len() {
             return (m1.forward(x, prec), m2.forward(x, prec));
         }
@@ -90,6 +155,71 @@ impl Mlp {
         (h1, h2)
     }
 
+    /// Allocation-free twin of [`Mlp::forward_pair`]: the hidden
+    /// activations go through each trunk's workspace slots and the head
+    /// outputs land in `y1`/`y2`, all reused whenever the shapes repeat.
+    /// Bitwise identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_pair_into(
+        m1: &Mlp,
+        m2: &Mlp,
+        x: &Tensor,
+        prec: Precision,
+        ws1: &mut MlpWorkspace,
+        ws2: &mut MlpWorkspace,
+        y1: &mut Tensor,
+        y2: &mut Tensor,
+    ) {
+        if m1.layers.len() != m2.layers.len() {
+            m1.forward_into(x, prec, ws1, y1);
+            m2.forward_into(x, prec, ws2, y2);
+            return;
+        }
+        let n = m1.layers.len();
+        ws1.ensure(n);
+        ws2.ensure(n);
+        if n == 1 {
+            Linear::forward_pair_into(&m1.layers[0], &m2.layers[0], x, x, prec, y1, y2);
+            return;
+        }
+        Linear::forward_pair_into(
+            &m1.layers[0],
+            &m2.layers[0],
+            x,
+            x,
+            prec,
+            &mut ws1.pre_relu[0],
+            &mut ws2.pre_relu[0],
+        );
+        for i in 1..n {
+            relu_into(&ws1.pre_relu[i - 1], prec, &mut ws1.act[i - 1]);
+            relu_into(&ws2.pre_relu[i - 1], prec, &mut ws2.act[i - 1]);
+            if i == n - 1 {
+                Linear::forward_pair_into(
+                    &m1.layers[i],
+                    &m2.layers[i],
+                    &ws1.act[i - 1],
+                    &ws2.act[i - 1],
+                    prec,
+                    y1,
+                    y2,
+                );
+            } else {
+                let MlpWorkspace { pre_relu: pa, act: aa, .. } = ws1;
+                let MlpWorkspace { pre_relu: pb, act: ab, .. } = ws2;
+                Linear::forward_pair_into(
+                    &m1.layers[i],
+                    &m2.layers[i],
+                    &aa[i - 1],
+                    &ab[i - 1],
+                    prec,
+                    &mut pa[i],
+                    &mut pb[i],
+                );
+            }
+        }
+    }
+
     /// Training twin of [`Mlp::forward_pair`]: fills each trunk's
     /// workspace exactly as [`Mlp::forward_train`] would.
     pub fn forward_train_pair(
@@ -100,47 +230,106 @@ impl Mlp {
         ws1: &mut MlpWorkspace,
         ws2: &mut MlpWorkspace,
     ) -> (Tensor, Tensor) {
+        let (mut y1, mut y2) = (Tensor::default(), Tensor::default());
+        Self::forward_train_pair_into(m1, m2, x, prec, ws1, ws2, &mut y1, &mut y2);
+        (y1, y2)
+    }
+
+    /// Allocation-free twin of [`Mlp::forward_train_pair`]: both trunks'
+    /// caches, hidden activations, and head outputs reuse their buffers
+    /// whenever the shapes repeat.
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_train_pair_into(
+        m1: &Mlp,
+        m2: &Mlp,
+        x: &Tensor,
+        prec: Precision,
+        ws1: &mut MlpWorkspace,
+        ws2: &mut MlpWorkspace,
+        y1: &mut Tensor,
+        y2: &mut Tensor,
+    ) {
         if m1.layers.len() != m2.layers.len() {
-            return (m1.forward_train(x, prec, ws1), m2.forward_train(x, prec, ws2));
+            m1.forward_train_into(x, prec, ws1, y1);
+            m2.forward_train_into(x, prec, ws2, y2);
+            return;
         }
         let n = m1.layers.len();
-        ws1.layers.resize_with(n, LinearWorkspace::default);
-        ws2.layers.resize_with(n, LinearWorkspace::default);
-        ws1.pre_relu.clear();
-        ws2.pre_relu.clear();
-        let (mut h1, mut h2) = Linear::forward_train_pair(
-            &m1.layers[0],
-            &m2.layers[0],
-            x,
-            x,
-            prec,
-            &mut ws1.layers[0],
-            &mut ws2.layers[0],
-        );
-        for i in 1..n {
-            let a1 = relu(&h1, prec);
-            let a2 = relu(&h2, prec);
-            ws1.pre_relu.push(h1);
-            ws2.pre_relu.push(h2);
-            (h1, h2) = Linear::forward_train_pair(
-                &m1.layers[i],
-                &m2.layers[i],
-                &a1,
-                &a2,
+        ws1.ensure(n);
+        ws2.ensure(n);
+        if n == 1 {
+            Linear::forward_train_pair_into(
+                &m1.layers[0],
+                &m2.layers[0],
+                x,
+                x,
                 prec,
-                &mut ws1.layers[i],
-                &mut ws2.layers[i],
+                &mut ws1.layers[0],
+                &mut ws2.layers[0],
+                y1,
+                y2,
+            );
+            return;
+        }
+        {
+            let MlpWorkspace { layers: la, pre_relu: pa, .. } = ws1;
+            let MlpWorkspace { layers: lb, pre_relu: pb, .. } = ws2;
+            Linear::forward_train_pair_into(
+                &m1.layers[0],
+                &m2.layers[0],
+                x,
+                x,
+                prec,
+                &mut la[0],
+                &mut lb[0],
+                &mut pa[0],
+                &mut pb[0],
             );
         }
-        (h1, h2)
+        for i in 1..n {
+            relu_into(&ws1.pre_relu[i - 1], prec, &mut ws1.act[i - 1]);
+            relu_into(&ws2.pre_relu[i - 1], prec, &mut ws2.act[i - 1]);
+            if i == n - 1 {
+                let MlpWorkspace { layers: la, act: aa, .. } = ws1;
+                let MlpWorkspace { layers: lb, act: ab, .. } = ws2;
+                Linear::forward_train_pair_into(
+                    &m1.layers[i],
+                    &m2.layers[i],
+                    &aa[i - 1],
+                    &ab[i - 1],
+                    prec,
+                    &mut la[i],
+                    &mut lb[i],
+                    y1,
+                    y2,
+                );
+            } else {
+                let MlpWorkspace { layers: la, pre_relu: pa, act: aa, .. } = ws1;
+                let MlpWorkspace { layers: lb, pre_relu: pb, act: ab, .. } = ws2;
+                Linear::forward_train_pair_into(
+                    &m1.layers[i],
+                    &m2.layers[i],
+                    &aa[i - 1],
+                    &ab[i - 1],
+                    prec,
+                    &mut la[i],
+                    &mut lb[i],
+                    &mut pa[i],
+                    &mut pb[i],
+                );
+            }
+        }
     }
 
     /// Backward from `dy` at the head, through the workspace filled by
     /// the matching `forward_train`; returns the gradient w.r.t. the
     /// input.
     pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &MlpWorkspace) -> Tensor {
+        // allocating walk for tests/cold callers — the learner hot path
+        // uses `backward_into` (ping-pong workspace buffers)
         let n = self.layers.len();
         assert_eq!(ws.layers.len(), n, "forward_train workspace missing");
+        // tidy-allow(alloc): allocating wrapper; hot callers use backward_into
         let mut g = dy.clone();
         for i in (0..n).rev() {
             g = self.layers[i].backward(&g, prec, &ws.layers[i]);
@@ -149,6 +338,40 @@ impl Mlp {
             }
         }
         g
+    }
+
+    /// Allocation-free twin of [`Mlp::backward`]: the gradient ping-pongs
+    /// between two workspace buffers (hidden ReLU masks are applied in
+    /// place) and the input gradient lands in `dx`. Bitwise identical —
+    /// same per-layer ops in the same order.
+    pub fn backward_into(
+        &mut self,
+        dy: &Tensor,
+        prec: Precision,
+        ws: &mut MlpWorkspace,
+        dx: &mut Tensor,
+    ) {
+        let n = self.layers.len();
+        assert_eq!(ws.layers.len(), n, "forward_train workspace missing");
+        if n == 1 {
+            self.layers[0].backward_into(dy, prec, &mut ws.layers[0], dx);
+            return;
+        }
+        {
+            let MlpWorkspace { layers, pre_relu, grad_a, .. } = ws;
+            self.layers[n - 1].backward_into(dy, prec, &mut layers[n - 1], grad_a);
+            relu_backward_in_place(grad_a, &pre_relu[n - 2], prec);
+        }
+        for i in (1..n - 1).rev() {
+            {
+                let MlpWorkspace { layers, pre_relu, grad_a, grad_b, .. } = ws;
+                self.layers[i].backward_into(grad_a, prec, &mut layers[i], grad_b);
+                relu_backward_in_place(grad_b, &pre_relu[i - 1], prec);
+            }
+            std::mem::swap(&mut ws.grad_a, &mut ws.grad_b);
+        }
+        let MlpWorkspace { layers, grad_a, .. } = ws;
+        self.layers[0].backward_into(grad_a, prec, &mut layers[0], dx);
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {

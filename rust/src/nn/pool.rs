@@ -10,8 +10,12 @@
 //! Design:
 //! * One job at a time. [`ThreadPool::run`] publishes a job (a task count
 //!   plus a `Fn(usize)` body), wakes the workers, participates in the
-//!   work itself, and returns only when every task index has finished —
-//!   which is what makes the lifetime-erased closure pointer sound.
+//!   work itself, and returns only when every task index has finished
+//!   *and* every worker has left the claim loop — which is what makes
+//!   the lifetime-erased closure pointer sound. The job descriptor
+//!   lives inline in the shared state (`Copy`, no `Arc`), so
+//!   publishing a job performs **zero allocations** — the learner's
+//!   counting-allocator gate covers every GEMM dispatch.
 //! * Tasks are claimed with an atomic counter, so scheduling is dynamic,
 //!   but *what* each task computes is a pure function of its index —
 //!   results are bitwise identical for any worker count (including the
@@ -71,81 +75,92 @@ impl<T> SendMut<T> {
     }
 }
 
-/// A published job: a lifetime-erased task body plus claim/finish counters.
-struct Job {
-    /// Borrow of the caller's closure, valid until `completed == units`
-    /// (the submitter blocks in [`ThreadPool::run`] until then).
+/// The published job's shape: a lifetime-erased task body plus the
+/// claim geometry. `Copy`, and stored inline in [`Shared`] — publishing
+/// a job allocates nothing, which keeps the learner's per-update GEMM
+/// dispatches off the allocator entirely (the counting-allocator gate
+/// in `BENCH_learner.json` measures worker threads too).
+#[derive(Clone, Copy)]
+struct JobDesc {
+    /// Borrow of the caller's closure, valid until the submitter
+    /// retires the job (see [`ThreadPool::run_chunked`]).
     f: *const (dyn Fn(usize) + Sync),
-    /// Next *chunk* to claim (chunk `u` covers indices
-    /// `u*grain .. min((u+1)*grain, total)`).
-    next: AtomicUsize,
-    /// Chunks fully executed.
-    completed: AtomicUsize,
     /// Number of claim units: `ceil(total / grain)`.
     units: usize,
     /// Total task-index count.
     total: usize,
-    /// Indices claimed per atomic RMW.
+    /// Indices claimed per atomic RMW (chunk `u` covers
+    /// `u*grain .. min((u+1)*grain, total)`).
     grain: usize,
-    /// Set when any task body panicked; the submitter re-raises after
-    /// every task has been accounted for.
-    poisoned: AtomicBool,
 }
 
-// SAFETY: `f` points at a `Sync` closure that outlives every dereference
-// (the submitting thread waits for `completed == units` before returning),
-// and the counters are atomics.
-unsafe impl Send for Job {}
-// SAFETY: as above.
-unsafe impl Sync for Job {}
+// SAFETY: `f` points at a `Sync` closure that outlives every
+// dereference — the submitter blocks until the job is drained *and*
+// every registered worker has left `run_job` before returning — and
+// the remaining fields are plain sizes.
+unsafe impl Send for JobDesc {}
 
-impl Job {
-    /// Claim and run chunks until none are left; notify the submitter
-    /// when the last chunk finishes.
-    ///
-    /// Task panics are caught at the boundary so a claimed chunk always
-    /// increments `completed` — otherwise a panicking worker would leave
-    /// the submitter waiting forever, and a panicking submitter would
-    /// unwind (freeing the closure and output buffers) while workers
-    /// still execute through the raw pointer. The panic is re-raised on
-    /// the submitting thread once the job is fully drained.
-    fn run(&self, shared: &Shared) {
-        loop {
-            let u = self.next.fetch_add(1, Ordering::Relaxed);
-            if u >= self.units {
-                return;
+/// Claim and run chunks of the published job until none are left;
+/// notify the submitter when the last chunk finishes.
+///
+/// Task panics are caught at the boundary so a claimed chunk always
+/// increments `completed` — otherwise a panicking worker would leave
+/// the submitter waiting forever, and a panicking submitter would
+/// unwind (freeing the closure and output buffers) while workers still
+/// execute through the raw pointer. The panic is re-raised on the
+/// submitting thread once the job is fully drained.
+fn run_job(shared: &Shared, d: JobDesc) {
+    loop {
+        let u = shared.next.fetch_add(1, Ordering::Relaxed);
+        if u >= d.units {
+            return;
+        }
+        let lo = u * d.grain;
+        let hi = (lo + d.grain).min(d.total);
+        // SAFETY: the submitter keeps the closure alive until the job
+        // is drained and every registered worker has left this loop,
+        // and we only reach here while chunks remain unclaimed.
+        let f = unsafe { &*d.f };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for t in lo..hi {
+                f(t);
             }
-            let lo = u * self.grain;
-            let hi = (lo + self.grain).min(self.total);
-            // SAFETY: the submitter keeps the closure alive until
-            // `completed == units`, and we only reach here while chunks
-            // remain unclaimed.
-            let f = unsafe { &*self.f };
-            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                for t in lo..hi {
-                    f(t);
-                }
-            }))
-            .is_err()
-            {
-                self.poisoned.store(true, Ordering::Release);
-            }
-            if self.completed.fetch_add(1, Ordering::AcqRel) + 1 == self.units {
-                // take the lock so the submitter cannot miss the wakeup
-                // tidy-allow(panic): lock poisoning means another task
-                // already panicked — propagating is correct
-                let _g = shared.done_mx.lock().unwrap();
-                shared.done_cv.notify_all();
-            }
+        }))
+        .is_err()
+        {
+            shared.poisoned.store(true, Ordering::Release);
+        }
+        if shared.completed.fetch_add(1, Ordering::AcqRel) + 1 == d.units {
+            // take the lock so the submitter cannot miss the wakeup
+            // tidy-allow(panic): lock poisoning means another task
+            // already panicked — propagating is correct
+            let _g = shared.done_mx.lock().unwrap();
+            shared.done_cv.notify_all();
         }
     }
 }
 
 struct Shared {
-    job: Mutex<Option<Arc<Job>>>,
+    /// The active job, `None` when idle. Workers snapshot the
+    /// descriptor under this lock and register in `active` *before*
+    /// releasing it, so the submitter can retire the job soundly:
+    /// clear the slot (no new entrants), then wait for `active == 0`.
+    job: Mutex<Option<JobDesc>>,
     work_cv: Condvar,
     done_mx: Mutex<()>,
     done_cv: Condvar,
+    /// Next chunk of the active job to claim. Reset by the submitter at
+    /// publish time — sound because the previous job's retire proved no
+    /// worker was still inside `run_job`.
+    next: AtomicUsize,
+    /// Chunks of the active job fully executed.
+    completed: AtomicUsize,
+    /// Workers currently inside [`run_job`] (entered under the `job`
+    /// lock; the submitter's own participation is not counted — it is
+    /// sequenced by construction).
+    active: AtomicUsize,
+    /// Set when any task body of the active job panicked.
+    poisoned: AtomicBool,
     /// Tells the workers to exit (set by [`ThreadPool::drop`]).
     shutdown: AtomicBool,
 }
@@ -168,6 +183,10 @@ impl ThreadPool {
             work_cv: Condvar::new(),
             done_mx: Mutex::new(()),
             done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            poisoned: AtomicBool::new(false),
             shutdown: AtomicBool::new(false),
         });
         let workers = threads.saturating_sub(1);
@@ -243,36 +262,44 @@ impl ThreadPool {
         };
         let fat: &(dyn Fn(usize) + Sync) = &f;
         // SAFETY: erase the borrow's lifetime; `run_chunked` does not
-        // return until every task completed, so workers never touch `f`
-        // after it dies.
+        // return until every chunk completed and every registered
+        // worker has left `run_job`, so workers never touch `f` after
+        // it dies.
         let fat: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(fat) };
-        let job = Arc::new(Job {
-            f: fat,
-            next: AtomicUsize::new(0),
-            completed: AtomicUsize::new(0),
-            units,
-            total,
-            grain,
-            poisoned: AtomicBool::new(false),
-        });
+        let desc = JobDesc { f: fat, units, total, grain };
         {
             // tidy-allow(panic): lock poisoning means another task
             // already panicked — propagating is correct (applies to
             // every pool lock/wait below)
             let mut g = self.shared.job.lock().unwrap();
-            *g = Some(job.clone());
+            // the previous job's retire waited for `active == 0`, so
+            // the counters are exclusively ours to reset here
+            self.shared.next.store(0, Ordering::Relaxed);
+            self.shared.completed.store(0, Ordering::Relaxed);
+            self.shared.poisoned.store(false, Ordering::Relaxed);
+            *g = Some(desc);
             self.shared.work_cv.notify_all();
         }
         // participate instead of just waiting
-        job.run(&self.shared);
-        let mut g = self.shared.done_mx.lock().unwrap(); // tidy-allow(panic): poisoned lock — see above
-        while job.completed.load(Ordering::Acquire) < units {
-            g = self.shared.done_cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see above
+        run_job(&self.shared, desc);
+        {
+            let mut g = self.shared.done_mx.lock().unwrap(); // tidy-allow(panic): poisoned lock — see above
+            while self.shared.completed.load(Ordering::Acquire) < units {
+                g = self.shared.done_cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see above
+            }
         }
-        drop(g);
+        // retire: clear the slot so no new worker can register, then
+        // wait for the registered ones to leave `run_job` — after that
+        // nothing can touch `f` or the counters
         *self.shared.job.lock().unwrap() = None; // tidy-allow(panic): poisoned lock — see above
+        {
+            let mut g = self.shared.done_mx.lock().unwrap(); // tidy-allow(panic): poisoned lock — see above
+            while self.shared.active.load(Ordering::Acquire) > 0 {
+                g = self.shared.done_cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see above
+            }
+        }
         drop(guard);
-        if job.poisoned.load(Ordering::Acquire) {
+        if self.shared.poisoned.load(Ordering::Acquire) {
             // the original message + backtrace were already printed by
             // the panicking thread's hook
             panic!("a thread-pool task panicked (see output above)");
@@ -298,21 +325,31 @@ impl Drop for ThreadPool {
 
 fn worker_loop(shared: Arc<Shared>) {
     loop {
-        let job = {
+        let d = {
             let mut g = shared.job.lock().unwrap(); // tidy-allow(panic): poisoned lock means a task panicked — propagating is correct
             loop {
                 if shared.shutdown.load(Ordering::Acquire) {
                     return;
                 }
-                if let Some(j) = g.as_ref() {
-                    if j.next.load(Ordering::Relaxed) < j.units {
-                        break j.clone();
+                if let Some(d) = *g {
+                    if shared.next.load(Ordering::Relaxed) < d.units {
+                        // register under the lock so the submitter
+                        // cannot retire the job while we're unaccounted
+                        shared.active.fetch_add(1, Ordering::AcqRel);
+                        break d;
                     }
                 }
                 g = shared.work_cv.wait(g).unwrap(); // tidy-allow(panic): poisoned lock — see above
             }
         };
-        job.run(&shared);
+        run_job(&shared, d);
+        if shared.active.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // last one out: wake a submitter waiting in retire
+            // tidy-allow(panic): lock poisoning means a task panicked —
+            // propagating is correct
+            let _g = shared.done_mx.lock().unwrap();
+            shared.done_cv.notify_all();
+        }
     }
 }
 

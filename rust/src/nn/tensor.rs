@@ -22,11 +22,15 @@ impl Default for Tensor {
 impl Tensor {
     pub fn zeros(shape: &[usize]) -> Self {
         let n: usize = shape.iter().product();
+        // tidy-allow(alloc): the constructor — hot paths reach this only
+        // through `ensure_shape` on a shape change (warm-up, not steady state)
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        // tidy-allow(alloc): constructor owns its shape by definition;
+        // hot paths only build tensors during warm-up
         Tensor { shape: shape.to_vec(), data }
     }
 
@@ -43,10 +47,17 @@ impl Tensor {
     pub fn stage_rows(&mut self, flat: &[f32], batch: usize, row_shape: &[usize]) -> &Tensor {
         let row_len: usize = row_shape.iter().product();
         assert_eq!(flat.len(), batch * row_len, "staging buffer: want {} floats", batch * row_len);
-        let mut shape = Vec::with_capacity(row_shape.len() + 1);
-        shape.push(batch);
-        shape.extend_from_slice(row_shape);
-        self.ensure_shape(&shape);
+        // steady state: same [batch, row_shape…] target — no shape build
+        let same = self.shape.len() == row_shape.len() + 1
+            && self.shape[0] == batch
+            && self.shape[1..] == *row_shape;
+        if !same {
+            // tidy-allow(alloc): shape change only — steady-state staging reuses the buffer
+            let mut shape = Vec::with_capacity(row_shape.len() + 1);
+            shape.push(batch);
+            shape.extend_from_slice(row_shape);
+            self.ensure_shape(&shape);
+        }
         self.data.copy_from_slice(flat);
         self
     }
@@ -103,6 +114,8 @@ impl Tensor {
     /// Reinterpret the shape (same element count).
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        // tidy-allow(alloc): shape metadata only (a handful of usizes),
+        // reached on pixels-path view changes, not the states loop
         self.shape = shape.to_vec();
         self
     }

@@ -131,11 +131,16 @@ impl Adam {
         }
         assert!(self.m.is_empty(), "parameter list changed size");
         for p in params {
+            // tidy-allow(alloc): first-step state init only — the early
+            // return above keeps every later step allocation-free
             self.m.push(vec![0.0; p.len()]);
+            // tidy-allow(alloc): first-step state init only
             self.w.push(vec![0.0; p.len()]);
             self.comp.push(if self.update == UpdateMode::Kahan {
+                // tidy-allow(alloc): first-step state init only
                 vec![0.0; p.len()]
             } else {
+                // tidy-allow(alloc): capacity-0 placeholder, no heap touch
                 Vec::new()
             });
         }

@@ -204,10 +204,21 @@ impl ReplayBuffer {
     /// first use) — the learner's steady-state path allocates nothing.
     pub fn sample_into(&self, batch: usize, rng: &mut Pcg64, out: &mut Batch) {
         assert!(self.len > 0, "empty replay");
-        let mut shape = vec![batch];
-        shape.extend_from_slice(&self.obs_shape);
-        out.obs.ensure_shape(&shape);
-        out.next_obs.ensure_shape(&shape);
+        // the observation tensors want shape [batch] ++ obs_shape; build
+        // that list only when the staged batch doesn't already carry it
+        let staged = out.obs.shape.len() == self.obs_shape.len() + 1
+            && out.obs.shape[0] == batch
+            && out.obs.shape[1..] == self.obs_shape[..]
+            && out.next_obs.shape == out.obs.shape;
+        if !staged {
+            // tidy-allow(alloc): batch-shape change only (first use) —
+            // the steady-state round path reuses the staged shape
+            let mut shape = Vec::with_capacity(self.obs_shape.len() + 1);
+            shape.push(batch);
+            shape.extend_from_slice(&self.obs_shape);
+            out.obs.ensure_shape(&shape);
+            out.next_obs.ensure_shape(&shape);
+        }
         out.act.ensure_shape(&[batch, self.act_dim]);
         out.rew.resize(batch, 0.0);
         out.not_done.resize(batch, 0.0);

@@ -117,6 +117,29 @@ struct UpdateWorkspace {
     fused_off: Vec<usize>,
     /// Scratch `(start, end)` group list for the round partition.
     fused_groups: Vec<(usize, usize)>,
+    /// Shape scratch for staging a fused group.
+    fused_shape: Vec<usize>,
+    /// Actor head `[B, 2A]` output staging (critic- and actor-step
+    /// forwards).
+    head: Tensor,
+    /// Inference walk scratch for the critic-step actor forward (the
+    /// actor's training caches live in `SacAgent::ws_actor`).
+    actor_inf: MlpWorkspace,
+    /// Reusable tanh-Gaussian sample cache (`forward_into` refill).
+    tg: TanhGaussian,
+    /// Target critic outputs `[B, 1]` and its inference walk scratch.
+    tq1: Tensor,
+    tq2: Tensor,
+    tgt_critic: CriticWorkspace,
+    /// Online critic outputs `[B, 1]`.
+    q1: Tensor,
+    q2: Tensor,
+    /// Critic input-gradient sinks (action slice / obs slice).
+    da: Tensor,
+    dobs: Tensor,
+    /// Actor-head gradient and its (discarded) feature-gradient sink.
+    dhead: Tensor,
+    dfeat: Tensor,
 }
 
 /// A replay minibatch. `obs`/`next_obs` are `[B, D]` states or
@@ -436,15 +459,6 @@ impl SacAgent {
         self.compute.q(self.log_alpha.w[0].exp())
     }
 
-    /// Encode a pixel batch with the online encoder (identity for state
-    /// agents). Inference-only: no gradient caches.
-    fn encode(&self, obs: &Tensor, prec: Precision) -> Tensor {
-        match self.encoder.as_ref() {
-            Some(enc) => enc.forward(obs, prec),
-            None => obs.clone(),
-        }
-    }
-
     /// Select an action for a single observation. `stochastic` samples
     /// from π; otherwise uses tanh(μ). Returns `None` (and flags
     /// `crashed`) if the action is non-finite, mirroring the paper's
@@ -453,13 +467,19 @@ impl SacAgent {
     /// This is [`SacAgent::act_batch`] with batch 1, staged through a
     /// reusable buffer — no per-call observation allocation.
     pub fn act(&mut self, obs: &[f32], stochastic: bool) -> Option<Vec<f32>> {
-        let shape: Vec<usize> = match self.pixel_shape {
+        // re-grow the staging buffer only on a shape change (first call)
+        match self.pixel_shape {
             // caller passes a flattened [C, H, W] image
-            Some((c, h)) => vec![1, c, h, h],
-            None => vec![1, obs.len()],
-        };
-        if self.act_buf.shape != shape {
-            self.act_buf = Tensor::zeros(&shape);
+            Some((c, h)) => {
+                if self.act_buf.shape != [1, c, h, h] {
+                    self.act_buf = Tensor::zeros(&[1, c, h, h]);
+                }
+            }
+            None => {
+                if self.act_buf.shape != [1, obs.len()] {
+                    self.act_buf = Tensor::zeros(&[1, obs.len()]);
+                }
+            }
         }
         self.act_buf.data.copy_from_slice(obs);
         // temporarily take the buffer so act_batch can borrow &mut self
@@ -480,8 +500,16 @@ impl SacAgent {
     /// if any action is non-finite.
     pub fn act_batch(&mut self, obs: &Tensor, stochastic: bool) -> Option<Tensor> {
         let p = self.compute;
-        let feat = self.encode(obs, p);
-        let head = self.actor.forward(&feat, p);
+        // pixel agents encode first; state agents feed obs straight in
+        let enc_feat;
+        let feat: &Tensor = match self.encoder.as_ref() {
+            Some(enc) => {
+                enc_feat = enc.forward(obs, p);
+                &enc_feat
+            }
+            None => obs,
+        };
+        let head = self.actor.forward(feat, p);
         let a = if stochastic {
             let b = head.rows();
             let mut eps = Tensor::zeros(&[b, self.cfg.act_dim]);
@@ -507,8 +535,15 @@ impl SacAgent {
         // Drawing (and shape-checking) the noise first keeps a
         // mismatched rngs slice from wasting the forward.
         let eps = super::snapshot::per_env_eps(obs.shape[0], self.cfg.act_dim, rngs);
-        let feat = self.encode(obs, p);
-        let head = self.actor.forward(&feat, p);
+        let enc_feat;
+        let feat: &Tensor = match self.encoder.as_ref() {
+            Some(enc) => {
+                enc_feat = enc.forward(obs, p);
+                &enc_feat
+            }
+            None => obs,
+        };
+        let head = self.actor.forward(feat, p);
         let a = TanhGaussian::forward(&head, &eps, self.policy_cfg(), p).a;
         self.guard_actions(a)
     }
@@ -612,19 +647,23 @@ impl SacAgent {
         let Some(tenc) = self.target_encoder.as_ref() else { return };
         let p = self.compute;
         let rows: usize = group.iter().map(|bt| bt.rew.len()).sum();
-        // stage the group's next-obs rows contiguously
-        let mut shape = vec![rows];
-        shape.extend_from_slice(&group[0].next_obs.shape[1..]);
-        ws.fused_stage.ensure_shape(&shape);
+        // stage the group's next-obs rows contiguously (shape scratch
+        // reused round after round)
+        let UpdateWorkspace { fused_stage, fused_shape, .. } = &mut *ws;
+        fused_shape.clear();
+        fused_shape.push(rows);
+        fused_shape.extend_from_slice(&group[0].next_obs.shape[1..]);
+        fused_stage.ensure_shape(fused_shape);
         let mut off = 0usize;
         for bt in group {
             let nfl = bt.next_obs.data.len();
-            ws.fused_stage.data[off..off + nfl].copy_from_slice(&bt.next_obs.data);
+            fused_stage.data[off..off + nfl].copy_from_slice(&bt.next_obs.data);
             off += nfl;
         }
         // the forward allocates its output either way; move it into the
         // workspace instead of copying
-        ws.fused_feat = tenc.forward(&ws.fused_stage, p);
+        let feat = tenc.forward(fused_stage, p);
+        ws.fused_feat = feat;
         let mut r = 0usize;
         for (jj, bt) in group.iter().enumerate() {
             ws.fused_off[base_j + jj] = r;
@@ -674,27 +713,33 @@ impl SacAgent {
             }
             None => &batch.next_obs,
         };
-        let head = self.actor.forward(feat_next_actor, p);
+        self.actor.forward_into(feat_next_actor, p, &mut ws.actor_inf, &mut ws.head);
         ws.eps.ensure_shape(&[b, self.cfg.act_dim]);
         self.rng.normal_fill(&mut ws.eps.data);
-        let tg = TanhGaussian::forward(&head, &ws.eps, self.policy_cfg(), p);
-        let tgt_feat;
-        let feat_next_tgt: &Tensor = if fused_tgt {
-            &ws.feat_tgt
-        } else {
-            match self.target_encoder.as_ref() {
-                Some(enc) => {
-                    tgt_feat = enc.forward(&batch.next_obs, p);
-                    &tgt_feat
+        {
+            let UpdateWorkspace { head, eps, tg, .. } = &mut *ws;
+            tg.forward_into(head, eps, self.policy_cfg(), p);
+        }
+        {
+            let tgt_feat;
+            let UpdateWorkspace { feat_tgt, tg, tgt_critic, tq1, tq2, .. } = &mut *ws;
+            let feat_next_tgt: &Tensor = if fused_tgt {
+                feat_tgt
+            } else {
+                match self.target_encoder.as_ref() {
+                    Some(enc) => {
+                        tgt_feat = enc.forward(&batch.next_obs, p);
+                        &tgt_feat
+                    }
+                    None => &batch.next_obs,
                 }
-                None => &batch.next_obs,
-            }
-        };
-        let (tq1, tq2) = self.target.forward(feat_next_tgt, &tg.a, p);
+            };
+            self.target.forward_into(feat_next_tgt, &tg.a, p, tgt_critic, tq1, tq2);
+        }
         ws.y.resize(b, 0.0);
         for r in 0..b {
-            let tq = tq1.data[r].min(tq2.data[r]);
-            let v = p.q(tq - p.q(alpha * tg.logp[r]));
+            let tq = ws.tq1.data[r].min(ws.tq2.data[r]);
+            let v = p.q(tq - p.q(alpha * ws.tg.logp[r]));
             ws.y[r] = p.q(batch.rew[r] + p.q(self.cfg.gamma * batch.not_done[r]) * v);
         }
 
@@ -707,31 +752,36 @@ impl SacAgent {
             }
             None => &batch.obs,
         };
-        let (q1, q2) = self.critic.forward_train(feat, &batch.act, p, &mut self.ws_critic);
+        {
+            let UpdateWorkspace { q1, q2, .. } = &mut *ws;
+            self.critic.forward_train_into(feat, &batch.act, p, &mut self.ws_critic, q1, q2);
+        }
         let scale = self.sc_critic.scale();
         let mut loss = 0.0f64;
         ws.dq1.ensure_shape(&[b, 1]);
         ws.dq2.ensure_shape(&[b, 1]);
         for r in 0..b {
-            let e1 = q1.data[r] - ws.y[r];
-            let e2 = q2.data[r] - ws.y[r];
+            let e1 = ws.q1.data[r] - ws.y[r];
+            let e2 = ws.q2.data[r] - ws.y[r];
             loss += (e1 as f64).powi(2) + (e2 as f64).powi(2);
             ws.dq1.data[r] = p.q(2.0 * e1 / b as f32 * scale);
             ws.dq2.data[r] = p.q(2.0 * e2 / b as f32 * scale);
         }
         stats.critic_loss = (loss / b as f64) as f32;
-        stats.q_mean = q1.mean();
+        stats.q_mean = ws.q1.mean();
 
         self.critic.zero_grad();
         if let Some(enc) = self.encoder.as_mut() {
             enc.zero_grad();
         }
         if self.encoder.is_some() {
-            let (dobs, _da) = self.critic.backward_full(&ws.dq1, &ws.dq2, p, &self.ws_critic);
+            let UpdateWorkspace { dq1, dq2, dobs, da, .. } = &mut *ws;
+            self.critic.backward_full_into(dq1, dq2, p, &mut self.ws_critic, dobs, da);
             // tidy-allow(panic): guarded by the `is_some()` check directly above.
-            self.encoder.as_mut().unwrap().backward(&dobs, p, &self.ws_encoder);
+            self.encoder.as_mut().unwrap().backward(dobs, p, &self.ws_encoder);
         } else {
-            let _ = self.critic.backward(&ws.dq1, &ws.dq2, p, &self.ws_critic);
+            let UpdateWorkspace { dq1, dq2, da, .. } = &mut *ws;
+            self.critic.backward_into(dq1, dq2, p, &mut self.ws_critic, da);
         }
 
         if self.methods.coerce {
@@ -771,11 +821,17 @@ impl SacAgent {
             }
             None => &batch.obs,
         };
-        let head = self.actor.forward_train(feat, p, &mut self.ws_actor);
+        self.actor.forward_train_into(feat, p, &mut self.ws_actor, &mut ws.head);
         ws.eps.ensure_shape(&[b, self.cfg.act_dim]);
         self.rng.normal_fill(&mut ws.eps.data);
-        let tg = TanhGaussian::forward(&head, &ws.eps, self.policy_cfg(), p);
-        let (q1, q2) = self.critic.forward_train(feat, &tg.a, p, &mut self.ws_critic);
+        {
+            let UpdateWorkspace { head, eps, tg, .. } = &mut *ws;
+            tg.forward_into(head, eps, self.policy_cfg(), p);
+        }
+        {
+            let UpdateWorkspace { tg, q1, q2, .. } = &mut *ws;
+            self.critic.forward_train_into(feat, &tg.a, p, &mut self.ws_critic, q1, q2);
+        }
 
         let scale = self.sc_actor.scale();
         let mut loss = 0.0f64;
@@ -785,10 +841,10 @@ impl SacAgent {
         ws.dq2.data.fill(0.0);
         let coef = p.q(scale / b as f32);
         for r in 0..b {
-            let qmin = q1.data[r].min(q2.data[r]);
-            loss += (alpha * tg.logp[r] - qmin) as f64;
+            let qmin = ws.q1.data[r].min(ws.q2.data[r]);
+            loss += (alpha * ws.tg.logp[r] - qmin) as f64;
             // d(-qmin)/dq: route to the smaller head
-            if q1.data[r] <= q2.data[r] {
+            if ws.q1.data[r] <= ws.q2.data[r] {
                 ws.dq1.data[r] = -coef;
             } else {
                 ws.dq2.data[r] = -coef;
@@ -796,16 +852,25 @@ impl SacAgent {
         }
         stats.actor_loss = (loss / b as f64) as f32;
         stats.logp_mean =
-            tg.logp.iter().map(|&v| v as f64).sum::<f64>() as f32 / b as f32;
+            ws.tg.logp.iter().map(|&v| v as f64).sum::<f64>() as f32 / b as f32;
 
         // dQ/da through the critic (param grads discarded afterwards)
         self.critic.zero_grad();
-        let da = self.critic.backward(&ws.dq1, &ws.dq2, p, &self.ws_critic);
+        {
+            let UpdateWorkspace { dq1, dq2, da, .. } = &mut *ws;
+            self.critic.backward_into(dq1, dq2, p, &mut self.ws_critic, da);
+        }
         ws.coefs.clear();
         ws.coefs.resize(b, p.q(alpha * coef));
-        let dhead = tg.backward(&ws.coefs, Some(&da));
+        {
+            let UpdateWorkspace { tg, coefs, da, dhead, .. } = &mut *ws;
+            tg.backward_into(coefs, Some(&*da), dhead);
+        }
         self.actor.zero_grad();
-        let _ = self.actor.backward(&dhead, p, &self.ws_actor);
+        {
+            let UpdateWorkspace { dhead, dfeat, .. } = &mut *ws;
+            self.actor.backward_into(dhead, p, &mut self.ws_actor, dfeat);
+        }
         self.critic.zero_grad(); // discard critic grads from this pass
 
         if self.methods.coerce {
@@ -825,7 +890,8 @@ impl SacAgent {
 
         // -- temperature ------------------------------------------------
         // L(α) = −α · mean(logπ + H̄)  (logπ detached)
-        let mean_term = tg
+        let mean_term = ws
+            .tg
             .logp
             .iter()
             .map(|&lp| (lp + self.cfg.target_entropy) as f64)

@@ -8,11 +8,17 @@ use crate::rngs::Pcg64;
 
 /// Training-time caches for one [`Critic`] (one [`MlpWorkspace`] per
 /// head). Populated by [`Critic::forward_train`], read by the backward
-/// passes.
+/// passes. The `join`/`dx1`/`dx2` slots are staging scratch for the
+/// allocation-free `_into` walks, reused across update rounds.
 #[derive(Debug, Clone, Default)]
 pub struct CriticWorkspace {
     q1: MlpWorkspace,
     q2: MlpWorkspace,
+    /// `[obs | act]` staging rows for the `_into` forwards.
+    join: Tensor,
+    /// Per-head input-gradient sinks for the `_into` backwards.
+    dx1: Tensor,
+    dx2: Tensor,
 }
 
 /// Twin Q-networks.
@@ -37,15 +43,25 @@ impl Critic {
 
     /// Concatenate `[obs | act]` rows.
     pub fn join(obs: &Tensor, act: &Tensor) -> Tensor {
+        // allocating wrapper for tests/cold callers — the learner hot
+        // path stages into `CriticWorkspace::join` via `join_into`
+        let mut x = Tensor::default();
+        Self::join_into(obs, act, &mut x);
+        x
+    }
+
+    /// Allocation-free twin of [`Critic::join`]: every element of the
+    /// `[B, obs+act]` output is overwritten, so reusing the buffer is
+    /// bitwise identical to filling a fresh zeros tensor.
+    pub fn join_into(obs: &Tensor, act: &Tensor, out: &mut Tensor) {
         let b = obs.rows();
         assert_eq!(act.rows(), b);
         let (od, ad) = (obs.cols(), act.cols());
-        let mut x = Tensor::zeros(&[b, od + ad]);
+        out.ensure_shape(&[b, od + ad]);
         for r in 0..b {
-            x.row_mut(r)[..od].copy_from_slice(obs.row(r));
-            x.row_mut(r)[od..].copy_from_slice(act.row(r));
+            out.row_mut(r)[..od].copy_from_slice(obs.row(r));
+            out.row_mut(r)[od..].copy_from_slice(act.row(r));
         }
-        x
     }
 
     /// Inference forward of both heads (`&self`, cache-free — used for
@@ -56,8 +72,28 @@ impl Critic {
     /// halving pool round-trips per critic forward while staying
     /// bitwise identical to two sequential head forwards.
     pub fn forward(&self, obs: &Tensor, act: &Tensor, prec: Precision) -> (Tensor, Tensor) {
+        // allocating walk for cold/shared-`&self` callers — the learner
+        // hot path uses `forward_into` (workspace staging)
         let x = Self::join(obs, act);
         Mlp::forward_pair(&self.q1, &self.q2, &x, prec)
+    }
+
+    /// Allocation-free twin of [`Critic::forward`]: joins into the
+    /// workspace staging buffer and walks both heads via the paired
+    /// inference dispatch, the outputs landing in `q1`/`q2`. Bitwise
+    /// identical.
+    pub fn forward_into(
+        &self,
+        obs: &Tensor,
+        act: &Tensor,
+        prec: Precision,
+        ws: &mut CriticWorkspace,
+        q1: &mut Tensor,
+        q2: &mut Tensor,
+    ) {
+        let CriticWorkspace { q1: w1, q2: w2, join, .. } = ws;
+        Self::join_into(obs, act, join);
+        Mlp::forward_pair_into(&self.q1, &self.q2, join, prec, w1, w2, q1, q2);
     }
 
     /// Training forward: caches activations into `ws` for the backward
@@ -70,8 +106,26 @@ impl Critic {
         prec: Precision,
         ws: &mut CriticWorkspace,
     ) -> (Tensor, Tensor) {
-        let x = Self::join(obs, act);
-        Mlp::forward_train_pair(&self.q1, &self.q2, &x, prec, &mut ws.q1, &mut ws.q2)
+        let (mut q1, mut q2) = (Tensor::default(), Tensor::default());
+        self.forward_train_into(obs, act, prec, ws, &mut q1, &mut q2);
+        (q1, q2)
+    }
+
+    /// Allocation-free twin of [`Critic::forward_train`]: the staging
+    /// join, both heads' caches, and the outputs all reuse their buffers
+    /// whenever the shapes repeat.
+    pub fn forward_train_into(
+        &self,
+        obs: &Tensor,
+        act: &Tensor,
+        prec: Precision,
+        ws: &mut CriticWorkspace,
+        q1: &mut Tensor,
+        q2: &mut Tensor,
+    ) {
+        let CriticWorkspace { q1: w1, q2: w2, join, .. } = ws;
+        Self::join_into(obs, act, join);
+        Mlp::forward_train_pair_into(&self.q1, &self.q2, join, prec, w1, w2, q1, q2);
     }
 
     /// Backward from per-head output grads; returns the gradient w.r.t.
@@ -84,17 +138,51 @@ impl Critic {
         prec: Precision,
         ws: &CriticWorkspace,
     ) -> Tensor {
+        // allocating walk for tests/cold callers — the learner hot path
+        // uses `backward_into` (workspace gradient sinks)
         let dx1 = self.q1.backward(dq1, prec, &ws.q1);
         let dx2 = self.q2.backward(dq2, prec, &ws.q2);
         let b = dx1.rows();
         let mut da = Tensor::zeros(&[b, self.act_dim]);
-        for r in 0..b {
-            for i in 0..self.act_dim {
-                da.data[r * self.act_dim + i] = prec
-                    .q(dx1.row(r)[self.obs_dim + i] + dx2.row(r)[self.obs_dim + i]);
+        Self::sum_action_slice(&dx1, &dx2, self.obs_dim, self.act_dim, prec, &mut da);
+        da
+    }
+
+    /// Allocation-free twin of [`Critic::backward`]: per-head input
+    /// gradients land in workspace scratch and the summed action-slice
+    /// gradient lands in `da` (every element overwritten). Bitwise
+    /// identical.
+    pub fn backward_into(
+        &mut self,
+        dq1: &Tensor,
+        dq2: &Tensor,
+        prec: Precision,
+        ws: &mut CriticWorkspace,
+        da: &mut Tensor,
+    ) {
+        let CriticWorkspace { q1: w1, q2: w2, dx1, dx2, .. } = ws;
+        self.q1.backward_into(dq1, prec, w1, dx1);
+        self.q2.backward_into(dq2, prec, w2, dx2);
+        da.ensure_shape(&[dx1.rows(), self.act_dim]);
+        Self::sum_action_slice(dx1, dx2, self.obs_dim, self.act_dim, prec, da);
+    }
+
+    /// `da[r,i] = q(dx1[r, obs+i] + dx2[r, obs+i])` — the action slice of
+    /// the summed joined-input gradients.
+    fn sum_action_slice(
+        dx1: &Tensor,
+        dx2: &Tensor,
+        obs_dim: usize,
+        act_dim: usize,
+        prec: Precision,
+        da: &mut Tensor,
+    ) {
+        for r in 0..dx1.rows() {
+            for i in 0..act_dim {
+                da.data[r * act_dim + i] =
+                    prec.q(dx1.row(r)[obs_dim + i] + dx2.row(r)[obs_dim + i]);
             }
         }
-        da
     }
 
     /// Like [`Critic::backward`], but also returns the gradient w.r.t.
@@ -106,22 +194,61 @@ impl Critic {
         prec: Precision,
         ws: &CriticWorkspace,
     ) -> (Tensor, Tensor) {
+        // allocating walk for tests/cold callers — the pixels learner
+        // uses `backward_full_into` (workspace gradient sinks)
         let dx1 = self.q1.backward(dq1, prec, &ws.q1);
         let dx2 = self.q2.backward(dq2, prec, &ws.q2);
         let b = dx1.rows();
         let mut dobs = Tensor::zeros(&[b, self.obs_dim]);
         let mut da = Tensor::zeros(&[b, self.act_dim]);
-        for r in 0..b {
-            for i in 0..self.obs_dim {
-                dobs.data[r * self.obs_dim + i] =
-                    prec.q(dx1.row(r)[i] + dx2.row(r)[i]);
+        Self::split_joined_grads(&dx1, &dx2, self.obs_dim, self.act_dim, prec, &mut dobs, &mut da);
+        (dobs, da)
+    }
+
+    /// Allocation-free twin of [`Critic::backward_full`]: both output
+    /// gradients land in caller buffers (every element overwritten).
+    /// Bitwise identical.
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward_full_into(
+        &mut self,
+        dq1: &Tensor,
+        dq2: &Tensor,
+        prec: Precision,
+        ws: &mut CriticWorkspace,
+        dobs: &mut Tensor,
+        da: &mut Tensor,
+    ) {
+        let CriticWorkspace { q1: w1, q2: w2, dx1, dx2, .. } = ws;
+        self.q1.backward_into(dq1, prec, w1, dx1);
+        self.q2.backward_into(dq2, prec, w2, dx2);
+        let b = dx1.rows();
+        dobs.ensure_shape(&[b, self.obs_dim]);
+        da.ensure_shape(&[b, self.act_dim]);
+        Self::split_joined_grads(dx1, dx2, self.obs_dim, self.act_dim, prec, dobs, da);
+    }
+
+    /// Split the summed joined-input gradients into their obs and action
+    /// slices: `dobs[r,i] = q(dx1[r,i]+dx2[r,i])`, `da` as in
+    /// [`Critic::sum_action_slice`].
+    #[allow(clippy::too_many_arguments)]
+    fn split_joined_grads(
+        dx1: &Tensor,
+        dx2: &Tensor,
+        obs_dim: usize,
+        act_dim: usize,
+        prec: Precision,
+        dobs: &mut Tensor,
+        da: &mut Tensor,
+    ) {
+        for r in 0..dx1.rows() {
+            for i in 0..obs_dim {
+                dobs.data[r * obs_dim + i] = prec.q(dx1.row(r)[i] + dx2.row(r)[i]);
             }
-            for i in 0..self.act_dim {
-                da.data[r * self.act_dim + i] =
-                    prec.q(dx1.row(r)[self.obs_dim + i] + dx2.row(r)[self.obs_dim + i]);
+            for i in 0..act_dim {
+                da.data[r * act_dim + i] =
+                    prec.q(dx1.row(r)[obs_dim + i] + dx2.row(r)[obs_dim + i]);
             }
         }
-        (dobs, da)
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {

@@ -164,6 +164,8 @@ impl Encoder {
         let g = self.head.backward(&g, prec, &ws.head);
         // reshape to conv output shape
         let n = self.convs.len();
+        // tidy-allow(alloc): pixels-path shape metadata (4 usizes);
+        // workspace reuse is a ROADMAP carryover
         let last_shape = ws.pre_relu[n - 1].shape.clone();
         let mut g = g.reshape(&last_shape);
         for i in (0..n).rev() {

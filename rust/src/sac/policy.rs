@@ -80,7 +80,9 @@ pub fn softplus_neg2u_grad(x: f32, fix: bool, k: f32, p: Precision) -> f32 {
 }
 
 /// Forward result + caches of the tanh-Gaussian head over a batch.
-#[derive(Debug, Clone)]
+/// `Default` gives an empty sample cache for
+/// [`TanhGaussian::forward_into`] to fill in place.
+#[derive(Debug, Clone, Default)]
 pub struct TanhGaussian {
     /// Pre-squash sample `u = μ + ε σ`, shape `[B, A]`.
     pub u: Tensor,
@@ -97,65 +99,80 @@ pub struct TanhGaussian {
     sigma: Vec<f32>,
     exp_ls: Vec<f32>, // dσ/d(log σ)
     t_bound: Vec<f32>, // tanh(raw log σ) for the bound backward
+    ls: Vec<f32>, // log σ forward scratch
 }
 
 impl TanhGaussian {
     /// `head` is the trunk output `[B, 2A]` = `[μ | raw log σ]`;
     /// `eps` is standard normal noise `[B, A]`.
     pub fn forward(head: &Tensor, eps: &Tensor, cfg: PolicyCfg, prec: Precision) -> Self {
+        let mut tg = TanhGaussian::default();
+        tg.forward_into(head, eps, cfg, prec);
+        tg
+    }
+
+    /// Allocation-free twin of [`TanhGaussian::forward`]: refills this
+    /// sample cache in place, reusing every buffer whenever the batch
+    /// shape repeats (each slot is resized then fully overwritten).
+    /// Bitwise identical — same per-element ops in the same order.
+    pub fn forward_into(&mut self, head: &Tensor, eps: &Tensor, cfg: PolicyCfg, prec: Precision) {
         let b = head.rows();
         let two_a = head.cols();
         assert_eq!(two_a % 2, 0);
         let a_dim = two_a / 2;
-        assert_eq!(eps.shape, vec![b, a_dim]);
+        assert_eq!(eps.shape, [b, a_dim]);
         let p = prec;
+        self.cfg = cfg;
+        self.prec = prec;
+        self.act_dim = a_dim;
 
         let n = b * a_dim;
-        let mut mu = vec![0.0f32; n];
-        let mut sigma = vec![0.0f32; n];
-        let mut exp_ls = vec![0.0f32; n];
-        let mut t_bound = vec![0.0f32; n];
-        let mut ls = vec![0.0f32; n];
+        self.mu.resize(n, 0.0);
+        self.sigma.resize(n, 0.0);
+        self.exp_ls.resize(n, 0.0);
+        self.t_bound.resize(n, 0.0);
+        self.ls.resize(n, 0.0);
+        self.eps.clone_from(&eps.data);
         let half_range = p.q(0.5 * (cfg.log_sig_hi - cfg.log_sig_lo));
         for r in 0..b {
             let row = head.row(r);
             for i in 0..a_dim {
                 let idx = r * a_dim + i;
-                mu[idx] = row[i];
+                self.mu[idx] = row[i];
                 let raw = row[a_dim + i];
                 let t = p.q(raw.tanh());
-                t_bound[idx] = t;
+                self.t_bound[idx] = t;
                 // log σ = lo + (hi-lo)/2 · (tanh(raw)+1)
-                ls[idx] = p.q(cfg.log_sig_lo + half_range * p.q(t + 1.0));
-                let e = p.q(ls[idx].exp());
-                exp_ls[idx] = e;
-                sigma[idx] = p.q(e + cfg.sigma_eps);
+                self.ls[idx] = p.q(cfg.log_sig_lo + half_range * p.q(t + 1.0));
+                let e = p.q(self.ls[idx].exp());
+                self.exp_ls[idx] = e;
+                self.sigma[idx] = p.q(e + cfg.sigma_eps);
             }
         }
 
-        let mut u = Tensor::zeros(&[b, a_dim]);
-        let mut a = Tensor::zeros(&[b, a_dim]);
-        let mut logp = vec![0.0f32; b];
+        self.u.ensure_shape(&[b, a_dim]);
+        self.a.ensure_shape(&[b, a_dim]);
+        self.logp.resize(b, 0.0);
         for r in 0..b {
             let mut acc = 0.0f32;
             for i in 0..a_dim {
                 let idx = r * a_dim + i;
                 let ev = eps.data[idx];
-                let uv = p.q(mu[idx] + p.q(ev * sigma[idx]));
-                u.data[idx] = uv;
-                a.data[idx] = p.q(uv.tanh());
+                let uv = p.q(self.mu[idx] + p.q(ev * self.sigma[idx]));
+                self.u.data[idx] = uv;
+                self.a.data[idx] = p.q(uv.tanh());
 
                 // Normal log-density (up to the constant)
                 let nl = if cfg.normal_fix {
-                    let rr = p.q(p.q(uv - mu[idx]) / sigma[idx]);
+                    let rr = p.q(p.q(uv - self.mu[idx]) / self.sigma[idx]);
                     let r2 = p.q(rr * rr);
-                    p.q(-0.5 * r2 - ls[idx] - HALF_LOG_2PI)
+                    p.q(-0.5 * r2 - self.ls[idx] - HALF_LOG_2PI)
                 } else {
-                    let d = p.q(uv - mu[idx]);
+                    let d = p.q(uv - self.mu[idx]);
                     let d2 = p.q(d * d);
-                    let s2 = p.q(sigma[idx] * sigma[idx]);
+                    let s2 = p.q(self.sigma[idx] * self.sigma[idx]);
                     let r2 = p.q(d2 / s2);
-                    p.q(-0.5 * r2 - ls[idx] - HALF_LOG_2PI)
+                    p.q(-0.5 * r2 - self.ls[idx] - HALF_LOG_2PI)
                 };
 
                 // tanh correction: log(1-a²) = 2(log2 - u - softplus(-2u))
@@ -165,21 +182,7 @@ impl TanhGaussian {
 
                 acc += p.q(nl - tc);
             }
-            logp[r] = p.q(acc);
-        }
-
-        TanhGaussian {
-            u,
-            a,
-            logp,
-            cfg,
-            prec,
-            act_dim: a_dim,
-            mu,
-            eps: eps.data.clone(),
-            sigma,
-            exp_ls,
-            t_bound,
+            self.logp[r] = p.q(acc);
         }
     }
 
@@ -187,13 +190,24 @@ impl TanhGaussian {
     /// is ∂loss/∂a (the Q-value path of the actor loss). Returns the
     /// gradient w.r.t. the trunk head `[B, 2A]`.
     pub fn backward(&self, coef_logp: &[f32], da: Option<&Tensor>) -> Tensor {
+        // allocating wrapper for tests/cold callers — the learner hot
+        // path uses `backward_into` (workspace gradient buffer)
+        let mut dhead = Tensor::default();
+        self.backward_into(coef_logp, da, &mut dhead);
+        dhead
+    }
+
+    /// Allocation-free twin of [`TanhGaussian::backward`]: the head
+    /// gradient lands in `dhead` (every element overwritten). Bitwise
+    /// identical.
+    pub fn backward_into(&self, coef_logp: &[f32], da: Option<&Tensor>, dhead: &mut Tensor) {
         let p = self.prec;
         let b = self.logp.len();
         let a_dim = self.act_dim;
         assert_eq!(coef_logp.len(), b);
         let cfg = &self.cfg;
         let half_range = p.q(0.5 * (cfg.log_sig_hi - cfg.log_sig_lo));
-        let mut dhead = Tensor::zeros(&[b, 2 * a_dim]);
+        dhead.ensure_shape(&[b, 2 * a_dim]);
 
         for r in 0..b {
             let coef = coef_logp[r];
@@ -254,20 +268,28 @@ impl TanhGaussian {
                 dhead.data[r * 2 * a_dim + a_dim + i] = graw;
             }
         }
-        dhead
     }
 
     /// Deterministic action `tanh(μ)` (evaluation-time policy).
     pub fn mean_action(head: &Tensor, prec: Precision) -> Tensor {
+        // allocating wrapper for cold callers — the serving hot path
+        // uses `mean_action_into` (reused action buffer)
+        let mut a = Tensor::default();
+        Self::mean_action_into(head, prec, &mut a);
+        a
+    }
+
+    /// Allocation-free twin of [`TanhGaussian::mean_action`]: the action
+    /// lands in `a` (every element overwritten). Bitwise identical.
+    pub fn mean_action_into(head: &Tensor, prec: Precision, a: &mut Tensor) {
         let b = head.rows();
         let a_dim = head.cols() / 2;
-        let mut a = Tensor::zeros(&[b, a_dim]);
+        a.ensure_shape(&[b, a_dim]);
         for r in 0..b {
             for i in 0..a_dim {
                 a.data[r * a_dim + i] = prec.q(head.row(r)[i].tanh());
             }
         }
-        a
     }
 }
 

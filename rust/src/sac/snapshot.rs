@@ -89,7 +89,9 @@ impl Policy {
             batch * self.obs_len
         );
         match self.pixel_shape {
+            // tidy-allow(alloc): allocating wrapper; hot callers use stage_obs
             Some((c, h)) => Tensor::from_vec(&[batch, c, h, h], flat.to_vec()),
+            // tidy-allow(alloc): allocating wrapper; hot callers use stage_obs
             None => Tensor::from_vec(&[batch, self.obs_len], flat.to_vec()),
         }
     }

@@ -49,6 +49,7 @@ impl PolicyBackend for NativeBackend {
 
     fn act_batch(&self, obs: &[f32], batch: usize) -> Result<Vec<f32>, String> {
         if obs.len() != batch * self.policy.obs_len() {
+            // tidy-allow(alloc): error path of the serve boundary
             return Err(format!(
                 "native backend: want {} floats for batch {batch}, got {}",
                 batch * self.policy.obs_len(),
@@ -97,6 +98,7 @@ impl PolicyBackend for PjrtBackend {
 
     fn act_batch(&self, obs: &[f32], batch: usize) -> Result<Vec<f32>, String> {
         if obs.len() != batch * self.obs_dim {
+            // tidy-allow(alloc): error path of the serve boundary
             return Err(format!(
                 "pjrt backend: want {} floats for batch {batch}, got {}",
                 batch * self.obs_dim,
@@ -104,7 +106,9 @@ impl PolicyBackend for PjrtBackend {
             ));
         }
         let mut sess = self.sess.lock().map_err(|e| e.to_string())?;
+        // tidy-allow(alloc): per-request buffers at the serve/runtime boundary
         let eps = vec![0.0f32; self.act_dim];
+        // tidy-allow(alloc): owned reply buffer crosses back to the server thread
         let mut out = Vec::with_capacity(batch * self.act_dim);
         for r in 0..batch {
             let a = sess

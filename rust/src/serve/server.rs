@@ -163,6 +163,8 @@ impl ServeClient {
             return Err(ServeError::BadObsLen { want: self.obs_dim, got: obs.len() });
         }
         let (rtx, rrx) = mpsc::sync_channel(1);
+        // tidy-allow(alloc): the request's obs must be owned to cross the
+        // channel to the batcher thread
         let req = Request { obs: obs.to_vec(), enqueued: Instant::now(), reply: rtx };
         self.tx.send(Msg::Req(req)).map_err(|_| ServeError::Closed)?;
         match rrx.recv() {
@@ -233,6 +235,8 @@ fn flush_batch(
         return;
     }
     let b = pending.len();
+    // tidy-allow(alloc): per-flush staging buffer sized by the batch that
+    // actually coalesced; requests are owned rows from other threads
     let mut flat = Vec::with_capacity(b * obs_dim);
     for r in pending.iter() {
         flat.extend_from_slice(&r.obs);
@@ -243,6 +247,8 @@ fn flush_batch(
     match result {
         Ok(acts) => {
             for (i, req) in pending.drain(..).enumerate() {
+                // tidy-allow(alloc): the reply must be owned to cross the
+                // channel back to the requesting thread
                 let a = acts[i * act_dim..(i + 1) * act_dim].to_vec();
                 if a.iter().all(|v| v.is_finite()) {
                     metrics.record_request(req.enqueued.elapsed());
@@ -256,6 +262,7 @@ fn flush_batch(
         Err(e) => {
             for req in pending.drain(..) {
                 metrics.record_error();
+                // tidy-allow(alloc): error fan-out clones the message per requester
                 let _ = req.reply.send(Err(ServeError::Backend(e.clone())));
             }
         }

@@ -113,6 +113,12 @@ fn assert_agents_bitwise_equal(a: &mut SacAgent, b: &mut SacAgent, label: &str) 
 
 /// Fused round updates vs one-at-a-time updates on identical batch
 /// streams: the whole agent state must match bitwise, for every preset.
+///
+/// This pins the fused hot path end-to-end against the sequential
+/// reference (tracked by the lprl-tidy parity pass):
+// parity: fuse_group — batch-group fusion inside the update round
+// parity: forward_pair, forward_train_pair — fused critic-pair forwards
+// parity: run_spans, run_chunked — pooled optimizer spans and chunked gemm claiming
 #[test]
 fn fused_rounds_match_sequential_updates_across_presets() {
     for pixels in [false, true] {

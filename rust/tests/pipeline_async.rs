@@ -36,6 +36,7 @@ fn xs(o: &TrainOutcome) -> Vec<f64> {
     o.eval_curve.points.iter().map(|p| p.0).collect()
 }
 
+// parity: par_step_into — pooled env stepping feeds the async collector
 #[test]
 fn async_runs_are_bitwise_deterministic_in_the_seed() {
     let cfg = base_cfg();

@@ -1,0 +1,17 @@
+// Known-bad fixture: an allocation in a fn reachable from the hot
+// learner entry point, with no tidy-allow(alloc) escape.
+
+pub struct SacAgent {
+    buf: Vec<f32>,
+}
+
+impl SacAgent {
+    pub fn update_round(&mut self) {
+        self.scratch();
+    }
+
+    fn scratch(&mut self) {
+        let v: Vec<f32> = Vec::with_capacity(64);
+        self.buf.extend_from_slice(&v);
+    }
+}

@@ -1,0 +1,25 @@
+// Known-bad fixture: the loop re-locks `done` on every wakeup while
+// parked on the condvar guarding `job` — the waker needing `done` can
+// be starved by the sleeper.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Queue {
+    job: Mutex<u32>,
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Queue {
+    pub fn drain(&self) {
+        let mut g = self.job.lock().unwrap();
+        loop {
+            let d = self.done.lock().unwrap();
+            if *d {
+                break;
+            }
+            drop(d);
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}

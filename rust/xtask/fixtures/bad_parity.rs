@@ -1,0 +1,10 @@
+// Known-bad fixture: a test tree that pins some fused APIs but never
+// references `fuse_group` (or most of the others) — the parity pass
+// must flag every uncovered API.
+
+#[test]
+fn pooled_runs_match_serial() {
+    // parity: run_spans
+    // parity: run_chunked
+    run_all_backends();
+}

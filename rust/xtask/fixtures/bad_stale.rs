@@ -1,0 +1,13 @@
+// Known-bad fixture: well-formed tidy-allow escapes whose target line
+// no longer contains anything the named rule would fire on.
+
+pub fn peek(m: &std::sync::Mutex<u32>) -> u32 {
+    // tidy-allow(panic): poisoned lock propagates a prior panic
+    let g = m.lock();
+    g.map(|v| *v).unwrap_or(0)
+}
+
+pub fn double(x: f32) -> f32 {
+    let y = x * 2.0; // tidy-allow(precision): stale inline escape
+    y
+}

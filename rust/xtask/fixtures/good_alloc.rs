@@ -1,0 +1,35 @@
+// Known-good fixture: the hot path writes into preallocated scratch;
+// cold construction allocates freely (unreachable from the hot roots),
+// and the one warm-path allocation carries an audited escape.
+
+pub struct SacAgent {
+    buf: Vec<f32>,
+}
+
+impl SacAgent {
+    /// Cold constructor — not reachable from `update_round`, so its
+    /// allocations are fine without an escape.
+    pub fn new(cap: usize) -> SacAgent {
+        SacAgent { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn update_round(&mut self) {
+        self.step();
+        self.warm();
+    }
+
+    fn step(&mut self) {
+        self.buf.fill(0.0);
+    }
+
+    fn warm(&mut self) {
+        // tidy-allow(alloc): one-time warmup buffer, reused afterwards
+        let w: Vec<f32> = Vec::with_capacity(8);
+        self.buf.extend_from_slice(&w);
+    }
+}
+
+/// Free fn that allocates but is reachable from no hot entry point.
+pub fn cold_report() -> String {
+    format!("buffered")
+}

@@ -1,0 +1,42 @@
+// Known-good fixture: every function acquires `a` before `b`, and the
+// worker shape is legal — the inner wait loop only waits on the condvar
+// of the lock it re-acquires (`job`); the outer loop touching `done`
+// afterwards is a different (outer) loop, which the innermost-loop
+// scoping of the condvar rule deliberately permits.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct Pool {
+    a: Mutex<u32>,
+    b: Mutex<u32>,
+    job: Mutex<Option<u32>>,
+    done: Mutex<u32>,
+    cv: Condvar,
+}
+
+impl Pool {
+    pub fn sum(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *ga + *gb
+    }
+
+    pub fn diff(&self) -> u32 {
+        let ga = self.a.lock().unwrap();
+        let gb = self.b.lock().unwrap();
+        *ga - *gb
+    }
+
+    pub fn worker_loop(&self) {
+        loop {
+            let mut g = self.job.lock().unwrap();
+            while g.is_none() {
+                g = self.cv.wait(g).unwrap();
+            }
+            let task = g.take();
+            drop(g);
+            let mut d = self.done.lock().unwrap();
+            *d += task.unwrap_or(0);
+        }
+    }
+}

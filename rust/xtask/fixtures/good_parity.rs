@@ -1,0 +1,25 @@
+// Known-good fixture: every fused API under the parity contract is
+// referenced — some by direct call, some by `// parity:` marker next to
+// the test that covers the API indirectly.
+
+#[test]
+fn pair_forwards_match_sequential() {
+    check(net.forward_pair(&a, &b));
+    check(net.forward_train_pair(&a, &b));
+}
+
+#[test]
+fn pooled_backends_match_serial() {
+    // parity: run_spans
+    // parity: run_chunked
+    // parity: fuse_group
+    // parity: par_step_into
+    run_all_backends();
+}
+
+#[test]
+fn serve_and_replay_match_reference() {
+    // parity: act_batch
+    // parity: sample_round_into
+    serve_round();
+}

@@ -1,0 +1,11 @@
+// Known-good fixture: every tidy-allow escape still covers a line the
+// named rule would fire on — none are stale.
+
+pub fn peek(m: &std::sync::Mutex<u32>) -> u32 {
+    // tidy-allow(panic): poisoned lock propagates a prior panic
+    *m.lock().unwrap()
+}
+
+pub fn fingerprint(v: f32) -> u32 {
+    v.to_bits() // tidy-allow(precision): hashing the pattern — no rounding decision
+}

@@ -1,0 +1,70 @@
+//! Hot-path allocation lint: no function reachable from the hot entry
+//! points may contain an allocating expression unless the line carries
+//! a `// tidy-allow(alloc): <reason>` escape.
+//!
+//! Matching is plain-substring over blanked code (not token-bounded):
+//! `.clone()` must not match `clone_from`, but `vec!` must match
+//! `vec![`. Known miss, documented in INVARIANTS.md: a turbofished
+//! `.collect::<Vec<_>>()` does not match `.collect()`.
+
+use crate::graph::{hot_reachability, owned_by_nested};
+use crate::parse::FnItem;
+use crate::scan::{allowed, SourceFile};
+use crate::Diag;
+use std::collections::BTreeSet;
+
+/// Expressions that take the heap lock. Sanctioned allocation-free
+/// idioms (`.push` into reserved capacity, `ensure_shape`,
+/// `clone_from`, `fill`, `extend_from_slice`) are deliberately absent.
+pub const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec!",
+    "with_capacity",
+    ".to_vec()",
+    ".collect()",
+    ".clone()",
+    "Box::new",
+    "format!",
+];
+
+/// True if `code` contains any allocating expression.
+pub fn has_alloc_token(code: &str) -> bool {
+    ALLOC_TOKENS.iter().any(|t| code.contains(t))
+}
+
+/// Run the allocation lint over the parsed source tree.
+pub fn alloc_pass(
+    files: &[SourceFile],
+    fns: &[FnItem],
+    edges: &[BTreeSet<usize>],
+) -> Vec<Diag> {
+    let reach = hot_reachability(fns, edges);
+    let mut diags = Vec::new();
+    for (idx, f) in fns.iter().enumerate() {
+        let Some(via) = &reach[idx] else { continue };
+        let file = &files[f.file];
+        let end = f.body_end.unwrap_or(file.lines.len().saturating_sub(1));
+        for li in f.sig_line..=end.min(file.lines.len().saturating_sub(1)) {
+            if file.mask[li] || owned_by_nested(fns, idx, li) {
+                continue;
+            }
+            let code = &file.lines[li].code;
+            for tok in ALLOC_TOKENS {
+                if code.contains(tok) && !allowed(&file.lines, li, "alloc") {
+                    diags.push(Diag {
+                        file: file.rel.clone(),
+                        line: li + 1,
+                        rule: "alloc",
+                        msg: format!(
+                            "`{tok}` in hot fn `{}` (reachable from `{via}`); make it \
+                             allocation-free or escape with `// tidy-allow(alloc): <reason>`",
+                            f.key()
+                        ),
+                    });
+                    break; // one alloc diag per line
+                }
+            }
+        }
+    }
+    diags
+}

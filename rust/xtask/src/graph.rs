@@ -1,0 +1,222 @@
+//! Intra-crate call-graph approximation over the parsed `fn` items,
+//! and the hot-entry set the allocation lint starts from.
+//!
+//! Resolution is name-based and deliberately over-approximate (an
+//! unresolvable receiver type falls back to "every impl fn with that
+//! name"), which is the safe direction for a lint: a spurious edge can
+//! only make the checker ask for an annotation, never miss a real
+//! allocation. Three call shapes are recognized on each blanked line:
+//!
+//! * `.m(`        — method: every impl fn named `m`
+//! * `Type::m(`   — qualified: fns in `impl Type` (`Self` resolves to
+//!   the enclosing impl type; an unknown `Type` resolves to nothing)
+//! * `m(`         — bare: free fns named `m`, plus same-impl siblings
+//!
+//! Macros (`name!(`) and the `fn` keyword of a signature are excluded.
+
+use crate::parse::FnItem;
+use crate::scan::SourceFile;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "let", "mut", "fn", "pub", "impl",
+    "trait", "struct", "enum", "use", "mod", "const", "static", "ref", "move", "in", "as",
+    "break", "continue", "where", "unsafe", "dyn", "type", "crate", "super", "self", "Self",
+    "true", "false",
+];
+
+/// One call site extracted from a line of blanked code.
+pub enum Call {
+    Method(String),
+    Qualified(Option<String>, String),
+    Bare(String),
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Trailing identifier of `s`, if `s` ends with one.
+fn last_ident(s: &str) -> Option<&str> {
+    let e = s.len();
+    let b = s.rfind(|c: char| !is_ident_char(c)).map_or(0, |p| p + c_len(s, p));
+    (b < e).then(|| &s[b..e])
+}
+
+fn c_len(s: &str, p: usize) -> usize {
+    s[p..].chars().next().map_or(1, char::len_utf8)
+}
+
+/// Extract the calls on one line. `cur_impl` resolves `Self::`.
+pub fn calls_on_line(code: &str, cur_impl: Option<&str>) -> Vec<Call> {
+    let ch: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let n = ch.len();
+    while i < n {
+        let c = ch[i];
+        if !(c.is_alphabetic() || c == '_') {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        let mut e = i;
+        while e < n && is_ident_char(ch[e]) {
+            e += 1;
+        }
+        // whitespace then `(` makes it a call; `!` makes it a macro
+        let mut p = e;
+        while p < n && ch[p].is_whitespace() {
+            p += 1;
+        }
+        if p >= n || ch[p] != '(' {
+            i = e;
+            continue;
+        }
+        let name: String = ch[s..e].iter().collect();
+        i = e;
+        if KEYWORDS.contains(&name.as_str()) {
+            continue;
+        }
+        let before: String = ch[..s].iter().collect();
+        let before = before.trim_end();
+        if last_ident(before) == Some("fn") {
+            continue; // a signature is not a call
+        }
+        if before.ends_with('.') {
+            out.push(Call::Method(name));
+        } else if before.ends_with("::") {
+            let ty = last_ident(before[..before.len() - 2].trim_end()).map(|t| {
+                if t == "Self" { cur_impl.unwrap_or(t).to_string() } else { t.to_string() }
+            });
+            out.push(Call::Qualified(ty, name));
+        } else {
+            out.push(Call::Bare(name));
+        }
+    }
+    out
+}
+
+/// True if `lines[li]` of file `f.file` belongs to a fn nested inside
+/// `f` (closures keep their lines; only named nested fns steal them).
+pub fn owned_by_nested(fns: &[FnItem], idx: usize, li: usize) -> bool {
+    let f = &fns[idx];
+    let f_end = f.body_end.unwrap_or(usize::MAX);
+    fns.iter().enumerate().any(|(jdx, g)| {
+        jdx != idx
+            && g.file == f.file
+            && g.body_end.is_some_and(|ge| {
+                g.body_start >= f.body_start
+                    && ge <= f_end
+                    && g.body_start <= li
+                    && li <= ge
+            })
+    })
+}
+
+/// Build the call graph: `edges[i]` is the set of fns `i` may call.
+pub fn build_graph(files: &[SourceFile], fns: &[FnItem]) -> Vec<BTreeSet<usize>> {
+    let mut by_impl: BTreeMap<(&str, &str), Vec<usize>> = BTreeMap::new();
+    let mut impl_by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    let mut free_by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (idx, f) in fns.iter().enumerate() {
+        match &f.impl_ty {
+            Some(ty) => {
+                by_impl.entry((ty.as_str(), f.name.as_str())).or_default().push(idx);
+                impl_by_name.entry(f.name.as_str()).or_default().push(idx);
+            }
+            None => free_by_name.entry(f.name.as_str()).or_default().push(idx),
+        }
+    }
+    let mut edges: Vec<BTreeSet<usize>> = vec![BTreeSet::new(); fns.len()];
+    for (idx, f) in fns.iter().enumerate() {
+        let file = &files[f.file];
+        let end = f.body_end.unwrap_or(file.lines.len().saturating_sub(1));
+        for li in f.body_start..=end.min(file.lines.len().saturating_sub(1)) {
+            if owned_by_nested(fns, idx, li) {
+                continue;
+            }
+            for call in calls_on_line(&file.lines[li].code, f.impl_ty.as_deref()) {
+                match call {
+                    Call::Method(name) => {
+                        for &t in impl_by_name.get(name.as_str()).into_iter().flatten() {
+                            edges[idx].insert(t);
+                        }
+                    }
+                    Call::Qualified(Some(ty), name) => {
+                        for &t in
+                            by_impl.get(&(ty.as_str(), name.as_str())).into_iter().flatten()
+                        {
+                            edges[idx].insert(t);
+                        }
+                    }
+                    Call::Qualified(None, _) => {}
+                    Call::Bare(name) => {
+                        for &t in free_by_name.get(name.as_str()).into_iter().flatten() {
+                            edges[idx].insert(t);
+                        }
+                        if let Some(ty) = &f.impl_ty {
+                            for &t in
+                                by_impl.get(&(ty.as_str(), name.as_str())).into_iter().flatten()
+                            {
+                                edges[idx].insert(t);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// The learner/collector/serve hot entry points the allocation lint
+/// starts from (see INVARIANTS.md "Hot-path allocation contract").
+const HOT_ENTRIES: &[(Option<&str>, &str)] = &[
+    (Some("SacAgent"), "update_round"),
+    (Some("UpdateSchedule"), "run_round"),
+    (Some("VecEnv"), "par_step_into"),
+    (None, "flush_batch"),
+];
+
+/// Root set: the named hot entries plus every `ReplayBuffer`
+/// `sample_*_into` sampler. Returns `(fn index, provenance label)`.
+pub fn hot_roots(fns: &[FnItem]) -> Vec<(usize, String)> {
+    let mut roots = Vec::new();
+    for (idx, f) in fns.iter().enumerate() {
+        for &(ty, name) in HOT_ENTRIES {
+            if f.name == name && (ty.is_none() || f.impl_ty.as_deref() == ty) {
+                roots.push((idx, f.key()));
+            }
+        }
+        if f.impl_ty.as_deref() == Some("ReplayBuffer")
+            && f.name.starts_with("sample_")
+            && f.name.ends_with("_into")
+        {
+            roots.push((idx, f.key()));
+        }
+    }
+    roots
+}
+
+/// BFS from the hot roots; `reach[i]` holds the provenance label of the
+/// first root that reached fn `i` (None if cold).
+pub fn hot_reachability(fns: &[FnItem], edges: &[BTreeSet<usize>]) -> Vec<Option<String>> {
+    let mut reach: Vec<Option<String>> = vec![None; fns.len()];
+    let mut q = VecDeque::new();
+    for (idx, label) in hot_roots(fns) {
+        if reach[idx].is_none() {
+            reach[idx] = Some(label);
+            q.push_back(idx);
+        }
+    }
+    while let Some(u) = q.pop_front() {
+        for &v in &edges[u] {
+            if reach[v].is_none() {
+                reach[v] = reach[u].clone();
+                q.push_back(v);
+            }
+        }
+    }
+    reach
+}

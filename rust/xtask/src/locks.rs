@@ -1,0 +1,370 @@
+//! Lock-order analysis over the threaded modules
+//! (`coordinator/pipeline.rs`, `serve/`, `nn/pool.rs`).
+//!
+//! Within each function body the pass tracks `let g = <name>.lock()`
+//! guard bindings (a guard dies when the brace depth drops below its
+//! acquisition depth, or at `drop(g)`), records an edge `A -> B`
+//! whenever `B` is acquired while a guard on `A` is live, and fails on:
+//!
+//! * a cycle in the acquisition-order graph (classic ABBA deadlock
+//!   shape), or
+//! * an **innermost** loop whose body both acquires a lock `X` and
+//!   blocks on a condvar whose guard belongs to a different lock `Y`
+//!   (re-locking X every wakeup while parked on Y starves the waker).
+//!   The innermost scoping matters: an outer collection loop may
+//!   legitimately touch a completion lock after an inner wait loop on
+//!   the work lock finishes (the pool's `worker_loop` does exactly
+//!   this).
+
+use crate::parse::FnItem;
+use crate::scan::SourceFile;
+use crate::Diag;
+use std::collections::{BTreeMap, BTreeSet};
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// `<ident> . (try_)? lock ()` sites: `(lock name, ident char pos)`.
+fn lock_sites(ch: &[char]) -> Vec<(String, usize)> {
+    let n = ch.len();
+    let mut out = Vec::new();
+    for i in 0..n {
+        if ch[i] != '.' {
+            continue;
+        }
+        let mut q = i + 1;
+        while q < n && ch[q].is_whitespace() {
+            q += 1;
+        }
+        let mut w = q;
+        while w < n && is_ident_char(ch[w]) {
+            w += 1;
+        }
+        let word: String = ch[q..w].iter().collect();
+        if word != "lock" && word != "try_lock" {
+            continue;
+        }
+        let mut x = w;
+        while x < n && ch[x].is_whitespace() {
+            x += 1;
+        }
+        if !(x + 1 < n && ch[x] == '(' && ch[x + 1] == ')') {
+            continue;
+        }
+        // identifier immediately before the dot
+        let mut b = i;
+        while b > 0 && ch[b - 1].is_whitespace() {
+            b -= 1;
+        }
+        let e = b;
+        while b > 0 && is_ident_char(ch[b - 1]) {
+            b -= 1;
+        }
+        if b < e {
+            out.push((ch[b..e].iter().collect(), b));
+        }
+    }
+    out
+}
+
+/// First `let [mut] <name>` on the line: `(let char pos, binding)`.
+fn first_let(ch: &[char]) -> Option<(usize, String)> {
+    let n = ch.len();
+    let mut i = 0;
+    while i < n {
+        if !(ch[i].is_alphabetic() || ch[i] == '_') {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        let mut e = i;
+        while e < n && is_ident_char(ch[e]) {
+            e += 1;
+        }
+        let word: String = ch[s..e].iter().collect();
+        i = e;
+        if word != "let" {
+            continue;
+        }
+        let mut q = e;
+        while q < n && ch[q].is_whitespace() {
+            q += 1;
+        }
+        let mut w = q;
+        while w < n && is_ident_char(ch[w]) {
+            w += 1;
+        }
+        let mut name: String = ch[q..w].iter().collect();
+        if name == "mut" {
+            let mut q2 = w;
+            while q2 < n && ch[q2].is_whitespace() {
+                q2 += 1;
+            }
+            let mut w2 = q2;
+            while w2 < n && is_ident_char(ch[w2]) {
+                w2 += 1;
+            }
+            name = ch[q2..w2].iter().collect();
+        }
+        if name.is_empty() {
+            return None;
+        }
+        return Some((s, name));
+    }
+    None
+}
+
+/// `.wait(g)` / `.wait_while(g, ..)` / `.wait_timeout(g, ..)` guard
+/// arguments.
+fn wait_guards(ch: &[char]) -> Vec<String> {
+    let n = ch.len();
+    let mut out = Vec::new();
+    for i in 0..n {
+        if ch[i] != '.' {
+            continue;
+        }
+        let mut q = i + 1;
+        while q < n && ch[q].is_whitespace() {
+            q += 1;
+        }
+        let mut w = q;
+        while w < n && is_ident_char(ch[w]) {
+            w += 1;
+        }
+        let word: String = ch[q..w].iter().collect();
+        if !matches!(word.as_str(), "wait" | "wait_while" | "wait_timeout") {
+            continue;
+        }
+        let mut x = w;
+        while x < n && ch[x].is_whitespace() {
+            x += 1;
+        }
+        if x >= n || ch[x] != '(' {
+            continue;
+        }
+        let mut g = x + 1;
+        while g < n && ch[g].is_whitespace() {
+            g += 1;
+        }
+        let mut ge = g;
+        while ge < n && is_ident_char(ch[ge]) {
+            ge += 1;
+        }
+        if ge > g {
+            out.push(ch[g..ge].iter().collect());
+        }
+    }
+    out
+}
+
+/// `drop(<ident>)` call arguments.
+fn drop_targets(ch: &[char]) -> Vec<String> {
+    let n = ch.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if !(ch[i].is_alphabetic() || ch[i] == '_') {
+            i += 1;
+            continue;
+        }
+        let s = i;
+        let mut e = i;
+        while e < n && is_ident_char(ch[e]) {
+            e += 1;
+        }
+        let word: String = ch[s..e].iter().collect();
+        i = e;
+        if word != "drop" || (s > 0 && is_ident_char(ch[s - 1])) {
+            continue;
+        }
+        let mut q = e;
+        while q < n && ch[q].is_whitespace() {
+            q += 1;
+        }
+        if q >= n || ch[q] != '(' {
+            continue;
+        }
+        let mut g = q + 1;
+        while g < n && ch[g].is_whitespace() {
+            g += 1;
+        }
+        let mut ge = g;
+        while ge < n && is_ident_char(ch[ge]) {
+            ge += 1;
+        }
+        let mut r = ge;
+        while r < n && ch[r].is_whitespace() {
+            r += 1;
+        }
+        if ge > g && r < n && ch[r] == ')' {
+            out.push(ch[g..ge].iter().collect());
+        }
+    }
+    out
+}
+
+fn in_scope(rel: &str) -> bool {
+    rel.ends_with("coordinator/pipeline.rs") || rel.contains("serve/") || rel.ends_with("nn/pool.rs")
+}
+
+/// Tracked state for one innermost loop: open depth, locks acquired in
+/// its body, condvar waits `(lock of guard, 1-based line)`, header line.
+struct LoopInfo {
+    open_depth: i32,
+    locks: BTreeSet<String>,
+    waits: BTreeSet<(String, usize)>,
+    first_line: usize,
+}
+
+/// Acquisition-order edges: `(held, acquired) -> first (file, line)`.
+pub type LockEdges = BTreeMap<(String, String), (String, usize)>;
+
+/// Run the lock-order pass. Returns the diagnostics and the
+/// acquisition-order edges.
+pub fn lock_pass(files: &[SourceFile], fns: &[FnItem]) -> (Vec<Diag>, LockEdges) {
+    let mut diags = Vec::new();
+    let mut edges: LockEdges = BTreeMap::new();
+    for f in fns {
+        let file = &files[f.file];
+        if !in_scope(&file.rel) {
+            continue;
+        }
+        let end = f
+            .body_end
+            .unwrap_or(file.lines.len().saturating_sub(1))
+            .min(file.lines.len().saturating_sub(1));
+        let mut held: Vec<(String, String, i32)> = Vec::new(); // (binding, lock, depth)
+        let mut bindings: BTreeMap<String, String> = BTreeMap::new();
+        let mut depth = 0i32;
+        let mut loops: Vec<LoopInfo> = Vec::new();
+        for li in f.body_start..=end {
+            if file.mask[li] {
+                continue;
+            }
+            let code = &file.lines[li].code;
+            let ch: Vec<char> = code.chars().collect();
+            let mut opens_loop = ["loop", "while", "for"]
+                .iter()
+                .any(|t| crate::scan::has_token(code, t));
+            for (lock, pos) in lock_sites(&ch) {
+                for (_, h, _) in &held {
+                    if *h != lock {
+                        edges
+                            .entry((h.clone(), lock.clone()))
+                            .or_insert_with(|| (file.rel.clone(), li + 1));
+                    }
+                }
+                for lp in loops.iter_mut() {
+                    lp.locks.insert(lock.clone());
+                }
+                if let Some((lpos, binding)) = first_let(&ch) {
+                    if lpos < pos {
+                        bindings.insert(binding.clone(), lock.clone());
+                        held.push((binding, lock.clone(), depth));
+                    }
+                }
+            }
+            for g in wait_guards(&ch) {
+                if let Some(lock) = bindings.get(&g) {
+                    if let Some(lp) = loops.last_mut() {
+                        lp.waits.insert((lock.clone(), li + 1));
+                    }
+                }
+            }
+            for d in drop_targets(&ch) {
+                held.retain(|(b, _, _)| *b != d);
+            }
+            for c in code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        if opens_loop {
+                            loops.push(LoopInfo {
+                                open_depth: depth,
+                                locks: BTreeSet::new(),
+                                waits: BTreeSet::new(),
+                                first_line: li + 1,
+                            });
+                            opens_loop = false;
+                        }
+                    }
+                    '}' => {
+                        depth -= 1;
+                        held.retain(|&(_, _, d)| d <= depth);
+                        while loops.last().is_some_and(|lp| lp.open_depth > depth) {
+                            let Some(lp) = loops.pop() else { break };
+                            for (wl, wline) in &lp.waits {
+                                for l in &lp.locks {
+                                    if l != wl {
+                                        diags.push(Diag {
+                                            file: file.rel.clone(),
+                                            line: *wline,
+                                            rule: "lock-order",
+                                            msg: format!(
+                                                "loop at line {} locks `{l}` and waits on a \
+                                                 condvar of `{wl}` — split the loop or wait \
+                                                 and lock under the same mutex",
+                                                lp.first_line
+                                            ),
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+    // cycle detection over the acquisition-order graph
+    let mut graph: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    let mut nodes: BTreeSet<&str> = BTreeSet::new();
+    for (a, b) in edges.keys() {
+        graph.entry(a.as_str()).or_default().insert(b.as_str());
+        nodes.insert(a.as_str());
+        nodes.insert(b.as_str());
+    }
+    #[derive(Clone, Copy, PartialEq)]
+    enum Color {
+        White,
+        Gray,
+        Black,
+    }
+    fn dfs<'a>(
+        n: &'a str,
+        path: &mut Vec<&'a str>,
+        graph: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+        color: &mut BTreeMap<&'a str, Color>,
+        diags: &mut Vec<Diag>,
+    ) {
+        color.insert(n, Color::Gray);
+        path.push(n);
+        for &m in graph.get(n).into_iter().flatten() {
+            match color.get(m) {
+                Some(Color::Gray) => {
+                    let mut cyc: Vec<&str> = path.clone();
+                    cyc.push(m);
+                    diags.push(Diag {
+                        file: "lock-graph".to_string(),
+                        line: 0,
+                        rule: "lock-order",
+                        msg: format!("lock-order cycle: {}", cyc.join(" -> ")),
+                    });
+                }
+                Some(Color::White) => dfs(m, path, graph, color, diags),
+                _ => {}
+            }
+        }
+        path.pop();
+        color.insert(n, Color::Black);
+    }
+    let mut color: BTreeMap<&str, Color> = nodes.iter().map(|&n| (n, Color::White)).collect();
+    for &n in &nodes {
+        if color.get(n) == Some(&Color::White) {
+            dfs(n, &mut Vec::new(), &graph, &mut color, &mut diags);
+        }
+    }
+    (diags, edges)
+}

@@ -1,10 +1,10 @@
 //! `lprl-tidy` — project-invariant static analysis for the lprl tree.
 //!
 //! Run with `cargo run -p xtask -- tidy`. Zero external dependencies:
-//! every pass is lexical/line-level over `rust/src`, `rust/tests`, and
-//! `rust/benches`, in the style of rustc's `tidy`. The contracts being
-//! enforced are documented in `INVARIANTS.md` at the repo root; the
-//! rule families are:
+//! the lexical layer ([`scan`]) blanks comments/strings per line, and a
+//! token-tree parser ([`parse`]) recovers `fn` items and impl types so
+//! the cross-file passes can reason about reachability. The contracts
+//! being enforced are documented in `INVARIANTS.md`; the rule families:
 //!
 //! * **safety** — every `unsafe` block/fn/impl must be covered by an
 //!   immediately preceding `// SAFETY:` justification (a single header
@@ -18,18 +18,38 @@
 //!   numerical truth. Escape: `// tidy-allow(precision): <reason>`.
 //! * **panic** — no `.unwrap()` / `.expect(` in library code outside
 //!   `#[cfg(test)]` regions without `// tidy-allow(panic): <reason>`.
+//! * **alloc** — no heap allocation in any fn reachable from the hot
+//!   entry points (learner update round, pooled env stepping, serve
+//!   batch flush, replay samplers) without `// tidy-allow(alloc): <reason>`
+//!   ([`alloc`], over the call graph built by [`graph`]).
+//! * **lock-order** — the threaded modules must acquire locks in a
+//!   cycle-free global order, and no loop may re-lock one mutex while
+//!   parked on a condvar guarding another ([`locks`]).
+//! * **parity** — every fused/pooled API under the bitwise-parity
+//!   contract must be pinned by a test in `rust/tests/` ([`parity`]).
+//! * **stale-allow** — a `tidy-allow` escape whose target line no
+//!   longer triggers the named rule is itself a diagnostic ([`stale`]).
 //! * **lint-wall** — the workspace lint table (`[workspace.lints]`,
 //!   `unsafe_op_in_unsafe_fn = "deny"`) and the lib-level deny must not
 //!   be silently dropped.
 //!
-//! The scanner blanks comments, string literals, and char literals
-//! before matching, so tokens inside docs or messages never trip a
-//! rule; `//` comment text is kept separately for the `SAFETY:` /
-//! `tidy-allow` lookups. Fixtures under `rust/xtask/fixtures/` pin the
-//! behaviour of every rule family (see the tests at the bottom), and
-//! `tree_is_clean` asserts the real tree passes — so `cargo test`
-//! fails if either the rules or the codebase regress.
+//! Output formats: `--format=text` (default, human-readable to
+//! stderr), `--format=json` (stable sorted array to stdout, for
+//! tooling), `--format=github` (GitHub Actions `::error` annotations).
+//! Fixtures under `rust/xtask/fixtures/` pin the behaviour of every
+//! rule family (see the tests at the bottom), and `tree_is_clean`
+//! asserts the real tree passes every pass — so `cargo test` fails if
+//! either the rules or the codebase regress.
 
+mod alloc;
+mod graph;
+mod locks;
+mod parity;
+mod parse;
+mod scan;
+mod stale;
+
+use scan::{allowed, covered, has_token, SourceFile};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
@@ -56,15 +76,7 @@ const DETERMINISM_TOKENS: &[(&str, &str)] = &[
 
 /// Rules that may be escaped with `// tidy-allow(<rule>): <reason>`.
 /// `safety` is deliberately absent: a SAFETY argument is never optional.
-const ALLOWABLE_RULES: &[&str] = &["determinism", "precision", "panic"];
-
-/// One source line after scanning: code with comments/strings blanked,
-/// plus the text of any `//` comment that appeared on the line.
-#[derive(Debug, Default)]
-struct Line {
-    code: String,
-    comment: String,
-}
+const ALLOWABLE_RULES: &[&str] = &["determinism", "precision", "panic", "alloc"];
 
 /// One rule violation, reported as `file:line: [rule] message`.
 #[derive(Debug)]
@@ -79,263 +91,29 @@ impl Diag {
     fn render(&self) -> String {
         format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
     }
-}
 
-// --------------------------------------------------------------- scanner
-
-/// Length of the char literal starting at `ch[i] == '\''`, or `None`
-/// if this quote is a lifetime. Handles `'a'`, `'\n'`, `'\''`, `'\u{..}'`.
-fn char_lit_len(ch: &[char], i: usize) -> Option<usize> {
-    let next = *ch.get(i + 1)?;
-    if next == '\\' {
-        (3..12).find(|&k| ch.get(i + k) == Some(&'\'')).map(|k| k + 1)
-    } else if next != '\'' && ch.get(i + 2) == Some(&'\'') {
-        Some(3)
-    } else {
-        None
+    /// GitHub Actions workflow-command annotation.
+    fn github(&self) -> String {
+        format!(
+            "::error file={},line={}::{}",
+            gh_property(&self.file),
+            self.line,
+            gh_message(&format!("[{}] {}", self.rule, self.msg))
+        )
     }
-}
-
-/// If `ch[j..]` is `#*"` (a raw-string opener after `r`), the hash count.
-fn raw_open(ch: &[char], j: usize) -> Option<usize> {
-    let mut h = 0;
-    while ch.get(j + h) == Some(&'#') {
-        h += 1;
-    }
-    (ch.get(j + h) == Some(&'"')).then_some(h)
-}
-
-/// Split source text into [`Line`]s: comments, string literals, and
-/// char literals are blanked out of `code`; `//` comment text (doc or
-/// plain) is collected into `comment`.
-fn scan(text: &str) -> Vec<Line> {
-    #[derive(Clone, Copy, PartialEq)]
-    enum St {
-        Code,
-        LineComment,
-        Block(usize),
-        Str,
-        RawStr(usize),
-    }
-    let ch: Vec<char> = text.chars().collect();
-    let n = ch.len();
-    let mut lines = Vec::new();
-    let mut cur = Line::default();
-    let mut st = St::Code;
-    let mut i = 0;
-    while i < n {
-        let c = ch[i];
-        let next = if i + 1 < n { ch[i + 1] } else { '\0' };
-        if c == '\n' {
-            if st == St::LineComment {
-                st = St::Code;
-            }
-            lines.push(std::mem::take(&mut cur));
-            i += 1;
-            continue;
-        }
-        match st {
-            St::Code => {
-                let prev_ident = i > 0 && (ch[i - 1].is_alphanumeric() || ch[i - 1] == '_');
-                if c == '/' && next == '/' {
-                    st = St::LineComment;
-                    cur.comment.push_str("//");
-                    i += 2;
-                } else if c == '/' && next == '*' {
-                    st = St::Block(1);
-                    cur.code.push(' ');
-                    i += 2;
-                } else if c == '"' {
-                    st = St::Str;
-                    cur.code.push(' ');
-                    i += 1;
-                } else if c == 'r' && !prev_ident && raw_open(&ch, i + 1).is_some() {
-                    let h = raw_open(&ch, i + 1).unwrap_or(0);
-                    st = St::RawStr(h);
-                    cur.code.push(' ');
-                    i += 2 + h;
-                } else if c == '\'' {
-                    match char_lit_len(&ch, i) {
-                        Some(len) => {
-                            cur.code.push(' ');
-                            i += len;
-                        }
-                        None => {
-                            cur.code.push(c);
-                            i += 1;
-                        }
-                    }
-                } else {
-                    cur.code.push(c);
-                    i += 1;
-                }
-            }
-            St::LineComment => {
-                cur.comment.push(c);
-                i += 1;
-            }
-            St::Block(d) => {
-                if c == '*' && next == '/' {
-                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
-                    i += 2;
-                } else if c == '/' && next == '*' {
-                    st = St::Block(d + 1);
-                    i += 2;
-                } else {
-                    i += 1;
-                }
-            }
-            St::Str => {
-                if c == '\\' {
-                    i += 2;
-                } else {
-                    if c == '"' {
-                        st = St::Code;
-                    }
-                    i += 1;
-                }
-            }
-            St::RawStr(h) => {
-                let closes = c == '"'
-                    && ch.get(i + 1..i + 1 + h).is_some_and(|s| s.iter().all(|&x| x == '#'));
-                if closes {
-                    st = St::Code;
-                    i += 1 + h;
-                } else {
-                    i += 1;
-                }
-            }
-        }
-    }
-    if !cur.code.is_empty() || !cur.comment.is_empty() {
-        lines.push(cur);
-    }
-    lines
-}
-
-/// True if `code` contains `tok` bounded by non-identifier characters.
-fn has_token(code: &str, tok: &str) -> bool {
-    let mut start = 0;
-    while let Some(pos) = code[start..].find(tok) {
-        let p = start + pos;
-        let before_ok = code[..p]
-            .chars()
-            .next_back()
-            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
-        let after_ok = code[p + tok.len()..]
-            .chars()
-            .next()
-            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
-        if before_ok && after_ok {
-            return true;
-        }
-        start = p + tok.len();
-    }
-    false
-}
-
-/// Mark lines inside `#[cfg(test)]`-gated items (attribute through the
-/// matching close brace, via brace counting over blanked code).
-fn test_mask(lines: &[Line]) -> Vec<bool> {
-    let mut mask = vec![false; lines.len()];
-    let mut i = 0;
-    while i < lines.len() {
-        if !lines[i].code.contains("#[cfg(test)]") {
-            i += 1;
-            continue;
-        }
-        let mut depth = 0usize;
-        let mut opened = false;
-        let mut j = i;
-        'item: while j < lines.len() {
-            mask[j] = true;
-            for c in lines[j].code.chars() {
-                match c {
-                    '{' => {
-                        depth += 1;
-                        opened = true;
-                    }
-                    '}' => {
-                        depth = depth.saturating_sub(1);
-                        if opened && depth == 0 {
-                            break 'item;
-                        }
-                    }
-                    ';' if !opened => break 'item, // braceless item (use, decl)
-                    _ => {}
-                }
-            }
-            j += 1;
-        }
-        i = j + 1;
-    }
-    mask
-}
-
-/// True if the comment block covering `lines[i]` satisfies `pred`: a
-/// trailing comment on the line itself, or the contiguous `//` block
-/// directly above (skipping attributes and doc comments; when
-/// `through_unsafe_runs`, also skipping adjacent lines that themselves
-/// contain `unsafe`, so one `// SAFETY:` header can cover a run).
-fn covered(
-    lines: &[Line],
-    i: usize,
-    through_unsafe_runs: bool,
-    pred: impl Fn(&str) -> bool,
-) -> bool {
-    if pred(&lines[i].comment) {
-        return true;
-    }
-    let mut j = i;
-    while j > 0 {
-        j -= 1;
-        let code = lines[j].code.trim();
-        let com = lines[j].comment.trim();
-        if code.is_empty() && com.is_empty() {
-            return false; // blank line terminates the block
-        }
-        if code.is_empty() {
-            if com.starts_with("///") || com.starts_with("//!") {
-                continue; // doc comments are transparent
-            }
-            if pred(com) {
-                return true;
-            }
-            continue;
-        }
-        if code.starts_with('#') {
-            continue; // attributes are transparent
-        }
-        if through_unsafe_runs && has_token(code, "unsafe") {
-            if pred(com) {
-                return true;
-            }
-            continue;
-        }
-        return pred(com);
-    }
-    false
-}
-
-/// True if a well-formed `// tidy-allow(<rule>): <reason>` covers line `i`.
-fn allowed(lines: &[Line], i: usize, rule: &str) -> bool {
-    let needle = format!("tidy-allow({rule}):");
-    covered(lines, i, false, |c| {
-        c.find(&needle).is_some_and(|p| !c[p + needle.len()..].trim().is_empty())
-    })
 }
 
 // ----------------------------------------------------------------- rules
 
-/// Run every per-file rule over one source file. `rel` is the
-/// repo-relative path (forward slashes); it decides which rules apply.
-fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
-    let lines = scan(text);
-    let mask = test_mask(&lines);
+/// Run every per-file rule over one scanned source file.
+fn analyze_source(sf: &SourceFile) -> Vec<Diag> {
+    let rel = sf.rel.as_str();
+    let lines = &sf.lines;
+    let mask = &sf.mask;
     let in_src = rel.starts_with("rust/src/");
     let in_core = DETERMINISM_CORE
         .iter()
-        .any(|m| rel.starts_with(&format!("rust/src/{m}/")) || rel == &format!("rust/src/{m}.rs"));
+        .any(|m| rel.starts_with(&format!("rust/src/{m}/")) || rel == format!("rust/src/{m}.rs"));
     let in_lowp = rel.starts_with("rust/src/lowp/");
     let mut out = Vec::new();
     let mut push = |line: usize, rule: &'static str, msg: String| {
@@ -348,7 +126,7 @@ fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
 
         // safety: everywhere, including tests and benches — unsafe is
         // unsafe no matter where it appears.
-        if has_token(code, "unsafe") && !covered(&lines, idx, true, |c| c.contains("SAFETY:")) {
+        if has_token(code, "unsafe") && !covered(lines, idx, true, |c| c.contains("SAFETY:")) {
             push(
                 ln,
                 "safety",
@@ -360,7 +138,7 @@ fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
 
         if lib_code && in_core {
             for &(tok, why) in DETERMINISM_TOKENS {
-                if has_token(code, tok) && !allowed(&lines, idx, "determinism") {
+                if has_token(code, tok) && !allowed(lines, idx, "determinism") {
                     push(
                         ln,
                         "determinism",
@@ -376,7 +154,7 @@ fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
 
         if lib_code && !in_lowp {
             for tok in ["to_bits", "from_bits"] {
-                if has_token(code, tok) && !allowed(&lines, idx, "precision") {
+                if has_token(code, tok) && !allowed(lines, idx, "precision") {
                     push(
                         ln,
                         "precision",
@@ -393,7 +171,7 @@ fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
 
         if lib_code
             && (code.contains(".unwrap()") || code.contains(".expect("))
-            && !allowed(&lines, idx, "panic")
+            && !allowed(lines, idx, "panic")
         {
             push(
                 ln,
@@ -436,7 +214,13 @@ fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
             }
         }
     }
+    out.extend(stale::stale_pass(rel, lines));
     out
+}
+
+/// Per-file rules over raw text (test/fixture entry point).
+fn analyze_file(rel: &str, text: &str) -> Vec<Diag> {
+    analyze_source(&SourceFile::new(rel, text))
 }
 
 /// The lint wall: fail if the workspace lint table or the lib-level
@@ -481,19 +265,16 @@ fn rust_files(dir: &Path, out: &mut Vec<PathBuf>) {
     }
 }
 
-/// Run the full tidy pass over a repo checkout.
-fn run_tidy(root: &Path) -> Vec<Diag> {
-    let mut diags = Vec::new();
-    lint_wall(root, &mut diags);
-    let mut files = Vec::new();
-    for d in ["rust/src", "rust/tests", "rust/benches"] {
-        rust_files(&root.join(d), &mut files);
-    }
-    for f in &files {
-        let rel =
-            f.strip_prefix(root).unwrap_or(f).to_string_lossy().replace('\\', "/");
-        match std::fs::read_to_string(f) {
-            Ok(text) => diags.extend(analyze_file(&rel, &text)),
+/// Read and scan every `.rs` file under `root/dir`; unreadable files
+/// become diagnostics rather than aborting the run.
+fn load_dir(root: &Path, dir: &str, diags: &mut Vec<Diag>) -> Vec<SourceFile> {
+    let mut paths = Vec::new();
+    rust_files(&root.join(dir), &mut paths);
+    let mut out = Vec::new();
+    for p in &paths {
+        let rel = p.strip_prefix(root).unwrap_or(p).to_string_lossy().replace('\\', "/");
+        match std::fs::read_to_string(p) {
+            Ok(text) => out.push(SourceFile::new(&rel, &text)),
             Err(e) => diags.push(Diag {
                 file: rel,
                 line: 0,
@@ -502,8 +283,87 @@ fn run_tidy(root: &Path) -> Vec<Diag> {
             }),
         }
     }
+    out
+}
+
+/// Run the full tidy pass over a repo checkout. Diagnostics come back
+/// sorted by (file, line, rule, message) so every output format is
+/// stable across runs and platforms.
+fn run_tidy(root: &Path) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    lint_wall(root, &mut diags);
+    let src = load_dir(root, "rust/src", &mut diags);
+    let tests = load_dir(root, "rust/tests", &mut diags);
+    let benches = load_dir(root, "rust/benches", &mut diags);
+    for sf in src.iter().chain(&tests).chain(&benches) {
+        diags.extend(analyze_source(sf));
+    }
+    let fns = parse::parse_fns(&src);
+    let edges = graph::build_graph(&src, &fns);
+    diags.extend(alloc::alloc_pass(&src, &fns, &edges));
+    diags.extend(locks::lock_pass(&src, &fns).0);
+    diags.extend(parity::parity_pass(&tests));
+    diags.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.msg.as_str())
+            .cmp(&(b.file.as_str(), b.line, b.rule, b.msg.as_str()))
+    });
     diags
 }
+
+// ---------------------------------------------------------------- output
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 8);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Stable JSON array of diagnostics, one object per line.
+fn render_json(diags: &[Diag]) -> String {
+    let mut out = String::from("[");
+    for (i, d) in diags.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "\n  {{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"msg\":\"{}\"}}",
+            json_escape(&d.file),
+            d.line,
+            json_escape(d.rule),
+            json_escape(&d.msg)
+        ));
+    }
+    out.push_str(if diags.is_empty() { "]" } else { "\n]" });
+    out
+}
+
+/// Escape a GitHub workflow-command property value.
+fn gh_property(s: &str) -> String {
+    s.replace('%', "%25")
+        .replace('\r', "%0D")
+        .replace('\n', "%0A")
+        .replace(':', "%3A")
+        .replace(',', "%2C")
+}
+
+/// Escape a GitHub workflow-command message.
+fn gh_message(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
+}
+
+// ------------------------------------------------------------------ main
 
 /// Repo root: xtask lives at `<root>/rust/xtask`.
 fn repo_root() -> PathBuf {
@@ -516,33 +376,82 @@ fn repo_root() -> PathBuf {
         .to_path_buf()
 }
 
+#[derive(Clone, Copy)]
+enum Format {
+    Text,
+    Json,
+    Github,
+}
+
+const CLEAN_MSG: &str = "tidy: clean (safety, determinism, precision, panic, alloc, \
+                         lock-order, parity, stale-allow, lint-wall)";
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.first().map(String::as_str) != Some("tidy") {
-        eprintln!("usage: cargo run -p xtask -- tidy [--root <repo>]");
+        eprintln!("usage: cargo run -p xtask -- tidy [--root <repo>] [--format=text|json|github]");
         return ExitCode::from(2);
     }
-    let root = if args.get(1).map(String::as_str) == Some("--root") {
-        PathBuf::from(args.get(2).map(String::as_str).unwrap_or("."))
-    } else {
-        repo_root()
-    };
+    let mut root: Option<PathBuf> = None;
+    let mut format = Format::Text;
+    let mut it = args.iter().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => root = it.next().map(PathBuf::from),
+            "--format=text" => format = Format::Text,
+            "--format=json" => format = Format::Json,
+            "--format=github" => format = Format::Github,
+            other => {
+                eprintln!("unknown argument `{other}`");
+                eprintln!(
+                    "usage: cargo run -p xtask -- tidy [--root <repo>] [--format=text|json|github]"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(repo_root);
     let diags = run_tidy(&root);
+    match format {
+        Format::Text => {
+            if diags.is_empty() {
+                eprintln!("{CLEAN_MSG}");
+            } else {
+                for d in &diags {
+                    eprintln!("{}", d.render());
+                }
+                eprintln!("tidy: {} violation(s)", diags.len());
+            }
+        }
+        Format::Json => {
+            println!("{}", render_json(&diags));
+            if !diags.is_empty() {
+                eprintln!("tidy: {} violation(s)", diags.len());
+            }
+        }
+        Format::Github => {
+            if diags.is_empty() {
+                eprintln!("{CLEAN_MSG}");
+            } else {
+                for d in &diags {
+                    println!("{}", d.github());
+                }
+                eprintln!("tidy: {} violation(s)", diags.len());
+            }
+        }
+    }
     if diags.is_empty() {
-        eprintln!("tidy: clean (safety, determinism, precision, panic, lint-wall)");
-        return ExitCode::SUCCESS;
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
     }
-    for d in &diags {
-        eprintln!("{}", d.render());
-    }
-    eprintln!("tidy: {} violation(s)", diags.len());
-    ExitCode::FAILURE
 }
 
 // ----------------------------------------------------------------- tests
 
 #[cfg(test)]
 mod tests {
+    use super::scan::{scan, test_mask};
     use super::*;
 
     fn fixture(name: &str) -> String {
@@ -554,9 +463,21 @@ mod tests {
         analyze_file(rel, &fixture(name)).iter().map(|d| d.rule).collect()
     }
 
+    /// Parse one fixture as the whole source tree and build its graph.
+    fn semantic(
+        rel: &str,
+        name: &str,
+    ) -> (Vec<SourceFile>, Vec<parse::FnItem>, Vec<std::collections::BTreeSet<usize>>) {
+        let files = vec![SourceFile::new(rel, &fixture(name))];
+        let fns = parse::parse_fns(&files);
+        let edges = graph::build_graph(&files, &fns);
+        (files, fns, edges)
+    }
+
     #[test]
     fn scanner_blanks_comments_and_strings() {
-        let lines = scan("let x = \"unsafe HashMap\"; // unsafe in a comment\n/* unsafe */ let y = 1;\n");
+        let lines =
+            scan("let x = \"unsafe HashMap\"; // unsafe in a comment\n/* unsafe */ let y = 1;\n");
         assert!(!has_token(&lines[0].code, "unsafe"));
         assert!(!has_token(&lines[0].code, "HashMap"));
         assert!(lines[0].comment.contains("unsafe in a comment"));
@@ -655,6 +576,124 @@ mod tests {
             "let x = m.lock().unwrap(); // tidy-allow(panic): poisoned lock means a task panicked\n",
         );
         assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn parser_recovers_impl_and_fn_extents() {
+        let text = "pub struct S;\n\
+                    impl S {\n\
+                    \x20   pub fn outer(&self, f: impl Fn(usize) -> usize) -> usize {\n\
+                    \x20       fn helper(x: usize) -> usize {\n\
+                    \x20           x + 1\n\
+                    \x20       }\n\
+                    \x20       helper(f(1))\n\
+                    \x20   }\n\
+                    }\n\
+                    pub fn free() {}\n";
+        let files = vec![SourceFile::new("rust/src/nn/x.rs", text)];
+        let fns = parse::parse_fns(&files);
+        let keys: Vec<String> = fns.iter().map(parse::FnItem::key).collect();
+        // `impl Fn(usize)` in the signature must not open an impl scope
+        assert_eq!(keys, ["S::outer", "S::helper", "::free"]);
+        assert_eq!(fns[0].body_end, Some(7));
+        assert_eq!(fns[1].body_end, Some(5));
+    }
+
+    #[test]
+    fn call_extraction_shapes() {
+        let calls = graph::calls_on_line(
+            "let y = self.step(x) + Norm::apply(z) + helper(w); log!(y); Self::seed(s);",
+            Some("SacAgent"),
+        );
+        assert_eq!(calls.len(), 4); // the macro is not a call
+        assert!(matches!(&calls[0], graph::Call::Method(n) if n == "step"));
+        assert!(
+            matches!(&calls[1], graph::Call::Qualified(Some(t), n) if t == "Norm" && n == "apply")
+        );
+        assert!(matches!(&calls[2], graph::Call::Bare(n) if n == "helper"));
+        // `Self::` resolves to the enclosing impl type
+        assert!(
+            matches!(&calls[3], graph::Call::Qualified(Some(t), n) if t == "SacAgent" && n == "seed")
+        );
+        // a fn signature is not a call site
+        assert!(graph::calls_on_line("fn helper(x: usize) -> usize {", None).is_empty());
+    }
+
+    #[test]
+    fn alloc_fixtures() {
+        let (files, fns, edges) = semantic("rust/src/sac/x.rs", "bad_alloc.rs");
+        let d = alloc::alloc_pass(&files, &fns, &edges);
+        assert!(
+            d.iter().any(|d| d.rule == "alloc" && d.msg.contains("with_capacity")),
+            "{d:?}"
+        );
+        let (files, fns, edges) = semantic("rust/src/sac/x.rs", "good_alloc.rs");
+        let d = alloc::alloc_pass(&files, &fns, &edges);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn lock_cycle_flagged() {
+        let files = vec![SourceFile::new("rust/src/serve/x.rs", &fixture("bad_lock.rs"))];
+        let fns = parse::parse_fns(&files);
+        let (d, edges) = locks::lock_pass(&files, &fns);
+        assert!(edges.contains_key(&("a".to_string(), "b".to_string())));
+        assert!(edges.contains_key(&("b".to_string(), "a".to_string())));
+        assert!(d.iter().any(|d| d.rule == "lock-order" && d.msg.contains("cycle")), "{d:?}");
+    }
+
+    #[test]
+    fn condvar_in_lock_loop_flagged() {
+        let files = vec![SourceFile::new("rust/src/serve/x.rs", &fixture("bad_lock_wait.rs"))];
+        let fns = parse::parse_fns(&files);
+        let (d, _) = locks::lock_pass(&files, &fns);
+        assert!(d.iter().any(|d| d.rule == "lock-order" && d.msg.contains("condvar")), "{d:?}");
+    }
+
+    #[test]
+    fn clean_lock_order_passes() {
+        let files = vec![SourceFile::new("rust/src/serve/x.rs", &fixture("good_lock.rs"))];
+        let fns = parse::parse_fns(&files);
+        let (d, edges) = locks::lock_pass(&files, &fns);
+        assert!(d.is_empty(), "{d:?}");
+        // consistent order: a -> b present, reverse absent
+        assert!(edges.contains_key(&("a".to_string(), "b".to_string())));
+        assert!(!edges.contains_key(&("b".to_string(), "a".to_string())));
+    }
+
+    #[test]
+    fn parity_fixtures() {
+        let bad = vec![SourceFile::new("rust/tests/x.rs", &fixture("bad_parity.rs"))];
+        let d = parity::parity_pass(&bad);
+        assert!(d.iter().any(|d| d.rule == "parity" && d.msg.contains("fuse_group")), "{d:?}");
+        let good = vec![SourceFile::new("rust/tests/x.rs", &fixture("good_parity.rs"))];
+        let d = parity::parity_pass(&good);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn stale_allow_fixtures() {
+        let sf = SourceFile::new("rust/src/nn/x.rs", &fixture("bad_stale.rs"));
+        let d = stale::stale_pass(&sf.rel, &sf.lines);
+        assert_eq!(d.len(), 2, "{d:?}");
+        assert!(d.iter().all(|d| d.rule == "stale-allow"));
+        let sf = SourceFile::new("rust/src/nn/x.rs", &fixture("good_stale.rs"));
+        let d = stale::stale_pass(&sf.rel, &sf.lines);
+        assert!(d.is_empty(), "{d:?}");
+    }
+
+    #[test]
+    fn json_output_escapes_and_orders() {
+        let diags = vec![
+            Diag { file: "a.rs".to_string(), line: 1, rule: "alloc", msg: "q\" b\\ n\n".to_string() },
+        ];
+        let out = render_json(&diags);
+        assert!(out.contains(r#""file":"a.rs""#), "{out}");
+        assert!(out.contains(r#"q\" b\\ n\n"#), "{out}");
+        assert_eq!(render_json(&[]), "[]");
+        // github annotations escape newlines in the message
+        assert!(diags[0].github().contains("%0A"), "{}", diags[0].github());
+        assert!(diags[0].github().starts_with("::error file=a.rs,line=1::[alloc]"));
     }
 
     #[test]

@@ -1,0 +1,49 @@
+//! Parity-contract coverage map: every fused/pooled API whose output
+//! is claimed bitwise-identical to a reference path must be pinned by
+//! at least one test under `rust/tests/` — either by calling the API
+//! or by carrying a `// parity: <api>` marker next to the test that
+//! covers it indirectly.
+
+use crate::scan::{has_token, SourceFile};
+use crate::Diag;
+
+/// The fused APIs under parity contract (see INVARIANTS.md
+/// "Parity-coverage contract").
+pub const PARITY_APIS: &[&str] = &[
+    "forward_pair",
+    "forward_train_pair",
+    "par_step_into",
+    "run_spans",
+    "run_chunked",
+    "fuse_group",
+    "act_batch",
+    "sample_round_into",
+];
+
+/// True if any line in `test_files` references `api` by token or by a
+/// `// parity:` marker comment.
+fn referenced(test_files: &[SourceFile], api: &str) -> bool {
+    test_files.iter().any(|f| {
+        f.lines.iter().any(|l| {
+            has_token(&l.code, api)
+                || (l.comment.contains("parity:") && l.comment.contains(api))
+        })
+    })
+}
+
+/// Flag every parity-contract API with no reference in `rust/tests/`.
+pub fn parity_pass(test_files: &[SourceFile]) -> Vec<Diag> {
+    PARITY_APIS
+        .iter()
+        .filter(|api| !referenced(test_files, api))
+        .map(|api| Diag {
+            file: "rust/tests".to_string(),
+            line: 0,
+            rule: "parity",
+            msg: format!(
+                "fused API `{api}` has no test reference in rust/tests/ — call it from a \
+                 test or add a `// parity: {api}` marker next to the covering test"
+            ),
+        })
+        .collect()
+}

@@ -1,0 +1,239 @@
+//! Item-level parser: a brace/paren-aware token walk over the blanked
+//! code that recovers `impl` blocks and `fn` items with their body
+//! extents. Deliberately approximate — no expression grammar — but
+//! exact about the two things the semantic passes need: which lines
+//! belong to which function, and which impl type owns it.
+//!
+//! The two disambiguation rules that make this work on real code:
+//!
+//! * `impl` / `trait` / `fn` keywords only open an item when they sit
+//!   at **item position**: paren depth zero, preceded (after
+//!   whitespace) by one of `; { } ] )` or an item-qualifier word
+//!   (`pub`, `unsafe`, `const`, `async`, `extern`, `default`). This
+//!   keeps `impl Fn(usize)` in an argument list from opening a bogus
+//!   impl scope.
+//! * A `fn`'s own signature is not a call site (the later call
+//!   extractor skips an identifier-before-`(` whose preceding word is
+//!   `fn`).
+
+use crate::scan::SourceFile;
+
+/// One parsed `fn` item (test-gated fns are skipped at parse time).
+#[derive(Debug)]
+pub struct FnItem {
+    /// Index into the file list handed to [`parse_fns`].
+    pub file: usize,
+    /// Enclosing `impl`/`trait` type name, if any (`Self` resolved).
+    pub impl_ty: Option<String>,
+    /// 0-based line of the `fn` keyword.
+    pub sig_line: usize,
+    /// 0-based line of the body `{`.
+    pub body_start: usize,
+    /// 0-based line of the matching `}` (None if unclosed at EOF).
+    pub body_end: Option<usize>,
+    pub name: String,
+}
+
+impl FnItem {
+    /// Display key: `Type::name` (or `::name` for free fns).
+    pub fn key(&self) -> String {
+        format!("{}::{}", self.impl_ty.as_deref().unwrap_or(""), self.name)
+    }
+}
+
+const ITEM_QUALIFIERS: &[&str] = &["unsafe", "pub", "const", "async", "extern", "default"];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// True if the keyword starting at `i` sits at item/statement position.
+fn item_position(ch: &[char], i: usize) -> bool {
+    let mut j = i as isize - 1;
+    while j >= 0 && matches!(ch[j as usize], ' ' | '\t' | '\n') {
+        j -= 1;
+    }
+    if j < 0 {
+        return true;
+    }
+    let c = ch[j as usize];
+    if matches!(c, ';' | '{' | '}' | ']' | ')') {
+        return true;
+    }
+    let mut k = j;
+    while k >= 0 && is_ident_char(ch[k as usize]) {
+        k -= 1;
+    }
+    let word: String = ch[(k + 1) as usize..=j as usize].iter().collect();
+    ITEM_QUALIFIERS.contains(&word.as_str())
+}
+
+/// Drop balanced `<...>` generics from an impl header.
+fn strip_generics(s: &str) -> String {
+    let mut out = String::new();
+    let mut d = 0usize;
+    for c in s.chars() {
+        match c {
+            '<' => d += 1,
+            '>' => d = d.saturating_sub(1),
+            _ if d == 0 => out.push(c),
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Leading identifier of `s` (after trimming), if any.
+fn first_ident(s: &str) -> Option<String> {
+    let t = s.trim_start();
+    let end = t.find(|c: char| !is_ident_char(c)).unwrap_or(t.len());
+    let id = &t[..end];
+    (!id.is_empty() && !id.starts_with(|c: char| c.is_ascii_digit())).then(|| id.to_string())
+}
+
+/// Self type of an impl header (the text between `impl` and `{`):
+/// strip generics, take the right side of ` for `, drop any `where`
+/// clause, then the last `::` path segment's leading identifier.
+fn impl_type_of(header: &str) -> Option<String> {
+    let mut h = strip_generics(header);
+    if let Some(p) = h.find(" for ") {
+        h = h[p + " for ".len()..].to_string();
+    }
+    let mut h = h.trim().to_string();
+    if let Some(p) = h.find("where") {
+        h = h[..p].trim().to_string();
+    }
+    let seg = h.rsplit("::").next().unwrap_or("").trim();
+    first_ident(seg)
+}
+
+/// Scan forward from `k` for the body `{` (or a terminating `;`) at
+/// paren depth zero. Returns the index of that char, or `ch.len()`.
+fn find_body_open(ch: &[char], mut k: usize) -> usize {
+    let mut par = 0i32;
+    while k < ch.len() {
+        match ch[k] {
+            '(' => par += 1,
+            ')' => par -= 1,
+            '{' | ';' if par == 0 => break,
+            _ => {}
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Parse every non-test `fn` item in `files`, attributing each to its
+/// enclosing impl/trait type and recording body line extents.
+pub fn parse_fns(files: &[SourceFile]) -> Vec<FnItem> {
+    enum Scope {
+        Impl(Option<String>),
+        Fn(Option<usize>),
+    }
+    let mut fns: Vec<FnItem> = Vec::new();
+    for (fidx, file) in files.iter().enumerate() {
+        let text: String =
+            file.lines.iter().map(|l| l.code.as_str()).collect::<Vec<_>>().join("\n");
+        let ch: Vec<char> = text.chars().collect();
+        let n = ch.len();
+        // char index -> 0-based line number
+        let mut line_of = Vec::with_capacity(n + 1);
+        let mut ln = 0usize;
+        for &c in &ch {
+            line_of.push(ln);
+            if c == '\n' {
+                ln += 1;
+            }
+        }
+        line_of.push(ln);
+        let mut depth = 0i32;
+        let mut par = 0i32;
+        let mut scopes: Vec<(Scope, i32)> = Vec::new();
+        let mut i = 0usize;
+        while i < n {
+            let c = ch[i];
+            if c.is_alphabetic() || c == '_' {
+                let mut j = i;
+                while j < n && is_ident_char(ch[j]) {
+                    j += 1;
+                }
+                let ident: String = ch[i..j].iter().collect();
+                if (ident == "impl" || ident == "trait") && par == 0 && item_position(&ch, i) {
+                    let k = find_body_open(&ch, j);
+                    par = 0;
+                    if k < n && ch[k] == '{' {
+                        let header: String = ch[j..k].iter().collect();
+                        let ty = if ident == "impl" {
+                            impl_type_of(&header)
+                        } else {
+                            first_ident(&header)
+                        };
+                        scopes.push((Scope::Impl(ty), depth));
+                    }
+                    i = k;
+                    continue;
+                }
+                if ident == "fn" && par == 0 && item_position(&ch, i) {
+                    // fn name follows directly (after whitespace)
+                    let mut s = j;
+                    while s < n && ch[s].is_whitespace() {
+                        s += 1;
+                    }
+                    let mut e = s;
+                    while e < n && is_ident_char(ch[e]) {
+                        e += 1;
+                    }
+                    if e == s {
+                        i = j;
+                        continue;
+                    }
+                    let name: String = ch[s..e].iter().collect();
+                    let sig_line = line_of[i];
+                    let k = find_body_open(&ch, e);
+                    par = 0;
+                    if k >= n || ch[k] == ';' {
+                        i = k.min(n);
+                        continue;
+                    }
+                    let impl_ty = scopes.iter().rev().find_map(|(sc, _)| match sc {
+                        Scope::Impl(ty) => Some(ty.clone()),
+                        Scope::Fn(_) => None,
+                    });
+                    if !file.mask[sig_line] {
+                        scopes.push((Scope::Fn(Some(fns.len())), depth));
+                        fns.push(FnItem {
+                            file: fidx,
+                            impl_ty: impl_ty.flatten(),
+                            sig_line,
+                            body_start: line_of[k],
+                            body_end: None,
+                            name,
+                        });
+                    } else {
+                        scopes.push((Scope::Fn(None), depth));
+                    }
+                    i = k;
+                    continue;
+                }
+                i = j;
+                continue;
+            }
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    while scopes.last().is_some_and(|&(_, d)| d == depth) {
+                        if let Some((Scope::Fn(Some(idx)), _)) = scopes.pop() {
+                            fns[idx].body_end = Some(line_of[i]);
+                        }
+                    }
+                }
+                '(' => par += 1,
+                ')' => par = (par - 1).max(0),
+                _ => {}
+            }
+            i += 1;
+        }
+    }
+    fns
+}

@@ -1,0 +1,271 @@
+//! Lexical layer: split source text into per-line (code, comment) pairs
+//! with string/char literals and comments blanked, plus the token and
+//! comment-block helpers every pass builds on.
+//!
+//! Blanking happens before any rule matching, so tokens inside docs or
+//! message strings can never trip a rule; `//` comment text is kept
+//! separately for the `SAFETY:` / `tidy-allow` lookups.
+
+/// One source line after scanning: code with comments/strings blanked,
+/// plus the text of any `//` comment that appeared on the line.
+#[derive(Debug, Default)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+/// One scanned source file: repo-relative path (forward slashes),
+/// scanned lines, and the `#[cfg(test)]` mask.
+pub struct SourceFile {
+    pub rel: String,
+    pub lines: Vec<Line>,
+    pub mask: Vec<bool>,
+}
+
+impl SourceFile {
+    pub fn new(rel: &str, text: &str) -> SourceFile {
+        let lines = scan(text);
+        let mask = test_mask(&lines);
+        SourceFile { rel: rel.to_string(), lines, mask }
+    }
+}
+
+/// Length of the char literal starting at `ch[i] == '\''`, or `None`
+/// if this quote is a lifetime. Handles `'a'`, `'\n'`, `'\''`, `'\u{..}'`.
+fn char_lit_len(ch: &[char], i: usize) -> Option<usize> {
+    let next = *ch.get(i + 1)?;
+    if next == '\\' {
+        (3..12).find(|&k| ch.get(i + k) == Some(&'\'')).map(|k| k + 1)
+    } else if next != '\'' && ch.get(i + 2) == Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+/// If `ch[j..]` is `#*"` (a raw-string opener after `r`), the hash count.
+fn raw_open(ch: &[char], j: usize) -> Option<usize> {
+    let mut h = 0;
+    while ch.get(j + h) == Some(&'#') {
+        h += 1;
+    }
+    (ch.get(j + h) == Some(&'"')).then_some(h)
+}
+
+/// Split source text into [`Line`]s: comments, string literals, and
+/// char literals are blanked out of `code`; `//` comment text (doc or
+/// plain) is collected into `comment`.
+pub fn scan(text: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        Block(usize),
+        Str,
+        RawStr(usize),
+    }
+    let ch: Vec<char> = text.chars().collect();
+    let n = ch.len();
+    let mut lines = Vec::new();
+    let mut cur = Line::default();
+    let mut st = St::Code;
+    let mut i = 0;
+    while i < n {
+        let c = ch[i];
+        let next = if i + 1 < n { ch[i + 1] } else { '\0' };
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let prev_ident = i > 0 && (ch[i - 1].is_alphanumeric() || ch[i - 1] == '_');
+                if c == '/' && next == '/' {
+                    st = St::LineComment;
+                    cur.comment.push_str("//");
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::Block(1);
+                    cur.code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    st = St::Str;
+                    cur.code.push(' ');
+                    i += 1;
+                } else if c == 'r' && !prev_ident && raw_open(&ch, i + 1).is_some() {
+                    let h = raw_open(&ch, i + 1).unwrap_or(0);
+                    st = St::RawStr(h);
+                    cur.code.push(' ');
+                    i += 2 + h;
+                } else if c == '\'' {
+                    match char_lit_len(&ch, i) {
+                        Some(len) => {
+                            cur.code.push(' ');
+                            i += len;
+                        }
+                        None => {
+                            cur.code.push(c);
+                            i += 1;
+                        }
+                    }
+                } else {
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '*' && next == '/' {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else if c == '/' && next == '*' {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else {
+                    if c == '"' {
+                        st = St::Code;
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                let closes = c == '"'
+                    && ch.get(i + 1..i + 1 + h).is_some_and(|s| s.iter().all(|&x| x == '#'));
+                if closes {
+                    st = St::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// True if `code` contains `tok` bounded by non-identifier characters.
+pub fn has_token(code: &str, tok: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(tok) {
+        let p = start + pos;
+        let before_ok =
+            code[..p].chars().next_back().is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        let after_ok = code[p + tok.len()..]
+            .chars()
+            .next()
+            .is_none_or(|c| !(c.is_alphanumeric() || c == '_'));
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + tok.len();
+    }
+    false
+}
+
+/// Mark lines inside `#[cfg(test)]`-gated items (attribute through the
+/// matching close brace, via brace counting over blanked code).
+pub fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut j = i;
+        'item: while j < lines.len() {
+            mask[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => {
+                        depth = depth.saturating_sub(1);
+                        if opened && depth == 0 {
+                            break 'item;
+                        }
+                    }
+                    ';' if !opened => break 'item, // braceless item (use, decl)
+                    _ => {}
+                }
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// True if the comment block covering `lines[i]` satisfies `pred`: a
+/// trailing comment on the line itself, or the contiguous `//` block
+/// directly above (skipping attributes and doc comments; when
+/// `through_unsafe_runs`, also skipping adjacent lines that themselves
+/// contain `unsafe`, so one `// SAFETY:` header can cover a run).
+pub fn covered(
+    lines: &[Line],
+    i: usize,
+    through_unsafe_runs: bool,
+    pred: impl Fn(&str) -> bool,
+) -> bool {
+    if pred(&lines[i].comment) {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let code = lines[j].code.trim();
+        let com = lines[j].comment.trim();
+        if code.is_empty() && com.is_empty() {
+            return false; // blank line terminates the block
+        }
+        if code.is_empty() {
+            if com.starts_with("///") || com.starts_with("//!") {
+                continue; // doc comments are transparent
+            }
+            if pred(com) {
+                return true;
+            }
+            continue;
+        }
+        if code.starts_with('#') {
+            continue; // attributes are transparent
+        }
+        if through_unsafe_runs && has_token(code, "unsafe") {
+            if pred(com) {
+                return true;
+            }
+            continue;
+        }
+        return pred(com);
+    }
+    false
+}
+
+/// True if a well-formed `// tidy-allow(<rule>): <reason>` covers line `i`.
+pub fn allowed(lines: &[Line], i: usize, rule: &str) -> bool {
+    let needle = format!("tidy-allow({rule}):");
+    covered(lines, i, false, |c| {
+        c.find(&needle).is_some_and(|p| !c[p + needle.len()..].trim().is_empty())
+    })
+}

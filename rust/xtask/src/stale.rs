@@ -1,0 +1,72 @@
+//! Stale-suppression detection: every well-formed
+//! `// tidy-allow(<rule>): <reason>` must still cover a line that the
+//! named rule would actually fire on. An allow whose target line was
+//! refactored away is dead weight that silently blesses future
+//! regressions — this pass makes it a diagnostic instead.
+//!
+//! Target resolution (lexical, mirrors how `allowed` searches upward):
+//! an inline allow targets its own line; a comment-line allow targets
+//! the first code line below it, skipping comment-only and attribute
+//! lines, stopping at a fully blank line.
+
+use crate::alloc::has_alloc_token;
+use crate::scan::{has_token, Line};
+use crate::{Diag, ALLOWABLE_RULES, DETERMINISM_TOKENS};
+
+/// Would `rule` ever fire on a line whose blanked code is `code`?
+fn line_triggers(rule: &str, code: &str) -> bool {
+    match rule {
+        "determinism" => DETERMINISM_TOKENS.iter().any(|&(t, _)| has_token(code, t)),
+        "precision" => has_token(code, "to_bits") || has_token(code, "from_bits"),
+        "panic" => code.contains(".unwrap()") || code.contains(".expect("),
+        "alloc" => has_alloc_token(code),
+        _ => true,
+    }
+}
+
+/// Flag well-formed allows that no longer cover a rule-relevant line.
+pub fn stale_pass(rel: &str, lines: &[Line]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        let Some(p) = l.comment.find("tidy-allow(") else { continue };
+        let rest = &l.comment[p + "tidy-allow(".len()..];
+        let Some(q) = rest.find(')') else { continue };
+        let rule = &rest[..q];
+        let reason = rest[q + 1..].trim_start();
+        let well_formed = ALLOWABLE_RULES.contains(&rule)
+            && reason.strip_prefix(':').is_some_and(|r| !r.trim().is_empty());
+        if !well_formed {
+            continue; // allow-syntax owns malformed/unknown allows
+        }
+        // target line: this line if it has code, else the next code
+        // line below (comments/attributes transparent, blank stops)
+        let target = if !l.code.trim().is_empty() {
+            Some(i)
+        } else {
+            let mut tgt = None;
+            for (j, l2) in lines.iter().enumerate().skip(i + 1) {
+                let c2 = l2.code.trim();
+                if c2.is_empty() && l2.comment.trim().is_empty() {
+                    break;
+                }
+                if !c2.is_empty() && !c2.starts_with('#') {
+                    tgt = Some(j);
+                    break;
+                }
+            }
+            tgt
+        };
+        if target.is_none_or(|t| !line_triggers(rule, &lines[t].code)) {
+            diags.push(Diag {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "stale-allow",
+                msg: format!(
+                    "tidy-allow({rule}) does not cover a {rule}-relevant line — \
+                     remove the stale escape"
+                ),
+            });
+        }
+    }
+    diags
+}
