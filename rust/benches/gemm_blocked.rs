@@ -8,7 +8,9 @@
 //! cargo bench --bench gemm_blocked -- --test  # CI smoke: tiny shapes
 //! ```
 
+use lprl::lowp::{HalfFormat, Precision};
 use lprl::nn::gemm::{self, reference};
+use lprl::nn::simd;
 use lprl::rngs::Pcg64;
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -32,6 +34,50 @@ impl Row {
     fn gflops(&self) -> f64 {
         2.0 * (self.m * self.k * self.n) as f64 / (self.blocked_ms * 1e6)
     }
+}
+
+/// One packed-half GEMM measurement: the u16-storage kernel pinned to a
+/// SIMD level, against the blocked f32 kernel at the same shape.
+struct HalfRow {
+    fmt: &'static str,
+    level: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    half_ms: f64,
+    f32_ms: f64,
+    scalar_ms: f64,
+}
+
+impl HalfRow {
+    /// Throughput vs the f32 B-operand path (the bandwidth win).
+    fn speedup_vs_f32(&self) -> f64 {
+        self.f32_ms / self.half_ms
+    }
+
+    /// Throughput vs the scalar widening oracle (the SIMD win).
+    fn speedup_vs_scalar(&self) -> f64 {
+        self.scalar_ms / self.half_ms
+    }
+
+    /// Packed B-panel stream rate in GB/s (2 bytes per weight).
+    fn b_gbs(&self) -> f64 {
+        2.0 * (self.k * self.n) as f64 / (self.half_ms * 1e6)
+    }
+}
+
+/// Median wall time of `f` over `iters` runs, in ms.
+fn median_ms(iters: usize, mut f: impl FnMut()) -> f64 {
+    f(); // warmup (also faults in the buffers)
+    let mut times: Vec<f64> = (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1000.0
+        })
+        .collect();
+    times.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    times[times.len() / 2]
 }
 
 /// Median-of-iters wall time for one gemm call, in ms.
@@ -78,7 +124,52 @@ fn bench_shape(m: usize, k: usize, n: usize, iters: usize, rng: &mut Pcg64) -> V
     rows
 }
 
-fn write_json(rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+/// Bench `gemm_nt` with the B operand packed to 16-bit storage, per
+/// format and per available SIMD level (scalar oracle always included,
+/// so the JSON records the widening cost even on fast machines).
+fn bench_half_shape(m: usize, k: usize, n: usize, iters: usize, rng: &mut Pcg64) -> Vec<HalfRow> {
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let bf: Vec<f32> = (0..n * k).map(|_| rng.normal_f32()).collect();
+    let mut c = vec![0.0f32; m * n];
+    let f32_ms = median_ms(iters, || {
+        c.iter_mut().for_each(|v| *v = 0.0);
+        gemm::gemm_nt_bias_q(&a, &bf, &mut c, m, k, n, None, Precision::Fp32);
+    });
+    let detected = simd::detect();
+    let mut rows = Vec::new();
+    for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+        let mut b = vec![0u16; n * k];
+        fmt.pack_slice(&bf, &mut b);
+        let mut level_ms = Vec::new();
+        for level in [simd::Level::Scalar, detected] {
+            if level_ms.iter().any(|&(l, _)| l == level) {
+                continue; // scalar machine: detected level IS the oracle
+            }
+            let ms = median_ms(iters, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                gemm::gemm_nt_bias_q_half_at(level, &a, &b, fmt, &mut c, m, k, n, None, Precision::Fp32);
+            });
+            level_ms.push((level, ms));
+        }
+        std::hint::black_box(&c);
+        let scalar_ms = level_ms[0].1;
+        for (level, half_ms) in level_ms {
+            let row = HalfRow { fmt: fmt.name(), level: level.name(), m, k, n, half_ms, f32_ms, scalar_ms };
+            println!(
+                "gemm_nt_half {:<4} {:<6} {m:>5}x{k:<5}x{n:<5} {half_ms:>9.2} ms  B {:>6.1} GB/s  vs f32 {:>5.2}x  vs scalar {:>5.2}x",
+                row.fmt,
+                row.level,
+                row.b_gbs(),
+                row.speedup_vs_f32(),
+                row.speedup_vs_scalar()
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+fn write_json(rows: &[Row], half: &[HalfRow]) -> std::io::Result<std::path::PathBuf> {
     let mut out = String::new();
     out.push_str("{\n  \"bench\": \"gemm\",\n  \"unit\": \"ms\",\n  \"shapes\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -88,6 +179,32 @@ fn write_json(rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
             r.op, r.m, r.k, r.n, r.blocked_ms, r.reference_ms, r.speedup(), r.gflops()
         );
         out.push_str(if i + 1 < rows.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    let _ = write!(out, "  \"cpu\": \"{}\"", simd::feature_summary());
+    out.push_str(",\n");
+    // half_storage[]: the bandwidth win — detected level vs the f32 path
+    let detected = simd::detect().name();
+    out.push_str("  \"half_storage\": [\n");
+    let hs: Vec<&HalfRow> = half.iter().filter(|r| r.level == detected).collect();
+    for (i, r) in hs.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"op\": \"gemm_nt_half\", \"fmt\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"half_ms\": {:.4}, \"f32_ms\": {:.4}, \"speedup_vs_f32\": {:.3}, \"b_gbs\": {:.2}}}",
+            r.fmt, r.m, r.k, r.n, r.half_ms, r.f32_ms, r.speedup_vs_f32(), r.b_gbs()
+        );
+        out.push_str(if i + 1 < hs.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    // simd[]: every measured level, so the scalar-oracle cost is tracked
+    out.push_str("  \"simd\": [\n");
+    for (i, r) in half.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"fmt\": \"{}\", \"level\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"ms\": {:.4}, \"speedup_vs_scalar\": {:.3}}}",
+            r.fmt, r.level, r.m, r.k, r.n, r.half_ms, r.speedup_vs_scalar()
+        );
+        out.push_str(if i + 1 < half.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
     // repo root = parent of the package dir
@@ -103,11 +220,14 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
     let mut rng = Pcg64::seed(1);
     let mut rows = Vec::new();
+    println!("simd: {}", simd::feature_summary());
     if smoke {
-        // CI smoke: exercise both the pooled and serial paths quickly
+        // CI smoke: exercise both the pooled and serial paths quickly,
+        // plus the packed-half kernels at every available SIMD level
         println!("gemm bench smoke (--test): tiny shapes, no JSON");
         rows.extend(bench_shape(48, 64, 56, 2, &mut rng));
         rows.extend(bench_shape(130, 70, 90, 2, &mut rng));
+        bench_half_shape(48, 64, 56, 2, &mut rng);
         return;
     }
     println!("blocked GEMM backend vs seed row-parallel scalar GEMM:");
@@ -116,7 +236,11 @@ fn main() {
     rows.extend(bench_shape(512, 1024, 1024, 5, &mut rng));
     rows.extend(bench_shape(256, 256, 256, 9, &mut rng));
     rows.extend(bench_shape(64, 1024, 1024, 5, &mut rng));
-    match write_json(&rows) {
+    println!("packed 16-bit B operand (half storage) vs blocked f32:");
+    let mut half = Vec::new();
+    half.extend(bench_half_shape(512, 1024, 1024, 5, &mut rng));
+    half.extend(bench_half_shape(64, 1024, 1024, 5, &mut rng));
+    match write_json(&rows, &half) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
     }

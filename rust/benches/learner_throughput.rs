@@ -7,11 +7,13 @@
 //! * **micro** — the isolated learner loop (pre-filled replay → round
 //!   arena → `SacAgent::update_round`), with a counting global
 //!   allocator reporting steady-state heap allocations per update.
-//!   The states path is fully allocation-free after warm-up — sampling,
-//!   forwards, backwards, optimizer, EMA all reuse workspace buffers —
-//!   and the bench asserts `allocs_per_update == 0` for it. The pixels
-//!   path still allocates conv/encoder activations (tracked here so a
-//!   future PR can drive it to zero too);
+//!   Both the states and the pixels paths are fully allocation-free
+//!   after warm-up — sampling, forwards (incl. conv im2col and the
+//!   encoder walks), backwards, optimizer, EMA all reuse workspace
+//!   buffers — and the bench asserts `allocs_per_update == 0` for
+//!   every preset. A `half_storage` section times the same loops with
+//!   the read-only weight tiers packed to 16 bits (SIMD widening
+//!   GEMMs), which must also stay allocation-free;
 //! * **train** — full `coordinator::train` runs (states + pixels,
 //!   strict + async) reporting the `TrainOutcome` updates/sec next to
 //!   collection throughput.
@@ -27,7 +29,7 @@
 
 use lprl::config::RunConfig;
 use lprl::coordinator::train;
-use lprl::lowp::Precision;
+use lprl::lowp::{HalfFormat, Precision};
 use lprl::nn::Tensor;
 use lprl::replay::{ReplayBuffer, RoundArena, Storage};
 use lprl::rngs::Pcg64;
@@ -137,6 +139,8 @@ fn fill_replay(sh: &MicroShape, storage: Storage, n: usize, rng: &mut Pcg64) -> 
 struct MicroRow {
     preset: &'static str,
     obs: &'static str,
+    /// Read-only weight tier: "f32", or a packed 16-bit format.
+    storage: &'static str,
     batch: usize,
     hidden: usize,
     round: usize,
@@ -144,8 +148,16 @@ struct MicroRow {
     allocs_per_update: f64,
 }
 
-fn micro_bench(name: &'static str, sh: &MicroShape, rounds: usize) -> MicroRow {
+fn micro_bench(
+    name: &'static str,
+    sh: &MicroShape,
+    rounds: usize,
+    half: Option<HalfFormat>,
+) -> MicroRow {
     let mut agent = build_agent(name, sh, 5);
+    if let Some(fmt) = half {
+        agent.set_half_storage(fmt);
+    }
     let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
     let mut rng = Pcg64::seed(11);
     let replay = {
@@ -171,6 +183,7 @@ fn micro_bench(name: &'static str, sh: &MicroShape, rounds: usize) -> MicroRow {
     MicroRow {
         preset: name,
         obs: if sh.pixels { "pixels" } else { "states" },
+        storage: half.map_or("f32", HalfFormat::name),
         batch: sh.batch,
         hidden: sh.hidden,
         round: sh.round,
@@ -324,6 +337,7 @@ fn train_bench(
 
 fn write_json(
     micro: &[MicroRow],
+    half_rows: &[MicroRow],
     pairs: &[PairRow],
     trains: &[TrainRow],
 ) -> std::io::Result<std::path::PathBuf> {
@@ -350,10 +364,19 @@ fn write_json(
     for (i, r) in micro.iter().enumerate() {
         let _ = write!(
             out,
-            "    {{\"preset\": \"{}\", \"obs\": \"{}\", \"batch\": {}, \"hidden\": {}, \"round\": {}, \"updates_per_sec\": {:.2}, \"allocs_per_update\": {:.1}}}",
-            r.preset, r.obs, r.batch, r.hidden, r.round, r.updates_per_sec, r.allocs_per_update
+            "    {{\"preset\": \"{}\", \"obs\": \"{}\", \"storage\": \"{}\", \"batch\": {}, \"hidden\": {}, \"round\": {}, \"updates_per_sec\": {:.2}, \"allocs_per_update\": {:.1}}}",
+            r.preset, r.obs, r.storage, r.batch, r.hidden, r.round, r.updates_per_sec, r.allocs_per_update
         );
         out.push_str(if i + 1 < micro.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"half_storage\": [\n");
+    for (i, r) in half_rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"obs\": \"{}\", \"storage\": \"{}\", \"batch\": {}, \"hidden\": {}, \"round\": {}, \"updates_per_sec\": {:.2}, \"allocs_per_update\": {:.1}}}",
+            r.preset, r.obs, r.storage, r.batch, r.hidden, r.round, r.updates_per_sec, r.allocs_per_update
+        );
+        out.push_str(if i + 1 < half_rows.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ],\n  \"train\": [\n");
     for (i, r) in trains.iter().enumerate() {
@@ -375,6 +398,7 @@ fn write_json(
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--test");
+    println!("simd: {}", lprl::nn::simd::feature_summary());
 
     // -- correctness gates ------------------------------------------------
     let states_gate = MicroShape {
@@ -442,6 +466,7 @@ fn main() {
             vec![
                 ("fp32", MicroShape { obs_dim: 6, act_dim: 2, hidden: 32, batch: 16, round: 4, pixels: false, img: 0, filters: 0 }),
                 ("fp16_ours", MicroShape { obs_dim: 6, act_dim: 2, hidden: 32, batch: 16, round: 4, pixels: false, img: 0, filters: 0 }),
+                ("fp16_ours", MicroShape { obs_dim: 8, act_dim: 2, hidden: 24, batch: 4, round: 3, pixels: true, img: 17, filters: 4 }),
             ],
             10,
         )
@@ -457,21 +482,46 @@ fn main() {
     };
     let mut micro = Vec::new();
     for &(name, ref sh) in &micro_shapes {
-        let row = micro_bench(name, sh, micro_rounds);
+        let row = micro_bench(name, sh, micro_rounds, None);
         println!(
             "micro {:>10} {:<6} batch {:>3} hidden {:>3} round {}: {:>9.1} upd/s  {:>7.1} allocs/upd",
             row.preset, row.obs, row.batch, row.hidden, row.round, row.updates_per_sec, row.allocs_per_update
         );
-        // steady-state zero-allocation gate: the states learner loop must
-        // not touch the heap once every workspace buffer is warm
-        if !sh.pixels {
+        // steady-state zero-allocation gate: states AND pixels — the
+        // whole learner loop (conv im2col and the encoder walks
+        // included) must not touch the heap once every buffer is warm
+        assert_eq!(
+            row.allocs_per_update, 0.0,
+            "{name} {} learner loop allocated in steady state",
+            row.obs
+        );
+        println!("alloc gate [{name} {}]: 0 allocs/update  OK", row.obs);
+        micro.push(row);
+    }
+
+    // -- half_storage: the same loops with packed read-only weight tiers --
+    let mut half_rows = Vec::new();
+    for &(name, ref sh) in &micro_shapes {
+        if name == "fp32" {
+            continue; // the knob targets the low-precision presets
+        }
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            if sh.pixels && fmt == HalfFormat::Bf16 {
+                continue; // one format suffices for the slow conv path
+            }
+            let row = micro_bench(name, sh, micro_rounds, Some(fmt));
+            println!(
+                "half_storage {:>10} {:<6} [{}] batch {:>3} hidden {:>3} round {}: {:>9.1} upd/s  {:>7.1} allocs/upd",
+                row.preset, row.obs, row.storage, row.batch, row.hidden, row.round,
+                row.updates_per_sec, row.allocs_per_update
+            );
             assert_eq!(
                 row.allocs_per_update, 0.0,
-                "{name} states learner loop allocated in steady state"
+                "{name} {} [{}] half-storage loop allocated in steady state",
+                row.obs, row.storage
             );
-            println!("alloc gate [{name} states]: 0 allocs/update  OK");
+            half_rows.push(row);
         }
-        micro.push(row);
     }
 
     // -- train: updates/sec inside the full trainer -----------------------
@@ -499,7 +549,7 @@ fn main() {
         println!("smoke mode: no JSON written");
         return;
     }
-    match write_json(&micro, &pairs, &trains) {
+    match write_json(&micro, &half_rows, &pairs, &trains) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_learner.json: {e}"),
     }

@@ -1,8 +1,13 @@
 //! Bench: quantization throughput — the single hottest operation in the
 //! simulated-precision engine (every tensor op ends with a quantize
 //! pass). Figure 4's sweep and all fp16 runs are bounded by this.
+//!
+//! Also times the native 16-bit storage codecs (`HalfTensor`
+//! pack/unpack, in GB/s of f32 moved): the storage tier's snapshot
+//! publish and per-sync mirror refresh go through these, so their cost
+//! bounds how often repacking can run.
 
-use lprl::lowp::{e5m, FloatFormat, OverflowMode, RoundMode, BF16, FP16};
+use lprl::lowp::{e5m, FloatFormat, HalfFormat, HalfTensor, OverflowMode, RoundMode, BF16, FP16};
 use lprl::rngs::Pcg64;
 use std::time::Instant;
 
@@ -49,4 +54,26 @@ fn main() {
     // subnormal-heavy input (the slow path)
     let tiny: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 1e-6).collect();
     bench_fmt("fp16 on subnormal inputs", FP16, &tiny, iters);
+
+    // native 16-bit storage codecs: GB/s of f32 source moved per pack /
+    // unpack pass (repack_from is the per-sync mirror-refresh path,
+    // unpack_into the snapshot-decode path)
+    println!("\nHalfTensor pack/unpack throughput ({} elems):", n);
+    let src_bytes = (n * std::mem::size_of::<f32>()) as f64;
+    let mut wide = vec![0.0f32; n];
+    for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+        let mut ht = HalfTensor::pack(fmt, &[n], &xs); // warmup + alloc
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            ht.repack_from(&xs);
+        }
+        let pack_gbs = src_bytes * iters as f64 / t0.elapsed().as_nanos() as f64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            ht.unpack_into(&mut wide);
+        }
+        let unpack_gbs = src_bytes * iters as f64 / t0.elapsed().as_nanos() as f64;
+        println!("{:<28} pack {pack_gbs:>6.2} GB/s  unpack {unpack_gbs:>6.2} GB/s", fmt.name());
+        std::hint::black_box((&ht, &wide));
+    }
 }

@@ -1,7 +1,10 @@
 //! Bench: regenerate the paper's Table 3 (pixels) and Table 11 (states)
-//! memory sweeps at paper scale, plus measured replay-buffer bytes.
+//! memory sweeps at paper scale, plus measured replay-buffer bytes and
+//! measured policy-snapshot bytes across the native storage tiers.
 
+use lprl::lowp::{HalfFormat, Precision};
 use lprl::replay::{ReplayBuffer, Storage};
+use lprl::sac::{Methods, SacAgent, SacConfig};
 
 fn main() -> anyhow::Result<()> {
     let kv: Vec<(String, String)> = vec![("seeds".into(), "1".into())];
@@ -14,6 +17,37 @@ fn main() -> anyhow::Result<()> {
     for (name, st) in [("fp32", Storage::F32), ("fp16", Storage::F16)] {
         let buf = ReplayBuffer::new(1000, &[9, 84, 84], 6, st);
         println!("  {name}: {:.1} MB per 1k transitions", buf.bytes() as f64 / 1e6);
+    }
+
+    // measured (not modeled) policy-snapshot resident bytes: f32 masters
+    // vs the native 16-bit storage tier (packed weights, masters
+    // dropped; only biases stay f32)
+    println!("\npolicy snapshot resident weight bytes (measured, paper-scale nets):");
+    let mut states =
+        SacAgent::new(SacConfig::states(17, 6, 1024), Methods::ours(), Precision::fp16(), 1);
+    let mut pixels = SacAgent::new_pixels(
+        SacConfig::pixels(50, 6, 1024),
+        Methods::ours(),
+        Precision::fp16(),
+        1,
+        9,
+        84,
+        32,
+    );
+    for (name, agent) in [("states 17-d, hidden 1024", &mut states), ("pixels 9x84x84, 32 filt", &mut pixels)] {
+        let f32_bytes = agent.policy().weight_bytes();
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let mut snap = agent.policy();
+            snap.pack_weights(fmt);
+            let packed = snap.weight_bytes();
+            println!(
+                "  {name}: f32 {:>7.3} MB -> {:<4} {:>7.3} MB ({:.2}x smaller)",
+                f32_bytes as f64 / 1e6,
+                fmt.name(),
+                packed as f64 / 1e6,
+                f32_bytes as f64 / packed as f64
+            );
+        }
     }
     Ok(())
 }

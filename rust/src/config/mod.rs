@@ -4,7 +4,7 @@
 //!
 //! Precedence: defaults < config file < CLI overrides.
 
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, Precision};
 use crate::sac::Methods;
 use std::collections::BTreeMap;
 
@@ -64,6 +64,12 @@ pub struct RunConfig {
     pub init_temp: f32,
     /// Lower log-σ bound override (0 = paper default).
     pub min_log_sig: f32,
+    /// Storage tier for the read-only heavyweights (target-network
+    /// mirrors and policy snapshots): `"f32"` keeps everything unpacked;
+    /// `"f16"`/`"bf16"` keep those weights in native 16-bit storage,
+    /// streamed through the SIMD widening GEMM kernels (see
+    /// `SacAgent::set_half_storage` for the quantize-mirror semantics).
+    pub storage: String,
     /// Output directory for CSV results.
     pub out_dir: String,
 }
@@ -94,6 +100,7 @@ impl Default for RunConfig {
             tau: 0.0,
             init_temp: 0.0,
             min_log_sig: 0.0,
+            storage: "f32".into(),
             out_dir: "results".into(),
         }
     }
@@ -128,6 +135,13 @@ impl RunConfig {
         parse_preset(&self.preset)
     }
 
+    /// Decode the `storage` knob: `None` for the f32 tier, the packed
+    /// format otherwise. Unknown spellings are caught by
+    /// [`RunConfig::validate`]; here they fall back to f32.
+    pub fn half_storage(&self) -> Option<HalfFormat> {
+        HalfFormat::parse(&self.storage).flatten()
+    }
+
     /// Validate the invariants that should fail at config time rather
     /// than deep inside a run: unknown task names (no silent
     /// action-repeat default — see `envs::try_action_repeat`) and
@@ -151,6 +165,9 @@ impl RunConfig {
         }
         if self.queue_rounds == 0 {
             return Err("queue_rounds must be >= 1".into());
+        }
+        if HalfFormat::parse(&self.storage).is_none() {
+            return Err(format!("unknown storage {:?} (f32|f16|bf16)", self.storage));
         }
         if self.eval_every == 0 {
             return Err("eval_every must be >= 1".into());
@@ -187,6 +204,7 @@ impl RunConfig {
             "tau" => self.tau = p(value).unwrap_or(self.tau),
             "init_temp" => self.init_temp = p(value).unwrap_or(self.init_temp),
             "min_log_sig" => self.min_log_sig = p(value).unwrap_or(self.min_log_sig),
+            "storage" => self.storage = value.into(),
             "out_dir" => self.out_dir = value.into(),
             _ => return false,
         }
@@ -342,6 +360,22 @@ mod tests {
         assert!(c.validate().unwrap_err().contains("queue_rounds"));
         c.queue_rounds = 1;
         assert!(c.validate().is_ok());
+        c.storage = "f24".into();
+        assert!(c.validate().unwrap_err().contains("storage"));
+        c.storage = "bf16".into();
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn storage_knob_decodes() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.half_storage(), None, "default keeps the f32 tier");
+        assert!(c.set("storage", "f16"));
+        assert_eq!(c.half_storage(), Some(HalfFormat::F16));
+        assert!(c.set("storage", "bf16"));
+        assert_eq!(c.half_storage(), Some(HalfFormat::Bf16));
+        assert!(c.set("storage", "f32"));
+        assert_eq!(c.half_storage(), None);
     }
 
     #[test]

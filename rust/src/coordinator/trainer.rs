@@ -257,7 +257,7 @@ pub(super) fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> Sa
     if cfg.min_log_sig != 0.0 {
         sac_cfg.log_sig_lo = cfg.min_log_sig;
     }
-    if cfg.pixels {
+    let mut agent = if cfg.pixels {
         SacAgent::new_pixels(
             sac_cfg,
             methods,
@@ -269,7 +269,11 @@ pub(super) fn build_agent(cfg: &RunConfig, obs_dim: usize, act_dim: usize) -> Sa
         )
     } else {
         SacAgent::new(sac_cfg, methods, prec, cfg.seed)
+    };
+    if let Some(fmt) = cfg.half_storage() {
+        agent.set_half_storage(fmt);
     }
+    agent
 }
 
 
@@ -739,6 +743,22 @@ mod tests {
         // evaluator flags the crash and scores it 0
         assert_eq!(out.eval_curve.points[0], ((60 * repeat) as f64, 0.0));
         assert_eq!(out.eval_curve.points[1], (((cfg.steps) * repeat) as f64, 0.0));
+    }
+
+    #[test]
+    fn storage_knob_reaches_the_agent_and_run_matches_f32_tier() {
+        // the knob must thread through build_agent, and under an fp16
+        // store an f16 read-only tier is lossless: the whole training
+        // run must reproduce the unpacked run's eval curve exactly
+        let mut cfg = quick_cfg();
+        cfg.preset = "fp16_ours".into();
+        let plain = train(&cfg);
+        cfg.storage = "f16".into();
+        let agent = build_agent(&cfg, 3, 1);
+        assert_eq!(agent.half_storage(), Some(crate::lowp::HalfFormat::F16));
+        let packed = train(&cfg);
+        assert_eq!(plain.eval_curve.points, packed.eval_curve.points);
+        assert_eq!(plain.final_score, packed.final_score);
     }
 
     #[test]

@@ -378,6 +378,28 @@ pub fn f32_to_f16_bits(x: f32) -> u16 {
     }
 }
 
+/// Bit-exact conversion f32 -> bfloat16 bit pattern (RNE). Because bf16
+/// is f32 with the low 16 significand bits dropped (same exponent range,
+/// so even f32 subnormals sit on the same grid), round-to-nearest-even
+/// is one integer add on the f32 bit pattern; overflow lands on the
+/// infinity encoding exactly as IEEE demands. NaNs are quieted so the
+/// truncation cannot turn a signalling payload into an infinity.
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let lsb = (bits >> 16) & 1;
+    ((bits.wrapping_add(0x7fff + lsb)) >> 16) as u16
+}
+
+/// Bit-exact conversion bfloat16 bit pattern -> f32 (always exact): the
+/// bf16 pattern *is* the top half of the f32 pattern.
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
 /// Bit-exact conversion IEEE binary16 bit pattern -> f32 (always exact).
 pub fn f16_bits_to_f32(h: u16) -> f32 {
     let sign = ((h & 0x8000) as u32) << 16;
@@ -621,6 +643,41 @@ mod tests {
                     fmt.man_bits
                 );
             }
+        }
+    }
+
+    #[test]
+    fn bf16_bit_conversion_matches_quantizer() {
+        // the packed bf16 path must agree with the generic simulator on
+        // every value class: normals, subnormals, ties, near-overflow
+        let mut rng = Pcg64::seed(17);
+        for _ in 0..200_000 {
+            let x = f32::from_bits(rng.next_u32());
+            if x.is_nan() {
+                continue;
+            }
+            let via_bits = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            let via_fmt = BF16.quantize(x);
+            assert!(
+                via_bits == via_fmt || (via_bits == 0.0 && via_fmt == 0.0),
+                "x={x:e} ({:#x}) bits={via_bits:e} fmt={via_fmt:e}",
+                x.to_bits()
+            );
+        }
+        // NaN stays NaN (and stays quiet, never an infinity encoding)
+        let q = f32_to_bf16_bits(f32::NAN);
+        assert!(bf16_bits_to_f32(q).is_nan());
+    }
+
+    #[test]
+    fn bf16_roundtrip_all_bit_patterns() {
+        // every finite bf16 bit pattern must round-trip exactly
+        for h in 0..=0xffffu16 {
+            let f = bf16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_bf16_bits(f), h, "h={h:#x} f={f:e}");
         }
     }
 

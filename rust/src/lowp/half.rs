@@ -1,0 +1,223 @@
+//! Packed half-precision storage: the *native* memory tier the rest of
+//! `lowp/` only simulates.
+//!
+//! [`Precision::Sim`](super::Precision) quantizes values but stores them
+//! as f32, so the paper's memory/bandwidth win never materializes.
+//! [`HalfTensor`] stores the bits themselves — one `u16` per element, in
+//! either IEEE binary16 or bfloat16 layout — halving resident bytes and
+//! memory traffic for the read-only heavyweights (frozen policy
+//! snapshots, target-network parameters, packed GEMM B-operands).
+//!
+//! The contract that keeps this tier compatible with the simulated one:
+//! `decode(encode(x))` equals `FloatFormat::quantize(x)` for the
+//! matching format (property-tested in `format.rs`), widening
+//! `u16 -> f32` is always exact, and a pack → unpack round trip is the
+//! identity on format-representable values. Packing a tensor whose
+//! values are already on the format grid is therefore lossless.
+
+use super::format::{bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits};
+use super::{FloatFormat, BF16, FP16};
+
+/// The two 16-bit storage layouts (mirrors `replay::Storage`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HalfFormat {
+    /// IEEE binary16: 5 exponent bits, 10 significand bits.
+    F16,
+    /// bfloat16: 8 exponent bits, 7 significand bits.
+    Bf16,
+}
+
+impl HalfFormat {
+    /// Parse a storage-knob value. `"f32"` is valid but names the
+    /// unpacked tier, hence `None` inside `Some`.
+    pub fn parse(s: &str) -> Option<Option<HalfFormat>> {
+        match s {
+            "f32" => Some(None),
+            "f16" => Some(Some(HalfFormat::F16)),
+            "bf16" => Some(Some(HalfFormat::Bf16)),
+            _ => None,
+        }
+    }
+
+    /// Knob spelling of this format.
+    pub fn name(self) -> &'static str {
+        match self {
+            HalfFormat::F16 => "f16",
+            HalfFormat::Bf16 => "bf16",
+        }
+    }
+
+    /// The simulated format whose value grid this layout stores.
+    pub fn format(self) -> FloatFormat {
+        match self {
+            HalfFormat::F16 => FP16,
+            HalfFormat::Bf16 => BF16,
+        }
+    }
+
+    /// Round `x` into this format and return the 16 stored bits (RNE,
+    /// IEEE overflow-to-infinity).
+    #[inline]
+    pub fn encode(self, x: f32) -> u16 {
+        match self {
+            HalfFormat::F16 => f32_to_f16_bits(x),
+            HalfFormat::Bf16 => f32_to_bf16_bits(x),
+        }
+    }
+
+    /// Widen 16 stored bits back to f32 — always exact.
+    #[inline]
+    pub fn decode(self, h: u16) -> f32 {
+        match self {
+            HalfFormat::F16 => f16_bits_to_f32(h),
+            HalfFormat::Bf16 => bf16_bits_to_f32(h),
+        }
+    }
+
+    /// Pack `src` into `dst` element-wise (`dst.len() == src.len()`).
+    pub fn pack_slice(self, src: &[f32], dst: &mut [u16]) {
+        assert_eq!(src.len(), dst.len());
+        match self {
+            HalfFormat::F16 => {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = f32_to_f16_bits(s);
+                }
+            }
+            HalfFormat::Bf16 => {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = f32_to_bf16_bits(s);
+                }
+            }
+        }
+    }
+
+    /// Unpack `src` into `dst` element-wise (`dst.len() == src.len()`).
+    pub fn unpack_slice(self, src: &[u16], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len());
+        match self {
+            HalfFormat::F16 => {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = f16_bits_to_f32(s);
+                }
+            }
+            HalfFormat::Bf16 => {
+                for (d, &s) in dst.iter_mut().zip(src) {
+                    *d = bf16_bits_to_f32(s);
+                }
+            }
+        }
+    }
+}
+
+/// A u16-backed tensor: the packed storage for read-only weights.
+#[derive(Debug, Clone)]
+pub struct HalfTensor {
+    pub fmt: HalfFormat,
+    pub shape: Vec<usize>,
+    pub data: Vec<u16>,
+}
+
+impl HalfTensor {
+    /// Pack `src` (row-major, `shape.iter().product()` elements).
+    pub fn pack(fmt: HalfFormat, shape: &[usize], src: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), src.len());
+        // tidy-allow(alloc): constructor — packing happens at snapshot
+        // publish / storage-knob setup; update loops refresh through the
+        // allocation-free `repack_from`
+        let mut data = vec![0u16; src.len()];
+        fmt.pack_slice(src, &mut data);
+        // tidy-allow(alloc): constructor owns its shape (a few usizes)
+        HalfTensor { fmt, shape: shape.to_vec(), data }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Resident bytes of the packed payload.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<u16>()
+    }
+
+    /// Widen every element into `dst` (exact).
+    pub fn unpack_into(&self, dst: &mut [f32]) {
+        self.fmt.unpack_slice(&self.data, dst);
+    }
+
+    /// Re-pack from `src` in place — allocation-free (target-network
+    /// mirrors refresh through this after every EMA sync).
+    pub fn repack_from(&mut self, src: &[f32]) {
+        self.fmt.pack_slice(src, &mut self.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    #[test]
+    fn pack_unpack_roundtrip_is_identity_on_representable_values() {
+        let mut rng = Pcg64::seed(5);
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let f = fmt.format();
+            let vals: Vec<f32> = (0..4096).map(|_| f.quantize(rng.normal_f32() * 3.0)).collect();
+            let t = HalfTensor::pack(fmt, &[64, 64], &vals);
+            assert_eq!(t.bytes(), 64 * 64 * 2);
+            let mut back = vec![0.0f32; vals.len()];
+            t.unpack_into(&mut back);
+            assert!(
+                vals.iter().zip(&back).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{}: pack→unpack must be the identity on representable values",
+                fmt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn encode_decode_agrees_with_quantize() {
+        let mut rng = Pcg64::seed(6);
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let f = fmt.format();
+            for _ in 0..50_000 {
+                let x = f32::from_bits(rng.next_u32());
+                if x.is_nan() {
+                    continue;
+                }
+                let via_pack = fmt.decode(fmt.encode(x));
+                let via_fmt = f.quantize(x);
+                assert!(
+                    via_pack == via_fmt || (via_pack == 0.0 && via_fmt == 0.0),
+                    "{}: x={x:e} pack={via_pack:e} fmt={via_fmt:e}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repack_reuses_the_buffer() {
+        let vals = [1.0f32, 2.5, -0.75, 65504.0];
+        let mut t = HalfTensor::pack(HalfFormat::F16, &[4], &vals);
+        let ptr = t.data.as_ptr();
+        t.repack_from(&[0.5, -1.0, 3.0, 0.0]);
+        assert_eq!(t.data.as_ptr(), ptr, "repack must not reallocate");
+        let mut back = [0.0f32; 4];
+        t.unpack_into(&mut back);
+        assert_eq!(back, [0.5, -1.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn parse_knob_values() {
+        assert_eq!(HalfFormat::parse("f32"), Some(None));
+        assert_eq!(HalfFormat::parse("f16"), Some(Some(HalfFormat::F16)));
+        assert_eq!(HalfFormat::parse("bf16"), Some(Some(HalfFormat::Bf16)));
+        assert_eq!(HalfFormat::parse("int8"), None);
+    }
+}

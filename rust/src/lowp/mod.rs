@@ -15,11 +15,16 @@
 //! bits of precision — Figueroa, 1995).
 
 pub mod format;
+pub mod half;
 mod hypot;
 mod kahan;
 mod precision;
 
-pub use format::{f16_bits_to_f32, f32_to_f16_bits, FloatFormat, OverflowMode, RoundMode};
+pub use format::{
+    bf16_bits_to_f32, f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, FloatFormat,
+    OverflowMode, RoundMode,
+};
+pub use half::{HalfFormat, HalfTensor};
 pub use hypot::{hypot_naive, hypot_stable};
 pub use kahan::{KahanScalar, KahanVec};
 pub use precision::Precision;

@@ -51,6 +51,9 @@ USAGE:
        sync_mode=strict|async: async runs the collector in its own
        thread on lagged policy snapshots with pooled env stepping
        (seed-deterministic; queue_rounds=N bounds the transition queue)
+       storage=f32|f16|bf16 keeps the read-only weights (target-network
+       mirrors, policy snapshots) in native 16-bit storage, streamed
+       through the SIMD widening GEMM kernels where the CPU supports it
   lprl exp <name> [key=value ...]                name: fig1..fig12, table2/3/7/10/11, all
   lprl serve [engine=native|pjrt] [key=value ...]
        native: task= preset= hidden= seed= train_steps=    (policy source)
@@ -320,6 +323,7 @@ fn cmd_info() -> anyhow::Result<()> {
     println!("  L2  python/compile/model.py  JAX SAC fwd/bwd+optimizer -> HLO text");
     println!("  L3  rust/src/                coordinator + native engine + serve layer + PJRT runtime");
     println!("tasks: {} + pendulum_swingup", PLANET_TASKS.join(", "));
+    println!("simd: {}", lprl::nn::simd::feature_summary());
     let art = std::path::Path::new("artifacts/manifest.txt");
     println!(
         "artifacts: {}",

@@ -2,22 +2,30 @@
 //! backward. Used by the pixel encoder (paper §4.6: four 3×3 conv layers,
 //! first stride 2, rest stride 1).
 //!
-//! `forward` is `&self` (inference, shareable); the im2col panel the
-//! backward pass reuses is cached in an explicit [`Conv2dWorkspace`] by
-//! `forward_train`.
+//! `forward` is `&self` (inference, shareable); the im2col panel, the
+//! GEMM row buffer, and the backward scratch all live in an explicit
+//! [`Conv2dWorkspace`] owned by the caller, so the `_into` walks are
+//! allocation-free once warm (the pixels-preset update loop runs them at
+//! zero allocations per round, same as the states-preset MLP path).
 
-use super::gemm::{gemm, gemm_nt_bias_q, gemm_tn_bias_q};
+use super::gemm::{gemm, gemm_nt_bias_q, gemm_nt_bias_q_half, gemm_tn_bias_q};
 use super::param::Param;
 use super::tensor::Tensor;
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, HalfTensor, Precision};
 use crate::rngs::Pcg64;
 
-/// Training-time caches for one [`Conv2d`]: the im2col panel of the last
-/// `forward_train` input and its shape.
+/// Caller-owned scratch for one [`Conv2d`]: the im2col panel of the last
+/// `forward_train` input (read by backward), the GEMM row buffer the
+/// forwards assemble into, and the backward's row/weight/column gradient
+/// scratch. All buffers are grown once and reused.
 #[derive(Debug, Clone, Default)]
 pub struct Conv2dWorkspace {
     cols: Vec<f32>, // im2col of last input [B*Ho*Wo, Cin*k*k]
     in_shape: [usize; 4],
+    yrows: Vec<f32>, // forward GEMM output rows [B*Ho*Wo, Cout]
+    dyr: Vec<f32>,   // dy transposed to rows [B*Ho*Wo, Cout]
+    dw: Vec<f32>,    // dW scratch [Cout, Cin*k*k]
+    dcols: Vec<f32>, // dcols scratch [B*Ho*Wo, Cin*k*k]
 }
 
 /// Conv2d: input `[B, Cin, H, W]` → output `[B, Cout, Ho, Wo]`,
@@ -30,6 +38,12 @@ pub struct Conv2d {
     pub cout: usize,
     pub k: usize,
     pub stride: usize,
+    /// Packed 16-bit weight storage (see [`Linear::pack_weights`]
+    /// for the quantize-mirror contract) — read by the inference
+    /// forwards through the widening half-GEMM when present.
+    ///
+    /// [`Linear::pack_weights`]: super::Linear::pack_weights
+    pub w_half: Option<HalfTensor>,
 }
 
 impl Conv2d {
@@ -38,7 +52,39 @@ impl Conv2d {
         let mut w = Param::new(format!("{name}.w"), &[cout, fan]);
         w.w = super::init::orthogonal_init(rng, cout, fan, 1.0);
         let b = Param::new(format!("{name}.b"), &[cout]);
-        Conv2d { w, b, cin, cout, k, stride }
+        Conv2d { w, b, cin, cout, k, stride, w_half: None }
+    }
+
+    /// Pack the kernel weights into 16-bit storage, quantize-mirroring
+    /// the f32 master (same contract as `Linear::pack_weights`).
+    pub fn pack_weights(&mut self, fmt: HalfFormat) {
+        let packed = HalfTensor::pack(fmt, &self.w.shape, &self.w.w);
+        packed.unpack_into(&mut self.w.w);
+        self.w_half = Some(packed);
+    }
+
+    /// Drop the f32 weight master + gradient buffer (frozen snapshots).
+    pub fn drop_master(&mut self) {
+        assert!(self.w_half.is_some(), "{}: pack_weights before drop_master", self.w.name);
+        let _ = std::mem::take(&mut self.w.w);
+        let _ = std::mem::take(&mut self.w.g);
+    }
+
+    /// Refresh the packed mirror from the master, allocation-free, and
+    /// quantize-mirror the master back. No-op when unpacked.
+    pub fn repack_weights(&mut self) {
+        if let Some(h) = &mut self.w_half {
+            h.repack_from(&self.w.w);
+            h.unpack_into(&mut self.w.w);
+        }
+    }
+
+    /// Resident weight bytes across storage tiers.
+    pub fn weight_bytes(&self) -> usize {
+        let f32s = std::mem::size_of::<f32>();
+        self.w.w.len() * f32s
+            + self.w_half.as_ref().map_or(0, |h| h.bytes())
+            + self.b.w.len() * f32s
     }
 
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
@@ -46,14 +92,13 @@ impl Conv2d {
     }
 
     /// im2col: `[B, Cin, H, W]` → `[B*Ho*Wo, Cin*k*k]` rows of receptive
-    /// fields.
-    fn im2col(&self, x: &Tensor) -> (Vec<f32>, usize, usize) {
+    /// fields, written into `cols` (grown once, reused — every element
+    /// is overwritten).
+    fn im2col_into(&self, x: &Tensor, cols: &mut Vec<f32>) -> (usize, usize) {
         let [b, c, h, w] = [x.shape[0], x.shape[1], x.shape[2], x.shape[3]];
         let (ho, wo) = self.out_hw(h, w);
         let fan = c * self.k * self.k;
-        // tidy-allow(alloc): pixels-path im2col panel; threading a caller
-        // workspace through the encoder is a ROADMAP carryover
-        let mut cols = vec![0.0f32; b * ho * wo * fan];
+        cols.resize(b * ho * wo * fan, 0.0);
         for bi in 0..b {
             for oy in 0..ho {
                 for ox in 0..wo {
@@ -72,75 +117,136 @@ impl Conv2d {
                 }
             }
         }
-        (cols, ho, wo)
+        (ho, wo)
     }
 
     /// GEMM over a prepared im2col panel + transpose to NCHW, with the
-    /// bias add + quantize fused into the GEMM epilogue.
-    fn forward_from_cols(
+    /// bias add + quantize fused into the GEMM epilogue. The row buffer
+    /// comes from the workspace and `out` is shape-ensured — both reused
+    /// across calls. Reads the packed weight tier when present
+    /// (bitwise identical by the quantize-mirror contract).
+    fn forward_from_cols_into(
         &self,
         cols: &[f32],
         b: usize,
         ho: usize,
         wo: usize,
         prec: Precision,
-    ) -> Tensor {
+        yrows: &mut Vec<f32>,
+        out: &mut Tensor,
+    ) {
         let fan = self.cin * self.k * self.k;
         let rows = b * ho * wo;
+        yrows.resize(rows * self.cout, 0.0);
+        // the GEMM accumulates — zero the reused rows so results match a
+        // fresh buffer bitwise
+        yrows.fill(0.0);
         // y_rows[rows, cout] = cols[rows, fan] @ w[cout, fan]ᵀ
-        // tidy-allow(alloc): pixels-path activation buffer (states preset
-        // never reaches conv); workspace reuse is a ROADMAP carryover
-        let mut yrows = vec![0.0f32; rows * self.cout];
-        gemm_nt_bias_q(cols, &self.w.w, &mut yrows, rows, fan, self.cout, Some(&self.b.w), prec);
+        if let Some(h) = &self.w_half {
+            gemm_nt_bias_q_half(
+                cols,
+                &h.data,
+                h.fmt,
+                yrows,
+                rows,
+                fan,
+                self.cout,
+                Some(&self.b.w),
+                prec,
+            );
+        } else {
+            gemm_nt_bias_q(cols, &self.w.w, yrows, rows, fan, self.cout, Some(&self.b.w), prec);
+        }
         // transpose the finished rows to [B, Cout, Ho, Wo]
-        let mut y = Tensor::zeros(&[b, self.cout, ho, wo]);
+        out.ensure_shape(&[b, self.cout, ho, wo]);
         for bi in 0..b {
             for oy in 0..ho {
                 for ox in 0..wo {
                     let r = ((bi * ho + oy) * wo + ox) * self.cout;
                     for co in 0..self.cout {
-                        y.data[((bi * self.cout + co) * ho + oy) * wo + ox] = yrows[r + co];
+                        out.data[((bi * self.cout + co) * ho + oy) * wo + ox] = yrows[r + co];
                     }
                 }
             }
         }
-        y
     }
 
     /// Inference forward; output quantized. Bitwise identical to
-    /// [`Conv2d::forward_train`].
+    /// [`Conv2d::forward_train`]. Allocating wrapper for cold callers —
+    /// the encoder walks use [`Conv2d::forward_into`] with shared scratch.
     pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
+        let mut ws = Conv2dWorkspace::default();
+        let mut y = Tensor::default();
+        self.forward_into(x, prec, &mut ws, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`Conv2d::forward`]: im2col panel and GEMM
+    /// rows live in `ws`, the output in `out`, all reused when shapes
+    /// repeat.
+    pub fn forward_into(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        ws: &mut Conv2dWorkspace,
+        out: &mut Tensor,
+    ) {
         assert_eq!(x.shape.len(), 4);
         assert_eq!(x.shape[1], self.cin);
-        let (cols, ho, wo) = self.im2col(x);
-        self.forward_from_cols(&cols, x.shape[0], ho, wo, prec)
+        let Conv2dWorkspace { cols, yrows, .. } = ws;
+        let (ho, wo) = self.im2col_into(x, cols);
+        self.forward_from_cols_into(cols, x.shape[0], ho, wo, prec, yrows, out);
     }
 
     /// Training forward: keeps the im2col panel in `ws` for
     /// [`Conv2d::backward`].
     pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut Conv2dWorkspace) -> Tensor {
-        assert_eq!(x.shape.len(), 4);
-        assert_eq!(x.shape[1], self.cin);
-        let (cols, ho, wo) = self.im2col(x);
-        let y = self.forward_from_cols(&cols, x.shape[0], ho, wo, prec);
-        ws.cols = cols;
-        ws.in_shape = [x.shape[0], self.cin, x.shape[2], x.shape[3]];
+        let mut y = Tensor::default();
+        self.forward_train_into(x, prec, ws, &mut y);
         y
     }
 
+    /// Allocation-free twin of [`Conv2d::forward_train`].
+    pub fn forward_train_into(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        ws: &mut Conv2dWorkspace,
+        out: &mut Tensor,
+    ) {
+        self.forward_into(x, prec, ws, out);
+        ws.in_shape = [x.shape[0], self.cin, x.shape[2], x.shape[3]];
+    }
+
     /// Backward; accumulates dW/db, returns dx `[B, Cin, H, W]`.
-    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &Conv2dWorkspace) -> Tensor {
+    /// Allocating wrapper — the encoder walk uses
+    /// [`Conv2d::backward_into`] with shared scratch.
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &mut Conv2dWorkspace) -> Tensor {
+        let mut dx = Tensor::default();
+        self.backward_into(dy, prec, ws, &mut dx);
+        dx
+    }
+
+    /// Allocation-free twin of [`Conv2d::backward`]: the dy-rows, dW and
+    /// dcols scratch live in `ws` and `dx` is written into a caller
+    /// buffer, all reused when shapes repeat.
+    pub fn backward_into(
+        &mut self,
+        dy: &Tensor,
+        prec: Precision,
+        ws: &mut Conv2dWorkspace,
+        dx: &mut Tensor,
+    ) {
         let [b, cin, h, w] = ws.in_shape;
         assert!(b > 0, "forward_train workspace missing");
         let (ho, wo) = self.out_hw(h, w);
         assert_eq!(dy.shape, [b, self.cout, ho, wo]);
         let fan = cin * self.k * self.k;
         let rows = b * ho * wo;
+        let Conv2dWorkspace { cols, dyr, dw, dcols, .. } = ws;
 
-        // dy as rows [rows, cout]
-        // tidy-allow(alloc): pixels-path gradient scratch; workspace reuse
-        // is a ROADMAP carryover
-        let mut dyr = vec![0.0f32; rows * self.cout];
+        // dy as rows [rows, cout] (every element overwritten)
+        dyr.resize(rows * self.cout, 0.0);
         for bi in 0..b {
             for co in 0..self.cout {
                 for oy in 0..ho {
@@ -158,22 +264,22 @@ impl Conv2d {
             }
         }
         prec.q_slice(&mut self.b.g);
-        // dW[cout, fan] = dyrᵀ @ cols (quantize fused into the epilogue)
-        // tidy-allow(alloc): pixels-path gradient scratch; workspace reuse
-        // is a ROADMAP carryover
-        let mut dw = vec![0.0f32; self.cout * fan];
-        gemm_tn_bias_q(&dyr, &ws.cols, &mut dw, self.cout, rows, fan, None, prec);
-        for (acc, d) in self.w.g.iter_mut().zip(&dw) {
+        // dW[cout, fan] = dyrᵀ @ cols (quantize fused into the epilogue);
+        // the GEMM accumulates — zero the reused scratch
+        dw.resize(self.cout * fan, 0.0);
+        dw.fill(0.0);
+        gemm_tn_bias_q(dyr, cols, dw, self.cout, rows, fan, None, prec);
+        for (acc, d) in self.w.g.iter_mut().zip(dw.iter()) {
             *acc += d;
         }
         prec.q_slice(&mut self.w.g);
-        // dcols[rows, fan] = dyr @ w
-        // tidy-allow(alloc): pixels-path gradient scratch; workspace reuse
-        // is a ROADMAP carryover
-        let mut dcols = vec![0.0f32; rows * fan];
-        gemm(&dyr, &self.w.w, &mut dcols, rows, self.cout, fan);
+        // dcols[rows, fan] = dyr @ w — accumulating GEMM, zero first
+        dcols.resize(rows * fan, 0.0);
+        dcols.fill(0.0);
+        gemm(dyr, &self.w.w, dcols, rows, self.cout, fan);
         // col2im scatter-add
-        let mut dx = Tensor::zeros(&[b, cin, h, w]);
+        dx.ensure_shape(&[b, cin, h, w]);
+        dx.data.fill(0.0);
         for bi in 0..b {
             for oy in 0..ho {
                 for ox in 0..wo {
@@ -195,7 +301,6 @@ impl Conv2d {
             }
         }
         dx.quantize(prec);
-        dx
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
@@ -265,7 +370,7 @@ mod tests {
         let mut ws = Conv2dWorkspace::default();
         let y = conv.forward_train(&x, prec, &mut ws);
         conv.zero_grad();
-        let dx = conv.backward(&y.clone(), prec, &ws);
+        let dx = conv.backward(&y.clone(), prec, &mut ws);
 
         let eps = 1e-3f32;
         for &idx in &[0usize, 7, 20, 49] {
@@ -279,7 +384,7 @@ mod tests {
         }
         conv.zero_grad();
         let yy = conv.forward_train(&x, prec, &mut ws);
-        let _ = conv.backward(&yy.clone(), prec, &ws);
+        let _ = conv.backward(&yy.clone(), prec, &mut ws);
         for &idx in &[0usize, 11, 30] {
             let orig = conv.w.w[idx];
             conv.w.w[idx] = orig + eps;
@@ -302,7 +407,7 @@ mod tests {
         assert_eq!(y.shape, vec![1, 2, 1, 1]);
         conv.zero_grad();
         let dy = Tensor::from_vec(&[1, 2, 1, 1], vec![2.0, -3.0]);
-        let _ = conv.backward(&dy, Precision::Fp32, &ws);
+        let _ = conv.backward(&dy, Precision::Fp32, &mut ws);
         assert_eq!(conv.b.g, vec![2.0, -3.0]);
     }
 
@@ -316,6 +421,62 @@ mod tests {
             let a = conv.forward(&x, prec);
             let b = conv.forward_train(&x, prec, &mut ws);
             assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
+    }
+
+    #[test]
+    fn workspace_buffers_are_reused_across_calls() {
+        let mut rng = Pcg64::seed(7);
+        let mut conv = Conv2d::new("c", 2, 4, 3, 2, &mut rng);
+        let x = Tensor::from_vec(&[2, 2, 9, 9], (0..2 * 2 * 81).map(|_| rng.normal_f32()).collect());
+        let mut ws = Conv2dWorkspace::default();
+        let (mut y, mut dx) = (Tensor::default(), Tensor::default());
+        conv.forward_train_into(&x, Precision::Fp32, &mut ws, &mut y);
+        conv.backward_into(&y.clone(), Precision::Fp32, &mut ws, &mut dx);
+        let ptrs = (
+            ws.cols.as_ptr(),
+            ws.yrows.as_ptr(),
+            ws.dyr.as_ptr(),
+            ws.dw.as_ptr(),
+            ws.dcols.as_ptr(),
+            y.data.as_ptr(),
+            dx.data.as_ptr(),
+        );
+        conv.forward_train_into(&x, Precision::Fp32, &mut ws, &mut y);
+        conv.backward_into(&y.clone(), Precision::Fp32, &mut ws, &mut dx);
+        assert_eq!(ptrs.0, ws.cols.as_ptr(), "im2col panel must be reused");
+        assert_eq!(ptrs.1, ws.yrows.as_ptr(), "GEMM rows must be reused");
+        assert_eq!(ptrs.2, ws.dyr.as_ptr(), "dy rows must be reused");
+        assert_eq!(ptrs.3, ws.dw.as_ptr(), "dW scratch must be reused");
+        assert_eq!(ptrs.4, ws.dcols.as_ptr(), "dcols scratch must be reused");
+        assert_eq!(ptrs.5, y.data.as_ptr(), "output tensor must be reused");
+        assert_eq!(ptrs.6, dx.data.as_ptr(), "dx tensor must be reused");
+    }
+
+    #[test]
+    fn packed_conv_matches_master_bitwise() {
+        let mut rng = Pcg64::seed(8);
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let mut conv = Conv2d::new("c", 2, 4, 3, 2, &mut rng);
+            let x =
+                Tensor::from_vec(&[2, 2, 9, 9], (0..2 * 2 * 81).map(|_| rng.normal_f32()).collect());
+            let mut packed = conv.clone();
+            packed.pack_weights(fmt);
+            // quantize-mirror contract: sync the reference to the
+            // rewritten master
+            conv.w.w.clone_from(&packed.w.w);
+            for prec in [Precision::Fp32, Precision::fp16()] {
+                let a = conv.forward(&x, prec);
+                let b = packed.forward(&x, prec);
+                assert!(
+                    a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()),
+                    "{fmt:?}/{prec:?}: packed conv must match the master bitwise"
+                );
+            }
+            let before = packed.forward(&x, Precision::Fp32);
+            packed.drop_master();
+            let after = packed.forward(&x, Precision::Fp32);
+            assert_eq!(before.data, after.data);
         }
     }
 }

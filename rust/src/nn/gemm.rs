@@ -34,8 +34,8 @@
 //! (fp16-naive runs that are already diverging); the amp-style
 //! skip-on-nonfinite optimizer step handles it identically either way.
 
-use super::pool;
-use crate::lowp::Precision;
+use super::{pool, simd};
+use crate::lowp::{HalfFormat, Precision};
 use std::cell::RefCell;
 
 thread_local! {
@@ -48,6 +48,11 @@ thread_local! {
     /// overwritten before the kernels read it, so reuse cannot change
     /// results.
     static PACK: RefCell<Vec<f32>> = RefCell::new(Vec::new());
+    /// Same-lifecycle scratch for the packed-half path: the Bᵀ pack
+    /// stays in u16, so the transpose moves (and the kernels then
+    /// stream) half the bytes of the f32 pack — the storage tier's
+    /// bandwidth win applies to the packing pass itself.
+    static PACK_U16: RefCell<Vec<u16>> = RefCell::new(Vec::new());
 }
 
 /// Run `f` on this thread's packing scratch, sized to `len` elements.
@@ -63,8 +68,32 @@ fn with_pack<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
     })
 }
 
+/// Run `f` on this thread's u16 packing scratch, sized to `len` elements.
+fn with_pack_u16<R>(len: usize, f: impl FnOnce(&mut [u16]) -> R) -> R {
+    PACK_U16.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        if buf.len() < len {
+            // scratch grows to the high-water mark once per thread
+            // (warm-up), then is reused forever
+            buf.resize(len, 0);
+        }
+        f(&mut buf[..len])
+    })
+}
+
 /// Pack `b[n][k]` (row-major) into its transpose `bt[k][n]`.
 fn pack_bt(b: &[f32], bt: &mut [f32], k: usize, n: usize) {
+    for j in 0..n {
+        let src = &b[j * k..(j + 1) * k];
+        for (p, &v) in src.iter().enumerate() {
+            bt[p * n + j] = v;
+        }
+    }
+}
+
+/// Pack `b[n][k]` (row-major, packed-half bits) into its transpose
+/// `bt[k][n]` — a pure u16 move, no widening.
+fn pack_bt_u16(b: &[u16], bt: &mut [u16], k: usize, n: usize) {
     for j in 0..n {
         let src = &b[j * k..(j + 1) * k];
         for (p, &v) in src.iter().enumerate() {
@@ -283,6 +312,147 @@ fn gemm_nt_pair_impl(
     });
 }
 
+// The tiling constants are shared with the simd micro-kernels by
+// contract; a drift here would silently mis-tile the half path.
+const _: () = assert!(MR == simd::MR && NR == simd::NR);
+
+/// [`gemm_nt_bias_q`] with a **packed-half** B operand: `b` holds `n·k`
+/// 16-bit weights in `fmt` layout, widened to f32 inside the micro-
+/// kernels — half the B-operand bytes packed and streamed per call.
+/// Accumulation is f32 in the exact scalar order, so the result is
+/// bitwise identical to [`gemm_nt_bias_q`] on the widened weights,
+/// at every SIMD level (see [`super::simd`]).
+pub fn gemm_nt_bias_q_half(
+    a: &[f32],
+    b: &[u16],
+    fmt: HalfFormat,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_nt_half_impl(a, b, fmt, c, m, k, n, bias, prec, Exec::Auto, simd::detect());
+}
+
+/// [`gemm_nt_bias_q_half`] pinned to an explicit SIMD [`simd::Level`] —
+/// the seam the parity tests and benches use to run the scalar oracle
+/// and the vector path side by side on the same machine.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_bias_q_half_at(
+    level: simd::Level,
+    a: &[f32],
+    b: &[u16],
+    fmt: HalfFormat,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_nt_half_impl(a, b, fmt, c, m, k, n, bias, prec, Exec::Auto, level);
+}
+
+/// Two same-shape [`gemm_nt_bias_q_half`] products under a single pool
+/// dispatch — the twin-critic fast path for packed target/serve weights
+/// (same decomposition and bitwise contract as [`gemm_nt_bias_q_pair`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_bias_q_pair_half(
+    a1: &[f32],
+    b1: &[u16],
+    c1: &mut [f32],
+    bias1: Option<&[f32]>,
+    a2: &[f32],
+    b2: &[u16],
+    c2: &mut [f32],
+    bias2: Option<&[f32]>,
+    fmt: HalfFormat,
+    m: usize,
+    k: usize,
+    n: usize,
+    prec: Precision,
+) {
+    let level = simd::detect();
+    assert_eq!(a1.len(), m * k);
+    assert_eq!(a2.len(), m * k);
+    assert_eq!(b1.len(), n * k);
+    assert_eq!(b2.len(), n * k);
+    check_cb(c1, m, n, bias1);
+    check_cb(c2, m, n, bias2);
+    if m == 0 {
+        return;
+    }
+    // Task decomposition mirrors `gemm_nt_pair_impl`: task t < nb is
+    // head 1's row block t; t >= nb is head 2's block t - nb.
+    let nb = m.div_ceil(MC);
+    let ntasks = 2 * nb;
+    let c1p = SendPtr(c1.as_mut_ptr());
+    let c2p = SendPtr(c2.as_mut_ptr());
+    with_pack_u16(2 * k * n, |pack| {
+        let (bt1, bt2) = pack.split_at_mut(k * n);
+        pack_bt_u16(b1, bt1, k, n);
+        pack_bt_u16(b2, bt2, k, n);
+        let (bt1, bt2): (&[u16], &[u16]) = (bt1, bt2);
+        let body = |t: usize| {
+            let (blk, a, bt, cp, bias) = if t < nb {
+                (t, a1, bt1, c1p, bias1)
+            } else {
+                (t - nb, a2, bt2, c2p, bias2)
+            };
+            let i0 = blk * MC;
+            let i1 = (i0 + MC).min(m);
+            // SAFETY: this task exclusively owns rows i0..i1 of its own
+            // head's output; the two heads write through distinct buffers.
+            unsafe { task_nn_half(a, bt, fmt, level, cp.get(), i0, i1, k, n) };
+            epilogue(cp.get(), i0, i1, n, bias, prec);
+        };
+        let parallel = ntasks > 1 && 2 * m * k * n >= PAR_MIN_MACS;
+        if parallel {
+            pool::global().run(ntasks, body);
+        } else {
+            for t in 0..ntasks {
+                body(t);
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gemm_nt_half_impl(
+    a: &[f32],
+    b: &[u16],
+    fmt: HalfFormat,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    exec: Exec,
+    level: simd::Level,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    check_cb(c, m, n, bias);
+    let cp = SendPtr(c.as_mut_ptr());
+    // Pack Bᵀ once on the submitting thread — in u16, so the pack pass
+    // moves half the bytes of the f32 path (see `gemm_nt_impl` for the
+    // pack-once rationale; results are bitwise level- and
+    // thread-count-invariant).
+    with_pack_u16(k * n, |bt| {
+        pack_bt_u16(b, bt, k, n);
+        let bt: &[u16] = bt;
+        run_row_blocks(m, m * k * n, exec, |i0, i1| {
+            // SAFETY: this task exclusively owns output rows i0..i1;
+            // the operand slices are only read.
+            unsafe { task_nn_half(a, bt, fmt, level, cp.get(), i0, i1, k, n) };
+            epilogue(cp.get(), i0, i1, n, bias, prec);
+        });
+    });
+}
+
 fn gemm_nt_impl(
     a: &[f32],
     b: &[f32],
@@ -438,6 +608,91 @@ unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: us
             );
         }
         kc += KC;
+    }
+}
+
+/// notrans · notrans over a packed-half B: KC panels, widening kernels.
+// SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
+// i1×n row-major output, grant this task exclusive access to those
+// rows, and size `a` as [≥i1, k] and `b` as [k, n] packed bits.
+#[allow(clippy::too_many_arguments)]
+unsafe fn task_nn_half(
+    a: &[f32],
+    b: &[u16],
+    fmt: HalfFormat,
+    level: simd::Level,
+    c: *mut f32,
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut kc = 0;
+    while kc < k {
+        let kl = KC.min(k - kc);
+        // SAFETY: panel bases stay inside `a`/`b` (kc < k), and the
+        // caller contract covers every write through `c`.
+        unsafe {
+            inner_tiles_half(
+                fmt,
+                level,
+                a.as_ptr().add(i0 * k + kc),
+                k,
+                b.as_ptr().add(kc * n),
+                n,
+                c,
+                i0,
+                i1,
+                n,
+                kl,
+            );
+        }
+        kc += KC;
+    }
+}
+
+/// Packed-half twin of [`inner_tiles`]: same micro-tile sweep, with the
+/// full tile dispatched to the (level-selected) widening kernel and the
+/// edges to the scalar widening kernel.
+// SAFETY: callers pass `a`/`b` panels holding kl full rows from their
+// bases at the given strides, and `c` writable over rows i0..i1 of an
+// i1×n row-major output that this call exclusively owns.
+#[allow(clippy::too_many_arguments)]
+unsafe fn inner_tiles_half(
+    fmt: HalfFormat,
+    level: simd::Level,
+    a: *const f32,
+    a_rs: usize,
+    b: *const u16,
+    b_rs: usize,
+    c: *mut f32,
+    i0: usize,
+    i1: usize,
+    n: usize,
+    kl: usize,
+) {
+    let mut j0 = 0;
+    while j0 < n {
+        let nr = NR.min(n - j0);
+        let mut i = i0;
+        while i < i1 {
+            let mr = MR.min(i1 - i);
+            // SAFETY: tile bases stay inside the panels / output rows
+            // the caller contract grants (i < i1, j0 < n), and the
+            // kernels only touch mr×nr elements from those bases.
+            unsafe {
+                let ap = a.add((i - i0) * a_rs);
+                let bp = b.add(j0);
+                let cp = c.add(i * n + j0);
+                if mr == MR && nr == NR {
+                    simd::kernel_4x16_half(level, fmt, ap, a_rs, bp, b_rs, cp, n, kl);
+                } else {
+                    simd::kernel_edge_half(fmt, ap, a_rs, bp, b_rs, cp, n, mr, nr, kl);
+                }
+            }
+            i += MR;
+        }
+        j0 += NR;
     }
 }
 
@@ -974,6 +1229,92 @@ mod tests {
                 "{m}x{k}x{n}: paired head 2 must match a standalone call bitwise"
             );
         }
+    }
+
+    #[test]
+    fn packed_half_b_matches_f32_path_on_widened_weights() {
+        // the packed path widens exactly and accumulates in the same
+        // order, so for any packed B the result equals the f32 GEMM run
+        // on the widened weights — bitwise, for every shape
+        let mut rng = Pcg64::seed(11);
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            for &(m, k, n) in SHAPES {
+                let a = randn(m * k, &mut rng);
+                let bh: Vec<u16> = (0..n * k).map(|_| fmt.encode(rng.normal_f32())).collect();
+                let mut bw = vec![0.0f32; n * k];
+                fmt.unpack_slice(&bh, &mut bw);
+                let bias = randn(n, &mut rng);
+                let prec = Precision::fp16();
+
+                let mut ch = vec![0.0; m * n];
+                gemm_nt_bias_q_half(&a, &bh, fmt, &mut ch, m, k, n, Some(&bias), prec);
+                let mut cf = vec![0.0; m * n];
+                gemm_nt_bias_q(&a, &bw, &mut cf, m, k, n, Some(&bias), prec);
+                assert!(
+                    ch.iter().zip(&cf).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} {m}x{k}x{n}: half-B GEMM must match f32 GEMM on widened weights",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_half_pair_matches_two_standalone_calls() {
+        let mut rng = Pcg64::seed(12);
+        let fmt = HalfFormat::F16;
+        for &(m, k, n) in &[(1, 1, 1), (5, 7, 3), (33, 20, 17), (130, 64, 96)] {
+            let a1 = randn(m * k, &mut rng);
+            let a2 = randn(m * k, &mut rng);
+            let b1: Vec<u16> = (0..n * k).map(|_| fmt.encode(rng.normal_f32())).collect();
+            let b2: Vec<u16> = (0..n * k).map(|_| fmt.encode(rng.normal_f32())).collect();
+            let bias1 = randn(n, &mut rng);
+            let bias2 = randn(n, &mut rng);
+            let prec = Precision::fp16();
+
+            let mut p1 = vec![0.0; m * n];
+            let mut p2 = vec![0.0; m * n];
+            gemm_nt_bias_q_pair_half(
+                &a1,
+                &b1,
+                &mut p1,
+                Some(&bias1),
+                &a2,
+                &b2,
+                &mut p2,
+                Some(&bias2),
+                fmt,
+                m,
+                k,
+                n,
+                prec,
+            );
+
+            let mut s1 = vec![0.0; m * n];
+            let mut s2 = vec![0.0; m * n];
+            gemm_nt_bias_q_half(&a1, &b1, fmt, &mut s1, m, k, n, Some(&bias1), prec);
+            gemm_nt_bias_q_half(&a2, &b2, fmt, &mut s2, m, k, n, Some(&bias2), prec);
+
+            assert!(p1.iter().zip(&s1).all(|(x, y)| x.to_bits() == y.to_bits()), "{m}x{k}x{n}");
+            assert!(p2.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()), "{m}x{k}x{n}");
+        }
+        // m = 0 degenerate pair: no-op
+        let bz = [0u16; 12];
+        gemm_nt_bias_q_pair_half(
+            &[],
+            &bz,
+            &mut [],
+            None,
+            &[],
+            &bz,
+            &mut [],
+            None,
+            fmt,
+            0,
+            3,
+            4,
+            Precision::fp16(),
+        );
     }
 
     #[test]

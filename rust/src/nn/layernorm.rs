@@ -12,12 +12,14 @@ use super::param::Param;
 use super::tensor::Tensor;
 use crate::lowp::Precision;
 
-/// Training-time caches for one [`LayerNorm`]: normalized activations
-/// and per-row inverse std.
+/// Training-time caches for one [`LayerNorm`]: normalized activations,
+/// per-row inverse std, and the backward's per-row γ⊙dy scratch. All
+/// buffers are grown once and reused across steps.
 #[derive(Debug, Clone, Default)]
 pub struct LayerNormWorkspace {
     xhat: Tensor,
     inv_std: Vec<f32>,
+    gdy: Vec<f32>,
 }
 
 /// LayerNorm with learnable affine (γ, β), over the last dim.
@@ -42,10 +44,19 @@ impl LayerNorm {
     /// as [`LayerNorm::forward_train`], so outputs are bitwise
     /// identical.
     pub fn forward(&self, x: &Tensor, prec: Precision) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_into(x, prec, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`LayerNorm::forward`]: writes into `out`,
+    /// reusing its buffer whenever the shape repeats.
+    pub fn forward_into(&self, x: &Tensor, prec: Precision, out: &mut Tensor) {
         assert_eq!(x.cols(), self.dim);
         let rows = x.rows();
         let d = self.dim;
-        let mut y = Tensor::zeros(&[rows, d]);
+        let y = out;
+        y.ensure_shape(&[rows, d]);
         for r in 0..rows {
             let xr = x.row(r);
             let mean = prec.q(xr.iter().sum::<f32>() / d as f32);
@@ -60,7 +71,6 @@ impl LayerNorm {
                 yr[c] = prec.q(self.gamma.w[c] * xh + self.beta.w[c]);
             }
         }
-        y
     }
 
     /// Training forward. Mean/variance are computed with per-element
@@ -68,14 +78,28 @@ impl LayerNorm {
     /// accumulation (as a warp-level tree reduction would give on
     /// hardware). Caches into `ws` for [`LayerNorm::backward`].
     pub fn forward_train(&self, x: &Tensor, prec: Precision, ws: &mut LayerNormWorkspace) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_train_into(x, prec, ws, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`LayerNorm::forward_train`]: the
+    /// normalized-activation cache, per-row stats, and output all reuse
+    /// their buffers whenever the shapes repeat.
+    pub fn forward_train_into(
+        &self,
+        x: &Tensor,
+        prec: Precision,
+        ws: &mut LayerNormWorkspace,
+        out: &mut Tensor,
+    ) {
         assert_eq!(x.cols(), self.dim);
         let rows = x.rows();
         let d = self.dim;
-        let mut y = Tensor::zeros(&[rows, d]);
-        ws.xhat = Tensor::zeros(&[rows, d]);
-        // tidy-allow(alloc): pixels-path (encoder) workspace refill; only
-        // reallocates when the row count changes
-        ws.inv_std = vec![0.0; rows];
+        let y = out;
+        y.ensure_shape(&[rows, d]);
+        ws.xhat.ensure_shape(&[rows, d]);
+        ws.inv_std.resize(rows, 0.0);
         for r in 0..rows {
             let xr = x.row(r);
             let mean = prec.q(xr.iter().sum::<f32>() / d as f32);
@@ -95,15 +119,32 @@ impl LayerNorm {
                 yr[c] = prec.q(self.gamma.w[c] * xh[c] + self.beta.w[c]);
             }
         }
-        y
     }
 
-    /// Backward; accumulates dγ/dβ, returns dx.
-    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &LayerNormWorkspace) -> Tensor {
+    /// Backward; accumulates dγ/dβ, returns dx. Allocating wrapper —
+    /// the encoder walk uses [`LayerNorm::backward_into`].
+    pub fn backward(&mut self, dy: &Tensor, prec: Precision, ws: &mut LayerNormWorkspace) -> Tensor {
+        let mut dx = Tensor::default();
+        self.backward_into(dy, prec, ws, &mut dx);
+        dx
+    }
+
+    /// Allocation-free twin of [`LayerNorm::backward`]: the per-row γ⊙dy
+    /// scratch lives in `ws` and `dx` is written into a caller buffer,
+    /// both reused whenever the shapes repeat.
+    pub fn backward_into(
+        &mut self,
+        dy: &Tensor,
+        prec: Precision,
+        ws: &mut LayerNormWorkspace,
+        dx: &mut Tensor,
+    ) {
         let rows = dy.rows();
         let d = self.dim;
         assert_eq!(ws.xhat.rows(), rows, "forward_train workspace missing");
-        let mut dx = Tensor::zeros(&[rows, d]);
+        dx.ensure_shape(&[rows, d]);
+        ws.gdy.resize(d, 0.0);
+        let gdy = &mut ws.gdy;
         for r in 0..rows {
             let dyr = dy.row(r);
             let xh = ws.xhat.row(r);
@@ -115,9 +156,6 @@ impl LayerNorm {
             // dx = inv/d * (d*g⊙dy - sum(g⊙dy) - xhat*sum(g⊙dy⊙xhat))
             let mut s1 = 0.0f32;
             let mut s2 = 0.0f32;
-            // tidy-allow(alloc): pixels-path gradient scratch; workspace
-            // reuse is a ROADMAP carryover
-            let mut gdy = vec![0.0f32; d];
             for c in 0..d {
                 gdy[c] = prec.q(self.gamma.w[c] * dyr[c]);
                 s1 += gdy[c];
@@ -134,7 +172,6 @@ impl LayerNorm {
         }
         prec.q_slice(&mut self.gamma.g);
         prec.q_slice(&mut self.beta.g);
-        dx
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
@@ -197,7 +234,7 @@ mod tests {
         let mut ws = LayerNormWorkspace::default();
         let y = ln.forward_train(&x, Precision::Fp32, &mut ws);
         ln.zero_grad();
-        let dx = ln.backward(&y.clone(), Precision::Fp32, &ws); // loss = sum(y²)/2
+        let dx = ln.backward(&y.clone(), Precision::Fp32, &mut ws); // loss = sum(y²)/2
 
         let eps = 1e-3f32;
         let loss = |ln: &LayerNorm, x: &Tensor| -> f32 {

@@ -9,10 +9,13 @@
 //! [`LinearWorkspace`] owned by the caller: `forward_train` fills it,
 //! `backward` consumes it.
 
-use super::gemm::{gemm_bias_q, gemm_nt_bias_q, gemm_nt_bias_q_pair, gemm_tn_bias_q};
+use super::gemm::{
+    gemm_bias_q, gemm_nt_bias_q, gemm_nt_bias_q_half, gemm_nt_bias_q_pair,
+    gemm_nt_bias_q_pair_half, gemm_tn_bias_q,
+};
 use super::param::Param;
 use super::tensor::Tensor;
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, HalfTensor, Precision};
 use crate::rngs::Pcg64;
 
 /// Training-time caches for one [`Linear`]: the forward input plus the
@@ -41,6 +44,12 @@ pub struct Linear {
     /// layer-norm's rescaling invariance this prevents the fp16 overflow
     /// the paper saw in the encoder head.
     pub weight_std: bool,
+    /// Packed 16-bit weight storage (see [`HalfTensor`]). When set, the
+    /// inference forwards read these bits through the widening GEMM path
+    /// instead of the f32 master — half the weight traffic. Kept bitwise
+    /// consistent with `w` by the quantize-mirror in
+    /// [`Linear::pack_weights`] / [`Linear::repack_weights`].
+    pub w_half: Option<HalfTensor>,
 }
 
 impl Linear {
@@ -48,7 +57,52 @@ impl Linear {
         let mut w = Param::new(format!("{name}.w"), &[out_dim, in_dim]);
         w.w = super::init::orthogonal_init(rng, out_dim, in_dim, 1.0);
         let b = Param::new(format!("{name}.b"), &[out_dim]);
-        Linear { w, b, in_dim, out_dim, weight_std: false }
+        Linear { w, b, in_dim, out_dim, weight_std: false, w_half: None }
+    }
+
+    /// Pack the weights into 16-bit storage. The f32 master is
+    /// *quantize-mirrored* — overwritten with `decode(encode(w))` — so the
+    /// master and the packed bits name the exact same values and every
+    /// forward is bitwise identical whichever tier the dispatch reads.
+    /// No-op for live weight-std layers (their GEMM reads the
+    /// re-standardized `Ŵ`, not `w`; bake first — see
+    /// [`Linear::bake_weight_std`]).
+    pub fn pack_weights(&mut self, fmt: HalfFormat) {
+        if self.weight_std {
+            return;
+        }
+        let packed = HalfTensor::pack(fmt, &self.w.shape, &self.w.w);
+        packed.unpack_into(&mut self.w.w);
+        self.w_half = Some(packed);
+    }
+
+    /// Drop the f32 weight master and its gradient buffer, leaving only
+    /// the packed tier resident — the true 2× weight-memory reduction for
+    /// frozen snapshots that will never train or repack again. Requires
+    /// [`Linear::pack_weights`] first.
+    pub fn drop_master(&mut self) {
+        assert!(self.w_half.is_some(), "{}: pack_weights before drop_master", self.w.name);
+        let _ = std::mem::take(&mut self.w.w);
+        let _ = std::mem::take(&mut self.w.g);
+    }
+
+    /// Refresh the packed mirror from the (EMA-updated) f32 master,
+    /// allocation-free, then quantize-mirror the master back so both
+    /// tiers agree bitwise again. No-op when the layer is not packed.
+    pub fn repack_weights(&mut self) {
+        if let Some(h) = &mut self.w_half {
+            h.repack_from(&self.w.w);
+            h.unpack_into(&mut self.w.w);
+        }
+    }
+
+    /// Resident weight bytes across storage tiers (f32 master if still
+    /// held, packed mirror if present, plus the bias).
+    pub fn weight_bytes(&self) -> usize {
+        let f32s = std::mem::size_of::<f32>();
+        self.w.w.len() * f32s
+            + self.w_half.as_ref().map_or(0, |h| h.bytes())
+            + self.b.w.len() * f32s
     }
 
     pub fn with_weight_std(mut self) -> Self {
@@ -153,9 +207,35 @@ impl Linear {
             let (mut what, mut mean, mut std) = (Vec::new(), Vec::new(), Vec::new());
             self.standardize_into(prec, &mut what, &mut mean, &mut std);
             self.forward_with_into(x, &what, prec, out);
+        } else if let Some(h) = &self.w_half {
+            self.forward_half_into(x, h, prec, out);
         } else {
             self.forward_with_into(x, &self.w.w, prec, out);
         }
+    }
+
+    /// Packed-tier forward body: same shape checks and epilogue as
+    /// [`Linear::forward_with_into`], but the weights stream through the
+    /// widening half-GEMM — bitwise identical by the quantize-mirror
+    /// contract, half the weight bytes read.
+    fn forward_half_into(&self, x: &Tensor, h: &HalfTensor, prec: Precision, out: &mut Tensor) {
+        assert_eq!(x.cols(), self.in_dim, "{}: bad input dim", self.w.name);
+        let bsz = x.rows();
+        out.ensure_shape(&[bsz, self.out_dim]);
+        // the GEMM accumulates — zero the reused buffer so results match
+        // a fresh `Tensor::zeros` bitwise
+        out.data.fill(0.0);
+        gemm_nt_bias_q_half(
+            &x.data,
+            &h.data,
+            h.fmt,
+            &mut out.data,
+            bsz,
+            self.in_dim,
+            self.out_dim,
+            Some(&self.b.w),
+            prec,
+        );
     }
 
     /// Training forward: same numbers as [`Linear::forward`], but caches
@@ -237,20 +317,43 @@ impl Linear {
         // match fresh `Tensor::zeros` bitwise
         y1.data.fill(0.0);
         y2.data.fill(0.0);
-        gemm_nt_bias_q_pair(
-            &x1.data,
-            &l1.w.w,
-            &mut y1.data,
-            Some(&l1.b.w),
-            &x2.data,
-            &l2.w.w,
-            &mut y2.data,
-            Some(&l2.b.w),
-            bsz,
-            l1.in_dim,
-            l1.out_dim,
-            prec,
-        );
+        match (&l1.w_half, &l2.w_half) {
+            (Some(h1), Some(h2)) if h1.fmt == h2.fmt => gemm_nt_bias_q_pair_half(
+                &x1.data,
+                &h1.data,
+                &mut y1.data,
+                Some(&l1.b.w),
+                &x2.data,
+                &h2.data,
+                &mut y2.data,
+                Some(&l2.b.w),
+                h1.fmt,
+                bsz,
+                l1.in_dim,
+                l1.out_dim,
+                prec,
+            ),
+            (None, None) => gemm_nt_bias_q_pair(
+                &x1.data,
+                &l1.w.w,
+                &mut y1.data,
+                Some(&l1.b.w),
+                &x2.data,
+                &l2.w.w,
+                &mut y2.data,
+                Some(&l2.b.w),
+                bsz,
+                l1.in_dim,
+                l1.out_dim,
+                prec,
+            ),
+            // mixed storage tiers cannot share a dispatch — per-layer
+            // forwards, still bitwise identical
+            _ => {
+                l1.forward_into(x1, prec, y1);
+                l2.forward_into(x2, prec, y2);
+            }
+        }
     }
 
     /// Training twin of [`Linear::forward_pair`]: fills each layer's
@@ -575,6 +678,80 @@ mod tests {
         let s2 = l2.forward(&x, prec);
         assert!(y1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
         assert!(y2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+    }
+
+    #[test]
+    fn packed_forward_matches_master_bitwise() {
+        let mut rng = Pcg64::seed(8);
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let mut lin = Linear::new("t", 33, 17, &mut rng);
+            let x = Tensor::from_vec(&[5, 33], (0..165).map(|_| rng.normal_f32()).collect());
+            let mut packed = lin.clone();
+            packed.pack_weights(fmt);
+            // quantize-mirror contract: the pack rewrote the master to
+            // decode(encode(w)) — sync the reference layer to it
+            lin.w.w.clone_from(&packed.w.w);
+            for prec in [Precision::Fp32, Precision::fp16()] {
+                let a = lin.forward(&x, prec);
+                let b = packed.forward(&x, prec);
+                assert!(
+                    a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()),
+                    "{fmt:?}/{prec:?}: packed dispatch must be bitwise identical"
+                );
+            }
+            // dropping the master must not change the packed path
+            let before = packed.forward(&x, Precision::Fp32);
+            packed.drop_master();
+            let after = packed.forward(&x, Precision::Fp32);
+            assert_eq!(before.data, after.data);
+            assert_eq!(packed.weight_bytes(), 17 * 33 * 2 + 17 * 4, "half weights + f32 bias");
+        }
+    }
+
+    #[test]
+    fn repack_refreshes_the_mirror_bitwise() {
+        let mut rng = Pcg64::seed(9);
+        let mut lin = Linear::new("t", 12, 6, &mut rng);
+        lin.pack_weights(HalfFormat::F16);
+        // simulate an EMA sync rewriting the master
+        for v in lin.w.w.iter_mut() {
+            *v = 0.37 * *v + 0.1;
+        }
+        let mut fresh = lin.clone();
+        fresh.w_half = None;
+        fresh.pack_weights(HalfFormat::F16);
+        lin.repack_weights();
+        let h1 = lin.w_half.as_ref().expect("packed");
+        let h2 = fresh.w_half.as_ref().expect("packed");
+        assert_eq!(h1.data, h2.data, "repack must equal a fresh pack");
+        assert_eq!(lin.w.w, fresh.w.w, "masters must be mirrored back identically");
+    }
+
+    #[test]
+    fn packed_pair_matches_sequential_bitwise() {
+        let mut rng = Pcg64::seed(10);
+        let mut l1 = Linear::new("q1", 9, 5, &mut rng);
+        let mut l2 = Linear::new("q2", 9, 5, &mut rng);
+        l1.pack_weights(HalfFormat::Bf16);
+        l2.pack_weights(HalfFormat::Bf16);
+        let x1 = Tensor::from_vec(&[4, 9], (0..36).map(|_| rng.normal_f32()).collect());
+        let x2 = Tensor::from_vec(&[4, 9], (0..36).map(|_| rng.normal_f32()).collect());
+        for prec in [Precision::Fp32, Precision::fp16()] {
+            let (y1, y2) = Linear::forward_pair(&l1, &l2, &x1, &x2, prec);
+            let s1 = l1.forward(&x1, prec);
+            let s2 = l2.forward(&x2, prec);
+            assert!(y1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(y2.data.iter().zip(&s2.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        }
+        // mixed tiers fall back to per-layer dispatch — still identical
+        let mut l3 = Linear::new("q3", 9, 5, &mut rng);
+        l3.w.w.clone_from(&l2.w.w);
+        l3.b.w.clone_from(&l2.b.w);
+        let (y1, y3) = Linear::forward_pair(&l1, &l3, &x1, &x2, Precision::fp16());
+        let s1 = l1.forward(&x1, Precision::fp16());
+        let s3 = l3.forward(&x2, Precision::fp16());
+        assert!(y1.data.iter().zip(&s1.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        assert!(y3.data.iter().zip(&s3.data).all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 
     #[test]

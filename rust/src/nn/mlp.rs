@@ -13,7 +13,7 @@ use super::activations::{relu, relu_backward, relu_backward_in_place, relu_into}
 use super::linear::{Linear, LinearWorkspace};
 use super::param::Param;
 use super::tensor::Tensor;
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, Precision};
 use crate::rngs::Pcg64;
 
 /// Training-time caches for one [`Mlp`]: per-layer [`LinearWorkspace`]s
@@ -410,6 +410,35 @@ impl Mlp {
             l.b.quantize(prec);
         }
     }
+
+    /// Pack every layer's weights into 16-bit storage
+    /// ([`Linear::pack_weights`] — quantize-mirrors the masters).
+    pub fn pack_weights(&mut self, fmt: HalfFormat) {
+        for l in self.layers.iter_mut() {
+            l.pack_weights(fmt);
+        }
+    }
+
+    /// Drop every layer's f32 weight master ([`Linear::drop_master`]) —
+    /// frozen-snapshot tier only.
+    pub fn drop_masters(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.drop_master();
+        }
+    }
+
+    /// Refresh every packed mirror from its master, allocation-free
+    /// ([`Linear::repack_weights`]).
+    pub fn repack_weights(&mut self) {
+        for l in self.layers.iter_mut() {
+            l.repack_weights();
+        }
+    }
+
+    /// Resident weight bytes across storage tiers.
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
 }
 
 #[cfg(test)]
@@ -509,6 +538,30 @@ mod tests {
                 assert!(w.data.iter().zip(&r.data).all(|(u, v)| u.to_bits() == v.to_bits()));
             }
         }
+    }
+
+    #[test]
+    fn packed_trunk_matches_master_and_halves_weight_bytes() {
+        let mut rng = Pcg64::seed(6);
+        let mut mlp = Mlp::new("m", &[7, 24, 24, 3], &mut rng);
+        // fp16-representable params make the f16 pack lossless — the
+        // packed trunk must then be bitwise identical to the master
+        mlp.quantize_params(Precision::fp16());
+        let x = Tensor::from_vec(&[5, 7], (0..35).map(|_| rng.normal_f32()).collect());
+        let base = mlp.forward(&x, Precision::fp16());
+        let mut packed = mlp.clone();
+        packed.pack_weights(HalfFormat::F16);
+        let y = packed.forward(&x, Precision::fp16());
+        assert!(y.data.iter().zip(&base.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        packed.drop_masters();
+        let y2 = packed.forward(&x, Precision::fp16());
+        assert!(y2.data.iter().zip(&base.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        let w_elems: usize = mlp.layers.iter().map(|l| l.w.w.len()).sum();
+        assert_eq!(
+            packed.weight_bytes() + 2 * w_elems,
+            mlp.weight_bytes(),
+            "dropping the masters must halve the weight payload"
+        );
     }
 
     #[test]

@@ -37,12 +37,16 @@ mod memory;
 mod mlp;
 mod param;
 pub mod pool;
+pub mod simd;
 mod tensor;
 
-pub use activations::{relu, relu_backward, tanh_backward, tanh_forward};
+pub use activations::{
+    relu, relu_backward, relu_backward_in_place, relu_into, tanh_backward, tanh_forward,
+};
 pub use conv::{Conv2d, Conv2dWorkspace};
 pub use gemm::{
-    gemm, gemm_bias_q, gemm_nt, gemm_nt_bias_q, gemm_nt_bias_q_pair, gemm_tn, gemm_tn_bias_q,
+    gemm, gemm_bias_q, gemm_nt, gemm_nt_bias_q, gemm_nt_bias_q_half, gemm_nt_bias_q_half_at,
+    gemm_nt_bias_q_pair, gemm_nt_bias_q_pair_half, gemm_tn, gemm_tn_bias_q,
 };
 pub use init::{orthogonal_init, uniform_fan_in};
 pub use layernorm::{LayerNorm, LayerNormWorkspace};

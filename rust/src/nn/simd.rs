@@ -1,0 +1,433 @@
+//! Explicit SIMD micro-kernels for the packed-half GEMM path.
+//!
+//! This is the **only** module allowed to touch `std::arch` — the tidy
+//! `simd` rule pins that boundary, the same way `to_bits` is pinned to
+//! `lowp/`. Everything here widens packed 16-bit weights (f16 via F16C
+//! `cvtph`, bf16 via a 16-bit left shift) into f32 lanes and accumulates
+//! in f32.
+//!
+//! Parity contract: every vector kernel vectorizes **across output
+//! columns** — each output element is one SIMD lane accumulating its own
+//! ascending-`k` chain with a separate multiply and add per step, which
+//! is exactly the scalar kernel's schedule. Widening `u16 -> f32` is
+//! exact for both layouts, multiplies/adds are IEEE f32 in both paths,
+//! and no FMA contraction is used (a fused multiply-add would keep extra
+//! intermediate bits and break bitwise parity). The scalar kernels below
+//! are therefore the *oracle*: vector results are bitwise identical for
+//! every shape, format, and feature level (property-tested in
+//! `tests/half_storage.rs`).
+//!
+//! Dispatch is by a runtime-detected [`Level`], cached once per process;
+//! `LPRL_SIMD=0` forces the scalar path (the bench/CI seam for timing
+//! the oracle and for exercising parity on machines with the fast path).
+
+use crate::lowp::HalfFormat;
+use std::sync::OnceLock;
+
+/// Micro-kernel rows — must match `gemm::MR`.
+pub const MR: usize = 4;
+/// Micro-kernel columns — must match `gemm::NR`.
+pub const NR: usize = 16;
+
+/// Available compute tiers for the packed-half kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Level {
+    /// Portable scalar widening kernels — the bitwise oracle.
+    Scalar,
+    /// x86-64 AVX2 + F16C: 8-lane f32 vectors, hardware f16 widening.
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// AArch64 NEON: 4-lane f32 vectors (bf16 only — stable Rust has no
+    /// NEON f16 widening intrinsics, so f16 falls back to scalar).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+impl Level {
+    /// Knob/bench spelling of this level.
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 => "avx2",
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => "neon",
+        }
+    }
+
+    /// True if this level has a vector kernel for `fmt` (otherwise the
+    /// half GEMM runs the scalar oracle for that format).
+    pub fn accelerates(self, fmt: HalfFormat) -> bool {
+        match self {
+            Level::Scalar => false,
+            #[cfg(target_arch = "x86_64")]
+            Level::Avx2 => true,
+            #[cfg(target_arch = "aarch64")]
+            Level::Neon => matches!(fmt, HalfFormat::Bf16),
+        }
+    }
+}
+
+/// Detect the best available level, once per process. `LPRL_SIMD=0`
+/// forces [`Level::Scalar`]. Detection never changes *results* — the
+/// kernels are bitwise equal across levels — only throughput.
+pub fn detect() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(|| {
+        if std::env::var("LPRL_SIMD").is_ok_and(|v| v == "0") {
+            return Level::Scalar;
+        }
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("f16c") {
+                return Level::Avx2;
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            return Level::Neon;
+        }
+        #[allow(unreachable_code)]
+        Level::Scalar
+    })
+}
+
+/// One-line description of the detected CPU features and chosen level —
+/// logged by the bench smokes and the CI parity gate.
+pub fn feature_summary() -> String {
+    let level = detect();
+    #[cfg(target_arch = "x86_64")]
+    {
+        format!(
+            "arch=x86_64 level={} avx2={} f16c={}",
+            level.name(),
+            is_x86_feature_detected!("avx2"),
+            is_x86_feature_detected!("f16c"),
+        )
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        format!("arch=aarch64 level={} neon=true", level.name())
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        format!("arch=other level={}", level.name())
+    }
+}
+
+/// Full-tile packed-half micro-kernel:
+/// `c[r][j] += Σ_p a[r][p] · widen(b[p][j])` with MR×NR independent
+/// accumulator chains — dispatched by `level`/`fmt` to a vector body or
+/// the scalar oracle, all bitwise identical.
+// SAFETY: callers pass `a` holding kl rows of MR live columns at stride
+// `a_rs`, `b` holding kl rows of NR live packed columns at stride
+// `b_rs`, and `c` writable for a full MR×NR tile at row stride `c_rs`
+// that this call exclusively owns.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn kernel_4x16_half(
+    level: Level,
+    fmt: HalfFormat,
+    a: *const f32,
+    a_rs: usize,
+    b: *const u16,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    kl: usize,
+) {
+    match (level, fmt) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by `detect()` after
+        // runtime avx2+f16c checks; pointer contracts forwarded as-is.
+        (Level::Avx2, HalfFormat::F16) => unsafe {
+            x86::kernel_4x16_f16(a, a_rs, b, b_rs, c, c_rs, kl)
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — avx2 verified at detection time.
+        (Level::Avx2, HalfFormat::Bf16) => unsafe {
+            x86::kernel_4x16_bf16(a, a_rs, b, b_rs, c, c_rs, kl)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; pointer contracts
+        // forwarded as-is.
+        (Level::Neon, HalfFormat::Bf16) => unsafe {
+            neon::kernel_4x16_bf16(a, a_rs, b, b_rs, c, c_rs, kl)
+        },
+        // SAFETY: pointer contracts forwarded as-is.
+        _ => unsafe { kernel_4x16_half_scalar(fmt, a, a_rs, b, b_rs, c, c_rs, kl) },
+    }
+}
+
+/// Scalar oracle for the full packed-half tile — the exact structure of
+/// `gemm::kernel_4x16` with a widening load on the B operand.
+// SAFETY: same contract as `kernel_4x16_half`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn kernel_4x16_half_scalar(
+    fmt: HalfFormat,
+    a: *const f32,
+    a_rs: usize,
+    b: *const u16,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    kl: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    // SAFETY: every offset below stays inside the MR×kl / kl×NR panels
+    // and the MR×NR output tile the caller contract grants.
+    unsafe {
+        for p in 0..kl {
+            let bp = b.add(p * b_rs);
+            let a0 = *a.add(p);
+            let a1 = *a.add(a_rs + p);
+            let a2 = *a.add(2 * a_rs + p);
+            let a3 = *a.add(3 * a_rs + p);
+            for j in 0..NR {
+                let bv = fmt.decode(*bp.add(j));
+                acc[0][j] += a0 * bv;
+                acc[1][j] += a1 * bv;
+                acc[2][j] += a2 * bv;
+                acc[3][j] += a3 * bv;
+            }
+        }
+        for (r, row) in acc.iter().enumerate() {
+            let cr = c.add(r * c_rs);
+            for (j, &v) in row.iter().enumerate() {
+                *cr.add(j) += v;
+            }
+        }
+    }
+}
+
+/// Edge-tile packed-half kernel (`mr ≤ MR`, `nr ≤ NR`) — always scalar
+/// (edge tiles are a vanishing fraction of a bandwidth-bound product),
+/// with the identical ascending-`p` accumulation order.
+// SAFETY: callers pass `a`/`b` panels holding kl rows of mr/nr live
+// columns at their strides, and `c` writable for an mr×nr tile at row
+// stride `c_rs` that this call exclusively owns.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn kernel_edge_half(
+    fmt: HalfFormat,
+    a: *const f32,
+    a_rs: usize,
+    b: *const u16,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    mr: usize,
+    nr: usize,
+    kl: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    // SAFETY: every offset below stays inside the mr×kl / kl×nr panels
+    // and the mr×nr output tile the caller contract grants.
+    unsafe {
+        for p in 0..kl {
+            let bp = b.add(p * b_rs);
+            for r in 0..mr {
+                let av = *a.add(r * a_rs + p);
+                for j in 0..nr {
+                    acc[r][j] += av * fmt.decode(*bp.add(j));
+                }
+            }
+        }
+        for (r, row) in acc.iter().enumerate().take(mr) {
+            let cr = c.add(r * c_rs);
+            for (j, &v) in row.iter().enumerate().take(nr) {
+                *cr.add(j) += v;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::MR;
+    use std::arch::x86_64::*;
+
+    /// AVX2+F16C full tile, f16 weights: per `p`, two `cvtph` widening
+    /// loads cover the NR=16 columns as two 8-lane vectors; each of the
+    /// MR=4 rows broadcasts its `a` scalar and does a separate
+    /// `mul` + `add` (no FMA — parity). Lane `j` of the accumulators is
+    /// output element `c[r][j]`'s own ascending-`k` chain, bitwise equal
+    /// to the scalar oracle's.
+    // SAFETY: same pointer contract as `kernel_4x16_half`; callers must
+    // have verified avx2+f16c at runtime.
+    #[target_feature(enable = "avx2,f16c")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn kernel_4x16_f16(
+        a: *const f32,
+        a_rs: usize,
+        b: *const u16,
+        b_rs: usize,
+        c: *mut f32,
+        c_rs: usize,
+        kl: usize,
+    ) {
+        // SAFETY: every pointer offset stays inside the MR×kl / kl×NR
+        // panels and the MR×NR output tile the caller contract grants;
+        // all loads/stores are the unaligned variants.
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+            for p in 0..kl {
+                let bp = b.add(p * b_rs);
+                let blo = _mm256_cvtph_ps(_mm_loadu_si128(bp as *const __m128i));
+                let bhi = _mm256_cvtph_ps(_mm_loadu_si128(bp.add(8) as *const __m128i));
+                for r in 0..MR {
+                    let av = _mm256_set1_ps(*a.add(r * a_rs + p));
+                    acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(av, blo));
+                    acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(av, bhi));
+                }
+            }
+            for r in 0..MR {
+                let cr = c.add(r * c_rs);
+                let lo = _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]);
+                let hi = _mm256_add_ps(_mm256_loadu_ps(cr.add(8)), acc[r][1]);
+                _mm256_storeu_ps(cr, lo);
+                _mm256_storeu_ps(cr.add(8), hi);
+            }
+        }
+    }
+
+    /// AVX2 full tile, bf16 weights: widening is a zero-extend to u32
+    /// and a 16-bit left shift (bf16 *is* the top half of f32), then the
+    /// same per-row broadcast `mul` + `add` schedule as the f16 kernel.
+    // SAFETY: same pointer contract as `kernel_4x16_half`; callers must
+    // have verified avx2 at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn kernel_4x16_bf16(
+        a: *const f32,
+        a_rs: usize,
+        b: *const u16,
+        b_rs: usize,
+        c: *mut f32,
+        c_rs: usize,
+        kl: usize,
+    ) {
+        // SAFETY: every pointer offset stays inside the MR×kl / kl×NR
+        // panels and the MR×NR output tile the caller contract grants;
+        // all loads/stores are the unaligned variants.
+        unsafe {
+            let widen = |ptr: *const u16| -> __m256 {
+                let h = _mm_loadu_si128(ptr as *const __m128i);
+                _mm256_castsi256_ps(_mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h)))
+            };
+            let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+            for p in 0..kl {
+                let bp = b.add(p * b_rs);
+                let blo = widen(bp);
+                let bhi = widen(bp.add(8));
+                for r in 0..MR {
+                    let av = _mm256_set1_ps(*a.add(r * a_rs + p));
+                    acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(av, blo));
+                    acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(av, bhi));
+                }
+            }
+            for r in 0..MR {
+                let cr = c.add(r * c_rs);
+                let lo = _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]);
+                let hi = _mm256_add_ps(_mm256_loadu_ps(cr.add(8)), acc[r][1]);
+                _mm256_storeu_ps(cr, lo);
+                _mm256_storeu_ps(cr.add(8), hi);
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::MR;
+    use std::arch::aarch64::*;
+
+    /// NEON full tile, bf16 weights: NR=16 columns as four 4-lane f32
+    /// vectors, widened by zero-extend + 16-bit shift; separate
+    /// `vmulq`/`vaddq` per step (no `vfmaq` — parity with the scalar
+    /// oracle's one-multiply-one-add chains).
+    // SAFETY: same pointer contract as `kernel_4x16_half`; NEON is
+    // baseline on aarch64.
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn kernel_4x16_bf16(
+        a: *const f32,
+        a_rs: usize,
+        b: *const u16,
+        b_rs: usize,
+        c: *mut f32,
+        c_rs: usize,
+        kl: usize,
+    ) {
+        // SAFETY: every pointer offset stays inside the MR×kl / kl×NR
+        // panels and the MR×NR output tile the caller contract grants.
+        unsafe {
+            let widen_pair = |h: uint16x8_t| -> (float32x4_t, float32x4_t) {
+                let lo = vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vget_low_u16(h))));
+                let hi = vreinterpretq_f32_u32(vshlq_n_u32::<16>(vmovl_u16(vget_high_u16(h))));
+                (lo, hi)
+            };
+            let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+            for p in 0..kl {
+                let bp = b.add(p * b_rs);
+                let (b0, b1) = widen_pair(vld1q_u16(bp));
+                let (b2, b3) = widen_pair(vld1q_u16(bp.add(8)));
+                let bv = [b0, b1, b2, b3];
+                for r in 0..MR {
+                    let av = vdupq_n_f32(*a.add(r * a_rs + p));
+                    for q in 0..4 {
+                        acc[r][q] = vaddq_f32(acc[r][q], vmulq_f32(av, bv[q]));
+                    }
+                }
+            }
+            for r in 0..MR {
+                let cr = c.add(r * c_rs);
+                for q in 0..4 {
+                    let cur = vld1q_f32(cr.add(4 * q));
+                    vst1q_f32(cr.add(4 * q), vaddq_f32(cur, acc[r][q]));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rngs::Pcg64;
+
+    /// Drive the full-tile kernel at `level` over a kl-deep panel.
+    fn run_tile(level: Level, fmt: HalfFormat, kl: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        let a: Vec<f32> = (0..MR * kl).map(|_| rng.normal_f32()).collect();
+        let b: Vec<u16> = (0..kl * NR).map(|_| fmt.encode(rng.normal_f32())).collect();
+        let mut c: Vec<f32> = (0..MR * NR).map(|_| rng.normal_f32()).collect();
+        // SAFETY: a is [MR, kl] at stride kl, b is [kl, NR] at stride
+        // NR, and c is an exclusively-owned MR×NR tile at stride NR.
+        unsafe {
+            kernel_4x16_half(level, fmt, a.as_ptr(), kl, b.as_ptr(), NR, c.as_mut_ptr(), NR, kl);
+        }
+        c
+    }
+
+    #[test]
+    fn detected_level_matches_scalar_oracle_bitwise() {
+        let level = detect();
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            for kl in [0, 1, 3, 17, 256] {
+                let fast = run_tile(level, fmt, kl, 7 + kl as u64);
+                let slow = run_tile(Level::Scalar, fmt, kl, 7 + kl as u64);
+                assert!(
+                    fast.iter().zip(&slow).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} {} kl={kl}: vector tile must equal the scalar oracle",
+                    level.name(),
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_stable() {
+        assert_eq!(detect(), detect());
+        let s = feature_summary();
+        assert!(s.contains("level="), "{s}");
+    }
+}

@@ -111,6 +111,16 @@ impl Tensor {
         *self.shape.last().unwrap() // tidy-allow(panic): non-empty asserted directly above
     }
 
+    /// Reinterpret the shape in place (same element count) without
+    /// touching the data buffer — the allocation-free twin of
+    /// [`Tensor::reshape`] for workspace tensors that flip between views
+    /// (e.g. conv NCHW ↔ flattened im2col rows in the update loop).
+    pub fn set_shape_in_place(&mut self, shape: &[usize]) {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len(), "shape/data mismatch");
+        self.shape.clear();
+        self.shape.extend_from_slice(shape);
+    }
+
     /// Reinterpret the shape (same element count).
     pub fn reshape(mut self, shape: &[usize]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), self.data.len());

@@ -22,7 +22,7 @@ use super::encoder::{Encoder, EncoderWorkspace};
 use super::methods::Methods;
 use super::policy::{PolicyCfg, TanhGaussian};
 use super::snapshot::Policy;
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, Precision};
 use crate::nn::pool::{self, SendMut, ELEMWISE_SPAN};
 use crate::nn::{Mlp, MlpWorkspace, Param, Tensor};
 use crate::optim::{coerce_nonfinite, Adam, AdamConfig, GradScaler, ScaledKahanEma, ScalerConfig, SecondMoment, UpdateMode};
@@ -140,6 +140,21 @@ struct UpdateWorkspace {
     /// Actor-head gradient and its (discarded) feature-gradient sink.
     dhead: Tensor,
     dfeat: Tensor,
+    /// Inference-walk scratch for the batch-B encoder forwards (the
+    /// actor's next-obs encode, the unfused target encode, the actor
+    /// step's detached encode). Distinct from the training
+    /// `SacAgent::ws_encoder` — inference walks overwrite the cached
+    /// activations `backward` reads — and from `enc_fused`, whose
+    /// buffers hold the larger `[G·B, …]` group shapes.
+    enc_inf: EncoderWorkspace,
+    /// Dedicated scratch for the fused target-encoder group forward.
+    enc_fused: EncoderWorkspace,
+    /// Online-encoder features for the actor path `[B, feature_dim]`.
+    actor_feat: Tensor,
+    /// Unfused target-encoder features `[B, feature_dim]`.
+    tgt_feat: Tensor,
+    /// Training-path online-encoder features `[B, feature_dim]`.
+    online_feat: Tensor,
 }
 
 /// A replay minibatch. `obs`/`next_obs` are `[B, D]` states or
@@ -271,6 +286,10 @@ pub struct SacAgent {
     pub grad_probe: Option<Vec<f32>>,
     /// `(channels, side)` of pixel observations, if this is a pixel agent.
     pixel_shape: Option<(usize, usize)>,
+    /// When set, the read-only weight tiers — target critic/encoder
+    /// mirrors and [`SacAgent::policy`] snapshots — live in 16-bit
+    /// storage (see [`SacAgent::set_half_storage`]).
+    half_storage: Option<HalfFormat>,
 }
 
 impl SacAgent {
@@ -413,6 +432,7 @@ impl SacAgent {
             crashed: false,
             grad_probe: None,
             pixel_shape: None,
+            half_storage: None,
         }
     }
 
@@ -443,7 +463,7 @@ impl SacAgent {
             enc.bake_weight_std(self.compute);
             enc
         });
-        Policy::new(
+        let mut policy = Policy::new(
             self.actor.clone(),
             encoder,
             self.policy_cfg(),
@@ -451,7 +471,37 @@ impl SacAgent {
             obs_len,
             self.cfg.act_dim,
             self.pixel_shape,
-        )
+        );
+        if let Some(fmt) = self.half_storage {
+            policy.pack_weights(fmt);
+        }
+        policy
+    }
+
+    /// Route the read-only heavyweights through 16-bit storage: the
+    /// target critic (and target-encoder conv stack) keep a packed
+    /// `fmt` mirror of their EMA masters — refreshed allocation-free at
+    /// every target sync — and every [`SacAgent::policy`] snapshot is
+    /// packed with its f32 masters dropped. Inference GEMMs over those
+    /// weights then stream half the bytes, through the SIMD widening
+    /// kernels when the CPU supports them.
+    ///
+    /// Packing quantize-mirrors the masters (master := decode(packed)),
+    /// so when the training store is already the same 16-bit grid (an
+    /// fp16 run with `f16` storage) the packed tier is lossless and
+    /// training trajectories are bitwise unchanged; other combinations
+    /// round the read-only tier to `fmt` deterministically.
+    pub fn set_half_storage(&mut self, fmt: HalfFormat) {
+        self.half_storage = Some(fmt);
+        self.target.pack_weights(fmt);
+        if let Some(tenc) = self.target_encoder.as_mut() {
+            tenc.pack_weights(fmt);
+        }
+    }
+
+    /// The configured read-only storage format, if any.
+    pub fn half_storage(&self) -> Option<HalfFormat> {
+        self.half_storage
     }
 
     /// Current temperature α = exp(log α).
@@ -649,7 +699,7 @@ impl SacAgent {
         let rows: usize = group.iter().map(|bt| bt.rew.len()).sum();
         // stage the group's next-obs rows contiguously (shape scratch
         // reused round after round)
-        let UpdateWorkspace { fused_stage, fused_shape, .. } = &mut *ws;
+        let UpdateWorkspace { fused_stage, fused_shape, enc_fused, fused_feat, .. } = &mut *ws;
         fused_shape.clear();
         fused_shape.push(rows);
         fused_shape.extend_from_slice(&group[0].next_obs.shape[1..]);
@@ -660,10 +710,10 @@ impl SacAgent {
             fused_stage.data[off..off + nfl].copy_from_slice(&bt.next_obs.data);
             off += nfl;
         }
-        // the forward allocates its output either way; move it into the
-        // workspace instead of copying
-        let feat = tenc.forward(fused_stage, p);
-        ws.fused_feat = feat;
+        // the group forward runs in its own workspace: group rows (G·B)
+        // and per-update rows (B) differ, so sharing `enc_inf` would
+        // bounce every buffer between the two shapes each round
+        tenc.forward_into(fused_stage, p, enc_fused, fused_feat);
         let mut r = 0usize;
         for (jj, bt) in group.iter().enumerate() {
             ws.fused_off[base_j + jj] = r;
@@ -705,31 +755,30 @@ impl SacAgent {
         // DRQ convention: the *actor* uses the online encoder (detached).
         // State agents feed the raw observations straight through — no
         // staging clone.
-        let actor_feat;
-        let feat_next_actor: &Tensor = match self.encoder.as_ref() {
-            Some(enc) => {
-                actor_feat = enc.forward(&batch.next_obs, p);
-                &actor_feat
-            }
-            None => &batch.next_obs,
-        };
-        self.actor.forward_into(feat_next_actor, p, &mut ws.actor_inf, &mut ws.head);
-        ws.eps.ensure_shape(&[b, self.cfg.act_dim]);
-        self.rng.normal_fill(&mut ws.eps.data);
         {
-            let UpdateWorkspace { head, eps, tg, .. } = &mut *ws;
+            let UpdateWorkspace { enc_inf, actor_feat, actor_inf, head, eps, tg, .. } = &mut *ws;
+            let feat_next_actor: &Tensor = match self.encoder.as_ref() {
+                Some(enc) => {
+                    enc.forward_into(&batch.next_obs, p, enc_inf, actor_feat);
+                    actor_feat
+                }
+                None => &batch.next_obs,
+            };
+            self.actor.forward_into(feat_next_actor, p, actor_inf, head);
+            eps.ensure_shape(&[b, self.cfg.act_dim]);
+            self.rng.normal_fill(&mut eps.data);
             tg.forward_into(head, eps, self.policy_cfg(), p);
         }
         {
-            let tgt_feat;
-            let UpdateWorkspace { feat_tgt, tg, tgt_critic, tq1, tq2, .. } = &mut *ws;
+            let UpdateWorkspace { feat_tgt, tg, tgt_critic, tq1, tq2, enc_inf, tgt_feat, .. } =
+                &mut *ws;
             let feat_next_tgt: &Tensor = if fused_tgt {
                 feat_tgt
             } else {
                 match self.target_encoder.as_ref() {
                     Some(enc) => {
-                        tgt_feat = enc.forward(&batch.next_obs, p);
-                        &tgt_feat
+                        enc.forward_into(&batch.next_obs, p, enc_inf, tgt_feat);
+                        tgt_feat
                     }
                     None => &batch.next_obs,
                 }
@@ -744,16 +793,15 @@ impl SacAgent {
         }
 
         // -- online critic (training path: fills the workspaces) --------
-        let online_feat;
-        let feat: &Tensor = match self.encoder.as_ref() {
-            Some(enc) => {
-                online_feat = enc.forward_train(&batch.obs, p, &mut self.ws_encoder);
-                &online_feat
-            }
-            None => &batch.obs,
-        };
         {
-            let UpdateWorkspace { q1, q2, .. } = &mut *ws;
+            let UpdateWorkspace { online_feat, q1, q2, .. } = &mut *ws;
+            let feat: &Tensor = match self.encoder.as_ref() {
+                Some(enc) => {
+                    enc.forward_train_into(&batch.obs, p, &mut self.ws_encoder, online_feat);
+                    online_feat
+                }
+                None => &batch.obs,
+            };
             self.critic.forward_train_into(feat, &batch.act, p, &mut self.ws_critic, q1, q2);
         }
         let scale = self.sc_critic.scale();
@@ -778,7 +826,7 @@ impl SacAgent {
             let UpdateWorkspace { dq1, dq2, dobs, da, .. } = &mut *ws;
             self.critic.backward_full_into(dq1, dq2, p, &mut self.ws_critic, dobs, da);
             // tidy-allow(panic): guarded by the `is_some()` check directly above.
-            self.encoder.as_mut().unwrap().backward(dobs, p, &self.ws_encoder);
+            self.encoder.as_mut().unwrap().backward(dobs, p, &mut self.ws_encoder);
         } else {
             let UpdateWorkspace { dq1, dq2, da, .. } = &mut *ws;
             self.critic.backward_into(dq1, dq2, p, &mut self.ws_critic, da);
@@ -813,23 +861,19 @@ impl SacAgent {
 
         // actor loss: E[α logπ - min Q], encoder features detached
         // (inference encode — no gradient flows into the encoder here)
-        let enc_feat;
-        let feat: &Tensor = match self.encoder.as_ref() {
-            Some(enc) => {
-                enc_feat = enc.forward(&batch.obs, p);
-                &enc_feat
-            }
-            None => &batch.obs,
-        };
-        self.actor.forward_train_into(feat, p, &mut self.ws_actor, &mut ws.head);
-        ws.eps.ensure_shape(&[b, self.cfg.act_dim]);
-        self.rng.normal_fill(&mut ws.eps.data);
         {
-            let UpdateWorkspace { head, eps, tg, .. } = &mut *ws;
+            let UpdateWorkspace { enc_inf, actor_feat, head, eps, tg, q1, q2, .. } = &mut *ws;
+            let feat: &Tensor = match self.encoder.as_ref() {
+                Some(enc) => {
+                    enc.forward_into(&batch.obs, p, enc_inf, actor_feat);
+                    actor_feat
+                }
+                None => &batch.obs,
+            };
+            self.actor.forward_train_into(feat, p, &mut self.ws_actor, head);
+            eps.ensure_shape(&[b, self.cfg.act_dim]);
+            self.rng.normal_fill(&mut eps.data);
             tg.forward_into(head, eps, self.policy_cfg(), p);
-        }
-        {
-            let UpdateWorkspace { tg, q1, q2, .. } = &mut *ws;
             self.critic.forward_train_into(feat, &tg.a, p, &mut self.ws_critic, q1, q2);
         }
 
@@ -946,6 +990,13 @@ impl SacAgent {
                 prm.w.copy_from_slice(&view[off..off + prm.len()]);
                 off += prm.len();
             });
+        }
+        // refresh the packed read-only mirrors from the synced masters
+        if self.half_storage.is_some() {
+            self.target.repack_weights();
+            if let Some(tenc) = self.target_encoder.as_mut() {
+                tenc.repack_weights();
+            }
         }
     }
 
@@ -1166,6 +1217,125 @@ mod tests {
             );
             assert_eq!(ptrs, now, "steady-state update must not reallocate the workspace");
         }
+    }
+
+    #[test]
+    fn pixel_update_reuses_feature_buffers_steady_state() {
+        // pixels path: after the first update warms the encoder walks,
+        // further updates of the same batch shape must not reallocate
+        // the feature staging tensors (the inference/training encoder
+        // workspaces behind them are pointer-checked in encoder.rs)
+        let mut rng = Pcg64::seed(23);
+        let cfg = SacConfig::pixels(8, 2, 24);
+        let mut agent = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        let b = 4;
+        let mut obs = Tensor::zeros(&[b, 3, 21, 21]);
+        for v in obs.data.iter_mut() {
+            *v = rng.uniform_f32();
+        }
+        let batch = Batch {
+            obs: obs.clone(),
+            act: Tensor::zeros(&[b, 2]),
+            rew: vec![0.1; b],
+            next_obs: obs,
+            not_done: vec![1.0; b],
+        };
+        // two warm-ups: the actor step runs every other update (pixels
+        // actor_update_freq = 2), so both bodies must have filled their
+        // buffers before pinning pointers
+        agent.update(&batch);
+        agent.update(&batch);
+        let ptrs = (
+            agent.update_ws.actor_feat.data.as_ptr(),
+            agent.update_ws.tgt_feat.data.as_ptr(),
+            agent.update_ws.online_feat.data.as_ptr(),
+            agent.update_ws.head.data.as_ptr(),
+        );
+        for _ in 0..4 {
+            agent.update(&batch);
+            let now = (
+                agent.update_ws.actor_feat.data.as_ptr(),
+                agent.update_ws.tgt_feat.data.as_ptr(),
+                agent.update_ws.online_feat.data.as_ptr(),
+                agent.update_ws.head.data.as_ptr(),
+            );
+            assert_eq!(ptrs, now, "pixels steady state must not reallocate feature staging");
+        }
+    }
+
+    #[test]
+    fn f16_half_storage_is_bitwise_invisible_under_fp16_store() {
+        // With an fp16 training store every target weight sits on the
+        // f16 grid, so packing the target mirror is lossless and the
+        // half-storage GEMM path (SIMD or scalar) must reproduce the
+        // f32-master trajectory bitwise, update after update.
+        let mut rng = Pcg64::seed(51);
+        let cfg = SacConfig::states(6, 2, 24);
+        let mut plain = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 19);
+        let mut packed = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 19);
+        packed.set_half_storage(HalfFormat::F16);
+        assert_eq!(packed.half_storage(), Some(HalfFormat::F16));
+        for _ in 0..12 {
+            let b = toy_batch(8, 6, 2, &mut rng);
+            plain.update(&b);
+            packed.update(&b);
+        }
+        let (ta, tb) = (plain.target.flat_params(), packed.target.flat_params());
+        assert!(ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let (ca, cb) = (plain.critic.flat_params(), packed.critic.flat_params());
+        assert!(ca.iter().zip(&cb).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let mut obs = Tensor::zeros(&[4, 6]);
+        Pcg64::seed(8).normal_fill(&mut obs.data);
+        let aa = plain.act_batch(&obs, false).unwrap();
+        let ab = packed.act_batch(&obs, false).unwrap();
+        assert!(aa.data.iter().zip(&ab.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // and the published snapshot really dropped its masters
+        let snap_plain = plain.policy();
+        let snap_packed = packed.policy();
+        assert!(snap_packed.weight_bytes() < snap_plain.weight_bytes() * 3 / 4);
+    }
+
+    #[test]
+    fn pixel_half_storage_stays_bitwise_under_fp16_store() {
+        // Same invariant through the conv/fused-group path: a pixels
+        // round with a packed target encoder + critic must reproduce
+        // the unpacked trajectory bitwise (fp16 store, f16 pack).
+        let mut rng = Pcg64::seed(61);
+        let cfg = SacConfig::pixels(8, 2, 24);
+        let mut plain = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        let mut packed =
+            SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        packed.set_half_storage(HalfFormat::F16);
+        let mk = |rng: &mut Pcg64| {
+            let b = 2;
+            let mut obs = Tensor::zeros(&[b, 3, 21, 21]);
+            for v in obs.data.iter_mut() {
+                *v = rng.uniform_f32();
+            }
+            let mut next_obs = obs.clone();
+            for v in next_obs.data.iter_mut() {
+                *v = (*v + 0.01).min(1.0);
+            }
+            Batch {
+                obs,
+                act: Tensor::zeros(&[b, 2]),
+                rew: vec![0.5; b],
+                next_obs,
+                not_done: vec![1.0; b],
+            }
+        };
+        for _ in 0..2 {
+            let batches: Vec<Batch> = (0..3).map(|_| mk(&mut rng)).collect();
+            plain.update_round(&batches);
+            packed.update_round(&batches);
+        }
+        let (ta, tb) = (plain.target.flat_params(), packed.target.flat_params());
+        assert!(ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let (ea, eb) = (
+            plain.encoder.as_mut().unwrap().flat_params(),
+            packed.encoder.as_mut().unwrap().flat_params(),
+        );
+        assert!(ea.iter().zip(&eb).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! two independent MLPs over `concat(obs, action)`, each with hidden
 //! depth 2 and a scalar head.
 
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, Precision};
 use crate::nn::{Mlp, MlpWorkspace, Param, Tensor};
 use crate::rngs::Pcg64;
 
@@ -303,6 +303,26 @@ impl Critic {
     pub fn quantize_params(&mut self, prec: Precision) {
         self.q1.quantize_params(prec);
         self.q2.quantize_params(prec);
+    }
+
+    /// Pack both heads' weights into 16-bit storage (the target-critic
+    /// tier — see [`Mlp::pack_weights`] for the quantize-mirror
+    /// contract).
+    pub fn pack_weights(&mut self, fmt: HalfFormat) {
+        self.q1.pack_weights(fmt);
+        self.q2.pack_weights(fmt);
+    }
+
+    /// Refresh both heads' packed mirrors from their masters,
+    /// allocation-free (called after every target EMA sync).
+    pub fn repack_weights(&mut self) {
+        self.q1.repack_weights();
+        self.q2.repack_weights();
+    }
+
+    /// Resident weight bytes across storage tiers.
+    pub fn weight_bytes(&self) -> usize {
+        self.q1.weight_bytes() + self.q2.weight_bytes()
     }
 }
 

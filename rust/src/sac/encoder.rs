@@ -12,23 +12,30 @@
 //! [`super::Policy`] snapshot can serve many threads; training caches
 //! live in an explicit [`EncoderWorkspace`].
 
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, Precision};
 use crate::nn::{
-    relu, relu_backward, Conv2d, Conv2dWorkspace, LayerNorm, LayerNormWorkspace, Linear,
-    LinearWorkspace, Param, Tensor,
+    relu, relu_backward_in_place, relu_into, Conv2d, Conv2dWorkspace, LayerNorm,
+    LayerNormWorkspace, Linear, LinearWorkspace, Param, Tensor,
 };
 use crate::rngs::Pcg64;
 
-/// Training-time caches for one [`Encoder`]: per-conv im2col panels,
-/// pre-ReLU activations, the head/layer-norm workspaces and the
-/// per-sample downscale factors.
+/// Caller-owned caches and scratch for one [`Encoder`]: per-conv
+/// workspaces, pre-ReLU activations, post-ReLU activations, the
+/// head/layer-norm workspaces, per-sample downscale factors, and the
+/// backward's gradient buffers. Every buffer is grown once and reused,
+/// so the `_into` walks are allocation-free in steady state.
 #[derive(Debug, Clone, Default)]
 pub struct EncoderWorkspace {
     convs: Vec<Conv2dWorkspace>,
     pre_relu: Vec<Tensor>,
+    act: Vec<Tensor>,
     head: LinearWorkspace,
     ln: LayerNormWorkspace,
     scale: Vec<f32>,
+    z: Tensor, // pre-LN head output
+    grad_ln: Tensor,
+    grad_head: Tensor,
+    dxs: Vec<Tensor>, // per-conv input gradients (stable shapes per slot)
 }
 
 /// Convolutional encoder: `[B, C, H, W] → [B, feature_dim]`.
@@ -119,59 +126,147 @@ impl Encoder {
         self.ln.forward(&z, prec)
     }
 
-    /// Training forward: caches everything [`Encoder::backward`] needs
-    /// into `ws`. The pre-ReLU conv outputs move into the workspace (no
-    /// per-layer clone) and the image feeds the first conv directly —
-    /// bitwise identical to the allocating layout.
-    pub fn forward_train(&self, img: &Tensor, prec: Precision, ws: &mut EncoderWorkspace) -> Tensor {
+    /// Shared conv-stack + head walk for the `_into` forwards: leaves the
+    /// post-ReLU activations in `ws.act` and the (downscaled) pre-LN head
+    /// output in `ws.z`. `train` decides whether the head fills its
+    /// backward caches (either way the numbers are bitwise identical —
+    /// `forward_train_into` ≡ `forward_into` per layer).
+    fn trunk_into(&self, img: &Tensor, prec: Precision, ws: &mut EncoderWorkspace, train: bool) {
         assert_eq!(img.shape.len(), 4);
         let n = self.convs.len();
         ws.convs.resize_with(n, Conv2dWorkspace::default);
-        ws.pre_relu.clear();
-        let mut h = {
-            let z = self.convs[0].forward_train(img, prec, &mut ws.convs[0]);
-            let a = relu(&z, prec);
-            ws.pre_relu.push(z);
-            a
-        };
-        for (i, conv) in self.convs.iter().enumerate().skip(1) {
-            let z = conv.forward_train(&h, prec, &mut ws.convs[i]);
-            let a = relu(&z, prec);
-            ws.pre_relu.push(z);
-            h = a;
+        ws.pre_relu.resize_with(n, Tensor::default);
+        ws.act.resize_with(n, Tensor::default);
+        {
+            let EncoderWorkspace { convs, pre_relu, act, .. } = ws;
+            if train {
+                self.convs[0].forward_train_into(img, prec, &mut convs[0], &mut pre_relu[0]);
+            } else {
+                self.convs[0].forward_into(img, prec, &mut convs[0], &mut pre_relu[0]);
+            }
+            relu_into(&pre_relu[0], prec, &mut act[0]);
+            for i in 1..n {
+                if train {
+                    self.convs[i].forward_train_into(
+                        &act[i - 1],
+                        prec,
+                        &mut convs[i],
+                        &mut pre_relu[i],
+                    );
+                } else {
+                    self.convs[i].forward_into(&act[i - 1], prec, &mut convs[i], &mut pre_relu[i]);
+                }
+                relu_into(&pre_relu[i], prec, &mut act[i]);
+            }
         }
-        let b = h.shape[0];
-        let flat = h.len() / b;
-        let hflat = h.reshape(&[b, flat]);
-        let mut z = self.head.forward_train(&hflat, prec, &mut ws.head);
-        self.apply_downscale(&mut z, prec, Some(&mut ws.scale));
-        self.ln.forward_train(&z, prec, &mut ws.ln)
+        // flatten the last activation for the head, restoring the 4-D
+        // view afterwards so the workspace slot keeps a stable shape
+        // (no realloc next round)
+        let top = &ws.act[n - 1];
+        let shape4 = [top.shape[0], top.shape[1], top.shape[2], top.shape[3]];
+        let b = shape4[0];
+        let flat = top.len() / b;
+        ws.act[n - 1].set_shape_in_place(&[b, flat]);
+        {
+            let EncoderWorkspace { act, head, z, .. } = ws;
+            // the head always walks through its workspace: a live
+            // weight-std head re-standardizes into ws buffers instead of
+            // allocating per call, and the cached input is only read by
+            // an explicit `backward`
+            self.head.forward_train_into(&act[n - 1], prec, head, z);
+        }
+        ws.act[n - 1].set_shape_in_place(&shape4);
+        {
+            let EncoderWorkspace { z, scale, .. } = ws;
+            self.apply_downscale(z, prec, Some(&mut *scale));
+        }
+    }
+
+    /// Allocation-free inference twin of [`Encoder::forward`]: all
+    /// intermediates live in `ws`, the features in `out`, reused when
+    /// shapes repeat. Bitwise identical. Use a workspace distinct from
+    /// the training one — this walk overwrites the cached activations
+    /// [`Encoder::backward`] reads.
+    pub fn forward_into(
+        &self,
+        img: &Tensor,
+        prec: Precision,
+        ws: &mut EncoderWorkspace,
+        out: &mut Tensor,
+    ) {
+        self.trunk_into(img, prec, ws, false);
+        let EncoderWorkspace { z, .. } = ws;
+        self.ln.forward_into(z, prec, out);
+    }
+
+    /// Training forward: caches everything [`Encoder::backward`] needs
+    /// into `ws`. Bitwise identical to [`Encoder::forward`].
+    pub fn forward_train(&self, img: &Tensor, prec: Precision, ws: &mut EncoderWorkspace) -> Tensor {
+        let mut y = Tensor::default();
+        self.forward_train_into(img, prec, ws, &mut y);
+        y
+    }
+
+    /// Allocation-free twin of [`Encoder::forward_train`].
+    pub fn forward_train_into(
+        &self,
+        img: &Tensor,
+        prec: Precision,
+        ws: &mut EncoderWorkspace,
+        out: &mut Tensor,
+    ) {
+        self.trunk_into(img, prec, ws, true);
+        let EncoderWorkspace { z, ln, .. } = ws;
+        self.ln.forward_train_into(z, prec, ln, out);
     }
 
     /// Backward from `dfeat` `[B, feature_dim]`; accumulates all encoder
-    /// grads, returns nothing (images need no gradient).
-    pub fn backward(&mut self, dfeat: &Tensor, prec: Precision, ws: &EncoderWorkspace) {
-        let mut g = self.ln.backward(dfeat, prec, &ws.ln);
+    /// grads, returns nothing (images need no gradient). All gradient
+    /// scratch lives in `ws` (allocation-free once warm).
+    pub fn backward(&mut self, dfeat: &Tensor, prec: Precision, ws: &mut EncoderWorkspace) {
+        let n = self.convs.len();
+        ws.dxs.resize_with(n, Tensor::default);
+        {
+            let EncoderWorkspace { ln, grad_ln, .. } = ws;
+            self.ln.backward_into(dfeat, prec, ln, grad_ln);
+        }
         // through the stop-grad downscale: dy/dz = s per sample
-        for r in 0..g.rows() {
-            let s = ws.scale[r];
-            if s != 1.0 {
-                for v in g.row_mut(r) {
-                    *v = prec.q(*v * s);
+        {
+            let EncoderWorkspace { grad_ln, scale, .. } = ws;
+            for r in 0..grad_ln.rows() {
+                let s = scale[r];
+                if s != 1.0 {
+                    for v in grad_ln.row_mut(r) {
+                        *v = prec.q(*v * s);
+                    }
                 }
             }
         }
-        let g = self.head.backward(&g, prec, &ws.head);
-        // reshape to conv output shape
-        let n = self.convs.len();
-        // tidy-allow(alloc): pixels-path shape metadata (4 usizes);
-        // workspace reuse is a ROADMAP carryover
-        let last_shape = ws.pre_relu[n - 1].shape.clone();
-        let mut g = g.reshape(&last_shape);
-        for i in (0..n).rev() {
-            g = relu_backward(&g, &ws.pre_relu[i], prec);
-            g = self.convs[i].backward(&g, prec, &ws.convs[i]);
+        let (b, flat) = {
+            let EncoderWorkspace { grad_ln, head, grad_head, .. } = ws;
+            self.head.backward_into(grad_ln, prec, head, grad_head);
+            (grad_head.rows(), grad_head.cols())
+        };
+        // view the head input gradient in the conv output shape, walk the
+        // stack, then restore the 2-D view so the buffer's shape is
+        // stable across rounds
+        {
+            let EncoderWorkspace { pre_relu, grad_head, .. } = ws;
+            let s = &pre_relu[n - 1].shape;
+            let shape4 = [s[0], s[1], s[2], s[3]];
+            grad_head.set_shape_in_place(&shape4);
         }
+        {
+            let EncoderWorkspace { convs, pre_relu, grad_head, dxs, .. } = ws;
+            relu_backward_in_place(grad_head, &pre_relu[n - 1], prec);
+            self.convs[n - 1].backward_into(grad_head, prec, &mut convs[n - 1], &mut dxs[n - 1]);
+            for i in (0..n - 1).rev() {
+                let (lo, hi) = dxs.split_at_mut(i + 1);
+                relu_backward_in_place(&mut hi[0], &pre_relu[i], prec);
+                self.convs[i].backward_into(&hi[0], prec, &mut convs[i], &mut lo[i]);
+            }
+        }
+        ws.grad_head.set_shape_in_place(&[b, flat]);
     }
 
     pub fn params_mut(&mut self) -> Vec<&mut Param> {
@@ -249,6 +344,48 @@ impl Encoder {
     pub fn bake_weight_std(&mut self, prec: Precision) {
         self.head.bake_weight_std(prec);
     }
+
+    /// Pack the conv kernels and (if its standardization is baked) the
+    /// head weights into 16-bit storage — quantize-mirroring the
+    /// masters, see [`Linear::pack_weights`]. A live weight-std head is
+    /// left unpacked (its GEMM reads the re-standardized `Ŵ`, not `w`),
+    /// which is why target encoders stay on the f32 tier. Layer-norm
+    /// γ/β stay f32: they are tiny and read elementwise, not streamed
+    /// through a GEMM.
+    pub fn pack_weights(&mut self, fmt: HalfFormat) {
+        for c in self.convs.iter_mut() {
+            c.pack_weights(fmt);
+        }
+        self.head.pack_weights(fmt);
+    }
+
+    /// Refresh every packed mirror from its (EMA-updated) master,
+    /// allocation-free — the target-encoder sync hook. Layers that were
+    /// never packed (the live weight-std head) are untouched.
+    pub fn repack_weights(&mut self) {
+        for c in self.convs.iter_mut() {
+            c.repack_weights();
+        }
+        self.head.repack_weights();
+    }
+
+    /// Drop the f32 masters of every packed layer (frozen snapshots).
+    pub fn drop_masters(&mut self) {
+        for c in self.convs.iter_mut() {
+            c.drop_master();
+        }
+        if self.head.w_half.is_some() {
+            self.head.drop_master();
+        }
+    }
+
+    /// Resident weight bytes across storage tiers (convs + head + γ/β).
+    pub fn weight_bytes(&self) -> usize {
+        let f32s = std::mem::size_of::<f32>();
+        self.convs.iter().map(|c| c.weight_bytes()).sum::<usize>()
+            + self.head.weight_bytes()
+            + (self.ln.gamma.w.len() + self.ln.beta.w.len()) * f32s
+    }
 }
 
 #[cfg(test)]
@@ -278,7 +415,7 @@ mod tests {
         let mut ws = EncoderWorkspace::default();
         let f = e.forward_train(&img, Precision::Fp32, &mut ws);
         e.zero_grad();
-        e.backward(&f.clone(), Precision::Fp32, &ws);
+        e.backward(&f.clone(), Precision::Fp32, &mut ws);
         let nonzero = e
             .params_mut()
             .iter()
@@ -297,7 +434,7 @@ mod tests {
         let mut ws = EncoderWorkspace::default();
         let f = e.forward_train(&img, prec, &mut ws);
         e.zero_grad();
-        e.backward(&f.clone(), prec, &ws); // loss = sum(f²)/2
+        e.backward(&f.clone(), prec, &mut ws); // loss = sum(f²)/2
         let g = e.convs[0].w.g[3];
         let eps = 1e-3f32;
         let orig = e.convs[0].w.w[3];
@@ -379,9 +516,81 @@ mod tests {
         let img = Tensor::from_vec(&[2, 3, 21, 21], (0..2 * 3 * 21 * 21).map(|_| rng.uniform_f32()).collect());
         for prec in [Precision::Fp32, Precision::fp16()] {
             let mut ws = EncoderWorkspace::default();
+            let mut wsi = EncoderWorkspace::default();
+            let mut f = Tensor::default();
             let a = e.forward(&img, prec);
             let b = e.forward_train(&img, prec, &mut ws);
+            e.forward_into(&img, prec, &mut wsi, &mut f);
             assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+            assert!(a.data.iter().zip(&f.data).all(|(u, v)| u.to_bits() == v.to_bits()));
         }
+    }
+
+    #[test]
+    fn workspace_walks_reuse_buffers_across_rounds() {
+        let mut rng = Pcg64::seed(7);
+        let mut e = tiny_encoder(&mut rng);
+        let img = Tensor::from_vec(
+            &[2, 3, 21, 21],
+            (0..2 * 3 * 21 * 21).map(|_| rng.uniform_f32()).collect(),
+        );
+        let mut ws = EncoderWorkspace::default();
+        let mut f = Tensor::default();
+        e.forward_train_into(&img, Precision::Fp32, &mut ws, &mut f);
+        e.backward(&f.clone(), Precision::Fp32, &mut ws);
+        let n = e.convs.len();
+        let ptrs: Vec<*const f32> = ws
+            .pre_relu
+            .iter()
+            .chain(ws.act.iter())
+            .chain(ws.dxs.iter())
+            .map(|t| t.data.as_ptr() as *const f32)
+            .collect();
+        let (zp, glp, ghp, fp) =
+            (ws.z.data.as_ptr(), ws.grad_ln.data.as_ptr(), ws.grad_head.data.as_ptr(), f.data.as_ptr());
+        e.forward_train_into(&img, Precision::Fp32, &mut ws, &mut f);
+        e.backward(&f.clone(), Precision::Fp32, &mut ws);
+        let after: Vec<*const f32> = ws
+            .pre_relu
+            .iter()
+            .chain(ws.act.iter())
+            .chain(ws.dxs.iter())
+            .map(|t| t.data.as_ptr() as *const f32)
+            .collect();
+        assert_eq!(ptrs, after, "conv activations/gradients must reuse their buffers");
+        assert_eq!(zp, ws.z.data.as_ptr(), "pre-LN buffer must be reused");
+        assert_eq!(glp, ws.grad_ln.data.as_ptr(), "LN gradient must be reused");
+        assert_eq!(ghp, ws.grad_head.data.as_ptr(), "head gradient must be reused");
+        assert_eq!(fp, f.data.as_ptr(), "feature tensor must be reused");
+        // the act slots must be back in 4-D view for the next round
+        assert_eq!(ws.act[n - 1].shape.len(), 4, "flattened view must be restored");
+    }
+
+    #[test]
+    fn packed_snapshot_encoder_matches_master_bitwise() {
+        let mut rng = Pcg64::seed(8);
+        let mut e = tiny_encoder(&mut rng);
+        // snapshot recipe: bake the weight-std head, then pack
+        e.bake_weight_std(Precision::fp16());
+        let img = Tensor::from_vec(
+            &[2, 3, 21, 21],
+            (0..2 * 3 * 21 * 21).map(|_| rng.uniform_f32()).collect(),
+        );
+        let mut packed = e.clone();
+        packed.pack_weights(HalfFormat::F16);
+        // quantize-mirror: sync the reference masters
+        for (c, pc) in e.convs.iter_mut().zip(&packed.convs) {
+            c.w.w.clone_from(&pc.w.w);
+        }
+        e.head.w.w.clone_from(&packed.head.w.w);
+        let a = e.forward(&img, Precision::fp16());
+        let b = packed.forward(&img, Precision::fp16());
+        assert!(a.data.iter().zip(&b.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+        let full = packed.weight_bytes();
+        packed.drop_masters();
+        let lean = packed.weight_bytes();
+        assert!(lean < full, "dropping masters must shrink resident bytes");
+        let c = packed.forward(&img, Precision::fp16());
+        assert!(a.data.iter().zip(&c.data).all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 }

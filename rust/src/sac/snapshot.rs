@@ -12,7 +12,7 @@
 
 use super::encoder::Encoder;
 use super::policy::{PolicyCfg, TanhGaussian};
-use crate::lowp::Precision;
+use crate::lowp::{HalfFormat, Precision};
 use crate::nn::{Mlp, Tensor};
 use crate::rngs::Pcg64;
 
@@ -76,6 +76,33 @@ impl Policy {
 
     pub fn is_pixels(&self) -> bool {
         self.pixel_shape.is_some()
+    }
+
+    /// Pack every weight matrix into 16-bit storage and drop the f32
+    /// masters. A snapshot is frozen — it never trains and never
+    /// repacks — so after this call only the u16 tier stays resident
+    /// (roughly half the weight bytes) and every forward streams the
+    /// packed operand through the SIMD widening kernels.
+    ///
+    /// Semantics: packing quantize-mirrors the weights, so a packed
+    /// snapshot acts exactly like one whose masters were rounded to
+    /// `fmt` first. When the training store already keeps weights on
+    /// the fp16 grid (the paper's half-precision runs), an f16 pack is
+    /// lossless and the packed snapshot is bitwise identical to the
+    /// unpacked one.
+    pub fn pack_weights(&mut self, fmt: HalfFormat) {
+        self.actor.pack_weights(fmt);
+        self.actor.drop_masters();
+        if let Some(enc) = self.encoder.as_mut() {
+            enc.pack_weights(fmt);
+            enc.drop_masters();
+        }
+    }
+
+    /// Resident weight bytes across storage tiers (f32 masters that
+    /// were dropped by [`Policy::pack_weights`] no longer count).
+    pub fn weight_bytes(&self) -> usize {
+        self.actor.weight_bytes() + self.encoder.as_ref().map_or(0, Encoder::weight_bytes)
     }
 
     /// Shape a flat buffer of `batch` concatenated observations into the
@@ -217,6 +244,36 @@ mod tests {
         policy.stage_obs(&mut stage, &flat2, 3);
         assert_eq!(ptr, stage.data.as_ptr(), "same batch shape must not reallocate");
         assert_eq!(stage.data, flat2);
+    }
+
+    #[test]
+    fn packed_snapshot_matches_f32_snapshot_bitwise_and_shrinks() {
+        // fp16 store keeps every weight on the f16 grid, so an f16 pack
+        // is lossless and the packed snapshot (running through the SIMD
+        // widening GEMM path) must act bitwise identically to the
+        // unpacked one — while dropping the f32 masters roughly halves
+        // the resident weight bytes.
+        let agent =
+            SacAgent::new(SacConfig::states(5, 2, 16), Methods::ours(), Precision::fp16(), 4);
+        let plain = agent.policy();
+        let mut packed = agent.policy();
+        let before = packed.weight_bytes();
+        packed.pack_weights(crate::lowp::HalfFormat::F16);
+        let after = packed.weight_bytes();
+        assert!(
+            after < before * 3 / 4,
+            "dropping masters must shrink resident bytes: {before} -> {after}"
+        );
+        let mut obs = Tensor::zeros(&[6, 5]);
+        Pcg64::seed(9).normal_fill(&mut obs.data);
+        let a = plain.act_batch(&obs, ActMode::Deterministic);
+        let b = packed.act_batch(&obs, ActMode::Deterministic);
+        assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let mut r1 = Pcg64::seed(3);
+        let mut r2 = Pcg64::seed(3);
+        let s1 = plain.act_batch(&obs, ActMode::Sample(&mut r1));
+        let s2 = packed.act_batch(&obs, ActMode::Sample(&mut r2));
+        assert!(s1.data.iter().zip(&s2.data).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

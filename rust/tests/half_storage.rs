@@ -1,0 +1,192 @@
+//! Storage-tier contracts (INVARIANTS.md "Native half storage & SIMD"):
+//!
+//! * the SIMD widening GEMM kernels are **bitwise equal** to the scalar
+//!   oracle at every runtime feature level, shape, and format;
+//! * the packed-half GEMM equals the f32 GEMM run on the decoded
+//!   weights (so swapping a layer's storage tier is invisible);
+//! * pack → unpack is exact on store-quantized values — the fp16 store
+//!   writes onto the f16 grid, so packing target mirrors and snapshots
+//!   loses nothing;
+//! * a policy snapshot packed to 16-bit storage serves bitwise
+//!   identical actions while holding roughly half the weight bytes.
+
+use lprl::lowp::{HalfFormat, Precision, BF16, FP16};
+use lprl::nn::gemm::{gemm_nt_bias_q, gemm_nt_bias_q_half, gemm_nt_bias_q_half_at};
+use lprl::nn::{simd, Tensor};
+use lprl::rngs::Pcg64;
+use lprl::sac::{ActMode, Batch, Methods, SacAgent, SacConfig};
+
+const SHAPES: &[(usize, usize, usize)] =
+    &[(1, 1, 1), (2, 3, 5), (4, 16, 16), (5, 17, 33), (16, 64, 48), (33, 40, 19)];
+
+fn fill(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32()).collect()
+}
+
+#[test]
+fn half_gemm_matches_scalar_oracle_across_shapes_and_levels() {
+    let detected = simd::detect();
+    println!("parity gate: {}", simd::feature_summary());
+    let mut rng = Pcg64::seed(11);
+    for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+        for &(m, k, n) in SHAPES {
+            let a = fill(&mut rng, m * k);
+            let bf = fill(&mut rng, n * k);
+            let mut b = vec![0u16; n * k];
+            fmt.pack_slice(&bf, &mut b);
+            let bias = fill(&mut rng, n);
+            for prec in [Precision::Fp32, Precision::fp16()] {
+                let mut oracle = vec![0.0f32; m * n];
+                gemm_nt_bias_q_half_at(
+                    simd::Level::Scalar,
+                    &a,
+                    &b,
+                    fmt,
+                    &mut oracle,
+                    m,
+                    k,
+                    n,
+                    Some(&bias),
+                    prec,
+                );
+                let mut fast = vec![0.0f32; m * n];
+                gemm_nt_bias_q_half_at(
+                    detected, &a, &b, fmt, &mut fast, m, k, n, Some(&bias), prec,
+                );
+                assert!(
+                    fast.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} {} {m}x{k}x{n}: vector path must equal the scalar oracle",
+                    detected.name(),
+                    fmt.name()
+                );
+                // the public auto-dispatch entry lands on the same bits
+                let mut auto = vec![0.0f32; m * n];
+                gemm_nt_bias_q_half(&a, &b, fmt, &mut auto, m, k, n, Some(&bias), prec);
+                assert!(auto.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+}
+
+// parity: gemm_nt_bias_q_pair_half — the fused critic pair is pinned by
+// the half-storage bitwise tests in `sac::agent` (packed target critics
+// run the pair entry and must match the plain f32 run exactly).
+
+#[test]
+fn half_gemm_equals_f32_gemm_on_decoded_weights() {
+    let mut rng = Pcg64::seed(23);
+    for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+        for &(m, k, n) in SHAPES {
+            let a = fill(&mut rng, m * k);
+            let bf = fill(&mut rng, n * k);
+            let mut b = vec![0u16; n * k];
+            fmt.pack_slice(&bf, &mut b);
+            let mut decoded = vec![0.0f32; n * k];
+            fmt.unpack_slice(&b, &mut decoded);
+            let bias = fill(&mut rng, n);
+            for prec in [Precision::Fp32, Precision::fp16()] {
+                let mut c_f32 = vec![0.0f32; m * n];
+                gemm_nt_bias_q(&a, &decoded, &mut c_f32, m, k, n, Some(&bias), prec);
+                let mut c_half = vec![0.0f32; m * n];
+                gemm_nt_bias_q_half(&a, &b, fmt, &mut c_half, m, k, n, Some(&bias), prec);
+                assert!(
+                    c_half.iter().zip(&c_f32).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "{} {m}x{k}x{n}: storage tier must be invisible given equal weights",
+                    fmt.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_roundtrip_is_exact_on_store_quantized_values() {
+    let mut rng = Pcg64::seed(31);
+    // random values snapped onto each format's grid, the way the fp16 /
+    // bf16 stores write parameters, plus the edge cases
+    let mut base: Vec<f32> = (0..4096).map(|_| rng.normal_f32() * 8.0).collect();
+    base.extend((0..512).map(|_| rng.normal_f32() * 1e-6)); // subnormal range
+    base.extend([0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 65504.0, -65504.0]);
+    for (fmt, grid) in [(HalfFormat::F16, FP16), (HalfFormat::Bf16, BF16)] {
+        let mut xs = base.clone();
+        grid.quantize_slice(&mut xs);
+        let mut packed = vec![0u16; xs.len()];
+        fmt.pack_slice(&xs, &mut packed);
+        let mut back = vec![0.0f32; xs.len()];
+        fmt.unpack_slice(&packed, &mut back);
+        for (i, (x, y)) in xs.iter().zip(&back).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{} elem {i}: {x} failed to round-trip through 16-bit storage",
+                fmt.name()
+            );
+        }
+    }
+}
+
+fn toy_batch(rng: &mut Pcg64, b: usize, obs_dim: usize, act_dim: usize) -> Batch {
+    let mut obs = Tensor::zeros(&[b, obs_dim]);
+    rng.normal_fill(&mut obs.data);
+    let mut next_obs = Tensor::zeros(&[b, obs_dim]);
+    rng.normal_fill(&mut next_obs.data);
+    let mut act = Tensor::zeros(&[b, act_dim]);
+    for v in act.data.iter_mut() {
+        *v = rng.uniform_in(-1.0, 1.0);
+    }
+    Batch {
+        obs,
+        act,
+        rew: (0..b).map(|_| rng.normal_f32() * 0.1).collect(),
+        next_obs,
+        not_done: vec![1.0; b],
+    }
+}
+
+#[test]
+fn packed_states_policy_serves_identical_actions_in_half_the_bytes() {
+    let mut rng = Pcg64::seed(41);
+    let cfg = SacConfig::states(6, 2, 32);
+    let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 5);
+    for _ in 0..6 {
+        let b = toy_batch(&mut rng, 8, 6, 2);
+        agent.update(&b);
+    }
+    let plain = agent.policy();
+    let mut packed = agent.policy();
+    packed.pack_weights(HalfFormat::F16);
+    assert!(
+        packed.weight_bytes() < plain.weight_bytes() * 3 / 4,
+        "packed {} vs f32 {}",
+        packed.weight_bytes(),
+        plain.weight_bytes()
+    );
+    let mut obs = Tensor::zeros(&[5, 6]);
+    rng.normal_fill(&mut obs.data);
+    let a = plain.act_batch(&obs, ActMode::Deterministic);
+    let b = packed.act_batch(&obs, ActMode::Deterministic);
+    assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    let mut r1 = Pcg64::seed(9);
+    let mut r2 = Pcg64::seed(9);
+    let a = plain.act_batch(&obs, ActMode::Sample(&mut r1));
+    let b = packed.act_batch(&obs, ActMode::Sample(&mut r2));
+    assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+}
+
+#[test]
+fn packed_pixels_policy_serves_identical_actions() {
+    let mut rng = Pcg64::seed(43);
+    let cfg = SacConfig::pixels(8, 2, 24);
+    let mut agent = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+    let plain = agent.policy();
+    let mut packed = agent.policy();
+    packed.pack_weights(HalfFormat::F16);
+    assert!(packed.weight_bytes() < plain.weight_bytes() * 3 / 4);
+    let mut obs = Tensor::zeros(&[2, 3, 21, 21]);
+    for v in obs.data.iter_mut() {
+        *v = rng.uniform_f32();
+    }
+    let a = plain.act_batch(&obs, ActMode::Deterministic);
+    let b = packed.act_batch(&obs, ActMode::Deterministic);
+    assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+}

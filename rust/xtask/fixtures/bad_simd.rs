@@ -1,0 +1,6 @@
+// Known-bad fixture (scanned as a non-simd module): raw feature
+// detection and intrinsic paths outside nn/simd.rs without an escape.
+
+pub fn has_fast_widen() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("f16c")
+}

@@ -23,3 +23,10 @@ fn serve_and_replay_match_reference() {
     // parity: sample_round_into
     serve_round();
 }
+
+#[test]
+fn half_storage_matches_f32_tier() {
+    check(gemm_nt_bias_q_half(&a, &b, fmt, &mut c, m, k, n, None, prec));
+    // parity: gemm_nt_bias_q_pair_half
+    run_packed_critic_pair();
+}

@@ -1,0 +1,6 @@
+// Known-good fixture: vector capability is consumed through nn::simd's
+// safe dispatch surface — the detected level, not raw intrinsics.
+
+pub fn widen_is_accelerated(fmt: crate::lowp::HalfFormat) -> bool {
+    crate::nn::simd::detect().accelerates(fmt)
+}

@@ -16,6 +16,10 @@
 //! * **precision** — `to_bits`/`from_bits` bit twiddling is only legal
 //!   inside `lowp/`, so `lowp::Precision` stays the single source of
 //!   numerical truth. Escape: `// tidy-allow(precision): <reason>`.
+//! * **simd** — explicit vector code (`std::arch`/`core::arch`
+//!   intrinsics, feature-detection macros) is only legal inside
+//!   `nn/simd.rs`, so the scalar-oracle parity contract has a single
+//!   enforcement surface. Escape: `// tidy-allow(simd): <reason>`.
 //! * **panic** — no `.unwrap()` / `.expect(` in library code outside
 //!   `#[cfg(test)]` regions without `// tidy-allow(panic): <reason>`.
 //! * **alloc** — no heap allocation in any fn reachable from the hot
@@ -74,9 +78,22 @@ const DETERMINISM_TOKENS: &[(&str, &str)] = &[
     ("from_entropy", "ad-hoc RNG: randomness must flow through rngs::Pcg64"),
 ];
 
+/// Explicit-SIMD constructs that must stay inside [`SIMD_HOME`]: raw
+/// intrinsic paths and the runtime feature-detection macros. Matched by
+/// substring (the paths carry `::`, which token boundaries can't see).
+pub(crate) const SIMD_TOKENS: &[&str] = &[
+    "std::arch",
+    "core::arch",
+    "is_x86_feature_detected",
+    "is_aarch64_feature_detected",
+];
+
+/// The one module allowed to contain explicit SIMD.
+const SIMD_HOME: &str = "rust/src/nn/simd.rs";
+
 /// Rules that may be escaped with `// tidy-allow(<rule>): <reason>`.
 /// `safety` is deliberately absent: a SAFETY argument is never optional.
-const ALLOWABLE_RULES: &[&str] = &["determinism", "precision", "panic", "alloc"];
+const ALLOWABLE_RULES: &[&str] = &["determinism", "precision", "simd", "panic", "alloc"];
 
 /// One rule violation, reported as `file:line: [rule] message`.
 #[derive(Debug)]
@@ -162,6 +179,23 @@ fn analyze_source(sf: &SourceFile) -> Vec<Diag> {
                             "`{tok}` outside lowp/ — bit twiddling belongs behind \
                              lowp::Precision; fix or escape with \
                              `// tidy-allow(precision): <reason>`"
+                        ),
+                    );
+                    break;
+                }
+            }
+        }
+
+        if lib_code && rel != SIMD_HOME {
+            for tok in SIMD_TOKENS {
+                if code.contains(tok) && !allowed(lines, idx, "simd") {
+                    push(
+                        ln,
+                        "simd",
+                        format!(
+                            "`{tok}` outside nn/simd.rs — explicit vector code belongs \
+                             behind nn::simd's dispatched kernels (the scalar-parity \
+                             boundary); fix or escape with `// tidy-allow(simd): <reason>`"
                         ),
                     );
                     break;
@@ -383,7 +417,7 @@ enum Format {
     Github,
 }
 
-const CLEAN_MSG: &str = "tidy: clean (safety, determinism, precision, panic, alloc, \
+const CLEAN_MSG: &str = "tidy: clean (safety, determinism, precision, simd, panic, alloc, \
                          lock-order, parity, stale-allow, lint-wall)";
 
 fn main() -> ExitCode {
@@ -535,6 +569,7 @@ mod tests {
         assert!(rules_hit("rust/src/nn/x.rs", "bad_safety.rs").contains(&"safety"));
         assert!(rules_hit("rust/src/sac/x.rs", "bad_determinism.rs").contains(&"determinism"));
         assert!(rules_hit("rust/src/replay/x.rs", "bad_precision.rs").contains(&"precision"));
+        assert!(rules_hit("rust/src/nn/gemm.rs", "bad_simd.rs").contains(&"simd"));
         assert!(rules_hit("rust/src/runtime/x.rs", "bad_panic.rs").contains(&"panic"));
         assert!(rules_hit("rust/src/nn/x.rs", "bad_allow.rs").contains(&"allow-syntax"));
     }
@@ -545,6 +580,7 @@ mod tests {
             ("rust/src/nn/x.rs", "good_safety.rs"),
             ("rust/src/sac/x.rs", "good_determinism.rs"),
             ("rust/src/replay/x.rs", "good_precision.rs"),
+            ("rust/src/nn/gemm.rs", "good_simd.rs"),
             ("rust/src/runtime/x.rs", "good_panic.rs"),
         ] {
             let d = analyze_file(rel, &fixture(name));
@@ -563,6 +599,11 @@ mod tests {
         assert!(analyze_file("rust/src/lowp/x.rs", bits).is_empty());
         assert!(analyze_file("rust/src/sac/x.rs", bits).iter().any(|d| d.rule == "precision"));
         assert!(analyze_file("rust/benches/x.rs", "fn f() { x.unwrap(); }\n").is_empty());
+        // nn/simd.rs owns explicit SIMD; everywhere else in src it's flagged
+        let vec_code = "pub fn f() -> bool { is_x86_feature_detected!(\"avx2\") }\n";
+        assert!(analyze_file("rust/src/nn/simd.rs", vec_code).is_empty());
+        assert!(analyze_file("rust/src/nn/gemm.rs", vec_code).iter().any(|d| d.rule == "simd"));
+        assert!(analyze_file("rust/benches/x.rs", vec_code).is_empty());
     }
 
     #[test]

@@ -18,6 +18,8 @@ pub const PARITY_APIS: &[&str] = &[
     "fuse_group",
     "act_batch",
     "sample_round_into",
+    "gemm_nt_bias_q_half",
+    "gemm_nt_bias_q_pair_half",
 ];
 
 /// True if any line in `test_files` references `api` by token or by a

@@ -11,13 +11,14 @@
 
 use crate::alloc::has_alloc_token;
 use crate::scan::{has_token, Line};
-use crate::{Diag, ALLOWABLE_RULES, DETERMINISM_TOKENS};
+use crate::{Diag, ALLOWABLE_RULES, DETERMINISM_TOKENS, SIMD_TOKENS};
 
 /// Would `rule` ever fire on a line whose blanked code is `code`?
 fn line_triggers(rule: &str, code: &str) -> bool {
     match rule {
         "determinism" => DETERMINISM_TOKENS.iter().any(|&(t, _)| has_token(code, t)),
         "precision" => has_token(code, "to_bits") || has_token(code, "from_bits"),
+        "simd" => SIMD_TOKENS.iter().any(|t| code.contains(t)),
         "panic" => code.contains(".unwrap()") || code.contains(".expect("),
         "alloc" => has_alloc_token(code),
         _ => true,
