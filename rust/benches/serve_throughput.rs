@@ -66,7 +66,7 @@ fn bench_serve(policy: &Policy, clients: usize, reqs: usize, max_batch: usize) -
     let obs_dim = policy.obs_len();
     let server = PolicyServer::start(
         Arc::new(NativeBackend::new(policy.clone())),
-        ServeConfig { max_batch, flush_us: 200, queue_cap: 4096 },
+        ServeConfig { max_batch, flush_us: 200, queue_cap: 4096, ..ServeConfig::default() },
     );
     let t0 = Instant::now();
     std::thread::scope(|s| {

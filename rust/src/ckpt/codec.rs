@@ -1,0 +1,374 @@
+//! Little-endian binary codec for checkpoint payloads.
+//!
+//! The offline build has no serde, so the checkpoint format is a
+//! hand-rolled length-prefixed encoding: fixed-width scalars in
+//! little-endian byte order, sequences as a `u64` count followed by the
+//! raw elements. [`Enc`] appends to a growable buffer; [`Dec`] walks a
+//! borrowed slice and returns an error — never panics — on truncated or
+//! oversized input, so a partially-written file that slipped past the
+//! checksum (or a hand-damaged test fixture) degrades into a typed
+//! decode error with offset context.
+
+use anyhow::{ensure, Context, Result};
+
+/// Append-only checkpoint payload encoder.
+#[derive(Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    /// Consume the encoder, yielding the payload bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string (config fingerprints).
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f32 sequence, each element bitwise.
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed f64 sequence, each element bitwise.
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed u16 sequence (packed half-precision words).
+    pub fn u16s(&mut self, xs: &[u16]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Append pre-encoded bytes verbatim (no length prefix) — splices a
+    /// section another `Enc` produced (the async trainer's
+    /// collector-serialized state) into this payload. The decoder must
+    /// read the spliced fields in their original order.
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed u64 sequence (histogram counters).
+    pub fn u64s(&mut self, xs: &[u64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Checkpoint payload decoder over a borrowed byte slice. Every read is
+/// bounds-checked: truncation is a typed error, and sequence lengths are
+/// validated against the remaining bytes *before* any allocation, so a
+/// corrupted length prefix cannot request an absurd buffer.
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Assert the payload was fully consumed — trailing garbage means
+    /// the reader and writer disagree about the format.
+    pub fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "checkpoint payload has {} unread trailing bytes (format mismatch)",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.buf.len() - self.pos,
+            "checkpoint payload truncated: need {n} bytes at offset {}, only {} remain",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// Read a sequence length prefix and pre-validate that `len * size`
+    /// element bytes actually remain.
+    fn seq_len(&mut self, elem_size: usize) -> Result<usize> {
+        let n = self.u64()?;
+        let n = usize::try_from(n).context("sequence length overflows usize")?;
+        let bytes = n.checked_mul(elem_size).context("sequence byte count overflows")?;
+        ensure!(
+            bytes <= self.remaining(),
+            "checkpoint payload truncated: sequence claims {n} elements ({bytes} bytes) \
+             at offset {} but only {} bytes remain",
+            self.pos,
+            self.remaining()
+        );
+        Ok(n)
+    }
+
+    fn fixed<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let s = self.take(N)?;
+        let mut a = [0u8; N];
+        a.copy_from_slice(s);
+        Ok(a)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool> {
+        let v = self.u8()?;
+        ensure!(v <= 1, "invalid bool byte {v}");
+        Ok(v == 1)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.fixed()?))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.fixed()?))
+    }
+
+    pub fn u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.fixed()?))
+    }
+
+    /// `u64` on the wire, converted to `usize` (counters, indices).
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).context("u64 value overflows usize")
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.fixed()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.fixed()?))
+    }
+
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.seq_len(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("checkpoint string is not UTF-8")
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.seq_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f32::from_le_bytes(self.fixed()?));
+        }
+        Ok(out)
+    }
+
+    /// Decode an f32 sequence into an existing buffer, validating that
+    /// the stored length matches exactly (shape agreement between the
+    /// checkpoint and the live object).
+    pub fn f32s_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let n = self.seq_len(4)?;
+        ensure!(
+            n == out.len(),
+            "checkpoint tensor length mismatch: stored {n}, expected {}",
+            out.len()
+        );
+        for v in out.iter_mut() {
+            *v = f32::from_le_bytes(self.fixed()?);
+        }
+        Ok(())
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(f64::from_le_bytes(self.fixed()?));
+        }
+        Ok(out)
+    }
+
+    pub fn u16s(&mut self) -> Result<Vec<u16>> {
+        let n = self.seq_len(2)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(u16::from_le_bytes(self.fixed()?));
+        }
+        Ok(out)
+    }
+
+    pub fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.seq_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(u64::from_le_bytes(self.fixed()?));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_roundtrip_bitwise() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.bool(true);
+        e.u32(0xdead_beef);
+        e.u64(u64::MAX - 3);
+        e.u128(u128::MAX / 7);
+        e.f32(-0.0);
+        e.f64(f64::MIN_POSITIVE);
+        e.str("fp16_ours");
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.u32().unwrap(), 0xdead_beef);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.u128().unwrap(), u128::MAX / 7);
+        assert_eq!(d.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(d.f64().unwrap().to_bits(), f64::MIN_POSITIVE.to_bits());
+        assert_eq!(d.str().unwrap(), "fp16_ours");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn sequences_roundtrip_bitwise() {
+        let f32s = vec![1.5f32, -0.0, f32::NAN, 3.25e-30];
+        let f64s = vec![0.1f64, -1e300];
+        let u16s = vec![0u16, 0x7c00, 0xffff];
+        let u64s = vec![1u64, 2, 3];
+        let mut e = Enc::new();
+        e.f32s(&f32s);
+        e.f64s(&f64s);
+        e.u16s(&u16s);
+        e.u64s(&u64s);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let got = d.f32s().unwrap();
+        assert_eq!(
+            got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            f32s.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "NaN payloads survive bitwise"
+        );
+        assert_eq!(d.f64s().unwrap(), f64s);
+        assert_eq!(d.u16s().unwrap(), u16s);
+        assert_eq!(d.u64s().unwrap(), u64s);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut e = Enc::new();
+        e.u64(42);
+        e.f32s(&[1.0, 2.0, 3.0]);
+        let bytes = e.into_bytes();
+        for cut in 0..bytes.len() {
+            let mut d = Dec::new(&bytes[..cut]);
+            let mut ok = true;
+            ok = ok && d.u64().is_ok();
+            ok = ok && d.f32s().is_ok();
+            assert!(!ok, "cut at {cut} must fail somewhere");
+        }
+    }
+
+    #[test]
+    fn absurd_length_prefix_is_rejected_before_allocation() {
+        let mut e = Enc::new();
+        e.u64(u64::MAX / 2); // claims ~2^62 elements
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let err = d.f32s().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated") || msg.contains("overflow"), "{msg}");
+    }
+
+    #[test]
+    fn trailing_bytes_are_flagged() {
+        let mut e = Enc::new();
+        e.u32(1);
+        e.u32(2);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        d.u32().unwrap();
+        assert!(d.finish().is_err());
+    }
+
+    #[test]
+    fn f32s_into_validates_shape() {
+        let mut e = Enc::new();
+        e.f32s(&[1.0, 2.0]);
+        let bytes = e.into_bytes();
+        let mut out = [0.0f32; 3];
+        let err = Dec::new(&bytes).f32s_into(&mut out).unwrap_err();
+        assert!(format!("{err}").contains("mismatch"));
+        let mut out2 = [0.0f32; 2];
+        Dec::new(&bytes).f32s_into(&mut out2).unwrap();
+        assert_eq!(out2, [1.0, 2.0]);
+    }
+}

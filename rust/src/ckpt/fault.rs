@@ -1,0 +1,144 @@
+//! Deterministic fault injection for the crash-safety tests.
+//!
+//! A [`FaultPlan`] is parsed from the `faults` config knob — a
+//! comma-separated list of:
+//!
+//! * `kill@<step>:<phase>` — abort the trainer at the first boundary of
+//!   `phase` (`round` = after a collect/update round, `eval` = after an
+//!   evaluation, `ckpt` = right after a checkpoint write) whose step
+//!   count has reached `<step>`. Fires at most once. The learner stops
+//!   exactly where a SIGKILL would leave the on-disk state: no further
+//!   checkpoint writes happen.
+//! * `torn@<step>:<mode>` — damage the first checkpoint file written at
+//!   or after `<step>` (`truncate` cuts it in half, `corrupt` flips a
+//!   payload byte), simulating a torn write that slipped past the
+//!   atomic-rename discipline. Applied by [`super::CkptStore`].
+//!
+//! Both faults are pure functions of the schedule — no wall clock, no
+//! signals — so a "crash" is exactly reproducible, which is what lets
+//! the resume tests assert bitwise equality against an undisturbed run.
+
+/// Which schedule boundary a `kill@` fault fires at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KillPhase {
+    /// After a collect/update round completes (before any eval/ckpt).
+    Round,
+    /// After an evaluation point.
+    Eval,
+    /// Immediately after a checkpoint write.
+    Ckpt,
+}
+
+/// How a `torn@` fault damages a checkpoint file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TornMode {
+    /// Cut the file to half its length (simulated partial flush).
+    Truncate,
+    /// Flip one payload byte (simulated media corruption).
+    Corrupt,
+}
+
+/// A parsed `faults` spec: at most one kill point and one torn-write.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    kill: Option<(usize, KillPhase)>,
+    /// Consumed by [`super::CkptStore::arm_torn`].
+    pub torn: Option<(u64, TornMode)>,
+}
+
+impl FaultPlan {
+    /// Parse a `faults` config string; empty means no faults.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(rest) = part.strip_prefix("kill@") {
+                let (step, phase) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("fault {part:?}: expected kill@<step>:<phase>"))?;
+                let step: usize = step
+                    .parse()
+                    .map_err(|_| format!("fault {part:?}: bad step {step:?}"))?;
+                let phase = match phase {
+                    "round" => KillPhase::Round,
+                    "eval" => KillPhase::Eval,
+                    "ckpt" => KillPhase::Ckpt,
+                    _ => return Err(format!("fault {part:?}: phase must be round|eval|ckpt")),
+                };
+                plan.kill = Some((step, phase));
+            } else if let Some(rest) = part.strip_prefix("torn@") {
+                let (step, mode) = rest
+                    .split_once(':')
+                    .ok_or_else(|| format!("fault {part:?}: expected torn@<step>:<mode>"))?;
+                let step: u64 = step
+                    .parse()
+                    .map_err(|_| format!("fault {part:?}: bad step {step:?}"))?;
+                let mode = match mode {
+                    "truncate" => TornMode::Truncate,
+                    "corrupt" => TornMode::Corrupt,
+                    _ => return Err(format!("fault {part:?}: mode must be truncate|corrupt")),
+                };
+                plan.torn = Some((step, mode));
+            } else {
+                return Err(format!(
+                    "unknown fault {part:?} (kill@<step>:<round|eval|ckpt> | \
+                     torn@<step>:<truncate|corrupt>)"
+                ));
+            }
+        }
+        Ok(plan)
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.kill.is_none() && self.torn.is_none()
+    }
+
+    /// Check-and-disarm the kill point: returns true exactly once, at
+    /// the first `phase` boundary whose `step` has reached the armed
+    /// threshold.
+    pub fn kill_due(&mut self, step: usize, phase: KillPhase) -> bool {
+        if let Some((at, ph)) = self.kill {
+            if ph == phase && step >= at {
+                self.kill = None;
+                return true;
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_kill_and_torn() {
+        let p = FaultPlan::parse("kill@300:round, torn@200:truncate").unwrap();
+        assert_eq!(p.torn, Some((200, TornMode::Truncate)));
+        let mut p = p;
+        assert!(!p.kill_due(299, KillPhase::Round));
+        assert!(!p.kill_due(300, KillPhase::Eval), "phase must match");
+        assert!(p.kill_due(300, KillPhase::Round));
+        assert!(!p.kill_due(301, KillPhase::Round), "fires once then disarms");
+    }
+
+    #[test]
+    fn empty_spec_is_no_faults() {
+        assert!(FaultPlan::parse("").unwrap().is_none());
+        assert!(FaultPlan::parse("  ").unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(FaultPlan::parse("kill@x:round").is_err());
+        assert!(FaultPlan::parse("kill@10:sometime").is_err());
+        assert!(FaultPlan::parse("torn@10:melt").is_err());
+        assert!(FaultPlan::parse("explode@10").is_err());
+        assert!(FaultPlan::parse("kill@10").is_err());
+    }
+
+    #[test]
+    fn ckpt_phase_parses() {
+        let mut p = FaultPlan::parse("kill@5:ckpt").unwrap();
+        assert!(p.kill_due(7, KillPhase::Ckpt));
+    }
+}

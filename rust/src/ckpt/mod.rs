@@ -1,0 +1,43 @@
+//! Versioned crash-safe checkpoints.
+//!
+//! A checkpoint is one self-contained binary file capturing *all* run
+//! state — agent parameters (f32 masters; packed half-storage mirrors
+//! are rebuilt by re-quantizing on load, which is exact because stored
+//! masters are already on the storage grid), Adam moments,
+//! `ScaledKahanEma` shadow+compensation state, loss-scaler state, every
+//! RNG stream, replay-buffer contents, env physics state, and the
+//! schedule counters — so that a resumed run continues **bitwise
+//! identical** to one that never stopped (see `INVARIANTS.md` §8 and
+//! the `ckpt_resume` integration tests).
+//!
+//! Layout of a checkpoint file:
+//!
+//! ```text
+//! magic   b"LPRLCKPT"          8 bytes
+//! version u32 LE               format generation (CKPT_VERSION)
+//! len     u64 LE               payload byte count
+//! payload [u8; len]            Enc-encoded run state
+//! sum     u64 LE               FNV-1a-64 over everything above
+//! ```
+//!
+//! Durability discipline ([`CkptStore`]): payloads are written to a
+//! sibling `*.tmp` file, fsync'd, then atomically renamed into place —
+//! a crash mid-write can only ever leave a stale temp (removed on the
+//! next [`CkptStore::open`]) or a previous complete generation. The
+//! trailing checksum turns torn/corrupted survivors into detected
+//! errors: [`CkptStore::load_latest`] walks generations newest-first
+//! and falls back past any file that fails validation. Transient write
+//! errors are retried with backoff; a keep-last-K policy bounds disk
+//! use.
+//!
+//! The I/O hygiene here is machine-enforced: the `ckpt-io` tidy rule
+//! bans bare `File::create`/`fs::write` on final paths and `.unwrap()`
+//! on I/O results inside this module (see `INVARIANTS.md`).
+
+mod codec;
+mod fault;
+mod store;
+
+pub use codec::{Dec, Enc};
+pub use fault::{FaultPlan, KillPhase, TornMode};
+pub use store::{CkptStore, CKPT_MAGIC, CKPT_VERSION};

@@ -1,0 +1,390 @@
+//! Crash-safe checkpoint persistence: atomic temp+fsync+rename writes,
+//! checksum-validated reads with fallback to older generations,
+//! stale-temp cleanup, retry-with-backoff, and keep-last-K retention.
+
+use super::TornMode;
+use anyhow::{bail, ensure, Context, Result};
+use std::fs::{self, File};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Leading magic of every checkpoint file.
+pub const CKPT_MAGIC: &[u8; 8] = b"LPRLCKPT";
+/// Format generation; bumped on any incompatible payload change.
+pub const CKPT_VERSION: u32 = 1;
+
+/// magic + version + payload-len header bytes before the payload.
+const HEADER_LEN: usize = 8 + 4 + 8;
+/// Trailing FNV-1a-64 checksum bytes after the payload.
+const SUM_LEN: usize = 8;
+/// Write attempts before a transient I/O error becomes fatal.
+const WRITE_ATTEMPTS: u32 = 3;
+
+/// FNV-1a 64-bit content hash (same family as the replay fingerprint —
+/// fast, dependency-free, and plenty for torn-write detection).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A directory of checkpoint generations, one file per checkpointed
+/// step: `ckpt-<step, zero-padded>.lprl`. Zero-padding makes
+/// lexicographic order equal numeric order, but [`CkptStore`] parses and
+/// sorts by step anyway — directory iteration order is OS-dependent and
+/// must never influence behavior.
+pub struct CkptStore {
+    dir: PathBuf,
+    keep: usize,
+    /// Armed torn-write fault: damage the first checkpoint written at or
+    /// after this step (fault-injection harness; see `super::FaultPlan`).
+    torn: Option<(u64, TornMode)>,
+}
+
+impl CkptStore {
+    /// Open (creating if needed) a checkpoint directory, removing any
+    /// stale `*.tmp` files a previous crash may have left behind.
+    /// `keep` is the retention depth (`0` is clamped to 1 — a store that
+    /// retains nothing could never be resumed from).
+    pub fn open(dir: impl Into<PathBuf>, keep: usize) -> Result<CkptStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        let entries = fs::read_dir(&dir)
+            .with_context(|| format!("listing checkpoint dir {}", dir.display()))?;
+        for entry in entries {
+            let entry =
+                entry.with_context(|| format!("listing checkpoint dir {}", dir.display()))?;
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("tmp") {
+                fs::remove_file(&path)
+                    .with_context(|| format!("removing stale temp {}", path.display()))?;
+            }
+        }
+        Ok(CkptStore { dir, keep: keep.max(1), torn: None })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Arm a torn-write fault (test harness): the first `save` at
+    /// `step >= at` damages its own output file after the atomic write.
+    pub fn arm_torn(&mut self, fault: Option<(u64, TornMode)>) {
+        self.torn = fault;
+    }
+
+    fn file_name(step: u64) -> String {
+        format!("ckpt-{step:020}.lprl")
+    }
+
+    /// Every on-disk generation as `(step, path)`, sorted ascending by
+    /// step. Non-checkpoint files are ignored.
+    pub fn generations(&self) -> Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        let entries = fs::read_dir(&self.dir)
+            .with_context(|| format!("listing checkpoint dir {}", self.dir.display()))?;
+        for entry in entries {
+            let entry = entry
+                .with_context(|| format!("listing checkpoint dir {}", self.dir.display()))?;
+            let path = entry.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+            let Some(step) = name
+                .strip_prefix("ckpt-")
+                .and_then(|s| s.strip_suffix(".lprl"))
+                .and_then(|s| s.parse::<u64>().ok())
+            else {
+                continue;
+            };
+            out.push((step, path));
+        }
+        out.sort_by_key(|&(step, _)| step);
+        Ok(out)
+    }
+
+    /// Write one checkpoint generation crash-safely and apply retention.
+    /// The payload goes into a sibling temp file, is fsync'd, then
+    /// atomically renamed to its final name — a crash at any point
+    /// leaves either the complete new generation or the previous state
+    /// plus (at worst) a stale temp cleaned up by the next `open`.
+    /// Transient I/O errors are retried with backoff.
+    pub fn save(&mut self, step: u64, payload: &[u8]) -> Result<PathBuf> {
+        let path = self.dir.join(Self::file_name(step));
+        let tmp = self.dir.join(format!("{}.tmp", Self::file_name(step)));
+
+        let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len() + SUM_LEN);
+        bytes.extend_from_slice(CKPT_MAGIC);
+        bytes.extend_from_slice(&CKPT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(payload);
+        let sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+
+        let mut attempt = 0;
+        loop {
+            attempt += 1;
+            match write_atomic(&tmp, &path, &bytes) {
+                Ok(()) => break,
+                Err(_) if attempt < WRITE_ATTEMPTS => {
+                    // transient I/O error: clean the temp, back off, retry
+                    let _ = fs::remove_file(&tmp);
+                    std::thread::sleep(Duration::from_millis(10 << attempt));
+                }
+                Err(e) => {
+                    let _ = fs::remove_file(&tmp);
+                    return Err(e).with_context(|| {
+                        format!(
+                            "writing checkpoint {} ({} attempts)",
+                            path.display(),
+                            attempt
+                        )
+                    });
+                }
+            }
+        }
+
+        if let Some((at, mode)) = self.torn {
+            if step >= at {
+                self.torn = None;
+                apply_torn(&path, mode)?;
+            }
+        }
+
+        self.prune()?;
+        Ok(path)
+    }
+
+    /// Drop all but the newest `keep` generations.
+    fn prune(&self) -> Result<()> {
+        let gens = self.generations()?;
+        if gens.len() > self.keep {
+            for (_, path) in &gens[..gens.len() - self.keep] {
+                fs::remove_file(path)
+                    .with_context(|| format!("pruning old checkpoint {}", path.display()))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate and decode one checkpoint file into its payload bytes.
+    /// Truncation, magic/version mismatch, and checksum failure are all
+    /// typed errors with the file path attached — never panics.
+    pub fn read_file(path: &Path) -> Result<Vec<u8>> {
+        let bytes = fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::decode(&bytes).with_context(|| format!("validating checkpoint {}", path.display()))
+    }
+
+    fn decode(bytes: &[u8]) -> Result<Vec<u8>> {
+        ensure!(
+            bytes.len() >= HEADER_LEN + SUM_LEN,
+            "file too short ({} bytes) to hold a checkpoint header",
+            bytes.len()
+        );
+        ensure!(&bytes[..8] == CKPT_MAGIC, "bad magic (not a checkpoint file)");
+        let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        ensure!(
+            version == CKPT_VERSION,
+            "unsupported checkpoint version {version} (this build reads {CKPT_VERSION})"
+        );
+        let mut len = [0u8; 8];
+        len.copy_from_slice(&bytes[12..20]);
+        let payload_len = u64::from_le_bytes(len) as usize;
+        ensure!(
+            bytes.len() == HEADER_LEN + payload_len + SUM_LEN,
+            "truncated checkpoint: header claims {payload_len} payload bytes, file holds {}",
+            bytes.len().saturating_sub(HEADER_LEN + SUM_LEN)
+        );
+        let body = &bytes[..HEADER_LEN + payload_len];
+        let mut sum = [0u8; 8];
+        sum.copy_from_slice(&bytes[HEADER_LEN + payload_len..]);
+        let want = u64::from_le_bytes(sum);
+        let got = fnv1a64(body);
+        ensure!(got == want, "checksum mismatch (stored {want:#018x}, computed {got:#018x})");
+        Ok(body[HEADER_LEN..].to_vec())
+    }
+
+    /// Load the newest *valid* generation, walking backwards past any
+    /// corrupted or truncated survivors (each one fails its checksum and
+    /// is skipped — the crash-recovery contract). Returns `None` when no
+    /// valid checkpoint exists.
+    pub fn load_latest(&self) -> Result<Option<(u64, Vec<u8>)>> {
+        let gens = self.generations()?;
+        for (step, path) in gens.iter().rev() {
+            match Self::read_file(path) {
+                Ok(payload) => return Ok(Some((*step, payload))),
+                Err(_) => continue, // damaged generation: fall back to the previous one
+            }
+        }
+        Ok(None)
+    }
+
+    /// True if any `*.tmp` file is present (test probe for temp leaks).
+    pub fn has_stale_temps(&self) -> Result<bool> {
+        let entries = fs::read_dir(&self.dir)
+            .with_context(|| format!("listing checkpoint dir {}", self.dir.display()))?;
+        for entry in entries {
+            let entry = entry
+                .with_context(|| format!("listing checkpoint dir {}", self.dir.display()))?;
+            if entry.path().extension().and_then(|e| e.to_str()) == Some("tmp") {
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+}
+
+/// The single place a checkpoint file is born: write the full image to
+/// `tmp`, flush it to stable storage, then atomically rename over the
+/// final path (and best-effort fsync the directory so the rename itself
+/// is durable).
+fn write_atomic(tmp: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
+    // tidy-allow(ckpt-io): this IS the atomic writer — the create targets
+    // the temp path, which is renamed over the final path below
+    let mut f = File::create(tmp).with_context(|| format!("creating temp {}", tmp.display()))?;
+    f.write_all(bytes).with_context(|| format!("writing temp {}", tmp.display()))?;
+    f.sync_all().with_context(|| format!("fsync temp {}", tmp.display()))?;
+    drop(f);
+    fs::rename(tmp, path).with_context(|| {
+        format!("renaming temp {} over {}", tmp.display(), path.display())
+    })?;
+    if let Some(dir) = path.parent() {
+        // directory fsync makes the rename durable; best-effort because
+        // not every platform supports opening a directory for sync
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// Damage a just-written checkpoint in place (fault injection): the
+/// result simulates what the atomic-write discipline is there to
+/// prevent, so the recovery path can be tested against real torn files.
+fn apply_torn(path: &Path, mode: TornMode) -> Result<()> {
+    let mut bytes =
+        fs::read(path).with_context(|| format!("reading checkpoint {}", path.display()))?;
+    match mode {
+        TornMode::Truncate => bytes.truncate(bytes.len() / 2),
+        TornMode::Corrupt => {
+            if bytes.is_empty() {
+                bail!("cannot corrupt empty checkpoint {}", path.display());
+            }
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x55;
+        }
+    }
+    // tidy-allow(ckpt-io): deliberate fault injection — this function
+    // exists to produce the torn final file the checksum must catch
+    let mut f = File::create(path)
+        .with_context(|| format!("rewriting torn checkpoint {}", path.display()))?;
+    f.write_all(&bytes)
+        .with_context(|| format!("rewriting torn checkpoint {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("lprl_ckpt_store_{tag}"));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_retention() {
+        let dir = tmp_dir("roundtrip");
+        let mut store = CkptStore::open(&dir, 2).unwrap();
+        for step in [100u64, 200, 300] {
+            store.save(step, format!("payload-{step}").as_bytes()).unwrap();
+        }
+        let gens = store.generations().unwrap();
+        assert_eq!(gens.iter().map(|g| g.0).collect::<Vec<_>>(), vec![200, 300], "keep-last-2");
+        let (step, payload) = store.load_latest().unwrap().unwrap();
+        assert_eq!(step, 300);
+        assert_eq!(payload, b"payload-300");
+        assert!(!store.has_stale_temps().unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_store_loads_none() {
+        let dir = tmp_dir("empty");
+        let store = CkptStore::open(&dir, 3).unwrap();
+        assert!(store.load_latest().unwrap().is_none());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_latest_falls_back_to_previous_generation() {
+        let dir = tmp_dir("corrupt");
+        let mut store = CkptStore::open(&dir, 4).unwrap();
+        store.save(100, b"good-100").unwrap();
+        store.arm_torn(Some((200, TornMode::Corrupt)));
+        store.save(200, b"good-200").unwrap();
+        let (step, payload) = store.load_latest().unwrap().unwrap();
+        assert_eq!((step, payload.as_slice()), (100, b"good-100".as_slice()));
+        // the damaged file itself is a typed error, not a panic
+        let bad = dir.join(CkptStore::file_name(200));
+        let err = CkptStore::read_file(&bad).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum"), "{msg}");
+        assert!(msg.contains("ckpt-"), "error names the file: {msg}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_latest_falls_back_to_previous_generation() {
+        let dir = tmp_dir("truncate");
+        let mut store = CkptStore::open(&dir, 4).unwrap();
+        store.save(100, b"good-100").unwrap();
+        store.arm_torn(Some((0, TornMode::Truncate)));
+        store.save(200, b"good-200").unwrap();
+        let (step, _) = store.load_latest().unwrap().unwrap();
+        assert_eq!(step, 100);
+        let bad = dir.join(CkptStore::file_name(200));
+        let msg = format!("{:#}", CkptStore::read_file(&bad).unwrap_err());
+        assert!(msg.contains("truncated") || msg.contains("too short"), "{msg}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_temps_are_cleaned_on_open() {
+        let dir = tmp_dir("stale");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("ckpt-00000000000000000100.lprl.tmp"), b"half-written").unwrap();
+        let store = CkptStore::open(&dir, 2).unwrap();
+        assert!(!store.has_stale_temps().unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_files_are_ignored() {
+        let dir = tmp_dir("foreign");
+        let mut store = CkptStore::open(&dir, 2).unwrap();
+        fs::write(dir.join("notes.txt"), b"hello").unwrap();
+        fs::write(dir.join("ckpt-abc.lprl"), b"not numeric").unwrap();
+        store.save(7, b"p").unwrap();
+        let gens = store.generations().unwrap();
+        assert_eq!(gens.len(), 1);
+        assert_eq!(gens[0].0, 7);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_typed_errors() {
+        let dir = tmp_dir("magic");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("ckpt-00000000000000000001.lprl");
+        fs::write(&p, b"GARBAGEGARBAGEGARBAGEGARBAGE").unwrap();
+        let msg = format!("{:#}", CkptStore::read_file(&p).unwrap_err());
+        assert!(msg.contains("magic"), "{msg}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

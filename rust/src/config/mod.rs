@@ -72,6 +72,21 @@ pub struct RunConfig {
     pub storage: String,
     /// Output directory for CSV results.
     pub out_dir: String,
+    /// Write a crash-safe checkpoint every this many agent steps
+    /// (0 = checkpointing off). Checkpoints land in
+    /// `<out_dir>/ckpt/` as `ckpt-<step>.lprl` generations.
+    pub checkpoint_every: usize,
+    /// Keep the last this many checkpoint generations (older ones are
+    /// pruned after each successful write; clamped to >= 1).
+    pub ckpt_keep: usize,
+    /// Resume from a checkpoint store: a directory holding
+    /// `ckpt-*.lprl` files (the newest valid generation is loaded,
+    /// damaged ones skipped). Empty = fresh run.
+    pub resume_from: String,
+    /// Fault-injection plan for the crash harness (empty = none):
+    /// comma-separated `kill@<step>:<round|eval|ckpt>` and/or
+    /// `torn@<step>:<truncate|corrupt>` — see `ckpt::FaultPlan`.
+    pub faults: String,
 }
 
 impl Default for RunConfig {
@@ -102,6 +117,10 @@ impl Default for RunConfig {
             min_log_sig: 0.0,
             storage: "f32".into(),
             out_dir: "results".into(),
+            checkpoint_every: 0,
+            ckpt_keep: 3,
+            resume_from: String::new(),
+            faults: String::new(),
         }
     }
 }
@@ -172,6 +191,12 @@ impl RunConfig {
         if self.eval_every == 0 {
             return Err("eval_every must be >= 1".into());
         }
+        if self.ckpt_keep == 0 {
+            return Err("ckpt_keep must be >= 1".into());
+        }
+        if let Err(e) = crate::ckpt::FaultPlan::parse(&self.faults) {
+            return Err(format!("bad faults spec: {e}"));
+        }
         Ok(())
     }
 
@@ -206,6 +231,10 @@ impl RunConfig {
             "min_log_sig" => self.min_log_sig = p(value).unwrap_or(self.min_log_sig),
             "storage" => self.storage = value.into(),
             "out_dir" => self.out_dir = value.into(),
+            "checkpoint_every" => self.checkpoint_every = p(value).unwrap_or(self.checkpoint_every),
+            "ckpt_keep" => self.ckpt_keep = p(value).unwrap_or(self.ckpt_keep),
+            "resume_from" => self.resume_from = value.into(),
+            "faults" => self.faults = value.into(),
             _ => return false,
         }
         true
@@ -364,6 +393,25 @@ mod tests {
         assert!(c.validate().unwrap_err().contains("storage"));
         c.storage = "bf16".into();
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn ckpt_knobs_apply_and_validate() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.checkpoint_every, 0, "checkpointing defaults to off");
+        assert!(c.set("checkpoint_every", "500"));
+        assert!(c.set("ckpt_keep", "2"));
+        assert!(c.set("resume_from", "results/ckpt"));
+        assert!(c.set("faults", "kill@900:round,torn@500:truncate"));
+        assert_eq!(c.checkpoint_every, 500);
+        assert_eq!(c.ckpt_keep, 2);
+        assert_eq!(c.resume_from, "results/ckpt");
+        assert!(c.validate().is_ok());
+        c.ckpt_keep = 0;
+        assert!(c.validate().unwrap_err().contains("ckpt_keep"));
+        c.ckpt_keep = 3;
+        c.faults = "kill@bogus".into();
+        assert!(c.validate().unwrap_err().contains("faults"));
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! learner's GEMMs).
 
 mod pipeline;
+mod run_state;
 mod trainer;
 
 // `PixelEnvAdapter` moved into `envs` (it is an env concern and

@@ -48,9 +48,11 @@
 //! collector (or an eval-time crash in the learner) scores the run 0
 //! from then on and pads the curve.
 
+use super::run_state;
 use super::trainer::{
     evaluate, replay_fingerprint_capped, round_len, TrainOutcome, UpdateSchedule, ENV_STREAM_BASE,
 };
+use crate::ckpt::{Enc, FaultPlan, KillPhase};
 use crate::config::RunConfig;
 use crate::envs::{sanitize_action, VecEnv};
 use crate::nn::pool::{default_threads, ThreadPool};
@@ -87,7 +89,15 @@ struct Rounds<'a> {
 }
 
 fn rounds(cfg: &RunConfig, n: usize) -> Rounds<'_> {
-    Rounds { cfg, n, step: 0, round: 0 }
+    rounds_from(cfg, n, 0, 0)
+}
+
+/// The schedule walk from a mid-run position — how a resumed run
+/// re-enters the round sequence: `round_len` depends only on `step`, so
+/// walking from `(step, round)` yields exactly the suffix the
+/// uninterrupted walk would have produced.
+fn rounds_from(cfg: &RunConfig, n: usize, step: usize, round: usize) -> Rounds<'_> {
+    Rounds { cfg, n, step, round }
 }
 
 impl Iterator for Rounds<'_> {
@@ -151,6 +161,11 @@ impl Chunk {
 
 enum Msg {
     Chunk(Chunk),
+    /// The collector's serialized half of a due checkpoint
+    /// ([`run_state::write_collector`]), pushed immediately after the
+    /// due round's `Chunk` — FIFO ordering guarantees the learner pops
+    /// it exactly when it assembles that round's checkpoint.
+    CkptState(Vec<u8>),
     /// The collector hit a non-finite action (the paper's crash
     /// condition) and stopped.
     Crash,
@@ -327,34 +342,41 @@ impl SnapshotSlot {
     }
 }
 
+/// The collector's mutable state, initialized (fresh or from a
+/// checkpoint) by the learner thread before the collector spawns, so
+/// resume restores both halves of the pipeline from one payload.
+struct CollectorInit {
+    /// Per-env streams (resets + seed-phase actions + exploration
+    /// noise) — async mode always uses this layout, including n = 1.
+    env_rngs: Vec<Pcg64>,
+    obs_flat: Vec<f32>,
+    ep_step: Vec<usize>,
+    start_step: usize,
+    start_round: usize,
+}
+
 /// The collector thread body: walk the round schedule, act on the
 /// deterministically-lagged snapshot, step the env streams across the
-/// env pool, queue the chunk. Returns the productive collect wall time
-/// (queue/snapshot waits excluded — they are the pipeline's slack, not
-/// collection work).
+/// env pool, queue the chunk (plus its serialized state after rounds
+/// that cross a checkpoint boundary). Returns the productive collect
+/// wall time (queue/snapshot waits excluded — they are the pipeline's
+/// slack, not collection work).
 fn collector(
     mut venv: VecEnv,
     cfg: &RunConfig,
     queue: &Queue,
     slot: &SnapshotSlot,
     env_pool: &ThreadPool,
+    init: CollectorInit,
 ) -> f64 {
     let _close = CloseGuard(queue);
     let n = venv.num_envs();
     let obs_len = venv.obs_len();
     let act_dim = venv.act_dim();
     let episode_steps = super::EPISODE_ENV_STEPS / venv.action_repeat();
-    // Async mode always uses the per-env stream layout (resets +
-    // seed-phase actions + exploration noise), including n = 1.
-    let mut env_rngs: Vec<Pcg64> =
-        (0..n).map(|i| Pcg64::seed_stream(cfg.seed, ENV_STREAM_BASE + i as u64)).collect();
-    let mut obs_flat = vec![0.0f32; n * obs_len];
-    for i in 0..n {
-        venv.reset_into(i, &mut env_rngs[i], &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
-    }
+    let CollectorInit { mut env_rngs, mut obs_flat, mut ep_step, start_step, start_round } = init;
     let mut next_flat = vec![0.0f32; n * obs_len];
     let mut rew_buf = vec![0.0f32; n];
-    let mut ep_step = vec![0usize; n];
     let mut obs_stage = Tensor::default();
     let mut collect_secs = 0.0f64;
     // Claim-grain policy: pixel steps (physics + rendering + frame
@@ -364,7 +386,7 @@ fn collector(
     let pixels = venv.obs_shape().len() == 3;
     let lanes = env_pool.workers + 1;
 
-    for (round, base_step, k) in rounds(cfg, n) {
+    for (round, base_step, k) in rounds_from(cfg, n, start_step, start_round) {
         // Resolve the round's policy before starting the timer: the
         // fetch may block on the learner, and that wait is pipeline
         // slack, not collection work.
@@ -430,6 +452,18 @@ fn collector(
         if !queue.push(Msg::Chunk(chunk)) {
             return collect_secs; // learner aborted
         }
+        // After a round that crosses a checkpoint boundary, ship this
+        // thread's half of the run state right behind the chunk; the
+        // learner pops it when it assembles the checkpoint. Both
+        // threads walk the same schedule, so due-ness needs no
+        // cross-thread coordination.
+        if run_state::ckpt_due(cfg.checkpoint_every, base_step, base_step + k) {
+            let mut enc = Enc::new();
+            run_state::write_collector(&mut enc, &env_rngs, &obs_flat, &ep_step, &venv);
+            if !queue.push(Msg::CkptState(enc.into_bytes())) {
+                return collect_secs; // learner aborted
+            }
+        }
     }
     collect_secs
 }
@@ -438,11 +472,16 @@ fn collector(
 /// seam the crash-path tests use to inject poisoned weights (the async
 /// twin of the strict `train_agent`). Called via `coordinator::train`
 /// when `cfg.sync_mode == "async"`.
-pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAgent) -> TrainOutcome {
+pub(super) fn train_agent_async(
+    cfg: &RunConfig,
+    mut venv: VecEnv,
+    mut agent: SacAgent,
+) -> TrainOutcome {
     // tidy-allow(determinism): wall-clock feeds throughput telemetry
     // only — no training decision reads it.
     let t0 = Instant::now();
     let n = venv.num_envs();
+    let obs_len = venv.obs_len();
     let repeat = venv.action_repeat();
     let act_dim = venv.act_dim();
     let eval_every = cfg.eval_every.max(1);
@@ -461,16 +500,93 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
     let mut arena = RoundArena::default();
     let done_buf = vec![false; n];
 
+    // Collector-side state, initialized here (fresh or from a
+    // checkpoint) so one payload restores both pipeline halves.
+    let mut env_rngs: Vec<Pcg64> =
+        (0..n).map(|i| Pcg64::seed_stream(cfg.seed, ENV_STREAM_BASE + i as u64)).collect();
+    let mut obs_flat = vec![0.0f32; n * obs_len];
+    let mut ep_step = vec![0usize; n];
+
+    // -- checkpoint / resume / fault-injection wiring ------------------
+    let mut faults =
+        FaultPlan::parse(&cfg.faults).unwrap_or_else(|e| panic!("bad faults spec: {e}"));
+    let mut store = run_state::open_store(cfg);
+    if let Some(st) = store.as_mut() {
+        st.arm_torn(faults.torn.take());
+    }
+    let mut killed = false;
+    let mut start_step = 0usize;
+    let mut start_round = 0usize;
+    let mut pre_actor: Option<(Vec<f32>, Option<Vec<f32>>)> = None;
+    match store.as_ref().and_then(|st| run_state::load_resume(cfg, st)) {
+        None => {
+            for i in 0..n {
+                venv.reset_into(
+                    i,
+                    &mut env_rngs[i],
+                    &mut obs_flat[i * obs_len..(i + 1) * obs_len],
+                );
+            }
+        }
+        Some((_, payload)) => {
+            let r = run_state::resume_async(
+                &payload,
+                cfg,
+                n,
+                &mut rng,
+                &mut env_rngs,
+                &mut obs_flat,
+                &mut ep_step,
+                &mut venv,
+                &mut replay,
+                &mut agent,
+                &mut sched,
+                &mut eval_curve,
+                &mut grad_hist,
+            )
+            .unwrap_or_else(|e| panic!("resume_from {}: {e:#}", cfg.resume_from));
+            start_step = r.step;
+            start_round = r.next_round;
+            pre_actor = r.pre_actor;
+        }
+    }
+    let init = CollectorInit {
+        env_rngs,
+        obs_flat,
+        ep_step,
+        start_step,
+        start_round,
+    };
+
     let mut crashed = false;
     let mut update_secs = 0.0f64;
     let mut snapshot_refreshes = 0u64;
     let mut snapshot_publish_secs = 0.0f64;
-    let mut step = 0usize;
+    let mut step = start_step;
 
-    // Version 0 = the initial weights, published before the collector
-    // starts so round 0's fetch never waits.
+    // Publish the snapshot window the collector's first fetches need.
+    // Fresh run: version 0 = the initial weights, published before the
+    // collector starts so round 0's fetch never waits. Resumed run: a
+    // checkpoint taken after round r resumes at round r+1, whose fetch
+    // (and round r+2's) need versions r and r+1 — version r+1 is the
+    // current restored masters; version r differs only if round r ran
+    // updates, in which case the checkpoint carried the pre-round actor
+    // masters and the lag-2 schedule is reconstructed from them, not
+    // restarted.
     let mut last_snapshot = Arc::new(agent.policy());
-    slot.publish(0, last_snapshot.clone());
+    if start_round == 0 {
+        slot.publish(0, last_snapshot.clone());
+    } else {
+        let v_prev = start_round as u64 - 1;
+        match &pre_actor {
+            Some((actor_flat, enc_flat)) => slot.publish(
+                v_prev,
+                Arc::new(agent.policy_from_flats(actor_flat, enc_flat.as_deref())),
+            ),
+            None => slot.publish(v_prev, last_snapshot.clone()),
+        }
+        slot.publish(start_round as u64, last_snapshot.clone());
+    }
 
     // tidy-allow(determinism): the collector/learner split is the one
     // sanctioned structured-concurrency seam; round schedule, snapshot
@@ -480,14 +596,19 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
             let queue = &queue;
             let slot = &slot;
             let env_pool = &env_pool;
-            s.spawn(move || collector(venv, cfg, queue, slot, env_pool))
+            s.spawn(move || collector(venv, cfg, queue, slot, env_pool, init))
         };
         let _stop = StopGuard(&queue, &slot);
 
         let mut collector_died = false;
-        'learn: for (round, base_step, k) in rounds(cfg, n) {
+        'learn: for (round, base_step, k) in rounds_from(cfg, n, start_step, start_round) {
             match queue.pop() {
                 None => {
+                    collector_died = true;
+                    break 'learn;
+                }
+                Some(Msg::CkptState(_)) => {
+                    // state blobs only ever follow the due round's chunk
                     collector_died = true;
                     break 'learn;
                 }
@@ -497,6 +618,14 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
                 }
                 Some(Msg::Chunk(c)) => {
                     debug_assert_eq!((c.base_step, c.k), (base_step, k));
+                    // Capture the pre-round actor masters while they are
+                    // still the content of snapshot version `round`: if
+                    // this round crosses a checkpoint boundary and runs
+                    // updates, resume needs them to republish the lag-2
+                    // window.
+                    let due = store.is_some()
+                        && run_state::ckpt_due(cfg.checkpoint_every, base_step, base_step + k);
+                    let pre = if due { Some(agent.actor_flats()) } else { None };
                     replay.push_batch(k, &c.obs, &c.act, &c.rew, &c.next_obs, &done_buf[..k]);
                     // hand the consumed chunk straight back to the
                     // collector: its vectors get re-filled, not
@@ -536,6 +665,10 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
                         // refresh cost on the learner's critical path
                         snapshot_publish_secs += tp.elapsed().as_secs_f64();
                     }
+                    if faults.kill_due(step, KillPhase::Round) {
+                        killed = true;
+                        break 'learn;
+                    }
 
                     if step % eval_every == 0 || step == cfg.steps {
                         let score = if agent.crashed || crashed {
@@ -547,6 +680,49 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
                         if agent.crashed {
                             crashed = true;
                             break 'learn;
+                        }
+                        if faults.kill_due(step, KillPhase::Eval) {
+                            killed = true;
+                            break 'learn;
+                        }
+                    }
+
+                    if due {
+                        // The collector shipped its half of the state
+                        // right behind this round's chunk (FIFO).
+                        match queue.pop() {
+                            Some(Msg::CkptState(blob)) => {
+                                if let Some(st) = store.as_mut() {
+                                    let payload = run_state::save_async(
+                                        cfg,
+                                        n,
+                                        step,
+                                        &rng,
+                                        &blob,
+                                        &replay,
+                                        &agent,
+                                        &sched,
+                                        &eval_curve,
+                                        &grad_hist,
+                                        round + 1,
+                                        if updated { pre.as_ref() } else { None },
+                                    );
+                                    st.save(step as u64, &payload)
+                                        .unwrap_or_else(|e| panic!("{e:#}"));
+                                }
+                                if faults.kill_due(step, KillPhase::Ckpt) {
+                                    killed = true;
+                                    break 'learn;
+                                }
+                            }
+                            Some(Msg::Crash) => {
+                                crashed = true;
+                                break 'learn;
+                            }
+                            _ => {
+                                collector_died = true;
+                                break 'learn;
+                            }
                         }
                     }
                 }
@@ -577,6 +753,7 @@ pub(super) fn train_agent_async(cfg: &RunConfig, venv: VecEnv, mut agent: SacAge
         eval_curve,
         final_score,
         crashed: crashed || agent.crashed,
+        killed,
         grad_hist,
         wall_secs: t0.elapsed().as_secs_f64(),
         skipped_steps: sched.skipped,
@@ -703,6 +880,65 @@ mod tests {
             q.recycle(Chunk::default());
         }
         assert!(q.spare.lock().unwrap().len() <= 3);
+    }
+
+    #[test]
+    fn async_kill_and_resume_matches_uninterrupted_run() {
+        // the async twin of the strict resume contract, which is the
+        // harder half: resume must also reconstruct the lag-2 snapshot
+        // window (versions round-1 and round, the former rebuilt from
+        // the checkpointed pre-round actor flats), so the collector's
+        // lagged fetches see exactly the snapshots the uninterrupted
+        // run would have served
+        let base = train(&quick_cfg());
+        // with num_envs=4 / every=25 the due rounds end at steps 28, 52,
+        // 76, 100 — all three kill points resume from a post-seed
+        // generation whose round ran updates (pre_actor = Some path)
+        for (tag, faults) in
+            [("round", "kill@80:round"), ("eval", "kill@60:eval"), ("ckpt", "kill@52:ckpt")]
+        {
+            let dir = std::env::temp_dir()
+                .join(format!("lprl_async_{tag}_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let mut kill_cfg = quick_cfg();
+            kill_cfg.out_dir = dir.to_string_lossy().into_owned();
+            kill_cfg.checkpoint_every = 25;
+            kill_cfg.faults = faults.into();
+            let killed = train(&kill_cfg);
+            assert!(killed.killed, "{faults} must stop the async run early");
+            assert!(!killed.crashed);
+
+            let mut res_cfg = quick_cfg();
+            res_cfg.resume_from = dir.join("ckpt").to_string_lossy().into_owned();
+            let resumed = train(&res_cfg);
+            assert!(!resumed.killed && !resumed.crashed);
+            assert_eq!(
+                resumed.eval_curve.points, base.eval_curve.points,
+                "{faults}: resumed async eval curve must match the uninterrupted run"
+            );
+            assert_eq!(
+                resumed.replay_fingerprint, base.replay_fingerprint,
+                "{faults}: replay contents must match"
+            );
+            assert_eq!(resumed.updates, base.updates);
+            let probe = |o: &TrainOutcome| {
+                let p = o.policy.as_ref().unwrap();
+                let obs: Vec<f32> =
+                    (0..p.obs_len()).map(|i| ((i as f32) * 0.37).sin()).collect();
+                let t = p.obs_tensor(&obs, 1);
+                p.act_batch(&t, crate::sac::ActMode::Deterministic)
+                    .data
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect::<Vec<u32>>()
+            };
+            assert_eq!(
+                probe(&resumed),
+                probe(&base),
+                "{faults}: final params must match bitwise"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
     }
 
     #[test]

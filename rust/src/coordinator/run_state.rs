@@ -1,0 +1,473 @@
+//! Run-state (de)serialization shared by the strict and async trainers.
+//!
+//! A checkpoint payload is the *entire* observable state of a training
+//! run at a round boundary — every RNG stream, the env physics and
+//! pixel frame stacks, the replay ring, the agent (masters, packed
+//! mirrors, Adam moments, Kahan-EMA shadows, loss scalers, agent noise
+//! stream), the update-schedule counters, the eval curve, and the
+//! gradient histogram — prefixed by a config fingerprint so a
+//! checkpoint can never be silently resumed under a different task,
+//! preset, storage tier, sync mode, seed, or env count (any of which
+//! would break the bitwise-resume contract of `INVARIANTS.md` §8).
+//!
+//! Layout (strict mode; `Enc` field order is the format):
+//!
+//! ```text
+//! header   task/preset/storage/sync_mode strs, seed, num_envs,
+//!          steps, seed_steps, batch, eval_every
+//! step     u64    agent env-steps completed
+//! rng      u128×2 the shared trainer stream (stream 7)
+//! collector  env streams, obs_flat, ep_step, VecEnv state
+//! replay   ReplayBuffer::ckpt_write
+//! agent    SacAgent::ckpt_write
+//! sched    UpdateSchedule::ckpt_write
+//! curve    eval points (f64 pairs)
+//! hist     grad histogram counters
+//! ```
+//!
+//! Async payloads append a tail: the next round index (the snapshot
+//! version clock) and the optional pre-round actor masters needed to
+//! republish the lag-2 snapshot window on resume (see
+//! `pipeline::train_agent_async`).
+
+use super::trainer::UpdateSchedule;
+use crate::ckpt::{CkptStore, Dec, Enc};
+use crate::config::RunConfig;
+use crate::envs::VecEnv;
+use crate::replay::ReplayBuffer;
+use crate::rngs::Pcg64;
+use crate::sac::SacAgent;
+use crate::telemetry::{LogHistogram, Series};
+use anyhow::{ensure, Result};
+use std::path::{Path, PathBuf};
+
+/// True when the round `[base_step, end_step)` crossed a checkpoint
+/// boundary: a checkpoint is due after the round whose end step enters
+/// a new multiple of `every`. `every == 0` disables checkpointing.
+pub(super) fn ckpt_due(every: usize, base_step: usize, end_step: usize) -> bool {
+    every != 0 && end_step / every > base_step / every
+}
+
+/// Open the checkpoint store a run reads and writes, or `None` when the
+/// config neither checkpoints nor resumes. Writes land in
+/// `<out_dir>/ckpt/` unless `resume_from` names a directory, in which
+/// case that directory is both the resume source and the ongoing store
+/// (the run-forever restart flow: point `resume_from` at the previous
+/// attempt's store and keep appending generations to it).
+pub(super) fn open_store(cfg: &RunConfig) -> Option<CkptStore> {
+    if cfg.checkpoint_every == 0 && cfg.resume_from.is_empty() {
+        return None;
+    }
+    let dir = if cfg.resume_from.is_empty() {
+        Path::new(&cfg.out_dir).join("ckpt")
+    } else {
+        PathBuf::from(&cfg.resume_from)
+    };
+    // the trainer API is infallible (panics on invalid configs); an
+    // unopenable checkpoint dir is the same class of caller error
+    Some(CkptStore::open(dir, cfg.ckpt_keep).unwrap_or_else(|e| panic!("{e:#}")))
+}
+
+/// Load the newest valid generation, panicking if `resume_from` names a
+/// store with nothing valid to resume from — silently starting fresh
+/// would masquerade as a resumed run.
+pub(super) fn load_resume(cfg: &RunConfig, store: &CkptStore) -> Option<(u64, Vec<u8>)> {
+    if cfg.resume_from.is_empty() {
+        return None;
+    }
+    let loaded = store.load_latest().unwrap_or_else(|e| panic!("{e:#}"));
+    Some(loaded.unwrap_or_else(|| {
+        panic!("resume_from {}: no valid checkpoint generation found", cfg.resume_from)
+    }))
+}
+
+fn write_header(enc: &mut Enc, cfg: &RunConfig, n: usize) {
+    enc.str(&cfg.task);
+    enc.str(&cfg.preset);
+    enc.str(&cfg.storage);
+    enc.str(&cfg.sync_mode);
+    enc.u64(cfg.seed);
+    enc.u64(n as u64);
+    enc.u64(cfg.steps as u64);
+    enc.u64(cfg.seed_steps as u64);
+    enc.u64(cfg.batch as u64);
+    enc.u64(cfg.eval_every.max(1) as u64);
+}
+
+fn read_header(dec: &mut Dec, cfg: &RunConfig, n: usize) -> Result<()> {
+    let strs = [
+        ("task", cfg.task.as_str()),
+        ("preset", cfg.preset.as_str()),
+        ("storage", cfg.storage.as_str()),
+        ("sync_mode", cfg.sync_mode.as_str()),
+    ];
+    for (name, want) in strs {
+        let got = dec.str()?;
+        ensure!(
+            got == want,
+            "checkpoint was written with {name}={got:?}, this run uses {name}={want:?}"
+        );
+    }
+    let nums = [
+        ("seed", cfg.seed),
+        ("num_envs", n as u64),
+        ("steps", cfg.steps as u64),
+        ("seed_steps", cfg.seed_steps as u64),
+        ("batch", cfg.batch as u64),
+        ("eval_every", cfg.eval_every.max(1) as u64),
+    ];
+    for (name, want) in nums {
+        let got = dec.u64()?;
+        ensure!(
+            got == want,
+            "checkpoint was written with {name}={got}, this run uses {name}={want}"
+        );
+    }
+    Ok(())
+}
+
+pub(super) fn write_rng(enc: &mut Enc, rng: &Pcg64) {
+    let (state, inc) = rng.raw_state();
+    enc.u128(state);
+    enc.u128(inc);
+}
+
+pub(super) fn read_rng(dec: &mut Dec) -> Result<Pcg64> {
+    let state = dec.u128()?;
+    let inc = dec.u128()?;
+    Ok(Pcg64::from_raw_state(state, inc))
+}
+
+/// Serialize the collector's half of the run state: the per-env RNG
+/// streams, the staged observations, the per-env episode clocks, and
+/// the env physics/frame state. In async mode this section is produced
+/// by the collector thread and spliced into the learner's payload
+/// verbatim ([`Enc::raw`]); the strict trainer writes it inline.
+pub(super) fn write_collector(
+    enc: &mut Enc,
+    env_rngs: &[Pcg64],
+    obs_flat: &[f32],
+    ep_step: &[usize],
+    venv: &VecEnv,
+) {
+    enc.u64(env_rngs.len() as u64);
+    for r in env_rngs {
+        write_rng(enc, r);
+    }
+    enc.f32s(obs_flat);
+    enc.u64(ep_step.len() as u64);
+    for &e in ep_step {
+        enc.u64(e as u64);
+    }
+    venv.ckpt_write(enc);
+}
+
+pub(super) fn read_collector(
+    dec: &mut Dec,
+    env_rngs: &mut [Pcg64],
+    obs_flat: &mut [f32],
+    ep_step: &mut [usize],
+    venv: &mut VecEnv,
+) -> Result<()> {
+    let nr = dec.usize()?;
+    ensure!(
+        nr == env_rngs.len(),
+        "checkpoint holds {nr} env RNG streams, this run has {}",
+        env_rngs.len()
+    );
+    for r in env_rngs.iter_mut() {
+        *r = read_rng(dec)?;
+    }
+    dec.f32s_into(obs_flat)?;
+    let ne = dec.usize()?;
+    ensure!(
+        ne == ep_step.len(),
+        "checkpoint holds {ne} episode clocks, this run has {}",
+        ep_step.len()
+    );
+    for e in ep_step.iter_mut() {
+        *e = dec.usize()?;
+    }
+    venv.ckpt_read(dec)
+}
+
+fn write_series(enc: &mut Enc, s: &Series) {
+    enc.u64(s.points.len() as u64);
+    for &(x, y) in &s.points {
+        enc.f64(x);
+        enc.f64(y);
+    }
+}
+
+fn read_series(dec: &mut Dec, s: &mut Series) -> Result<()> {
+    let n = dec.usize()?;
+    s.points.clear();
+    for _ in 0..n {
+        let x = dec.f64()?;
+        let y = dec.f64()?;
+        s.points.push((x, y));
+    }
+    Ok(())
+}
+
+fn write_hist(enc: &mut Enc, h: &LogHistogram) {
+    enc.u64s(&h.counts);
+    enc.u64(h.underflow);
+    enc.u64(h.overflow);
+}
+
+fn read_hist(dec: &mut Dec, h: &mut LogHistogram) -> Result<()> {
+    let counts = dec.u64s()?;
+    ensure!(
+        counts.len() == h.counts.len(),
+        "checkpoint histogram has {} bins, this run's has {}",
+        counts.len(),
+        h.counts.len()
+    );
+    h.counts = counts;
+    h.underflow = dec.u64()?;
+    h.overflow = dec.u64()?;
+    Ok(())
+}
+
+/// The learner-side tail shared by both sync modes: replay ring, agent,
+/// schedule counters, eval curve, gradient histogram.
+#[allow(clippy::too_many_arguments)]
+fn write_learner(
+    enc: &mut Enc,
+    replay: &ReplayBuffer,
+    agent: &SacAgent,
+    sched: &UpdateSchedule,
+    eval_curve: &Series,
+    grad_hist: &LogHistogram,
+) {
+    replay.ckpt_write(enc);
+    agent.ckpt_write(enc);
+    sched.ckpt_write(enc);
+    write_series(enc, eval_curve);
+    write_hist(enc, grad_hist);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn read_learner(
+    dec: &mut Dec,
+    replay: &mut ReplayBuffer,
+    agent: &mut SacAgent,
+    sched: &mut UpdateSchedule,
+    eval_curve: &mut Series,
+    grad_hist: &mut LogHistogram,
+) -> Result<()> {
+    replay.ckpt_read(dec)?;
+    agent.ckpt_read(dec)?;
+    sched.ckpt_read(dec)?;
+    read_series(dec, eval_curve)?;
+    read_hist(dec, grad_hist)
+}
+
+/// Encode one strict-mode checkpoint payload.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn save_strict(
+    cfg: &RunConfig,
+    n: usize,
+    step: usize,
+    rng: &Pcg64,
+    env_rngs: &[Pcg64],
+    obs_flat: &[f32],
+    ep_step: &[usize],
+    venv: &VecEnv,
+    replay: &ReplayBuffer,
+    agent: &SacAgent,
+    sched: &UpdateSchedule,
+    eval_curve: &Series,
+    grad_hist: &LogHistogram,
+) -> Vec<u8> {
+    let mut enc = Enc::new();
+    write_header(&mut enc, cfg, n);
+    enc.u64(step as u64);
+    write_rng(&mut enc, rng);
+    write_collector(&mut enc, env_rngs, obs_flat, ep_step, venv);
+    write_learner(&mut enc, replay, agent, sched, eval_curve, grad_hist);
+    enc.into_bytes()
+}
+
+/// Decode a strict-mode payload into live run state; returns the
+/// resumed step count.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn resume_strict(
+    payload: &[u8],
+    cfg: &RunConfig,
+    n: usize,
+    rng: &mut Pcg64,
+    env_rngs: &mut [Pcg64],
+    obs_flat: &mut [f32],
+    ep_step: &mut [usize],
+    venv: &mut VecEnv,
+    replay: &mut ReplayBuffer,
+    agent: &mut SacAgent,
+    sched: &mut UpdateSchedule,
+    eval_curve: &mut Series,
+    grad_hist: &mut LogHistogram,
+) -> Result<usize> {
+    let mut dec = Dec::new(payload);
+    read_header(&mut dec, cfg, n)?;
+    let step = dec.usize()?;
+    *rng = read_rng(&mut dec)?;
+    read_collector(&mut dec, env_rngs, obs_flat, ep_step, venv)?;
+    read_learner(&mut dec, replay, agent, sched, eval_curve, grad_hist)?;
+    dec.finish()?;
+    Ok(step)
+}
+
+/// The async-only tail decoded by [`resume_async`]: where the round
+/// clock resumes and the pre-round actor masters (present only when the
+/// checkpointed round ran updates) that rebuild the lag-2 snapshot
+/// window.
+pub(super) struct AsyncResume {
+    pub step: usize,
+    pub next_round: usize,
+    /// `Some((actor_flat, enc_flat))` ⇒ snapshot version `next_round-1`
+    /// differs from the current masters and must be rebuilt via
+    /// `SacAgent::policy_from_flats`.
+    pub pre_actor: Option<(Vec<f32>, Option<Vec<f32>>)>,
+}
+
+/// Encode one async-mode checkpoint payload. `collector_blob` is the
+/// [`write_collector`] section the collector thread shipped across the
+/// queue; `pre_actor` is `Some` iff the checkpointed round ran updates.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn save_async(
+    cfg: &RunConfig,
+    n: usize,
+    step: usize,
+    rng: &Pcg64,
+    collector_blob: &[u8],
+    replay: &ReplayBuffer,
+    agent: &SacAgent,
+    sched: &UpdateSchedule,
+    eval_curve: &Series,
+    grad_hist: &LogHistogram,
+    next_round: usize,
+    pre_actor: Option<&(Vec<f32>, Option<Vec<f32>>)>,
+) -> Vec<u8> {
+    let mut enc = Enc::new();
+    write_header(&mut enc, cfg, n);
+    enc.u64(step as u64);
+    write_rng(&mut enc, rng);
+    enc.raw(collector_blob);
+    write_learner(&mut enc, replay, agent, sched, eval_curve, grad_hist);
+    enc.u64(next_round as u64);
+    match pre_actor {
+        None => enc.bool(false),
+        Some((actor_flat, enc_flat)) => {
+            enc.bool(true);
+            enc.f32s(actor_flat);
+            match enc_flat {
+                None => enc.bool(false),
+                Some(e) => {
+                    enc.bool(true);
+                    enc.f32s(e);
+                }
+            }
+        }
+    }
+    enc.into_bytes()
+}
+
+/// Decode an async-mode payload into live run state.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn resume_async(
+    payload: &[u8],
+    cfg: &RunConfig,
+    n: usize,
+    rng: &mut Pcg64,
+    env_rngs: &mut [Pcg64],
+    obs_flat: &mut [f32],
+    ep_step: &mut [usize],
+    venv: &mut VecEnv,
+    replay: &mut ReplayBuffer,
+    agent: &mut SacAgent,
+    sched: &mut UpdateSchedule,
+    eval_curve: &mut Series,
+    grad_hist: &mut LogHistogram,
+) -> Result<AsyncResume> {
+    let mut dec = Dec::new(payload);
+    read_header(&mut dec, cfg, n)?;
+    let step = dec.usize()?;
+    *rng = read_rng(&mut dec)?;
+    read_collector(&mut dec, env_rngs, obs_flat, ep_step, venv)?;
+    read_learner(&mut dec, replay, agent, sched, eval_curve, grad_hist)?;
+    let next_round = dec.usize()?;
+    let pre_actor = if dec.bool()? {
+        let actor_flat = dec.f32s()?;
+        let enc_flat = if dec.bool()? { Some(dec.f32s()?) } else { None };
+        Some((actor_flat, enc_flat))
+    } else {
+        None
+    };
+    dec.finish()?;
+    Ok(AsyncResume { step, next_round, pre_actor })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ckpt_due_fires_on_multiple_crossings_only() {
+        assert!(!ckpt_due(0, 0, 100), "every=0 disables checkpointing");
+        assert!(ckpt_due(50, 48, 52), "round crossing a multiple is due");
+        assert!(ckpt_due(50, 46, 50), "round ending exactly on a multiple is due");
+        assert!(!ckpt_due(50, 50, 54), "round starting on a multiple is not due again");
+        assert!(!ckpt_due(50, 10, 14));
+        assert!(ckpt_due(1, 3, 4), "every=1 checkpoints every round");
+    }
+
+    #[test]
+    fn header_rejects_mismatched_configs() {
+        let cfg = RunConfig { task: "pendulum_swingup".into(), ..Default::default() };
+        let mut enc = Enc::new();
+        write_header(&mut enc, &cfg, 4);
+        let bytes = enc.into_bytes();
+        read_header(&mut Dec::new(&bytes), &cfg, 4).unwrap();
+
+        let other = RunConfig { task: "cartpole_balance".into(), ..cfg.clone() };
+        let err = read_header(&mut Dec::new(&bytes), &other, 4).unwrap_err();
+        assert!(format!("{err}").contains("task"), "{err}");
+        let err = read_header(&mut Dec::new(&bytes), &cfg, 5).unwrap_err();
+        assert!(format!("{err}").contains("num_envs"), "{err}");
+        let mut seeded = cfg.clone();
+        seeded.seed = 9;
+        let err = read_header(&mut Dec::new(&bytes), &seeded, 4).unwrap_err();
+        assert!(format!("{err}").contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn series_and_hist_roundtrip() {
+        let mut s = Series::new("x");
+        s.push(1.0, 2.5);
+        s.push(2.0, -0.5);
+        let mut h = LogHistogram::new(-12, 4, 2);
+        h.record(1e-3);
+        h.record(1e30); // overflow bin
+        let mut enc = Enc::new();
+        write_series(&mut enc, &s);
+        write_hist(&mut enc, &h);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let mut s2 = Series::new("x");
+        let mut h2 = LogHistogram::new(-12, 4, 2);
+        read_series(&mut dec, &mut s2).unwrap();
+        read_hist(&mut dec, &mut h2).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(s2.points, s.points);
+        assert_eq!(h2.counts, h.counts);
+        assert_eq!(h2.overflow, 1);
+        // a histogram of a different shape refuses the counters
+        let mut enc = Enc::new();
+        write_hist(&mut enc, &h);
+        let bytes = enc.into_bytes();
+        let mut wrong = LogHistogram::new(-3, 3, 2);
+        let err = read_hist(&mut Dec::new(&bytes), &mut wrong).unwrap_err();
+        assert!(format!("{err}").contains("bins"), "{err}");
+    }
+}

@@ -29,7 +29,8 @@
 //! an independent `Pcg64` stream for its resets, seed-phase actions and
 //! exploration noise.
 
-use super::EPISODE_ENV_STEPS;
+use super::{run_state, EPISODE_ENV_STEPS};
+use crate::ckpt::{FaultPlan, KillPhase};
 use crate::config::RunConfig;
 use crate::envs::{sanitize_action, VecEnv};
 use crate::nn::Tensor;
@@ -53,6 +54,13 @@ pub struct TrainOutcome {
     /// Mean return of the final evaluation (0 if crashed).
     pub final_score: f64,
     pub crashed: bool,
+    /// True when a `faults` kill point stopped the run early (the
+    /// fault-injection harness's simulated SIGKILL — distinct from
+    /// `crashed`, the paper's non-finite-action condition). A killed
+    /// outcome reflects the run state at the kill boundary; resuming
+    /// from the surviving checkpoint store must reproduce the no-kill
+    /// run bitwise (see `tests/ckpt_resume.rs`).
+    pub killed: bool,
     /// |gradient| histogram sampled at a few updates (Figure 6).
     pub grad_hist: LogHistogram,
     pub wall_secs: f64,
@@ -130,6 +138,29 @@ impl UpdateSchedule {
             updates_done: 0,
             skipped: 0,
         }
+    }
+
+    /// Serialize the schedule's mutable counters (checkpoint path). The
+    /// probe points themselves are rebuilt from the config by
+    /// [`UpdateSchedule::new`]; only the cursor and the tallies move.
+    pub(super) fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.u64(self.next_probe as u64);
+        enc.u64(self.updates_done);
+        enc.u64(self.skipped);
+    }
+
+    /// Restore a [`UpdateSchedule::ckpt_write`] snapshot.
+    pub(super) fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        let next_probe = dec.usize()?;
+        anyhow::ensure!(
+            next_probe <= self.probe_at.len(),
+            "checkpoint probe cursor {next_probe} exceeds the {} probe points this run has",
+            self.probe_at.len()
+        );
+        self.next_probe = next_probe;
+        self.updates_done = dec.u64()?;
+        self.skipped = dec.u64()?;
+        Ok(())
     }
 
     /// One gradient step per transition of the round; returns whether
@@ -425,7 +456,38 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
     let mut collect_secs = 0.0f64;
     let mut update_secs = 0.0f64;
 
+    // -- checkpoint / resume / fault-injection wiring ------------------
+    // `validate()` has already vetted the spec when the config came
+    // through the CLI; the test seam calls `train_agent` directly.
+    let mut faults =
+        FaultPlan::parse(&cfg.faults).unwrap_or_else(|e| panic!("bad faults spec: {e}"));
+    let mut store = run_state::open_store(cfg);
+    if let Some(st) = store.as_mut() {
+        st.arm_torn(faults.torn.take());
+    }
+    let mut killed = false;
     let mut step = 0usize;
+    if let Some(st) = store.as_ref() {
+        if let Some((_, payload)) = run_state::load_resume(cfg, st) {
+            step = run_state::resume_strict(
+                &payload,
+                cfg,
+                n,
+                &mut rng,
+                &mut env_rngs,
+                &mut obs_flat,
+                &mut ep_step,
+                &mut venv,
+                &mut replay,
+                &mut agent,
+                &mut sched,
+                &mut eval_curve,
+                &mut grad_hist,
+            )
+            .unwrap_or_else(|e| panic!("resume_from {}: {e:#}", cfg.resume_from));
+        }
+    }
+
     'train: while step < cfg.steps {
         let k = round_len(cfg, n, step);
 
@@ -499,6 +561,10 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
             update_secs += tu.elapsed().as_secs_f64();
         }
         step += k;
+        if faults.kill_due(step, KillPhase::Round) {
+            killed = true;
+            break 'train;
+        }
 
         // -- eval --------------------------------------------------------
         if step % eval_every == 0 || step == cfg.steps {
@@ -510,6 +576,25 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
             eval_curve.push((step * repeat) as f64, score);
             if agent.crashed {
                 crashed = true;
+                break 'train;
+            }
+            if faults.kill_due(step, KillPhase::Eval) {
+                killed = true;
+                break 'train;
+            }
+        }
+
+        // -- checkpoint --------------------------------------------------
+        if run_state::ckpt_due(cfg.checkpoint_every, step - k, step) && !crashed {
+            if let Some(st) = store.as_mut() {
+                let payload = run_state::save_strict(
+                    cfg, n, step, &rng, &env_rngs, &obs_flat, &ep_step, &venv, &replay,
+                    &agent, &sched, &eval_curve, &grad_hist,
+                );
+                st.save(step as u64, &payload).unwrap_or_else(|e| panic!("{e:#}"));
+            }
+            if faults.kill_due(step, KillPhase::Ckpt) {
+                killed = true;
                 break 'train;
             }
         }
@@ -525,6 +610,7 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
         eval_curve,
         final_score,
         crashed: crashed || agent.crashed,
+        killed,
         grad_hist,
         wall_secs: t0.elapsed().as_secs_f64(),
         skipped_steps: sched.skipped,
@@ -772,6 +858,135 @@ mod tests {
         // same as serial
         let serial = train(&cfgs[1]);
         assert_eq!(outs[1].eval_curve.points, serial.eval_curve.points);
+    }
+
+    /// Fresh scratch dir for a checkpoint store; removes any leftover
+    /// from a previous (crashed) test process.
+    fn ckpt_scratch(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("lprl_trainer_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    /// Bit pattern of the policy's deterministic action on a fixed probe
+    /// observation — exact equality means the final params match bitwise.
+    fn policy_probe(p: &crate::sac::Policy) -> Vec<u32> {
+        let obs: Vec<f32> = (0..p.obs_len()).map(|i| ((i as f32) * 0.37).sin()).collect();
+        let t = p.obs_tensor(&obs, 1);
+        p.act_batch(&t, crate::sac::ActMode::Deterministic)
+            .data
+            .iter()
+            .map(|v| v.to_bits())
+            .collect()
+    }
+
+    #[test]
+    fn strict_kill_and_resume_matches_uninterrupted_run() {
+        // the run-forever contract: checkpoint + kill at any injected
+        // boundary, then resume from the surviving store, must reproduce
+        // the uninterrupted run bitwise — eval curve, replay fingerprint,
+        // update counters, and the final policy's action bits
+        let base = train(&quick_cfg());
+        for (tag, faults) in
+            [("round", "kill@80:round"), ("eval", "kill@60:eval"), ("ckpt", "kill@50:ckpt")]
+        {
+            let dir = ckpt_scratch(&format!("strict_{tag}"));
+            let mut kill_cfg = quick_cfg();
+            kill_cfg.out_dir = dir.to_string_lossy().into_owned();
+            kill_cfg.checkpoint_every = 25;
+            kill_cfg.faults = faults.into();
+            let killed = train(&kill_cfg);
+            assert!(killed.killed, "{faults} must stop the run early");
+            assert!(!killed.crashed, "a kill is not a crash");
+
+            let mut res_cfg = quick_cfg();
+            res_cfg.resume_from = dir.join("ckpt").to_string_lossy().into_owned();
+            let resumed = train(&res_cfg);
+            assert!(!resumed.killed && !resumed.crashed);
+            assert_eq!(
+                resumed.eval_curve.points, base.eval_curve.points,
+                "{faults}: resumed eval curve must match the uninterrupted run"
+            );
+            assert_eq!(
+                resumed.replay_fingerprint, base.replay_fingerprint,
+                "{faults}: replay contents must match"
+            );
+            assert_eq!(resumed.updates, base.updates);
+            assert_eq!(resumed.skipped_steps, base.skipped_steps);
+            assert_eq!(
+                policy_probe(resumed.policy.as_ref().unwrap()),
+                policy_probe(base.policy.as_ref().unwrap()),
+                "{faults}: final params must match bitwise"
+            );
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+
+    #[test]
+    fn strict_fp16_resume_restores_scaler_and_skip_state() {
+        // the low-precision guardrail state — loss-scaler dynamics, skip
+        // counters, and the coerce_nonfinite-adjacent crash flags — must
+        // round-trip through a checkpoint: a resumed fp16 run reproduces
+        // the uninterrupted run's curve AND its skip accounting
+        let mut base_cfg = quick_cfg();
+        base_cfg.preset = "fp16_ours".into();
+        let base = train(&base_cfg);
+
+        let dir = ckpt_scratch("strict_fp16");
+        let mut kill_cfg = base_cfg.clone();
+        kill_cfg.out_dir = dir.to_string_lossy().into_owned();
+        kill_cfg.checkpoint_every = 25;
+        kill_cfg.faults = "kill@80:round".into();
+        let killed = train(&kill_cfg);
+        assert!(killed.killed && !killed.crashed);
+
+        let mut res_cfg = base_cfg.clone();
+        res_cfg.resume_from = dir.join("ckpt").to_string_lossy().into_owned();
+        let resumed = train(&res_cfg);
+        assert!(!resumed.crashed);
+        assert_eq!(resumed.eval_curve.points, base.eval_curve.points);
+        assert_eq!(resumed.skipped_steps, base.skipped_steps, "scaler skip state must resume");
+        assert_eq!(resumed.updates, base.updates);
+        assert_eq!(resumed.replay_fingerprint, base.replay_fingerprint);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn nan_crash_resume_replays_crash_bitwise() {
+        // a poisoned-NaN run that crashed right after a checkpoint:
+        // resuming must restore the poisoned params bitwise and replay
+        // the same crash with the same accounting (no silent "recovery")
+        let dir = ckpt_scratch("nan_crash");
+        let mut cfg = quick_cfg();
+        cfg.out_dir = dir.to_string_lossy().into_owned();
+        cfg.checkpoint_every = 20;
+        let venv = VecEnv::new(&cfg, 1).unwrap();
+        let mut agent = build_agent(&cfg, venv.obs_len(), venv.act_dim());
+        for prm in agent.actor.params_mut() {
+            for w in prm.w.iter_mut() {
+                *w = f32::NAN;
+            }
+        }
+        let first = train_agent(&cfg, venv, agent);
+        assert!(first.crashed && !first.killed);
+        // the seed phase (40 steps) checkpointed at 20 and 40 before the
+        // first policy action crashed the run at step 40
+        let store = crate::ckpt::CkptStore::open(dir.join("ckpt"), cfg.ckpt_keep).unwrap();
+        let gens: Vec<u64> = store.generations().unwrap().into_iter().map(|(s, _)| s).collect();
+        assert_eq!(gens, vec![20, 40], "seed-phase checkpoints written before the crash");
+
+        let mut res_cfg = cfg.clone();
+        res_cfg.resume_from = dir.join("ckpt").to_string_lossy().into_owned();
+        let venv2 = VecEnv::new(&res_cfg, 1).unwrap();
+        let agent2 = build_agent(&res_cfg, venv2.obs_len(), venv2.act_dim());
+        // agent2 is healthy: resume must overwrite it with the poisoned
+        // checkpointed masters (NaN bits survive the f32 codec) and crash
+        let second = train_agent(&res_cfg, venv2, agent2);
+        assert!(second.crashed, "resume restores the poisoned params and re-crashes");
+        assert_eq!(second.eval_curve.points, first.eval_curve.points);
+        assert_eq!(second.final_score, 0.0);
+        assert_eq!(second.replay_fingerprint, first.replay_fingerprint);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

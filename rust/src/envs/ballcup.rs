@@ -106,6 +106,17 @@ impl Env for BallInCup {
         (self.obs(), r as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        let mut s = vec![self.cup.0, self.cup.1];
+        s.extend_from_slice(&self.ball);
+        s
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.cup = (s[0], s[1]);
+        self.ball.copy_from_slice(&s[2..6]);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.95, 0.93, 0.9]);
         let s = 1.8;

@@ -90,6 +90,14 @@ impl Env for CartpoleSwingup {
         (self.obs(), r.clamp(0.0, 1.0) as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        self.s.to_vec()
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.s.copy_from_slice(s);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.9, 0.9, 0.95]);
         let x = (self.s[0] / 2.5) * 0.8;

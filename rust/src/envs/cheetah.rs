@@ -89,6 +89,20 @@ impl Env for CheetahRun {
         (self.obs(), r as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        let mut s = vec![self.v, self.x];
+        s.extend_from_slice(&self.q);
+        s.extend_from_slice(&self.qd);
+        s
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.v = s[0];
+        self.x = s[1];
+        self.q.copy_from_slice(&s[2..2 + N_LEGS]);
+        self.qd.copy_from_slice(&s[2 + N_LEGS..2 + 2 * N_LEGS]);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.9, 0.95, 1.0]);
         // ground

@@ -114,6 +114,14 @@ impl Env for FingerSpin {
         (self.obs(), r as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        self.s.to_vec()
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.s.copy_from_slice(s);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.93, 0.93, 0.97]);
         let s = 2.2;

@@ -53,6 +53,15 @@ pub trait Env: Send {
     fn step(&mut self, action: &[f32]) -> (Vec<f32>, f32);
     /// Draw the current state into an RGB canvas.
     fn render(&self, img: &mut render::Canvas);
+    /// Serialize the complete physics state as raw `f64`s (checkpoint
+    /// path — cold, not the step loop). Together with
+    /// [`Env::load_state`] this must round-trip bitwise: a restored env
+    /// continues exactly where the saved one left off.
+    fn save_state(&self) -> Vec<f64>;
+    /// Restore a [`Env::save_state`] snapshot. Callers must pass a slice
+    /// of exactly `save_state().len()` values (the checkpoint decoder
+    /// validates this before dispatching).
+    fn load_state(&mut self, s: &[f64]);
 }
 
 /// The six planet-benchmark task names, in the paper's listing order.
@@ -248,6 +257,29 @@ mod tests {
     #[should_panic(expected = "unknown task")]
     fn action_repeat_panics_on_unknown_task() {
         let _ = action_repeat("warehouse_sort");
+    }
+
+    #[test]
+    fn save_load_state_roundtrips_bitwise() {
+        let mut rng = Pcg64::seed(8);
+        for task in SUPPORTED_TASKS {
+            let mut env = make_env(task).unwrap();
+            env.reset(&mut rng);
+            let act = vec![0.4; env.act_dim()];
+            for _ in 0..17 {
+                env.step(&act);
+            }
+            let saved = env.save_state();
+            let mut twin = make_env(task).unwrap();
+            twin.load_state(&saved);
+            assert_eq!(twin.save_state(), saved, "{task}: state must round-trip");
+            for t in 0..50 {
+                let (o1, r1) = env.step(&act);
+                let (o2, r2) = twin.step(&act);
+                assert_eq!(o1, o2, "{task}: obs diverged at step {t}");
+                assert_eq!(r1.to_bits(), r2.to_bits(), "{task}: reward diverged at step {t}");
+            }
+        }
     }
 
     #[test]

@@ -63,6 +63,14 @@ impl Env for PendulumSwingup {
         (self.obs(), r as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        self.s.to_vec()
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.s.copy_from_slice(s);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.95, 0.95, 0.9]);
         let (x, y) = (0.6 * self.s[0].sin(), 0.6 * self.s[0].cos());

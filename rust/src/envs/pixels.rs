@@ -67,6 +67,40 @@ impl PixelEnvAdapter {
         self.frames.push(frame);
         (self.stacked(), r)
     }
+
+    /// Serialize the frame stack bitwise (checkpoint path). The canvas
+    /// is transient scratch — it is fully rewritten by the next render —
+    /// so only the frames need to survive a restart.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.u64(self.frames.len() as u64);
+        for f in &self.frames {
+            enc.f32s(f);
+        }
+    }
+
+    /// Restore a [`PixelEnvAdapter::ckpt_write`] frame stack, validating
+    /// the stack depth and frame size against this adapter's shape.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        let n = dec.usize()?;
+        anyhow::ensure!(
+            n == self.stack,
+            "checkpoint frame stack depth {n} != configured stack {}",
+            self.stack
+        );
+        let frame_len = 3 * self.side * self.side;
+        let mut frames = Vec::with_capacity(n);
+        for _ in 0..n {
+            let f = dec.f32s()?;
+            anyhow::ensure!(
+                f.len() == frame_len,
+                "checkpoint frame has {} floats, expected {frame_len}",
+                f.len()
+            );
+            frames.push(f);
+        }
+        self.frames = frames;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -91,6 +91,18 @@ impl Env for ReacherEasy {
         (self.obs(), r as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        let mut out = self.s.to_vec();
+        out.push(self.target.0);
+        out.push(self.target.1);
+        out
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.s.copy_from_slice(&s[..4]);
+        self.target = (s[4], s[5]);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.92, 0.92, 0.92]);
         let scale = 3.2; // arm world ±0.24 → canvas ±0.8

@@ -234,6 +234,73 @@ impl VecEnv {
         });
     }
 
+    /// Serialize the complete state of every env stream (physics f64s
+    /// and, for pixel streams, the frame stacks) for a checkpoint.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.u64(self.envs.len() as u64);
+        for e in &self.envs {
+            match e {
+                EnvObs::State(env) => {
+                    enc.u8(0);
+                    enc.f64s(&env.save_state());
+                }
+                EnvObs::Pixels(p) => {
+                    enc.u8(1);
+                    enc.f64s(&p.env.save_state());
+                    p.ckpt_write(enc);
+                }
+            }
+        }
+    }
+
+    /// Restore a [`VecEnv::ckpt_read`] snapshot into this (identically
+    /// configured) vector: every stream continues bitwise where the
+    /// saved one left off. Stream count, observation mode, and state
+    /// sizes are all validated — a mismatched checkpoint is a typed
+    /// error, never a panic.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        let n = dec.usize()?;
+        anyhow::ensure!(
+            n == self.envs.len(),
+            "checkpoint holds {n} env streams, this run has {}",
+            self.envs.len()
+        );
+        for (i, e) in self.envs.iter_mut().enumerate() {
+            let tag = dec.u8()?;
+            let want_tag = match e {
+                EnvObs::State(_) => 0,
+                EnvObs::Pixels(_) => 1,
+            };
+            anyhow::ensure!(
+                tag == want_tag,
+                "env stream {i}: checkpoint observation mode tag {tag} != configured {want_tag}"
+            );
+            let state = dec.f64s()?;
+            match e {
+                EnvObs::State(env) => {
+                    anyhow::ensure!(
+                        state.len() == env.save_state().len(),
+                        "env stream {i}: checkpoint physics state has {} values, expected {}",
+                        state.len(),
+                        env.save_state().len()
+                    );
+                    env.load_state(&state);
+                }
+                EnvObs::Pixels(p) => {
+                    anyhow::ensure!(
+                        state.len() == p.env.save_state().len(),
+                        "env stream {i}: checkpoint physics state has {} values, expected {}",
+                        state.len(),
+                        p.env.save_state().len()
+                    );
+                    p.env.load_state(&state);
+                    p.ckpt_read(dec)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Lockstep evaluation step: sanitize row `i` of `acts` in place,
     /// advance env `i` one agent step with it, overwrite row `i` of
     /// `obs_flat` with the next observation and accumulate each raw
@@ -392,6 +459,79 @@ mod tests {
         let mut obs = vec![0.0f32; v.obs_len()];
         v.reset_into(1, &mut rng, &mut obs);
         assert!(obs.iter().all(|x| (0.0..=1.0).contains(x)));
+    }
+
+    #[test]
+    fn ckpt_roundtrip_resumes_streams_bitwise() {
+        for (task, pixels) in [("walker_walk", false), ("pendulum_swingup", true)] {
+            let mut c = cfg(task);
+            if pixels {
+                c.pixels = true;
+                c.image_size = 10;
+                c.frame_stack = 3;
+            }
+            let n = 3;
+            let mut v = VecEnv::new(&c, n).unwrap();
+            let obs_len = v.obs_len();
+            let mut buf = vec![0.0f32; obs_len];
+            for i in 0..n {
+                let mut r = Pcg64::seed_stream(3, i as u64);
+                v.reset_into(i, &mut r, &mut buf);
+            }
+            let a = vec![0.3f32; v.act_dim()];
+            for i in 0..n {
+                v.step_into(i, &a, &mut buf);
+            }
+            let mut enc = crate::ckpt::Enc::new();
+            v.ckpt_write(&mut enc);
+            let bytes = enc.into_bytes();
+            let mut twin = VecEnv::new(&c, n).unwrap();
+            let mut dec = crate::ckpt::Dec::new(&bytes);
+            twin.ckpt_read(&mut dec).unwrap();
+            dec.finish().unwrap();
+            let mut want = vec![0.0f32; obs_len];
+            let mut got = vec![0.0f32; obs_len];
+            for round in 0..5 {
+                for i in 0..n {
+                    let rw = v.step_into(i, &a, &mut want);
+                    let rg = twin.step_into(i, &a, &mut got);
+                    assert_eq!(
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{task} env {i} round {round}: obs diverged after resume"
+                    );
+                    assert_eq!(rw.to_bits(), rg.to_bits(), "{task} env {i} round {round}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ckpt_read_rejects_mismatched_shapes() {
+        let c = cfg("pendulum_swingup");
+        let mut v = VecEnv::new(&c, 2).unwrap();
+        let mut rng = Pcg64::seed(1);
+        let mut buf = vec![0.0f32; v.obs_len()];
+        for i in 0..2 {
+            v.reset_into(i, &mut rng, &mut buf);
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        v.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+        // wrong stream count
+        let mut narrow = VecEnv::new(&c, 1).unwrap();
+        let err = narrow.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap_err();
+        assert!(format!("{err}").contains("env streams"), "{err}");
+        // wrong observation mode
+        let mut pc = cfg("pendulum_swingup");
+        pc.pixels = true;
+        pc.image_size = 8;
+        let mut px = VecEnv::new(&pc, 2).unwrap();
+        let err = px.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap_err();
+        assert!(format!("{err}").contains("observation mode"), "{err}");
+        // truncated payload is an error, not a panic
+        let mut v2 = VecEnv::new(&c, 2).unwrap();
+        assert!(v2.ckpt_read(&mut crate::ckpt::Dec::new(&bytes[..bytes.len() / 2])).is_err());
     }
 
     #[test]

@@ -103,6 +103,21 @@ impl Env for WalkerWalk {
         (self.obs(), r.clamp(0.0, 1.0) as f32)
     }
 
+    fn save_state(&self) -> Vec<f64> {
+        let mut s = vec![self.h, self.v, self.x];
+        s.extend_from_slice(&self.q);
+        s.extend_from_slice(&self.qd);
+        s
+    }
+
+    fn load_state(&mut self, s: &[f64]) {
+        self.h = s[0];
+        self.v = s[1];
+        self.x = s[2];
+        self.q.copy_from_slice(&s[3..3 + N_LEGS]);
+        self.qd.copy_from_slice(&s[3 + N_LEGS..3 + 2 * N_LEGS]);
+    }
+
     fn render(&self, c: &mut Canvas) {
         c.clear([0.92, 0.96, 1.0]);
         c.rect(-1.0, -0.7, 1.0, -1.0, [0.45, 0.4, 0.3]);

@@ -55,6 +55,7 @@
 //! | [`envs`] | the continuous-control task suite + lockstep [`envs::VecEnv`] |
 //! | [`replay`] | replay buffer (f16/f32 storage, batch push / allocation-free sampling) |
 //! | [`coordinator`] | strict + async collector/learner loops over vectorized envs, batched deterministic eval |
+//! | [`ckpt`] | versioned crash-safe checkpoints: atomic writes, checksum validation, bitwise resume |
 //! | [`serve`] | micro-batching policy server over [`serve::PolicyBackend`] |
 //! | [`runtime`] | PJRT artifact execution (AOT path) |
 //! | [`experiments`] / [`telemetry`] | paper exhibits + CSV/JSON reporting |
@@ -85,6 +86,7 @@
 // every dereference is pinned to a written SAFETY argument.
 #![deny(unsafe_op_in_unsafe_fn)]
 
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod envs;

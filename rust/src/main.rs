@@ -54,11 +54,17 @@ USAGE:
        storage=f32|f16|bf16 keeps the read-only weights (target-network
        mirrors, policy snapshots) in native 16-bit storage, streamed
        through the SIMD widening GEMM kernels where the CPU supports it
+       checkpoint_every=N writes a crash-safe checkpoint every N env
+       steps to <out_dir>/ckpt (ckpt_keep=K generations retained);
+       resume_from=DIR continues a run bitwise-identically from the
+       newest valid checkpoint; faults=kill@S:round|eval|ckpt,torn@S:
+       truncate|corrupt injects deterministic failures for testing
   lprl exp <name> [key=value ...]                name: fig1..fig12, table2/3/7/10/11, all
   lprl serve [engine=native|pjrt] [key=value ...]
        native: task= preset= hidden= seed= train_steps=    (policy source)
        pjrt:   artifacts= variant= [mode=train steps=N]    (artifact source)
        both:   clients= requests= max_batch= flush_us=     (serve demo load)
+               overload=block|shed|deadline [deadline_us=N] (saturation policy)
   lprl info
 
 PRESETS: fp32 fp16_naive fp16_ours coerc loss_scale mixed amp cum0..cum6 loo1..loo6 e5mX_ours
@@ -92,8 +98,8 @@ fn cmd_train(kv: &[(String, String)]) -> anyhow::Result<()> {
         println!("  env_step {x:>8} return {y:>8.1}");
     }
     println!(
-        "final={:.1} crashed={} skipped_opt_steps={} wall={:.1}s",
-        out.final_score, out.crashed, out.skipped_steps, out.wall_secs
+        "final={:.1} crashed={} killed={} skipped_opt_steps={} wall={:.1}s",
+        out.final_score, out.crashed, out.killed, out.skipped_steps, out.wall_secs
     );
     println!(
         "throughput: collect {:.0} steps/s ({} envs, {})  learner {:.1} updates/s ({} updates)",
@@ -143,6 +149,8 @@ fn cmd_serve(kv: &[(String, String)]) -> anyhow::Result<()> {
     let mut requests = 64usize;
     let mut max_batch = 32usize;
     let mut flush_us = 200u64;
+    let mut overload = lprl::serve::OverloadPolicy::Block;
+    let mut deadline_us = 10_000u64;
     for (k, v) in kv {
         match k.as_str() {
             "engine" => engine = v.clone(),
@@ -159,6 +167,11 @@ fn cmd_serve(kv: &[(String, String)]) -> anyhow::Result<()> {
             "requests" => requests = v.parse()?,
             "max_batch" => max_batch = v.parse()?,
             "flush_us" => flush_us = v.parse()?,
+            "overload" => {
+                overload = lprl::serve::OverloadPolicy::parse(v)
+                    .map_err(|e| anyhow::anyhow!(e))?
+            }
+            "deadline_us" => deadline_us = v.parse()?,
             _ => anyhow::bail!("unknown option {k}"),
         }
     }
@@ -195,7 +208,12 @@ fn cmd_serve(kv: &[(String, String)]) -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown engine {other} (native|pjrt)"),
     };
-    serve_demo(backend, clients, requests, ServeConfig { max_batch, flush_us, queue_cap: 1024 })
+    serve_demo(
+        backend,
+        clients,
+        requests,
+        ServeConfig { max_batch, flush_us, queue_cap: 1024, overload, deadline_us },
+    )
 }
 
 /// Build the native policy source: a fresh agent (optionally trained

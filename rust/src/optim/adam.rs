@@ -158,6 +158,58 @@ impl Adam {
             + self.comp.iter().map(Vec::len).sum::<usize>()
     }
 
+    /// Serialize the mutable optimizer state bitwise (checkpoint path):
+    /// step counter, skip flag, and the m/w/comp moment buffers. The
+    /// configuration axes (`cfg`, `prec`, `second`, `update`,
+    /// `compound`) are rebuilt from the run config on resume, not
+    /// stored.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.u64(self.t);
+        enc.bool(self.last_step_skipped);
+        for field in [&self.m, &self.w, &self.comp] {
+            enc.u64(field.len() as u64);
+            for v in field {
+                enc.f32s(v);
+            }
+        }
+    }
+
+    /// Restore an [`Adam::ckpt_write`] snapshot. If this optimizer's
+    /// state is already initialized (a step has run), every buffer shape
+    /// is validated first; on a fresh optimizer the buffers are adopted
+    /// as-is and `ensure_state` re-checks the tensor count on the next
+    /// step.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        self.t = dec.u64()?;
+        self.last_step_skipped = dec.bool()?;
+        for (name, field) in
+            [("m", &mut self.m), ("w", &mut self.w), ("comp", &mut self.comp)]
+        {
+            let k = dec.usize()?;
+            let mut bufs = Vec::with_capacity(k);
+            for _ in 0..k {
+                bufs.push(dec.f32s()?);
+            }
+            if !field.is_empty() {
+                anyhow::ensure!(
+                    field.len() == k,
+                    "adam {name} holds {k} tensors, optimizer expects {}",
+                    field.len()
+                );
+                for (i, (got, want)) in bufs.iter().zip(field.iter()).enumerate() {
+                    anyhow::ensure!(
+                        got.len() == want.len(),
+                        "adam {name}[{i}] holds {} values, optimizer expects {}",
+                        got.len(),
+                        want.len()
+                    );
+                }
+            }
+            *field = bufs;
+        }
+        Ok(())
+    }
+
     /// One optimizer step.
     ///
     /// `grads` in the params were accumulated from a loss that was
@@ -571,6 +623,54 @@ mod tests {
         assert!(opt.last_step_skipped);
         assert_eq!(p.w, w_before);
         assert_eq!(sc.scale(), s0 / 2.0);
+    }
+
+    #[test]
+    fn ckpt_roundtrip_continues_bitwise() {
+        // step, checkpoint, restore into a freshly-constructed optimizer,
+        // then both must walk the identical trajectory bit for bit
+        let cfg = AdamConfig { lr: 0.01, ..Default::default() };
+        let mut rng = Pcg64::seed(77);
+        let init: Vec<f32> = (0..40).map(|_| rng.normal_f32()).collect();
+        let mut opt = Adam::ours_fp16(cfg);
+        let mut sc = GradScaler::new(ScalerConfig::paper());
+        let mut p = Param::from_values("p", &[40], init.clone());
+        for _ in 0..5 {
+            for (i, g) in p.g.iter_mut().enumerate() {
+                *g = (i as f32 - 20.0) * 1e-3 * sc.scale();
+            }
+            opt.step(&mut [&mut p], &mut sc);
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        opt.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut twin = Adam::ours_fp16(cfg);
+        let mut dec = crate::ckpt::Dec::new(&bytes);
+        twin.ckpt_read(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(twin.steps(), opt.steps());
+
+        let mut q = Param::from_values("q", &[40], p.w.clone());
+        let mut sc2 = sc.clone();
+        for _ in 0..5 {
+            for (i, g) in p.g.iter_mut().enumerate() {
+                *g = (i as f32 - 7.0) * 2e-3 * sc.scale();
+            }
+            q.g.copy_from_slice(&p.g);
+            opt.step(&mut [&mut p], &mut sc);
+            twin.step(&mut [&mut q], &mut sc2);
+        }
+        assert!(p.w.iter().zip(&q.w).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // mismatched buffer shapes are a typed error once state exists
+        let mut wrong = Adam::ours_fp16(cfg);
+        let mut sw = GradScaler::disabled();
+        let mut small = Param::from_values("s", &[3], vec![1.0; 3]);
+        small.g = vec![1e-3; 3];
+        wrong.step(&mut [&mut small], &mut sw);
+        let err = wrong.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("optimizer expects"), "{err}");
     }
 
     #[test]

@@ -124,6 +124,24 @@ impl ScaledKahanEma {
     pub fn state_elems(&self) -> usize {
         self.buf.len() + self.comp.len() + self.view.len()
     }
+
+    /// Serialize the accumulator state bitwise (checkpoint path): the
+    /// scaled buffer, the Kahan compensation, and the unscaled view.
+    /// `c`/`prec`/`compensated` are rebuilt from the run config.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.f32s(&self.buf);
+        enc.f32s(&self.comp);
+        enc.f32s(&self.view);
+    }
+
+    /// Restore a [`ScaledKahanEma::ckpt_write`] snapshot; every buffer
+    /// length is validated against this accumulator's size.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        dec.f32s_into(&mut self.buf)?;
+        dec.f32s_into(&mut self.comp)?;
+        dec.f32s_into(&mut self.view)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -240,6 +258,39 @@ mod tests {
             .iter()
             .zip(spans.weights())
             .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn ckpt_roundtrip_continues_bitwise() {
+        let mut rng = crate::rngs::Pcg64::seed(61);
+        let init: Vec<f32> = (0..50).map(|_| rng.normal_f32()).collect();
+        let psi: Vec<f32> = (0..50).map(|_| rng.normal_f32()).collect();
+        let prec = Precision::fp16();
+        let mut ema = ScaledKahanEma::new(&init, 1e4, prec, true);
+        for _ in 0..30 {
+            ema.update(&psi, 0.005);
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        ema.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut twin = ScaledKahanEma::new(&init, 1e4, prec, true);
+        let mut dec = crate::ckpt::Dec::new(&bytes);
+        twin.ckpt_read(&mut dec).unwrap();
+        dec.finish().unwrap();
+        for _ in 0..30 {
+            ema.update(&psi, 0.005);
+            twin.update(&psi, 0.005);
+        }
+        assert!(ema
+            .weights()
+            .iter()
+            .zip(twin.weights())
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+
+        // wrong-size accumulator rejects the payload instead of panicking
+        let mut wrong = ScaledKahanEma::new(&init[..10], 1e4, prec, true);
+        assert!(wrong.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).is_err());
     }
 
     #[test]

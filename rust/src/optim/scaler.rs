@@ -78,6 +78,23 @@ impl GradScaler {
         self.scale
     }
 
+    /// Serialize the scaler dynamics bitwise (checkpoint path): current
+    /// scale, clean-step streak, and skip counter. The schedule (`cfg`)
+    /// and the `enabled` switch are rebuilt from the run config.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.f32(self.scale);
+        enc.u64(self.good_steps);
+        enc.u64(self.skipped);
+    }
+
+    /// Restore a [`GradScaler::ckpt_write`] snapshot.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        self.scale = dec.f32()?;
+        self.good_steps = dec.u64()?;
+        self.skipped = dec.u64()?;
+        Ok(())
+    }
+
     /// Record the outcome of a step: `nonfinite = true` halves the scale;
     /// enough consecutive clean steps double it.
     pub fn update(&mut self, nonfinite: bool) {
@@ -158,6 +175,32 @@ mod tests {
             s.update(false);
         }
         assert_eq!(s.scale(), 8.0);
+    }
+
+    #[test]
+    fn ckpt_roundtrip_restores_dynamics() {
+        let mut s = GradScaler::new(ScalerConfig { growth_interval: 10, ..ScalerConfig::paper() });
+        s.update(true);
+        for _ in 0..7 {
+            s.update(false);
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        s.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut twin = GradScaler::new(ScalerConfig { growth_interval: 10, ..ScalerConfig::paper() });
+        let mut dec = crate::ckpt::Dec::new(&bytes);
+        twin.ckpt_read(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(twin.scale(), s.scale());
+        assert_eq!(twin.skipped, 1);
+        // the clean-step streak survives: 3 more clean steps trigger growth
+        for _ in 0..3 {
+            s.update(false);
+            twin.update(false);
+        }
+        assert_eq!(twin.scale(), s.scale());
+        assert_eq!(twin.scale(), 1e4, "streak of 7 + 3 must double 5e3");
     }
 
     #[test]

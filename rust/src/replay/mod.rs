@@ -281,6 +281,97 @@ impl ReplayBuffer {
         total
     }
 
+    /// Serialize the buffer bitwise for a checkpoint: ring metadata plus
+    /// only the filled rows `0..len` of every field (until the ring
+    /// wraps those are the only live rows; after wrapping `len ==
+    /// capacity` and every row is live), in raw storage words — f16
+    /// buffers keep their packed u16 form, so no re-quantization happens
+    /// on either side of the round trip.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.u64(self.capacity as u64);
+        enc.u64(self.obs_dim as u64);
+        enc.u64(self.act_dim as u64);
+        enc.u64(self.len as u64);
+        enc.u64(self.head as u64);
+        Self::write_buf(enc, &self.obs, self.len * self.obs_dim);
+        Self::write_buf(enc, &self.next_obs, self.len * self.obs_dim);
+        Self::write_buf(enc, &self.act, self.len * self.act_dim);
+        enc.f32s(&self.rew[..self.len]);
+        enc.f32s(&self.not_done[..self.len]);
+    }
+
+    fn write_buf(enc: &mut crate::ckpt::Enc, buf: &Buf, n: usize) {
+        match buf {
+            Buf::F32(v) => {
+                enc.u8(0);
+                enc.f32s(&v[..n]);
+            }
+            Buf::F16(v) => {
+                enc.u8(1);
+                enc.u16s(&v[..n]);
+            }
+        }
+    }
+
+    fn read_buf(dec: &mut crate::ckpt::Dec, buf: &mut Buf, n: usize) -> anyhow::Result<()> {
+        let tag = dec.u8()?;
+        match (tag, buf) {
+            (0, Buf::F32(v)) => {
+                let xs = dec.f32s()?;
+                anyhow::ensure!(xs.len() == n, "replay field holds {} f32s, expected {n}", xs.len());
+                v[..n].copy_from_slice(&xs);
+            }
+            (1, Buf::F16(v)) => {
+                let xs = dec.u16s()?;
+                anyhow::ensure!(xs.len() == n, "replay field holds {} f16s, expected {n}", xs.len());
+                v[..n].copy_from_slice(&xs);
+            }
+            (tag, _) => anyhow::bail!(
+                "replay storage tag {tag} does not match this run's storage tier"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Restore a [`ReplayBuffer::ckpt_write`] snapshot into this
+    /// (identically shaped) buffer. Capacity, dims, storage tier, and
+    /// every field length are validated before any state is touched by
+    /// an unchecked copy — a mismatched or truncated checkpoint is a
+    /// typed error, never a panic.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        let capacity = dec.usize()?;
+        let obs_dim = dec.usize()?;
+        let act_dim = dec.usize()?;
+        anyhow::ensure!(
+            capacity == self.capacity && obs_dim == self.obs_dim && act_dim == self.act_dim,
+            "replay shape mismatch: checkpoint ({capacity}, {obs_dim}, {act_dim}) vs \
+             run ({}, {}, {})",
+            self.capacity,
+            self.obs_dim,
+            self.act_dim
+        );
+        let len = dec.usize()?;
+        anyhow::ensure!(len <= capacity, "replay len {len} exceeds capacity {capacity}");
+        let head = dec.usize()?;
+        anyhow::ensure!(head < capacity.max(1), "replay head {head} out of range");
+        Self::read_buf(dec, &mut self.obs, len * obs_dim)?;
+        Self::read_buf(dec, &mut self.next_obs, len * obs_dim)?;
+        Self::read_buf(dec, &mut self.act, len * act_dim)?;
+        let rew = dec.f32s()?;
+        anyhow::ensure!(rew.len() == len, "replay rew holds {} values, expected {len}", rew.len());
+        let not_done = dec.f32s()?;
+        anyhow::ensure!(
+            not_done.len() == len,
+            "replay not_done holds {} values, expected {len}",
+            not_done.len()
+        );
+        self.rew[..len].copy_from_slice(&rew);
+        self.not_done[..len].copy_from_slice(&not_done);
+        self.len = len;
+        self.head = head;
+        Ok(())
+    }
+
     /// Sample with DRQ random-crop augmentation (allocating wrapper over
     /// [`ReplayBuffer::sample_aug_into`]).
     pub fn sample_aug(&self, batch: usize, pad: usize, rng: &mut Pcg64) -> Batch {
@@ -429,6 +520,62 @@ mod tests {
         assert_eq!(s.obs.data[0], 1.0);
         assert_eq!(s.obs.data[1], 0.0, "fp16 storage underflows tiny values");
         assert!((s.obs.data[2] - 3.14159).abs() < 2e-3);
+    }
+
+    #[test]
+    fn ckpt_roundtrip_restores_ring_bitwise() {
+        for storage in [Storage::F32, Storage::F16] {
+            // pre-wrap (n < capacity) and post-wrap (n > capacity) fills
+            for n in [7usize, 23] {
+                let mut buf = ReplayBuffer::new(10, &[2], 1, storage);
+                fill(&mut buf, n);
+                let mut enc = crate::ckpt::Enc::new();
+                buf.ckpt_write(&mut enc);
+                let bytes = enc.into_bytes();
+
+                let mut twin = ReplayBuffer::new(10, &[2], 1, storage);
+                let mut dec = crate::ckpt::Dec::new(&bytes);
+                twin.ckpt_read(&mut dec).unwrap();
+                dec.finish().unwrap();
+                assert_eq!(twin.len(), buf.len(), "{storage:?} n={n}");
+                assert_eq!(twin.fingerprint(), buf.fingerprint(), "{storage:?} n={n}");
+
+                // the ring continues identically: same pushes land in the
+                // same slots, same sampling draws bitwise-equal batches
+                fill(&mut buf, 4);
+                fill(&mut twin, 4);
+                assert_eq!(twin.fingerprint(), buf.fingerprint(), "{storage:?} n={n} post-push");
+                let b1 = buf.sample(16, &mut Pcg64::seed(9));
+                let b2 = twin.sample(16, &mut Pcg64::seed(9));
+                for r in 0..16 {
+                    assert_eq!(b1.obs.row(r), b2.obs.row(r), "{storage:?} n={n} row {r}");
+                    assert_eq!(b1.rew[r].to_bits(), b2.rew[r].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ckpt_read_rejects_mismatched_layout() {
+        let mut buf = ReplayBuffer::new(10, &[2], 1, Storage::F32);
+        fill(&mut buf, 5);
+        let mut enc = crate::ckpt::Enc::new();
+        buf.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+
+        // wrong capacity
+        let mut wrong_cap = ReplayBuffer::new(20, &[2], 1, Storage::F32);
+        let err = wrong_cap.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+
+        // wrong storage tier
+        let mut wrong_tier = ReplayBuffer::new(10, &[2], 1, Storage::F16);
+        let err = wrong_tier.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap_err();
+        assert!(err.to_string().contains("storage tag"), "{err}");
+
+        // truncated payload errors instead of panicking
+        let mut twin = ReplayBuffer::new(10, &[2], 1, Storage::F32);
+        assert!(twin.ckpt_read(&mut crate::ckpt::Dec::new(&bytes[..bytes.len() / 2])).is_err());
     }
 
     #[test]

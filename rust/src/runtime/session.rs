@@ -98,7 +98,9 @@ impl Runtime {
             .manifest
             .artifact(&format!("train_{variant}"))
             .ok_or_else(|| anyhow!("no train artifact for {variant}"))?;
-        let bytes = std::fs::read(self.dir.join(&spec.file))?;
+        let path = self.dir.join(&spec.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading train artifact {}", path.display()))?;
         let mut floats = vec![0f32; bytes.len() / 4];
         for (i, ch) in bytes.chunks_exact(4).enumerate() {
             floats[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);

@@ -50,6 +50,25 @@ fn append_abs_pooled(probe: &mut Vec<f32>, g: &[f32]) {
     unsafe { probe.set_len(start + g.len()) };
 }
 
+/// Decode one `f32s` sequence per parameter into a module's parameter
+/// walk (checkpoint path). A length mismatch or truncated payload
+/// surfaces as the first error instead of a panic.
+fn read_params_into(
+    dec: &mut crate::ckpt::Dec,
+    for_each: impl FnOnce(&mut dyn FnMut(&mut Param)),
+) -> anyhow::Result<()> {
+    let mut err: Option<anyhow::Error> = None;
+    for_each(&mut |p: &mut Param| {
+        if err.is_some() {
+            return;
+        }
+        if let Err(e) = dec.f32s_into(&mut p.w) {
+            err = Some(e);
+        }
+    });
+    err.map_or(Ok(()), Err)
+}
+
 /// Reusable positional parameter list for the optimizer step: the
 /// parameter walk collects raw pointers into a persistent `Vec` whose
 /// capacity survives across updates (the old code built a fresh
@@ -1009,6 +1028,155 @@ impl SacAgent {
         }
         n
     }
+
+    /// Flatten the actor (and encoder) weight masters — the pre-round
+    /// capture the async trainer checkpoints so a resumed run can
+    /// rebuild the lag-window's *previous* policy snapshot bitwise (see
+    /// [`SacAgent::policy_from_flats`]).
+    pub fn actor_flats(&self) -> (Vec<f32>, Option<Vec<f32>>) {
+        let mut a = Vec::with_capacity(self.actor.n_params());
+        self.actor.for_each_param(&mut |p: &Param| a.extend_from_slice(&p.w));
+        let e = self.encoder.as_ref().map(|enc| {
+            let mut v = Vec::with_capacity(enc.n_params());
+            enc.for_each_param(&mut |p: &Param| v.extend_from_slice(&p.w));
+            v
+        });
+        (a, e)
+    }
+
+    /// [`SacAgent::policy`] over an explicit weight capture instead of
+    /// the live masters: the same clone → bake-weight-std → pack
+    /// transform, so a snapshot rebuilt from an
+    /// [`SacAgent::actor_flats`] capture is bitwise identical to the one
+    /// the original run published from those weights.
+    pub fn policy_from_flats(&self, actor_flat: &[f32], enc_flat: Option<&[f32]>) -> Policy {
+        let obs_len = match self.pixel_shape {
+            Some((c, h)) => c * h * h,
+            None => self.cfg.obs_dim,
+        };
+        let mut actor = self.actor.clone();
+        let mut off = 0usize;
+        actor.for_each_param_mut(&mut |p: &mut Param| {
+            p.w.copy_from_slice(&actor_flat[off..off + p.len()]);
+            off += p.len();
+        });
+        assert_eq!(off, actor_flat.len(), "actor capture must cover every weight");
+        let encoder = self.encoder.clone().map(|mut enc| {
+            if let Some(flat) = enc_flat {
+                enc.load_flat(flat);
+            }
+            enc.bake_weight_std(self.compute);
+            enc
+        });
+        let mut policy = Policy::new(
+            actor,
+            encoder,
+            self.policy_cfg(),
+            self.compute,
+            obs_len,
+            self.cfg.act_dim,
+            self.pixel_shape,
+        );
+        if let Some(fmt) = self.half_storage {
+            policy.pack_weights(fmt);
+        }
+        policy
+    }
+
+    /// Serialize every piece of learner state a bitwise resume needs:
+    /// weight masters (actor, critic, encoder), the target EMAs
+    /// (scaled buffer + compensation + view), all three optimizers and
+    /// scalers, log α, the update counter, the agent RNG position, the
+    /// crash flag, and the Figure 6 gradient probe. Workspaces,
+    /// activation caches and packed read-only mirrors are transient —
+    /// rebuilt on demand / repacked from the restored masters.
+    pub fn ckpt_write(&self, enc: &mut crate::ckpt::Enc) {
+        enc.u64(self.updates);
+        enc.bool(self.crashed);
+        let (state, inc) = self.rng.raw_state();
+        enc.u128(state);
+        enc.u128(inc);
+        enc.f32s(&self.log_alpha.w);
+        self.actor.for_each_param(&mut |p: &Param| enc.f32s(&p.w));
+        self.critic.for_each_param(&mut |p: &Param| enc.f32s(&p.w));
+        enc.bool(self.encoder.is_some());
+        if let Some(e) = self.encoder.as_ref() {
+            e.for_each_param(&mut |p: &Param| enc.f32s(&p.w));
+        }
+        self.target_ema.ckpt_write(enc);
+        if let Some(ema) = self.encoder_ema.as_ref() {
+            ema.ckpt_write(enc);
+        }
+        self.opt_actor.ckpt_write(enc);
+        self.opt_critic.ckpt_write(enc);
+        self.opt_alpha.ckpt_write(enc);
+        self.sc_actor.ckpt_write(enc);
+        self.sc_critic.ckpt_write(enc);
+        self.sc_alpha.ckpt_write(enc);
+        enc.bool(self.grad_probe.is_some());
+        if let Some(p) = self.grad_probe.as_ref() {
+            enc.f32s(p);
+        }
+    }
+
+    /// Restore a [`SacAgent::ckpt_write`] snapshot into this
+    /// (identically configured) agent. Target networks are rebuilt from
+    /// the restored EMA views — exactly how a live target sync refreshes
+    /// them — and the packed half-storage mirrors are repacked from the
+    /// restored masters, so the resumed agent is bitwise
+    /// indistinguishable from one that never stopped.
+    pub fn ckpt_read(&mut self, dec: &mut crate::ckpt::Dec) -> anyhow::Result<()> {
+        self.updates = dec.u64()?;
+        self.crashed = dec.bool()?;
+        let state = dec.u128()?;
+        let inc = dec.u128()?;
+        self.rng = Pcg64::from_raw_state(state, inc);
+        dec.f32s_into(&mut self.log_alpha.w)?;
+        read_params_into(dec, |mut f| self.actor.for_each_param_mut(&mut f))?;
+        read_params_into(dec, |mut f| self.critic.for_each_param_mut(&mut f))?;
+        let has_encoder = dec.bool()?;
+        anyhow::ensure!(
+            has_encoder == self.encoder.is_some(),
+            "checkpoint {} an encoder but this agent {}",
+            if has_encoder { "carries" } else { "lacks" },
+            if self.encoder.is_some() { "has one" } else { "does not" }
+        );
+        if let Some(e) = self.encoder.as_mut() {
+            read_params_into(dec, |mut f| e.for_each_param_mut(&mut f))?;
+        }
+        self.target_ema.ckpt_read(dec)?;
+        {
+            let view = self.target_ema.weights();
+            let mut off = 0usize;
+            self.target.for_each_param_mut(&mut |p: &mut Param| {
+                p.w.copy_from_slice(&view[off..off + p.len()]);
+                off += p.len();
+            });
+        }
+        if let (Some(ema), Some(tgt)) = (self.encoder_ema.as_mut(), self.target_encoder.as_mut()) {
+            ema.ckpt_read(dec)?;
+            let view = ema.weights();
+            let mut off = 0usize;
+            tgt.for_each_param_mut(&mut |p: &mut Param| {
+                p.w.copy_from_slice(&view[off..off + p.len()]);
+                off += p.len();
+            });
+        }
+        self.opt_actor.ckpt_read(dec)?;
+        self.opt_critic.ckpt_read(dec)?;
+        self.opt_alpha.ckpt_read(dec)?;
+        self.sc_actor.ckpt_read(dec)?;
+        self.sc_critic.ckpt_read(dec)?;
+        self.sc_alpha.ckpt_read(dec)?;
+        self.grad_probe = if dec.bool()? { Some(dec.f32s()?) } else { None };
+        if self.half_storage.is_some() {
+            self.target.repack_weights();
+            if let Some(tenc) = self.target_encoder.as_mut() {
+                tenc.repack_weights();
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -1406,6 +1574,142 @@ mod tests {
                 "fused rows for update {j} must match the unfused forward"
             );
         }
+    }
+
+    #[test]
+    fn ckpt_roundtrip_continues_bitwise_states() {
+        // checkpoint mid-training, restore into a freshly built agent,
+        // and both runs must stay bitwise identical forever after
+        let mut rng = Pcg64::seed(71);
+        let cfg = SacConfig::states(6, 2, 24);
+        let mut a = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 17);
+        a.grad_probe = Some(Vec::new());
+        for _ in 0..6 {
+            let b = toy_batch(8, 6, 2, &mut rng);
+            a.update(&b);
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        a.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+
+        let mut b = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 99);
+        let mut dec = crate::ckpt::Dec::new(&bytes);
+        b.ckpt_read(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(b.updates, a.updates);
+        for _ in 0..6 {
+            let bt = toy_batch(8, 6, 2, &mut rng);
+            a.update(&bt);
+            b.update(&bt);
+        }
+        let (ca, cb) = (a.critic.flat_params(), b.critic.flat_params());
+        assert!(ca.iter().zip(&cb).all(|(x, y)| x.to_bits() == y.to_bits()), "critic diverged");
+        let (ta, tb) = (a.target.flat_params(), b.target.flat_params());
+        assert!(ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()), "target diverged");
+        assert_eq!(a.alpha().to_bits(), b.alpha().to_bits());
+        assert_eq!(a.rng.clone().next_u64(), b.rng.clone().next_u64(), "RNG diverged");
+        assert_eq!(a.grad_probe, b.grad_probe, "grad probe diverged");
+        let mut obs = Tensor::zeros(&[3, 6]);
+        Pcg64::seed(5).normal_fill(&mut obs.data);
+        let (x, y) = (a.act_batch(&obs, false).unwrap(), b.act_batch(&obs, false).unwrap());
+        assert!(x.data.iter().zip(&y.data).all(|(u, v)| u.to_bits() == v.to_bits()));
+    }
+
+    #[test]
+    fn ckpt_roundtrip_repacks_half_storage_mirrors() {
+        // a half-storage agent restored from a checkpoint must continue
+        // the packed-tier trajectory bitwise (mirrors repacked on load)
+        let mut rng = Pcg64::seed(73);
+        let cfg = SacConfig::states(6, 2, 24);
+        let mut a = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 19);
+        a.set_half_storage(HalfFormat::F16);
+        for _ in 0..5 {
+            let b = toy_batch(8, 6, 2, &mut rng);
+            a.update(&b);
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        a.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut b = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 19);
+        b.set_half_storage(HalfFormat::F16);
+        b.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap();
+        for _ in 0..5 {
+            let bt = toy_batch(8, 6, 2, &mut rng);
+            a.update(&bt);
+            b.update(&bt);
+        }
+        let (ta, tb) = (a.target.flat_params(), b.target.flat_params());
+        assert!(ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn ckpt_roundtrip_pixels_restores_encoder_state() {
+        let mut rng = Pcg64::seed(75);
+        let cfg = SacConfig::pixels(8, 2, 24);
+        let mk = |rng: &mut Pcg64| {
+            let b = 2;
+            let mut obs = Tensor::zeros(&[b, 3, 21, 21]);
+            for v in obs.data.iter_mut() {
+                *v = rng.uniform_f32();
+            }
+            Batch {
+                obs: obs.clone(),
+                act: Tensor::zeros(&[b, 2]),
+                rew: vec![0.2; b],
+                next_obs: obs,
+                not_done: vec![1.0; b],
+            }
+        };
+        let mut a = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        for _ in 0..3 {
+            a.update(&mk(&mut rng));
+        }
+        let mut enc = crate::ckpt::Enc::new();
+        a.ckpt_write(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut b = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        b.ckpt_read(&mut crate::ckpt::Dec::new(&bytes)).unwrap();
+        for _ in 0..3 {
+            let bt = mk(&mut rng);
+            a.update(&bt);
+            b.update(&bt);
+        }
+        let (ea, eb) = (
+            a.encoder.as_mut().unwrap().flat_params(),
+            b.encoder.as_mut().unwrap().flat_params(),
+        );
+        assert!(ea.iter().zip(&eb).all(|(x, y)| x.to_bits() == y.to_bits()), "encoder diverged");
+        let (ta, tb) = (a.target.flat_params(), b.target.flat_params());
+        assert!(ta.iter().zip(&tb).all(|(x, y)| x.to_bits() == y.to_bits()));
+
+        // a state-agent checkpoint must be rejected by a pixel agent
+        let mut state_agent = SacAgent::new(SacConfig::states(6, 2, 24), Methods::ours(), Precision::fp16(), 1);
+        let mut senc = crate::ckpt::Enc::new();
+        state_agent.ckpt_write(&mut senc);
+        let sbytes = senc.into_bytes();
+        let mut pix = SacAgent::new_pixels(cfg, Methods::ours(), Precision::fp16(), 9, 3, 21, 4);
+        assert!(pix.ckpt_read(&mut crate::ckpt::Dec::new(&sbytes)).is_err());
+    }
+
+    #[test]
+    fn policy_from_flats_matches_live_policy() {
+        use crate::sac::ActMode;
+        let mut rng = Pcg64::seed(81);
+        let cfg = SacConfig::states(5, 2, 24);
+        let mut agent = SacAgent::new(cfg, Methods::ours(), Precision::fp16(), 23);
+        agent.set_half_storage(HalfFormat::F16);
+        for _ in 0..4 {
+            let b = toy_batch(8, 5, 2, &mut rng);
+            agent.update(&b);
+        }
+        let (af, ef) = agent.actor_flats();
+        let rebuilt = agent.policy_from_flats(&af, ef.as_deref());
+        let live = agent.policy();
+        let mut obs = Tensor::zeros(&[4, 5]);
+        Pcg64::seed(7).normal_fill(&mut obs.data);
+        let x = live.act_batch(&obs, ActMode::Deterministic);
+        let y = rebuilt.act_batch(&obs, ActMode::Deterministic);
+        assert!(x.data.iter().zip(&y.data).all(|(u, v)| u.to_bits() == v.to_bits()));
     }
 
     #[test]

@@ -20,6 +20,7 @@ pub(crate) struct Metrics {
     max_batch_rows: AtomicU64,
     backend_us: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
     latencies_us: Mutex<LatencyWindow>,
 }
 
@@ -60,6 +61,11 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// One request shed under load (full queue or missed deadline).
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> ServeStats {
         let mut lat = self.latencies_us.lock().unwrap().samples.clone(); // tidy-allow(panic): poisoned lock — another thread already panicked
         lat.sort_unstable();
@@ -76,6 +82,7 @@ impl Metrics {
             requests,
             batches,
             errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             mean_batch: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
             max_batch: self.max_batch_rows.load(Ordering::Relaxed) as usize,
             p50_us: pct(0.50),
@@ -94,6 +101,8 @@ pub struct ServeStats {
     pub batches: u64,
     /// Requests answered with an error.
     pub errors: u64,
+    /// Requests shed under load (`overload=shed|deadline`).
+    pub shed: u64,
     /// Mean rows per flushed batch — the micro-batching win.
     pub mean_batch: f64,
     /// Largest batch flushed.
@@ -124,10 +133,13 @@ mod tests {
             m.record_request(Duration::from_micros(1000));
         }
         m.record_error();
+        m.record_shed();
+        m.record_shed();
         let s = m.snapshot();
         assert_eq!(s.requests, 6);
         assert_eq!(s.batches, 2);
         assert_eq!(s.errors, 1);
+        assert_eq!(s.shed, 2);
         assert_eq!(s.max_batch, 4);
         assert!((s.mean_batch - 3.0).abs() < 1e-9);
         assert_eq!(s.backend_us, 150);

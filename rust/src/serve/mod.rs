@@ -30,4 +30,4 @@ mod server;
 
 pub use backend::{NativeBackend, PjrtBackend, PolicyBackend};
 pub use metrics::ServeStats;
-pub use server::{PolicyServer, ServeClient, ServeConfig, ServeError};
+pub use server::{OverloadPolicy, PolicyServer, ServeClient, ServeConfig, ServeError};

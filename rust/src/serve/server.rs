@@ -9,9 +9,15 @@
 //! bitwise the same action it would have gotten from a serial call —
 //! micro-batching is a pure throughput optimization.
 //!
-//! The request queue is bounded (`queue_cap`): saturated clients block
-//! in `send`, which is the backpressure story — the queue cannot grow
-//! without limit ahead of a slow backend.
+//! The request queue is bounded (`queue_cap`); what happens at
+//! saturation is the `overload` knob ([`OverloadPolicy`]): `block`
+//! (default) exerts backpressure by blocking senders, `shed` fails a
+//! request immediately with [`ServeError::Overloaded`] when the queue
+//! is full, and `deadline` additionally sheds requests that are already
+//! stale when their batch flushes. On shutdown the in-flight batch is
+//! still served and everything queued behind the stop message is failed
+//! with [`ServeError::Closed`] — every accepted request gets exactly
+//! one reply.
 
 use super::backend::PolicyBackend;
 use super::metrics::{Metrics, ServeStats};
@@ -20,6 +26,35 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// What happens to a request when the server is saturated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Saturated queue blocks the sender — the default backpressure
+    /// story: the queue cannot grow without limit ahead of a slow
+    /// backend, and no request is ever dropped.
+    Block,
+    /// Saturated queue fails the request immediately with
+    /// [`ServeError::Overloaded`] instead of blocking the caller.
+    Shed,
+    /// Like [`OverloadPolicy::Shed`] on a full queue, and additionally
+    /// the batcher sheds requests that have already waited longer than
+    /// `deadline_us` when their batch flushes — a staleness bound for
+    /// callers whose action is useless once the control tick passed.
+    Deadline,
+}
+
+impl OverloadPolicy {
+    /// Parse the `overload` knob (`block|shed|deadline`).
+    pub fn parse(s: &str) -> Result<OverloadPolicy, String> {
+        match s {
+            "block" => Ok(OverloadPolicy::Block),
+            "shed" => Ok(OverloadPolicy::Shed),
+            "deadline" => Ok(OverloadPolicy::Deadline),
+            _ => Err(format!("unknown overload policy {s:?} (block|shed|deadline)")),
+        }
+    }
+}
 
 /// Tuning knobs for [`PolicyServer`].
 #[derive(Debug, Clone, Copy)]
@@ -30,11 +65,22 @@ pub struct ServeConfig {
     pub flush_us: u64,
     /// Bound on the request queue (backpressure: senders block).
     pub queue_cap: usize,
+    /// Saturation behaviour (see [`OverloadPolicy`]).
+    pub overload: OverloadPolicy,
+    /// Staleness bound (µs) for [`OverloadPolicy::Deadline`]: requests
+    /// older than this at flush time are shed. Ignored otherwise.
+    pub deadline_us: u64,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { max_batch: 32, flush_us: 200, queue_cap: 1024 }
+        ServeConfig {
+            max_batch: 32,
+            flush_us: 200,
+            queue_cap: 1024,
+            overload: OverloadPolicy::Block,
+            deadline_us: 10_000,
+        }
     }
 }
 
@@ -50,6 +96,9 @@ pub enum ServeError {
     /// The policy produced a non-finite action for this observation
     /// (the paper's crash condition, surfaced per request).
     NonFinite,
+    /// The server shed this request under load (`overload=shed` on a
+    /// full queue, or `overload=deadline` past the staleness bound).
+    Overloaded,
 }
 
 impl fmt::Display for ServeError {
@@ -61,6 +110,7 @@ impl fmt::Display for ServeError {
             ServeError::Closed => write!(f, "policy server is shut down"),
             ServeError::Backend(e) => write!(f, "backend error: {e}"),
             ServeError::NonFinite => write!(f, "policy produced a non-finite action"),
+            ServeError::Overloaded => write!(f, "server overloaded: request shed"),
         }
     }
 }
@@ -86,6 +136,7 @@ pub struct PolicyServer {
     tx: mpsc::SyncSender<Msg>,
     worker: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
+    overload: OverloadPolicy,
     obs_dim: usize,
     act_dim: usize,
 }
@@ -101,13 +152,19 @@ impl PolicyServer {
         let act_dim = backend.act_dim();
         let m = Arc::clone(&metrics);
         let worker = std::thread::spawn(move || batch_loop(backend, rx, cfg, m));
-        PolicyServer { tx, worker: Some(worker), metrics, obs_dim, act_dim }
+        PolicyServer { tx, worker: Some(worker), metrics, overload: cfg.overload, obs_dim, act_dim }
     }
 
     /// A handle request threads use to submit observations. Clone one
     /// per thread.
     pub fn client(&self) -> ServeClient {
-        ServeClient { tx: self.tx.clone(), obs_dim: self.obs_dim, act_dim: self.act_dim }
+        ServeClient {
+            tx: self.tx.clone(),
+            metrics: Arc::clone(&self.metrics),
+            overload: self.overload,
+            obs_dim: self.obs_dim,
+            act_dim: self.act_dim,
+        }
     }
 
     /// Live counters (the server keeps running).
@@ -115,8 +172,10 @@ impl PolicyServer {
         self.metrics.snapshot()
     }
 
-    /// Stop accepting work, drain the queue, join the batcher and
-    /// return the final stats. Outstanding [`ServeClient`]s observe
+    /// Stop accepting work, drain the queue (the in-flight batch is
+    /// served, requests queued behind the stop are failed with
+    /// [`ServeError::Closed`]), join the batcher and return the final
+    /// stats. Outstanding [`ServeClient`]s observe
     /// [`ServeError::Closed`] afterwards.
     pub fn shutdown(mut self) -> ServeStats {
         let _ = self.tx.send(Msg::Stop);
@@ -143,6 +202,8 @@ impl Drop for PolicyServer {
 #[derive(Clone)]
 pub struct ServeClient {
     tx: mpsc::SyncSender<Msg>,
+    metrics: Arc<Metrics>,
+    overload: OverloadPolicy,
     obs_dim: usize,
     act_dim: usize,
 }
@@ -166,7 +227,23 @@ impl ServeClient {
         // tidy-allow(alloc): the request's obs must be owned to cross the
         // channel to the batcher thread
         let req = Request { obs: obs.to_vec(), enqueued: Instant::now(), reply: rtx };
-        self.tx.send(Msg::Req(req)).map_err(|_| ServeError::Closed)?;
+        match self.overload {
+            // backpressure: block until the batcher frees a slot
+            OverloadPolicy::Block => {
+                self.tx.send(Msg::Req(req)).map_err(|_| ServeError::Closed)?;
+            }
+            // load shedding: a full queue fails fast instead of blocking
+            OverloadPolicy::Shed | OverloadPolicy::Deadline => {
+                match self.tx.try_send(Msg::Req(req)) {
+                    Ok(()) => {}
+                    Err(mpsc::TrySendError::Full(_)) => {
+                        self.metrics.record_shed();
+                        return Err(ServeError::Overloaded);
+                    }
+                    Err(mpsc::TrySendError::Disconnected(_)) => return Err(ServeError::Closed),
+                }
+            }
+        }
         match rrx.recv() {
             Ok(res) => res,
             Err(_) => Err(ServeError::Closed),
@@ -211,16 +288,38 @@ fn batch_loop(
                 }
             }
         }
+        shed_stale(&cfg, &mut pending, &metrics);
         flush_batch(&*backend, &mut pending, obs_dim, act_dim, &metrics);
     }
-    // drain whatever made it into the queue before Stop
-    while let Ok(Msg::Req(r)) = rx.try_recv() {
-        pending.push(r);
-        if pending.len() == cfg.max_batch {
-            flush_batch(&*backend, &mut pending, obs_dim, act_dim, &metrics);
+    // graceful shutdown: the in-flight batch above was still served;
+    // everything queued behind the Stop gets the typed shutdown error —
+    // every accepted request is answered, no reply channel is dropped
+    // unanswered
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Req(r) = msg {
+            metrics.record_error();
+            let _ = r.reply.send(Err(ServeError::Closed));
         }
     }
-    flush_batch(&*backend, &mut pending, obs_dim, act_dim, &metrics);
+}
+
+/// Under `overload=deadline`, fail queued requests whose reply would
+/// arrive past the staleness bound instead of spending backend time on
+/// them.
+fn shed_stale(cfg: &ServeConfig, pending: &mut Vec<Request>, metrics: &Metrics) {
+    if cfg.overload != OverloadPolicy::Deadline {
+        return;
+    }
+    let limit = Duration::from_micros(cfg.deadline_us);
+    pending.retain(|r| {
+        if r.enqueued.elapsed() > limit {
+            metrics.record_shed();
+            let _ = r.reply.send(Err(ServeError::Overloaded));
+            false
+        } else {
+            true
+        }
+    });
 }
 
 /// One batched forward + per-request fan-out.
@@ -299,7 +398,7 @@ mod tests {
     fn requests_round_trip() {
         let server = PolicyServer::start(
             Arc::new(Doubler { obs: 3 }),
-            ServeConfig { max_batch: 4, flush_us: 500, queue_cap: 16 },
+            ServeConfig { max_batch: 4, flush_us: 500, queue_cap: 16, ..ServeConfig::default() },
         );
         let client = server.client();
         assert_eq!(client.obs_dim(), 3);
@@ -335,7 +434,7 @@ mod tests {
     fn concurrent_clients_coalesce_into_batches() {
         let server = PolicyServer::start(
             Arc::new(Doubler { obs: 2 }),
-            ServeConfig { max_batch: 8, flush_us: 20_000, queue_cap: 64 },
+            ServeConfig { max_batch: 8, flush_us: 20_000, queue_cap: 64, ..ServeConfig::default() },
         );
         std::thread::scope(|s| {
             let mut handles = Vec::new();
@@ -359,6 +458,150 @@ mod tests {
             stats.batches
         );
         assert!(stats.mean_batch > 1.0);
+    }
+
+    #[test]
+    fn overload_policy_parses() {
+        assert_eq!(OverloadPolicy::parse("block"), Ok(OverloadPolicy::Block));
+        assert_eq!(OverloadPolicy::parse("shed"), Ok(OverloadPolicy::Shed));
+        assert_eq!(OverloadPolicy::parse("deadline"), Ok(OverloadPolicy::Deadline));
+        assert!(OverloadPolicy::parse("panic").is_err());
+    }
+
+    /// A backend that announces each entered forward and then blocks
+    /// until the test releases it — makes saturation deterministic.
+    struct Gated {
+        entered: mpsc::SyncSender<()>,
+        release: std::sync::Mutex<mpsc::Receiver<()>>,
+    }
+
+    impl PolicyBackend for Gated {
+        fn obs_dim(&self) -> usize {
+            1
+        }
+        fn act_dim(&self) -> usize {
+            1
+        }
+        fn act_batch(&self, obs: &[f32], _batch: usize) -> Result<Vec<f32>, String> {
+            let _ = self.entered.send(());
+            let _ = self.release.lock().unwrap().recv();
+            Ok(obs.to_vec())
+        }
+        fn name(&self) -> &'static str {
+            "gated"
+        }
+    }
+
+    #[test]
+    fn shed_policy_fails_fast_on_a_full_queue() {
+        let (etx, erx) = mpsc::sync_channel(8);
+        let (rtx, rrx) = mpsc::sync_channel(8);
+        let server = PolicyServer::start(
+            Arc::new(Gated { entered: etx, release: std::sync::Mutex::new(rrx) }),
+            ServeConfig {
+                max_batch: 1,
+                flush_us: 0,
+                queue_cap: 1,
+                overload: OverloadPolicy::Shed,
+                ..ServeConfig::default()
+            },
+        );
+        // occupy the batcher: req1 is popped and blocks inside the backend
+        let (r1tx, r1rx) = mpsc::sync_channel(1);
+        server
+            .tx
+            .send(Msg::Req(Request { obs: vec![1.0], enqueued: Instant::now(), reply: r1tx }))
+            .unwrap();
+        erx.recv().unwrap();
+        // fill the (cap-1) queue behind it
+        let (r2tx, r2rx) = mpsc::sync_channel(1);
+        server
+            .tx
+            .send(Msg::Req(Request { obs: vec![2.0], enqueued: Instant::now(), reply: r2tx }))
+            .unwrap();
+        // a shedding client now fails fast instead of blocking forever
+        let client = server.client();
+        assert_eq!(client.act(&[3.0]), Err(ServeError::Overloaded));
+        // release the backend: both accepted requests are still served
+        rtx.send(()).unwrap();
+        rtx.send(()).unwrap();
+        assert_eq!(r1rx.recv().unwrap(), Ok(vec![1.0]));
+        assert_eq!(r2rx.recv().unwrap(), Ok(vec![2.0]));
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, 1, "the rejected request is counted");
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn deadline_policy_sheds_stale_requests_at_flush() {
+        // deadline_us = 0: every request is already stale when its batch
+        // assembles, so it must be failed without touching the backend
+        let server = PolicyServer::start(
+            Arc::new(Doubler { obs: 2 }),
+            ServeConfig {
+                overload: OverloadPolicy::Deadline,
+                deadline_us: 0,
+                ..ServeConfig::default()
+            },
+        );
+        let client = server.client();
+        assert_eq!(client.act(&[1.0, 1.0]), Err(ServeError::Overloaded));
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, 1);
+        assert_eq!(stats.requests, 0);
+        assert_eq!(stats.batches, 0, "stale requests never reach the backend");
+
+        // a generous deadline serves normally
+        let server = PolicyServer::start(
+            Arc::new(Doubler { obs: 2 }),
+            ServeConfig {
+                overload: OverloadPolicy::Deadline,
+                deadline_us: 60_000_000,
+                ..ServeConfig::default()
+            },
+        );
+        let client = server.client();
+        assert_eq!(client.act(&[1.0, -1.0]), Ok(vec![2.0, -2.0]));
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn shutdown_fails_queued_requests_and_leaks_no_reply_channel() {
+        // drive batch_loop directly with a hand-built queue: one request
+        // in flight, then Stop, then two requests queued behind it
+        let (tx, rx) = mpsc::sync_channel(16);
+        let metrics = Arc::new(Metrics::default());
+        let mk = |v: f32| {
+            let (rtx, rrx) = mpsc::sync_channel(1);
+            (Msg::Req(Request { obs: vec![v, v], enqueued: Instant::now(), reply: rtx }), rrx)
+        };
+        let (m1, r1) = mk(1.0);
+        let (m2, r2) = mk(2.0);
+        let (m3, r3) = mk(3.0);
+        tx.send(m1).unwrap();
+        tx.send(Msg::Stop).unwrap();
+        tx.send(m2).unwrap();
+        tx.send(m3).unwrap();
+        drop(tx);
+        batch_loop(
+            Arc::new(Doubler { obs: 2 }),
+            rx,
+            ServeConfig { max_batch: 4, flush_us: 0, queue_cap: 16, ..ServeConfig::default() },
+            Arc::clone(&metrics),
+        );
+        // the in-flight request was served...
+        assert_eq!(r1.recv().unwrap(), Ok(vec![2.0, 2.0]));
+        // ...and the queued ones got the typed shutdown error. recv()
+        // returning a *sent* value (not RecvError) is the no-leak
+        // property: the batcher answered every reply channel it ever
+        // received before dropping it
+        assert_eq!(r2.recv().unwrap(), Err(ServeError::Closed));
+        assert_eq!(r3.recv().unwrap(), Err(ServeError::Closed));
+        let s = metrics.snapshot();
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.errors, 2, "failed-on-shutdown requests are counted");
     }
 
     #[test]

@@ -1,0 +1,278 @@
+//! Crash-safety integration matrix: checkpoint + injected kill + resume
+//! must be bitwise-indistinguishable from an uninterrupted run across
+//! presets (states + pixels), weight storage (f32 + f16), and both
+//! interleave contracts (strict + async); torn checkpoint files must be
+//! caught by the checksum and recovery must fall back to the previous
+//! generation.
+
+use std::path::PathBuf;
+
+use lprl::ckpt::CkptStore;
+use lprl::config::RunConfig;
+use lprl::coordinator::{train, TrainOutcome};
+
+fn states_cfg(preset: &str, storage: &str, sync_mode: &str) -> RunConfig {
+    RunConfig {
+        task: "pendulum_swingup".into(),
+        preset: preset.into(),
+        storage: storage.into(),
+        sync_mode: sync_mode.into(),
+        steps: 120,
+        seed_steps: 40,
+        batch: 16,
+        hidden: 24,
+        eval_every: 60,
+        eval_episodes: 1,
+        num_envs: if sync_mode == "async" { 4 } else { 1 },
+        ..Default::default()
+    }
+}
+
+fn pixels_cfg(preset: &str, storage: &str, sync_mode: &str) -> RunConfig {
+    RunConfig {
+        pixels: true,
+        image_size: 17,
+        filters: 4,
+        feature_dim: 8,
+        hidden: 16,
+        steps: 40,
+        seed_steps: 20,
+        batch: 4,
+        eval_every: 40,
+        num_envs: if sync_mode == "async" { 3 } else { 1 },
+        ..states_cfg(preset, storage, sync_mode)
+    }
+}
+
+/// Fresh scratch dir for a run's checkpoint store.
+fn scratch(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lprl_ckpt_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Bit pattern of the final policy's deterministic action on a fixed
+/// probe observation — exact equality means the params match bitwise.
+fn probe(out: &TrainOutcome) -> Vec<u32> {
+    let p = out.policy.as_ref().expect("train keeps the final policy");
+    let obs: Vec<f32> = (0..p.obs_len()).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let t = p.obs_tensor(&obs, 1);
+    p.act_batch(&t, lprl::sac::ActMode::Deterministic).data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// The resume-equivalence contract: run uninterrupted; run again with
+/// checkpoints + an injected kill; resume from the surviving store; the
+/// resumed run must match the uninterrupted one bitwise. Returns the
+/// scratch dir (still populated) for follow-up assertions.
+fn assert_resume_equivalent(
+    base_cfg: &RunConfig,
+    tag: &str,
+    checkpoint_every: usize,
+    faults: &str,
+) -> PathBuf {
+    let base = train(base_cfg);
+    assert!(!base.crashed, "{tag}: baseline must not crash");
+
+    let dir = scratch(tag);
+    let mut kill_cfg = base_cfg.clone();
+    kill_cfg.out_dir = dir.to_string_lossy().into_owned();
+    kill_cfg.checkpoint_every = checkpoint_every;
+    kill_cfg.faults = faults.into();
+    let killed = train(&kill_cfg);
+    assert!(killed.killed, "{tag}: {faults} must stop the run early");
+    assert!(!killed.crashed, "{tag}: a kill is not a crash");
+
+    let mut res_cfg = base_cfg.clone();
+    res_cfg.resume_from = dir.join("ckpt").to_string_lossy().into_owned();
+    let resumed = train(&res_cfg);
+    assert!(!resumed.killed && !resumed.crashed, "{tag}: resumed run must finish");
+    assert_eq!(
+        resumed.eval_curve.points, base.eval_curve.points,
+        "{tag}: resumed eval curve must match the uninterrupted run"
+    );
+    assert_eq!(
+        resumed.replay_fingerprint, base.replay_fingerprint,
+        "{tag}: resumed replay contents must match"
+    );
+    assert_eq!(resumed.updates, base.updates, "{tag}: update counters must match");
+    assert_eq!(resumed.skipped_steps, base.skipped_steps, "{tag}: skip counters must match");
+    assert_eq!(probe(&resumed), probe(&base), "{tag}: final params must match bitwise");
+    dir
+}
+
+// -- the acceptance matrix: preset family × storage × sync_mode ---------
+
+#[test]
+fn states_f32_strict_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &states_cfg("fp32", "f32", "strict"),
+        "st_f32_strict",
+        25,
+        "kill@80:round",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn states_f16_strict_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &states_cfg("fp16_ours", "f16", "strict"),
+        "st_f16_strict",
+        25,
+        "kill@80:round",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn states_f32_async_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &states_cfg("fp32", "f32", "async"),
+        "st_f32_async",
+        25,
+        "kill@80:round",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn states_f16_async_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &states_cfg("fp16_ours", "f16", "async"),
+        "st_f16_async",
+        25,
+        "kill@80:round",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pixels_f32_strict_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &pixels_cfg("fp32", "f32", "strict"),
+        "px_f32_strict",
+        15,
+        "kill@30:ckpt",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pixels_f16_strict_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &pixels_cfg("fp16_ours", "f16", "strict"),
+        "px_f16_strict",
+        15,
+        "kill@30:ckpt",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pixels_f32_async_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &pixels_cfg("fp32", "f32", "async"),
+        "px_f32_async",
+        15,
+        "kill@30:ckpt",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn pixels_f16_async_resume_is_bitwise_identical() {
+    let dir = assert_resume_equivalent(
+        &pixels_cfg("fp16_ours", "f16", "async"),
+        "px_f16_async",
+        15,
+        "kill@30:ckpt",
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+// -- torn-write recovery: checksum detection + generation fallback ------
+
+fn assert_torn_falls_back(tag: &str, torn_mode: &str) {
+    let base_cfg = states_cfg("fp32", "f32", "strict");
+    let base = train(&base_cfg);
+
+    let dir = scratch(tag);
+    let mut kill_cfg = base_cfg.clone();
+    kill_cfg.out_dir = dir.to_string_lossy().into_owned();
+    kill_cfg.checkpoint_every = 25;
+    // damage the generation written at step 75, then die at step 80
+    kill_cfg.faults = format!("torn@75:{torn_mode}, kill@80:round");
+    let killed = train(&kill_cfg);
+    assert!(killed.killed && !killed.crashed);
+
+    let store = CkptStore::open(dir.join("ckpt"), base_cfg.ckpt_keep).unwrap();
+    let gens = store.generations().unwrap();
+    let steps: Vec<u64> = gens.iter().map(|&(s, _)| s).collect();
+    assert_eq!(steps, vec![25, 50, 75], "{tag}: retention keeps the last 3 generations");
+    // the checksum/format validator must reject the damaged newest file...
+    let newest = &gens.last().unwrap().1;
+    assert!(
+        CkptStore::read_file(newest).is_err(),
+        "{tag}: the torn generation must fail validation"
+    );
+    // ...and load_latest must transparently fall back one generation
+    let (step, _) = store.load_latest().unwrap().expect("an intact generation survives");
+    assert_eq!(step, 50, "{tag}: recovery falls back to the previous generation");
+    assert!(!store.has_stale_temps().unwrap(), "{tag}: no stale temp files left behind");
+    drop(store);
+
+    // resuming from the damaged store silently uses generation 50 and —
+    // by the determinism contract — still matches the baseline bitwise
+    let mut res_cfg = base_cfg.clone();
+    res_cfg.resume_from = dir.join("ckpt").to_string_lossy().into_owned();
+    let resumed = train(&res_cfg);
+    assert!(!resumed.killed && !resumed.crashed);
+    assert_eq!(resumed.eval_curve.points, base.eval_curve.points);
+    assert_eq!(resumed.replay_fingerprint, base.replay_fingerprint);
+    assert_eq!(probe(&resumed), probe(&base));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn corrupt_checkpoint_is_detected_and_recovery_falls_back() {
+    assert_torn_falls_back("torn_corrupt", "corrupt");
+}
+
+#[test]
+fn truncated_checkpoint_is_detected_and_recovery_falls_back() {
+    assert_torn_falls_back("torn_truncate", "truncate");
+}
+
+#[test]
+fn stale_temp_files_are_cleaned_on_open() {
+    // a temp file left by a crash mid-write must be swept the next time
+    // the store opens (the resume path), never mistaken for a generation
+    let base_cfg = states_cfg("fp32", "f32", "strict");
+    let base = train(&base_cfg);
+
+    let dir = scratch("stale_tmp");
+    let mut kill_cfg = base_cfg.clone();
+    kill_cfg.out_dir = dir.to_string_lossy().into_owned();
+    kill_cfg.checkpoint_every = 25;
+    kill_cfg.faults = "kill@80:round".into();
+    let killed = train(&kill_cfg);
+    assert!(killed.killed);
+
+    let ckpt_dir = dir.join("ckpt");
+    std::fs::write(ckpt_dir.join("ckpt-00000000000000000099.lprl.tmp"), b"torn write").unwrap();
+    let store = CkptStore::open(&ckpt_dir, base_cfg.ckpt_keep).unwrap();
+    assert!(!store.has_stale_temps().unwrap(), "open must sweep stale temps");
+    drop(store);
+
+    std::fs::write(ckpt_dir.join("ckpt-00000000000000000099.lprl.tmp"), b"torn write").unwrap();
+    let mut res_cfg = base_cfg.clone();
+    res_cfg.resume_from = ckpt_dir.to_string_lossy().into_owned();
+    let resumed = train(&res_cfg);
+    assert!(!resumed.crashed);
+    assert_eq!(resumed.eval_curve.points, base.eval_curve.points);
+    assert!(
+        !CkptStore::open(&ckpt_dir, base_cfg.ckpt_keep).unwrap().has_stale_temps().unwrap(),
+        "the resume path must have swept the stale temp"
+    );
+    let _ = std::fs::remove_dir_all(dir);
+}

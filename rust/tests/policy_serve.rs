@@ -229,7 +229,7 @@ fn concurrent_serve_clients_match_serial_calls() {
 
     let server = PolicyServer::start(
         Arc::new(NativeBackend::new(policy.clone())),
-        ServeConfig { max_batch: 4, flush_us: 5_000, queue_cap: 64 },
+        ServeConfig { max_batch: 4, flush_us: 5_000, queue_cap: 64, ..ServeConfig::default() },
     );
     std::thread::scope(|s| {
         let mut handles = Vec::new();

@@ -1,0 +1,15 @@
+// Known-bad fixture: checkpoint code writing final paths directly and
+// unwrapping I/O results instead of propagating errors with context.
+
+use std::fs::File;
+use std::io::Write;
+
+pub fn save(path: &str, payload: &[u8]) {
+    // bare create on the final path: a crash mid-write leaves a torn file
+    let mut f = File::create(path).unwrap();
+    f.write_all(payload).unwrap();
+}
+
+pub fn save_small(path: &str, payload: &[u8]) {
+    std::fs::write(path, payload).expect("writing checkpoint");
+}

@@ -1,0 +1,26 @@
+// Known-good fixture: checkpoint bytes flow through the audited atomic
+// writer (temp create escaped with a reason), errors carry path context,
+// and tests may unwrap freely.
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+
+pub fn write_atomic(tmp: &Path, path: &Path, bytes: &[u8]) -> Result<()> {
+    // tidy-allow(ckpt-io): this IS the atomic writer — the create targets
+    // the temp sibling, never the final path
+    let mut f = File::create(tmp).with_context(|| format!("creating temp {}", tmp.display()))?;
+    f.write_all(bytes).with_context(|| format!("writing temp {}", tmp.display()))?;
+    f.sync_all().with_context(|| format!("fsync temp {}", tmp.display()))?;
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("renaming {} -> {}", tmp.display(), path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_in_tests() {
+        std::fs::write("/tmp/x", b"bytes").unwrap();
+    }
+}

@@ -22,6 +22,12 @@
 //!   enforcement surface. Escape: `// tidy-allow(simd): <reason>`.
 //! * **panic** — no `.unwrap()` / `.expect(` in library code outside
 //!   `#[cfg(test)]` regions without `// tidy-allow(panic): <reason>`.
+//! * **ckpt-io** — inside `ckpt/`, no bare `File::create`/`fs::write`
+//!   (every checkpoint byte must flow through the atomic
+//!   temp+fsync+rename writer) and no `.unwrap()`/`.expect(` on I/O
+//!   results (errors must propagate with path context). Escape:
+//!   `// tidy-allow(ckpt-io): <reason>` — reserved for the atomic
+//!   writer's own temp-file create and the fault injector.
 //! * **alloc** — no heap allocation in any fn reachable from the hot
 //!   entry points (learner update round, pooled env stepping, serve
 //!   batch flush, replay samplers) without `// tidy-allow(alloc): <reason>`
@@ -93,7 +99,8 @@ const SIMD_HOME: &str = "rust/src/nn/simd.rs";
 
 /// Rules that may be escaped with `// tidy-allow(<rule>): <reason>`.
 /// `safety` is deliberately absent: a SAFETY argument is never optional.
-const ALLOWABLE_RULES: &[&str] = &["determinism", "precision", "simd", "panic", "alloc"];
+const ALLOWABLE_RULES: &[&str] =
+    &["determinism", "precision", "simd", "panic", "alloc", "ckpt-io"];
 
 /// One rule violation, reported as `file:line: [rule] message`.
 #[derive(Debug)]
@@ -200,6 +207,32 @@ fn analyze_source(sf: &SourceFile) -> Vec<Diag> {
                     );
                     break;
                 }
+            }
+        }
+
+        if lib_code && rel.starts_with("rust/src/ckpt/") {
+            if (code.contains("File::create") || code.contains("fs::write"))
+                && !allowed(lines, idx, "ckpt-io")
+            {
+                push(
+                    ln,
+                    "ckpt-io",
+                    "bare `File::create`/`fs::write` in ckpt/ — checkpoint bytes must go \
+                     through the atomic temp+fsync+rename writer; escape with \
+                     `// tidy-allow(ckpt-io): <reason>` only for the writer itself"
+                        .to_string(),
+                );
+            } else if (code.contains(".unwrap()") || code.contains(".expect("))
+                && !allowed(lines, idx, "ckpt-io")
+            {
+                push(
+                    ln,
+                    "ckpt-io",
+                    "`.unwrap()`/`.expect()` on I/O in ckpt/ — checkpoint I/O errors must \
+                     propagate with path context; escape with \
+                     `// tidy-allow(ckpt-io): <reason>`"
+                        .to_string(),
+                );
             }
         }
 
@@ -418,7 +451,7 @@ enum Format {
 }
 
 const CLEAN_MSG: &str = "tidy: clean (safety, determinism, precision, simd, panic, alloc, \
-                         lock-order, parity, stale-allow, lint-wall)";
+                         ckpt-io, lock-order, parity, stale-allow, lint-wall)";
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -571,6 +604,7 @@ mod tests {
         assert!(rules_hit("rust/src/replay/x.rs", "bad_precision.rs").contains(&"precision"));
         assert!(rules_hit("rust/src/nn/gemm.rs", "bad_simd.rs").contains(&"simd"));
         assert!(rules_hit("rust/src/runtime/x.rs", "bad_panic.rs").contains(&"panic"));
+        assert!(rules_hit("rust/src/ckpt/x.rs", "bad_ckpt_io.rs").contains(&"ckpt-io"));
         assert!(rules_hit("rust/src/nn/x.rs", "bad_allow.rs").contains(&"allow-syntax"));
     }
 
@@ -582,6 +616,7 @@ mod tests {
             ("rust/src/replay/x.rs", "good_precision.rs"),
             ("rust/src/nn/gemm.rs", "good_simd.rs"),
             ("rust/src/runtime/x.rs", "good_panic.rs"),
+            ("rust/src/ckpt/x.rs", "good_ckpt_io.rs"),
         ] {
             let d = analyze_file(rel, &fixture(name));
             assert!(d.is_empty(), "{name}: {d:?}");
@@ -604,6 +639,11 @@ mod tests {
         assert!(analyze_file("rust/src/nn/simd.rs", vec_code).is_empty());
         assert!(analyze_file("rust/src/nn/gemm.rs", vec_code).iter().any(|d| d.rule == "simd"));
         assert!(analyze_file("rust/benches/x.rs", vec_code).is_empty());
+        // ckpt-io fires only inside ckpt/ (the atomic-writer boundary);
+        // the same write elsewhere is governed by the ordinary rules
+        let w = "pub fn f(p: &str) { let _ = std::fs::write(p, b\"x\"); }\n";
+        assert!(analyze_file("rust/src/ckpt/x.rs", w).iter().any(|d| d.rule == "ckpt-io"));
+        assert!(analyze_file("rust/src/telemetry/x.rs", w).iter().all(|d| d.rule != "ckpt-io"));
     }
 
     #[test]

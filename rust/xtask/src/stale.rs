@@ -20,6 +20,12 @@ fn line_triggers(rule: &str, code: &str) -> bool {
         "precision" => has_token(code, "to_bits") || has_token(code, "from_bits"),
         "simd" => SIMD_TOKENS.iter().any(|t| code.contains(t)),
         "panic" => code.contains(".unwrap()") || code.contains(".expect("),
+        "ckpt-io" => {
+            code.contains("File::create")
+                || code.contains("fs::write")
+                || code.contains(".unwrap()")
+                || code.contains(".expect(")
+        }
         "alloc" => has_alloc_token(code),
         _ => true,
     }
