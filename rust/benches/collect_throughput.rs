@@ -94,8 +94,83 @@ fn bench_one(preset: &'static str, mode: &'static str, pixels: bool, num_envs: u
     }
 }
 
+struct SimdF32Row {
+    preset: &'static str,
+    /// Dispatch level the leg ran at: "scalar" (forced) or the detected tier.
+    simd: String,
+    num_envs: usize,
+    collect_sps: f64,
+    updates_per_sec: f64,
+}
+
+/// Spawn `lprl train` in a child process so the scalar leg can force
+/// `LPRL_SIMD=0` — the GEMM dispatch level is detected once per process,
+/// so an in-process scalar row is impossible once any kernel has run.
+/// Parses the trainer's `throughput:` summary line.
+fn collect_via_cli(preset: &'static str, num_envs: usize, sh: &Shape, force_scalar: bool) -> SimdF32Row {
+    let exe = env!("CARGO_BIN_EXE_lprl");
+    let out_dir = std::env::temp_dir().join(format!(
+        "lprl-collect-simd-{}-{preset}-{}",
+        std::process::id(),
+        if force_scalar { "scalar" } else { "auto" }
+    ));
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("train");
+    cmd.arg("task=pendulum_swingup");
+    cmd.arg(format!("preset={preset}"));
+    cmd.arg(format!("steps={}", sh.steps));
+    cmd.arg(format!("seed_steps={}", (sh.steps / 8).max(num_envs)));
+    cmd.arg(format!("batch={}", sh.batch));
+    cmd.arg(format!("hidden={}", sh.hidden));
+    cmd.arg(format!("eval_every={}", sh.steps));
+    cmd.arg("eval_episodes=1");
+    cmd.arg(format!("num_envs={num_envs}"));
+    cmd.arg(format!("out_dir={}", out_dir.display()));
+    if force_scalar {
+        cmd.env("LPRL_SIMD", "0");
+    } else {
+        cmd.env_remove("LPRL_SIMD");
+    }
+    let out = cmd.output().expect("failed to launch lprl train");
+    assert!(
+        out.status.success(),
+        "lprl train {preset} (force_scalar={force_scalar}) failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("throughput:"))
+        .expect("trainer printed no throughput line");
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    let grab = |key: &str| -> f64 {
+        let i = toks.iter().position(|t| *t == key).unwrap();
+        toks[i + 1].parse().unwrap()
+    };
+    let collect_sps = grab("collect");
+    let updates_per_sec = grab("learner");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    SimdF32Row {
+        preset,
+        simd: if force_scalar {
+            "scalar".into()
+        } else {
+            lprl::nn::simd::detect().name().into()
+        },
+        num_envs,
+        collect_sps,
+        updates_per_sec,
+    }
+}
+
 /// The PR-3 report: strict-mode states rows only, schema unchanged.
-fn write_collect_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> std::io::Result<std::path::PathBuf> {
+fn write_collect_json(
+    task: &str,
+    steps: usize,
+    hidden: usize,
+    rows: &[Row],
+    simd_rows: &[SimdF32Row],
+) -> std::io::Result<std::path::PathBuf> {
     let rows: Vec<&Row> = rows.iter().filter(|r| r.mode == "strict" && !r.pixels).collect();
     let mut out = String::new();
     out.push_str("{\n  \"bench\": \"collect\",\n");
@@ -135,6 +210,15 @@ fn write_collect_json(task: &str, steps: usize, hidden: usize, rows: &[Row]) -> 
             top.collect_sps / base.collect_sps
         );
         out.push_str(if i + 1 < presets.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"simd_f32\": [\n");
+    for (i, r) in simd_rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"simd\": \"{}\", \"num_envs\": {}, \"collect_steps_per_sec\": {:.1}, \"updates_per_sec\": {:.2}}}",
+            r.preset, r.simd, r.num_envs, r.collect_sps, r.updates_per_sec
+        );
+        out.push_str(if i + 1 < simd_rows.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
     write_report("BENCH_collect.json", &out)
@@ -272,11 +356,31 @@ fn main() {
         }
     }
 
+    // -- simd_f32: the same collector, auto dispatch vs LPRL_SIMD=0 -------
+    let sf_envs = *envs.last().unwrap();
+    let sf_presets: &[&'static str] = if smoke { &["fp16_ours"] } else { &["fp32", "fp16_ours"] };
+    let mut simd_rows = Vec::new();
+    for &preset in sf_presets {
+        let auto = collect_via_cli(preset, sf_envs, &shape, false);
+        let scalar = collect_via_cli(preset, sf_envs, &shape, true);
+        println!(
+            "simd_f32 collect {:>10} num_envs {:>2}: {} {:>9.1} steps/s  vs scalar {:>9.1} steps/s  ({:.2}x)",
+            preset,
+            sf_envs,
+            auto.simd,
+            auto.collect_sps,
+            scalar.collect_sps,
+            auto.collect_sps / scalar.collect_sps
+        );
+        simd_rows.push(auto);
+        simd_rows.push(scalar);
+    }
+
     if smoke {
         println!("smoke mode: no JSON written");
         return;
     }
-    match write_collect_json("pendulum_swingup", shape.steps, shape.hidden, &rows) {
+    match write_collect_json("pendulum_swingup", shape.steps, shape.hidden, &rows, &simd_rows) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_collect.json: {e}"),
     }

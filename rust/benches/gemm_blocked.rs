@@ -66,6 +66,33 @@ impl HalfRow {
     }
 }
 
+/// One f32 SIMD-plane measurement: a fused bias+quantize GEMM kernel
+/// (or the slice RNE quantizer) pinned to a level, vs the scalar oracle
+/// at the same shape. The bench asserts bitwise parity between the two
+/// levels before timing anything.
+struct SimdF32Row {
+    op: &'static str,
+    level: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    ms: f64,
+    scalar_ms: f64,
+    /// Bytes streamed per call (A+B read, C written; slice in+out for
+    /// the quantizer).
+    bytes: usize,
+}
+
+impl SimdF32Row {
+    fn speedup_vs_scalar(&self) -> f64 {
+        self.scalar_ms / self.ms
+    }
+
+    fn gbs(&self) -> f64 {
+        self.bytes as f64 / (self.ms * 1e6)
+    }
+}
+
 /// Median wall time of `f` over `iters` runs, in ms.
 fn median_ms(iters: usize, mut f: impl FnMut()) -> f64 {
     f(); // warmup (also faults in the buffers)
@@ -169,7 +196,116 @@ fn bench_half_shape(m: usize, k: usize, n: usize, iters: usize, rng: &mut Pcg64)
     rows
 }
 
-fn write_json(rows: &[Row], half: &[HalfRow]) -> std::io::Result<std::path::PathBuf> {
+type GemmAtFn =
+    fn(simd::Level, &[f32], &[f32], &mut [f32], usize, usize, usize, Option<&[f32]>, Precision);
+
+/// Bench the f32 SIMD compute plane: the three fused GEMM kernels and
+/// the slice RNE quantizer, each pinned to the scalar oracle and to the
+/// detected level, with an in-bench bitwise parity gate.
+fn bench_simd_f32_shape(m: usize, k: usize, n: usize, iters: usize, rng: &mut Pcg64) -> Vec<SimdF32Row> {
+    let detected = simd::detect();
+    let cases: [(&'static str, GemmAtFn, usize, usize); 3] = [
+        ("gemm", gemm::gemm_bias_q_at, m * k, k * n),
+        ("gemm_nt", gemm::gemm_nt_bias_q_at, m * k, n * k),
+        ("gemm_tn", gemm::gemm_tn_bias_q_at, k * m, k * n),
+    ];
+    let mut rows = Vec::new();
+    for (op, f, a_len, b_len) in cases {
+        let a: Vec<f32> = (0..a_len).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..b_len).map(|_| rng.normal_f32()).collect();
+        let mut c = vec![0.0f32; m * n];
+        // parity gate: the levels must agree bitwise before timing
+        let mut oracle = vec![0.0f32; m * n];
+        f(simd::Level::Scalar, &a, &b, &mut oracle, m, k, n, None, Precision::Fp32);
+        f(detected, &a, &b, &mut c, m, k, n, None, Precision::Fp32);
+        assert!(
+            c.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{op} {m}x{k}x{n}: {} must equal the scalar oracle bitwise",
+            detected.name()
+        );
+        let bytes = 4 * (a_len + b_len + m * n);
+        let mut level_ms = Vec::new();
+        for level in [simd::Level::Scalar, detected] {
+            if level_ms.iter().any(|&(l, _)| l == level) {
+                continue; // scalar machine: detected level IS the oracle
+            }
+            let ms = median_ms(iters, || {
+                c.iter_mut().for_each(|v| *v = 0.0);
+                f(level, &a, &b, &mut c, m, k, n, None, Precision::Fp32);
+            });
+            level_ms.push((level, ms));
+        }
+        std::hint::black_box(&c);
+        let scalar_ms = level_ms[0].1;
+        for (level, ms) in level_ms {
+            let row =
+                SimdF32Row { op, level: level.name(), m, k, n, ms, scalar_ms, bytes };
+            println!(
+                "simd_f32 {op:<8} {:<6} {m:>5}x{k:<5}x{n:<5} {ms:>9.2} ms  {:>6.1} GB/s  vs scalar {:>5.2}x",
+                row.level,
+                row.gbs(),
+                row.speedup_vs_scalar()
+            );
+            rows.push(row);
+        }
+    }
+    rows
+}
+
+/// Bench the slice RNE quantizer (the fp16-simulation hot loop) at the
+/// scalar and detected levels over a learner-round-sized slice.
+fn bench_simd_quantize(len: usize, iters: usize, rng: &mut Pcg64) -> Vec<SimdF32Row> {
+    let detected = simd::detect();
+    let base: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+    // parity gate
+    let mut oracle = base.clone();
+    simd::quantize_slice_rne_at(simd::Level::Scalar, 5, 10, &mut oracle);
+    let mut fast = base.clone();
+    simd::quantize_slice_rne_at(detected, 5, 10, &mut fast);
+    assert!(
+        fast.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "quantize len={len}: {} must equal the scalar oracle bitwise",
+        detected.name()
+    );
+    let mut rows = Vec::new();
+    let mut level_ms = Vec::new();
+    let mut xs = base.clone();
+    for level in [simd::Level::Scalar, detected] {
+        if level_ms.iter().any(|&(l, _)| l == level) {
+            continue;
+        }
+        let ms = median_ms(iters, || {
+            xs.copy_from_slice(&base);
+            simd::quantize_slice_rne_at(level, 5, 10, &mut xs);
+        });
+        level_ms.push((level, ms));
+    }
+    std::hint::black_box(&xs);
+    let scalar_ms = level_ms[0].1;
+    for (level, ms) in level_ms {
+        let row = SimdF32Row {
+            op: "quantize_rne",
+            level: level.name(),
+            m: len,
+            k: 0,
+            n: 0,
+            ms,
+            scalar_ms,
+            bytes: 8 * len, // read + write
+        };
+        println!(
+            "simd_f32 {:<8} {:<6} len={len:<9} {ms:>9.3} ms  {:>6.1} GB/s  vs scalar {:>5.2}x",
+            row.op,
+            row.level,
+            row.gbs(),
+            row.speedup_vs_scalar()
+        );
+        rows.push(row);
+    }
+    rows
+}
+
+fn write_json(rows: &[Row], half: &[HalfRow], simd_f32: &[SimdF32Row]) -> std::io::Result<std::path::PathBuf> {
     let mut out = String::new();
     out.push_str("{\n  \"bench\": \"gemm\",\n  \"unit\": \"ms\",\n  \"shapes\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -206,6 +342,18 @@ fn write_json(rows: &[Row], half: &[HalfRow]) -> std::io::Result<std::path::Path
         );
         out.push_str(if i + 1 < half.len() { ",\n" } else { "\n" });
     }
+    out.push_str("  ],\n");
+    // simd_f32[]: the f32 compute plane — fused GEMM kernels + RNE
+    // quantizer per level, parity-gated in this same bench run
+    out.push_str("  \"simd_f32\": [\n");
+    for (i, r) in simd_f32.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"op\": \"{}\", \"level\": \"{}\", \"m\": {}, \"k\": {}, \"n\": {}, \"ms\": {:.4}, \"gbs\": {:.2}, \"speedup_vs_scalar\": {:.3}}}",
+            r.op, r.level, r.m, r.k, r.n, r.ms, r.gbs(), r.speedup_vs_scalar()
+        );
+        out.push_str(if i + 1 < simd_f32.len() { ",\n" } else { "\n" });
+    }
     out.push_str("  ]\n}\n");
     // repo root = parent of the package dir
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -228,6 +376,8 @@ fn main() {
         rows.extend(bench_shape(48, 64, 56, 2, &mut rng));
         rows.extend(bench_shape(130, 70, 90, 2, &mut rng));
         bench_half_shape(48, 64, 56, 2, &mut rng);
+        bench_simd_f32_shape(48, 64, 56, 2, &mut rng);
+        bench_simd_quantize(1 << 14, 2, &mut rng);
         return;
     }
     println!("blocked GEMM backend vs seed row-parallel scalar GEMM:");
@@ -240,7 +390,13 @@ fn main() {
     let mut half = Vec::new();
     half.extend(bench_half_shape(512, 1024, 1024, 5, &mut rng));
     half.extend(bench_half_shape(64, 1024, 1024, 5, &mut rng));
-    match write_json(&rows, &half) {
+    println!("f32 SIMD compute plane vs scalar oracle (parity-gated):");
+    let mut simd_f32 = Vec::new();
+    simd_f32.extend(bench_simd_f32_shape(512, 1024, 1024, 5, &mut rng));
+    simd_f32.extend(bench_simd_f32_shape(64, 1024, 1024, 5, &mut rng));
+    simd_f32.extend(bench_simd_f32_shape(256, 256, 256, 9, &mut rng));
+    simd_f32.extend(bench_simd_quantize(1 << 20, 9, &mut rng));
+    match write_json(&rows, &half, &simd_f32) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_gemm.json: {e}"),
     }

@@ -292,6 +292,82 @@ struct TrainRow {
     wall_secs: f64,
 }
 
+struct SimdTrainRow {
+    preset: &'static str,
+    /// Dispatch level the leg ran at: "scalar" (forced) or the detected tier.
+    simd: String,
+    num_envs: usize,
+    updates_per_sec: f64,
+    collect_sps: f64,
+}
+
+/// Spawn `lprl train` in a child process so the scalar leg can force
+/// `LPRL_SIMD=0` — the GEMM dispatch level is detected once per process,
+/// so an in-process scalar row is impossible once any kernel has run.
+/// Parses the trainer's `throughput:` summary line.
+fn train_via_cli(
+    preset: &'static str,
+    steps: usize,
+    hidden: usize,
+    batch: usize,
+    num_envs: usize,
+    force_scalar: bool,
+) -> SimdTrainRow {
+    let exe = env!("CARGO_BIN_EXE_lprl");
+    let out_dir = std::env::temp_dir().join(format!(
+        "lprl-learner-simd-{}-{preset}-{}",
+        std::process::id(),
+        if force_scalar { "scalar" } else { "auto" }
+    ));
+    let mut cmd = std::process::Command::new(exe);
+    cmd.arg("train");
+    cmd.arg("task=pendulum_swingup");
+    cmd.arg(format!("preset={preset}"));
+    cmd.arg(format!("steps={steps}"));
+    cmd.arg(format!("seed_steps={}", (steps / 8).max(num_envs)));
+    cmd.arg(format!("batch={batch}"));
+    cmd.arg(format!("hidden={hidden}"));
+    cmd.arg(format!("eval_every={steps}"));
+    cmd.arg("eval_episodes=1");
+    cmd.arg(format!("num_envs={num_envs}"));
+    cmd.arg(format!("out_dir={}", out_dir.display()));
+    if force_scalar {
+        cmd.env("LPRL_SIMD", "0");
+    } else {
+        cmd.env_remove("LPRL_SIMD");
+    }
+    let out = cmd.output().expect("failed to launch lprl train");
+    assert!(
+        out.status.success(),
+        "lprl train {preset} (force_scalar={force_scalar}) failed:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .find(|l| l.starts_with("throughput:"))
+        .expect("trainer printed no throughput line");
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    let grab = |key: &str| -> f64 {
+        let i = toks.iter().position(|t| *t == key).unwrap();
+        toks[i + 1].parse().unwrap()
+    };
+    let collect_sps = grab("collect");
+    let updates_per_sec = grab("learner");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    SimdTrainRow {
+        preset,
+        simd: if force_scalar {
+            "scalar".into()
+        } else {
+            lprl::nn::simd::detect().name().into()
+        },
+        num_envs,
+        updates_per_sec,
+        collect_sps,
+    }
+}
+
 fn train_bench(
     name: &'static str,
     mode: &'static str,
@@ -340,6 +416,7 @@ fn write_json(
     half_rows: &[MicroRow],
     pairs: &[PairRow],
     trains: &[TrainRow],
+    simd_rows: &[SimdTrainRow],
 ) -> std::io::Result<std::path::PathBuf> {
     let mut out = String::new();
     out.push_str("{\n  \"bench\": \"learner\",\n  \"task\": \"pendulum_swingup\",\n");
@@ -386,6 +463,15 @@ fn write_json(
             r.preset, r.obs, r.mode, r.num_envs, r.updates_per_sec, r.collect_sps, r.wall_secs
         );
         out.push_str(if i + 1 < trains.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n  \"simd_f32\": [\n");
+    for (i, r) in simd_rows.iter().enumerate() {
+        let _ = write!(
+            out,
+            "    {{\"preset\": \"{}\", \"simd\": \"{}\", \"num_envs\": {}, \"updates_per_sec\": {:.2}, \"collect_steps_per_sec\": {:.1}}}",
+            r.preset, r.simd, r.num_envs, r.updates_per_sec, r.collect_sps
+        );
+        out.push_str(if i + 1 < simd_rows.len() { ",\n" } else { "\n" });
     }
     out.push_str("  ]\n}\n");
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
@@ -545,11 +631,31 @@ fn main() {
         );
     }
 
+    // -- simd_f32: the same trainer, auto dispatch vs LPRL_SIMD=0 ---------
+    let (sf_steps, sf_hidden, sf_batch, sf_envs) =
+        if smoke { (64, 32, 16, 4) } else { (1500, 256, 128, 8) };
+    let sf_presets: &[&'static str] = if smoke { &["fp32"] } else { &["fp32", "fp16_ours"] };
+    let mut simd_rows = Vec::new();
+    for &name in sf_presets {
+        let auto = train_via_cli(name, sf_steps, sf_hidden, sf_batch, sf_envs, false);
+        let scalar = train_via_cli(name, sf_steps, sf_hidden, sf_batch, sf_envs, true);
+        println!(
+            "simd_f32 train {:>10}: {} {:>8.2} upd/s  vs scalar {:>8.2} upd/s  ({:.2}x)",
+            name,
+            auto.simd,
+            auto.updates_per_sec,
+            scalar.updates_per_sec,
+            auto.updates_per_sec / scalar.updates_per_sec
+        );
+        simd_rows.push(auto);
+        simd_rows.push(scalar);
+    }
+
     if smoke {
         println!("smoke mode: no JSON written");
         return;
     }
-    match write_json(&micro, &half_rows, &pairs, &trains) {
+    match write_json(&micro, &half_rows, &pairs, &trains, &simd_rows) {
         Ok(p) => println!("wrote {}", p.display()),
         Err(e) => eprintln!("could not write BENCH_learner.json: {e}"),
     }

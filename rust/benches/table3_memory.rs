@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
 
     // measured (not modeled) replay storage at paper scale
     println!("\nreplay buffer bytes (measured allocations, capacity 100k, pixel obs 9x84x84):");
-    for (name, st) in [("fp32", Storage::F32), ("fp16", Storage::F16)] {
+    for (name, st) in [("fp32", Storage::F32), ("fp16", Storage::F16), ("u8  ", Storage::U8)] {
         let buf = ReplayBuffer::new(1000, &[9, 84, 84], 6, st);
         println!("  {name}: {:.1} MB per 1k transitions", buf.bytes() as f64 / 1e6);
     }

@@ -93,6 +93,12 @@ impl Enc {
         }
     }
 
+    /// Length-prefixed u8 sequence (byte-packed pixel replay rows).
+    pub fn u8s(&mut self, xs: &[u8]) {
+        self.u64(xs.len() as u64);
+        self.buf.extend_from_slice(xs);
+    }
+
     /// Append pre-encoded bytes verbatim (no length prefix) — splices a
     /// section another `Enc` produced (the async trainer's
     /// collector-serialized state) into this payload. The decoder must
@@ -259,6 +265,11 @@ impl<'a> Dec<'a> {
         Ok(out)
     }
 
+    pub fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.seq_len(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
     pub fn u64s(&mut self) -> Result<Vec<u64>> {
         let n = self.seq_len(8)?;
         let mut out = Vec::with_capacity(n);
@@ -302,11 +313,13 @@ mod tests {
         let f32s = vec![1.5f32, -0.0, f32::NAN, 3.25e-30];
         let f64s = vec![0.1f64, -1e300];
         let u16s = vec![0u16, 0x7c00, 0xffff];
+        let u8s = vec![0u8, 1, 127, 255];
         let u64s = vec![1u64, 2, 3];
         let mut e = Enc::new();
         e.f32s(&f32s);
         e.f64s(&f64s);
         e.u16s(&u16s);
+        e.u8s(&u8s);
         e.u64s(&u64s);
         let bytes = e.into_bytes();
         let mut d = Dec::new(&bytes);
@@ -318,6 +331,7 @@ mod tests {
         );
         assert_eq!(d.f64s().unwrap(), f64s);
         assert_eq!(d.u16s().unwrap(), u16s);
+        assert_eq!(d.u8s().unwrap(), u8s);
         assert_eq!(d.u64s().unwrap(), u64s);
         d.finish().unwrap();
     }

@@ -12,7 +12,8 @@ use std::time::Duration;
 /// Leading magic of every checkpoint file.
 pub const CKPT_MAGIC: &[u8; 8] = b"LPRLCKPT";
 /// Format generation; bumped on any incompatible payload change.
-pub const CKPT_VERSION: u32 = 1;
+/// v2: `replay_storage` joined the pinned run header.
+pub const CKPT_VERSION: u32 = 2;
 
 /// magic + version + payload-len header bytes before the payload.
 const HEADER_LEN: usize = 8 + 4 + 8;

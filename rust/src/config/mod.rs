@@ -70,6 +70,12 @@ pub struct RunConfig {
     /// streamed through the SIMD widening GEMM kernels (see
     /// `SacAgent::set_half_storage` for the quantize-mirror semantics).
     pub storage: String,
+    /// Storage tier for the replay ring: `"auto"` follows the compute
+    /// tier (f16 rings under low-precision presets, f32 otherwise —
+    /// the paper's Table 3 pairing); `"f32"`/`"f16"` force a tier;
+    /// `"u8"` byte-packs observations onto the `k/255` pixel grid
+    /// (4× smaller; exact for env-emitted pixels, actions stay f32).
+    pub replay_storage: String,
     /// Output directory for CSV results.
     pub out_dir: String,
     /// Write a crash-safe checkpoint every this many agent steps
@@ -116,6 +122,7 @@ impl Default for RunConfig {
             init_temp: 0.0,
             min_log_sig: 0.0,
             storage: "f32".into(),
+            replay_storage: "auto".into(),
             out_dir: "results".into(),
             checkpoint_every: 0,
             ckpt_keep: 3,
@@ -161,6 +168,27 @@ impl RunConfig {
         HalfFormat::parse(&self.storage).flatten()
     }
 
+    /// Decode the `replay_storage` knob for a run whose compute tier is
+    /// `low_compute`: `"auto"` pairs the ring with the compute tier
+    /// (f16 under low-precision compute, f32 otherwise); explicit
+    /// values override. Unknown spellings are caught by
+    /// [`RunConfig::validate`]; here they fall back to `"auto"`.
+    pub fn replay_storage(&self, low_compute: bool) -> crate::replay::Storage {
+        use crate::replay::Storage;
+        match self.replay_storage.as_str() {
+            "f32" => Storage::F32,
+            "f16" => Storage::F16,
+            "u8" => Storage::U8,
+            _ => {
+                if low_compute {
+                    Storage::F16
+                } else {
+                    Storage::F32
+                }
+            }
+        }
+    }
+
     /// Validate the invariants that should fail at config time rather
     /// than deep inside a run: unknown task names (no silent
     /// action-repeat default — see `envs::try_action_repeat`) and
@@ -187,6 +215,12 @@ impl RunConfig {
         }
         if HalfFormat::parse(&self.storage).is_none() {
             return Err(format!("unknown storage {:?} (f32|f16|bf16)", self.storage));
+        }
+        if !matches!(self.replay_storage.as_str(), "auto" | "f32" | "f16" | "u8") {
+            return Err(format!(
+                "unknown replay_storage {:?} (auto|f32|f16|u8)",
+                self.replay_storage
+            ));
         }
         if self.eval_every == 0 {
             return Err("eval_every must be >= 1".into());
@@ -230,6 +264,7 @@ impl RunConfig {
             "init_temp" => self.init_temp = p(value).unwrap_or(self.init_temp),
             "min_log_sig" => self.min_log_sig = p(value).unwrap_or(self.min_log_sig),
             "storage" => self.storage = value.into(),
+            "replay_storage" => self.replay_storage = value.into(),
             "out_dir" => self.out_dir = value.into(),
             "checkpoint_every" => self.checkpoint_every = p(value).unwrap_or(self.checkpoint_every),
             "ckpt_keep" => self.ckpt_keep = p(value).unwrap_or(self.ckpt_keep),
@@ -393,6 +428,10 @@ mod tests {
         assert!(c.validate().unwrap_err().contains("storage"));
         c.storage = "bf16".into();
         assert!(c.validate().is_ok());
+        c.replay_storage = "int4".into();
+        assert!(c.validate().unwrap_err().contains("replay_storage"));
+        c.replay_storage = "u8".into();
+        assert!(c.validate().is_ok());
     }
 
     #[test]
@@ -424,6 +463,22 @@ mod tests {
         assert_eq!(c.half_storage(), Some(HalfFormat::Bf16));
         assert!(c.set("storage", "f32"));
         assert_eq!(c.half_storage(), None);
+    }
+
+    #[test]
+    fn replay_storage_knob_decodes() {
+        use crate::replay::Storage;
+        let mut c = RunConfig::default();
+        // auto pairs the ring with the compute tier
+        assert_eq!(c.replay_storage(false), Storage::F32);
+        assert_eq!(c.replay_storage(true), Storage::F16);
+        // explicit tiers override auto in both directions
+        assert!(c.set("replay_storage", "f32"));
+        assert_eq!(c.replay_storage(true), Storage::F32);
+        assert!(c.set("replay_storage", "f16"));
+        assert_eq!(c.replay_storage(false), Storage::F16);
+        assert!(c.set("replay_storage", "u8"));
+        assert_eq!(c.replay_storage(true), Storage::U8);
     }
 
     #[test]

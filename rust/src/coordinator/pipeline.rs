@@ -492,7 +492,7 @@ pub(super) fn train_agent_async(
     // Learner-side state: the shared trainer stream drives replay
     // sampling only (env streams live in the collector).
     let mut rng = Pcg64::seed_stream(cfg.seed, 7);
-    let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
+    let storage = cfg.replay_storage(agent.compute.is_low());
     let mut replay = ReplayBuffer::new(cfg.replay_capacity, venv.obs_shape(), act_dim, storage);
     let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));
     let mut grad_hist = LogHistogram::new(-12, 4, 2);

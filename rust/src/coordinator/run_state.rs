@@ -85,6 +85,7 @@ fn write_header(enc: &mut Enc, cfg: &RunConfig, n: usize) {
     enc.str(&cfg.task);
     enc.str(&cfg.preset);
     enc.str(&cfg.storage);
+    enc.str(&cfg.replay_storage);
     enc.str(&cfg.sync_mode);
     enc.u64(cfg.seed);
     enc.u64(n as u64);
@@ -99,6 +100,7 @@ fn read_header(dec: &mut Dec, cfg: &RunConfig, n: usize) -> Result<()> {
         ("task", cfg.task.as_str()),
         ("preset", cfg.preset.as_str()),
         ("storage", cfg.storage.as_str()),
+        ("replay_storage", cfg.replay_storage.as_str()),
         ("sync_mode", cfg.sync_mode.as_str()),
     ];
     for (name, want) in strs {

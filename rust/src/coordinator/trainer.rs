@@ -435,7 +435,7 @@ fn train_agent(cfg: &RunConfig, mut venv: VecEnv, mut agent: SacAgent) -> TrainO
         let r = if n == 1 { &mut rng } else { &mut env_rngs[i] };
         venv.reset_into(i, r, &mut obs_flat[i * obs_len..(i + 1) * obs_len]);
     }
-    let storage = if agent.compute.is_low() { Storage::F16 } else { Storage::F32 };
+    let storage = cfg.replay_storage(agent.compute.is_low());
     let mut replay = ReplayBuffer::new(cfg.replay_capacity, venv.obs_shape(), act_dim, storage);
 
     let mut eval_curve = Series::new(format!("{}:{}", cfg.task, cfg.preset));

@@ -191,11 +191,13 @@ impl FloatFormat {
     }
 
     /// Quantize a slice in place (round-to-nearest-even, IEEE overflow).
+    ///
+    /// Routed through the SIMD compute plane: on AVX2 hosts this runs the
+    /// integer RNE bit-path vectorized 8 lanes at a time (bitwise equal to
+    /// the scalar `quantize_rne_bits` oracle); elsewhere it falls back to
+    /// the scalar loop. `LPRL_SIMD=0` forces scalar.
     pub fn quantize_slice(&self, xs: &mut [f32]) {
-        let (e, m) = (self.exp_bits, self.man_bits);
-        for v in xs.iter_mut() {
-            *v = quantize_rne_bits(*v, e, m);
-        }
+        crate::nn::simd::quantize_slice_rne(self.exp_bits, self.man_bits, xs);
     }
 
     /// True if `x` (an `f32`) is exactly representable in this format.

@@ -75,37 +75,22 @@ impl HalfFormat {
     }
 
     /// Pack `src` into `dst` element-wise (`dst.len() == src.len()`).
+    ///
+    /// Routed through the SIMD compute plane (F16C/AVX2 on x86_64 hosts,
+    /// bitwise equal to the scalar encode loop; `LPRL_SIMD=0` forces
+    /// scalar).
     pub fn pack_slice(self, src: &[f32], dst: &mut [u16]) {
         assert_eq!(src.len(), dst.len());
-        match self {
-            HalfFormat::F16 => {
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d = f32_to_f16_bits(s);
-                }
-            }
-            HalfFormat::Bf16 => {
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d = f32_to_bf16_bits(s);
-                }
-            }
-        }
+        crate::nn::simd::pack_half_slice(self, src, dst);
     }
 
     /// Unpack `src` into `dst` element-wise (`dst.len() == src.len()`).
+    ///
+    /// Routed through the SIMD compute plane — widening is exact at every
+    /// tier, and each tier is pinned bitwise against the scalar decode.
     pub fn unpack_slice(self, src: &[u16], dst: &mut [f32]) {
         assert_eq!(src.len(), dst.len());
-        match self {
-            HalfFormat::F16 => {
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d = f16_bits_to_f32(s);
-                }
-            }
-            HalfFormat::Bf16 => {
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d = bf16_bits_to_f32(s);
-                }
-            }
-        }
+        crate::nn::simd::unpack_half_slice(self, src, dst);
     }
 }
 

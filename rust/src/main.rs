@@ -54,6 +54,9 @@ USAGE:
        storage=f32|f16|bf16 keeps the read-only weights (target-network
        mirrors, policy snapshots) in native 16-bit storage, streamed
        through the SIMD widening GEMM kernels where the CPU supports it
+       replay_storage=auto|f32|f16|u8 picks the replay-ring tier: auto
+       pairs it with the compute precision; u8 byte-packs pixel
+       observations onto the k/255 grid (4x smaller, actions stay f32)
        checkpoint_every=N writes a crash-safe checkpoint every N env
        steps to <out_dir>/ckpt (ckpt_keep=K generations retained);
        resume_from=DIR continues a run bitwise-identically from the
@@ -342,6 +345,16 @@ fn cmd_info() -> anyhow::Result<()> {
     println!("  L3  rust/src/                coordinator + native engine + serve layer + PJRT runtime");
     println!("tasks: {} + pendulum_swingup", PLANET_TASKS.join(", "));
     println!("simd: {}", lprl::nn::simd::feature_summary());
+    // which GEMM tier each storage format actually dispatches to on
+    // this host (detection + per-format kernel availability)
+    use lprl::lowp::HalfFormat;
+    use lprl::nn::simd::dispatch_tier;
+    println!(
+        "gemm dispatch: f32={} f16={} bf16={}",
+        dispatch_tier(None),
+        dispatch_tier(Some(HalfFormat::F16)),
+        dispatch_tier(Some(HalfFormat::Bf16))
+    );
     let art = std::path::Path::new("artifacts/manifest.txt");
     println!(
         "artifacts: {}",

@@ -181,16 +181,25 @@ pub fn gemm_bias_q(
     bias: Option<&[f32]>,
     prec: Precision,
 ) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    check_cb(c, m, n, bias);
-    let cp = SendPtr(c.as_mut_ptr());
-    run_row_blocks(m, m * k * n, Exec::Auto, |i0, i1| {
-        // SAFETY: this task exclusively owns output rows i0..i1; the
-        // operand slices are only read.
-        unsafe { task_nn(a, b, cp.get(), i0, i1, k, n) };
-        epilogue(cp.get(), i0, i1, n, bias, prec);
-    });
+    gemm_nn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto, simd::detect());
+}
+
+/// [`gemm_bias_q`] pinned to an explicit SIMD [`simd::Level`] — the
+/// seam the parity tests and benches use to run the scalar oracle and
+/// the vector path side by side on the same machine.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_q_at(
+    level: simd::Level,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_nn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto, level);
 }
 
 /// [`gemm_nt`] with the fused bias+quantize epilogue.
@@ -204,7 +213,24 @@ pub fn gemm_nt_bias_q(
     bias: Option<&[f32]>,
     prec: Precision,
 ) {
-    gemm_nt_impl(a, b, c, m, k, n, bias, prec, Exec::Auto);
+    gemm_nt_impl(a, b, c, m, k, n, bias, prec, Exec::Auto, simd::detect());
+}
+
+/// [`gemm_nt_bias_q`] pinned to an explicit SIMD [`simd::Level`] (see
+/// [`gemm_bias_q_at`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_nt_bias_q_at(
+    level: simd::Level,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_nt_impl(a, b, c, m, k, n, bias, prec, Exec::Auto, level);
 }
 
 /// [`gemm_tn`] with the fused bias+quantize epilogue.
@@ -218,7 +244,24 @@ pub fn gemm_tn_bias_q(
     bias: Option<&[f32]>,
     prec: Precision,
 ) {
-    gemm_tn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto);
+    gemm_tn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto, simd::detect());
+}
+
+/// [`gemm_tn_bias_q`] pinned to an explicit SIMD [`simd::Level`] (see
+/// [`gemm_bias_q_at`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_tn_bias_q_at(
+    level: simd::Level,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
+    gemm_tn_impl(a, b, c, m, k, n, bias, prec, Exec::Auto, level);
 }
 
 /// Two same-shape [`gemm_nt_bias_q`] products under a **single** pool
@@ -246,9 +289,10 @@ pub fn gemm_nt_bias_q_pair(
     n: usize,
     prec: Precision,
 ) {
-    gemm_nt_pair_impl(a1, b1, c1, bias1, a2, b2, c2, bias2, m, k, n, prec, Exec::Auto);
+    gemm_nt_pair_impl(a1, b1, c1, bias1, a2, b2, c2, bias2, m, k, n, prec, Exec::Auto, simd::detect());
 }
 
+#[allow(clippy::too_many_arguments)]
 fn gemm_nt_pair_impl(
     a1: &[f32],
     b1: &[f32],
@@ -263,6 +307,7 @@ fn gemm_nt_pair_impl(
     n: usize,
     prec: Precision,
     exec: Exec,
+    level: simd::Level,
 ) {
     assert_eq!(a1.len(), m * k);
     assert_eq!(a2.len(), m * k);
@@ -297,8 +342,8 @@ fn gemm_nt_pair_impl(
             let i1 = (i0 + MC).min(m);
             // SAFETY: this task exclusively owns rows i0..i1 of its own
             // head's output; the two heads write through distinct buffers.
-            unsafe { task_nn(a, bt, cp.get(), i0, i1, k, n) };
-            epilogue(cp.get(), i0, i1, n, bias, prec);
+            unsafe { task_nn(a, bt, level, cp.get(), i0, i1, k, n) };
+            epilogue(level, cp.get(), i0, i1, n, bias, prec);
         };
         // The combined job: both products count toward the pool threshold.
         let parallel = exec == Exec::Auto && ntasks > 1 && 2 * m * k * n >= PAR_MIN_MACS;
@@ -406,7 +451,7 @@ pub fn gemm_nt_bias_q_pair_half(
             // SAFETY: this task exclusively owns rows i0..i1 of its own
             // head's output; the two heads write through distinct buffers.
             unsafe { task_nn_half(a, bt, fmt, level, cp.get(), i0, i1, k, n) };
-            epilogue(cp.get(), i0, i1, n, bias, prec);
+            epilogue(level, cp.get(), i0, i1, n, bias, prec);
         };
         let parallel = ntasks > 1 && 2 * m * k * n >= PAR_MIN_MACS;
         if parallel {
@@ -448,11 +493,37 @@ fn gemm_nt_half_impl(
             // SAFETY: this task exclusively owns output rows i0..i1;
             // the operand slices are only read.
             unsafe { task_nn_half(a, bt, fmt, level, cp.get(), i0, i1, k, n) };
-            epilogue(cp.get(), i0, i1, n, bias, prec);
+            epilogue(level, cp.get(), i0, i1, n, bias, prec);
         });
     });
 }
 
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_impl(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+    exec: Exec,
+    level: simd::Level,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    check_cb(c, m, n, bias);
+    let cp = SendPtr(c.as_mut_ptr());
+    run_row_blocks(m, m * k * n, exec, |i0, i1| {
+        // SAFETY: this task exclusively owns output rows i0..i1; the
+        // operand slices are only read.
+        unsafe { task_nn(a, b, level, cp.get(), i0, i1, k, n) };
+        epilogue(level, cp.get(), i0, i1, n, bias, prec);
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
 fn gemm_nt_impl(
     a: &[f32],
     b: &[f32],
@@ -463,6 +534,7 @@ fn gemm_nt_impl(
     bias: Option<&[f32]>,
     prec: Precision,
     exec: Exec,
+    level: simd::Level,
 ) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), n * k);
@@ -479,12 +551,13 @@ fn gemm_nt_impl(
         run_row_blocks(m, m * k * n, exec, |i0, i1| {
             // SAFETY: this task exclusively owns output rows i0..i1;
             // the operand slices are only read.
-            unsafe { task_nn(a, bt, cp.get(), i0, i1, k, n) };
-            epilogue(cp.get(), i0, i1, n, bias, prec);
+            unsafe { task_nn(a, bt, level, cp.get(), i0, i1, k, n) };
+            epilogue(level, cp.get(), i0, i1, n, bias, prec);
         });
     });
 }
 
+#[allow(clippy::too_many_arguments)]
 fn gemm_tn_impl(
     a: &[f32],
     b: &[f32],
@@ -495,6 +568,7 @@ fn gemm_tn_impl(
     bias: Option<&[f32]>,
     prec: Precision,
     exec: Exec,
+    level: simd::Level,
 ) {
     assert_eq!(a.len(), k * m);
     assert_eq!(b.len(), k * n);
@@ -508,29 +582,9 @@ fn gemm_tn_impl(
         run_row_blocks(m, m * k * n, exec, |i0, i1| {
             // SAFETY: this task exclusively owns output rows i0..i1;
             // the operand slices are only read.
-            unsafe { task_nn(at, b, cp.get(), i0, i1, k, n) };
-            epilogue(cp.get(), i0, i1, n, bias, prec);
+            unsafe { task_nn(at, b, level, cp.get(), i0, i1, k, n) };
+            epilogue(level, cp.get(), i0, i1, n, bias, prec);
         });
-    });
-}
-
-#[cfg(test)]
-fn gemm_nn_impl_for_tests(
-    a: &[f32],
-    b: &[f32],
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-    exec: Exec,
-) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    let cp = SendPtr(c.as_mut_ptr());
-    run_row_blocks(m, m * k * n, exec, |i0, i1| {
-        // SAFETY: this task exclusively owns output rows i0..i1.
-        unsafe { task_nn(a, b, cp.get(), i0, i1, k, n) };
     });
 }
 
@@ -563,8 +617,22 @@ fn run_row_blocks(m: usize, macs: usize, exec: Exec, f: impl Fn(usize, usize) + 
     }
 }
 
-/// Post-accumulation pass over one task's rows: bias add + quantize.
-fn epilogue(c: *mut f32, i0: usize, i1: usize, n: usize, bias: Option<&[f32]>, prec: Precision) {
+/// Post-accumulation pass over one task's rows: bias add + quantize,
+/// both vectorized at `level`. The bias add is elementwise (lane
+/// grouping cannot change results) and the quantizer's vector body is
+/// bitwise-pinned to its scalar oracle, so the fused epilogue stays
+/// level-invariant. The RNE quantize inside `q_slice` dispatches at the
+/// *detected* level (the `_at` seams pin only the kernels; quantizer
+/// levels are pinned by their own parity tests).
+fn epilogue(
+    level: simd::Level,
+    c: *mut f32,
+    i0: usize,
+    i1: usize,
+    n: usize,
+    bias: Option<&[f32]>,
+    prec: Precision,
+) {
     if bias.is_none() && !prec.is_low() {
         return;
     }
@@ -572,9 +640,7 @@ fn epilogue(c: *mut f32, i0: usize, i1: usize, n: usize, bias: Option<&[f32]>, p
         // SAFETY: this task exclusively owns rows i0..i1.
         let row = unsafe { std::slice::from_raw_parts_mut(c.add(i * n), n) };
         if let Some(bs) = bias {
-            for (v, &bv) in row.iter_mut().zip(bs) {
-                *v += bv;
-            }
+            simd::add_slice_at(level, row, bs);
         }
         prec.q_slice(row);
     }
@@ -588,7 +654,17 @@ fn epilogue(c: *mut f32, i0: usize, i1: usize, n: usize, bias: Option<&[f32]>, p
 // SAFETY: callers pass `c` valid for writes over rows i0..i1 of an
 // i1×n row-major output, grant this task exclusive access to those
 // rows, and size `a` as [≥i1, k] and `b` as [k, n].
-unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: usize, n: usize) {
+#[allow(clippy::too_many_arguments)]
+unsafe fn task_nn(
+    a: &[f32],
+    b: &[f32],
+    level: simd::Level,
+    c: *mut f32,
+    i0: usize,
+    i1: usize,
+    k: usize,
+    n: usize,
+) {
     let mut kc = 0;
     while kc < k {
         let kl = KC.min(k - kc);
@@ -596,6 +672,7 @@ unsafe fn task_nn(a: &[f32], b: &[f32], c: *mut f32, i0: usize, i1: usize, k: us
         // caller contract covers every write through `c`.
         unsafe {
             inner_tiles(
+                level,
                 a.as_ptr().add(i0 * k + kc),
                 k,
                 b.as_ptr().add(kc * n),
@@ -698,12 +775,15 @@ unsafe fn inner_tiles_half(
 
 /// Sweep the (row, column) micro-tiles of one task block for one panel.
 /// `a` points at the panel base for row `i0` with row stride `a_rs`;
-/// `b` points at the panel base with row stride `b_rs`.
+/// `b` points at the panel base with row stride `b_rs`. Full tiles
+/// dispatch to the (level-selected) f32 kernel in [`simd`]; edges stay
+/// on the scalar edge kernel.
 // SAFETY: callers pass `a`/`b` panels holding kl full rows from their
 // bases at the given strides, and `c` writable over rows i0..i1 of an
 // i1×n row-major output that this call exclusively owns.
 #[allow(clippy::too_many_arguments)]
 unsafe fn inner_tiles(
+    level: simd::Level,
     a: *const f32,
     a_rs: usize,
     b: *const f32,
@@ -728,7 +808,7 @@ unsafe fn inner_tiles(
                 let bp = b.add(j0);
                 let cp = c.add(i * n + j0);
                 if mr == MR && nr == NR {
-                    kernel_4x16(ap, a_rs, bp, b_rs, cp, n, kl);
+                    simd::kernel_4x16_f32(level, ap, a_rs, bp, b_rs, cp, n, kl);
                 } else {
                     kernel_edge(ap, a_rs, bp, b_rs, cp, n, mr, nr, kl);
                 }
@@ -736,48 +816,6 @@ unsafe fn inner_tiles(
             i += MR;
         }
         j0 += NR;
-    }
-}
-
-/// The full 4×16 register-tiled micro-kernel:
-/// `c[r][j] += Σ_p a[r][p] · b[p][j]` with 64 independent accumulators.
-// SAFETY: callers pass `a`/`b` panels holding kl rows of MR/NR live
-// columns at their strides, and `c` writable for a full MR×NR tile at
-// row stride `c_rs` that this call exclusively owns.
-#[inline(always)]
-unsafe fn kernel_4x16(
-    a: *const f32,
-    a_rs: usize,
-    b: *const f32,
-    b_rs: usize,
-    c: *mut f32,
-    c_rs: usize,
-    kl: usize,
-) {
-    let mut acc = [[0.0f32; NR]; MR];
-    // SAFETY: every offset below stays inside the MR×kl / kl×NR panels
-    // and the MR×NR output tile the caller contract grants.
-    unsafe {
-        for p in 0..kl {
-            let bp = b.add(p * b_rs);
-            let a0 = *a.add(p);
-            let a1 = *a.add(a_rs + p);
-            let a2 = *a.add(2 * a_rs + p);
-            let a3 = *a.add(3 * a_rs + p);
-            for j in 0..NR {
-                let bv = *bp.add(j);
-                acc[0][j] += a0 * bv;
-                acc[1][j] += a1 * bv;
-                acc[2][j] += a2 * bv;
-                acc[3][j] += a3 * bv;
-            }
-        }
-        for (r, row) in acc.iter().enumerate() {
-            let cr = c.add(r * c_rs);
-            for (j, &v) in row.iter().enumerate() {
-                *cr.add(j) += v;
-            }
-        }
     }
 }
 
@@ -1085,10 +1123,11 @@ mod tests {
         let (m, k, n) = (300, 80, 70);
         let a = randn(m * k, &mut rng);
         let b = randn(k * n, &mut rng);
+        let lv = simd::detect();
         let mut c_pool = vec![0.0; m * n];
         let mut c_serial = vec![0.0; m * n];
-        gemm_nn_impl_for_tests(&a, &b, &mut c_pool, m, k, n, Exec::Auto);
-        gemm_nn_impl_for_tests(&a, &b, &mut c_serial, m, k, n, Exec::Serial);
+        gemm_nn_impl(&a, &b, &mut c_pool, m, k, n, None, Precision::Fp32, Exec::Auto, lv);
+        gemm_nn_impl(&a, &b, &mut c_serial, m, k, n, None, Precision::Fp32, Exec::Serial, lv);
         assert!(
             c_pool.iter().zip(&c_serial).all(|(x, y)| x.to_bits() == y.to_bits()),
             "pooled vs serial results must be bitwise identical"
@@ -1097,15 +1136,15 @@ mod tests {
         let bt = randn(n * k, &mut rng);
         let mut c_pool = vec![0.0; m * n];
         let mut c_serial = vec![0.0; m * n];
-        gemm_nt_impl(&a, &bt, &mut c_pool, m, k, n, None, Precision::fp16(), Exec::Auto);
-        gemm_nt_impl(&a, &bt, &mut c_serial, m, k, n, None, Precision::fp16(), Exec::Serial);
+        gemm_nt_impl(&a, &bt, &mut c_pool, m, k, n, None, Precision::fp16(), Exec::Auto, lv);
+        gemm_nt_impl(&a, &bt, &mut c_serial, m, k, n, None, Precision::fp16(), Exec::Serial, lv);
         assert!(c_pool.iter().zip(&c_serial).all(|(x, y)| x.to_bits() == y.to_bits()));
 
         let at = randn(k * m, &mut rng);
         let mut c_pool = vec![0.0; m * n];
         let mut c_serial = vec![0.0; m * n];
-        gemm_tn_impl(&at, &b, &mut c_pool, m, k, n, None, Precision::Fp32, Exec::Auto);
-        gemm_tn_impl(&at, &b, &mut c_serial, m, k, n, None, Precision::Fp32, Exec::Serial);
+        gemm_tn_impl(&at, &b, &mut c_pool, m, k, n, None, Precision::Fp32, Exec::Auto, lv);
+        gemm_tn_impl(&at, &b, &mut c_serial, m, k, n, None, Precision::Fp32, Exec::Serial, lv);
         assert!(c_pool.iter().zip(&c_serial).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
@@ -1331,11 +1370,12 @@ mod tests {
         let mut s1 = vec![0.0; m * n];
         let mut s2 = vec![0.0; m * n];
         let prec = Precision::fp16();
+        let lv = simd::detect();
         gemm_nt_pair_impl(
-            &a1, &b1, &mut p1, None, &a2, &b2, &mut p2, None, m, k, n, prec, Exec::Auto,
+            &a1, &b1, &mut p1, None, &a2, &b2, &mut p2, None, m, k, n, prec, Exec::Auto, lv,
         );
         gemm_nt_pair_impl(
-            &a1, &b1, &mut s1, None, &a2, &b2, &mut s2, None, m, k, n, prec, Exec::Serial,
+            &a1, &b1, &mut s1, None, &a2, &b2, &mut s2, None, m, k, n, prec, Exec::Serial, lv,
         );
         assert!(p1.iter().zip(&s1).all(|(x, y)| x.to_bits() == y.to_bits()));
         assert!(p2.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()));

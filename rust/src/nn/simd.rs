@@ -1,21 +1,36 @@
-//! Explicit SIMD micro-kernels for the packed-half GEMM path.
+//! Explicit SIMD micro-kernels and slice passes — the tree's whole
+//! vector compute plane.
 //!
 //! This is the **only** module allowed to touch `std::arch` — the tidy
 //! `simd` rule pins that boundary, the same way `to_bits` is pinned to
-//! `lowp/`. Everything here widens packed 16-bit weights (f16 via F16C
-//! `cvtph`, bf16 via a 16-bit left shift) into f32 lanes and accumulates
-//! in f32.
+//! `lowp/`. It now covers four families:
+//!
+//! * **Packed-half GEMM tiles** (`kernel_4x16_half`): widen packed
+//!   16-bit weights (f16 via F16C `cvtph`, bf16 via a 16-bit left
+//!   shift) into f32 lanes and accumulate in f32.
+//! * **f32 GEMM tiles** (`kernel_4x16_f32`): the same 4×16 register
+//!   tile over unpacked f32 operands — the master/compute plane every
+//!   forward, backward, and fp32 baseline funnels through.
+//! * **Slice RNE quantizer** (`quantize_slice_rne`): the integer
+//!   add-trick of `lowp::format::quantize_rne_bits`, eight lanes at a
+//!   time, with every special-value lane redone by the scalar function.
+//! * **Half pack/unpack** (`pack_half_slice` / `unpack_half_slice`)
+//!   and the epilogue bias add (`add_slice`).
 //!
 //! Parity contract: every vector kernel vectorizes **across output
 //! columns** — each output element is one SIMD lane accumulating its own
 //! ascending-`k` chain with a separate multiply and add per step, which
-//! is exactly the scalar kernel's schedule. Widening `u16 -> f32` is
-//! exact for both layouts, multiplies/adds are IEEE f32 in both paths,
-//! and no FMA contraction is used (a fused multiply-add would keep extra
-//! intermediate bits and break bitwise parity). The scalar kernels below
-//! are therefore the *oracle*: vector results are bitwise identical for
-//! every shape, format, and feature level (property-tested in
-//! `tests/half_storage.rs`).
+//! is exactly the scalar kernel's schedule. Multiplies/adds are IEEE f32
+//! in both paths and no FMA contraction is used (a fused multiply-add
+//! would keep extra intermediate bits and break bitwise parity). The
+//! slice passes are elementwise, so lane grouping cannot reorder
+//! anything; where hardware semantics diverge from the scalar
+//! converters (NaN payload handling in f16/bf16 conversion, the
+//! quantizer's subnormal/overflow regions) the affected chunk is redone
+//! by the scalar function. The scalar paths are therefore the *oracle*:
+//! vector results are bitwise identical for every shape, format, and
+//! feature level (property-tested here, in `tests/half_storage.rs`, and
+//! in `tests/simd_f32.rs`).
 //!
 //! Dispatch is by a runtime-detected [`Level`], cached once per process;
 //! `LPRL_SIMD=0` forces the scalar path (the bench/CI seam for timing
@@ -29,16 +44,18 @@ pub const MR: usize = 4;
 /// Micro-kernel columns — must match `gemm::NR`.
 pub const NR: usize = 16;
 
-/// Available compute tiers for the packed-half kernels.
+/// Available compute tiers for the GEMM micro-kernels and slice passes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Level {
-    /// Portable scalar widening kernels — the bitwise oracle.
+    /// Portable scalar kernels — the bitwise oracle.
     Scalar,
     /// x86-64 AVX2 + F16C: 8-lane f32 vectors, hardware f16 widening.
     #[cfg(target_arch = "x86_64")]
     Avx2,
-    /// AArch64 NEON: 4-lane f32 vectors (bf16 only — stable Rust has no
-    /// NEON f16 widening intrinsics, so f16 falls back to scalar).
+    /// AArch64 NEON: 4-lane f32 vectors (f32 and bf16 GEMM tiles —
+    /// stable Rust has no NEON f16 widening intrinsics, so packed-f16
+    /// GEMM falls back to scalar; the quantizer and pack/unpack passes
+    /// are scalar on this tier too).
     #[cfg(target_arch = "aarch64")]
     Neon,
 }
@@ -55,8 +72,8 @@ impl Level {
         }
     }
 
-    /// True if this level has a vector kernel for `fmt` (otherwise the
-    /// half GEMM runs the scalar oracle for that format).
+    /// True if this level has a vector GEMM kernel for packed-half `fmt`
+    /// (otherwise the half GEMM runs the scalar oracle for that format).
     pub fn accelerates(self, fmt: HalfFormat) -> bool {
         match self {
             Level::Scalar => false,
@@ -115,6 +132,20 @@ pub fn feature_summary() -> String {
     }
 }
 
+/// The kernel tier a GEMM over the given weight storage actually
+/// dispatches to at the detected level (`None` = unpacked f32 weights,
+/// which every vector level accelerates). `lprl info` reports this per
+/// format so "detected avx2" is never confused with "this format runs
+/// avx2".
+pub fn dispatch_tier(fmt: Option<HalfFormat>) -> &'static str {
+    let level = detect();
+    match fmt {
+        None => level.name(),
+        Some(f) if level.accelerates(f) => level.name(),
+        Some(_) => Level::Scalar.name(),
+    }
+}
+
 /// Full-tile packed-half micro-kernel:
 /// `c[r][j] += Σ_p a[r][p] · widen(b[p][j])` with MR×NR independent
 /// accumulator chains — dispatched by `level`/`fmt` to a vector body or
@@ -159,7 +190,7 @@ pub unsafe fn kernel_4x16_half(
 }
 
 /// Scalar oracle for the full packed-half tile — the exact structure of
-/// `gemm::kernel_4x16` with a widening load on the B operand.
+/// [`kernel_4x16_f32_scalar`] with a widening load on the B operand.
 // SAFETY: same contract as `kernel_4x16_half`.
 #[allow(clippy::too_many_arguments)]
 unsafe fn kernel_4x16_half_scalar(
@@ -240,9 +271,203 @@ pub unsafe fn kernel_edge_half(
     }
 }
 
+/// Full-tile f32 micro-kernel:
+/// `c[r][j] += Σ_p a[r][p] · b[p][j]` with MR×NR independent
+/// accumulator chains — dispatched by `level` to a vector body or the
+/// scalar oracle, all bitwise identical. This is the compute plane of
+/// every f32 GEMM variant (`gemm`/`gemm_nt`/`gemm_tn` all reduce to
+/// notrans·notrans jobs over packed panels).
+// SAFETY: callers pass `a` holding kl rows of MR live columns at stride
+// `a_rs`, `b` holding kl rows of NR live columns at stride `b_rs`, and
+// `c` writable for a full MR×NR tile at row stride `c_rs` that this
+// call exclusively owns.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn kernel_4x16_f32(
+    level: Level,
+    a: *const f32,
+    a_rs: usize,
+    b: *const f32,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    kl: usize,
+) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by `detect()` after the
+        // runtime avx2 check; pointer contracts forwarded as-is.
+        Level::Avx2 => unsafe { x86::kernel_4x16_f32(a, a_rs, b, b_rs, c, c_rs, kl) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; pointer contracts
+        // forwarded as-is.
+        Level::Neon => unsafe { neon::kernel_4x16_f32(a, a_rs, b, b_rs, c, c_rs, kl) },
+        // SAFETY: pointer contracts forwarded as-is.
+        _ => unsafe { kernel_4x16_f32_scalar(a, a_rs, b, b_rs, c, c_rs, kl) },
+    }
+}
+
+/// Scalar oracle for the full f32 tile — 64 independent accumulators
+/// the compiler keeps in registers (formerly `gemm::kernel_4x16`).
+// SAFETY: same contract as `kernel_4x16_f32`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn kernel_4x16_f32_scalar(
+    a: *const f32,
+    a_rs: usize,
+    b: *const f32,
+    b_rs: usize,
+    c: *mut f32,
+    c_rs: usize,
+    kl: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    // SAFETY: every offset below stays inside the MR×kl / kl×NR panels
+    // and the MR×NR output tile the caller contract grants.
+    unsafe {
+        for p in 0..kl {
+            let bp = b.add(p * b_rs);
+            let a0 = *a.add(p);
+            let a1 = *a.add(a_rs + p);
+            let a2 = *a.add(2 * a_rs + p);
+            let a3 = *a.add(3 * a_rs + p);
+            for j in 0..NR {
+                let bv = *bp.add(j);
+                acc[0][j] += a0 * bv;
+                acc[1][j] += a1 * bv;
+                acc[2][j] += a2 * bv;
+                acc[3][j] += a3 * bv;
+            }
+        }
+        for (r, row) in acc.iter().enumerate() {
+            let cr = c.add(r * c_rs);
+            for (j, &v) in row.iter().enumerate() {
+                *cr.add(j) += v;
+            }
+        }
+    }
+}
+
+/// Slice RNE quantizer into `(exp_bits, man_bits)` with IEEE
+/// overflow-to-∞ — the SIMD twin of looping
+/// `lowp::format::quantize_rne_bits`, auto-dispatched at the detected
+/// level. Bitwise equal to the scalar path everywhere: the vector body
+/// reuses the exact integer add-trick (including its carry into the
+/// exponent field), and every lane outside the normal-target fast
+/// region (±0, ±∞, NaN, f32 subnormals, target subnormals) falls back
+/// to the scalar function.
+pub fn quantize_slice_rne(exp_bits: u8, man_bits: u8, xs: &mut [f32]) {
+    quantize_slice_rne_at(detect(), exp_bits, man_bits, xs);
+}
+
+/// [`quantize_slice_rne`] pinned to an explicit [`Level`] — the seam
+/// the parity tests and benches use to run the scalar oracle and the
+/// vector path side by side on the same machine.
+pub fn quantize_slice_rne_at(level: Level, exp_bits: u8, man_bits: u8, xs: &mut [f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // The vector add-trick only matches the scalar carry handling
+        // for interior mantissa widths: m = 0 would read an exponent
+        // bit as the round LSB and m = 23 has no bits to drop, so both
+        // run the scalar loop at every level.
+        Level::Avx2 if (1..=22).contains(&man_bits) => {
+            // SAFETY: Level::Avx2 is only produced by `detect()` after
+            // the runtime avx2 check.
+            unsafe { x86::quantize_slice_rne(exp_bits, man_bits, xs) }
+        }
+        _ => {
+            for v in xs.iter_mut() {
+                *v = crate::lowp::format::quantize_rne_bits(*v, exp_bits, man_bits);
+            }
+        }
+    }
+}
+
+/// Pack f32s into 16-bit `fmt` bits, slice-wise — the SIMD twin of the
+/// per-element encode loop (hardware F16C conversion for f16, the
+/// integer add-trick for bf16). NaN chunks are redone by the scalar
+/// converters (hardware preserves payloads the scalar path
+/// canonicalizes), so results are bitwise equal at every level.
+pub fn pack_half_slice(fmt: HalfFormat, src: &[f32], dst: &mut [u16]) {
+    pack_half_slice_at(detect(), fmt, src, dst);
+}
+
+/// [`pack_half_slice`] pinned to an explicit [`Level`].
+pub fn pack_half_slice_at(level: Level, fmt: HalfFormat, src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len());
+    match (level, fmt) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by `detect()` after
+        // runtime avx2+f16c checks.
+        (Level::Avx2, HalfFormat::F16) => unsafe { x86::pack_f16(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — avx2 verified at detection time.
+        (Level::Avx2, HalfFormat::Bf16) => unsafe { x86::pack_bf16(src, dst) },
+        _ => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = fmt.encode(s);
+            }
+        }
+    }
+}
+
+/// Unpack 16-bit `fmt` bits into f32s, slice-wise — always exact. The
+/// f16 vector body redoes NaN chunks scalar (hardware quiets signalling
+/// payloads the scalar widener preserves); the bf16 body is a pure
+/// 16-bit shift, exact for every bit pattern with no fallback.
+pub fn unpack_half_slice(fmt: HalfFormat, src: &[u16], dst: &mut [f32]) {
+    unpack_half_slice_at(detect(), fmt, src, dst);
+}
+
+/// [`unpack_half_slice`] pinned to an explicit [`Level`].
+pub fn unpack_half_slice_at(level: Level, fmt: HalfFormat, src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    match (level, fmt) {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by `detect()` after
+        // runtime avx2+f16c checks.
+        (Level::Avx2, HalfFormat::F16) => unsafe { x86::unpack_f16(src, dst) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — avx2 verified at detection time.
+        (Level::Avx2, HalfFormat::Bf16) => unsafe { x86::unpack_bf16(src, dst) },
+        _ => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d = fmt.decode(s);
+            }
+        }
+    }
+}
+
+/// `dst[j] += src[j]` — the fused epilogue's bias add, vectorized.
+/// Elementwise, so lane grouping cannot change results: each element is
+/// one IEEE f32 add in both paths.
+pub fn add_slice(dst: &mut [f32], src: &[f32]) {
+    add_slice_at(detect(), dst, src);
+}
+
+/// [`add_slice`] pinned to an explicit [`Level`].
+pub fn add_slice_at(level: Level, dst: &mut [f32], src: &[f32]) {
+    assert_eq!(dst.len(), src.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only produced by `detect()` after the
+        // runtime avx2 check.
+        Level::Avx2 => unsafe { x86::add_slice(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64.
+        Level::Neon => unsafe { neon::add_slice(dst, src) },
+        _ => {
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+}
+
 #[cfg(target_arch = "x86_64")]
 mod x86 {
     use super::MR;
+    use crate::lowp::format::{
+        f16_bits_to_f32, f32_to_bf16_bits, f32_to_f16_bits, quantize_rne_bits,
+    };
     use std::arch::x86_64::*;
 
     /// AVX2+F16C full tile, f16 weights: per `p`, two `cvtph` widening
@@ -333,6 +558,255 @@ mod x86 {
             }
         }
     }
+
+    /// AVX2 full tile, f32 weights: the f16 kernel's schedule with plain
+    /// unaligned loads on the B rows — two 8-lane vectors per `p`, one
+    /// broadcast `mul` + `add` per row (no FMA — parity with the scalar
+    /// oracle's one-multiply-one-add chains).
+    // SAFETY: same pointer contract as `kernel_4x16_f32`; callers must
+    // have verified avx2 at runtime.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn kernel_4x16_f32(
+        a: *const f32,
+        a_rs: usize,
+        b: *const f32,
+        b_rs: usize,
+        c: *mut f32,
+        c_rs: usize,
+        kl: usize,
+    ) {
+        // SAFETY: every pointer offset stays inside the MR×kl / kl×NR
+        // panels and the MR×NR output tile the caller contract grants;
+        // all loads/stores are the unaligned variants.
+        unsafe {
+            let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+            for p in 0..kl {
+                let bp = b.add(p * b_rs);
+                let blo = _mm256_loadu_ps(bp);
+                let bhi = _mm256_loadu_ps(bp.add(8));
+                for r in 0..MR {
+                    let av = _mm256_set1_ps(*a.add(r * a_rs + p));
+                    acc[r][0] = _mm256_add_ps(acc[r][0], _mm256_mul_ps(av, blo));
+                    acc[r][1] = _mm256_add_ps(acc[r][1], _mm256_mul_ps(av, bhi));
+                }
+            }
+            for r in 0..MR {
+                let cr = c.add(r * c_rs);
+                let lo = _mm256_add_ps(_mm256_loadu_ps(cr), acc[r][0]);
+                let hi = _mm256_add_ps(_mm256_loadu_ps(cr.add(8)), acc[r][1]);
+                _mm256_storeu_ps(cr, lo);
+                _mm256_storeu_ps(cr.add(8), hi);
+            }
+        }
+    }
+
+    /// AVX2 slice RNE quantizer: the integer add-trick of
+    /// `quantize_rne_bits` on eight magnitudes at a time. The fast
+    /// region is normal-target lanes only — any lane that is ±0, ±∞,
+    /// NaN, an f32 subnormal, or below the target's normal range sends
+    /// the whole chunk back to the scalar function, so every special
+    /// case shares the scalar code path. In the fast region the trick
+    /// `r = abs + (half-1) + lsb` carries a mantissa overflow into the
+    /// exponent field exactly like the scalar path's explicit carry
+    /// (the kept mantissa bits are zero whenever the carry fires), and
+    /// results past the largest finite encoding blend to ±∞.
+    // SAFETY: callers must have verified avx2 at runtime; `man_bits`
+    // must be in 1..=22 (the dispatcher's guard) so the shift amounts
+    // below stay in range.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_slice_rne(exp_bits: u8, man_bits: u8, xs: &mut [f32]) {
+        debug_assert!((1..=22).contains(&man_bits));
+        let bias = (1i32 << (exp_bits - 1)) - 1;
+        let emin = 1 - bias;
+        let m = man_bits as i32;
+        let shift = 23 - m; // 1..=22
+        let half_m1 = (1u32 << (shift - 1)) - 1;
+        // largest finite target value, as its f32 bit pattern
+        let max_finite = (((bias + 127) as u32) << 23) | (((1u32 << m) - 1) << shift);
+        // below this magnitude the target is subnormal/zero (and every
+        // f32-subnormal input sits below it too, since emin >= -126)
+        let min_normal = ((emin + 127) as u32) << 23;
+        // all compared bit patterns are < 2^31, so signed 32-bit
+        // compares order them correctly
+        let mut chunks = xs.chunks_exact_mut(8);
+        for chunk in &mut chunks {
+            // SAFETY: each chunk holds exactly 8 f32s; loads/stores are
+            // the unaligned variants through the chunk's own pointer.
+            unsafe {
+                let ptr = chunk.as_mut_ptr();
+                let bits = _mm256_loadu_si256(ptr as *const __m256i);
+                let abs = _mm256_and_si256(bits, _mm256_set1_epi32(0x7fff_ffff));
+                let too_big = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7f7f_ffff));
+                let too_small = _mm256_cmpgt_epi32(_mm256_set1_epi32(min_normal as i32), abs);
+                let special = _mm256_or_si256(too_big, too_small);
+                if _mm256_movemask_epi8(special) != 0 {
+                    for v in chunk.iter_mut() {
+                        *v = quantize_rne_bits(*v, exp_bits, man_bits);
+                    }
+                    continue;
+                }
+                let sign = _mm256_andnot_si256(_mm256_set1_epi32(0x7fff_ffff), bits);
+                let vshift = _mm_cvtsi32_si128(shift);
+                let lsb = _mm256_and_si256(_mm256_srl_epi32(abs, vshift), _mm256_set1_epi32(1));
+                let rounded = _mm256_add_epi32(
+                    _mm256_add_epi32(abs, _mm256_set1_epi32(half_m1 as i32)),
+                    lsb,
+                );
+                let keep = _mm256_set1_epi32(!((1u32 << shift) - 1) as i32);
+                let kept = _mm256_and_si256(rounded, keep);
+                let over = _mm256_cmpgt_epi32(kept, _mm256_set1_epi32(max_finite as i32));
+                let out =
+                    _mm256_blendv_epi8(kept, _mm256_set1_epi32(0x7f80_0000), over);
+                _mm256_storeu_si256(ptr as *mut __m256i, _mm256_or_si256(sign, out));
+            }
+        }
+        for v in chunks.into_remainder() {
+            *v = quantize_rne_bits(*v, exp_bits, man_bits);
+        }
+    }
+
+    /// AVX2+F16C slice pack f32 → f16 bits via hardware `cvtps2ph`
+    /// (RNE). NaN chunks redo scalar: hardware preserves NaN payloads
+    /// where the scalar converter canonicalizes them.
+    // SAFETY: callers must have verified avx2+f16c at runtime.
+    #[target_feature(enable = "avx2,f16c")]
+    pub unsafe fn pack_f16(src: &[f32], dst: &mut [u16]) {
+        let mut din = dst.chunks_exact_mut(8);
+        let mut sin = src.chunks_exact(8);
+        for (d, s) in (&mut din).zip(&mut sin) {
+            // SAFETY: both chunks hold exactly 8 elements; loads/stores
+            // are the unaligned variants.
+            unsafe {
+                let x = _mm256_loadu_ps(s.as_ptr());
+                let unord = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+                if _mm256_movemask_ps(unord) != 0 {
+                    for (dv, &sv) in d.iter_mut().zip(s) {
+                        *dv = f32_to_f16_bits(sv);
+                    }
+                } else {
+                    let h = _mm256_cvtps_ph::<_MM_FROUND_TO_NEAREST_INT>(x);
+                    _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, h);
+                }
+            }
+        }
+        for (dv, &sv) in din.into_remainder().iter_mut().zip(sin.remainder()) {
+            *dv = f32_to_f16_bits(sv);
+        }
+    }
+
+    /// AVX2+F16C slice unpack f16 bits → f32 via hardware `cvtph2ps`.
+    /// NaN chunks redo scalar (detected on the output, which flags
+    /// exactly the NaN inputs): hardware quiets signalling payloads the
+    /// scalar widener preserves bit-for-bit.
+    // SAFETY: callers must have verified avx2+f16c at runtime.
+    #[target_feature(enable = "avx2,f16c")]
+    pub unsafe fn unpack_f16(src: &[u16], dst: &mut [f32]) {
+        let mut din = dst.chunks_exact_mut(8);
+        let mut sin = src.chunks_exact(8);
+        for (d, s) in (&mut din).zip(&mut sin) {
+            // SAFETY: both chunks hold exactly 8 elements; loads/stores
+            // are the unaligned variants.
+            unsafe {
+                let h = _mm_loadu_si128(s.as_ptr() as *const __m128i);
+                let x = _mm256_cvtph_ps(h);
+                let unord = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+                if _mm256_movemask_ps(unord) != 0 {
+                    for (dv, &sv) in d.iter_mut().zip(s) {
+                        *dv = f16_bits_to_f32(sv);
+                    }
+                } else {
+                    _mm256_storeu_ps(d.as_mut_ptr(), x);
+                }
+            }
+        }
+        for (dv, &sv) in din.into_remainder().iter_mut().zip(sin.remainder()) {
+            *dv = f16_bits_to_f32(sv);
+        }
+    }
+
+    /// AVX2 slice pack f32 → bf16 bits: the scalar converter's RNE
+    /// add-trick on eight lanes. NaN chunks redo scalar (the scalar
+    /// converter quiets the payload).
+    // SAFETY: callers must have verified avx2 at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pack_bf16(src: &[f32], dst: &mut [u16]) {
+        let mut din = dst.chunks_exact_mut(8);
+        let mut sin = src.chunks_exact(8);
+        for (d, s) in (&mut din).zip(&mut sin) {
+            // SAFETY: both chunks hold exactly 8 elements; loads/stores
+            // are the unaligned variants.
+            unsafe {
+                let bits = _mm256_castps_si256(_mm256_loadu_ps(s.as_ptr()));
+                let abs = _mm256_and_si256(bits, _mm256_set1_epi32(0x7fff_ffff));
+                let nan = _mm256_cmpgt_epi32(abs, _mm256_set1_epi32(0x7f80_0000));
+                if _mm256_movemask_epi8(nan) != 0 {
+                    for (dv, &sv) in d.iter_mut().zip(s) {
+                        *dv = f32_to_bf16_bits(sv);
+                    }
+                    continue;
+                }
+                let lsb =
+                    _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(1));
+                let r = _mm256_add_epi32(
+                    bits,
+                    _mm256_add_epi32(_mm256_set1_epi32(0x7fff), lsb),
+                );
+                let h32 = _mm256_srli_epi32::<16>(r);
+                // narrow the eight u32 lanes (each ≤ 0xffff) to u16
+                let packed = _mm256_packus_epi32(h32, h32);
+                let lo = _mm256_castsi256_si128(packed);
+                let hi = _mm256_extracti128_si256::<1>(packed);
+                let out = _mm_unpacklo_epi64(lo, hi);
+                _mm_storeu_si128(d.as_mut_ptr() as *mut __m128i, out);
+            }
+        }
+        for (dv, &sv) in din.into_remainder().iter_mut().zip(sin.remainder()) {
+            *dv = f32_to_bf16_bits(sv);
+        }
+    }
+
+    /// AVX2 slice unpack bf16 bits → f32: a pure zero-extend + 16-bit
+    /// shift — exact for every bit pattern, NaN payloads included, so
+    /// there is no fallback.
+    // SAFETY: callers must have verified avx2 at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn unpack_bf16(src: &[u16], dst: &mut [f32]) {
+        let mut din = dst.chunks_exact_mut(8);
+        let mut sin = src.chunks_exact(8);
+        for (d, s) in (&mut din).zip(&mut sin) {
+            // SAFETY: both chunks hold exactly 8 elements; loads/stores
+            // are the unaligned variants.
+            unsafe {
+                let h = _mm_loadu_si128(s.as_ptr() as *const __m128i);
+                let w = _mm256_slli_epi32::<16>(_mm256_cvtepu16_epi32(h));
+                _mm256_storeu_ps(d.as_mut_ptr(), _mm256_castsi256_ps(w));
+            }
+        }
+        for (dv, &sv) in din.into_remainder().iter_mut().zip(sin.remainder()) {
+            *dv = crate::lowp::format::bf16_bits_to_f32(sv);
+        }
+    }
+
+    /// AVX2 elementwise `dst += src` (the epilogue bias add).
+    // SAFETY: callers must have verified avx2 at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_slice(dst: &mut [f32], src: &[f32]) {
+        let mut din = dst.chunks_exact_mut(8);
+        let mut sin = src.chunks_exact(8);
+        for (d, s) in (&mut din).zip(&mut sin) {
+            // SAFETY: both chunks hold exactly 8 elements; loads/stores
+            // are the unaligned variants.
+            unsafe {
+                let sum =
+                    _mm256_add_ps(_mm256_loadu_ps(d.as_ptr()), _mm256_loadu_ps(s.as_ptr()));
+                _mm256_storeu_ps(d.as_mut_ptr(), sum);
+            }
+        }
+        for (dv, &sv) in din.into_remainder().iter_mut().zip(sin.remainder()) {
+            *dv += sv;
+        }
+    }
 }
 
 #[cfg(target_arch = "aarch64")]
@@ -386,6 +860,67 @@ mod neon {
             }
         }
     }
+
+    /// NEON full tile, f32 weights: the bf16 kernel's schedule with
+    /// plain `vld1q_f32` loads on the B rows — four 4-lane vectors per
+    /// `p`, separate `vmulq`/`vaddq` per step (no `vfmaq` — parity).
+    // SAFETY: same pointer contract as `kernel_4x16_f32`; NEON is
+    // baseline on aarch64.
+    #[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+    pub unsafe fn kernel_4x16_f32(
+        a: *const f32,
+        a_rs: usize,
+        b: *const f32,
+        b_rs: usize,
+        c: *mut f32,
+        c_rs: usize,
+        kl: usize,
+    ) {
+        // SAFETY: every pointer offset stays inside the MR×kl / kl×NR
+        // panels and the MR×NR output tile the caller contract grants.
+        unsafe {
+            let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+            for p in 0..kl {
+                let bp = b.add(p * b_rs);
+                let bv = [
+                    vld1q_f32(bp),
+                    vld1q_f32(bp.add(4)),
+                    vld1q_f32(bp.add(8)),
+                    vld1q_f32(bp.add(12)),
+                ];
+                for r in 0..MR {
+                    let av = vdupq_n_f32(*a.add(r * a_rs + p));
+                    for q in 0..4 {
+                        acc[r][q] = vaddq_f32(acc[r][q], vmulq_f32(av, bv[q]));
+                    }
+                }
+            }
+            for r in 0..MR {
+                let cr = c.add(r * c_rs);
+                for q in 0..4 {
+                    let cur = vld1q_f32(cr.add(4 * q));
+                    vst1q_f32(cr.add(4 * q), vaddq_f32(cur, acc[r][q]));
+                }
+            }
+        }
+    }
+
+    /// NEON elementwise `dst += src` (the epilogue bias add).
+    // SAFETY: NEON is baseline on aarch64.
+    pub unsafe fn add_slice(dst: &mut [f32], src: &[f32]) {
+        let mut din = dst.chunks_exact_mut(4);
+        let mut sin = src.chunks_exact(4);
+        for (d, s) in (&mut din).zip(&mut sin) {
+            // SAFETY: both chunks hold exactly 4 elements.
+            unsafe {
+                let sum = vaddq_f32(vld1q_f32(d.as_ptr()), vld1q_f32(s.as_ptr()));
+                vst1q_f32(d.as_mut_ptr(), sum);
+            }
+        }
+        for (dv, &sv) in din.into_remainder().iter_mut().zip(sin.remainder()) {
+            *dv += sv;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -393,7 +928,7 @@ mod tests {
     use super::*;
     use crate::rngs::Pcg64;
 
-    /// Drive the full-tile kernel at `level` over a kl-deep panel.
+    /// Drive the full-tile half kernel at `level` over a kl-deep panel.
     fn run_tile(level: Level, fmt: HalfFormat, kl: usize, seed: u64) -> Vec<f32> {
         let mut rng = Pcg64::seed(seed);
         let a: Vec<f32> = (0..MR * kl).map(|_| rng.normal_f32()).collect();
@@ -403,6 +938,20 @@ mod tests {
         // NR, and c is an exclusively-owned MR×NR tile at stride NR.
         unsafe {
             kernel_4x16_half(level, fmt, a.as_ptr(), kl, b.as_ptr(), NR, c.as_mut_ptr(), NR, kl);
+        }
+        c
+    }
+
+    /// Drive the full-tile f32 kernel at `level` over a kl-deep panel.
+    fn run_tile_f32(level: Level, kl: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::seed(seed);
+        let a: Vec<f32> = (0..MR * kl).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..kl * NR).map(|_| rng.normal_f32()).collect();
+        let mut c: Vec<f32> = (0..MR * NR).map(|_| rng.normal_f32()).collect();
+        // SAFETY: a is [MR, kl] at stride kl, b is [kl, NR] at stride
+        // NR, and c is an exclusively-owned MR×NR tile at stride NR.
+        unsafe {
+            kernel_4x16_f32(level, a.as_ptr(), kl, b.as_ptr(), NR, c.as_mut_ptr(), NR, kl);
         }
         c
     }
@@ -425,9 +974,159 @@ mod tests {
     }
 
     #[test]
+    fn detected_level_f32_tile_matches_scalar_oracle_bitwise() {
+        let level = detect();
+        for kl in [0, 1, 3, 17, 256] {
+            let fast = run_tile_f32(level, kl, 31 + kl as u64);
+            let slow = run_tile_f32(Level::Scalar, kl, 31 + kl as u64);
+            assert!(
+                fast.iter().zip(&slow).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "{} kl={kl}: f32 vector tile must equal the scalar oracle",
+                level.name()
+            );
+        }
+    }
+
+    /// Formats spanning the vector fast path (1..=22 mantissa bits) and
+    /// the always-scalar widths (m = 0), across exponent ranges.
+    const QFORMATS: &[(u8, u8)] =
+        &[(5, 10), (8, 7), (5, 7), (5, 5), (4, 3), (8, 10), (2, 1), (5, 1), (8, 22), (5, 0)];
+
+    fn quantizer_edge_values() -> Vec<f32> {
+        let mut vals = vec![
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7f80_0001), // signalling NaN payload
+            f32::from_bits(0xffc0_1234), // negative quiet NaN payload
+            65504.0,
+            65519.0,
+            65520.0,
+            -65520.0,
+            6.1035156e-5,
+            5.9604645e-8,
+            2.9802322e-8,
+            1.0 + 4.8828125e-4,
+            f32::MIN_POSITIVE,
+            f32::from_bits(1),
+            f32::from_bits(0x007f_ffff),
+            3.389531e38,
+            f32::MAX,
+            1e-40,
+            -1e-40,
+            1.0,
+            -1.0,
+            std::f32::consts::PI,
+        ];
+        let mut rng = Pcg64::seed(23);
+        vals.extend((0..4096).map(|_| f32::from_bits(rng.next_u32())));
+        vals
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar_oracle_bitwise() {
+        let level = detect();
+        let vals = quantizer_edge_values();
+        for &(e, m) in QFORMATS {
+            let mut fast = vals.clone();
+            let mut slow = vals.clone();
+            quantize_slice_rne_at(level, e, m, &mut fast);
+            quantize_slice_rne_at(Level::Scalar, e, m, &mut slow);
+            for (i, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "e{e}m{m} [{i}] in={:e} ({:#x}): fast={x:e} ({:#x}) slow={y:e} ({:#x})",
+                    vals[i],
+                    vals[i].to_bits(),
+                    x.to_bits(),
+                    y.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_slice_matches_scalar_oracle_bitwise() {
+        let level = detect();
+        let vals = quantizer_edge_values();
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let mut fast = vec![0u16; vals.len()];
+            let mut slow = vec![0u16; vals.len()];
+            pack_half_slice_at(level, fmt, &vals, &mut fast);
+            pack_half_slice_at(Level::Scalar, fmt, &vals, &mut slow);
+            for (i, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    x == y,
+                    "{} [{i}] in={:e} ({:#x}): fast={x:#x} slow={y:#x}",
+                    fmt.name(),
+                    vals[i],
+                    vals[i].to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_slice_matches_scalar_oracle_on_every_bit_pattern() {
+        let level = detect();
+        let src: Vec<u16> = (0..=u16::MAX).collect();
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let mut fast = vec![0.0f32; src.len()];
+            let mut slow = vec![0.0f32; src.len()];
+            unpack_half_slice_at(level, fmt, &src, &mut fast);
+            unpack_half_slice_at(Level::Scalar, fmt, &src, &mut slow);
+            for (i, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "{} h={:#x}: fast={:#x} slow={:#x}",
+                    fmt.name(),
+                    src[i],
+                    x.to_bits(),
+                    y.to_bits()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn add_slice_matches_scalar_bitwise() {
+        let level = detect();
+        let mut rng = Pcg64::seed(41);
+        for n in [0usize, 1, 7, 8, 9, 64, 130] {
+            let src: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let base: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let mut fast = base.clone();
+            let mut slow = base.clone();
+            add_slice_at(level, &mut fast, &src);
+            add_slice_at(Level::Scalar, &mut slow, &src);
+            assert!(
+                fast.iter().zip(&slow).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "n={n}: vector bias add must equal the scalar add"
+            );
+        }
+    }
+
+    #[test]
     fn detection_is_stable() {
         assert_eq!(detect(), detect());
         let s = feature_summary();
         assert!(s.contains("level="), "{s}");
+    }
+
+    #[test]
+    fn dispatch_tier_reports_per_format_kernels() {
+        let level = detect();
+        // the f32 plane always runs the detected level
+        assert_eq!(dispatch_tier(None), level.name());
+        for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+            let tier = dispatch_tier(Some(fmt));
+            if level.accelerates(fmt) {
+                assert_eq!(tier, level.name());
+            } else {
+                assert_eq!(tier, "scalar");
+            }
+        }
     }
 }

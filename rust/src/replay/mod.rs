@@ -1,9 +1,11 @@
 //! Replay buffer: fixed-capacity ring buffer over transitions, with
 //! optional fp16 storage (halving the dominant memory consumer, as the
-//! paper's Table 3 exploits) and DRQ-style random-crop augmentation for
-//! the pixel agent.
+//! paper's Table 3 exploits), byte-packed u8 pixel storage (quartering
+//! it — envs emit u8-range subpixels, so 1 byte per subpixel loses
+//! nothing on the pixel grid), and DRQ-style random-crop augmentation
+//! for the pixel agent.
 
-use crate::lowp::format::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::lowp::HalfFormat;
 use crate::rngs::Pcg64;
 use crate::sac::Batch;
 
@@ -13,13 +15,33 @@ pub enum Storage {
     F32,
     /// IEEE binary16 words — bit-exact with fp16 hardware storage.
     F16,
+    /// One byte per value on the `k/255` pixel grid. Observations only:
+    /// action rows stay f32 (actions are not pixels). Exact for values
+    /// the envs actually emit (`u8 / 255`); off-grid values quantize to
+    /// the nearest grid point (max error `1/510`).
+    U8,
 }
 
-/// Internal storage vector that is either f32 or packed f16.
+/// Round `x` onto the `k/255` grid and return the byte index. Saturates
+/// outside `[0, 1]`; NaN maps to 0 (the saturating float→int cast).
+#[inline]
+fn u8_encode(x: f32) -> u8 {
+    (x * 255.0).round() as u8
+}
+
+/// Widen a stored byte back to f32. Division (not multiplication by a
+/// rounded `1/255`) so `decode(encode(k/255)) == k/255` bitwise.
+#[inline]
+fn u8_decode(u: u8) -> f32 {
+    u as f32 / 255.0
+}
+
+/// Internal storage vector that is f32, packed f16, or pixel bytes.
 #[derive(Debug, Clone)]
 enum Buf {
     F32(Vec<f32>),
     F16(Vec<u16>),
+    U8(Vec<u8>),
 }
 
 impl Buf {
@@ -27,6 +49,7 @@ impl Buf {
         match storage {
             Storage::F32 => Buf::F32(vec![0.0; n]),
             Storage::F16 => Buf::F16(vec![0; n]),
+            Storage::U8 => Buf::U8(vec![0; n]),
         }
     }
 
@@ -34,9 +57,12 @@ impl Buf {
     fn write(&mut self, off: usize, src: &[f32]) {
         match self {
             Buf::F32(v) => v[off..off + src.len()].copy_from_slice(src),
-            Buf::F16(v) => {
+            // SIMD pack on AVX2/F16C hosts, bitwise equal to the scalar
+            // encode loop this replaces
+            Buf::F16(v) => HalfFormat::F16.pack_slice(src, &mut v[off..off + src.len()]),
+            Buf::U8(v) => {
                 for (d, &s) in v[off..off + src.len()].iter_mut().zip(src) {
-                    *d = f32_to_f16_bits(s);
+                    *d = u8_encode(s);
                 }
             }
         }
@@ -47,9 +73,10 @@ impl Buf {
         let n = dst.len();
         match self {
             Buf::F32(v) => dst.copy_from_slice(&v[off..off + n]),
-            Buf::F16(v) => {
+            Buf::F16(v) => HalfFormat::F16.unpack_slice(&v[off..off + n], dst),
+            Buf::U8(v) => {
                 for (d, &s) in dst.iter_mut().zip(&v[off..off + n]) {
-                    *d = f16_bits_to_f32(s);
+                    *d = u8_decode(s);
                 }
             }
         }
@@ -59,6 +86,7 @@ impl Buf {
         match self {
             Buf::F32(v) => v.len() * 4,
             Buf::F16(v) => v.len() * 2,
+            Buf::U8(v) => v.len(),
         }
     }
 }
@@ -84,13 +112,19 @@ pub struct ReplayBuffer {
 impl ReplayBuffer {
     pub fn new(capacity: usize, obs_shape: &[usize], act_dim: usize, storage: Storage) -> Self {
         let obs_dim: usize = obs_shape.iter().product();
+        // byte packing targets the pixel grid; actions are continuous
+        // torques in [-1, 1], so the act rows stay f32 under U8
+        let act_storage = match storage {
+            Storage::U8 => Storage::F32,
+            s => s,
+        };
         ReplayBuffer {
             capacity,
             obs_dim,
             act_dim,
             obs: Buf::new(storage, capacity * obs_dim),
             next_obs: Buf::new(storage, capacity * obs_dim),
-            act: Buf::new(storage, capacity * act_dim),
+            act: Buf::new(act_storage, capacity * act_dim),
             rew: vec![0.0; capacity],
             not_done: vec![0.0; capacity],
             len: 0,
@@ -310,6 +344,10 @@ impl ReplayBuffer {
                 enc.u8(1);
                 enc.u16s(&v[..n]);
             }
+            Buf::U8(v) => {
+                enc.u8(2);
+                enc.u8s(&v[..n]);
+            }
         }
     }
 
@@ -324,6 +362,11 @@ impl ReplayBuffer {
             (1, Buf::F16(v)) => {
                 let xs = dec.u16s()?;
                 anyhow::ensure!(xs.len() == n, "replay field holds {} f16s, expected {n}", xs.len());
+                v[..n].copy_from_slice(&xs);
+            }
+            (2, Buf::U8(v)) => {
+                let xs = dec.u8s()?;
+                anyhow::ensure!(xs.len() == n, "replay field holds {} u8s, expected {n}", xs.len());
                 v[..n].copy_from_slice(&xs);
             }
             (tag, _) => anyhow::bail!(
@@ -523,8 +566,50 @@ mod tests {
     }
 
     #[test]
+    fn u8_storage_quarters_obs_bytes_and_is_exact_on_pixel_grid() {
+        let b32 = ReplayBuffer::new(100, &[64], 0, Storage::F32);
+        let b8 = ReplayBuffer::new(100, &[64], 0, Storage::U8);
+        // obs + next_obs quarter; rew/not_done stay f32
+        let fixed = 100 * 4 * 2;
+        assert_eq!((b32.bytes() - fixed) / (b8.bytes() - fixed), 4);
+
+        // every value an env can emit (k/255) survives bitwise
+        let mut buf = ReplayBuffer::new(8, &[256], 1, Storage::U8);
+        let grid: Vec<f32> = (0..=255).map(|k| k as f32 / 255.0).collect();
+        buf.push(&grid, &[0.37], 1.0, &grid, false);
+        let mut rng = Pcg64::seed(21);
+        let s = buf.sample(1, &mut rng);
+        for (k, (&got, &want)) in s.obs.data.iter().zip(&grid).enumerate() {
+            assert_eq!(got.to_bits(), want.to_bits(), "k={k}");
+        }
+        // act rows stay f32 under U8: off-grid action survives bitwise
+        assert_eq!(s.act.data[0].to_bits(), 0.37f32.to_bits());
+    }
+
+    #[test]
+    fn u8_storage_quantizes_off_grid_values_within_half_a_step() {
+        let mut buf = ReplayBuffer::new(8, &[4], 1, Storage::U8);
+        let off = [0.5f32, 0.95, 1e-4, 0.123456];
+        buf.push(&off, &[0.0], 0.0, &off, false);
+        let mut rng = Pcg64::seed(22);
+        let s = buf.sample(1, &mut rng);
+        for (&got, &want) in s.obs.data.iter().zip(&off) {
+            assert!((got - want).abs() <= 1.0 / 510.0 + 1e-7, "got={got} want={want}");
+        }
+        // storing a decoded value back is the identity (idempotence): both
+        // stored rows now decode to the same grid points bitwise
+        let decoded: Vec<f32> = s.obs.data[..4].to_vec();
+        buf.push(&decoded, &[0.0], 0.0, &decoded, false);
+        let mut r2 = Pcg64::seed(30);
+        let again = buf.sample(8, &mut r2);
+        for r in 0..8 {
+            assert_eq!(again.obs.row(r), &decoded[..], "re-encoding a grid value must be lossless");
+        }
+    }
+
+    #[test]
     fn ckpt_roundtrip_restores_ring_bitwise() {
-        for storage in [Storage::F32, Storage::F16] {
+        for storage in [Storage::F32, Storage::F16, Storage::U8] {
             // pre-wrap (n < capacity) and post-wrap (n > capacity) fills
             for n in [7usize, 23] {
                 let mut buf = ReplayBuffer::new(10, &[2], 1, storage);
@@ -628,7 +713,7 @@ mod tests {
 
     #[test]
     fn push_batch_matches_sequential_push() {
-        for storage in [Storage::F32, Storage::F16] {
+        for storage in [Storage::F32, Storage::F16, Storage::U8] {
             let mut seq = ReplayBuffer::new(7, &[2], 1, storage); // capacity 7: wraps
             let mut bat = ReplayBuffer::new(7, &[2], 1, storage);
             let n = 10usize;

@@ -1,0 +1,261 @@
+//! f32 SIMD compute-plane contracts (INVARIANTS.md §3b):
+//!
+//! * the vectorized f32 GEMM kernels (`gemm`/`gemm_nt`/`gemm_tn` with
+//!   the fused bias+quantize epilogue) are **bitwise equal** to the
+//!   scalar oracle at every runtime feature level, shape, and epilogue
+//!   precision;
+//! * the vectorized slice RNE quantizer is bitwise equal to the scalar
+//!   integer bit path for every simulated format, including the special
+//!   values (±0, ±inf, NaN payloads, subnormals, overflow boundary);
+//! * the SIMD half pack/unpack routines the replay ring and weight
+//!   stores route through are bitwise equal to the scalar encode/decode;
+//! * a full trainer run is bitwise identical with `LPRL_SIMD=0` forced
+//!   (CI also runs this whole binary under both legs).
+
+use lprl::lowp::{e5m, Precision};
+use lprl::lowp::HalfFormat;
+use lprl::nn::gemm::{
+    gemm_bias_q, gemm_bias_q_at, gemm_nt_bias_q, gemm_nt_bias_q_at, gemm_tn_bias_q,
+    gemm_tn_bias_q_at,
+};
+use lprl::nn::simd;
+use lprl::rngs::Pcg64;
+
+/// Learner-representative shapes plus the edge/remainder cases around
+/// the 4x16 register tile.
+const SHAPES: &[(usize, usize, usize)] =
+    &[(1, 1, 1), (2, 3, 5), (4, 16, 16), (5, 17, 33), (16, 64, 48), (33, 40, 19), (64, 96, 128)];
+
+fn fill(rng: &mut Pcg64, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32()).collect()
+}
+
+fn precisions() -> Vec<Precision> {
+    vec![Precision::Fp32, Precision::fp16(), Precision::sim(lprl::lowp::BF16), Precision::sim(e5m(7))]
+}
+
+fn assert_bitwise(got: &[f32], want: &[f32], what: &str) {
+    for (i, (x, y)) in got.iter().zip(want).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what} elem {i}: {x:e} vs {y:e}");
+    }
+}
+
+#[test]
+fn f32_gemm_matches_scalar_oracle_across_shapes_and_precisions() {
+    let detected = simd::detect();
+    println!("parity gate: {}", simd::feature_summary());
+    let mut rng = Pcg64::seed(61);
+    for &(m, k, n) in SHAPES {
+        let a = fill(&mut rng, m * k);
+        let b = fill(&mut rng, k * n);
+        let bias = fill(&mut rng, n);
+        for prec in precisions() {
+            for bias_opt in [Some(bias.as_slice()), None] {
+                let mut oracle = vec![0.0f32; m * n];
+                gemm_bias_q_at(simd::Level::Scalar, &a, &b, &mut oracle, m, k, n, bias_opt, prec);
+                let mut fast = vec![0.0f32; m * n];
+                gemm_bias_q_at(detected, &a, &b, &mut fast, m, k, n, bias_opt, prec);
+                assert_bitwise(&fast, &oracle, &format!("{} gemm {m}x{k}x{n}", detected.name()));
+                // the public auto-dispatch entry lands on the same bits
+                let mut auto = vec![0.0f32; m * n];
+                gemm_bias_q(&a, &b, &mut auto, m, k, n, bias_opt, prec);
+                assert_bitwise(&auto, &oracle, &format!("auto gemm {m}x{k}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_gemm_nt_matches_scalar_oracle_across_shapes_and_precisions() {
+    let detected = simd::detect();
+    let mut rng = Pcg64::seed(67);
+    for &(m, k, n) in SHAPES {
+        let a = fill(&mut rng, m * k);
+        let bt = fill(&mut rng, n * k);
+        let bias = fill(&mut rng, n);
+        for prec in precisions() {
+            let mut oracle = vec![0.0f32; m * n];
+            gemm_nt_bias_q_at(
+                simd::Level::Scalar,
+                &a,
+                &bt,
+                &mut oracle,
+                m,
+                k,
+                n,
+                Some(&bias),
+                prec,
+            );
+            let mut fast = vec![0.0f32; m * n];
+            gemm_nt_bias_q_at(detected, &a, &bt, &mut fast, m, k, n, Some(&bias), prec);
+            assert_bitwise(&fast, &oracle, &format!("{} gemm_nt {m}x{k}x{n}", detected.name()));
+            let mut auto = vec![0.0f32; m * n];
+            gemm_nt_bias_q(&a, &bt, &mut auto, m, k, n, Some(&bias), prec);
+            assert_bitwise(&auto, &oracle, &format!("auto gemm_nt {m}x{k}x{n}"));
+        }
+    }
+}
+
+#[test]
+fn f32_gemm_tn_matches_scalar_oracle_across_shapes_and_precisions() {
+    let detected = simd::detect();
+    let mut rng = Pcg64::seed(71);
+    for &(m, k, n) in SHAPES {
+        let at = fill(&mut rng, k * m);
+        let b = fill(&mut rng, k * n);
+        let bias = fill(&mut rng, n);
+        for prec in precisions() {
+            let mut oracle = vec![0.0f32; m * n];
+            gemm_tn_bias_q_at(
+                simd::Level::Scalar,
+                &at,
+                &b,
+                &mut oracle,
+                m,
+                k,
+                n,
+                Some(&bias),
+                prec,
+            );
+            let mut fast = vec![0.0f32; m * n];
+            gemm_tn_bias_q_at(detected, &at, &b, &mut fast, m, k, n, Some(&bias), prec);
+            assert_bitwise(&fast, &oracle, &format!("{} gemm_tn {m}x{k}x{n}", detected.name()));
+            let mut auto = vec![0.0f32; m * n];
+            gemm_tn_bias_q(&at, &b, &mut auto, m, k, n, Some(&bias), prec);
+            assert_bitwise(&auto, &oracle, &format!("auto gemm_tn {m}x{k}x{n}"));
+        }
+    }
+}
+
+/// Every quantizer branch: ties, subnormals (f32's and the target's),
+/// overflow boundary, signed zero, infinities, NaN payloads, plus a
+/// dense random sweep of raw bit patterns.
+fn quantizer_inputs(rng: &mut Pcg64) -> Vec<f32> {
+    let mut xs = vec![
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        65504.0,
+        65519.0,
+        65520.0,
+        1e6,
+        -1e6,
+        1e-9,
+        6.1035156e-5,
+        5.9604645e-8,
+        2.9802322e-8,
+        1.0 + 4.8828125e-4,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        f32::MAX,
+        f32::MIN_POSITIVE,
+        f32::from_bits(1),
+        1e-40,
+        -1e-40,
+        f32::from_bits(0x7f80_0001), // signaling-NaN payload
+        f32::from_bits(0xffc0_1234), // quiet-NaN payload
+    ];
+    xs.extend((0..20_000).map(|_| f32::from_bits(rng.next_u32())));
+    xs
+}
+
+#[test]
+fn slice_quantizer_matches_scalar_oracle_across_formats() {
+    let detected = simd::detect();
+    let mut rng = Pcg64::seed(73);
+    let base = quantizer_inputs(&mut rng);
+    let formats: &[(u8, u8)] =
+        &[(5, 10), (8, 7), (5, 7), (5, 5), (4, 3), (8, 10), (2, 1), (5, 1), (8, 22), (5, 0)];
+    for &(e, m) in formats {
+        let mut oracle = base.clone();
+        simd::quantize_slice_rne_at(simd::Level::Scalar, e, m, &mut oracle);
+        let mut fast = base.clone();
+        simd::quantize_slice_rne_at(detected, e, m, &mut fast);
+        assert_bitwise(&fast, &oracle, &format!("{} quantize e{e}m{m}", detected.name()));
+        // the hooked dispatch entry (Precision::q_slice's bit path)
+        let mut auto = base.clone();
+        simd::quantize_slice_rne(e, m, &mut auto);
+        assert_bitwise(&auto, &oracle, &format!("auto quantize e{e}m{m}"));
+    }
+}
+
+#[test]
+fn half_pack_unpack_match_scalar_oracle() {
+    let detected = simd::detect();
+    let mut rng = Pcg64::seed(79);
+    let xs = quantizer_inputs(&mut rng);
+    for fmt in [HalfFormat::F16, HalfFormat::Bf16] {
+        let mut oracle = vec![0u16; xs.len()];
+        simd::pack_half_slice_at(simd::Level::Scalar, fmt, &xs, &mut oracle);
+        let mut fast = vec![0u16; xs.len()];
+        simd::pack_half_slice_at(detected, fmt, &xs, &mut fast);
+        assert_eq!(fast, oracle, "{} {} pack", detected.name(), fmt.name());
+
+        // unpack every stored word the pack produced, plus every 16-bit
+        // pattern in a dense stripe, at both levels
+        let words: Vec<u16> = oracle.iter().copied().chain(0..=u16::MAX).collect();
+        let mut want = vec![0.0f32; words.len()];
+        simd::unpack_half_slice_at(simd::Level::Scalar, fmt, &words, &mut want);
+        let mut got = vec![0.0f32; words.len()];
+        simd::unpack_half_slice_at(detected, fmt, &words, &mut got);
+        assert_bitwise(&got, &want, &format!("{} {} unpack", detected.name(), fmt.name()));
+    }
+}
+
+/// End-to-end leg of the parity gate: the same short training run, once
+/// with the environment as-is (auto dispatch) and once with
+/// `LPRL_SIMD=0` forcing the scalar tier, must produce bitwise-identical
+/// eval curves. Levels are process-global (detected once), so each leg
+/// runs in its own child process of the `lprl` binary and the written
+/// CSV (shortest-roundtrip float formatting — byte equality is bitwise
+/// equality) plus the printed curve are compared.
+#[test]
+fn trainer_run_is_bitwise_identical_with_simd_forced_off() {
+    let exe = env!("CARGO_BIN_EXE_lprl");
+    let out_root = std::env::temp_dir().join(format!("lprl-simd-e2e-{}", std::process::id()));
+    let run = |leg: &str, force_scalar: bool| -> (Vec<String>, String) {
+        let out_dir = out_root.join(leg);
+        let mut cmd = std::process::Command::new(exe);
+        cmd.args([
+            "train",
+            "task=cartpole_swingup",
+            "preset=fp16_ours",
+            "steps=120",
+            "seed_steps=40",
+            "batch=16",
+            "hidden=24",
+            "eval_every=60",
+            "eval_episodes=1",
+            "replay_storage=u8",
+        ]);
+        cmd.arg(format!("out_dir={}", out_dir.display()));
+        if force_scalar {
+            cmd.env("LPRL_SIMD", "0");
+        } else {
+            cmd.env_remove("LPRL_SIMD");
+        }
+        let out = cmd.output().expect("failed to launch lprl train");
+        assert!(
+            out.status.success(),
+            "train leg {leg} failed:\n{}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let curve: Vec<String> = String::from_utf8(out.stdout)
+            .unwrap()
+            .lines()
+            .filter(|l| l.starts_with("  env_step") || l.starts_with("task="))
+            .map(str::to_string)
+            .collect();
+        let csv = out_dir.join("train").join("cartpole_swingup_fp16_ours_s0.csv");
+        let csv = std::fs::read_to_string(&csv)
+            .unwrap_or_else(|e| panic!("leg {leg}: missing {}: {e}", csv.display()));
+        (curve, csv)
+    };
+    let (auto_curve, auto_csv) = run("auto", false);
+    let (scalar_curve, scalar_csv) = run("scalar", true);
+    assert!(!auto_curve.is_empty(), "train printed no eval curve");
+    assert_eq!(auto_curve, scalar_curve, "LPRL_SIMD=0 must not change the eval curve");
+    assert_eq!(auto_csv, scalar_csv, "LPRL_SIMD=0 must not change a single written byte");
+    let _ = std::fs::remove_dir_all(&out_root);
+}

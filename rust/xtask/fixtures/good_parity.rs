@@ -30,3 +30,14 @@ fn half_storage_matches_f32_tier() {
     // parity: gemm_nt_bias_q_pair_half
     run_packed_critic_pair();
 }
+
+#[test]
+fn f32_simd_tier_matches_scalar_oracle() {
+    check(gemm_bias_q_at(level, &a, &b, &mut c, m, k, n, None, prec));
+    check(gemm_nt_bias_q_at(level, &a, &bt, &mut c, m, k, n, None, prec));
+    check(gemm_tn_bias_q_at(level, &at, &b, &mut c, m, k, n, None, prec));
+    check(quantize_slice_rne_at(level, e, mb, &mut xs));
+    // parity: pack_half_slice_at
+    // parity: unpack_half_slice_at
+    run_half_pack_parity();
+}

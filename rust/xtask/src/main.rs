@@ -747,6 +747,12 @@ mod tests {
         let bad = vec![SourceFile::new("rust/tests/x.rs", &fixture("bad_parity.rs"))];
         let d = parity::parity_pass(&bad);
         assert!(d.iter().any(|d| d.rule == "parity" && d.msg.contains("fuse_group")), "{d:?}");
+        // the f32 SIMD tier kernels are under the same contract
+        assert!(d.iter().any(|d| d.rule == "parity" && d.msg.contains("gemm_bias_q_at")), "{d:?}");
+        assert!(
+            d.iter().any(|d| d.rule == "parity" && d.msg.contains("quantize_slice_rne_at")),
+            "{d:?}"
+        );
         let good = vec![SourceFile::new("rust/tests/x.rs", &fixture("good_parity.rs"))];
         let d = parity::parity_pass(&good);
         assert!(d.is_empty(), "{d:?}");

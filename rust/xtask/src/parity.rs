@@ -20,6 +20,12 @@ pub const PARITY_APIS: &[&str] = &[
     "sample_round_into",
     "gemm_nt_bias_q_half",
     "gemm_nt_bias_q_pair_half",
+    "gemm_bias_q_at",
+    "gemm_nt_bias_q_at",
+    "gemm_tn_bias_q_at",
+    "quantize_slice_rne_at",
+    "pack_half_slice_at",
+    "unpack_half_slice_at",
 ];
 
 /// True if any line in `test_files` references `api` by token or by a
